@@ -1,0 +1,105 @@
+//! End-to-end driver (DESIGN.md §4, experiment E2E): the full three-layer
+//! stack under a real serving workload.
+//!
+//!   client threads ──► DotClient ──► mpsc ──► batching worker ──► PJRT
+//!        ▲                                          │
+//!        └────────── per-request responses ◄────────┘
+//!
+//! * the served computation is the AOT-lowered Pallas Kahan kernel
+//!   (`artifacts/*.hlo.txt`) — Python is not running;
+//! * requests arrive in bursts with mixed sizes and variants, so the
+//!   dynamic batcher actually gets to fuse compatible requests;
+//! * every response is checked against the exact dot, and the run reports
+//!   throughput, latency percentiles, batching efficiency and accuracy.
+//!
+//! Results of a reference run are recorded in EXPERIMENTS.md §E2E.
+//!
+//! Run: `cargo run --release --example e2e_serve [-- --requests N]`
+
+use kahan_ecm::accuracy::exact::exact_dot_f32;
+use kahan_ecm::coordinator::{DotService, ServiceConfig};
+use kahan_ecm::util::{stats, Rng};
+use std::time::Instant;
+
+fn main() -> anyhow::Result<()> {
+    let mut requests: usize = 2000;
+    let mut args = std::env::args().skip(1);
+    while let Some(a) = args.next() {
+        if a == "--requests" {
+            requests = args.next().and_then(|v| v.parse().ok()).unwrap_or(requests);
+        }
+    }
+
+    println!("starting dot service (PJRT CPU, dynamic batching, window 2 ms)...");
+    let (svc, client) = DotService::start(ServiceConfig::default())?;
+
+    // --- workload: bursts of mixed-size, mixed-variant requests ---
+    let mut rng = Rng::new(2024);
+    let sizes = [512usize, 2048, 8192, 16384];
+    let t0 = Instant::now();
+    let mut latencies_us: Vec<f64> = Vec::with_capacity(requests);
+    let mut batch_sizes: Vec<f64> = Vec::with_capacity(requests);
+    let mut max_rel_err = 0.0f64;
+    let mut served = 0usize;
+    let mut id = 0u64;
+
+    while served < requests {
+        // a burst of 4..12 requests, then a think-time gap
+        let burst = 4 + rng.below(9) as usize;
+        let mut inflight = Vec::new();
+        for _ in 0..burst.min(requests - served) {
+            let n = sizes[rng.below(sizes.len() as u64) as usize];
+            let variant = if rng.uniform() < 0.8 { "kahan" } else { "naive" };
+            let a = rng.normal_f32_vec(n);
+            let b = rng.normal_f32_vec(n);
+            let exact = exact_dot_f32(&a, &b);
+            let scale: f64 = a
+                .iter()
+                .zip(&b)
+                .map(|(x, y)| (x * y).abs() as f64)
+                .sum::<f64>()
+                .max(1e-30);
+            inflight.push((client.submit(id, variant, a, b), exact, scale));
+            id += 1;
+        }
+        for (rx, exact, scale) in inflight {
+            let resp = rx.recv().expect("response");
+            let v = resp.value.expect("dot value") as f64;
+            max_rel_err = max_rel_err.max((v - exact).abs() / scale);
+            latencies_us.push(resp.latency.as_secs_f64() * 1e6);
+            batch_sizes.push(resp.batch_size as f64);
+            served += 1;
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let stats_out = svc.stop();
+
+    // --- report ---
+    println!("\n=== E2E serving report ===");
+    println!("requests           : {served}");
+    println!("wall time          : {wall:.2} s");
+    println!("throughput         : {:.0} req/s", served as f64 / wall);
+    println!(
+        "latency p50/p95/p99: {:.0} / {:.0} / {:.0} us",
+        stats::percentile(&latencies_us, 50.0),
+        stats::percentile(&latencies_us, 95.0),
+        stats::percentile(&latencies_us, 99.0)
+    );
+    println!("mean batch size    : {:.2}", stats::mean(&batch_sizes));
+    println!(
+        "PJRT calls         : {} ({} batched) for {} requests",
+        stats_out.pjrt_calls, stats_out.batched_calls, stats_out.requests
+    );
+    println!("errors             : {}", stats_out.errors);
+    println!("max rel error      : {max_rel_err:.3e} (vs exact dot, scaled by |a|.|b|)");
+
+    assert_eq!(stats_out.errors, 0, "no request may fail");
+    assert!(max_rel_err < 1e-5, "accuracy must hold end-to-end");
+    assert!(
+        (stats_out.pjrt_calls as usize) < served,
+        "batching must fuse requests ({} calls for {served})",
+        stats_out.pjrt_calls
+    );
+    println!("\nE2E PASS: all responses correct, batching effective");
+    Ok(())
+}

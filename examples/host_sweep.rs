@@ -1,0 +1,44 @@
+//! Host microbenchmark run: the likwid-bench analog on *this* machine.
+//!
+//! Sweeps every available SIMD kernel through the cache hierarchy and prints
+//! cycles per cache line, then verifies the paper's headline on real
+//! silicon: once the working set leaves the L1 cache, the vectorized Kahan
+//! dot costs the same as the naive dot.
+//!
+//! Run: `cargo run --release --example host_sweep [-- --full]`
+
+use kahan_ecm::bench::{self, kernels::by_name};
+use kahan_ecm::machine::detect;
+
+fn main() {
+    let full = std::env::args().any(|a| a == "--full");
+    let m = detect::detect_host();
+    println!("host: {} | {} cores | {:.2} GHz (tsc)", m.name, m.cores, m.clock_ghz);
+    let simd = detect::host_simd();
+    println!(
+        "simd: sse={} avx2={} fma={} avx512f={}\n",
+        simd.sse, simd.avx2, simd.fma, simd.avx512f
+    );
+
+    println!(
+        "{}",
+        kahan_ecm::coordinator::experiments::host_sweep_table(5, !full).render()
+    );
+
+    // headline check on real silicon: Kahan ~ naive beyond L1
+    let naive = by_name("naive-AVX2-SP").unwrap();
+    let kahan = by_name("kahan-AVX2-SP").unwrap();
+    let l1 = 16 * 1024u64;
+    let mem = 48 * 1024 * 1024u64;
+    let r = |k: &bench::HostKernel, ws: u64| bench::run_sweep(k, &[ws], 7, 3)[0].cy_per_cl;
+    let ratio_l1 = r(&kahan, l1) / r(&naive, l1);
+    let ratio_mem = r(&kahan, mem) / r(&naive, mem);
+    println!("kahan-AVX2 / naive-AVX2 cost ratio:");
+    println!("  L1-resident   : {ratio_l1:.2}x  (paper predicts ~2x)");
+    println!("  memory-bound  : {ratio_mem:.2}x  (paper predicts ~1x: 'Kahan for free')");
+
+    println!(
+        "\nmeasured load-only bandwidth: {:.1} GB/s",
+        bench::sweep::measure_load_bandwidth()
+    );
+}

@@ -1,0 +1,19 @@
+//! Regenerate every table and figure of the paper into `out/`
+//! (plain-text, markdown and CSV series) — the one-command reproduction.
+//!
+//! Run: `cargo run --release --example paper_figures [-- --out DIR]`
+
+use kahan_ecm::util::cli::Args;
+
+fn main() {
+    let mut raw: Vec<String> = std::env::args().skip(1).collect();
+    raw.insert(0, "all".to_string());
+    let args = Args::parse(raw).expect("args");
+    match kahan_ecm::coordinator::cli::run(&args) {
+        Ok(()) => println!("done — see out/ for every table/figure"),
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(1);
+        }
+    }
+}

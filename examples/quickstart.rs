@@ -1,0 +1,60 @@
+//! Quickstart: the three things this crate does, in 60 lines.
+//!
+//!   1. model    — ECM prediction for a Kahan dot on a paper socket
+//!   2. simulate — "measure" the same kernel on the virtual testbed
+//!   3. execute  — run the real AOT-compiled Kahan kernel through PJRT
+//!
+//! Run: `cargo run --release --example quickstart` (after `make artifacts`).
+
+use kahan_ecm::accuracy::exact::exact_dot_f32;
+use kahan_ecm::ecm::{self, notation};
+use kahan_ecm::isa::{generate, Precision, Simd, Variant};
+use kahan_ecm::machine::preset;
+use kahan_ecm::machine::PresetId;
+use kahan_ecm::runtime::Runtime;
+use kahan_ecm::sim;
+use kahan_ecm::util::Rng;
+
+fn main() -> anyhow::Result<()> {
+    // ---- 1. the analytic ECM model (paper §3) ----
+    let ivb = preset(PresetId::Ivb);
+    let kernel = generate(Variant::Kahan, Simd::Avx, Precision::Sp, 0);
+    let model = ecm::build(&ivb, &kernel, true);
+    println!("kernel          : {}", kernel.name);
+    println!("machine         : {} ({})", ivb.name, ivb.xeon_model);
+    println!("ECM model       : {} cy", notation::format_model(&model));
+    println!("prediction      : {} cy", notation::format_prediction(&model));
+    println!("performance     : {} GUP/s", notation::format_perf(&model));
+    println!("saturation      : {} cores", model.saturation_cores());
+
+    // ---- 2. the virtual testbed (the paper's "measurement") ----
+    println!("\nworking-set sweep on simulated IVB (cy per cache line):");
+    for ws in [16u64 << 10, 128 << 10, 4 << 20, 256 << 20] {
+        let p = sim::simulate_working_set(&ivb, &kernel, ws / kernel.bytes_per_iter(), true);
+        println!(
+            "  {:>8} KiB -> {:5.2} cy/CL  ({:4.2} GUP/s)",
+            ws >> 10,
+            p.cy_per_cl,
+            p.gups
+        );
+    }
+
+    // ---- 3. the real thing: AOT Pallas kernel through PJRT ----
+    let mut rt = Runtime::new()?;
+    println!("\nPJRT platform   : {}", rt.platform());
+    let mut rng = Rng::new(7);
+    let a = rng.normal_f32_vec(4096);
+    let b = rng.normal_f32_vec(4096);
+    let kahan = rt.dot_f32("dot_kahan_f32_n4096", &a, &b)?;
+    let naive = rt.dot_f32("dot_naive_f32_n4096", &a, &b)?;
+    let exact = exact_dot_f32(&a, &b);
+    println!("kahan dot       : {kahan}");
+    println!("naive dot       : {naive}");
+    println!("exact dot       : {exact}");
+    println!(
+        "abs err         : kahan {:.3e}, naive {:.3e}",
+        (kahan as f64 - exact).abs(),
+        (naive as f64 - exact).abs()
+    );
+    Ok(())
+}

@@ -1,0 +1,120 @@
+"""AOT lowering: JAX/Pallas -> HLO *text* -> artifacts/ for the Rust runtime.
+
+HLO text (not ``HloModuleProto.serialize()``) is the interchange format: the
+image's xla_extension 0.5.1 rejects jax>=0.5 protos with 64-bit instruction
+ids, while the text parser reassigns ids and round-trips cleanly (see
+/opt/xla-example/README.md).
+
+Outputs:
+    artifacts/<name>.hlo.txt   one per entry in MANIFEST below
+    artifacts/manifest.tsv     machine-readable index for the Rust runtime
+    artifacts/manifest.json    human-readable index
+
+Run as:  cd python && python -m compile.aot --out ../artifacts
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+DTYPES = {"f32": jnp.float32, "f64": jnp.float64}
+
+# (name, kind, variant, dtype, batch, n, block, lanes)
+# Sizes chosen to bracket the paper's working-set regimes while staying cheap
+# to execute through the interpret-mode Pallas lowering on CPU.
+MANIFEST = [
+    ("dot_naive_f32_n4096", "dot", "naive", "f32", 0, 4096, 4096, 1024),
+    ("dot_kahan_f32_n4096", "dot", "kahan", "f32", 0, 4096, 4096, 1024),
+    ("dot_naive_f32_n65536", "dot", "naive", "f32", 0, 65536, 8192, 1024),
+    ("dot_kahan_f32_n65536", "dot", "kahan", "f32", 0, 65536, 8192, 1024),
+    ("dot_naive_f64_n65536", "dot", "naive", "f64", 0, 65536, 8192, 1024),
+    ("dot_kahan_f64_n65536", "dot", "kahan", "f64", 0, 65536, 8192, 1024),
+    ("dot_kahan_f32_n1048576", "dot", "kahan", "f32", 0, 1048576, 16384, 1024),
+    ("ksum_f32_n65536", "ksum", "kahan", "f32", 0, 65536, 8192, 1024),
+    ("batched_dot_kahan_f32_b8_n16384", "dot", "kahan", "f32", 8, 16384, 8192, 1024),
+    ("batched_dot_naive_f32_b8_n16384", "dot", "naive", "f32", 8, 16384, 8192, 1024),
+    ("batched_dot_kahan_f32_b4_n4096", "dot", "kahan", "f32", 4, 4096, 4096, 1024),
+]
+
+
+def build_entry(name, kind, variant, dtype_s, batch, n, block, lanes):
+    dtype = DTYPES[dtype_s]
+    if kind == "ksum":
+        fn, args = model.make_ksum(n, dtype, block=block, lanes=lanes)
+    elif batch > 0:
+        fn, args = model.make_batched_dot(batch, n, dtype, variant=variant,
+                                          block=block, lanes=lanes)
+    else:
+        fn, args = model.make_dot(n, dtype, variant=variant, block=block,
+                                  lanes=lanes)
+    lowered = jax.jit(fn).lower(*args)
+    return to_hlo_text(lowered), len(args)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--only", default=None, help="substring filter on names")
+    ap.add_argument("--force", action="store_true", help="rebuild even if fresh")
+    ns = ap.parse_args()
+    os.makedirs(ns.out, exist_ok=True)
+
+    src_mtime = max(
+        os.path.getmtime(p)
+        for p in [
+            __file__,
+            os.path.join(os.path.dirname(__file__), "model.py"),
+            os.path.join(os.path.dirname(__file__), "kernels", "kahan.py"),
+        ]
+    )
+
+    rows = []
+    for name, kind, variant, dtype_s, batch, n, block, lanes in MANIFEST:
+        path = os.path.join(ns.out, f"{name}.hlo.txt")
+        rows.append(
+            dict(name=name, kind=kind, variant=variant, dtype=dtype_s,
+                 batch=batch, n=n, block=block, lanes=lanes,
+                 file=os.path.basename(path))
+        )
+        if ns.only and ns.only not in name:
+            continue
+        if (not ns.force and os.path.exists(path)
+                and os.path.getmtime(path) >= src_mtime):
+            print(f"fresh   {name}")
+            continue
+        text, _num_inputs = build_entry(name, kind, variant, dtype_s, batch, n,
+                                        block, lanes)
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"lowered {name}: {len(text)} chars -> {path}")
+
+    with open(os.path.join(ns.out, "manifest.tsv"), "w") as f:
+        f.write("# name\tkind\tvariant\tdtype\tbatch\tn\tblock\tlanes\tfile\n")
+        for r in rows:
+            f.write("\t".join(str(r[k]) for k in
+                              ("name", "kind", "variant", "dtype", "batch",
+                               "n", "block", "lanes", "file")) + "\n")
+    with open(os.path.join(ns.out, "manifest.json"), "w") as f:
+        json.dump(rows, f, indent=2)
+    print(f"manifest: {len(rows)} entries")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,187 @@
+"""Layer-1 Pallas kernels: lane-parallel (Kahan-)compensated scalar product.
+
+The paper's optimal x86 kernels keep one partial sum *and one compensation
+term per SIMD lane* and only reduce across lanes after the main loop; that is
+the only way to vectorize Kahan, because the compensation `c` is a
+loop-carried dependency within a lane but independent *across* lanes.
+
+The TPU/Pallas adaptation (DESIGN.md §6) maps paper SIMD lanes to a VMEM lane
+accumulator of shape ``(LANES,)`` (logically an ``(8, 128)`` VPU tile), the
+modulo-unrolled register blocks to a 1-D grid whose HBM->VMEM block copies are
+pipelined by BlockSpec, and the final horizontal reduction to a compensated
+fold done by the Layer-2 wrapper (`model.py`).
+
+All kernels are lowered with ``interpret=True`` — the CPU PJRT client cannot
+execute Mosaic custom-calls (see /opt/xla-example/README.md).
+
+Kernel contract (shared by all variants):
+    inputs  x, y : f32/f64[n]          with  n % block == 0, block % lanes == 0
+    outputs sums : dtype[lanes], comp : dtype[lanes]
+such that ``dot(x, y) ~= reduce(sums) + reduce(comp)``. The naive variant
+returns ``comp == 0``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_LANES = 1024  # one (8, 128) f32 VPU tile
+DEFAULT_BLOCK = 8192
+
+
+def _kahan_lane_step(prod, s, c):
+    """One compensated accumulation step, per lane (Fig. 1b of the paper)."""
+    y = prod - c
+    t = s + y
+    c_new = (t - s) - y
+    return t, c_new
+
+
+def _kahan_dot_kernel(x_ref, y_ref, sum_ref, c_ref, *, lanes: int, rows: int):
+    """Grid step: fold `rows` stripes of `lanes` elements into the lane accs.
+
+    sum_ref/c_ref live in the output window that every grid step maps to the
+    same block (index_map -> 0), so they behave as grid-carried accumulators —
+    the Pallas analog of the paper's accumulation registers.
+    """
+
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        sum_ref[...] = jnp.zeros_like(sum_ref)
+        c_ref[...] = jnp.zeros_like(c_ref)
+
+    x = x_ref[...].reshape(rows, lanes)
+    y = y_ref[...].reshape(rows, lanes)
+
+    def body(r, carry):
+        s, c = carry
+        prod = x[r, :] * y[r, :]
+        return _kahan_lane_step(prod, s, c)
+
+    s, c = jax.lax.fori_loop(0, rows, body, (sum_ref[...], c_ref[...]))
+    sum_ref[...] = s
+    c_ref[...] = c
+
+
+def _naive_dot_kernel(x_ref, y_ref, sum_ref, c_ref, *, lanes: int, rows: int):
+    """Naive (uncompensated) lane-parallel dot — the paper's baseline.
+
+    Keeps the same (sums, comp) output contract with comp == 0 so the L2/L3
+    layers treat all variants uniformly.
+    """
+
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        sum_ref[...] = jnp.zeros_like(sum_ref)
+        c_ref[...] = jnp.zeros_like(c_ref)
+
+    x = x_ref[...].reshape(rows, lanes)
+    y = y_ref[...].reshape(rows, lanes)
+
+    def body(r, s):
+        return s + x[r, :] * y[r, :]
+
+    sum_ref[...] = jax.lax.fori_loop(0, rows, body, sum_ref[...])
+
+
+def _kahan_sum_kernel(x_ref, sum_ref, c_ref, *, lanes: int, rows: int):
+    """Compensated summation (dot with implicit y == 1): the classic Kahan."""
+
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        sum_ref[...] = jnp.zeros_like(sum_ref)
+        c_ref[...] = jnp.zeros_like(c_ref)
+
+    x = x_ref[...].reshape(rows, lanes)
+
+    def body(r, carry):
+        s, c = carry
+        return _kahan_lane_step(x[r, :], s, c)
+
+    s, c = jax.lax.fori_loop(0, rows, body, (sum_ref[...], c_ref[...]))
+    sum_ref[...] = s
+    c_ref[...] = c
+
+
+def _check_geometry(n: int, block: int, lanes: int) -> int:
+    if block % lanes != 0:
+        raise ValueError(f"block ({block}) must be a multiple of lanes ({lanes})")
+    if n % block != 0:
+        raise ValueError(f"n ({n}) must be a multiple of block ({block}); pad in L2")
+    return block // lanes
+
+
+def lane_dot(
+    x,
+    y,
+    *,
+    variant: str = "kahan",
+    block: int = DEFAULT_BLOCK,
+    lanes: int = DEFAULT_LANES,
+):
+    """Lane-parallel (compensated) dot product.
+
+    Returns ``(sums, comp)``, each of shape ``(lanes,)``; the caller performs
+    the final compensated cross-lane reduction (see model.reduce_lanes).
+    """
+    n = x.shape[0]
+    if y.shape != x.shape:
+        raise ValueError(f"shape mismatch: {x.shape} vs {y.shape}")
+    rows = _check_geometry(n, block, lanes)
+    grid = n // block
+    kernel = {"kahan": _kahan_dot_kernel, "naive": _naive_dot_kernel}[variant]
+
+    out_dtype = x.dtype
+    return pl.pallas_call(
+        functools.partial(kernel, lanes=lanes, rows=rows),
+        grid=(grid,),
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((lanes,), lambda i: (0,)),
+            pl.BlockSpec((lanes,), lambda i: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((lanes,), out_dtype),
+            jax.ShapeDtypeStruct((lanes,), out_dtype),
+        ],
+        interpret=True,
+    )(x, y)
+
+
+def lane_sum(x, *, block: int = DEFAULT_BLOCK, lanes: int = DEFAULT_LANES):
+    """Lane-parallel Kahan summation. Returns ``(sums, comp)``."""
+    n = x.shape[0]
+    rows = _check_geometry(n, block, lanes)
+    grid = n // block
+    return pl.pallas_call(
+        functools.partial(_kahan_sum_kernel, lanes=lanes, rows=rows),
+        grid=(grid,),
+        in_specs=[pl.BlockSpec((block,), lambda i: (i,))],
+        out_specs=[
+            pl.BlockSpec((lanes,), lambda i: (0,)),
+            pl.BlockSpec((lanes,), lambda i: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((lanes,), x.dtype),
+            jax.ShapeDtypeStruct((lanes,), x.dtype),
+        ],
+        interpret=True,
+    )(x)
+
+
+def vmem_footprint_bytes(block: int, lanes: int, dtype_bytes: int) -> int:
+    """Estimated VMEM footprint of one grid step (DESIGN.md §7, L1 perf).
+
+    Two input blocks + two lane accumulators + the reshaped working tiles.
+    """
+    inputs = 2 * block * dtype_bytes
+    accs = 2 * lanes * dtype_bytes
+    working = 2 * block * dtype_bytes  # reshaped row views materialized
+    return inputs + accs + working

@@ -1,0 +1,205 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+Three tiers of reference:
+
+* ``*_lanes_ref`` — bit-exact emulations of the lane-parallel kernels
+  (same stripe order, same per-lane compensated updates). The pytest suite
+  asserts *bitwise* equality against the Pallas kernels; any divergence means
+  the kernel does not implement the algorithm it claims to.
+* ``kahan_dot_scan`` / ``naive_dot_scan`` — the paper's Fig. 1 sequential
+  semantics (one scalar accumulator), via ``lax.scan``.
+* ``exact_dot`` — a higher-precision ground truth (f64 accumulation of f32
+  data; Neumaier in f64 for f64 data) used for *accuracy* assertions, i.e.
+  that Kahan actually buys the precision the paper's motivation claims.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# bit-exact lane emulations
+# ---------------------------------------------------------------------------
+
+def kahan_dot_lanes_ref(x, y, *, block: int, lanes: int):
+    """Bit-exact emulation of kernels.kahan.lane_dot(variant='kahan')."""
+    n = x.shape[0]
+    rows_total = n // lanes
+    xs = x.reshape(rows_total, lanes)
+    ys = y.reshape(rows_total, lanes)
+
+    def step(carry, xy):
+        s, c = carry
+        xr, yr = xy
+        prod = xr * yr
+        t = prod - c
+        u = s + t
+        c_new = (u - s) - t
+        return (u, c_new), None
+
+    init = (jnp.zeros(lanes, x.dtype), jnp.zeros(lanes, x.dtype))
+    (s, c), _ = jax.lax.scan(step, init, (xs, ys))
+    return s, c
+
+
+def naive_dot_lanes_ref(x, y, *, block: int, lanes: int):
+    """Bit-exact emulation of kernels.kahan.lane_dot(variant='naive')."""
+    n = x.shape[0]
+    xs = x.reshape(n // lanes, lanes)
+    ys = y.reshape(n // lanes, lanes)
+
+    def step(s, xy):
+        xr, yr = xy
+        return s + xr * yr, None
+
+    s, _ = jax.lax.scan(step, jnp.zeros(lanes, x.dtype), (xs, ys))
+    return s, jnp.zeros(lanes, x.dtype)
+
+
+def kahan_sum_lanes_ref(x, *, block: int, lanes: int):
+    """Bit-exact emulation of kernels.kahan.lane_sum."""
+    n = x.shape[0]
+    xs = x.reshape(n // lanes, lanes)
+
+    def step(carry, xr):
+        s, c = carry
+        t = xr - c
+        u = s + t
+        c_new = (u - s) - t
+        return (u, c_new), None
+
+    init = (jnp.zeros(lanes, x.dtype), jnp.zeros(lanes, x.dtype))
+    (s, c), _ = jax.lax.scan(step, init, xs)
+    return s, c
+
+
+def reduce_lanes_ref(sums, comp):
+    """Bit-exact emulation of model.reduce_lanes: sequential compensated fold
+    of the per-lane partial sums, seeding each step's compensation with the
+    lane's own residual term."""
+
+    def step(carry, inp):
+        s, c = carry
+        v, cv = inp
+        y = v - (c + cv)
+        t = s + y
+        c_new = (t - s) - y
+        return (t, c_new), None
+
+    dtype = sums.dtype
+    (s, c), _ = jax.lax.scan(
+        step, (jnp.zeros((), dtype), jnp.zeros((), dtype)), (sums, comp)
+    )
+    return s
+
+
+# ---------------------------------------------------------------------------
+# paper Fig. 1 sequential semantics
+# ---------------------------------------------------------------------------
+
+def naive_dot_scan(x, y):
+    """Fig. 1a: strictly sequential naive dot (C-standard order)."""
+
+    def step(s, xy):
+        return s + xy[0] * xy[1], None
+
+    s, _ = jax.lax.scan(step, jnp.zeros((), x.dtype), (x, y))
+    return s
+
+
+def kahan_dot_scan(x, y):
+    """Fig. 1b: strictly sequential Kahan-compensated dot."""
+
+    def step(carry, xy):
+        s, c = carry
+        prod = xy[0] * xy[1]
+        yv = prod - c
+        t = s + yv
+        c_new = (t - s) - yv
+        return (t, c_new), None
+
+    (s, _), _ = jax.lax.scan(
+        step, (jnp.zeros((), x.dtype), jnp.zeros((), x.dtype)), (x, y)
+    )
+    return s
+
+
+# ---------------------------------------------------------------------------
+# higher-precision ground truth (numpy, host-side)
+# ---------------------------------------------------------------------------
+
+def exact_dot(x, y) -> float:
+    """Ground-truth dot for accuracy experiments.
+
+    f32 inputs: products are exact in f64; Neumaier-compensated f64
+    accumulation leaves the error many orders below the f32 quantities being
+    compared. For f64 inputs this is "only" Neumaier-in-f64 — adequate for
+    the condition numbers the tests generate (the Rust `accuracy` module
+    carries the fully exact expansion arithmetic).
+    """
+    xa = np.asarray(x, dtype=np.float64)
+    ya = np.asarray(y, dtype=np.float64)
+    prods = xa * ya
+    s = 0.0
+    c = 0.0
+    for p in prods:
+        t = s + p
+        if abs(s) >= abs(p):
+            c += (s - t) + p
+        else:
+            c += (p - t) + s
+        s = t
+    return float(s + c)
+
+
+def gen_dot(n: int, target_cond: float, rng: np.random.Generator, dtype=np.float32):
+    """Ogita–Rump–Oishi GenDot: generate (x, y) whose dot product has a
+    prescribed condition number. Returns (x, y, exact_value, actual_cond).
+
+    The running dot is tracked with an incremental Neumaier accumulator so
+    generation is O(n), not O(n^2)."""
+    if n < 6:
+        raise ValueError("gen_dot needs n >= 6")
+    b = np.log2(target_cond)
+    half = n // 2
+    e = np.rint(rng.uniform(0.0, b / 2.0, size=half))
+    e[0] = np.rint(b / 2.0)
+    e[-1] = 0.0
+    x = np.zeros(n)
+    y = np.zeros(n)
+    x[:half] = (2.0 * rng.random(half) - 1.0) * (2.0 ** e)
+    y[:half] = (2.0 * rng.random(half) - 1.0) * (2.0 ** e)
+
+    s = 0.0  # running Neumaier accumulator over x[i]*y[i]
+    c = 0.0
+
+    def acc(p):
+        nonlocal s, c
+        t = s + p
+        if abs(s) >= abs(p):
+            c += (s - t) + p
+        else:
+            c += (p - t) + s
+        s = t
+
+    for i in range(half):
+        acc(float(x[i]) * float(y[i]))
+
+    # second half: successively cancel the running dot towards zero
+    e2 = np.rint(np.linspace(b / 2.0, 0.0, n - half))
+    for i in range(half, n):
+        x[i] = (2.0 * rng.random() - 1.0) * (2.0 ** e2[i - half])
+        if x[i] == 0.0:
+            x[i] = 1.0
+        cur = s + c
+        y[i] = ((2.0 * rng.random() - 1.0) * (2.0 ** e2[i - half]) - cur) / x[i]
+        acc(float(x[i]) * float(y[i]))
+    x = x.astype(dtype)
+    y = y.astype(dtype)
+    exact = exact_dot(x, y)
+    abs_dot = exact_dot(np.abs(x), np.abs(y))
+    cond = 2.0 * abs_dot / abs(exact) if exact != 0 else np.inf
+    return x, y, exact, cond

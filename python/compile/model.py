@@ -1,0 +1,130 @@
+"""Layer-2 JAX computation graphs for the (Kahan-)compensated scalar product.
+
+These are the functions that get AOT-lowered to HLO text (`aot.py`) and
+executed by the Rust runtime; they call the Layer-1 Pallas kernels and add:
+
+* zero-padding to the kernel's block geometry (zeros are numerically neutral
+  for a dot product, including under compensation),
+* the final compensated cross-lane reduction,
+* a batched variant (the request shape served by the Rust coordinator).
+
+Python is build-time only: nothing here runs on the request path.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+
+from .kernels import kahan as K
+
+VARIANTS = ("naive", "kahan")
+
+
+def reduce_lanes(sums, comp):
+    """Compensated sequential fold of per-lane partial sums.
+
+    This is the paper's horizontal reduction after the SIMD loop. Each lane
+    contributes its partial sum and its residual compensation; the fold itself
+    is Kahan-compensated so the cross-lane step does not reintroduce the error
+    the lanes worked to remove.
+    """
+
+    def step(carry, inp):
+        s, c = carry
+        v, cv = inp
+        y = v - (c + cv)
+        t = s + y
+        c_new = (t - s) - y
+        return (t, c_new), None
+
+    dtype = sums.dtype
+    (s, _), _ = jax.lax.scan(
+        step, (jnp.zeros((), dtype), jnp.zeros((), dtype)), (sums, comp)
+    )
+    return s
+
+
+def _pad_to_block(v, block: int):
+    n = v.shape[0]
+    rem = n % block
+    if rem == 0:
+        return v
+    return jnp.pad(v, (0, block - rem))
+
+
+def dot(
+    x,
+    y,
+    *,
+    variant: str = "kahan",
+    block: int = K.DEFAULT_BLOCK,
+    lanes: int = K.DEFAULT_LANES,
+):
+    """Full scalar product: pad -> lane-parallel kernel -> compensated fold."""
+    if variant not in VARIANTS:
+        raise ValueError(f"unknown variant {variant!r}")
+    n = x.shape[0]
+    blk = min(block, max(lanes, 1 << (n - 1).bit_length())) if n < block else block
+    xp = _pad_to_block(x, blk)
+    yp = _pad_to_block(y, blk)
+    sums, comp = K.lane_dot(xp, yp, variant=variant, block=blk, lanes=min(lanes, blk))
+    return reduce_lanes(sums, comp)
+
+
+def ksum(x, *, block: int = K.DEFAULT_BLOCK, lanes: int = K.DEFAULT_LANES):
+    """Full compensated summation (dot against implicit ones)."""
+    n = x.shape[0]
+    blk = min(block, max(lanes, 1 << (n - 1).bit_length())) if n < block else block
+    xp = _pad_to_block(x, blk)
+    sums, comp = K.lane_sum(xp, block=blk, lanes=min(lanes, blk))
+    return reduce_lanes(sums, comp)
+
+
+def batched_dot(xs, ys, *, variant: str = "kahan", block: int = K.DEFAULT_BLOCK,
+                lanes: int = K.DEFAULT_LANES):
+    """Batched scalar products: (B, n) x (B, n) -> (B,).
+
+    This is the artifact shape the Rust coordinator's dynamic batcher executes:
+    requests of equal length are grouped into one PJRT call.
+    """
+    f = functools.partial(dot, variant=variant, block=block, lanes=lanes)
+    return jax.vmap(f)(xs, ys)
+
+
+def make_dot(n: int, dtype, *, variant: str, block: int = K.DEFAULT_BLOCK,
+             lanes: int = K.DEFAULT_LANES):
+    """Return (fn, example_args) for AOT lowering of a fixed-size dot."""
+    spec = jax.ShapeDtypeStruct((n,), dtype)
+
+    def fn(x, y):
+        return (dot(x, y, variant=variant, block=block, lanes=lanes),)
+
+    return fn, (spec, spec)
+
+
+def make_batched_dot(batch: int, n: int, dtype, *, variant: str,
+                     block: int = K.DEFAULT_BLOCK, lanes: int = K.DEFAULT_LANES):
+    """Return (fn, example_args) for AOT lowering of a batched dot."""
+    spec = jax.ShapeDtypeStruct((batch, n), dtype)
+
+    def fn(xs, ys):
+        return (batched_dot(xs, ys, variant=variant, block=block, lanes=lanes),)
+
+    return fn, (spec, spec)
+
+
+def make_ksum(n: int, dtype, *, block: int = K.DEFAULT_BLOCK,
+              lanes: int = K.DEFAULT_LANES):
+    """Return (fn, example_args) for AOT lowering of a fixed-size Kahan sum."""
+    spec = jax.ShapeDtypeStruct((n,), dtype)
+
+    def fn(x):
+        return (ksum(x, block=block, lanes=lanes),)
+
+    return fn, (spec,)

@@ -1,0 +1,131 @@
+"""Numerical-payoff tests: does compensation buy what the paper's motivation
+(§1) claims?
+
+Honest physics of the Kahan *dot* (vs. Kahan *sum*): compensation removes
+*summation* rounding error but not *product* rounding error, so for a dot
+with condition number `cond` in precision eps the best any
+non-TwoProduct method can do is O(eps·cond). The wins we assert:
+
+* Kahan sum crushes sequential naive sum on cancellation-heavy data.
+* Kahan dot is never worse than sequential naive (Fig. 1a) and beats it
+  by a large factor once n is big enough for naive error accumulation.
+* Kahan dot error stays within a small constant times eps·cond (the
+  theoretical floor set by product rounding).
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import model
+from compile.kernels import ref
+
+jax.config.update("jax_enable_x64", True)
+
+
+def rel_err(approx: float, exact: float) -> float:
+    if exact == 0.0:
+        return abs(approx)
+    return abs(approx - exact) / abs(exact)
+
+
+def test_gen_dot_hits_condition_number():
+    rng = np.random.default_rng(1)
+    for target in (1e4, 1e8, 1e12):
+        _, _, exact, cond = ref.gen_dot(512, target, rng, np.float64)
+        assert np.isfinite(exact)
+        # GenDot is stochastic; accept two orders of magnitude slack
+        assert target / 1e2 <= cond <= target * 1e3
+
+
+def test_kahan_sum_beats_naive_sum_large_accumulator():
+    """Classic Kahan demo: a large accumulator absorbing many small addends
+    (condition number ~1, so compensation is *able* to win — Kahan's error
+    bound is 2*eps*cond and no single-compensation scheme can beat that).
+
+    Sequential naive drops most of each small addend once the running sum is
+    large (eps_f32(1e7) ~ 1); Kahan recovers them via the compensation term.
+    """
+    rng = np.random.default_rng(2)
+    n = 65536
+    x = rng.random(n).astype(np.float32)  # uniform(0,1), all positive
+    x[0] = 1e8  # eps_f32(1e8) = 8: naive drops each small addend entirely
+    exact = ref.exact_dot(x, np.ones_like(x))
+
+    ks = float(model.ksum(jnp.array(x), block=4096, lanes=1024))
+    naive_seq = float(ref.naive_dot_scan(jnp.array(x), jnp.ones(n, jnp.float32)))
+
+    assert rel_err(ks, exact) < 1e-6
+    assert rel_err(naive_seq, exact) > 1e-4  # naive visibly wrong
+    assert rel_err(ks, exact) < rel_err(naive_seq, exact) / 100
+
+
+@pytest.mark.parametrize("target_cond", [1e4, 1e6])
+def test_kahan_dot_vs_sequential_naive_illconditioned(target_cond):
+    rng = np.random.default_rng(3)
+    n = 4096
+    x, y, exact, cond = ref.gen_dot(n, target_cond, rng, np.float32)
+    dk = float(model.dot(jnp.array(x), jnp.array(y), variant="kahan",
+                         block=4096, lanes=1024))
+    dn_seq = float(ref.naive_dot_scan(jnp.array(x), jnp.array(y)))
+
+    ek, en = rel_err(dk, exact), rel_err(dn_seq, exact)
+    # Kahan is at worst marginally above the product-rounding floor
+    eps32 = 1.2e-7
+    assert ek <= 16 * eps32 * cond + 16 * eps32
+    # and never meaningfully worse than sequential naive
+    assert ek <= en * 4 + 16 * eps32
+
+
+def test_kahan_dot_beats_naive_seq_when_n_large():
+    """Error growth: naive sequential error grows with n, Kahan's does not.
+
+    Use well-conditioned data scaled so magnitudes vary: Kahan dot should be
+    ~n/2 better in the worst case; we assert a conservative 4x on the median
+    of several trials.
+    """
+    n = 65536
+    wins = 0
+    trials = 5
+    for s in range(trials):
+        rng = np.random.default_rng(100 + s)
+        x = (rng.standard_normal(n) * np.exp(rng.uniform(0, 8, n))).astype(np.float32)
+        y = rng.standard_normal(n).astype(np.float32)
+        exact = ref.exact_dot(x, y)
+        dk = float(model.dot(jnp.array(x), jnp.array(y), variant="kahan"))
+        dn = float(ref.naive_dot_scan(jnp.array(x), jnp.array(y)))
+        if rel_err(dk, exact) <= rel_err(dn, exact) / 4:
+            wins += 1
+    assert wins >= 3, f"kahan won only {wins}/{trials} trials"
+
+
+def test_lane_parallel_naive_more_accurate_than_sequential():
+    """Paper §3: 'partial sums usually improve the accuracy' — the naive
+    SIMD/lane version should already beat strict sequential order."""
+    n = 65536
+    better = 0
+    trials = 5
+    for s in range(trials):
+        rng = np.random.default_rng(200 + s)
+        x = (rng.standard_normal(n) * np.exp(rng.uniform(0, 6, n))).astype(np.float32)
+        y = rng.standard_normal(n).astype(np.float32)
+        exact = ref.exact_dot(x, y)
+        dl = float(model.dot(jnp.array(x), jnp.array(y), variant="naive"))
+        ds = float(ref.naive_dot_scan(jnp.array(x), jnp.array(y)))
+        if rel_err(dl, exact) <= rel_err(ds, exact):
+            better += 1
+    assert better >= 3
+
+
+def test_kahan_scan_matches_neumaier_scale():
+    """Sequential Kahan (Fig. 1b semantics) on f32 stays near the f64 truth
+    for benign data."""
+    rng = np.random.default_rng(4)
+    n = 8192
+    x = rng.standard_normal(n).astype(np.float32)
+    y = rng.standard_normal(n).astype(np.float32)
+    exact = ref.exact_dot(x, y)
+    dk = float(ref.kahan_dot_scan(jnp.array(x), jnp.array(y)))
+    scale = ref.exact_dot(np.abs(x), np.abs(y))
+    assert abs(dk - exact) <= 4e-7 * scale

@@ -1,0 +1,177 @@
+"""Layer-1 correctness: Pallas kernels vs pure-jnp oracles.
+
+The strongest assertion here is *bitwise* equality between the Pallas kernels
+and the lane-emulation references: both implement the identical sequence of
+floating-point operations, so any deviation is a kernel bug, not "numerics".
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import kahan as K
+from compile.kernels import ref
+
+jax.config.update("jax_enable_x64", True)
+
+
+def _rand(n, dtype, seed):
+    rng = np.random.default_rng(seed)
+    return (rng.standard_normal(n).astype(dtype),
+            rng.standard_normal(n).astype(dtype))
+
+
+GEOMS = [
+    # (n, block, lanes)
+    (4096, 4096, 1024),
+    (8192, 4096, 512),
+    (16384, 8192, 1024),
+    (2048, 1024, 128),
+    (1024, 1024, 1024),
+]
+
+
+@pytest.mark.parametrize("variant", ["kahan", "naive"])
+@pytest.mark.parametrize("dtype", [np.float32, np.float64])
+@pytest.mark.parametrize("n,block,lanes", GEOMS)
+def test_lane_dot_bitwise_vs_ref(variant, dtype, n, block, lanes):
+    x, y = _rand(n, dtype, seed=n + lanes)
+    s_k, c_k = K.lane_dot(jnp.array(x), jnp.array(y), variant=variant,
+                          block=block, lanes=lanes)
+    fn = {"kahan": ref.kahan_dot_lanes_ref, "naive": ref.naive_dot_lanes_ref}[variant]
+    s_r, c_r = fn(jnp.array(x), jnp.array(y), block=block, lanes=lanes)
+    assert s_k.dtype == s_r.dtype
+    np.testing.assert_array_equal(np.asarray(s_k), np.asarray(s_r))
+    np.testing.assert_array_equal(np.asarray(c_k), np.asarray(c_r))
+
+
+@pytest.mark.parametrize("dtype", [np.float32, np.float64])
+@pytest.mark.parametrize("n,block,lanes", GEOMS[:3])
+def test_lane_sum_bitwise_vs_ref(dtype, n, block, lanes):
+    x, _ = _rand(n, dtype, seed=n)
+    s_k, c_k = K.lane_sum(jnp.array(x), block=block, lanes=lanes)
+    s_r, c_r = ref.kahan_sum_lanes_ref(jnp.array(x), block=block, lanes=lanes)
+    np.testing.assert_array_equal(np.asarray(s_k), np.asarray(s_r))
+    np.testing.assert_array_equal(np.asarray(c_k), np.asarray(c_r))
+
+
+def test_naive_comp_is_zero():
+    x, y = _rand(4096, np.float32, seed=7)
+    _, c = K.lane_dot(jnp.array(x), jnp.array(y), variant="naive",
+                      block=4096, lanes=1024)
+    assert np.all(np.asarray(c) == 0.0)
+
+
+@pytest.mark.parametrize("variant", ["kahan", "naive"])
+def test_dot_padding_matches_manual_pad(variant):
+    """model.dot pads internally with zeros; must equal dotting padded arrays."""
+    n, block, lanes = 5000, 4096, 1024
+    x, y = _rand(n, np.float32, seed=3)
+    d1 = model.dot(jnp.array(x), jnp.array(y), variant=variant,
+                   block=block, lanes=lanes)
+    pad = (-n) % block
+    xp = np.pad(x, (0, pad))
+    yp = np.pad(y, (0, pad))
+    d2 = model.dot(jnp.array(xp), jnp.array(yp), variant=variant,
+                   block=block, lanes=lanes)
+    assert float(d1) == float(d2)
+
+
+def test_dot_close_to_exact_well_conditioned():
+    x, y = _rand(65536, np.float32, seed=11)
+    exact = ref.exact_dot(x, y)
+    for variant in ("kahan", "naive"):
+        d = float(model.dot(jnp.array(x), jnp.array(y), variant=variant))
+        scale = ref.exact_dot(np.abs(x), np.abs(y))
+        assert abs(d - exact) <= 1e-5 * scale
+
+
+def test_dot_matches_f64_when_f64():
+    x, y = _rand(16384, np.float64, seed=13)
+    d = float(model.dot(jnp.array(x), jnp.array(y), variant="kahan"))
+    exact = ref.exact_dot(x, y)
+    assert abs(d - exact) <= 1e-12 * abs(exact) + 1e-13
+
+
+def test_batched_dot_matches_loop():
+    b, n = 4, 4096
+    rng = np.random.default_rng(5)
+    xs = rng.standard_normal((b, n)).astype(np.float32)
+    ys = rng.standard_normal((b, n)).astype(np.float32)
+    out = model.batched_dot(jnp.array(xs), jnp.array(ys), variant="kahan",
+                            block=4096, lanes=1024)
+    for i in range(b):
+        single = model.dot(jnp.array(xs[i]), jnp.array(ys[i]), variant="kahan",
+                           block=4096, lanes=1024)
+        assert float(out[i]) == float(single)
+
+
+def test_ksum_equals_dot_with_ones():
+    n = 8192
+    x, _ = _rand(n, np.float32, seed=17)
+    s = model.ksum(jnp.array(x), block=4096, lanes=1024)
+    ones = jnp.ones(n, jnp.float32)
+    # not bitwise (sum kernel skips the multiply) but must agree to ulp-level
+    d = model.dot(jnp.array(x), ones, variant="kahan", block=4096, lanes=1024)
+    np.testing.assert_allclose(float(s), float(d), rtol=1e-6)
+
+
+def test_geometry_validation():
+    x = jnp.zeros(4096, jnp.float32)
+    with pytest.raises(ValueError):
+        K.lane_dot(x, x, block=1000, lanes=512)  # block % lanes != 0
+    with pytest.raises(ValueError):
+        K.lane_dot(x, x, block=8192, lanes=1024)  # n % block != 0
+    with pytest.raises(ValueError):
+        K.lane_dot(x, jnp.zeros(4095, jnp.float32), block=4096, lanes=1024)
+
+
+# ---------------------------------------------------------------------------
+# hypothesis sweeps: shapes / dtypes / geometries
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(min_value=1, max_value=3000),
+    dtype=st.sampled_from([np.float32, np.float64]),
+    variant=st.sampled_from(["kahan", "naive"]),
+    seed=st.integers(min_value=0, max_value=2**31),
+)
+def test_model_dot_any_shape_close_to_exact(n, dtype, variant, seed):
+    """model.dot must accept any n >= 1 (padding) and stay near the exact dot
+    for Gaussian data at any geometry."""
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal(n).astype(dtype)
+    y = rng.standard_normal(n).astype(dtype)
+    d = float(model.dot(jnp.array(x), jnp.array(y), variant=variant,
+                        block=1024, lanes=256))
+    exact = ref.exact_dot(x, y)
+    scale = max(ref.exact_dot(np.abs(x), np.abs(y)), 1e-30)
+    eps = 1.2e-7 if dtype == np.float32 else 2.3e-16
+    # generous bound: a handful of eps per summand in the worst lane
+    assert abs(d - exact) <= 64 * eps * scale + 64 * eps
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    rows=st.integers(min_value=1, max_value=8),
+    lanes_pow=st.integers(min_value=4, max_value=10),
+    grid=st.integers(min_value=1, max_value=4),
+    seed=st.integers(min_value=0, max_value=2**31),
+)
+def test_lane_dot_bitwise_random_geometry(rows, lanes_pow, grid, seed):
+    lanes = 1 << lanes_pow
+    block = rows * lanes
+    n = grid * block
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal(n).astype(np.float32)
+    y = rng.standard_normal(n).astype(np.float32)
+    s_k, c_k = K.lane_dot(jnp.array(x), jnp.array(y), variant="kahan",
+                          block=block, lanes=lanes)
+    s_r, c_r = ref.kahan_dot_lanes_ref(jnp.array(x), jnp.array(y),
+                                       block=block, lanes=lanes)
+    np.testing.assert_array_equal(np.asarray(s_k), np.asarray(s_r))
+    np.testing.assert_array_equal(np.asarray(c_k), np.asarray(c_r))

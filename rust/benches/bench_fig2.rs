@@ -1,0 +1,51 @@
+//! Bench F2: regenerate Fig. 2 (single-core cy/CL vs working set, IVB, SP)
+//! on the virtual testbed, print the series the paper plots, and check the
+//! shape constraints the paper reports.
+
+use kahan_ecm::coordinator::experiments;
+use kahan_ecm::isa::Precision;
+use kahan_ecm::machine::presets::ivb;
+use std::time::Instant;
+
+fn main() {
+    println!("=== bench_fig2: single-core working-set sweep (IVB, SP) ===\n");
+    let m = ivb();
+    let sizes: Vec<u64> = vec![
+        8 << 10,
+        16 << 10,
+        24 << 10,
+        32 << 10,
+        48 << 10,
+        64 << 10,
+        128 << 10,
+        256 << 10,
+        512 << 10,
+        1 << 20,
+        4 << 20,
+        12 << 20,
+        16 << 20,
+        64 << 20,
+        256 << 20,
+        512 << 20,
+    ];
+    let t0 = Instant::now();
+    let series = experiments::fig2(&m, Precision::Sp, &sizes);
+    let elapsed = t0.elapsed();
+    println!("{}", experiments::fig2_table(&m, &series).render());
+
+    // paper shape checks
+    let get = |name: &str| series.iter().find(|s| s.kernel.contains(name)).unwrap();
+    let avx = get("kahan-AVX");
+    let naive = get("naive-AVX");
+    let scalar = get("kahan-scalar");
+    let last = sizes.len() - 1;
+    let ratio_mem = avx.points[last].cy_per_cl / naive.points[last].cy_per_cl;
+    assert!((0.95..=1.05).contains(&ratio_mem), "in-memory Kahan==naive: {ratio_mem}");
+    let flat = scalar.points[last].cy_per_cl / scalar.points[0].cy_per_cl;
+    assert!((0.9..=1.1).contains(&flat), "scalar flat across hierarchy: {flat}");
+    println!(
+        "bench_fig2: {} sizes x 4 kernels in {:.2} s — shape checks OK",
+        sizes.len(),
+        elapsed.as_secs_f64()
+    );
+}

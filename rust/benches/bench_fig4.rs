@@ -1,0 +1,47 @@
+//! Bench F4a/F4b + FMA: the cross-architecture comparison figures.
+
+use kahan_ecm::coordinator::experiments;
+use kahan_ecm::isa::Precision;
+use std::time::Instant;
+
+fn main() {
+    let t0 = Instant::now();
+    println!("=== bench_fig4a: per-level cy/CL across sockets (AVX Kahan SP) ===\n");
+    let rows = experiments::fig4a(Precision::Sp);
+    println!("{}", experiments::fig4a_table(&rows).render());
+
+    // paper claims: identical L1 on all archs; HSW/BDW faster in L2;
+    // HSW worst in memory (big latency penalty), BDW clean.
+    let get = |arch: &str| rows.iter().find(|r| r.arch == arch).unwrap();
+    for r in &rows {
+        assert!((r.sim_cy_per_cl[0] - 4.0).abs() < 0.5, "L1 ADD-bound on {}", r.arch);
+    }
+    assert!(get("HSW").sim_cy_per_cl[1] < get("IVB").sim_cy_per_cl[1], "HSW L2 faster");
+    assert!(get("BDW").sim_cy_per_cl[1] < get("IVB").sim_cy_per_cl[1], "BDW L2 faster");
+    assert!(
+        get("HSW").sim_cy_per_cl[3] > get("IVB").sim_cy_per_cl[3],
+        "HSW single-core memory is a step back"
+    );
+    assert_eq!(get("IVB").n_s, 4);
+
+    println!("=== bench_fig4b: in-memory scaling across sockets ===\n");
+    let series = experiments::fig4b(Precision::Sp);
+    println!("{}", experiments::fig4b_table(&series).render());
+    let peak = |arch: &str| {
+        series
+            .iter()
+            .find(|(n, _)| n == arch)
+            .unwrap()
+            .1
+            .last()
+            .unwrap()
+            .gups
+    };
+    assert!(peak("HSW") > peak("SNB") && peak("HSW") > peak("BDW"), "BW ranking");
+
+    println!("=== FMA study (§4) ===\n");
+    let fma = experiments::fma_study(Precision::Sp);
+    println!("{}", fma.render());
+
+    println!("bench_fig4: all cross-arch figures in {:.2} s — OK", t0.elapsed().as_secs_f64());
+}

@@ -1,0 +1,60 @@
+//! Bench HOST: the real-silicon microbenchmark — every available SIMD
+//! kernel at representative L1/L2/LLC/memory working sets, cycles per CL
+//! and GUP/s, plus the "Kahan for free" ratio on this machine.
+
+use kahan_ecm::bench::{kernels, run_sweep};
+use kahan_ecm::isa::{Precision, Variant};
+use kahan_ecm::util::Table;
+use std::time::Instant;
+
+fn main() {
+    println!("=== bench_host: SIMD kernels on this machine (TSC cycles/CL) ===\n");
+    let m = kahan_ecm::machine::detect::detect_host();
+    println!(
+        "host: {} | L1 {} | L2 {} | LLC {}\n",
+        m.name,
+        kahan_ecm::util::fmt::bytes(m.caches[0].size_bytes),
+        kahan_ecm::util::fmt::bytes(m.caches[1].size_bytes),
+        kahan_ecm::util::fmt::bytes(m.caches[2].size_bytes),
+    );
+    // representative sizes: half-L1, half-L2, half-LLC, 2x LLC
+    let sizes = vec![
+        m.caches[0].size_bytes / 2,
+        m.caches[1].size_bytes / 2,
+        m.caches[2].size_bytes / 2,
+        2 * m.caches[2].size_bytes,
+    ];
+    let labels = ["L1/2", "L2/2", "LLC/2", "2xLLC"];
+
+    let t0 = Instant::now();
+    let mut t = Table::new("cycles per cache line (lower is better)")
+        .headers(["kernel", labels[0], labels[1], labels[2], labels[3]]);
+    let mut results = Vec::new();
+    for k in kernels::registry().into_iter().filter(|k| k.available) {
+        let pts = run_sweep(&k, &sizes, 7, 11);
+        let mut row = vec![k.name.to_string()];
+        row.extend(pts.iter().map(|p| format!("{:.2}", p.cy_per_cl)));
+        t.row(row);
+        results.push((k, pts));
+    }
+    println!("{}", t.render());
+
+    // headline on real silicon (SP, AVX2): free beyond L1
+    let find = |v: Variant, name: &str| {
+        results
+            .iter()
+            .find(|(k, _)| k.variant == v && k.prec == Precision::Sp && k.name.contains(name))
+            .map(|(_, p)| p.clone())
+    };
+    if let (Some(n), Some(ka)) = (find(Variant::Naive, "AVX2"), find(Variant::Kahan, "AVX2")) {
+        let mem_ratio = ka[3].cy_per_cl / n[3].cy_per_cl;
+        let l1_ratio = ka[0].cy_per_cl / n[0].cy_per_cl;
+        println!("kahan-AVX2/naive-AVX2: L1 {l1_ratio:.2}x, memory {mem_ratio:.2}x");
+        assert!(
+            mem_ratio < 1.35,
+            "memory-bound Kahan should be (nearly) free, got {mem_ratio:.2}x"
+        );
+        assert!(l1_ratio > 1.2, "L1-bound Kahan must cost extra, got {l1_ratio:.2}x");
+    }
+    println!("bench_host: swept {} kernels in {:.1} s — OK", results.len(), t0.elapsed().as_secs_f64());
+}

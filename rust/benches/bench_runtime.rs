@@ -1,0 +1,81 @@
+//! Bench RT: PJRT execution latency of the AOT artifacts — the request-path
+//! cost the serving example pays per call (compile once, execute many).
+
+use kahan_ecm::runtime::Runtime;
+use kahan_ecm::util::{stats, Rng};
+use std::time::Instant;
+
+fn time_us<F: FnMut()>(reps: usize, mut f: F) -> (f64, f64) {
+    let mut samples = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_secs_f64() * 1e6);
+    }
+    (stats::median(&samples), stats::min(&samples))
+}
+
+fn main() -> anyhow::Result<()> {
+    println!("=== bench_runtime: PJRT execute latency (per call) ===\n");
+    if !kahan_ecm::runtime::artifacts_dir().join("manifest.tsv").exists() {
+        println!("SKIP: no artifacts (run `make artifacts`)");
+        return Ok(());
+    }
+    let mut rt = Runtime::new()?;
+    let mut rng = Rng::new(3);
+
+    for name in [
+        "dot_naive_f32_n4096",
+        "dot_kahan_f32_n4096",
+        "dot_kahan_f32_n65536",
+        "dot_kahan_f64_n65536",
+        "dot_kahan_f32_n1048576",
+    ] {
+        let meta = rt.manifest().get(name).expect("artifact").clone();
+        let tc = Instant::now();
+        rt.load(name)?;
+        let compile_ms = tc.elapsed().as_secs_f64() * 1e3;
+        let (med, min) = if meta.dtype == "f32" {
+            let a = rng.normal_f32_vec(meta.n);
+            let b = rng.normal_f32_vec(meta.n);
+            time_us(15, || {
+                rt.dot_f32(name, &a, &b).unwrap();
+            })
+        } else {
+            let a = rng.normal_f64_vec(meta.n);
+            let b = rng.normal_f64_vec(meta.n);
+            time_us(15, || {
+                rt.dot_f64(name, &a, &b).unwrap();
+            })
+        };
+        println!(
+            "{name:32} compile {compile_ms:8.1} ms | execute median {med:9.1} us (min {min:9.1}) | {:.1} Melem/s",
+            meta.n as f64 / (min * 1e-6) / 1e6
+        );
+    }
+
+    // batched throughput vs sequential singles
+    let bname = "batched_dot_kahan_f32_b8_n16384";
+    let meta = rt.manifest().get(bname).expect("batched artifact").clone();
+    rt.load(bname)?;
+    let pairs: Vec<(Vec<f32>, Vec<f32>)> = (0..meta.batch)
+        .map(|_| (rng.normal_f32_vec(meta.n), rng.normal_f32_vec(meta.n)))
+        .collect();
+    let (med_b, _) = time_us(15, || {
+        rt.batched_dot_f32(bname, &pairs).unwrap();
+    });
+    let single = "dot_kahan_f32_n65536";
+    let a = rng.normal_f32_vec(meta.n);
+    let b = rng.normal_f32_vec(meta.n);
+    rt.load(single)?;
+    let (med_s, _) = time_us(15, || {
+        rt.dot_f32(single, &a, &b).unwrap();
+    });
+    println!(
+        "\nbatched (8x16384) {med_b:.1} us vs 8 singles {:.1} us -> batching gain {:.2}x",
+        8.0 * med_s,
+        8.0 * med_s / med_b
+    );
+    println!("bench_runtime: OK");
+    Ok(())
+}

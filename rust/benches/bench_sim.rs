@@ -1,0 +1,55 @@
+//! Bench SIM: throughput of the virtual testbed itself — the §Perf targets
+//! for the L3 hot paths (scoreboard issue rate, cache-sim access rate,
+//! end-to-end sweep latency). This is what the performance pass optimizes.
+
+use kahan_ecm::isa::{generate, Precision, Simd, Variant};
+use kahan_ecm::machine::presets::ivb;
+use kahan_ecm::sim;
+use std::time::Instant;
+
+fn main() {
+    println!("=== bench_sim: simulator hot-path throughput ===\n");
+    let m = ivb();
+    let k = generate(Variant::Kahan, Simd::Avx, Precision::Sp, 0);
+
+    // scoreboard: instructions per second
+    let mut sb = sim::core::Scoreboard::new(&m.core);
+    let reps = 200_000usize;
+    let t0 = Instant::now();
+    for _ in 0..reps {
+        for inst in &k.insts {
+            sb.issue(inst, 0.0);
+        }
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    let insts = (reps * k.insts.len()) as f64;
+    println!("scoreboard: {:.1} M instructions/s ({insts:.0} insts in {dt:.2} s)", insts / dt / 1e6);
+
+    // cache sim: accesses per second (L2-resident stream)
+    let mut cs = sim::cache::CacheSim::new(&m);
+    let lines = 4096u64; // 256 KiB
+    let t0 = Instant::now();
+    let passes = 2000;
+    for _ in 0..passes {
+        for i in 0..lines {
+            cs.access(i * 64);
+        }
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    let acc = (passes * lines) as f64;
+    println!("cache sim : {:.1} M accesses/s", acc / dt / 1e6);
+
+    // end-to-end: one full Fig. 2 sweep
+    let sizes: Vec<u64> = vec![16 << 10, 128 << 10, 1 << 20, 8 << 20, 64 << 20, 512 << 20];
+    let t0 = Instant::now();
+    let pts = sim::simulate_sweep(&m, &k, &sizes, true);
+    let dt = t0.elapsed().as_secs_f64();
+    println!("sweep     : {} sizes in {:.3} s ({:.1} ms/size)", pts.len(), dt, dt * 1e3 / pts.len() as f64);
+
+    // multicore scaling curve
+    let t0 = Instant::now();
+    let _ = sim::simulate_scaling(&m, &k, 64 * 1024 * 1024, 10);
+    println!("scaling   : 10-core curve in {:.1} ms", t0.elapsed().as_secs_f64() * 1e3);
+
+    println!("bench_sim: OK");
+}

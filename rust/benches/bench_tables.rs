@@ -1,0 +1,32 @@
+//! Bench T1/T2/EQ2: regenerate Table 1, Table 2 and the §3 model zoo, and
+//! verify the paper strings appear. (criterion is unavailable offline; each
+//! bench is a standalone harness that prints the paper's rows and wall
+//! times.)
+
+use kahan_ecm::coordinator::experiments;
+use kahan_ecm::isa::Precision;
+use kahan_ecm::machine::all_presets;
+use std::time::Instant;
+
+fn main() {
+    println!("=== bench_tables: Table 1 / Table 2 / §3 models ===\n");
+
+    let t0 = Instant::now();
+    let t1 = experiments::table1();
+    println!("{}", t1.render());
+
+    let t2 = experiments::table2();
+    println!("{}", t2.render());
+
+    for m in all_presets() {
+        println!("{}", experiments::models_table(&m, Precision::Sp).render());
+    }
+    println!("{}", experiments::models_table(&kahan_ecm::machine::presets::ivb(), Precision::Dp).render());
+
+    let elapsed = t0.elapsed();
+    // sanity: the flagship strings must be present
+    let rendered = t2.render();
+    assert!(rendered.contains("{4.40 | 4.40 | 2.93 | 1.68}"), "IVB row");
+    assert!(rendered.contains("{3.60 | 3.60 | 3.60 | 1.80}"), "BDW row");
+    println!("bench_tables: regenerated all tables in {:.1} ms — OK", elapsed.as_secs_f64() * 1e3);
+}

@@ -1,0 +1,173 @@
+//! The summation/dot algorithm zoo evaluated in the accuracy study: the
+//! paper's naive and Kahan variants plus the classic alternatives its
+//! related-work section cites (pairwise [3], Neumaier [2], Dot2 [5]).
+
+use super::exact::{two_prod, two_sum};
+
+/// Strictly sequential naive dot (Fig. 1a) in f32.
+pub fn naive_f32(a: &[f32], b: &[f32]) -> f32 {
+    crate::bench::kernels::scalar::naive_f32(a, b)
+}
+
+/// Strictly sequential Kahan dot (Fig. 1b) in f32.
+pub fn kahan_f32(a: &[f32], b: &[f32]) -> f32 {
+    crate::bench::kernels::scalar::kahan_seq_f32(a, b)
+}
+
+/// Lane-parallel Kahan (the paper's SIMD scheme; AVX2 on this host).
+pub fn kahan_simd_f32(a: &[f32], b: &[f32]) -> f32 {
+    crate::bench::kernels::avx2::kahan_f32(a, b)
+}
+
+/// Neumaier (improved Kahan): order-aware compensation; never worse than
+/// Kahan, same cost class.
+pub fn neumaier_f32(a: &[f32], b: &[f32]) -> f32 {
+    let n = a.len().min(b.len());
+    let mut s = 0.0f32;
+    let mut c = 0.0f32;
+    for i in 0..n {
+        let p = a[i] * b[i];
+        let t = s + p;
+        if s.abs() >= p.abs() {
+            c += (s - t) + p;
+        } else {
+            c += (p - t) + s;
+        }
+        s = t;
+    }
+    s + c
+}
+
+/// Pairwise (recursive halving) dot: O(eps * log n) error growth.
+pub fn pairwise_f32(a: &[f32], b: &[f32]) -> f32 {
+    fn rec(a: &[f32], b: &[f32]) -> f32 {
+        let n = a.len();
+        if n <= 8 {
+            let mut s = 0.0f32;
+            for i in 0..n {
+                s += a[i] * b[i];
+            }
+            return s;
+        }
+        let mid = n / 2;
+        rec(&a[..mid], &b[..mid]) + rec(&a[mid..], &b[mid..])
+    }
+    let n = a.len().min(b.len());
+    rec(&a[..n], &b[..n])
+}
+
+/// Ogita–Rump–Oishi Dot2: TwoProduct + compensated accumulation of *both*
+/// product and summation errors — as accurate as computing in doubled
+/// precision, i.e. the only algorithm here whose error does NOT grow with
+/// the condition number (until eps^2 * cond ~ 1).
+pub fn dot2_f32(a: &[f32], b: &[f32]) -> f32 {
+    // run the EFTs in f64? No — the point is a pure-f32 algorithm; Rust has
+    // f32::mul_add, and two_sum is type-generic in structure.
+    let n = a.len().min(b.len());
+    let mut s = 0.0f32;
+    let mut comp = 0.0f32;
+    for i in 0..n {
+        let (p, ep) = {
+            let p = a[i] * b[i];
+            let e = f32::mul_add(a[i], b[i], -p);
+            (p, e)
+        };
+        let (t, es) = {
+            let t = s + p;
+            let bb = t - s;
+            (t, (s - (t - bb)) + (p - bb))
+        };
+        s = t;
+        comp += ep + es;
+    }
+    s + comp
+}
+
+/// f64 versions used for the DP accuracy columns.
+pub fn naive_f64(a: &[f64], b: &[f64]) -> f64 {
+    crate::bench::kernels::scalar::naive_f64(a, b)
+}
+
+pub fn kahan_f64(a: &[f64], b: &[f64]) -> f64 {
+    crate::bench::kernels::scalar::kahan_seq_f64(a, b)
+}
+
+pub fn dot2_f64(a: &[f64], b: &[f64]) -> f64 {
+    let n = a.len().min(b.len());
+    let mut s = 0.0f64;
+    let mut comp = 0.0f64;
+    for i in 0..n {
+        let (p, ep) = two_prod(a[i], b[i]);
+        let (t, es) = two_sum(s, p);
+        s = t;
+        comp += ep + es;
+    }
+    s + comp
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::accuracy::exact::exact_dot_f32;
+    use crate::util::Rng;
+
+    fn rel_err(x: f64, exact: f64) -> f64 {
+        if exact == 0.0 {
+            x.abs()
+        } else {
+            (x - exact).abs() / exact.abs()
+        }
+    }
+
+    #[test]
+    fn all_algorithms_exact_on_integers() {
+        let a: Vec<f32> = (1..=64).map(|i| i as f32).collect();
+        let b: Vec<f32> = (1..=64).map(|i| (65 - i) as f32).collect();
+        let want = exact_dot_f32(&a, &b) as f32;
+        for f in [naive_f32, kahan_f32, kahan_simd_f32, neumaier_f32, pairwise_f32, dot2_f32] {
+            assert_eq!(f(&a, &b), want);
+        }
+    }
+
+    /// Dot2's signature property: full accuracy even at extreme condition
+    /// numbers where Kahan (no TwoProduct) degrades.
+    #[test]
+    fn dot2_survives_high_condition() {
+        let mut rng = Rng::new(11);
+        let (a, b, exact, cond) = crate::accuracy::gendot::gen_dot_f32(2000, 1e6, &mut rng);
+        assert!(cond > 1e4, "generator failed: cond={cond:.3e}");
+        let e_dot2 = rel_err(dot2_f32(&a, &b) as f64, exact);
+        let e_kahan = rel_err(kahan_f32(&a, &b) as f64, exact);
+        let e_naive = rel_err(naive_f32(&a, &b) as f64, exact);
+        assert!(e_dot2 < 1e-5, "dot2 err {e_dot2:.3e}");
+        assert!(e_dot2 <= e_kahan, "dot2 {e_dot2:.3e} vs kahan {e_kahan:.3e}");
+        assert!(e_kahan <= e_naive * 4.0 + 1e-7);
+    }
+
+    #[test]
+    fn neumaier_never_worse_than_naive() {
+        crate::util::prop::check("neumaier_vs_naive", 30, |rng| {
+            let n = 10 + rng.below(3000) as usize;
+            let a: Vec<f32> =
+                (0..n).map(|_| (rng.standard_normal() * (rng.range(0.0, 12.0)).exp2()) as f32).collect();
+            let b: Vec<f32> = (0..n).map(|_| rng.standard_normal() as f32).collect();
+            let exact = exact_dot_f32(&a, &b);
+            let en = rel_err(naive_f32(&a, &b) as f64, exact);
+            let ek = rel_err(neumaier_f32(&a, &b) as f64, exact);
+            crate::prop_assert!(ek <= en * 1.001 + 1e-9, "neumaier {ek:e} vs naive {en:e}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn pairwise_beats_sequential_on_long_sums() {
+        let mut rng = Rng::new(13);
+        let n = 200_000;
+        let a: Vec<f32> = (0..n).map(|_| rng.standard_normal().abs() as f32).collect();
+        let b = vec![1.0f32; n];
+        let exact = exact_dot_f32(&a, &b);
+        let ep = rel_err(pairwise_f32(&a, &b) as f64, exact);
+        let en = rel_err(naive_f32(&a, &b) as f64, exact);
+        assert!(ep < en, "pairwise {ep:e} vs naive {en:e}");
+    }
+}

@@ -1,0 +1,120 @@
+//! Accuracy sweep: relative error of each algorithm vs. condition number —
+//! the classic Ogita–Rump–Oishi Fig. 6.4-style study, run over the paper's
+//! kernel variants (the "why bother with Kahan" evidence).
+
+use super::algorithms as alg;
+use super::exact::exact_dot_f32;
+use super::gendot::gen_dot_f32;
+use crate::util::Rng;
+
+/// Relative error of one algorithm at one condition point (median over
+/// trials).
+#[derive(Clone, Debug)]
+pub struct AlgoError {
+    pub algo: &'static str,
+    pub target_cond: f64,
+    pub median_cond: f64,
+    pub median_rel_err: f64,
+}
+
+fn rel_err(x: f64, exact: f64) -> f64 {
+    if exact == 0.0 {
+        x.abs()
+    } else {
+        ((x - exact).abs() / exact.abs()).min(2.0) // cap: "no digits left"
+    }
+}
+
+/// The algorithms reported by the accuracy experiment.
+pub fn algorithm_list() -> Vec<(&'static str, fn(&[f32], &[f32]) -> f32)> {
+    vec![
+        ("naive-seq", alg::naive_f32),
+        ("kahan-seq", alg::kahan_f32),
+        ("kahan-simd", alg::kahan_simd_f32),
+        ("neumaier", alg::neumaier_f32),
+        ("pairwise", alg::pairwise_f32),
+        ("dot2", alg::dot2_f32),
+    ]
+}
+
+/// Sweep condition numbers; returns one row per (algorithm, cond target).
+pub fn error_sweep(n: usize, cond_targets: &[f64], trials: usize, seed: u64) -> Vec<AlgoError> {
+    let mut out = Vec::new();
+    for &target in cond_targets {
+        // collect per-trial errors for each algorithm
+        let algos = algorithm_list();
+        let mut errs: Vec<Vec<f64>> = vec![Vec::new(); algos.len()];
+        let mut conds = Vec::new();
+        for t in 0..trials {
+            let mut rng = Rng::new(seed ^ (target.to_bits()).wrapping_add(t as u64));
+            let (x, y, exact, cond) = gen_dot_f32(n, target, &mut rng);
+            conds.push(cond);
+            for (i, (_, f)) in algos.iter().enumerate() {
+                errs[i].push(rel_err(f(&x, &y) as f64, exact));
+            }
+        }
+        for (i, (name, _)) in algos.iter().enumerate() {
+            out.push(AlgoError {
+                algo: name,
+                target_cond: target,
+                median_cond: crate::util::stats::median(&conds),
+                median_rel_err: crate::util::stats::median(&errs[i]),
+            });
+        }
+    }
+    out
+}
+
+/// Verify the exactness claim of the ground truth itself: compare
+/// `exact_dot_f32` against integer arithmetic on integer-valued data.
+pub fn self_check() -> bool {
+    let mut rng = Rng::new(99);
+    for _ in 0..32 {
+        let n = 8 + rng.below(64) as usize;
+        let a: Vec<f32> = (0..n).map(|_| (rng.below(201) as i64 - 100) as f32).collect();
+        let b: Vec<f32> = (0..n).map(|_| (rng.below(201) as i64 - 100) as f32).collect();
+        let want: i64 = a.iter().zip(&b).map(|(x, y)| (*x as i64) * (*y as i64)).sum();
+        if exact_dot_f32(&a, &b) != want as f64 {
+            return false;
+        }
+    }
+    true
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn self_check_passes() {
+        assert!(self_check());
+    }
+
+    /// The shape of the classic accuracy plot: naive degrades ~linearly in
+    /// cond, compensated methods stay flat until eps*cond ~ 1 (Kahan) or
+    /// eps^2*cond ~ 1 (dot2).
+    #[test]
+    fn error_growth_shapes() {
+        let rows = error_sweep(1024, &[1e2, 1e10], 5, 7);
+        let get = |algo: &str, cond: f64| {
+            rows.iter()
+                .find(|r| r.algo == algo && r.target_cond == cond)
+                .unwrap()
+                .median_rel_err
+        };
+        // benign data: everyone fine
+        assert!(get("naive-seq", 1e2) < 1e-4);
+        assert!(get("dot2", 1e2) < 1e-6);
+        // brutal data: naive has no digits, dot2 still near-exact
+        assert!(get("naive-seq", 1e10) > 1e-2);
+        assert!(get("dot2", 1e10) < 1e-4);
+        // kahan never worse than naive
+        assert!(get("kahan-seq", 1e10) <= get("naive-seq", 1e10) * 1.5);
+    }
+
+    #[test]
+    fn sweep_row_count() {
+        let rows = error_sweep(256, &[1e3, 1e6, 1e9], 3, 1);
+        assert_eq!(rows.len(), 3 * algorithm_list().len());
+    }
+}

@@ -1,0 +1,16 @@
+//! Numerical-accuracy substrate: error-free transformations, exact dot
+//! products, compensated algorithm zoo and the Ogita–Rump–Oishi
+//! ill-conditioned input generator.
+//!
+//! This is the motivation side of the paper (§1: "balancing performance vs.
+//! accuracy"): it quantifies what the Kahan kernels buy, with a ground
+//! truth that is provably exact (expansion arithmetic, Shewchuk-style).
+
+pub mod algorithms;
+pub mod analysis;
+pub mod exact;
+pub mod gendot;
+
+pub use analysis::{error_sweep, AlgoError};
+pub use exact::{exact_dot_f32, exact_dot_f64, two_prod, two_sum};
+pub use gendot::gen_dot_f32;

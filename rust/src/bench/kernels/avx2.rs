@@ -1,0 +1,330 @@
+//! AVX2 (256-bit) host kernels: 8 f32 / 4 f64 lanes, four accumulator
+//! slots, plus the §4 FMA variant (compensated adds issued as FMAs with a
+//! unit multiplicand so both FMA pipes participate).
+
+use super::{compensated_fold_f32, compensated_fold_f64};
+
+pub fn naive_f32(a: &[f32], b: &[f32]) -> f32 {
+    if is_x86_feature_detected!("avx2") {
+        unsafe { naive_f32_impl(a, b) }
+    } else {
+        super::scalar::naive_f32(a, b)
+    }
+}
+
+pub fn naive_f64(a: &[f64], b: &[f64]) -> f64 {
+    if is_x86_feature_detected!("avx2") {
+        unsafe { naive_f64_impl(a, b) }
+    } else {
+        super::scalar::naive_f64(a, b)
+    }
+}
+
+pub fn kahan_f32(a: &[f32], b: &[f32]) -> f32 {
+    if is_x86_feature_detected!("avx2") {
+        unsafe { kahan_f32_impl(a, b) }
+    } else {
+        super::sse::kahan_f32(a, b)
+    }
+}
+
+pub fn kahan_f64(a: &[f64], b: &[f64]) -> f64 {
+    if is_x86_feature_detected!("avx2") {
+        unsafe { kahan_f64_impl(a, b) }
+    } else {
+        super::sse::kahan_f64(a, b)
+    }
+}
+
+pub fn kahan_fma_f32(a: &[f32], b: &[f32]) -> f32 {
+    if is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma") {
+        unsafe { kahan_fma_f32_impl(a, b) }
+    } else {
+        kahan_f32(a, b)
+    }
+}
+
+pub fn kahan_fma_f64(a: &[f64], b: &[f64]) -> f64 {
+    if is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma") {
+        unsafe { kahan_fma_f64_impl(a, b) }
+    } else {
+        kahan_f64(a, b)
+    }
+}
+
+#[target_feature(enable = "avx2")]
+unsafe fn naive_f32_impl(a: &[f32], b: &[f32]) -> f32 {
+    use core::arch::x86_64::*;
+    let n = a.len().min(b.len());
+    let mut s0 = _mm256_setzero_ps();
+    let mut s1 = _mm256_setzero_ps();
+    let mut s2 = _mm256_setzero_ps();
+    let mut s3 = _mm256_setzero_ps();
+    let mut i = 0usize;
+    while i + 32 <= n {
+        s0 = _mm256_add_ps(s0, _mm256_mul_ps(_mm256_loadu_ps(a.as_ptr().add(i)), _mm256_loadu_ps(b.as_ptr().add(i))));
+        s1 = _mm256_add_ps(s1, _mm256_mul_ps(_mm256_loadu_ps(a.as_ptr().add(i + 8)), _mm256_loadu_ps(b.as_ptr().add(i + 8))));
+        s2 = _mm256_add_ps(s2, _mm256_mul_ps(_mm256_loadu_ps(a.as_ptr().add(i + 16)), _mm256_loadu_ps(b.as_ptr().add(i + 16))));
+        s3 = _mm256_add_ps(s3, _mm256_mul_ps(_mm256_loadu_ps(a.as_ptr().add(i + 24)), _mm256_loadu_ps(b.as_ptr().add(i + 24))));
+        i += 32;
+    }
+    let mut lanes = [0.0f32; 32];
+    _mm256_storeu_ps(lanes.as_mut_ptr(), s0);
+    _mm256_storeu_ps(lanes.as_mut_ptr().add(8), s1);
+    _mm256_storeu_ps(lanes.as_mut_ptr().add(16), s2);
+    _mm256_storeu_ps(lanes.as_mut_ptr().add(24), s3);
+    let mut s: f32 = lanes.iter().sum();
+    while i < n {
+        s += a[i] * b[i];
+        i += 1;
+    }
+    s
+}
+
+#[target_feature(enable = "avx2")]
+unsafe fn naive_f64_impl(a: &[f64], b: &[f64]) -> f64 {
+    use core::arch::x86_64::*;
+    let n = a.len().min(b.len());
+    let mut s0 = _mm256_setzero_pd();
+    let mut s1 = _mm256_setzero_pd();
+    let mut s2 = _mm256_setzero_pd();
+    let mut s3 = _mm256_setzero_pd();
+    let mut i = 0usize;
+    while i + 16 <= n {
+        s0 = _mm256_add_pd(s0, _mm256_mul_pd(_mm256_loadu_pd(a.as_ptr().add(i)), _mm256_loadu_pd(b.as_ptr().add(i))));
+        s1 = _mm256_add_pd(s1, _mm256_mul_pd(_mm256_loadu_pd(a.as_ptr().add(i + 4)), _mm256_loadu_pd(b.as_ptr().add(i + 4))));
+        s2 = _mm256_add_pd(s2, _mm256_mul_pd(_mm256_loadu_pd(a.as_ptr().add(i + 8)), _mm256_loadu_pd(b.as_ptr().add(i + 8))));
+        s3 = _mm256_add_pd(s3, _mm256_mul_pd(_mm256_loadu_pd(a.as_ptr().add(i + 12)), _mm256_loadu_pd(b.as_ptr().add(i + 12))));
+        i += 16;
+    }
+    let mut lanes = [0.0f64; 16];
+    _mm256_storeu_pd(lanes.as_mut_ptr(), s0);
+    _mm256_storeu_pd(lanes.as_mut_ptr().add(4), s1);
+    _mm256_storeu_pd(lanes.as_mut_ptr().add(8), s2);
+    _mm256_storeu_pd(lanes.as_mut_ptr().add(12), s3);
+    let mut s: f64 = lanes.iter().sum();
+    while i < n {
+        s += a[i] * b[i];
+        i += 1;
+    }
+    s
+}
+
+macro_rules! kahan_avx_body {
+    ($a:ident, $b:ident, $elem:ty, $lanes:expr, $load:ident, $mul:ident,
+     $sub:ident, $add:ident, $zero:ident, $store:ident) => {{
+        use core::arch::x86_64::*;
+        const L: usize = $lanes;
+        let n = $a.len().min($b.len());
+        let mut s0 = $zero();
+        let mut c0 = $zero();
+        let mut s1 = $zero();
+        let mut c1 = $zero();
+        let mut s2 = $zero();
+        let mut c2 = $zero();
+        let mut s3 = $zero();
+        let mut c3 = $zero();
+        let mut i = 0usize;
+        while i + 4 * L <= n {
+            // slot 0..3, each on its own 256-bit stripe
+            let p0 = $mul($load($a.as_ptr().add(i)), $load($b.as_ptr().add(i)));
+            let y0 = $sub(p0, c0);
+            let t0 = $add(s0, y0);
+            c0 = $sub($sub(t0, s0), y0);
+            s0 = t0;
+
+            let p1 = $mul($load($a.as_ptr().add(i + L)), $load($b.as_ptr().add(i + L)));
+            let y1 = $sub(p1, c1);
+            let t1 = $add(s1, y1);
+            c1 = $sub($sub(t1, s1), y1);
+            s1 = t1;
+
+            let p2 = $mul($load($a.as_ptr().add(i + 2 * L)), $load($b.as_ptr().add(i + 2 * L)));
+            let y2 = $sub(p2, c2);
+            let t2 = $add(s2, y2);
+            c2 = $sub($sub(t2, s2), y2);
+            s2 = t2;
+
+            let p3 = $mul($load($a.as_ptr().add(i + 3 * L)), $load($b.as_ptr().add(i + 3 * L)));
+            let y3 = $sub(p3, c3);
+            let t3 = $add(s3, y3);
+            c3 = $sub($sub(t3, s3), y3);
+            s3 = t3;
+            i += 4 * L;
+        }
+        let mut sums = [0.0 as $elem; 4 * L];
+        let mut comps = [0.0 as $elem; 4 * L];
+        $store(sums.as_mut_ptr(), s0);
+        $store(sums.as_mut_ptr().add(L), s1);
+        $store(sums.as_mut_ptr().add(2 * L), s2);
+        $store(sums.as_mut_ptr().add(3 * L), s3);
+        $store(comps.as_mut_ptr(), c0);
+        $store(comps.as_mut_ptr().add(L), c1);
+        $store(comps.as_mut_ptr().add(2 * L), c2);
+        $store(comps.as_mut_ptr().add(3 * L), c3);
+        // compensated scalar tail
+        let mut s = 0.0 as $elem;
+        let mut c = 0.0 as $elem;
+        while i < n {
+            let prod = $a[i] * $b[i];
+            let y = prod - c;
+            let t = s + y;
+            c = (t - s) - y;
+            s = t;
+            i += 1;
+        }
+        (sums, comps, s, c)
+    }};
+}
+
+#[target_feature(enable = "avx2")]
+unsafe fn kahan_f32_impl(a: &[f32], b: &[f32]) -> f32 {
+    let (sums, comps, s, c) = kahan_avx_body!(
+        a, b, f32, 8, _mm256_loadu_ps, _mm256_mul_ps, _mm256_sub_ps, _mm256_add_ps,
+        _mm256_setzero_ps, _mm256_storeu_ps
+    );
+    let head = compensated_fold_f32(&sums, &comps);
+    compensated_fold_f32(&[head, s], &[0.0, c])
+}
+
+#[target_feature(enable = "avx2")]
+unsafe fn kahan_f64_impl(a: &[f64], b: &[f64]) -> f64 {
+    let (sums, comps, s, c) = kahan_avx_body!(
+        a, b, f64, 4, _mm256_loadu_pd, _mm256_mul_pd, _mm256_sub_pd, _mm256_add_pd,
+        _mm256_setzero_pd, _mm256_storeu_pd
+    );
+    let head = compensated_fold_f64(&sums, &comps);
+    compensated_fold_f64(&[head, s], &[0.0, c])
+}
+
+/// FMA flavor: `t = s*1 + y` and the product via `fmadd(x, y, -c)`... the
+/// subtraction of the compensation is fused into the product FMA, which both
+/// saves one op and (bonus over the paper) makes the product *error* smaller
+/// because `x*y - c` rounds once.
+#[target_feature(enable = "avx2", enable = "fma")]
+unsafe fn kahan_fma_f32_impl(a: &[f32], b: &[f32]) -> f32 {
+    use core::arch::x86_64::*;
+    const L: usize = 8;
+    let n = a.len().min(b.len());
+    let ones = _mm256_set1_ps(1.0);
+    let mut s = [_mm256_setzero_ps(); 6];
+    let mut c = [_mm256_setzero_ps(); 6];
+    let mut i = 0usize;
+    while i + 6 * L <= n {
+        // 6 slots: the register budget the paper's §4 discussion hits
+        macro_rules! slot {
+            ($k:expr) => {{
+                let x = _mm256_loadu_ps(a.as_ptr().add(i + $k * L));
+                let yv = _mm256_loadu_ps(b.as_ptr().add(i + $k * L));
+                // y = x*b - c (fused)
+                let y = _mm256_fmsub_ps(x, yv, c[$k]);
+                // t = s*1 + y (keeps the ADD on the FMA pipes)
+                let t = _mm256_fmadd_ps(s[$k], ones, y);
+                c[$k] = _mm256_sub_ps(_mm256_sub_ps(t, s[$k]), y);
+                s[$k] = t;
+            }};
+        }
+        slot!(0);
+        slot!(1);
+        slot!(2);
+        slot!(3);
+        slot!(4);
+        slot!(5);
+        i += 6 * L;
+    }
+    let mut sums = [0.0f32; 6 * L];
+    let mut comps = [0.0f32; 6 * L];
+    for k in 0..6 {
+        _mm256_storeu_ps(sums.as_mut_ptr().add(k * L), s[k]);
+        _mm256_storeu_ps(comps.as_mut_ptr().add(k * L), c[k]);
+    }
+    let mut st = 0.0f32;
+    let mut ct = 0.0f32;
+    while i < n {
+        let prod = a[i] * b[i];
+        let y = prod - ct;
+        let t = st + y;
+        ct = (t - st) - y;
+        st = t;
+        i += 1;
+    }
+    let head = compensated_fold_f32(&sums, &comps);
+    compensated_fold_f32(&[head, st], &[0.0, ct])
+}
+
+#[target_feature(enable = "avx2", enable = "fma")]
+unsafe fn kahan_fma_f64_impl(a: &[f64], b: &[f64]) -> f64 {
+    use core::arch::x86_64::*;
+    const L: usize = 4;
+    let n = a.len().min(b.len());
+    let ones = _mm256_set1_pd(1.0);
+    let mut s = [_mm256_setzero_pd(); 6];
+    let mut c = [_mm256_setzero_pd(); 6];
+    let mut i = 0usize;
+    while i + 6 * L <= n {
+        macro_rules! slot {
+            ($k:expr) => {{
+                let x = _mm256_loadu_pd(a.as_ptr().add(i + $k * L));
+                let yv = _mm256_loadu_pd(b.as_ptr().add(i + $k * L));
+                let y = _mm256_fmsub_pd(x, yv, c[$k]);
+                let t = _mm256_fmadd_pd(s[$k], ones, y);
+                c[$k] = _mm256_sub_pd(_mm256_sub_pd(t, s[$k]), y);
+                s[$k] = t;
+            }};
+        }
+        slot!(0);
+        slot!(1);
+        slot!(2);
+        slot!(3);
+        slot!(4);
+        slot!(5);
+        i += 6 * L;
+    }
+    let mut sums = [0.0f64; 6 * L];
+    let mut comps = [0.0f64; 6 * L];
+    for k in 0..6 {
+        _mm256_storeu_pd(sums.as_mut_ptr().add(k * L), s[k]);
+        _mm256_storeu_pd(comps.as_mut_ptr().add(k * L), c[k]);
+    }
+    let mut st = 0.0f64;
+    let mut ct = 0.0f64;
+    while i < n {
+        let prod = a[i] * b[i];
+        let y = prod - ct;
+        let t = st + y;
+        ct = (t - st) - y;
+        st = t;
+        i += 1;
+    }
+    let head = compensated_fold_f64(&sums, &comps);
+    compensated_fold_f64(&[head, st], &[0.0, ct])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_small_cases() {
+        let a: Vec<f32> = (1..=100).map(|i| i as f32).collect();
+        let b = vec![1.0f32; 100];
+        assert_eq!(naive_f32(&a, &b), 5050.0);
+        assert_eq!(kahan_f32(&a, &b), 5050.0);
+        assert_eq!(kahan_fma_f32(&a, &b), 5050.0);
+        let a: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        let b = vec![1.0f64; 100];
+        assert_eq!(naive_f64(&a, &b), 5050.0);
+        assert_eq!(kahan_f64(&a, &b), 5050.0);
+        assert_eq!(kahan_fma_f64(&a, &b), 5050.0);
+    }
+
+    #[test]
+    fn odd_tails() {
+        for n in [1usize, 7, 31, 33, 47, 63] {
+            let a = vec![2.0f32; n];
+            let b = vec![3.0f32; n];
+            assert_eq!(kahan_f32(&a, &b), (6 * n) as f32, "n={n}");
+            assert_eq!(kahan_fma_f32(&a, &b), (6 * n) as f32, "n={n}");
+        }
+    }
+}

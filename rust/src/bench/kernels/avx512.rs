@@ -1,0 +1,120 @@
+//! AVX-512 (512-bit) host kernels: 16 f32 lanes. Post-paper hardware; this
+//! is the extension study (does "Kahan for free" still hold when the vector
+//! width doubles again? — yes, the ADD-throughput argument is width-blind).
+
+use super::compensated_fold_f32;
+
+pub fn naive_f32(a: &[f32], b: &[f32]) -> f32 {
+    if is_x86_feature_detected!("avx512f") {
+        unsafe { naive_f32_impl(a, b) }
+    } else {
+        super::avx2::naive_f32(a, b)
+    }
+}
+
+pub fn kahan_f32(a: &[f32], b: &[f32]) -> f32 {
+    if is_x86_feature_detected!("avx512f") {
+        unsafe { kahan_f32_impl(a, b) }
+    } else {
+        super::avx2::kahan_f32(a, b)
+    }
+}
+
+#[target_feature(enable = "avx512f")]
+unsafe fn naive_f32_impl(a: &[f32], b: &[f32]) -> f32 {
+    use core::arch::x86_64::*;
+    let n = a.len().min(b.len());
+    let mut s0 = _mm512_setzero_ps();
+    let mut s1 = _mm512_setzero_ps();
+    let mut i = 0usize;
+    while i + 32 <= n {
+        s0 = _mm512_add_ps(
+            s0,
+            _mm512_mul_ps(_mm512_loadu_ps(a.as_ptr().add(i)), _mm512_loadu_ps(b.as_ptr().add(i))),
+        );
+        s1 = _mm512_add_ps(
+            s1,
+            _mm512_mul_ps(
+                _mm512_loadu_ps(a.as_ptr().add(i + 16)),
+                _mm512_loadu_ps(b.as_ptr().add(i + 16)),
+            ),
+        );
+        i += 32;
+    }
+    let mut s = _mm512_reduce_add_ps(_mm512_add_ps(s0, s1));
+    while i < n {
+        s += a[i] * b[i];
+        i += 1;
+    }
+    s
+}
+
+#[target_feature(enable = "avx512f")]
+unsafe fn kahan_f32_impl(a: &[f32], b: &[f32]) -> f32 {
+    use core::arch::x86_64::*;
+    const L: usize = 16;
+    let n = a.len().min(b.len());
+    let mut s0 = _mm512_setzero_ps();
+    let mut c0 = _mm512_setzero_ps();
+    let mut s1 = _mm512_setzero_ps();
+    let mut c1 = _mm512_setzero_ps();
+    let mut i = 0usize;
+    while i + 2 * L <= n {
+        let p0 = _mm512_mul_ps(_mm512_loadu_ps(a.as_ptr().add(i)), _mm512_loadu_ps(b.as_ptr().add(i)));
+        let y0 = _mm512_sub_ps(p0, c0);
+        let t0 = _mm512_add_ps(s0, y0);
+        c0 = _mm512_sub_ps(_mm512_sub_ps(t0, s0), y0);
+        s0 = t0;
+
+        let p1 = _mm512_mul_ps(
+            _mm512_loadu_ps(a.as_ptr().add(i + L)),
+            _mm512_loadu_ps(b.as_ptr().add(i + L)),
+        );
+        let y1 = _mm512_sub_ps(p1, c1);
+        let t1 = _mm512_add_ps(s1, y1);
+        c1 = _mm512_sub_ps(_mm512_sub_ps(t1, s1), y1);
+        s1 = t1;
+        i += 2 * L;
+    }
+    let mut sums = [0.0f32; 2 * L];
+    let mut comps = [0.0f32; 2 * L];
+    _mm512_storeu_ps(sums.as_mut_ptr(), s0);
+    _mm512_storeu_ps(sums.as_mut_ptr().add(L), s1);
+    _mm512_storeu_ps(comps.as_mut_ptr(), c0);
+    _mm512_storeu_ps(comps.as_mut_ptr().add(L), c1);
+    let mut s = 0.0f32;
+    let mut c = 0.0f32;
+    while i < n {
+        let prod = a[i] * b[i];
+        let y = prod - c;
+        let t = s + y;
+        c = (t - s) - y;
+        s = t;
+        i += 1;
+    }
+    let head = compensated_fold_f32(&sums, &comps);
+    compensated_fold_f32(&[head, s], &[0.0, c])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_small_cases_any_isa() {
+        // runs the avx512 path on capable hosts, the avx2 fallback elsewhere
+        let a: Vec<f32> = (1..=200).map(|i| i as f32).collect();
+        let b = vec![1.0f32; 200];
+        assert_eq!(naive_f32(&a, &b), 20100.0);
+        assert_eq!(kahan_f32(&a, &b), 20100.0);
+    }
+
+    #[test]
+    fn tails() {
+        for n in [5usize, 17, 33, 65] {
+            let a = vec![1.5f32; n];
+            let b = vec![2.0f32; n];
+            assert_eq!(kahan_f32(&a, &b), 3.0 * n as f32, "n={n}");
+        }
+    }
+}

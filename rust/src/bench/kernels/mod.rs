@@ -1,0 +1,256 @@
+//! Real dot-product kernels for the host CPU: the paper's assembly zoo
+//! re-created with `std::arch` intrinsics.
+//!
+//! Every SIMD variant keeps *per-lane* partial sums and (for Kahan)
+//! per-lane compensation terms with several independent accumulator slots
+//! (modulo unrolling), exactly like the paper's hand-written assembly; the
+//! final cross-lane reduction is itself compensated.
+//!
+//! Rust floating-point semantics are strict IEEE — there is no fast-math
+//! mode that could rewrite `(t - s) - y` to zero, which is the trap the
+//! paper warns about for C compilers at high optimization levels.
+
+pub mod avx2;
+pub mod avx512;
+pub mod scalar;
+pub mod sse;
+
+use crate::isa::{Precision, Simd, Variant};
+
+/// A host kernel entry point (one per precision).
+#[derive(Clone, Copy)]
+pub enum KernelFn {
+    F32(fn(&[f32], &[f32]) -> f32),
+    F64(fn(&[f64], &[f64]) -> f64),
+}
+
+/// Registry entry: one benchmarkable host kernel.
+#[derive(Clone, Copy)]
+pub struct HostKernel {
+    pub name: &'static str,
+    pub variant: Variant,
+    pub simd: Simd,
+    pub prec: Precision,
+    /// whether the host CPU supports the required ISA extension
+    pub available: bool,
+    pub f: KernelFn,
+}
+
+impl HostKernel {
+    pub fn call_f32(&self, a: &[f32], b: &[f32]) -> f32 {
+        match self.f {
+            KernelFn::F32(f) => f(a, b),
+            KernelFn::F64(_) => panic!("{} is a f64 kernel", self.name),
+        }
+    }
+
+    pub fn call_f64(&self, a: &[f64], b: &[f64]) -> f64 {
+        match self.f {
+            KernelFn::F64(f) => f(a, b),
+            KernelFn::F32(_) => panic!("{} is a f32 kernel", self.name),
+        }
+    }
+}
+
+/// Compensated (Neumaier) fold used for all horizontal reductions: sums the
+/// lane partial sums and then folds in the pending per-lane compensations
+/// (which the kernels store with "to be subtracted" sign, matching Fig. 1b).
+pub fn compensated_fold_f32(sums: &[f32], comps: &[f32]) -> f32 {
+    let mut s = 0.0f32;
+    let mut c = 0.0f32;
+    let mut add = |v: f32| {
+        let t = s + v;
+        if s.abs() >= v.abs() {
+            c += (s - t) + v;
+        } else {
+            c += (v - t) + s;
+        }
+        s = t;
+    };
+    for &v in sums {
+        add(v);
+    }
+    for &v in comps {
+        add(-v);
+    }
+    s + c
+}
+
+/// f64 twin of [`compensated_fold_f32`].
+pub fn compensated_fold_f64(sums: &[f64], comps: &[f64]) -> f64 {
+    let mut s = 0.0f64;
+    let mut c = 0.0f64;
+    let mut add = |v: f64| {
+        let t = s + v;
+        if s.abs() >= v.abs() {
+            c += (s - t) + v;
+        } else {
+            c += (v - t) + s;
+        }
+        s = t;
+    };
+    for &v in sums {
+        add(v);
+    }
+    for &v in comps {
+        add(-v);
+    }
+    s + c
+}
+
+/// All host kernels, with availability determined at runtime.
+pub fn registry() -> Vec<HostKernel> {
+    let avx2 = is_x86_feature_detected!("avx2");
+    let fma = avx2 && is_x86_feature_detected!("fma");
+    let avx512 = is_x86_feature_detected!("avx512f");
+    let sse = is_x86_feature_detected!("sse4.2");
+
+    vec![
+        // --- f32 ---
+        HostKernel { name: "naive-scalar-SP", variant: Variant::Naive, simd: Simd::Scalar, prec: Precision::Sp, available: true, f: KernelFn::F32(scalar::naive_f32) },
+        HostKernel { name: "naive-AVX2-SP", variant: Variant::Naive, simd: Simd::Avx, prec: Precision::Sp, available: avx2, f: KernelFn::F32(avx2::naive_f32) },
+        HostKernel { name: "kahan-compiler-SP", variant: Variant::Kahan, simd: Simd::Scalar, prec: Precision::Sp, available: true, f: KernelFn::F32(scalar::kahan_seq_f32) },
+        HostKernel { name: "kahan-scalar-SP", variant: Variant::Kahan, simd: Simd::Scalar, prec: Precision::Sp, available: true, f: KernelFn::F32(scalar::kahan_unrolled_f32) },
+        HostKernel { name: "kahan-SSE-SP", variant: Variant::Kahan, simd: Simd::Sse, prec: Precision::Sp, available: sse, f: KernelFn::F32(sse::kahan_f32) },
+        HostKernel { name: "kahan-AVX2-SP", variant: Variant::Kahan, simd: Simd::Avx, prec: Precision::Sp, available: avx2, f: KernelFn::F32(avx2::kahan_f32) },
+        HostKernel { name: "kahan-fma-AVX2-SP", variant: Variant::KahanFma, simd: Simd::Avx, prec: Precision::Sp, available: fma, f: KernelFn::F32(avx2::kahan_fma_f32) },
+        HostKernel { name: "naive-AVX512-SP", variant: Variant::Naive, simd: Simd::Avx512, prec: Precision::Sp, available: avx512, f: KernelFn::F32(avx512::naive_f32) },
+        HostKernel { name: "kahan-AVX512-SP", variant: Variant::Kahan, simd: Simd::Avx512, prec: Precision::Sp, available: avx512, f: KernelFn::F32(avx512::kahan_f32) },
+        // --- f64 ---
+        HostKernel { name: "naive-scalar-DP", variant: Variant::Naive, simd: Simd::Scalar, prec: Precision::Dp, available: true, f: KernelFn::F64(scalar::naive_f64) },
+        HostKernel { name: "naive-AVX2-DP", variant: Variant::Naive, simd: Simd::Avx, prec: Precision::Dp, available: avx2, f: KernelFn::F64(avx2::naive_f64) },
+        HostKernel { name: "kahan-compiler-DP", variant: Variant::Kahan, simd: Simd::Scalar, prec: Precision::Dp, available: true, f: KernelFn::F64(scalar::kahan_seq_f64) },
+        HostKernel { name: "kahan-scalar-DP", variant: Variant::Kahan, simd: Simd::Scalar, prec: Precision::Dp, available: true, f: KernelFn::F64(scalar::kahan_unrolled_f64) },
+        HostKernel { name: "kahan-SSE-DP", variant: Variant::Kahan, simd: Simd::Sse, prec: Precision::Dp, available: sse, f: KernelFn::F64(sse::kahan_f64) },
+        HostKernel { name: "kahan-AVX2-DP", variant: Variant::Kahan, simd: Simd::Avx, prec: Precision::Dp, available: avx2, f: KernelFn::F64(avx2::kahan_f64) },
+        HostKernel { name: "kahan-fma-AVX2-DP", variant: Variant::KahanFma, simd: Simd::Avx, prec: Precision::Dp, available: fma, f: KernelFn::F64(avx2::kahan_fma_f64) },
+    ]
+}
+
+/// Look up a kernel by name (exact match).
+pub fn by_name(name: &str) -> Option<HostKernel> {
+    registry().into_iter().find(|k| k.name == name)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::accuracy::exact::exact_dot_f32;
+    use crate::util::Rng;
+
+    fn gauss_pair(n: usize, seed: u64) -> (Vec<f32>, Vec<f32>) {
+        let mut r = Rng::new(seed);
+        (r.normal_f32_vec(n), r.normal_f32_vec(n))
+    }
+
+    /// Every available f32 kernel must agree with the exact dot to within a
+    /// few ULP-scale bounds on benign data, at awkward lengths too.
+    #[test]
+    fn all_f32_kernels_close_to_exact() {
+        for n in [1usize, 7, 64, 1000, 4096, 10_001] {
+            let (a, b) = gauss_pair(n, 42 + n as u64);
+            let exact = exact_dot_f32(&a, &b);
+            let scale: f64 =
+                a.iter().zip(&b).map(|(x, y)| (x * y).abs() as f64).sum::<f64>().max(1e-30);
+            for k in registry().into_iter().filter(|k| k.available) {
+                if let KernelFn::F32(_) = k.f {
+                    let got = k.call_f32(&a, &b) as f64;
+                    let rel = (got - exact).abs() / scale;
+                    assert!(rel < 1e-5, "{} at n={n}: rel={rel:e}", k.name);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn all_f64_kernels_close_to_exact() {
+        use crate::accuracy::exact::exact_dot_f64;
+        for n in [3usize, 100, 4097] {
+            let mut r = Rng::new(7 + n as u64);
+            let a = r.normal_f64_vec(n);
+            let b = r.normal_f64_vec(n);
+            let exact = exact_dot_f64(&a, &b);
+            let scale: f64 = a.iter().zip(&b).map(|(x, y)| (x * y).abs()).sum::<f64>().max(1e-300);
+            for k in registry().into_iter().filter(|k| k.available) {
+                if let KernelFn::F64(_) = k.f {
+                    let got = k.call_f64(&a, &b);
+                    let rel = (got - exact).abs() / scale;
+                    assert!(rel < 1e-13, "{} at n={n}: rel={rel:e}", k.name);
+                }
+            }
+        }
+    }
+
+    /// The numerical payoff on real silicon: every Kahan variant must beat
+    /// sequential naive summation on the large-accumulator workload.
+    #[test]
+    fn kahan_beats_naive_on_large_accumulator() {
+        let n = 65_536;
+        let mut r = Rng::new(3);
+        let mut a: Vec<f32> = (0..n).map(|_| r.uniform() as f32).collect();
+        a[0] = 1e8;
+        let b = vec![1.0f32; n];
+        let exact = exact_dot_f32(&a, &b);
+        let naive_err = (scalar::naive_f32(&a, &b) as f64 - exact).abs();
+        for k in registry().into_iter().filter(|k| k.available) {
+            if k.variant == Variant::Naive {
+                continue;
+            }
+            if let KernelFn::F32(_) = k.f {
+                let err = (k.call_f32(&a, &b) as f64 - exact).abs();
+                assert!(
+                    err * 50.0 < naive_err,
+                    "{}: kahan err {err:e} vs naive {naive_err:e}",
+                    k.name
+                );
+            }
+        }
+    }
+
+    /// Property: all kernels agree with each other within a tight bound on
+    /// random data of random length (catches tail-handling bugs).
+    #[test]
+    fn kernels_agree_random_lengths() {
+        crate::util::prop::check("host-kernels-agree", 40, |rng| {
+            let n = 1 + rng.below(5000) as usize;
+            let a = rng.normal_f32_vec(n);
+            let b = rng.normal_f32_vec(n);
+            let exact = exact_dot_f32(&a, &b);
+            let scale: f64 =
+                a.iter().zip(&b).map(|(x, y)| (x * y).abs() as f64).sum::<f64>().max(1e-30);
+            for k in registry().into_iter().filter(|k| k.available) {
+                if let KernelFn::F32(_) = k.f {
+                    let got = k.call_f32(&a, &b) as f64;
+                    crate::prop_assert!(
+                        ((got - exact).abs() / scale) < 2e-5,
+                        "{} n={n}: {got} vs {exact}",
+                        k.name
+                    );
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn compensated_fold_recovers_small_terms() {
+        // 2^23 + 0.5 + 0.25 + 0.125: plain f32 summation drops every small
+        // term (ties-to-even at ulp = 1); the compensated fold keeps them in
+        // `c` and rounds the true sum 8388608.875 to the nearest f32.
+        let sums = [8388608.0f32, 0.5, 0.25, 0.125];
+        let comps = [0.0f32; 4];
+        let naive: f32 = sums.iter().sum();
+        assert_eq!(naive, 8388608.0, "naive must lose the small terms");
+        let folded = compensated_fold_f32(&sums, &comps);
+        assert_eq!(folded, 8388609.0, "fold must keep them");
+    }
+
+    #[test]
+    fn registry_has_both_precisions_and_lookup_works() {
+        let r = registry();
+        assert!(r.iter().any(|k| k.prec == Precision::Sp));
+        assert!(r.iter().any(|k| k.prec == Precision::Dp));
+        assert!(by_name("kahan-AVX2-SP").is_some());
+        assert!(by_name("bogus").is_none());
+    }
+}

@@ -1,0 +1,128 @@
+//! Scalar host kernels: the sequential baselines (Fig. 1a/1b verbatim) and
+//! the modulo-unrolled scalar Kahan the paper benchmarks as "scalar".
+
+use super::{compensated_fold_f32, compensated_fold_f64};
+
+/// Fig. 1a, strictly sequential. The optimizer may not reassociate floats,
+/// so this stays a single accumulator chain — the C-standard-conformant
+/// naive dot.
+pub fn naive_f32(a: &[f32], b: &[f32]) -> f32 {
+    let n = a.len().min(b.len());
+    let mut s = 0.0f32;
+    for i in 0..n {
+        s += a[i] * b[i];
+    }
+    s
+}
+
+pub fn naive_f64(a: &[f64], b: &[f64]) -> f64 {
+    let n = a.len().min(b.len());
+    let mut s = 0.0f64;
+    for i in 0..n {
+        s += a[i] * b[i];
+    }
+    s
+}
+
+/// Fig. 1b verbatim: one accumulator, one compensation term — what a
+/// compiler that *respects* the dependency produces (the "compiler
+/// variant" of Figs. 3a/3b, and also the most accurate sequential order).
+pub fn kahan_seq_f32(a: &[f32], b: &[f32]) -> f32 {
+    let n = a.len().min(b.len());
+    let mut s = 0.0f32;
+    let mut c = 0.0f32;
+    for i in 0..n {
+        let prod = a[i] * b[i];
+        let y = prod - c;
+        let t = s + y;
+        c = (t - s) - y;
+        s = t;
+    }
+    s
+}
+
+pub fn kahan_seq_f64(a: &[f64], b: &[f64]) -> f64 {
+    let n = a.len().min(b.len());
+    let mut s = 0.0f64;
+    let mut c = 0.0f64;
+    for i in 0..n {
+        let prod = a[i] * b[i];
+        let y = prod - c;
+        let t = s + y;
+        c = (t - s) - y;
+        s = t;
+    }
+    s
+}
+
+macro_rules! kahan_unrolled {
+    ($name:ident, $ty:ty, $fold:ident) => {
+        /// Modulo-unrolled scalar Kahan: four independent (sum, c) slots
+        /// hide the ADD pipeline latency — the paper's optimal "scalar"
+        /// variant.
+        pub fn $name(a: &[$ty], b: &[$ty]) -> $ty {
+            const U: usize = 4;
+            let n = a.len().min(b.len());
+            let mut s = [0.0 as $ty; U];
+            let mut c = [0.0 as $ty; U];
+            let chunks = n / U;
+            for i in 0..chunks {
+                let base = i * U;
+                // the four slots carry independent dependency chains
+                for k in 0..U {
+                    let prod = a[base + k] * b[base + k];
+                    let y = prod - c[k];
+                    let t = s[k] + y;
+                    c[k] = (t - s[k]) - y;
+                    s[k] = t;
+                }
+            }
+            for i in chunks * U..n {
+                let prod = a[i] * b[i];
+                let y = prod - c[0];
+                let t = s[0] + y;
+                c[0] = (t - s[0]) - y;
+                s[0] = t;
+            }
+            $fold(&s, &c)
+        }
+    };
+}
+
+kahan_unrolled!(kahan_unrolled_f32, f32, compensated_fold_f32);
+kahan_unrolled!(kahan_unrolled_f64, f64, compensated_fold_f64);
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_and_len_mismatch() {
+        assert_eq!(naive_f32(&[], &[]), 0.0);
+        assert_eq!(kahan_seq_f32(&[1.0, 2.0], &[3.0]), 3.0);
+        assert_eq!(kahan_unrolled_f64(&[1.0; 10], &[2.0; 7]), 14.0);
+    }
+
+    #[test]
+    fn simple_exact_values() {
+        let a = [1.0f32, 2.0, 3.0, 4.0, 5.0];
+        let b = [2.0f32, 2.0, 2.0, 2.0, 2.0];
+        assert_eq!(naive_f32(&a, &b), 30.0);
+        assert_eq!(kahan_seq_f32(&a, &b), 30.0);
+        assert_eq!(kahan_unrolled_f32(&a, &b), 30.0);
+    }
+
+    #[test]
+    fn kahan_seq_recovers_lost_bits() {
+        // 1e8 + 4096 * 0.5: naive f32 loses every 0.5, Kahan keeps them
+        let n = 4097;
+        let mut a = vec![0.5f32; n];
+        a[0] = 1e8;
+        let b = vec![1.0f32; n];
+        let naive = naive_f32(&a, &b) as f64;
+        let kahan = kahan_seq_f32(&a, &b) as f64;
+        let exact = 1e8f64 + 0.5 * 4096.0;
+        assert!((kahan - exact).abs() < 16.0, "kahan {kahan}");
+        assert!((naive - exact).abs() > 1000.0, "naive should be way off: {naive}");
+    }
+}

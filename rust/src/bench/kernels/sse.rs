@@ -1,0 +1,139 @@
+//! SSE (128-bit) host kernels: 4 f32 / 2 f64 lanes, two accumulator slots.
+
+use super::{compensated_fold_f32, compensated_fold_f64};
+
+/// Safe wrapper; falls back to the unrolled scalar kernel if SSE4.2 is
+/// somehow absent (it never is on x86_64, but the registry checks anyway).
+pub fn kahan_f32(a: &[f32], b: &[f32]) -> f32 {
+    if is_x86_feature_detected!("sse4.2") {
+        unsafe { kahan_f32_impl(a, b) }
+    } else {
+        super::scalar::kahan_unrolled_f32(a, b)
+    }
+}
+
+pub fn kahan_f64(a: &[f64], b: &[f64]) -> f64 {
+    if is_x86_feature_detected!("sse4.2") {
+        unsafe { kahan_f64_impl(a, b) }
+    } else {
+        super::scalar::kahan_unrolled_f64(a, b)
+    }
+}
+
+#[target_feature(enable = "sse4.2")]
+unsafe fn kahan_f32_impl(a: &[f32], b: &[f32]) -> f32 {
+    use core::arch::x86_64::*;
+    let n = a.len().min(b.len());
+    // two slots x 4 lanes: 8 elements per pass
+    let mut s0 = _mm_setzero_ps();
+    let mut c0 = _mm_setzero_ps();
+    let mut s1 = _mm_setzero_ps();
+    let mut c1 = _mm_setzero_ps();
+    let mut i = 0usize;
+    while i + 8 <= n {
+        let x0 = _mm_loadu_ps(a.as_ptr().add(i));
+        let y0 = _mm_loadu_ps(b.as_ptr().add(i));
+        let p0 = _mm_mul_ps(x0, y0);
+        let yy0 = _mm_sub_ps(p0, c0);
+        let t0 = _mm_add_ps(s0, yy0);
+        c0 = _mm_sub_ps(_mm_sub_ps(t0, s0), yy0);
+        s0 = t0;
+
+        let x1 = _mm_loadu_ps(a.as_ptr().add(i + 4));
+        let y1 = _mm_loadu_ps(b.as_ptr().add(i + 4));
+        let p1 = _mm_mul_ps(x1, y1);
+        let yy1 = _mm_sub_ps(p1, c1);
+        let t1 = _mm_add_ps(s1, yy1);
+        c1 = _mm_sub_ps(_mm_sub_ps(t1, s1), yy1);
+        s1 = t1;
+        i += 8;
+    }
+    let mut sums = [0.0f32; 8];
+    let mut comps = [0.0f32; 8];
+    _mm_storeu_ps(sums.as_mut_ptr(), s0);
+    _mm_storeu_ps(sums.as_mut_ptr().add(4), s1);
+    _mm_storeu_ps(comps.as_mut_ptr(), c0);
+    _mm_storeu_ps(comps.as_mut_ptr().add(4), c1);
+    // scalar compensated tail
+    let mut s = 0.0f32;
+    let mut c = 0.0f32;
+    while i < n {
+        let prod = a[i] * b[i];
+        let y = prod - c;
+        let t = s + y;
+        c = (t - s) - y;
+        s = t;
+        i += 1;
+    }
+    let head = compensated_fold_f32(&sums, &comps);
+    compensated_fold_f32(&[head, s], &[0.0, c])
+}
+
+#[target_feature(enable = "sse4.2")]
+unsafe fn kahan_f64_impl(a: &[f64], b: &[f64]) -> f64 {
+    use core::arch::x86_64::*;
+    let n = a.len().min(b.len());
+    let mut s0 = _mm_setzero_pd();
+    let mut c0 = _mm_setzero_pd();
+    let mut s1 = _mm_setzero_pd();
+    let mut c1 = _mm_setzero_pd();
+    let mut i = 0usize;
+    while i + 4 <= n {
+        let x0 = _mm_loadu_pd(a.as_ptr().add(i));
+        let y0 = _mm_loadu_pd(b.as_ptr().add(i));
+        let p0 = _mm_mul_pd(x0, y0);
+        let yy0 = _mm_sub_pd(p0, c0);
+        let t0 = _mm_add_pd(s0, yy0);
+        c0 = _mm_sub_pd(_mm_sub_pd(t0, s0), yy0);
+        s0 = t0;
+
+        let x1 = _mm_loadu_pd(a.as_ptr().add(i + 2));
+        let y1 = _mm_loadu_pd(b.as_ptr().add(i + 2));
+        let p1 = _mm_mul_pd(x1, y1);
+        let yy1 = _mm_sub_pd(p1, c1);
+        let t1 = _mm_add_pd(s1, yy1);
+        c1 = _mm_sub_pd(_mm_sub_pd(t1, s1), yy1);
+        s1 = t1;
+        i += 4;
+    }
+    let mut sums = [0.0f64; 4];
+    let mut comps = [0.0f64; 4];
+    _mm_storeu_pd(sums.as_mut_ptr(), s0);
+    _mm_storeu_pd(sums.as_mut_ptr().add(2), s1);
+    _mm_storeu_pd(comps.as_mut_ptr(), c0);
+    _mm_storeu_pd(comps.as_mut_ptr().add(2), c1);
+    let mut s = 0.0f64;
+    let mut c = 0.0f64;
+    while i < n {
+        let prod = a[i] * b[i];
+        let y = prod - c;
+        let t = s + y;
+        c = (t - s) - y;
+        s = t;
+        i += 1;
+    }
+    let head = compensated_fold_f64(&sums, &comps);
+    compensated_fold_f64(&[head, s], &[0.0, c])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matches_simple_values() {
+        let a: Vec<f32> = (1..=17).map(|i| i as f32).collect();
+        let b = vec![2.0f32; 17];
+        // 2 * 17*18/2 = 306
+        assert_eq!(kahan_f32(&a, &b), 306.0);
+        let a: Vec<f64> = (1..=9).map(|i| i as f64).collect();
+        let b = vec![3.0f64; 9];
+        assert_eq!(kahan_f64(&a, &b), 135.0);
+    }
+
+    #[test]
+    fn tail_only_input() {
+        assert_eq!(kahan_f32(&[2.0, 3.0, 4.0], &[1.0, 1.0, 1.0]), 9.0);
+        assert_eq!(kahan_f64(&[2.0], &[5.0]), 10.0);
+    }
+}

@@ -1,0 +1,15 @@
+//! Host microbenchmark framework — the likwid-bench analog (DESIGN.md §1).
+//!
+//! Real `std::arch` SIMD implementations of the paper's kernels run on the
+//! machine this crate executes on, with TSC timing, working-set sweeps and a
+//! thread-scaling harness. This validates the paper's *qualitative* headline
+//! ("vectorized Kahan comes for free outside L1") on genuine silicon, while
+//! the quantitative per-socket reproduction lives in `crate::sim`.
+
+pub mod kernels;
+pub mod sweep;
+pub mod threads;
+pub mod timer;
+
+pub use kernels::{registry, HostKernel};
+pub use sweep::{run_sweep, HostSweepPoint};

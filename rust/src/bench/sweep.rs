@@ -1,0 +1,128 @@
+//! Working-set sweep on the host — the likwid-bench measurement loop:
+//! allocate two streams of the target size, warm the caches, time repeated
+//! traversals, report cycles per cache line (Fig. 2's unit) and GUP/s.
+//!
+//! Cycles are TSC cycles; on every post-2010 Intel part the TSC runs at a
+//! constant rate close to the nominal clock, which is exactly how the
+//! paper's fixed-frequency measurements are denominated.
+
+use super::kernels::{HostKernel, KernelFn};
+use super::timer::measure_adaptive;
+use crate::isa::Precision;
+use crate::util::Rng;
+
+/// One host sweep measurement.
+#[derive(Clone, Copy, Debug)]
+pub struct HostSweepPoint {
+    /// total working set (both streams), bytes
+    pub ws_bytes: u64,
+    pub cy_per_cl: f64,
+    pub gups: f64,
+    /// run-to-run coefficient of variation (quality indicator)
+    pub cv: f64,
+}
+
+/// Default host sweep sizes: 8 KiB .. 64 MiB total, 2 points per octave
+/// (the container's LLC is typically ~32 MiB; going far beyond it just
+/// burns benchmark time).
+pub fn default_sizes() -> Vec<u64> {
+    let mut v = Vec::new();
+    let mut ws = 8 * 1024u64;
+    while ws <= 64 * 1024 * 1024 {
+        v.push(ws);
+        v.push(ws * 3 / 2);
+        ws *= 2;
+    }
+    v
+}
+
+/// Sweep one kernel across total working-set sizes.
+///
+/// `reps` timed repetitions per size; the timed region is auto-scaled so
+/// small working sets are traversed many times per timing (amortizing the
+/// timer and keeping the set cache-resident, like likwid-bench's iteration
+/// count).
+pub fn run_sweep(kernel: &HostKernel, sizes: &[u64], reps: usize, seed: u64) -> Vec<HostSweepPoint> {
+    let mut rng = Rng::new(seed);
+    let elem_bytes = match kernel.prec {
+        Precision::Sp => 4,
+        Precision::Dp => 8,
+    } as u64;
+
+    sizes
+        .iter()
+        .map(|&total| {
+            let n = (total / (2 * elem_bytes)).max(64) as usize;
+            let point = match kernel.f {
+                KernelFn::F32(f) => {
+                    let a = rng.normal_f32_vec(n);
+                    let b = rng.normal_f32_vec(n);
+                    let m = measure_adaptive(2_000_000.0, reps, || f(&a, &b));
+                    (m.median_cy, m.cv)
+                }
+                KernelFn::F64(f) => {
+                    let a = rng.normal_f64_vec(n);
+                    let b = rng.normal_f64_vec(n);
+                    let m = measure_adaptive(2_000_000.0, reps, || f(&a, &b));
+                    (m.median_cy, m.cv)
+                }
+            };
+            let (cy, cv) = point;
+            let cls = (2 * n as u64 * elem_bytes) as f64 / 64.0;
+            let ghz = crate::machine::detect::calibrate_tsc_ghz();
+            HostSweepPoint {
+                ws_bytes: 2 * n as u64 * elem_bytes,
+                cy_per_cl: cy / cls,
+                gups: n as f64 * ghz / cy,
+                cv,
+            }
+        })
+        .collect()
+}
+
+/// Measured load-only memory bandwidth (GB/s): streams a working set far
+/// beyond the LLC with the naive kernel and converts traversal time to
+/// bandwidth. Used to refine the detected host machine model.
+pub fn measure_load_bandwidth() -> f64 {
+    let n = 32 * 1024 * 1024 / 4; // 64 MiB total across two f32 streams
+    let mut rng = Rng::new(1);
+    let a = rng.normal_f32_vec(n);
+    let b = rng.normal_f32_vec(n);
+    let f = super::kernels::avx2::naive_f32;
+    let m = measure_adaptive(10_000_000.0, 5, || f(&a, &b));
+    let bytes = (2 * n * 4) as f64;
+    let ghz = crate::machine::detect::calibrate_tsc_ghz();
+    bytes * ghz / m.min_cy
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench::kernels::by_name;
+
+    #[test]
+    fn sweep_produces_sane_numbers() {
+        let k = by_name("kahan-AVX2-SP").unwrap();
+        let pts = run_sweep(&k, &[16 * 1024, 256 * 1024], 3, 9);
+        assert_eq!(pts.len(), 2);
+        for p in &pts {
+            assert!(p.cy_per_cl > 0.1 && p.cy_per_cl < 1000.0, "{p:?}");
+            assert!(p.gups > 0.01, "{p:?}");
+        }
+    }
+
+    #[test]
+    fn default_sizes_monotone() {
+        let s = default_sizes();
+        for w in s.windows(2) {
+            assert!(w[1] > w[0]);
+        }
+        assert!(s[0] == 8 * 1024);
+    }
+
+    #[test]
+    fn bandwidth_measurement_positive() {
+        let bw = measure_load_bandwidth();
+        assert!(bw > 0.5 && bw < 1000.0, "bw={bw} GB/s");
+    }
+}

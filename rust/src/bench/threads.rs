@@ -1,0 +1,130 @@
+//! Thread-scaling harness: n pinned threads each stream their own working
+//! set, aggregate GUP/s is reported per thread count — the measurement side
+//! of Figs. 3a/3b/4b.
+//!
+//! On this container only one core is online, so host scaling degenerates to
+//! n = 1 (the simulator carries the multicore reproduction); the harness
+//! still exercises the full path — spawn, pin, barrier, measure, reduce —
+//! and scales on real multicore hosts.
+
+use super::kernels::{HostKernel, KernelFn};
+use crate::util::Rng;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Barrier};
+use std::time::Instant;
+
+/// Result for one thread count.
+#[derive(Clone, Copy, Debug)]
+pub struct ThreadScalePoint {
+    pub threads: u32,
+    pub gups: f64,
+    /// per-thread GUP/s spread (max/min), contention indicator
+    pub imbalance: f64,
+}
+
+/// Pin the calling thread to `cpu` (best effort; ignored on failure).
+pub fn pin_to_cpu(cpu: usize) {
+    #[cfg(target_os = "linux")]
+    unsafe {
+        let mut set: libc::cpu_set_t = std::mem::zeroed();
+        libc::CPU_ZERO(&mut set);
+        libc::CPU_SET(cpu % libc::CPU_SETSIZE as usize, &mut set);
+        libc::sched_setaffinity(0, std::mem::size_of::<libc::cpu_set_t>(), &set);
+    }
+    #[cfg(not(target_os = "linux"))]
+    {
+        let _ = cpu;
+    }
+}
+
+/// Run `kernel` on `threads` pinned threads for ~`millis` ms each over a
+/// per-thread working set of `elems` elements per stream.
+pub fn run_threads(kernel: &HostKernel, threads: u32, elems: usize, millis: u64) -> ThreadScalePoint {
+    let barrier = Arc::new(Barrier::new(threads as usize));
+    let stop = Arc::new(AtomicBool::new(false));
+    let mut handles = Vec::new();
+
+    for t in 0..threads {
+        let barrier = barrier.clone();
+        let stop = stop.clone();
+        let f = kernel.f;
+        handles.push(std::thread::spawn(move || {
+            pin_to_cpu(t as usize);
+            let mut rng = Rng::new(1000 + t as u64);
+            let mut iters = 0u64;
+            let elapsed;
+            match f {
+                KernelFn::F32(f) => {
+                    let a = rng.normal_f32_vec(elems);
+                    let b = rng.normal_f32_vec(elems);
+                    std::hint::black_box(f(&a, &b));
+                    barrier.wait();
+                    let t0 = Instant::now();
+                    while !stop.load(Ordering::Relaxed) {
+                        std::hint::black_box(f(&a, &b));
+                        iters += 1;
+                        if t0.elapsed().as_millis() as u64 >= millis {
+                            stop.store(true, Ordering::Relaxed);
+                        }
+                    }
+                    elapsed = t0.elapsed().as_secs_f64();
+                }
+                KernelFn::F64(f) => {
+                    let a = rng.normal_f64_vec(elems);
+                    let b = rng.normal_f64_vec(elems);
+                    std::hint::black_box(f(&a, &b));
+                    barrier.wait();
+                    let t0 = Instant::now();
+                    while !stop.load(Ordering::Relaxed) {
+                        std::hint::black_box(f(&a, &b));
+                        iters += 1;
+                        if t0.elapsed().as_millis() as u64 >= millis {
+                            stop.store(true, Ordering::Relaxed);
+                        }
+                    }
+                    elapsed = t0.elapsed().as_secs_f64();
+                }
+            }
+            // updates/s for this thread
+            iters as f64 * elems as f64 / elapsed / 1e9
+        }));
+    }
+
+    let per_thread: Vec<f64> = handles.into_iter().map(|h| h.join().expect("bench thread")).collect();
+    let total: f64 = per_thread.iter().sum();
+    let max = per_thread.iter().cloned().fold(f64::MIN, f64::max);
+    let min = per_thread.iter().cloned().fold(f64::MAX, f64::min);
+    ThreadScalePoint { threads, gups: total, imbalance: if min > 0.0 { max / min } else { f64::NAN } }
+}
+
+/// Scaling curve for 1..=max_threads.
+pub fn scaling_curve(kernel: &HostKernel, max_threads: u32, elems: usize, millis: u64) -> Vec<ThreadScalePoint> {
+    (1..=max_threads).map(|n| run_threads(kernel, n, elems, millis)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench::kernels::by_name;
+
+    #[test]
+    fn single_thread_run_produces_throughput() {
+        let k = by_name("kahan-AVX2-SP").unwrap();
+        let p = run_threads(&k, 1, 64 * 1024, 30);
+        assert_eq!(p.threads, 1);
+        assert!(p.gups > 0.01, "{p:?}");
+    }
+
+    #[test]
+    fn two_threads_do_not_crash_on_one_cpu() {
+        let k = by_name("naive-AVX2-SP").unwrap();
+        let p = run_threads(&k, 2, 16 * 1024, 20);
+        assert!(p.gups > 0.0);
+    }
+
+    #[test]
+    fn pin_is_best_effort() {
+        pin_to_cpu(0);
+        pin_to_cpu(999); // wraps, must not panic
+    }
+}

@@ -1,0 +1,112 @@
+//! Cycle-accurate timing via the TSC, with serialization fences, repetition
+//! control and robust (median) aggregation — what likwid-bench's measurement
+//! core does.
+
+/// Serialized timestamp read (lfence; rdtsc).
+#[inline]
+pub fn rdtsc() -> u64 {
+    #[cfg(target_arch = "x86_64")]
+    unsafe {
+        core::arch::x86_64::_mm_lfence();
+        let t = core::arch::x86_64::_rdtsc();
+        core::arch::x86_64::_mm_lfence();
+        t
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        use std::time::{SystemTime, UNIX_EPOCH};
+        SystemTime::now().duration_since(UNIX_EPOCH).unwrap().as_nanos() as u64
+    }
+}
+
+/// Measurement of one benchmark configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct Measurement {
+    /// median cycles per invocation
+    pub median_cy: f64,
+    /// minimum (best-case) cycles per invocation
+    pub min_cy: f64,
+    /// coefficient of variation across repetitions
+    pub cv: f64,
+    pub reps: usize,
+}
+
+/// Run `f` for `reps` timed repetitions (after `warmup` untimed ones) and
+/// aggregate robustly. `f` should return a value that depends on the work
+/// so the optimizer cannot elide it; it is consumed by `std::hint::black_box`.
+pub fn measure<T, F: FnMut() -> T>(warmup: usize, reps: usize, mut f: F) -> Measurement {
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let mut samples = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        let t0 = rdtsc();
+        std::hint::black_box(f());
+        let t1 = rdtsc();
+        samples.push(t1.wrapping_sub(t0) as f64);
+    }
+    Measurement {
+        median_cy: crate::util::stats::median(&samples),
+        min_cy: crate::util::stats::min(&samples),
+        cv: crate::util::stats::cv(&samples),
+        reps,
+    }
+}
+
+/// Adaptive measurement: repeat the kernel inside the timed region until it
+/// runs for at least `min_cycles`, to push timer overhead below noise for
+/// tiny working sets. Returns cycles per single invocation.
+pub fn measure_adaptive<T, F: FnMut() -> T>(min_cycles: f64, reps: usize, mut f: F) -> Measurement {
+    // estimate one invocation
+    std::hint::black_box(f());
+    let t0 = rdtsc();
+    std::hint::black_box(f());
+    let once = (rdtsc().wrapping_sub(t0) as f64).max(1.0);
+    let inner = (min_cycles / once).ceil().max(1.0) as usize;
+
+    let m = measure(2, reps, || {
+        for _ in 0..inner {
+            std::hint::black_box(f());
+        }
+    });
+    Measurement {
+        median_cy: m.median_cy / inner as f64,
+        min_cy: m.min_cy / inner as f64,
+        cv: m.cv,
+        reps,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rdtsc_monotone() {
+        let a = rdtsc();
+        let b = rdtsc();
+        assert!(b >= a);
+    }
+
+    #[test]
+    fn measure_scales_with_work() {
+        let v: Vec<f64> = (0..50_000).map(|i| i as f64).collect();
+        let small = measure(2, 9, || v[..5_000].iter().sum::<f64>());
+        let large = measure(2, 9, || v.iter().sum::<f64>());
+        assert!(
+            large.min_cy > 3.0 * small.min_cy,
+            "10x work must cost >3x cycles: {} vs {}",
+            large.min_cy,
+            small.min_cy
+        );
+    }
+
+    #[test]
+    fn adaptive_agrees_with_direct_on_big_work() {
+        let v: Vec<f64> = (0..100_000).map(|i| i as f64).collect();
+        let direct = measure(2, 9, || v.iter().sum::<f64>());
+        let adaptive = measure_adaptive(1000.0, 9, || v.iter().sum::<f64>());
+        let ratio = adaptive.min_cy / direct.min_cy;
+        assert!((0.5..=2.0).contains(&ratio), "ratio {ratio}");
+    }
+}

@@ -1,0 +1,307 @@
+//! The `repro` CLI: regenerate every paper artifact from the command line.
+
+use super::{experiments, report, validate};
+use crate::isa::Precision;
+use crate::machine::{detect, preset, PresetId};
+use crate::sim;
+use crate::util::cli::Args;
+use std::path::PathBuf;
+
+const HELP: &str = "\
+repro — reproduce 'Performance analysis of the Kahan-enhanced scalar product'
+
+USAGE: repro <command> [options]
+
+Paper artifacts (virtual testbed + ECM model):
+  table1                Table 1: testbed specification
+  table2                Table 2: ECM models for AVX Kahan across sockets
+  models [--arch A] [--dtype sp|dp]
+                        §3/Eq.2: full ECM model zoo for one socket
+  fig2   [--arch A] [--dtype sp|dp] [--full]
+                        Fig. 2: single-core cy/CL vs working-set sweep
+  fig3   [--arch A] [--dtype sp|dp]
+                        Figs. 3a/3b: in-memory multicore scaling
+  fig4a                 Fig. 4a: per-level cy/CL across sockets
+  fig4b                 Fig. 4b: in-memory scaling across sockets
+  fma                   §4: Kahan-FMA study on HSW/BDW
+  ablation [--arch A] [--dtype sp|dp]
+                        design ablations: unroll sweep, miss-overhead on/off
+  validate              compare every paper number against this build
+  all                   run everything above and write out/ reports
+
+Host silicon (likwid-bench analog):
+  host-info             detected machine model + SIMD features
+  host-sweep [--reps N] [--full]
+                        sweep real SIMD kernels on this machine
+  host-scaling [--threads N]
+                        thread scaling on this machine
+  accuracy [--n N] [--trials T]
+                        error vs condition number (algorithm zoo)
+
+Options:
+  --arch snb|ivb|hsw|bdw   target socket (default ivb)
+  --dtype sp|dp            precision (default sp)
+  --out DIR                report directory (default out/)
+  --csv                    also write CSV series
+";
+
+fn parse_arch(args: &Args) -> Result<crate::machine::Machine, String> {
+    let a = args.opt("arch", "ivb");
+    PresetId::parse(&a).map(preset).ok_or_else(|| format!("unknown arch `{a}`"))
+}
+
+fn parse_prec(args: &Args) -> Result<Precision, String> {
+    let d = args.opt("dtype", "sp");
+    Precision::parse(&d).ok_or_else(|| format!("unknown dtype `{d}`"))
+}
+
+/// Entry point; returns the process exit code.
+pub fn cli_main() -> i32 {
+    let args = match Args::from_env() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return 2;
+        }
+    };
+    match run(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e}");
+            2
+        }
+    }
+}
+
+/// Dispatch a parsed command (separated from `cli_main` for tests).
+pub fn run(args: &Args) -> Result<(), String> {
+    let out: PathBuf = args.opt("out", "out").into();
+    let csv = args.flag("csv");
+    let cmd = args.subcommand.clone().unwrap_or_else(|| "help".into());
+
+    match cmd.as_str() {
+        "help" | "--help" => {
+            println!("{HELP}");
+        }
+        "table1" => println!("{}", experiments::table1().render()),
+        "table2" => println!("{}", experiments::table2().render()),
+        "models" => {
+            let m = parse_arch(args)?;
+            let p = parse_prec(args)?;
+            println!("{}", experiments::models_table(&m, p).render());
+        }
+        "fig2" => {
+            let m = parse_arch(args)?;
+            let p = parse_prec(args)?;
+            let sizes = if args.flag("full") {
+                sim::engine::default_sweep_sizes()
+            } else {
+                vec![
+                    8 << 10,
+                    16 << 10,
+                    32 << 10,
+                    64 << 10,
+                    128 << 10,
+                    256 << 10,
+                    1 << 20,
+                    4 << 20,
+                    16 << 20,
+                    64 << 20,
+                    256 << 20,
+                ]
+            };
+            let series = experiments::fig2(&m, p, &sizes);
+            println!("{}", experiments::fig2_table(&m, &series).render());
+            if csv {
+                report::save_sweep_csv(&out, &format!("fig2_{}", m.shorthand), &series)
+                    .map_err(|e| e.to_string())?;
+                println!("wrote {}/fig2_{}.csv", out.display(), m.shorthand);
+            }
+        }
+        "fig3" => {
+            let m = parse_arch(args)?;
+            let p = parse_prec(args)?;
+            let series = experiments::fig3(&m, p);
+            println!("{}", experiments::fig3_table(&m, p, &series).render());
+            if csv {
+                let name = format!(
+                    "fig3{}_{}",
+                    if p == Precision::Sp { "a" } else { "b" },
+                    m.shorthand
+                );
+                report::save_scaling_csv(&out, &name, &series).map_err(|e| e.to_string())?;
+                println!("wrote {}/{name}.csv", out.display());
+            }
+        }
+        "fig4a" => {
+            let rows = experiments::fig4a(Precision::Sp);
+            println!("{}", experiments::fig4a_table(&rows).render());
+        }
+        "fig4b" => {
+            let series = experiments::fig4b(Precision::Sp);
+            println!("{}", experiments::fig4b_table(&series).render());
+        }
+        "fma" => println!("{}", experiments::fma_study(Precision::Sp).render()),
+        "ablation" => {
+            let m = parse_arch(args)?;
+            let p = parse_prec(args)?;
+            println!("{}", super::ablation::unroll_ablation(&m, p).render());
+            let k = crate::isa::generate(crate::isa::Variant::Kahan, crate::isa::Simd::Avx, p, 0);
+            println!("{}", super::ablation::overhead_ablation(&m, &k).render());
+        }
+        "validate" => {
+            let (t, ok) = validate::report();
+            println!("{}", t.render());
+            if !ok {
+                return Err("validation FAILED".into());
+            }
+            println!("all paper numbers reproduced within tolerance");
+        }
+        "all" => {
+            run_all_reports(&out)?;
+        }
+        "host-info" => {
+            let m = detect::detect_host();
+            println!("host: {} ({} cores, {:.2} GHz tsc)", m.name, m.cores, m.clock_ghz);
+            let simd = detect::host_simd();
+            println!(
+                "simd: sse={} avx2={} fma={} avx512f={}",
+                simd.sse, simd.avx2, simd.fma, simd.avx512f
+            );
+            for c in &m.caches {
+                println!("{}: {}", c.name, crate::util::fmt::bytes(c.size_bytes));
+            }
+            println!(
+                "measured load bandwidth: {:.1} GB/s",
+                crate::bench::sweep::measure_load_bandwidth()
+            );
+        }
+        "host-sweep" => {
+            let reps = args.num("reps", 5usize).map_err(|e| e.to_string())?;
+            let quick = !args.flag("full");
+            println!("{}", experiments::host_sweep_table(reps, quick).render());
+        }
+        "host-scaling" => {
+            let threads = args.num("threads", 0u32).map_err(|e| e.to_string())?;
+            let max = if threads == 0 {
+                std::thread::available_parallelism().map(|n| n.get() as u32).unwrap_or(1)
+            } else {
+                threads
+            };
+            let k = crate::bench::kernels::by_name("kahan-AVX2-SP").ok_or("no kernel")?;
+            let pts = crate::bench::threads::scaling_curve(&k, max, 1 << 22, 150);
+            let mut t = crate::util::Table::new("Host thread scaling (kahan-AVX2-SP, in-memory)")
+                .headers(["threads", "GUP/s", "imbalance"]);
+            for p in pts {
+                t.row([
+                    p.threads.to_string(),
+                    format!("{:.3}", p.gups),
+                    format!("{:.2}", p.imbalance),
+                ]);
+            }
+            println!("{}", t.render());
+        }
+        "accuracy" => {
+            let n = args.num("n", 2048usize).map_err(|e| e.to_string())?;
+            let trials = args.num("trials", 7usize).map_err(|e| e.to_string())?;
+            println!("{}", experiments::accuracy_table(n, trials).render());
+        }
+        other => return Err(format!("unknown command `{other}` (try `repro help`)")),
+    }
+    args.finish().map_err(|e| e.to_string())
+}
+
+/// `repro all`: write every report into `out/`.
+fn run_all_reports(out: &PathBuf) -> Result<(), String> {
+    let save =
+        |name: &str, t: &crate::util::Table| report::save_table(out, name, t).map_err(|e| e.to_string());
+    println!("writing reports to {}", out.display());
+
+    save("table1", &experiments::table1())?;
+    save("table2", &experiments::table2())?;
+    for (id, m) in [
+        (PresetId::Snb, "snb"),
+        (PresetId::Ivb, "ivb"),
+        (PresetId::Hsw, "hsw"),
+        (PresetId::Bdw, "bdw"),
+    ] {
+        let mach = preset(id);
+        save(&format!("models_{m}_sp"), &experiments::models_table(&mach, Precision::Sp))?;
+    }
+    let sizes = vec![
+        8 << 10,
+        16 << 10,
+        32 << 10,
+        64 << 10,
+        128 << 10,
+        256 << 10,
+        1 << 20,
+        4 << 20,
+        16 << 20,
+        64 << 20,
+        256 << 20,
+    ];
+    let ivb = preset(PresetId::Ivb);
+    let f2 = experiments::fig2(&ivb, Precision::Sp, &sizes);
+    save("fig2_ivb", &experiments::fig2_table(&ivb, &f2))?;
+    report::save_sweep_csv(out, "fig2_ivb", &f2).map_err(|e| e.to_string())?;
+    for p in [Precision::Sp, Precision::Dp] {
+        let s = experiments::fig3(&ivb, p);
+        let name = format!("fig3{}_ivb", if p == Precision::Sp { "a" } else { "b" });
+        save(&name, &experiments::fig3_table(&ivb, p, &s))?;
+        report::save_scaling_csv(out, &name, &s).map_err(|e| e.to_string())?;
+    }
+    save("fig4a", &experiments::fig4a_table(&experiments::fig4a(Precision::Sp)))?;
+    save("fig4b", &experiments::fig4b_table(&experiments::fig4b(Precision::Sp)))?;
+    save("fma", &experiments::fma_study(Precision::Sp))?;
+    save("ablation_unroll", &super::ablation::unroll_ablation(&ivb, Precision::Sp))?;
+    let kavx = crate::isa::generate(
+        crate::isa::Variant::Kahan,
+        crate::isa::Simd::Avx,
+        Precision::Sp,
+        0,
+    );
+    save("ablation_overheads", &super::ablation::overhead_ablation(&ivb, &kavx))?;
+    save("accuracy", &experiments::accuracy_table(2048, 7))?;
+    let (vt, ok) = validate::report();
+    save("validate", &vt)?;
+    println!("validation: {}", if ok { "PASS" } else { "FAIL" });
+    if !ok {
+        return Err("validation failed".into());
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(toks: &[&str]) -> Args {
+        Args::parse(toks.iter().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn table_commands_run() {
+        run(&args(&["table1"])).unwrap();
+        run(&args(&["table2"])).unwrap();
+        run(&args(&["models", "--arch", "hsw"])).unwrap();
+        run(&args(&["fma"])).unwrap();
+    }
+
+    #[test]
+    fn fig2_quick_runs() {
+        run(&args(&["fig2", "--arch", "ivb"])).unwrap();
+    }
+
+    #[test]
+    fn validate_passes() {
+        run(&args(&["validate"])).unwrap();
+    }
+
+    #[test]
+    fn bad_inputs_are_errors() {
+        assert!(run(&args(&["models", "--arch", "z80"])).is_err());
+        assert!(run(&args(&["frobnicate"])).is_err());
+        assert!(run(&args(&["table1", "--bogus", "1"])).is_err());
+    }
+}

@@ -1,0 +1,449 @@
+//! The experiment registry: one function per paper artifact (tables,
+//! figures, discussion claims), each producing render-ready data.
+//!
+//! Experiment index (DESIGN.md §4): T1, EQ2/MODELS, T2, F2, F3a/b, F4a/b,
+//! FMA, ACC, HOST.
+
+use crate::ecm::{self, notation};
+use crate::isa::{self, compiler_kahan, generate, KernelDesc, Precision, Simd, Variant};
+use crate::machine::{all_presets, Machine};
+use crate::sim;
+use crate::util::{fmt, Table};
+
+/// Table 1: the testbed description, straight from the machine models.
+pub fn table1() -> Table {
+    let machines = all_presets();
+    let mut t = Table::new("Table 1: Test machine specifications (one socket)")
+        .headers(["Microarchitecture", "SNB", "IVB", "HSW", "BDW"]);
+    let row = |label: &str, f: &dyn Fn(&Machine) -> String| {
+        let mut cells = vec![label.to_string()];
+        cells.extend(machines.iter().map(|m| f(m)));
+        cells
+    };
+    t.row(row("Xeon model", &|m| m.xeon_model.to_string()));
+    t.row(row("Year", &|m| m.year.to_string()));
+    t.row(row("Clock (fixed)", &|m| format!("{} GHz", m.clock_ghz)));
+    t.row(row("Cores/Threads", &|m| format!("{}/{}", m.cores, m.threads)));
+    t.row(row("L1 load ports", &|m| {
+        format!("{}x{} B", m.core.load_ports, m.core.load_port_bytes)
+    }));
+    t.row(row("ADD throughput", &|m| format!("{} / cy", m.core.add_ports)));
+    t.row(row("MUL throughput", &|m| format!("{} / cy", m.core.mul_ports)));
+    t.row(row("FMA throughput", &|m| {
+        if m.core.fma_ports == 0 { "n/a".into() } else { format!("{} / cy", m.core.fma_ports) }
+    }));
+    t.row(row("L2-L1 bus", &|m| format!("{} B/cy", m.caches[1].bytes_per_cy_to_inner)));
+    t.row(row("L3-L2 bus", &|m| format!("{} B/cy", m.caches[2].bytes_per_cy_to_inner)));
+    t.row(row("LLC size", &|m| fmt::bytes(m.llc_bytes())));
+    t.row(row("Main memory", &|m| m.dram.to_string()));
+    t.row(row("Peak BW", &|m| format!("{} GB/s", m.memory.peak_bw_gbs)));
+    t.row(row("Load-only BW", &|m| format!("{} GB/s", m.memory.load_bw_gbs)));
+    t.row(row("T_L3Mem per CL", &|m| format!("{} cy", fmt::cy(m.t_l3mem_per_cl()))));
+    t
+}
+
+/// The §3 kernel set for one precision, including the FMA variant when the
+/// machine has FMA pipes.
+pub fn kernel_set(machine: &Machine, prec: Precision) -> Vec<KernelDesc> {
+    let mut ks = isa::paper_kernels(prec);
+    ks.push(compiler_kahan(prec));
+    if machine.core.fma_ports > 0 {
+        ks.push(generate(Variant::KahanFma, Simd::Avx, prec, 0));
+    }
+    ks
+}
+
+/// §3 / Eq. 2: full ECM models for every kernel variant on one machine.
+pub fn models_table(machine: &Machine, prec: Precision) -> Table {
+    let mut t = Table::new(&format!(
+        "ECM models on {} ({}, single core)",
+        machine.shorthand,
+        prec.name()
+    ))
+    .headers(["Kernel", "ECM model [cy]", "Prediction [cy]", "Perf [GUP/s]", "n_S", "P_BW [GUP/s]"]);
+    for k in kernel_set(machine, prec) {
+        let e = ecm::build(machine, &k, true);
+        t.row([
+            k.name.clone(),
+            notation::format_model(&e),
+            notation::format_prediction(&e),
+            notation::format_perf(&e),
+            e.saturation_cores().to_string(),
+            fmt::perf(e.roofline_gups()),
+        ]);
+    }
+    t
+}
+
+/// Table 2: the AVX Kahan model across all four sockets.
+pub fn table2() -> Table {
+    let mut t = Table::new("Table 2: ECM models for the AVX Kahan dot (SP) across Xeons")
+        .headers(["", "ECM model [cy]", "Prediction [cy/CL-pair]", "Pred. perf [GUP/s]", "n_S"]);
+    let k = generate(Variant::Kahan, Simd::Avx, Precision::Sp, 0);
+    for m in all_presets() {
+        let e = ecm::build(&m, &k, true);
+        t.row([
+            m.shorthand.to_string(),
+            notation::format_model(&e),
+            notation::format_prediction(&e),
+            notation::format_perf(&e),
+            e.saturation_cores().to_string(),
+        ]);
+    }
+    t
+}
+
+/// One Fig. 2 series: the simulated single-core sweep for one kernel.
+pub struct SweepSeries {
+    pub kernel: String,
+    pub points: Vec<sim::SweepPoint>,
+    /// ECM cycle-per-CL predictions per residence level (horizontal lines)
+    pub model_cy_per_cl: [f64; 4],
+}
+
+/// Fig. 2: single-core cycles/CL vs data-set size on one machine.
+pub fn fig2(machine: &Machine, prec: Precision, sizes: &[u64]) -> Vec<SweepSeries> {
+    let kernels = [
+        generate(Variant::Naive, Simd::Avx, prec, 0),
+        generate(Variant::Kahan, Simd::Scalar, prec, 0),
+        generate(Variant::Kahan, Simd::Sse, prec, 0),
+        generate(Variant::Kahan, Simd::Avx, prec, 0),
+    ];
+    kernels
+        .into_iter()
+        .map(|k| {
+            let e = ecm::build(machine, &k, true);
+            let cls = k.cls_per_unit() as f64;
+            let model = [
+                e.prediction(0) / cls,
+                e.prediction(1) / cls,
+                e.prediction(2) / cls,
+                e.prediction(3) / cls,
+            ];
+            SweepSeries {
+                kernel: k.name.clone(),
+                points: sim::simulate_sweep(machine, &k, sizes, true),
+                model_cy_per_cl: model,
+            }
+        })
+        .collect()
+}
+
+/// Render a Fig. 2 result as a table (one row per size, one column per
+/// kernel).
+pub fn fig2_table(machine: &Machine, series: &[SweepSeries]) -> Table {
+    let mut t = Table::new(&format!(
+        "Fig. 2: single-core cy/CL vs working set on {} (sim | model-L1..Mem in header)",
+        machine.shorthand
+    ));
+    let mut headers = vec!["WS".to_string()];
+    for s in series {
+        headers.push(format!(
+            "{} (model {} | {} | {} | {})",
+            s.kernel,
+            fmt::cy(s.model_cy_per_cl[0]),
+            fmt::cy(s.model_cy_per_cl[1]),
+            fmt::cy(s.model_cy_per_cl[2]),
+            fmt::cy(s.model_cy_per_cl[3])
+        ));
+    }
+    let mut t2 = std::mem::replace(&mut t, Table::new("")).headers(headers);
+    if let Some(first) = series.first() {
+        for (i, p) in first.points.iter().enumerate() {
+            let mut row = vec![fmt::bytes(p.ws_bytes)];
+            for s in series {
+                row.push(format!("{:.2}", s.points[i].cy_per_cl));
+            }
+            t2.row(row);
+        }
+    }
+    t2
+}
+
+/// One Fig. 3 series: simulated multicore scaling plus the model curve.
+pub struct ScalingSeries {
+    pub kernel: String,
+    pub sim: Vec<sim::multicore::ScalePoint>,
+    pub model: Vec<ecm::scaling::ScalingPoint>,
+    pub model_saturation: u32,
+}
+
+/// Figs. 3a/3b: in-memory scaling on one machine for the Kahan variants
+/// (scalar / SSE / AVX / compiler) plus naive AVX.
+pub fn fig3(machine: &Machine, prec: Precision) -> Vec<ScalingSeries> {
+    let elems_mem = (8 * machine.llc_bytes() / prec.elem_bytes() as u64).max(1 << 24);
+    let mut kernels = vec![
+        generate(Variant::Naive, Simd::Avx, prec, 0),
+        generate(Variant::Kahan, Simd::Scalar, prec, 0),
+        generate(Variant::Kahan, Simd::Sse, prec, 0),
+        generate(Variant::Kahan, Simd::Avx, prec, 0),
+        compiler_kahan(prec),
+    ];
+    kernels
+        .drain(..)
+        .map(|k| {
+            let e = ecm::build(machine, &k, false);
+            ScalingSeries {
+                kernel: k.name.clone(),
+                sim: sim::simulate_scaling(machine, &k, elems_mem, machine.cores),
+                model: ecm::scaling::curve(&e, machine.cores).points,
+                model_saturation: e.saturation_cores(),
+            }
+        })
+        .collect()
+}
+
+pub fn fig3_table(machine: &Machine, prec: Precision, series: &[ScalingSeries]) -> Table {
+    let mut headers = vec!["cores".to_string()];
+    for s in series {
+        headers.push(format!("{} sim", s.kernel));
+        headers.push(format!("{} model", s.kernel));
+    }
+    let mut t = Table::new(&format!(
+        "Fig. 3{}: in-memory scaling on {} [GUP/s]",
+        if prec == Precision::Sp { "a (SP)" } else { "b (DP)" },
+        machine.shorthand
+    ))
+    .headers(headers);
+    for n in 0..machine.cores as usize {
+        let mut row = vec![(n + 1).to_string()];
+        for s in series {
+            row.push(fmt::perf(s.sim[n].gups));
+            row.push(fmt::perf(s.model[n].gups));
+        }
+        t.row(row);
+    }
+    t
+}
+
+/// Fig. 4a: single-core cycles/CL per memory level for the AVX Kahan kernel
+/// on every socket, with the saturation point annotation.
+pub struct Fig4aRow {
+    pub arch: &'static str,
+    /// simulated cy/CL at representative L1/L2/L3/Mem working sets
+    pub sim_cy_per_cl: [f64; 4],
+    /// ECM model cy/CL
+    pub model_cy_per_cl: [f64; 4],
+    pub n_s: u32,
+}
+
+pub fn fig4a(prec: Precision) -> Vec<Fig4aRow> {
+    let k = generate(Variant::Kahan, Simd::Avx, prec, 0);
+    all_presets()
+        .into_iter()
+        .map(|m| {
+            let e = ecm::build(&m, &k, true);
+            let cls = k.cls_per_unit() as f64;
+            // representative working sets per level: half of L1, half of L2,
+            // half of L3, 8x LLC
+            let ws = [
+                m.caches[0].size_bytes / 2,
+                m.caches[1].size_bytes / 2,
+                m.caches[2].size_bytes / 2,
+                8 * m.llc_bytes(),
+            ];
+            let mut sim_vals = [0.0f64; 4];
+            for (i, w) in ws.iter().enumerate() {
+                let elems = w / k.bytes_per_iter();
+                sim_vals[i] = sim::simulate_working_set(&m, &k, elems, true).cy_per_cl;
+            }
+            Fig4aRow {
+                arch: m.shorthand,
+                sim_cy_per_cl: sim_vals,
+                model_cy_per_cl: [
+                    e.prediction(0) / cls,
+                    e.prediction(1) / cls,
+                    e.prediction(2) / cls,
+                    e.prediction(3) / cls,
+                ],
+                n_s: e.saturation_cores(),
+            }
+        })
+        .collect()
+}
+
+pub fn fig4a_table(rows: &[Fig4aRow]) -> Table {
+    let mut t = Table::new("Fig. 4a: AVX Kahan (SP) single-core cy/CL per level, sim (model)")
+        .headers(["Arch", "L1", "L2", "L3", "Mem", "n_S"]);
+    for r in rows {
+        t.row([
+            r.arch.to_string(),
+            format!("{:.2} ({})", r.sim_cy_per_cl[0], fmt::cy(r.model_cy_per_cl[0])),
+            format!("{:.2} ({})", r.sim_cy_per_cl[1], fmt::cy(r.model_cy_per_cl[1])),
+            format!("{:.2} ({})", r.sim_cy_per_cl[2], fmt::cy(r.model_cy_per_cl[2])),
+            format!("{:.2} ({})", r.sim_cy_per_cl[3], fmt::cy(r.model_cy_per_cl[3])),
+            r.n_s.to_string(),
+        ]);
+    }
+    t
+}
+
+/// Fig. 4b: in-memory scaling of AVX Kahan (SP) on all four sockets.
+pub fn fig4b(prec: Precision) -> Vec<(String, Vec<sim::multicore::ScalePoint>)> {
+    let k = generate(Variant::Kahan, Simd::Avx, prec, 0);
+    all_presets()
+        .into_iter()
+        .map(|m| {
+            let elems = (8 * m.llc_bytes() / prec.elem_bytes() as u64).max(1 << 24);
+            let pts = sim::simulate_scaling(&m, &k, elems, m.cores);
+            (m.shorthand.to_string(), pts)
+        })
+        .collect()
+}
+
+pub fn fig4b_table(series: &[(String, Vec<sim::multicore::ScalePoint>)]) -> Table {
+    let max_cores = series.iter().map(|(_, p)| p.len()).max().unwrap_or(0);
+    let mut headers = vec!["cores".to_string()];
+    headers.extend(series.iter().map(|(n, _)| n.clone()));
+    let mut t =
+        Table::new("Fig. 4b: in-memory scaling, AVX Kahan SP [GUP/s]").headers(headers);
+    for n in 0..max_cores {
+        let mut row = vec![(n + 1).to_string()];
+        for (_, pts) in series {
+            row.push(pts.get(n).map(|p| fmt::perf(p.gups)).unwrap_or_default());
+        }
+        t.row(row);
+    }
+    t
+}
+
+/// §4 FMA study: Kahan-ADD vs Kahan-FMA on the FMA-capable sockets.
+pub fn fma_study(prec: Precision) -> Table {
+    let mut t = Table::new("FMA variant study (Kahan AVX vs Kahan FMA): cy/CL sim (model)")
+        .headers(["Arch", "Level", "kahan-AVX", "kahan-FMA", "speedup"]);
+    for m in all_presets().into_iter().filter(|m| m.core.fma_ports > 0) {
+        let add = generate(Variant::Kahan, Simd::Avx, prec, 0);
+        let fma = generate(Variant::KahanFma, Simd::Avx, prec, 0);
+        let ws = [
+            m.caches[0].size_bytes / 2,
+            m.caches[1].size_bytes / 2,
+            m.caches[2].size_bytes / 2,
+            8 * m.llc_bytes(),
+        ];
+        for (level, w) in ["L1", "L2", "L3", "Mem"].iter().zip(ws) {
+            let ea = sim::simulate_working_set(&m, &add, w / add.bytes_per_iter(), true);
+            let ef = sim::simulate_working_set(&m, &fma, w / fma.bytes_per_iter(), true);
+            t.row([
+                m.shorthand.to_string(),
+                level.to_string(),
+                format!("{:.2}", ea.cy_per_cl),
+                format!("{:.2}", ef.cy_per_cl),
+                format!("{:.2}x", ea.cy_per_cl / ef.cy_per_cl),
+            ]);
+        }
+    }
+    t
+}
+
+/// ACC: the accuracy experiment (error vs condition number).
+pub fn accuracy_table(n: usize, trials: usize) -> Table {
+    let conds = [1e1, 1e4, 1e7, 1e10, 1e13];
+    let rows = crate::accuracy::error_sweep(n, &conds, trials, 2024);
+    let mut t = Table::new(&format!(
+        "Accuracy: median relative error vs condition number (n={n}, {trials} trials, f32)"
+    ))
+    .headers(["algorithm", "cond 1e1", "cond 1e4", "cond 1e7", "cond 1e10", "cond 1e13"]);
+    for (name, _) in crate::accuracy::analysis::algorithm_list() {
+        let mut row = vec![name.to_string()];
+        for &c in &conds {
+            let r = rows
+                .iter()
+                .find(|r| r.algo == name && r.target_cond == c)
+                .expect("row");
+            row.push(format!("{:.2e}", r.median_rel_err));
+        }
+        t.row(row);
+    }
+    t
+}
+
+/// HOST: sweep the host kernels (likwid-bench analog on this machine).
+pub fn host_sweep_table(reps: usize, quick: bool) -> Table {
+    let sizes = if quick {
+        vec![16 * 1024, 256 * 1024, 4 * 1024 * 1024, 48 * 1024 * 1024]
+    } else {
+        crate::bench::sweep::default_sizes()
+    };
+    let kernels: Vec<_> = crate::bench::registry()
+        .into_iter()
+        .filter(|k| k.available && k.prec == Precision::Sp)
+        .collect();
+    let mut t = Table::new("Host sweep: cycles per cache line (TSC cycles)");
+    let mut headers = vec!["WS".to_string()];
+    headers.extend(kernels.iter().map(|k| k.name.to_string()));
+    let mut t2 = std::mem::replace(&mut t, Table::new("")).headers(headers);
+    let series: Vec<Vec<crate::bench::HostSweepPoint>> = kernels
+        .iter()
+        .map(|k| crate::bench::run_sweep(k, &sizes, reps, 7))
+        .collect();
+    for (i, &ws) in sizes.iter().enumerate() {
+        let mut row = vec![fmt::bytes(ws)];
+        for s in &series {
+            row.push(format!("{:.2}", s[i].cy_per_cl));
+        }
+        t2.row(row);
+    }
+    t2
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::machine::presets::ivb;
+
+    #[test]
+    fn table1_shape() {
+        let t = table1();
+        let r = t.render();
+        assert!(r.contains("E5-2690 v2"));
+        assert!(r.contains("D-1540"));
+        assert!(r.contains("3.96")); // SNB T_L3Mem per CL
+    }
+
+    #[test]
+    fn table2_contains_paper_strings() {
+        let r = table2().render();
+        assert!(r.contains("{8 || 4 | 4 | 4 |"), "{r}");
+        assert!(r.contains("{4.40 | 4.40 | 2.93 | 1.68}"), "{r}");
+        assert!(r.contains("{3.60 | 3.60 | 3.60 | 1.80}"), "{r}"); // BDW
+    }
+
+    #[test]
+    fn models_table_has_all_variants() {
+        let r = models_table(&ivb(), Precision::Sp).render();
+        for name in ["naive-AVX-SP", "kahan-scalar-SP", "kahan-SSE-SP", "kahan-AVX-SP", "kahan-compiler-SP"] {
+            assert!(r.contains(name), "missing {name} in\n{r}");
+        }
+        // IVB has no FMA ports -> no FMA row
+        assert!(!r.contains("kahan-fma"));
+    }
+
+    #[test]
+    fn fig2_series_and_table() {
+        let m = ivb();
+        let sizes = vec![16 * 1024, 256 * 1024, 4 * 1024 * 1024];
+        let s = fig2(&m, Precision::Sp, &sizes);
+        assert_eq!(s.len(), 4);
+        let t = fig2_table(&m, &s);
+        assert_eq!(t.n_rows(), sizes.len());
+    }
+
+    #[test]
+    fn fig4a_rows_have_saturation_points() {
+        let rows = fig4a(Precision::Sp);
+        assert_eq!(rows.len(), 4);
+        let ivb_row = rows.iter().find(|r| r.arch == "IVB").unwrap();
+        assert_eq!(ivb_row.n_s, 4);
+        // L1 is ADD-bound everywhere: all four archs show 4 cy/CL
+        for r in &rows {
+            assert!((r.sim_cy_per_cl[0] - 4.0).abs() < 0.5, "{}: {:?}", r.arch, r.sim_cy_per_cl);
+        }
+    }
+
+    #[test]
+    fn fma_study_l1_speedup_present() {
+        let t = fma_study(Precision::Sp).render();
+        assert!(t.contains("HSW"));
+        assert!(t.contains("BDW"));
+    }
+}

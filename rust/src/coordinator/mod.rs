@@ -1,0 +1,14 @@
+//! Layer-3 coordinator: the experiment registry that regenerates every
+//! table/figure of the paper, the validation harness that compares against
+//! the paper's published numbers, reporting, and the batched-dot service
+//! that executes PJRT artifacts (the end-to-end driver's engine).
+
+pub mod ablation;
+pub mod cli;
+pub mod experiments;
+pub mod report;
+pub mod service;
+pub mod validate;
+
+pub use cli::cli_main;
+pub use service::{DotRequest, DotResponse, DotService, ServiceConfig};

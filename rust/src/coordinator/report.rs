@@ -1,0 +1,91 @@
+//! Report output: write experiment tables and CSV series to an output
+//! directory (`out/` by default), mirroring what the paper's plots consume.
+
+use crate::util::csv::write_csv;
+use crate::util::Table;
+use std::path::Path;
+
+/// Write a rendered table to `<dir>/<name>.txt` and markdown to `.md`.
+pub fn save_table(dir: &Path, name: &str, table: &Table) -> std::io::Result<()> {
+    std::fs::create_dir_all(dir)?;
+    std::fs::write(dir.join(format!("{name}.txt")), table.render())?;
+    std::fs::write(dir.join(format!("{name}.md")), table.render_markdown())?;
+    Ok(())
+}
+
+/// Write Fig. 2-style sweep series as CSV: ws_bytes, then one column per
+/// series.
+pub fn save_sweep_csv(
+    dir: &Path,
+    name: &str,
+    series: &[super::experiments::SweepSeries],
+) -> std::io::Result<()> {
+    let mut header = vec!["ws_bytes".to_string()];
+    header.extend(series.iter().map(|s| s.kernel.clone()));
+    let header_refs: Vec<&str> = header.iter().map(String::as_str).collect();
+    let n = series.first().map(|s| s.points.len()).unwrap_or(0);
+    let mut rows = Vec::with_capacity(n);
+    for i in 0..n {
+        let mut row = vec![series[0].points[i].ws_bytes.to_string()];
+        for s in series {
+            row.push(format!("{:.4}", s.points[i].cy_per_cl));
+        }
+        rows.push(row);
+    }
+    write_csv(dir.join(format!("{name}.csv")), &header_refs, &rows)
+}
+
+/// Write scaling series (Fig. 3 / 4b) as CSV: cores, then sim and model
+/// columns per kernel.
+pub fn save_scaling_csv(
+    dir: &Path,
+    name: &str,
+    series: &[super::experiments::ScalingSeries],
+) -> std::io::Result<()> {
+    let mut header = vec!["cores".to_string()];
+    for s in series {
+        header.push(format!("{}_sim", s.kernel));
+        header.push(format!("{}_model", s.kernel));
+    }
+    let header_refs: Vec<&str> = header.iter().map(String::as_str).collect();
+    let n = series.first().map(|s| s.sim.len()).unwrap_or(0);
+    let mut rows = Vec::with_capacity(n);
+    for i in 0..n {
+        let mut row = vec![(i + 1).to_string()];
+        for s in series {
+            row.push(format!("{:.4}", s.sim[i].gups));
+            row.push(format!("{:.4}", s.model[i].gups));
+        }
+        rows.push(row);
+    }
+    write_csv(dir.join(format!("{name}.csv")), &header_refs, &rows)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::Precision;
+    use crate::machine::presets::ivb;
+
+    #[test]
+    fn save_table_writes_both_formats() {
+        let dir = std::env::temp_dir().join("kahan_ecm_report_test");
+        let mut t = Table::new("t").headers(["a"]);
+        t.row(["1"]);
+        save_table(&dir, "x", &t).unwrap();
+        assert!(dir.join("x.txt").exists());
+        assert!(dir.join("x.md").exists());
+    }
+
+    #[test]
+    fn sweep_csv_roundtrip() {
+        let dir = std::env::temp_dir().join("kahan_ecm_report_sweep");
+        let m = ivb();
+        let series =
+            super::super::experiments::fig2(&m, Precision::Sp, &[16 * 1024, 64 * 1024]);
+        save_sweep_csv(&dir, "fig2", &series).unwrap();
+        let text = std::fs::read_to_string(dir.join("fig2.csv")).unwrap();
+        assert!(text.starts_with("ws_bytes,"));
+        assert_eq!(text.lines().count(), 3);
+    }
+}

@@ -1,0 +1,372 @@
+//! Batched dot service: the request-path component that executes AOT
+//! artifacts via PJRT with dynamic batching — the engine behind the
+//! end-to-end example (`examples/e2e_serve.rs`).
+//!
+//! Architecture (std-only; the offline container has no tokio):
+//! * callers submit `DotRequest`s over an mpsc channel and receive their
+//!   `DotResponse` on a per-request return channel;
+//! * one worker thread owns the PJRT `Runtime` (executables are not shared
+//!   across threads), drains the queue with a batching window, groups
+//!   compatible requests (same variant, fits the batched artifact), and
+//!   executes them in one PJRT call when possible;
+//! * Python is never involved: this is the "self-contained rust binary"
+//!   property of the three-layer design.
+
+use crate::runtime::Runtime;
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+/// Message to the worker: a request or an explicit shutdown (needed
+/// because `DotClient` clones keep the channel alive — dropping the
+/// service's own sender alone would never disconnect the worker).
+enum Msg {
+    Req(DotRequest),
+    Shutdown,
+}
+
+/// A dot-product request.
+pub struct DotRequest {
+    pub id: u64,
+    /// "kahan" or "naive"
+    pub variant: &'static str,
+    pub a: Vec<f32>,
+    pub b: Vec<f32>,
+    reply: mpsc::Sender<DotResponse>,
+}
+
+/// The service's answer.
+#[derive(Clone, Debug)]
+pub struct DotResponse {
+    pub id: u64,
+    pub value: Result<f32, String>,
+    /// how many requests shared the PJRT call that served this one
+    pub batch_size: usize,
+    /// queue + execute time
+    pub latency: Duration,
+}
+
+/// Service configuration.
+#[derive(Clone, Debug)]
+pub struct ServiceConfig {
+    /// max requests fused into one batched execute
+    pub max_batch: usize,
+    /// how long the batcher waits to fill a batch
+    pub window: Duration,
+    /// name of the batched artifact to use (must exist in the manifest)
+    pub batched_artifact_kahan: String,
+    pub batched_artifact_naive: String,
+    /// single-request fallback artifacts
+    pub single_artifact_kahan: String,
+    pub single_artifact_naive: String,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> Self {
+        ServiceConfig {
+            max_batch: 8,
+            window: Duration::from_millis(2),
+            batched_artifact_kahan: "batched_dot_kahan_f32_b8_n16384".into(),
+            batched_artifact_naive: "batched_dot_naive_f32_b8_n16384".into(),
+            single_artifact_kahan: "dot_kahan_f32_n65536".into(),
+            single_artifact_naive: "dot_naive_f32_n65536".into(),
+        }
+    }
+}
+
+/// Aggregate service statistics.
+#[derive(Clone, Debug, Default)]
+pub struct ServiceStats {
+    pub requests: u64,
+    pub pjrt_calls: u64,
+    pub batched_calls: u64,
+    pub errors: u64,
+}
+
+/// Handle to a running service.
+pub struct DotService {
+    tx: Option<mpsc::Sender<Msg>>,
+    worker: Option<std::thread::JoinHandle<ServiceStats>>,
+}
+
+/// Client-side handle for submitting requests.
+#[derive(Clone)]
+pub struct DotClient {
+    tx: mpsc::Sender<Msg>,
+}
+
+impl DotClient {
+    /// Submit a request; returns the receiver for its response.
+    pub fn submit(
+        &self,
+        id: u64,
+        variant: &'static str,
+        a: Vec<f32>,
+        b: Vec<f32>,
+    ) -> mpsc::Receiver<DotResponse> {
+        let (reply, rx) = mpsc::channel();
+        let req = DotRequest { id, variant, a, b, reply };
+        // a send error means the service stopped; the caller sees it as a
+        // disconnected receiver
+        let _ = self.tx.send(Msg::Req(req));
+        rx
+    }
+
+    /// Convenience: blocking round-trip.
+    pub fn dot_blocking(&self, variant: &'static str, a: Vec<f32>, b: Vec<f32>) -> Result<f32, String> {
+        let rx = self.submit(0, variant, a, b);
+        match rx.recv() {
+            Ok(resp) => resp.value,
+            Err(_) => Err("service stopped".into()),
+        }
+    }
+}
+
+impl DotService {
+    /// Start the worker thread with its own PJRT runtime.
+    ///
+    /// PJRT handles are not `Send`, so the `Runtime` must be constructed
+    /// *inside* the worker thread; startup errors are relayed back through a
+    /// one-shot channel so callers still see them synchronously.
+    pub fn start(config: ServiceConfig) -> anyhow::Result<(Self, DotClient)> {
+        let (tx, rx) = mpsc::channel::<Msg>();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<(), String>>();
+        let worker = std::thread::spawn(move || match Runtime::new() {
+            Ok(rt) => {
+                let _ = ready_tx.send(Ok(()));
+                worker_loop(rt, rx, config)
+            }
+            Err(e) => {
+                let _ = ready_tx.send(Err(e.to_string()));
+                ServiceStats::default()
+            }
+        });
+        match ready_rx.recv() {
+            Ok(Ok(())) => {}
+            Ok(Err(e)) => {
+                let _ = worker.join();
+                anyhow::bail!("service startup: {e}");
+            }
+            Err(_) => {
+                let _ = worker.join();
+                anyhow::bail!("service worker died during startup");
+            }
+        }
+        let client = DotClient { tx: tx.clone() };
+        Ok((DotService { tx: Some(tx), worker: Some(worker) }, client))
+    }
+
+    /// Stop the service and return its statistics.
+    pub fn stop(mut self) -> ServiceStats {
+        if let Some(tx) = self.tx.take() {
+            let _ = tx.send(Msg::Shutdown);
+        }
+        self.worker.take().map(|w| w.join().unwrap_or_default()).unwrap_or_default()
+    }
+}
+
+impl Drop for DotService {
+    fn drop(&mut self) {
+        if let Some(tx) = self.tx.take() {
+            let _ = tx.send(Msg::Shutdown);
+        }
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+struct Pending {
+    req: DotRequest,
+    arrived: Instant,
+}
+
+fn worker_loop(
+    mut rt: Runtime,
+    rx: mpsc::Receiver<Msg>,
+    cfg: ServiceConfig,
+) -> ServiceStats {
+    let mut shutdown = false;
+    let mut stats = ServiceStats::default();
+    let batched_max_n = rt
+        .manifest()
+        .get(&cfg.batched_artifact_kahan)
+        .map(|m| m.n)
+        .unwrap_or(0);
+
+    while !shutdown {
+        // block for the first request
+        let first = match rx.recv() {
+            Ok(Msg::Req(r)) => r,
+            Ok(Msg::Shutdown) | Err(_) => break,
+        };
+        let mut queue = vec![Pending { req: first, arrived: Instant::now() }];
+        // batching window: gather more requests
+        let deadline = Instant::now() + cfg.window;
+        while queue.len() < cfg.max_batch {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match rx.recv_timeout(deadline - now) {
+                Ok(Msg::Req(r)) => queue.push(Pending { req: r, arrived: Instant::now() }),
+                Ok(Msg::Shutdown) => {
+                    // serve what we already accepted, then exit
+                    shutdown = true;
+                    break;
+                }
+                Err(mpsc::RecvTimeoutError::Timeout) => break,
+                Err(mpsc::RecvTimeoutError::Disconnected) => break,
+            }
+        }
+
+        // group by variant; batch-execute groups where every request fits
+        for variant in ["kahan", "naive"] {
+            let group: Vec<Pending> = {
+                let mut g = Vec::new();
+                let mut rest = Vec::new();
+                for p in queue.drain(..) {
+                    if p.req.variant == variant {
+                        g.push(p);
+                    } else {
+                        rest.push(p);
+                    }
+                }
+                queue = rest;
+                g
+            };
+            if group.is_empty() {
+                continue;
+            }
+            let (batched_name, single_name) = if variant == "kahan" {
+                (&cfg.batched_artifact_kahan, &cfg.single_artifact_kahan)
+            } else {
+                (&cfg.batched_artifact_naive, &cfg.single_artifact_naive)
+            };
+
+            let fits = group.len() >= 2
+                && batched_max_n > 0
+                && group.iter().all(|p| p.req.a.len() <= batched_max_n);
+            if fits {
+                stats.pjrt_calls += 1;
+                stats.batched_calls += 1;
+                let pairs: Vec<(Vec<f32>, Vec<f32>)> =
+                    group.iter().map(|p| (p.req.a.clone(), p.req.b.clone())).collect();
+                match rt.batched_dot_f32(batched_name, &pairs) {
+                    Ok(values) => {
+                        let bsz = group.len();
+                        for (p, v) in group.into_iter().zip(values) {
+                            stats.requests += 1;
+                            let _ = p.req.reply.send(DotResponse {
+                                id: p.req.id,
+                                value: Ok(v),
+                                batch_size: bsz,
+                                latency: p.arrived.elapsed(),
+                            });
+                        }
+                    }
+                    Err(e) => {
+                        stats.errors += 1;
+                        for p in group {
+                            stats.requests += 1;
+                            let _ = p.req.reply.send(DotResponse {
+                                id: p.req.id,
+                                value: Err(format!("batched execute: {e}")),
+                                batch_size: 0,
+                                latency: p.arrived.elapsed(),
+                            });
+                        }
+                    }
+                }
+            } else {
+                for p in group {
+                    stats.requests += 1;
+                    stats.pjrt_calls += 1;
+                    let value = rt
+                        .dot_f32(single_name, &p.req.a, &p.req.b)
+                        .map_err(|e| e.to_string());
+                    if value.is_err() {
+                        stats.errors += 1;
+                    }
+                    let _ = p.req.reply.send(DotResponse {
+                        id: p.req.id,
+                        value,
+                        batch_size: 1,
+                        latency: p.arrived.elapsed(),
+                    });
+                }
+            }
+        }
+    }
+    stats
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::accuracy::exact::exact_dot_f32;
+    use crate::util::Rng;
+
+    fn artifacts_present() -> bool {
+        crate::runtime::artifacts_dir().join("manifest.tsv").exists()
+    }
+
+    #[test]
+    fn service_round_trip_and_batching() {
+        if !artifacts_present() {
+            eprintln!("skipping: no artifacts");
+            return;
+        }
+        let (svc, client) = DotService::start(ServiceConfig::default()).unwrap();
+        let mut rng = Rng::new(5);
+        let n = 2048;
+        // submit a burst so the batcher can fuse them
+        let mut expected = Vec::new();
+        let mut rxs = Vec::new();
+        for i in 0..6u64 {
+            let a = rng.normal_f32_vec(n);
+            let b = rng.normal_f32_vec(n);
+            expected.push(exact_dot_f32(&a, &b));
+            rxs.push(client.submit(i, "kahan", a, b));
+        }
+        let mut batched_seen = false;
+        for (i, rx) in rxs.into_iter().enumerate() {
+            let resp = rx.recv().expect("response");
+            assert_eq!(resp.id, i as u64);
+            let v = resp.value.expect("value") as f64;
+            assert!((v - expected[i]).abs() < 1e-2, "req {i}: {v} vs {}", expected[i]);
+            batched_seen |= resp.batch_size > 1;
+        }
+        let stats = svc.stop();
+        assert_eq!(stats.requests, 6);
+        assert!(stats.errors == 0);
+        assert!(batched_seen, "burst of 6 should have batched at least once");
+        assert!(stats.pjrt_calls < 6, "batching must reduce PJRT calls: {stats:?}");
+    }
+
+    #[test]
+    fn naive_and_kahan_variants_route_correctly() {
+        if !artifacts_present() {
+            return;
+        }
+        let (svc, client) = DotService::start(ServiceConfig::default()).unwrap();
+        let a = vec![1.0f32; 100];
+        let b = vec![2.0f32; 100];
+        let vk = client.dot_blocking("kahan", a.clone(), b.clone()).unwrap();
+        let vn = client.dot_blocking("naive", a, b).unwrap();
+        assert_eq!(vk, 200.0);
+        assert_eq!(vn, 200.0);
+        svc.stop();
+    }
+
+    #[test]
+    fn oversized_request_errors_cleanly() {
+        if !artifacts_present() {
+            return;
+        }
+        let (svc, client) = DotService::start(ServiceConfig::default()).unwrap();
+        let big = vec![0.0f32; 1 << 21]; // 2M > 65536 and > batched n
+        let r = client.dot_blocking("kahan", big.clone(), big);
+        assert!(r.is_err());
+        svc.stop();
+    }
+}

@@ -1,0 +1,165 @@
+//! Validation harness: every number the paper prints, compared against what
+//! this reproduction generates — the machine-checkable form of
+//! EXPERIMENTS.md.
+
+use crate::ecm;
+use crate::isa::{generate, Precision, Simd, Variant};
+use crate::machine::presets::*;
+use crate::sim;
+
+/// One validation check.
+#[derive(Clone, Debug)]
+pub struct Check {
+    pub name: String,
+    pub expected: f64,
+    pub got: f64,
+    /// relative tolerance
+    pub tol: f64,
+}
+
+impl Check {
+    pub fn pass(&self) -> bool {
+        if self.expected == 0.0 {
+            return self.got.abs() <= self.tol;
+        }
+        ((self.got - self.expected) / self.expected).abs() <= self.tol
+    }
+}
+
+fn check(name: impl Into<String>, expected: f64, got: f64, tol: f64) -> Check {
+    Check { name: name.into(), expected, got, tol }
+}
+
+/// Run every paper-number validation; returns all checks (pass/fail).
+pub fn run_all() -> Vec<Check> {
+    let mut cs: Vec<Check> = Vec::new();
+
+    // ---- Eq. 2: naive AVX SP on IVB ----
+    let m = ivb();
+    let naive = generate(Variant::Naive, Simd::Avx, Precision::Sp, 0);
+    let e = ecm::build(&m, &naive, true);
+    for (i, want) in [8.80, 4.40, 2.93, 1.68].iter().enumerate() {
+        cs.push(check(format!("Eq2 naive-AVX IVB perf level {i}"), *want, e.perf_gups(i), 0.01));
+    }
+    cs.push(check("naive IVB n_S", 4.0, e.saturation_cores() as f64, 0.0));
+    cs.push(check("naive IVB roofline P_BW", 5.76, e.roofline_gups(), 0.01));
+
+    // ---- §3 scalar/SSE predictions on IVB ----
+    let scalar = generate(Variant::Kahan, Simd::Scalar, Precision::Sp, 0);
+    let e = ecm::build(&m, &scalar, true);
+    cs.push(check("kahan-scalar IVB flat cycles", 64.0, e.prediction(3), 0.001));
+    cs.push(check("kahan-scalar IVB perf", 0.55, e.perf_gups(0), 0.01));
+    cs.push(check("kahan-scalar IVB n_S", 11.0, e.saturation_cores() as f64, 0.0));
+    let sse = generate(Variant::Kahan, Simd::Sse, Precision::Sp, 0);
+    let e = ecm::build(&m, &sse, true);
+    cs.push(check("kahan-SSE IVB L1..L3 cycles", 16.0, e.prediction(2), 0.001));
+    cs.push(check("kahan-SSE IVB perf L1", 2.20, e.perf_gups(0), 0.01));
+
+    // ---- DP scalar on IVB ----
+    let dp = generate(Variant::Kahan, Simd::Scalar, Precision::Dp, 0);
+    let e = ecm::build(&m, &dp, true);
+    cs.push(check("kahan-scalar DP IVB cycles", 32.0, e.prediction(3), 0.001));
+    cs.push(check("kahan-scalar DP IVB n_S", 6.0, e.saturation_cores() as f64, 0.0));
+    cs.push(check("DP roofline", 2.88, e.roofline_gups(), 0.01));
+
+    // ---- Table 2: AVX Kahan across machines ----
+    let k = generate(Variant::Kahan, Simd::Avx, Precision::Sp, 0);
+    let rows: [(&str, crate::machine::Machine, [f64; 4], [f64; 4]); 4] = [
+        ("SNB", snb(), [8.0, 8.0, 12.0, 25.0], [5.40, 5.40, 3.60, 1.73]),
+        ("IVB", ivb(), [8.0, 8.0, 12.0, 21.0], [4.40, 4.40, 2.93, 1.68]),
+        ("HSW", hsw(), [8.0, 8.0, 9.54, 25.54], [4.60, 4.60, 3.86, 1.44]),
+        ("BDW", bdw(), [8.0, 8.0, 8.0, 16.0], [3.60, 3.60, 3.60, 1.80]),
+    ];
+    for (name, mach, cy, perf) in rows {
+        let e = ecm::build(&mach, &k, true);
+        for i in 0..4 {
+            cs.push(check(format!("T2 {name} cycles level {i}"), cy[i], e.prediction(i), 0.01));
+            cs.push(check(format!("T2 {name} perf level {i}"), perf[i], e.perf_gups(i), 0.01));
+        }
+    }
+
+    // ---- §4 FMA claim: ~20% in L1, none beyond (model) ----
+    let mh = hsw();
+    let add = ecm::build(&mh, &generate(Variant::Kahan, Simd::Avx, Precision::Sp, 0), true);
+    let fma = ecm::build(&mh, &generate(Variant::KahanFma, Simd::Avx, Precision::Sp, 0), true);
+    cs.push(check("FMA L1 speedup (HSW)", 1.20, add.prediction(0) / fma.prediction(0), 0.05));
+    cs.push(check("FMA mem speedup (HSW)", 1.00, add.prediction(3) / fma.prediction(3), 0.02));
+
+    // ---- headline (simulated measurement): Kahan AVX / naive AVX ----
+    let kavx = generate(Variant::Kahan, Simd::Avx, Precision::Sp, 0);
+    let l2 = 128 * 1024u64;
+    let mem = 512 * 1024 * 1024u64;
+    let l1 = 16 * 1024u64;
+    let r = |kern: &crate::isa::KernelDesc, ws: u64| {
+        sim::simulate_working_set(&m, kern, ws / kern.bytes_per_iter(), true).cy_per_cl
+    };
+    cs.push(check("headline: kahan/naive in L2", 1.0, r(&kavx, l2) / r(&naive, l2), 0.08));
+    cs.push(check("headline: kahan/naive in mem", 1.0, r(&kavx, mem) / r(&naive, mem), 0.05));
+    cs.push(check("headline: kahan/naive in L1", 2.0, r(&kavx, l1) / r(&naive, l1), 0.15));
+
+    // ---- scaling (simulated): saturation points ----
+    let elems = 64 * 1024 * 1024u64;
+    let pts = sim::simulate_scaling(&m, &kavx, elems, m.cores);
+    cs.push(check(
+        "Fig3a AVX observed saturation cores",
+        4.0,
+        sim::multicore::observed_saturation(&pts) as f64,
+        0.3,
+    ));
+    cs.push(check("Fig3a AVX saturated GUP/s", 5.76, pts.last().unwrap().gups, 0.05));
+    let dp_pts = sim::simulate_scaling(&m, &dp, elems, m.cores);
+    cs.push(check(
+        "Fig3b DP scalar observed saturation",
+        6.0,
+        sim::multicore::observed_saturation(&dp_pts) as f64,
+        0.2,
+    ));
+
+    cs
+}
+
+/// Render the checks as a report table; returns (table, all_passed).
+pub fn report() -> (crate::util::Table, bool) {
+    let checks = run_all();
+    let mut t = crate::util::Table::new("Validation: paper-published numbers vs this reproduction")
+        .headers(["check", "paper", "ours", "rel.err", "ok"]);
+    let mut all = true;
+    for c in &checks {
+        let rel = if c.expected != 0.0 { (c.got - c.expected) / c.expected } else { c.got };
+        all &= c.pass();
+        t.row([
+            c.name.clone(),
+            format!("{:.4}", c.expected),
+            format!("{:.4}", c.got),
+            format!("{:+.2}%", rel * 100.0),
+            if c.pass() { "PASS".into() } else { "FAIL".to_string() },
+        ]);
+    }
+    (t, all)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The single most important test in the repository: every number the
+    /// paper publishes is reproduced within tolerance.
+    #[test]
+    fn all_paper_numbers_validate() {
+        let checks = run_all();
+        assert!(checks.len() > 50, "expected a thorough check list, got {}", checks.len());
+        let failed: Vec<String> = checks
+            .iter()
+            .filter(|c| !c.pass())
+            .map(|c| format!("{}: want {} got {:.4}", c.name, c.expected, c.got))
+            .collect();
+        assert!(failed.is_empty(), "failed checks:\n{}", failed.join("\n"));
+    }
+
+    #[test]
+    fn check_pass_logic() {
+        assert!(check("x", 1.0, 1.005, 0.01).pass());
+        assert!(!check("x", 1.0, 1.02, 0.01).pass());
+        assert!(check("zero", 0.0, 0.0005, 0.001).pass());
+    }
+}

@@ -1,0 +1,15 @@
+//! The Execution–Cache–Memory (ECM) analytic performance model
+//! (Treibig & Hager [9], Hager et al. [10], Stengel et al. [11]), as used by
+//! the paper to predict single-core cycles per work unit in every memory
+//! level and the multicore saturation point.
+//!
+//! Inputs are a `crate::machine::Machine` (Table 1) and a
+//! `crate::isa::KernelDesc` (the generated instruction stream), so the model
+//! is *derived from the kernel*, never hand-entered.
+
+pub mod model;
+pub mod notation;
+pub mod scaling;
+
+pub use model::{build, EcmModel};
+pub use scaling::{saturation_cores, scale_performance, ScalingCurve};

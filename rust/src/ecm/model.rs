@@ -1,0 +1,327 @@
+//! Core ECM computation: in-core times (T_OL, T_nOL) from port scheduling of
+//! the kernel's instruction stream, transfer times from the machine's bus
+//! widths and bandwidths, and the overlap rule of Eq. (1).
+
+use crate::isa::{KernelDesc, Op, Variant};
+use crate::machine::Machine;
+
+/// ECM model terms for one kernel on one machine, all in cycles per **unit
+/// of work** (one cache line per stream; 16 SP / 8 DP iterations).
+#[derive(Clone, Debug)]
+pub struct EcmModel {
+    /// core cycles that overlap with transfers (FP work)
+    pub t_ol: f64,
+    /// core cycles that do NOT overlap (load/store retirement)
+    pub t_nol: f64,
+    /// transfer cycles L2→L1 per unit
+    pub t_l1l2: f64,
+    /// transfer cycles L3→L2 per unit
+    pub t_l2l3: f64,
+    /// memory→L3 transfer cycles per unit at load-only bandwidth
+    pub t_l3mem_bw: f64,
+    /// the paper's empirical latency penalty per unit
+    pub t_l3mem_penalty: f64,
+    /// iterations per unit (for performance conversion)
+    pub iters_per_unit: f64,
+    /// machine clock in GHz
+    pub clock_ghz: f64,
+    /// bytes of input consumed per iteration (intensity denominator)
+    pub bytes_per_iter: f64,
+    /// memory load bandwidth GB/s (roofline numerator)
+    pub load_bw_gbs: f64,
+}
+
+/// Memory-hierarchy levels for predictions (index into `predictions()`).
+pub const LEVELS: [&str; 4] = ["L1", "L2", "L3", "Mem"];
+
+/// In-core FP time from port throughput plus the loop-carried chain bound.
+fn t_ol(machine: &Machine, k: &KernelDesc) -> f64 {
+    let units = k.units_per_stream_pass as f64;
+    let mut adds = 0.0;
+    let mut muls = 0.0;
+    let mut fmas = 0.0;
+    for i in &k.insts {
+        match i.op {
+            Op::Add => adds += 1.0,
+            Op::Mul => muls += 1.0,
+            Op::Fma => fmas += 1.0,
+            _ => {}
+        }
+    }
+    adds /= units;
+    muls /= units;
+    fmas /= units;
+
+    let c = &machine.core;
+    let mut t = 0.0f64;
+    if adds > 0.0 {
+        t = t.max(adds / c.add_ports as f64);
+    }
+    if c.fma_ports > 0 {
+        // MULs and FMAs share the FMA pipes; stand-alone ADDs are restricted
+        // to the (single) ADD-capable pipe but also occupy FMA-pipe slots
+        t = t.max((adds + muls + fmas) / c.fma_ports as f64);
+    } else {
+        if muls > 0.0 {
+            t = t.max(muls / c.mul_ports as f64);
+        }
+        if fmas > 0.0 {
+            // no FMA hardware: treat as mul-pipe ops (compat fallback)
+            t = t.max(fmas / c.mul_ports as f64);
+        }
+    }
+
+    // loop-carried dependency bound: each accumulator slot's chain advances
+    // one vector iteration per chain_ops * latency cycles
+    let lanes = k.simd.lanes(k.elem_bytes) as f64;
+    let vec_per_unit = k.iters_per_unit as f64 / lanes;
+    let lat = match k.variant {
+        Variant::KahanFma => c.fma_latency,
+        _ => c.add_latency,
+    } as f64;
+    let t_chain = vec_per_unit * k.carried_chain_ops as f64 * lat / k.slots as f64;
+
+    t.max(t_chain)
+}
+
+/// Non-overlapping core time: cycles the load/store ports are busy.
+fn t_nol(machine: &Machine, k: &KernelDesc) -> f64 {
+    let units = k.units_per_stream_pass as f64;
+    let c = &machine.core;
+    let mut load_slots = 0.0;
+    let mut store_slots = 0.0;
+    for i in &k.insts {
+        match i.op {
+            Op::Load => load_slots += c.slots(crate::machine::Unit::Load, i.width_bytes),
+            Op::Store => store_slots += c.slots(crate::machine::Unit::Store, i.width_bytes),
+            _ => {}
+        }
+    }
+    let t_load = load_slots / units / c.load_ports as f64;
+    let t_store = store_slots / units / c.store_ports as f64;
+    t_load.max(t_store)
+}
+
+/// Build the ECM model for `kernel` on `machine`.
+///
+/// `single_core` selects the Uncore clock behaviour (paper: HSW stretches
+/// T_L2L3 to 5.54 cy when only one core is active).
+pub fn build(machine: &Machine, kernel: &KernelDesc, single_core: bool) -> EcmModel {
+    // transfers count reads plus write-backs (axpy-style kernels move the
+    // written stream's line both ways across every boundary)
+    let cls = kernel.cl_transfers_per_unit() as f64;
+    EcmModel {
+        t_ol: t_ol(machine, kernel),
+        t_nol: t_nol(machine, kernel),
+        t_l1l2: cls * machine.t_cache_per_cl(1, single_core),
+        t_l2l3: cls * machine.t_cache_per_cl(2, single_core),
+        t_l3mem_bw: cls * machine.t_l3mem_per_cl(),
+        t_l3mem_penalty: cls * machine.memory.latency_penalty_cy_per_cl,
+        iters_per_unit: kernel.iters_per_unit as f64,
+        clock_ghz: machine.clock_ghz,
+        bytes_per_iter: kernel.traffic_bytes_per_iter() as f64,
+        load_bw_gbs: machine.memory.load_bw_gbs,
+    }
+}
+
+impl EcmModel {
+    /// Data-transfer terms in level order (L2→L1, L3→L2, Mem→L3 incl.
+    /// penalty).
+    fn transfer_terms(&self) -> [f64; 3] {
+        [self.t_l1l2, self.t_l2l3, self.t_l3mem_bw + self.t_l3mem_penalty]
+    }
+
+    /// Eq. (1): T_ECM for data resident in `level` (0 = L1 .. 3 = Mem).
+    pub fn prediction(&self, level: usize) -> f64 {
+        let t_data: f64 = self.transfer_terms().iter().take(level).sum();
+        (self.t_nol + t_data).max(self.t_ol)
+    }
+
+    /// Cycle predictions for all four residence levels.
+    pub fn predictions(&self) -> [f64; 4] {
+        [self.prediction(0), self.prediction(1), self.prediction(2), self.prediction(3)]
+    }
+
+    /// Convert a cycle prediction to GUP/s ("updates" = iterations, the
+    /// paper's unit of work; Eq. (2)).
+    pub fn perf_gups(&self, level: usize) -> f64 {
+        self.iters_per_unit * self.clock_ghz / self.prediction(level)
+    }
+
+    pub fn perf_all(&self) -> [f64; 4] {
+        [self.perf_gups(0), self.perf_gups(1), self.perf_gups(2), self.perf_gups(3)]
+    }
+
+    /// Roofline memory-bandwidth light speed in GUP/s:
+    /// P_BW = (1 update / bytes_per_iter) * b_S.
+    pub fn roofline_gups(&self) -> f64 {
+        self.load_bw_gbs / self.bytes_per_iter
+    }
+
+    /// Saturation point n_S = ceil(T_ECM^mem / T_L3Mem), where the divisor
+    /// uses the *bandwidth-only* term (paper §2: "the maximum memory
+    /// bandwidth has to be taken into account for the saturation point").
+    pub fn saturation_cores(&self) -> u32 {
+        (self.prediction(3) / self.t_l3mem_bw).ceil() as u32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::{generate, Precision, Simd, Variant};
+    use crate::machine::presets::*;
+
+    fn approx(a: f64, b: f64, tol: f64) -> bool {
+        (a - b).abs() <= tol
+    }
+
+    /// §3: naive AVX on IVB = {2 || 4 | 4 | 4 | 6.1 + 2.9} cy,
+    /// prediction {4 | 8 | 12 | 18.1 + 2.9} cy, perf {8.80|4.40|2.93|1.68}.
+    #[test]
+    fn naive_avx_ivb_matches_paper() {
+        let m = ivb();
+        let k = generate(Variant::Naive, Simd::Avx, Precision::Sp, 0);
+        let e = build(&m, &k, true);
+        assert_eq!(e.t_ol, 2.0);
+        assert_eq!(e.t_nol, 4.0);
+        assert_eq!(e.t_l1l2, 4.0);
+        assert_eq!(e.t_l2l3, 4.0);
+        assert!(approx(e.t_l3mem_bw, 6.1, 0.05), "{}", e.t_l3mem_bw);
+        assert!(approx(e.t_l3mem_penalty, 2.9, 0.01));
+        let p = e.predictions();
+        assert_eq!(p[0], 4.0);
+        assert_eq!(p[1], 8.0);
+        assert_eq!(p[2], 12.0);
+        assert!(approx(p[3], 21.0, 0.1));
+        let perf = e.perf_all();
+        assert!(approx(perf[0], 8.80, 0.01));
+        assert!(approx(perf[1], 4.40, 0.01));
+        assert!(approx(perf[2], 2.93, 0.01));
+        assert!(approx(perf[3], 1.68, 0.01));
+        assert_eq!(e.saturation_cores(), 4);
+        assert!(approx(e.roofline_gups(), 5.76, 0.01));
+    }
+
+    /// §3 scalar Kahan on IVB: {64 || 16 | 4 | 4 | 6.1 + 2.9} cy,
+    /// prediction flat 64 cy, P = 0.55 GUP/s, n_S = 11.
+    #[test]
+    fn kahan_scalar_ivb_matches_paper() {
+        let m = ivb();
+        let k = generate(Variant::Kahan, Simd::Scalar, Precision::Sp, 0);
+        let e = build(&m, &k, true);
+        assert_eq!(e.t_ol, 64.0);
+        assert_eq!(e.t_nol, 16.0);
+        assert_eq!(e.predictions(), [64.0, 64.0, 64.0, 64.0]);
+        assert!(approx(e.perf_gups(3), 0.55, 0.01));
+        assert_eq!(e.saturation_cores(), 11);
+    }
+
+    /// §3 SSE Kahan on IVB: {16 || 4 | 4 | 4 | 6.1+2.9}, pred {16|16|16|21}.
+    #[test]
+    fn kahan_sse_ivb_matches_paper() {
+        let e = build(&ivb(), &generate(Variant::Kahan, Simd::Sse, Precision::Sp, 0), true);
+        assert_eq!(e.t_ol, 16.0);
+        assert_eq!(e.t_nol, 4.0);
+        let p = e.predictions();
+        assert_eq!(p[0], 16.0);
+        assert_eq!(p[1], 16.0);
+        assert_eq!(p[2], 16.0);
+        assert!(approx(p[3], 21.0, 0.1));
+        assert!(approx(e.perf_gups(0), 2.20, 0.01));
+    }
+
+    /// Table 2, row by row: AVX Kahan on all four machines.
+    #[test]
+    fn table2_avx_kahan_all_machines() {
+        let k = generate(Variant::Kahan, Simd::Avx, Precision::Sp, 0);
+
+        // SNB {8 || 4 | 4 | 4 | 7.9 + 5.1} -> {8 | 8 | 12 | 19.9 + 5.1}
+        let e = build(&snb(), &k, true);
+        assert_eq!(e.t_ol, 8.0);
+        assert_eq!(e.t_nol, 4.0);
+        assert!(approx(e.t_l3mem_bw, 7.9, 0.05));
+        assert!(approx(e.t_l3mem_penalty, 5.1, 0.01));
+        assert!(approx(e.prediction(3), 25.0, 0.1));
+        let p = e.perf_all();
+        for (got, want) in p.iter().zip([5.40, 5.40, 3.60, 1.73]) {
+            assert!(approx(*got, want, 0.01), "SNB {got} vs {want}");
+        }
+
+        // IVB {8 || 4 | 4 | 4 | 6.1 + 2.9} -> perf {4.40|4.40|2.93|1.68}
+        let e = build(&ivb(), &k, true);
+        for (got, want) in e.perf_all().iter().zip([4.40, 4.40, 2.93, 1.68]) {
+            assert!(approx(*got, want, 0.01), "IVB {got} vs {want}");
+        }
+        assert_eq!(e.saturation_cores(), 4);
+
+        // HSW {8 || 2 | 2 | 5.54 | 4.9 + 11.1} -> {8 | 8 | 9.54 | 14.44+11.1}
+        let e = build(&hsw(), &k, true);
+        assert_eq!(e.t_ol, 8.0);
+        assert_eq!(e.t_nol, 2.0);
+        assert_eq!(e.t_l1l2, 2.0);
+        assert!(approx(e.t_l2l3, 5.54, 0.01));
+        assert!(approx(e.t_l3mem_bw, 4.86, 0.05));
+        assert!(approx(e.t_l3mem_penalty, 11.1, 0.01));
+        assert!(approx(e.prediction(2), 9.54, 0.01));
+        assert!(approx(e.prediction(3), 25.54, 0.15));
+        for (got, want) in e.perf_all().iter().zip([4.60, 4.60, 3.86, 1.44]) {
+            assert!(approx(*got, want, 0.01), "HSW {got} vs {want}");
+        }
+
+        // BDW {8 || 2 | 2 | 4 | 7 + 1} -> {8 | 8 | 8 | 15 + 1}
+        let e = build(&bdw(), &k, false);
+        assert_eq!(e.t_ol, 8.0);
+        assert_eq!(e.t_nol, 2.0);
+        assert_eq!(e.t_l2l3, 4.0);
+        assert!(approx(e.t_l3mem_bw, 6.98, 0.05));
+        assert!(approx(e.t_l3mem_penalty, 1.0, 0.01));
+        assert!(approx(e.prediction(3), 16.0, 0.1));
+        for (got, want) in e.perf_all().iter().zip([3.60, 3.60, 3.60, 1.80]) {
+            assert!(approx(*got, want, 0.01), "BDW {got} vs {want}");
+        }
+    }
+
+    /// §3 "Double vs single precision": DP scalar Kahan on IVB is
+    /// {32 || 8 | 4 | 4 | 6.1 + 2.9} -> flat 32 cy, n_S = 6,
+    /// roofline 2.88 GUP/s.
+    #[test]
+    fn dp_scalar_kahan_ivb() {
+        let e = build(&ivb(), &generate(Variant::Kahan, Simd::Scalar, Precision::Dp, 0), true);
+        assert_eq!(e.t_ol, 32.0);
+        assert_eq!(e.t_nol, 8.0);
+        assert_eq!(e.predictions(), [32.0, 32.0, 32.0, 32.0]);
+        assert!(approx(e.perf_gups(3), 0.55, 0.01));
+        assert_eq!(e.saturation_cores(), 6);
+        assert!(approx(e.roofline_gups(), 2.88, 0.01));
+    }
+
+    /// §4 FMA discussion: ~20% L1 speedup on HSW/BDW, nothing beyond L1.
+    #[test]
+    fn fma_variant_hsw_l1_speedup() {
+        let m = hsw();
+        let add = build(&m, &generate(Variant::Kahan, Simd::Avx, Precision::Sp, 0), true);
+        let fma = build(&m, &generate(Variant::KahanFma, Simd::Avx, Precision::Sp, 0), true);
+        let speedup = add.prediction(0) / fma.prediction(0);
+        assert!(
+            (1.15..=1.25).contains(&speedup),
+            "L1 FMA speedup {speedup}, paper says ~20%"
+        );
+        // beyond L1: no noticeable improvement (memory prediction within 5%)
+        let mem_ratio = add.prediction(3) / fma.prediction(3);
+        assert!((0.95..=1.05).contains(&mem_ratio), "{mem_ratio}");
+    }
+
+    /// AVX vs SSE on IVB: 2x in L1/L2, ~1.3x in L3, ~1x in memory (§3).
+    #[test]
+    fn avx_over_sse_speedups_ivb() {
+        let m = ivb();
+        let sse = build(&m, &generate(Variant::Kahan, Simd::Sse, Precision::Sp, 0), true);
+        let avx = build(&m, &generate(Variant::Kahan, Simd::Avx, Precision::Sp, 0), true);
+        assert!(approx(sse.prediction(0) / avx.prediction(0), 2.0, 0.01));
+        assert!(approx(sse.prediction(1) / avx.prediction(1), 2.0, 0.01));
+        let l3 = sse.prediction(2) / avx.prediction(2);
+        assert!((1.25..=1.40).contains(&l3), "L3 speedup {l3}");
+        assert!(approx(sse.prediction(3) / avx.prediction(3), 1.0, 0.01));
+    }
+}

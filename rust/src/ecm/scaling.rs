@@ -1,0 +1,101 @@
+//! Multicore scaling in the ECM framework (paper §2, end):
+//! P(n) = min(n * P_ECM^mem, I * b_S), saturating at
+//! n_S = ceil(T_ECM^mem / T_L3Mem).
+
+use super::model::EcmModel;
+
+/// One point of the scaling curve.
+#[derive(Clone, Copy, Debug)]
+pub struct ScalingPoint {
+    pub cores: u32,
+    /// predicted performance, GUP/s
+    pub gups: f64,
+    /// whether the bandwidth ceiling is the binding constraint
+    pub bandwidth_bound: bool,
+}
+
+/// A full scaling curve for one kernel on one machine.
+#[derive(Clone, Debug)]
+pub struct ScalingCurve {
+    pub points: Vec<ScalingPoint>,
+    pub roofline_gups: f64,
+    pub saturation_cores: u32,
+}
+
+/// Predicted multicore performance at `n` cores for in-memory working sets.
+///
+/// Uses the *multi-core* ECM model (`single_core = false` Uncore behaviour
+/// should be baked into `e` by the caller when modeling n > 1).
+pub fn scale_performance(e: &EcmModel, n: u32) -> f64 {
+    let per_core = e.perf_gups(3);
+    (n as f64 * per_core).min(e.roofline_gups())
+}
+
+/// n_S = ceil(T_ECM^mem / T_L3Mem^bw-only).
+pub fn saturation_cores(e: &EcmModel) -> u32 {
+    e.saturation_cores()
+}
+
+/// Build the scaling curve for 1..=max_cores.
+pub fn curve(e: &EcmModel, max_cores: u32) -> ScalingCurve {
+    let roof = e.roofline_gups();
+    let points = (1..=max_cores)
+        .map(|n| {
+            let linear = n as f64 * e.perf_gups(3);
+            ScalingPoint {
+                cores: n,
+                gups: linear.min(roof),
+                bandwidth_bound: linear >= roof,
+            }
+        })
+        .collect();
+    ScalingCurve { points, roofline_gups: roof, saturation_cores: e.saturation_cores() }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ecm::build;
+    use crate::isa::{generate, Precision, Simd, Variant};
+    use crate::machine::presets::ivb;
+
+    /// Fig. 3a: on IVB (SP), AVX/SSE Kahan saturate at ~4 cores at the
+    /// roofline (5.76 GUP/s); scalar Kahan cannot saturate with 10 cores.
+    #[test]
+    fn fig3a_scaling_shapes() {
+        let m = ivb();
+        let avx = build(&m, &generate(Variant::Kahan, Simd::Avx, Precision::Sp, 0), false);
+        let c = curve(&avx, m.cores);
+        assert_eq!(c.saturation_cores, 4);
+        assert!((c.points[9].gups - 5.76).abs() < 0.01, "saturated at roofline");
+        assert!(c.points[9].bandwidth_bound);
+        assert!(!c.points[0].bandwidth_bound);
+
+        let scalar = build(&m, &generate(Variant::Kahan, Simd::Scalar, Precision::Sp, 0), false);
+        let c = curve(&scalar, m.cores);
+        assert_eq!(c.saturation_cores, 11); // > 10 physical cores
+        assert!(!c.points[9].bandwidth_bound, "scalar must not saturate");
+        assert!((c.points[9].gups - 5.5).abs() < 0.1); // 10 * 0.55
+    }
+
+    /// Fig. 3b: DP scalar saturates at ~6 cores.
+    #[test]
+    fn fig3b_dp_scalar_saturates() {
+        let m = ivb();
+        let e = build(&m, &generate(Variant::Kahan, Simd::Scalar, Precision::Dp, 0), false);
+        let c = curve(&e, m.cores);
+        assert_eq!(c.saturation_cores, 6);
+        assert!(c.points[6].bandwidth_bound);
+        assert!((c.roofline_gups - 2.88).abs() < 0.01);
+    }
+
+    #[test]
+    fn monotone_nondecreasing() {
+        let m = ivb();
+        let e = build(&m, &generate(Variant::Kahan, Simd::Avx, Precision::Sp, 0), false);
+        let c = curve(&e, m.cores);
+        for w in c.points.windows(2) {
+            assert!(w[1].gups >= w[0].gups - 1e-12);
+        }
+    }
+}

@@ -1,0 +1,137 @@
+//! Virtual instructions: what the paper's assembly listings contain, reduced
+//! to the fields performance analysis needs (operation class, SIMD width,
+//! register dataflow, source stream of loads).
+
+/// Operation classes — each maps to one functional-unit class of
+/// `crate::machine::Unit`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Op {
+    Load,
+    Store,
+    Add,
+    Mul,
+    Fma,
+}
+
+/// SIMD width of an instruction / kernel flavor.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Simd {
+    Scalar,
+    Sse,
+    Avx,
+    Avx512,
+}
+
+impl Simd {
+    /// Register width in bytes for a given element size.
+    pub fn width_bytes(self, elem_bytes: u32) -> u32 {
+        match self {
+            Simd::Scalar => elem_bytes,
+            Simd::Sse => 16,
+            Simd::Avx => 32,
+            Simd::Avx512 => 64,
+        }
+    }
+
+    /// Lanes per register for a given element size.
+    pub fn lanes(self, elem_bytes: u32) -> u32 {
+        self.width_bytes(elem_bytes) / elem_bytes
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Simd::Scalar => "scalar",
+            Simd::Sse => "SSE",
+            Simd::Avx => "AVX",
+            Simd::Avx512 => "AVX-512",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "scalar" => Some(Simd::Scalar),
+            "sse" => Some(Simd::Sse),
+            "avx" | "avx2" => Some(Simd::Avx),
+            "avx512" | "avx-512" => Some(Simd::Avx512),
+            _ => None,
+        }
+    }
+}
+
+/// Which input stream a load reads (dot has two: a and b).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct StreamRef(pub u8);
+
+/// Virtual register ids. The generator uses a fixed convention so tests and
+/// the scheduler can identify accumulators:
+///   REG_SUM_BASE + k   : running sum, unroll slot k
+///   REG_C_BASE + k     : Kahan compensation, unroll slot k
+///   REG_TMP_BASE ...   : iteration-local temporaries
+pub const REG_SUM_BASE: u16 = 0;
+pub const REG_C_BASE: u16 = 64;
+pub const REG_TMP_BASE: u16 = 128;
+pub const REG_NONE: u16 = u16::MAX;
+
+/// One virtual instruction.
+#[derive(Clone, Copy, Debug)]
+pub struct Inst {
+    pub op: Op,
+    /// register width in bytes (4/8 scalar, 16 SSE, 32 AVX, 64 AVX-512)
+    pub width_bytes: u32,
+    /// destination register (REG_NONE for stores)
+    pub dest: u16,
+    /// source registers (REG_NONE padding)
+    pub srcs: [u16; 3],
+    /// for loads/stores: which stream is accessed
+    pub stream: Option<StreamRef>,
+}
+
+impl Inst {
+    pub fn load(width: u32, dest: u16, stream: StreamRef) -> Self {
+        Inst { op: Op::Load, width_bytes: width, dest, srcs: [REG_NONE; 3], stream: Some(stream) }
+    }
+
+    pub fn binop(op: Op, width: u32, dest: u16, a: u16, b: u16) -> Self {
+        debug_assert!(matches!(op, Op::Add | Op::Mul));
+        Inst { op, width_bytes: width, dest, srcs: [a, b, REG_NONE], stream: None }
+    }
+
+    pub fn fma(width: u32, dest: u16, a: u16, b: u16, c: u16) -> Self {
+        Inst { op: Op::Fma, width_bytes: width, dest, srcs: [a, b, c], stream: None }
+    }
+
+    /// Registers this instruction reads.
+    pub fn reads(&self) -> impl Iterator<Item = u16> + '_ {
+        self.srcs.iter().copied().filter(|&r| r != REG_NONE)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn simd_widths_and_lanes() {
+        assert_eq!(Simd::Scalar.width_bytes(4), 4);
+        assert_eq!(Simd::Scalar.width_bytes(8), 8);
+        assert_eq!(Simd::Sse.lanes(4), 4);
+        assert_eq!(Simd::Avx.lanes(4), 8);
+        assert_eq!(Simd::Avx.lanes(8), 4);
+        assert_eq!(Simd::Avx512.lanes(4), 16);
+    }
+
+    #[test]
+    fn parse_simd() {
+        assert_eq!(Simd::parse("AVX2"), Some(Simd::Avx));
+        assert_eq!(Simd::parse("sse"), Some(Simd::Sse));
+        assert_eq!(Simd::parse("mmx"), None);
+    }
+
+    #[test]
+    fn inst_reads_skip_none() {
+        let i = Inst::binop(Op::Add, 32, 1, 2, 3);
+        assert_eq!(i.reads().collect::<Vec<_>>(), vec![2, 3]);
+        let l = Inst::load(32, 5, StreamRef(0));
+        assert_eq!(l.reads().count(), 0);
+    }
+}

@@ -1,0 +1,475 @@
+//! Kernel generators: emit the virtual-instruction stream for one *pass* of
+//! the (naive|Kahan) dot loop at a given SIMD width, precision and unroll
+//! factor — the analog of the paper's hand-written likwid-bench assembly.
+//!
+//! Terminology (matches the paper):
+//! * **unit of work** — one cache line of each stream: 16 SP / 8 DP
+//!   iterations.
+//! * **pass** — `unroll` units; each vector operation in a pass gets its own
+//!   accumulator *slot* (modulo the register budget), which is exactly the
+//!   paper's "modulo unrolling" that hides ADD/FMA pipeline latency.
+
+use super::inst::{Inst, Op, Simd, StreamRef, REG_C_BASE, REG_SUM_BASE, REG_TMP_BASE};
+
+/// Algorithm variant.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Variant {
+    /// Fig. 1a — uncompensated.
+    Naive,
+    /// Fig. 1b — Kahan compensation on the ADD pipes.
+    Kahan,
+    /// §4 trick: compensated adds issued as FMAs with unit multiplicand so
+    /// both HSW/BDW FMA pipes can execute them.
+    KahanFma,
+}
+
+impl Variant {
+    pub fn name(self) -> &'static str {
+        match self {
+            Variant::Naive => "naive",
+            Variant::Kahan => "kahan",
+            Variant::KahanFma => "kahan-fma",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "naive" => Some(Variant::Naive),
+            "kahan" => Some(Variant::Kahan),
+            "kahan-fma" | "kahanfma" | "fma" => Some(Variant::KahanFma),
+            _ => None,
+        }
+    }
+}
+
+/// Element precision.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Precision {
+    Sp,
+    Dp,
+}
+
+impl Precision {
+    pub fn elem_bytes(self) -> u32 {
+        match self {
+            Precision::Sp => 4,
+            Precision::Dp => 8,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Precision::Sp => "SP",
+            Precision::Dp => "DP",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "sp" | "f32" | "single" => Some(Precision::Sp),
+            "dp" | "f64" | "double" => Some(Precision::Dp),
+            _ => None,
+        }
+    }
+}
+
+/// Architectural SIMD register budget assumed by the generator (AVX2: 16
+/// ymm registers). Loads in flight + iteration temporaries reserve a few.
+const SIMD_REGS: u32 = 16;
+const RESERVED_REGS: u32 = 4;
+
+/// A generated kernel: the instruction stream for one pass plus the metadata
+/// the ECM model and the simulator need.
+#[derive(Clone, Debug)]
+pub struct KernelDesc {
+    pub name: String,
+    pub variant: Variant,
+    pub simd: Simd,
+    pub prec: Precision,
+    /// units of work per pass (the unroll factor in units)
+    pub units_per_stream_pass: usize,
+    /// independent accumulator slots actually allocated
+    pub slots: usize,
+    /// FP operations on the loop-carried dependency cycle of one slot
+    /// (naive: 1 add; Kahan: the 4-op y→t→d→c cycle)
+    pub carried_chain_ops: u32,
+    /// instruction stream for one pass
+    pub insts: Vec<Inst>,
+    /// scalar iterations represented by one unit of work (16 SP / 8 DP)
+    pub iters_per_unit: usize,
+    /// input streams (dot reads two arrays)
+    pub n_streams: usize,
+    /// how many of those streams are also written back (axpy: 1); written
+    /// cache lines cost an extra write-back transfer at every boundary
+    pub written_streams: usize,
+    pub elem_bytes: u32,
+    /// flops per scalar iteration (dot: 1 mul + 1 add = 2)
+    pub flops_per_iter: f64,
+}
+
+impl KernelDesc {
+    /// Scalar iterations per pass.
+    pub fn iters_per_pass(&self) -> usize {
+        self.iters_per_unit * self.units_per_stream_pass
+    }
+
+    /// Bytes read from all streams per unit of work (= one CL per stream).
+    pub fn bytes_per_unit(&self, cache_line: u32) -> u64 {
+        self.n_streams as u64 * cache_line as u64
+    }
+
+    /// Cache lines touched per unit of work.
+    pub fn cls_per_unit(&self) -> u64 {
+        self.n_streams as u64
+    }
+
+    /// Cache-line *transfers* per unit of work: reads plus write-backs of
+    /// written streams (write-allocate reads are already in `n_streams`).
+    pub fn cl_transfers_per_unit(&self) -> u64 {
+        (self.n_streams + self.written_streams) as u64
+    }
+
+    /// Bytes of input consumed per scalar iteration (8 B SP, 16 B DP).
+    pub fn bytes_per_iter(&self) -> u64 {
+        self.n_streams as u64 * self.elem_bytes as u64
+    }
+
+    /// Bytes of memory *traffic* per iteration, including write-backs
+    /// (axpy DP: 8 x-read + 8 y-read + 8 y-write = 24 B).
+    pub fn traffic_bytes_per_iter(&self) -> u64 {
+        (self.n_streams + self.written_streams) as u64 * self.elem_bytes as u64
+    }
+}
+
+/// Accumulator registers one slot needs (sum, and for Kahan the c term).
+fn regs_per_slot(variant: Variant) -> u32 {
+    match variant {
+        Variant::Naive => 1,
+        Variant::Kahan | Variant::KahanFma => 2,
+    }
+}
+
+/// FP ops on the carried dependency cycle of one slot.
+fn chain_ops(variant: Variant) -> u32 {
+    match variant {
+        Variant::Naive => 1,
+        // y = p - c ; t = s + y ; d = t - s ; c' = d - y : the longest cycle
+        // runs through all four (c' of iteration i feeds y of i+1)
+        Variant::Kahan | Variant::KahanFma => 4,
+    }
+}
+
+/// Maximum slots the register file supports.
+fn slot_budget(variant: Variant) -> u32 {
+    (SIMD_REGS - RESERVED_REGS) / regs_per_slot(variant)
+}
+
+/// Default unroll (units per pass): enough slots to hide the FP pipeline
+/// latency of the carried chain, assuming IVB-class 3-cycle ADDs and 1 op/cy
+/// issue per chain op class — the "proper modulo unrolling" the paper always
+/// applies. Clamped to the register budget.
+pub fn default_unroll(variant: Variant, simd: Simd, prec: Precision) -> usize {
+    let vec_per_unit = vec_ops_per_unit(simd, prec);
+    // latency(3 or 5) * chain_ops cycles per slot iteration; during that time
+    // the issue ports retire ~ops_per_vec_iter cycles of work per slot
+    let lat = match variant {
+        Variant::KahanFma => 5,
+        _ => 3,
+    };
+    let ops_per_vec = match variant {
+        Variant::Naive => 1.0,
+        Variant::Kahan => 4.0,
+        Variant::KahanFma => 2.5, // 5 FMA-class ops over 2 ports
+    };
+    let slots_needed = ((chain_ops(variant) * lat) as f64 / ops_per_vec).ceil() as u32;
+    let slots = slots_needed.clamp(1, slot_budget(variant));
+    ((slots as usize) + vec_per_unit - 1) / vec_per_unit
+}
+
+/// Vector operations per unit of work (one CL per stream).
+fn vec_ops_per_unit(simd: Simd, prec: Precision) -> usize {
+    let iters = 64 / prec.elem_bytes() as usize; // per cache line
+    iters / simd.lanes(prec.elem_bytes()) as usize
+}
+
+/// Generate the kernel. `unroll == 0` selects `default_unroll`.
+pub fn generate(variant: Variant, simd: Simd, prec: Precision, unroll: usize) -> KernelDesc {
+    generate_ext(variant, simd, prec, unroll, None)
+}
+
+/// Like [`generate`] but with an explicit accumulator-slot count.
+///
+/// `slots_override = Some(1)` models what the paper calls the
+/// "compiler-generated" Kahan loop: the loop-carried dependency on `c`
+/// prevents both SIMD vectorization and modulo unrolling, so a single
+/// accumulator chain serializes on the ADD pipeline latency.
+pub fn generate_ext(
+    variant: Variant,
+    simd: Simd,
+    prec: Precision,
+    unroll: usize,
+    slots_override: Option<usize>,
+) -> KernelDesc {
+    let unroll = if unroll == 0 { default_unroll(variant, simd, prec) } else { unroll };
+    let elem = prec.elem_bytes();
+    let width = simd.width_bytes(elem);
+    let vec_per_unit = vec_ops_per_unit(simd, prec);
+    let n_vec = vec_per_unit * unroll;
+    let slots = match slots_override {
+        Some(s) => s.clamp(1, n_vec),
+        None => (n_vec as u32).min(slot_budget(variant)) as usize,
+    };
+
+    let mut insts = Vec::with_capacity(n_vec * 7);
+    for v in 0..n_vec {
+        let slot = (v % slots) as u16;
+        let s_reg = REG_SUM_BASE + slot;
+        let c_reg = REG_C_BASE + slot;
+        // iteration-local temporaries (reused across units; dataflow within
+        // an iteration is what matters for scheduling)
+        let t_base = REG_TMP_BASE + ((v % 8) as u16) * 8;
+        let (r_a, r_b, r_p, r_y, r_d) =
+            (t_base, t_base + 1, t_base + 2, t_base + 3, t_base + 4);
+
+        insts.push(Inst::load(width, r_a, StreamRef(0)));
+        insts.push(Inst::load(width, r_b, StreamRef(1)));
+        match variant {
+            Variant::Naive => {
+                insts.push(Inst::binop(Op::Mul, width, r_p, r_a, r_b));
+                insts.push(Inst::binop(Op::Add, width, s_reg, s_reg, r_p));
+            }
+            Variant::Kahan => {
+                insts.push(Inst::binop(Op::Mul, width, r_p, r_a, r_b));
+                // y = p - c
+                insts.push(Inst::binop(Op::Add, width, r_y, r_p, c_reg));
+                // t = s + y   (t is renamed onto the sum register)
+                insts.push(Inst::binop(Op::Add, width, s_reg, s_reg, r_y));
+                // d = t - s_old (dataflow: depends on t)
+                insts.push(Inst::binop(Op::Add, width, r_d, s_reg, r_y));
+                // c' = d - y
+                insts.push(Inst::binop(Op::Add, width, c_reg, r_d, r_y));
+            }
+            Variant::KahanFma => {
+                // product via FMA pipe (p = a*b + 0)
+                insts.push(Inst::fma(width, r_p, r_a, r_b, r_p));
+                // compensated adds as FMAs with unit multiplicand
+                insts.push(Inst::fma(width, r_y, r_p, r_p, c_reg)); // y = p - c
+                insts.push(Inst::fma(width, s_reg, s_reg, s_reg, r_y)); // t = s + y
+                insts.push(Inst::fma(width, r_d, s_reg, s_reg, r_y)); // d = t - s
+                insts.push(Inst::fma(width, c_reg, r_d, r_d, r_y)); // c' = d - y
+            }
+        }
+    }
+
+    let iters_per_unit = 64 / elem as usize;
+    KernelDesc {
+        name: format!("{}-{}-{}", variant.name(), simd.name(), prec.name()),
+        variant,
+        simd,
+        prec,
+        units_per_stream_pass: unroll,
+        slots,
+        carried_chain_ops: chain_ops(variant),
+        insts,
+        iters_per_unit,
+        n_streams: 2,
+        written_streams: 0,
+        elem_bytes: elem,
+        flops_per_iter: 2.0,
+    }
+}
+
+/// The paper's kernel zoo: every (variant × SIMD) combination analyzed in
+/// §3, for one precision.
+pub fn paper_kernels(prec: Precision) -> Vec<KernelDesc> {
+    vec![
+        generate(Variant::Naive, Simd::Avx, prec, 0),
+        generate(Variant::Kahan, Simd::Scalar, prec, 0),
+        generate(Variant::Kahan, Simd::Sse, prec, 0),
+        generate(Variant::Kahan, Simd::Avx, prec, 0),
+    ]
+}
+
+/// The "compiler-generated" Kahan loop of Figs. 3a/3b: scalar, no unrolling,
+/// one serialized accumulator chain.
+pub fn compiler_kahan(prec: Precision) -> KernelDesc {
+    let mut k = generate_ext(Variant::Kahan, Simd::Scalar, prec, 1, Some(1));
+    k.name = format!("kahan-compiler-{}", prec.name());
+    k
+}
+
+/// §5 generalization ("blueprint for other load-dominated streaming
+/// kernels"): the pure summation kernel — one input stream, no multiply.
+/// Kahan sum per iteration: y = x - c; t = s + y; d = t - s; c' = d - y
+/// (4 ADDs); naive sum: 1 ADD.
+pub fn generate_sum(variant: Variant, simd: Simd, prec: Precision, unroll: usize) -> KernelDesc {
+    let unroll = if unroll == 0 { default_unroll(variant, simd, prec) } else { unroll };
+    let elem = prec.elem_bytes();
+    let width = simd.width_bytes(elem);
+    let vec_per_unit = vec_ops_per_unit(simd, prec);
+    let n_vec = vec_per_unit * unroll;
+    let slots = (n_vec as u32).min(slot_budget(variant)) as usize;
+
+    let mut insts = Vec::with_capacity(n_vec * 6);
+    for v in 0..n_vec {
+        let slot = (v % slots) as u16;
+        let s_reg = REG_SUM_BASE + slot;
+        let c_reg = REG_C_BASE + slot;
+        let t_base = REG_TMP_BASE + ((v % 8) as u16) * 8;
+        let (r_x, r_y, r_d) = (t_base, t_base + 1, t_base + 2);
+
+        insts.push(Inst::load(width, r_x, StreamRef(0)));
+        match variant {
+            Variant::Naive => {
+                insts.push(Inst::binop(Op::Add, width, s_reg, s_reg, r_x));
+            }
+            Variant::Kahan => {
+                insts.push(Inst::binop(Op::Add, width, r_y, r_x, c_reg));
+                insts.push(Inst::binop(Op::Add, width, s_reg, s_reg, r_y));
+                insts.push(Inst::binop(Op::Add, width, r_d, s_reg, r_y));
+                insts.push(Inst::binop(Op::Add, width, c_reg, r_d, r_y));
+            }
+            Variant::KahanFma => {
+                insts.push(Inst::fma(width, r_y, r_x, r_x, c_reg));
+                insts.push(Inst::fma(width, s_reg, s_reg, s_reg, r_y));
+                insts.push(Inst::fma(width, r_d, s_reg, s_reg, r_y));
+                insts.push(Inst::fma(width, c_reg, r_d, r_d, r_y));
+            }
+        }
+    }
+
+    KernelDesc {
+        name: format!("{}-sum-{}-{}", variant.name(), simd.name(), prec.name()),
+        variant,
+        simd,
+        prec,
+        units_per_stream_pass: unroll,
+        slots,
+        carried_chain_ops: chain_ops(variant),
+        insts,
+        iters_per_unit: 64 / elem as usize,
+        n_streams: 1,
+        written_streams: 0,
+        elem_bytes: elem,
+        flops_per_iter: 1.0,
+    }
+}
+
+/// STREAM-style axpy (`y[i] = a*x[i] + y[i]`): the store-traffic member of
+/// the ECM kernel family (Stengel et al. [11] use daxpy as the canonical
+/// example). No accumulation — so no Kahan variant — but it exercises the
+/// store ports and write-back traffic the dot/sum kernels never touch.
+pub fn generate_axpy(simd: Simd, prec: Precision, unroll: usize) -> KernelDesc {
+    let unroll = if unroll == 0 { 2 } else { unroll };
+    let elem = prec.elem_bytes();
+    let width = simd.width_bytes(elem);
+    let vec_per_unit = vec_ops_per_unit(simd, prec);
+    let n_vec = vec_per_unit * unroll;
+
+    let mut insts = Vec::with_capacity(n_vec * 4);
+    for v in 0..n_vec {
+        let t_base = REG_TMP_BASE + ((v % 8) as u16) * 8;
+        let (r_x, r_y, r_p) = (t_base, t_base + 1, t_base + 2);
+        insts.push(Inst::load(width, r_x, StreamRef(0)));
+        insts.push(Inst::load(width, r_y, StreamRef(1)));
+        // a*x (the scalar a lives in a register); + y; store y
+        insts.push(Inst::binop(Op::Mul, width, r_p, r_x, r_x));
+        insts.push(Inst::binop(Op::Add, width, r_p, r_p, r_y));
+        insts.push(Inst {
+            op: Op::Store,
+            width_bytes: width,
+            dest: crate::isa::inst::REG_NONE,
+            srcs: [r_p, crate::isa::inst::REG_NONE, crate::isa::inst::REG_NONE],
+            stream: Some(StreamRef(1)),
+        });
+    }
+
+    KernelDesc {
+        name: format!("axpy-{}-{}", simd.name(), prec.name()),
+        variant: Variant::Naive,
+        simd,
+        prec,
+        units_per_stream_pass: unroll,
+        slots: n_vec.max(1),
+        carried_chain_ops: 1, // no loop-carried dependency
+        insts,
+        iters_per_unit: 64 / elem as usize,
+        n_streams: 2,
+        written_streams: 1,
+        elem_bytes: elem,
+        flops_per_iter: 2.0,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vec_ops_per_unit_table() {
+        assert_eq!(vec_ops_per_unit(Simd::Scalar, Precision::Sp), 16);
+        assert_eq!(vec_ops_per_unit(Simd::Sse, Precision::Sp), 4);
+        assert_eq!(vec_ops_per_unit(Simd::Avx, Precision::Sp), 2);
+        assert_eq!(vec_ops_per_unit(Simd::Avx512, Precision::Sp), 1);
+        assert_eq!(vec_ops_per_unit(Simd::Scalar, Precision::Dp), 8);
+        assert_eq!(vec_ops_per_unit(Simd::Avx, Precision::Dp), 2);
+    }
+
+    #[test]
+    fn default_unroll_saturates_add_port() {
+        // Kahan AVX SP: chain = 4 ops * 3 cy = 12 cy; 4 adds per vec op
+        // retire in 4 cy, so >= 3 slots are needed; slots come in whole
+        // units (2 vec ops each) => 2 units, 4 slots.
+        let k = generate(Variant::Kahan, Simd::Avx, Precision::Sp, 0);
+        assert!(k.slots >= 3, "slots={}", k.slots);
+        // naive: 3-cycle chain, 1 add per vec op => 3 slots minimum
+        let k = generate(Variant::Naive, Simd::Avx, Precision::Sp, 0);
+        assert!(k.slots >= 3);
+    }
+
+    #[test]
+    fn fma_slots_hit_register_budget() {
+        // FMA chain = 4 ops * 5 cy = 20 cy; 2.5 cy issue per vec op => 8
+        // slots wanted but the register file caps Kahan at 6.
+        let k = generate(Variant::KahanFma, Simd::Avx, Precision::Sp, 0);
+        assert_eq!(k.slots, 6, "paper: HSW/BDW run out of registers");
+    }
+
+    #[test]
+    fn slots_never_exceed_budget() {
+        for variant in [Variant::Naive, Variant::Kahan, Variant::KahanFma] {
+            for simd in [Simd::Scalar, Simd::Sse, Simd::Avx, Simd::Avx512] {
+                for prec in [Precision::Sp, Precision::Dp] {
+                    for unroll in [0usize, 1, 2, 8, 32] {
+                        let k = generate(variant, simd, prec, unroll);
+                        assert!(k.slots as u32 <= slot_budget(variant));
+                        assert!(k.slots >= 1);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn bytes_per_iter() {
+        let k = generate(Variant::Kahan, Simd::Avx, Precision::Sp, 0);
+        assert_eq!(k.bytes_per_iter(), 8); // paper: 1 update / 8 B (SP)
+        let k = generate(Variant::Kahan, Simd::Avx, Precision::Dp, 0);
+        assert_eq!(k.bytes_per_iter(), 16); // 1 update / 16 B (DP)
+    }
+
+    #[test]
+    fn kernel_names() {
+        let k = generate(Variant::Kahan, Simd::Avx, Precision::Sp, 0);
+        assert_eq!(k.name, "kahan-AVX-SP");
+        let k = generate(Variant::KahanFma, Simd::Avx512, Precision::Dp, 0);
+        assert_eq!(k.name, "kahan-fma-AVX-512-DP");
+    }
+
+    #[test]
+    fn paper_zoo_has_four_kernels() {
+        let zoo = paper_kernels(Precision::Sp);
+        assert_eq!(zoo.len(), 4);
+        assert_eq!(zoo[0].variant, Variant::Naive);
+    }
+}

@@ -1,0 +1,124 @@
+//! Virtual instruction set: the machine-checkable analog of the paper's
+//! hand-written assembly kernels.
+//!
+//! A `KernelDesc` holds the instruction stream for **one unit of work** (one
+//! cache line of each input stream = 16 SP / 8 DP scalar iterations) exactly
+//! as the paper counts it, plus stream metadata. Both the analytic ECM model
+//! (`crate::ecm`) and the cycle-level simulator (`crate::sim`) consume this
+//! stream, so they can never disagree about what the kernel *is*.
+
+pub mod inst;
+pub mod kernelgen;
+
+pub use inst::{Inst, Op, Simd, StreamRef};
+pub use kernelgen::{
+    compiler_kahan, generate, generate_axpy, generate_ext, generate_sum, paper_kernels, KernelDesc, Precision,
+    Variant,
+};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Instruction counts normalized to one unit of work (a pass spans
+    /// `units_per_stream_pass` units).
+    fn counts(k: &KernelDesc) -> (usize, usize, usize, usize) {
+        let mut loads = 0;
+        let mut adds = 0;
+        let mut muls = 0;
+        let mut fmas = 0;
+        for i in &k.insts {
+            match i.op {
+                Op::Load => loads += 1,
+                Op::Add => adds += 1,
+                Op::Mul => muls += 1,
+                Op::Fma => fmas += 1,
+                Op::Store => {}
+            }
+        }
+        let u = k.units_per_stream_pass;
+        assert_eq!(loads % u, 0);
+        (loads / u, adds / u, muls / u, fmas / u)
+    }
+
+    /// §3 of the paper counts, per unit of work (16 SP iterations):
+    ///  naive AVX:    4 loads, 2 MUL, 2 ADD
+    ///  Kahan scalar: 32 loads, 16 MUL, 64 ADD
+    ///  Kahan SSE:    8 loads, 4 MUL, 16 ADD
+    ///  Kahan AVX:    4 loads, 2 MUL, 8 ADD
+    #[test]
+    fn paper_instruction_counts_sp() {
+        let cases = [
+            (Variant::Naive, Simd::Avx, (4, 2, 2, 0)),
+            (Variant::Kahan, Simd::Scalar, (32, 64, 16, 0)),
+            (Variant::Kahan, Simd::Sse, (8, 16, 4, 0)),
+            (Variant::Kahan, Simd::Avx, (4, 8, 2, 0)),
+        ];
+        for (variant, simd, (l, a, m, f)) in cases {
+            let k = generate(variant, simd, Precision::Sp, 0);
+            let (loads, adds, muls, fmas) = counts(&k);
+            assert_eq!(
+                (loads, adds, muls, fmas),
+                (l, a, m, f),
+                "{variant:?} {simd:?}"
+            );
+            assert_eq!(k.iters_per_unit, 16);
+        }
+    }
+
+    /// DP halves the iterations per cache line but the SIMD instruction
+    /// counts per unit are unchanged; scalar DP has half the instructions of
+    /// scalar SP.
+    #[test]
+    fn paper_instruction_counts_dp() {
+        let k = generate(Variant::Kahan, Simd::Scalar, Precision::Dp, 0);
+        let (loads, adds, muls, _) = counts(&k);
+        assert_eq!((loads, adds, muls), (16, 32, 8));
+        assert_eq!(k.iters_per_unit, 8);
+
+        let k = generate(Variant::Kahan, Simd::Avx, Precision::Dp, 0);
+        let (loads, adds, muls, _) = counts(&k);
+        assert_eq!((loads, adds, muls), (4, 8, 2));
+    }
+
+    /// The FMA variant (HSW/BDW trick: ADD as FMA with unit multiplicand)
+    /// turns all four ADD-pipe ops into FMA-pipe ops.
+    #[test]
+    fn fma_variant_moves_adds_to_fma_pipes() {
+        let k = generate(Variant::KahanFma, Simd::Avx, Precision::Sp, 0);
+        let (loads, adds, _, fmas) = counts(&k);
+        assert_eq!(loads, 4);
+        assert_eq!(adds, 0);
+        assert_eq!(fmas, 10); // 2 product-FMAs + 8 compensated-add FMAs
+    }
+
+    /// AVX-512 halves the vector instruction count again.
+    #[test]
+    fn avx512_counts() {
+        let k = generate(Variant::Kahan, Simd::Avx512, Precision::Sp, 0);
+        let (loads, adds, muls, _) = counts(&k);
+        assert_eq!((loads, adds, muls), (2, 4, 1));
+    }
+
+    /// Every non-load instruction must depend (transitively) on both loads
+    /// of its iteration — guards against generating dead code.
+    #[test]
+    fn dataflow_reaches_accumulator() {
+        for simd in [Simd::Scalar, Simd::Sse, Simd::Avx] {
+            let k = generate(Variant::Kahan, simd, Precision::Sp, 0);
+            // the last instruction of each iteration writes the running sum
+            let sum_writes: Vec<_> =
+                k.insts.iter().filter(|i| i.dest == inst::REG_SUM_BASE).collect();
+            assert!(!sum_writes.is_empty(), "{simd:?}");
+        }
+    }
+
+    #[test]
+    fn unroll_scales_stream_and_unit() {
+        let base = generate(Variant::Kahan, Simd::Avx, Precision::Sp, 1);
+        let u4 = generate(Variant::Kahan, Simd::Avx, Precision::Sp, 4);
+        assert_eq!(u4.insts.len(), 4 * base.insts.len());
+        assert_eq!(u4.units_per_stream_pass, 4);
+        assert_eq!(u4.iters_per_unit, base.iters_per_unit);
+    }
+}

@@ -1,0 +1,32 @@
+//! # kahan-ecm
+//!
+//! Reproduction of *"Performance analysis of the Kahan-enhanced scalar
+//! product on current multicore processors"* (Hofmann, Fey, Eitzinger,
+//! Hager, Wellein — PPAM/LNCS 2015).
+//!
+//! The crate contains, as one coherent framework (see `DESIGN.md`):
+//!
+//! * [`machine`] — Table-1 socket descriptions (SNB/IVB/HSW/BDW presets +
+//!   host detection);
+//! * [`isa`] — generated virtual-assembly dot kernels (naive / Kahan /
+//!   Kahan-FMA at scalar/SSE/AVX/AVX-512, SP/DP);
+//! * [`ecm`] — the Execution–Cache–Memory analytic model (Table 2, Eq. 2);
+//! * [`sim`] — a trace-driven virtual testbed (port scoreboard + cache
+//!   hierarchy + memory interface) standing in for the paper's silicon;
+//! * [`bench`] — a likwid-bench-style host microbenchmark framework with
+//!   real `std::arch` SIMD Kahan kernels;
+//! * [`accuracy`] — error-free transformations, exact dot products and the
+//!   Ogita–Rump–Oishi ill-conditioned generator;
+//! * [`runtime`] — PJRT execution of the AOT-lowered JAX/Pallas artifacts;
+//! * [`coordinator`] — experiment registry, reports, validation against the
+//!   paper's published numbers, and a batched-dot service.
+
+pub mod accuracy;
+pub mod bench;
+pub mod coordinator;
+pub mod ecm;
+pub mod isa;
+pub mod machine;
+pub mod runtime;
+pub mod sim;
+pub mod util;

@@ -1,0 +1,180 @@
+//! Host CPU detection: build a best-effort `Machine` for the machine the
+//! crate is running on, so the ECM model and the host microbenchmarks
+//! (`crate::bench`) can be compared on real silicon.
+//!
+//! Sources: /proc/cpuinfo (model name, flags), sysfs cache topology, and a
+//! TSC-vs-monotonic-clock calibration for the effective frequency. Missing
+//! information falls back to HSW-class defaults — close enough for any
+//! post-2014 Xeon, which is what cloud containers run on.
+
+use super::{CacheLevel, CoreModel, Machine, MemoryModel};
+
+/// SIMD capabilities detected on the host.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct HostSimd {
+    pub sse: bool,
+    pub avx2: bool,
+    pub fma: bool,
+    pub avx512f: bool,
+}
+
+pub fn host_simd() -> HostSimd {
+    HostSimd {
+        sse: is_x86_feature_detected!("sse4.2"),
+        avx2: is_x86_feature_detected!("avx2"),
+        fma: is_x86_feature_detected!("fma"),
+        avx512f: is_x86_feature_detected!("avx512f"),
+    }
+}
+
+fn read_sysfs_cache(level_index: u32) -> Option<(u64, u32)> {
+    let base = format!("/sys/devices/system/cpu/cpu0/cache/index{level_index}");
+    let size_s = std::fs::read_to_string(format!("{base}/size")).ok()?;
+    let ways_s = std::fs::read_to_string(format!("{base}/ways_of_associativity")).ok()?;
+    let size_s = size_s.trim();
+    let bytes = if let Some(k) = size_s.strip_suffix('K') {
+        k.parse::<u64>().ok()? * 1024
+    } else if let Some(m) = size_s.strip_suffix('M') {
+        m.parse::<u64>().ok()? * 1024 * 1024
+    } else {
+        size_s.parse::<u64>().ok()?
+    };
+    let ways = ways_s.trim().parse::<u32>().unwrap_or(8);
+    Some((bytes, ways))
+}
+
+fn cpu_model_name() -> String {
+    std::fs::read_to_string("/proc/cpuinfo")
+        .ok()
+        .and_then(|s| {
+            s.lines()
+                .find(|l| l.starts_with("model name"))
+                .and_then(|l| l.split(':').nth(1))
+                .map(|v| v.trim().to_string())
+        })
+        .unwrap_or_else(|| "unknown x86_64".to_string())
+}
+
+fn online_cpus() -> u32 {
+    std::thread::available_parallelism().map(|n| n.get() as u32).unwrap_or(1)
+}
+
+/// Calibrate the TSC frequency in GHz against the monotonic clock.
+pub fn calibrate_tsc_ghz() -> f64 {
+    #[cfg(target_arch = "x86_64")]
+    {
+        use std::time::Instant;
+        let t0 = Instant::now();
+        let c0 = unsafe { core::arch::x86_64::_rdtsc() };
+        // ~20 ms busy-wait; long enough that Instant noise is irrelevant
+        while t0.elapsed().as_micros() < 20_000 {
+            std::hint::spin_loop();
+        }
+        let c1 = unsafe { core::arch::x86_64::_rdtsc() };
+        let dt = t0.elapsed().as_secs_f64();
+        (c1.wrapping_sub(c0)) as f64 / dt / 1e9
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        2.0
+    }
+}
+
+/// Build a best-effort machine model for the host.
+///
+/// Port widths/counts assume HSW-or-newer (2×32 B load + 1×32 B store, two
+/// FMA pipes); bandwidths default to a single-channel cloud value and should
+/// be overridden by a measured STREAM figure when available (see
+/// `crate::bench::sweep::measure_load_bandwidth`).
+pub fn detect_host() -> Machine {
+    let simd = host_simd();
+    let ghz = calibrate_tsc_ghz();
+    let l1 = read_sysfs_cache(0).unwrap_or((32 * 1024, 8));
+    let l2 = read_sysfs_cache(2).unwrap_or((1024 * 1024, 16));
+    let l3 = read_sysfs_cache(3).unwrap_or((32 * 1024 * 1024, 16));
+
+    // leak the strings: Machine uses &'static str for names (presets are
+    // static); the one host detection per process makes this harmless
+    let name: &'static str = Box::leak(format!("host ({})", cpu_model_name()).into_boxed_str());
+    let ghz_s: &'static str = Box::leak(format!("{ghz:.2} GHz (tsc)").into_boxed_str());
+
+    Machine {
+        name,
+        shorthand: "HOST",
+        xeon_model: name,
+        year: ghz_s,
+        clock_ghz: ghz,
+        cores: online_cpus(),
+        threads: online_cpus(),
+        core: CoreModel {
+            load_ports: 2,
+            load_port_bytes: 32,
+            store_ports: 1,
+            store_port_bytes: 32,
+            add_ports: 1,
+            mul_ports: 2,
+            fma_ports: if simd.fma { 2 } else { 0 },
+            add_latency: 4, // Skylake+: ADD goes through the 4-cy FMA pipe
+            mul_latency: 4,
+            fma_latency: 4,
+            load_latency: 5,
+            simd_registers: if simd.avx512f { 32 } else { 16 },
+            simd_width_bytes: if simd.avx512f { 64 } else { 32 },
+        },
+        caches: vec![
+            CacheLevel { name: "L1", size_bytes: l1.0, bytes_per_cy_to_inner: 0, ways: l1.1 },
+            CacheLevel {
+                name: "L2",
+                size_bytes: l2.0,
+                bytes_per_cy_to_inner: 64,
+                ways: l2.1,
+            },
+            CacheLevel {
+                name: "L3",
+                size_bytes: l3.0,
+                bytes_per_cy_to_inner: 32,
+                ways: l3.1,
+            },
+        ],
+        memory: MemoryModel {
+            peak_bw_gbs: 12.0,
+            load_bw_gbs: 10.0,
+            latency_penalty_cy_per_cl: 2.0,
+        },
+        cache_line_bytes: 64,
+        uncore_single_core_factor: 1.0,
+        dram: "unknown (virtualized)",
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn detect_host_is_sane() {
+        let m = detect_host();
+        assert!(m.clock_ghz > 0.5 && m.clock_ghz < 7.0, "clock {}", m.clock_ghz);
+        assert!(m.cores >= 1);
+        assert_eq!(m.caches.len(), 3);
+        assert!(m.caches[0].size_bytes >= 16 * 1024);
+        assert!(m.caches[2].size_bytes > m.caches[1].size_bytes);
+    }
+
+    #[test]
+    fn tsc_calibration_stable() {
+        let a = calibrate_tsc_ghz();
+        let b = calibrate_tsc_ghz();
+        assert!((a - b).abs() / a < 0.2, "a={a} b={b}");
+    }
+
+    #[test]
+    fn host_simd_no_panic() {
+        let s = host_simd();
+        // container built this crate with std::arch paths; sse must exist on
+        // any x86_64
+        #[cfg(target_arch = "x86_64")]
+        assert!(s.sse);
+        let _ = s;
+    }
+}

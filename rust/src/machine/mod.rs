@@ -1,0 +1,228 @@
+//! Machine models: everything Table 1 of the paper says about a socket,
+//! in a form both the analytic ECM model (`crate::ecm`) and the trace-driven
+//! simulator (`crate::sim`) consume.
+//!
+//! A `Machine` is a *description*, not behaviour: ports, pipeline latencies,
+//! cache levels with inter-level bus widths, and the memory interface
+//! (peak/load-only bandwidth plus the paper's empirical per-cache-line
+//! latency penalty).
+
+pub mod detect;
+pub mod presets;
+
+pub use presets::{all_presets, preset, PresetId};
+
+/// Functional unit classes relevant to the dot kernels (paper Table 1 rows
+/// "Load/Store throughput", "ADD/MUL/FMA throughput").
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Unit {
+    Load,
+    Store,
+    Add,
+    Mul,
+    Fma,
+}
+
+/// Core execution resources of one CPU core.
+#[derive(Clone, Debug)]
+pub struct CoreModel {
+    /// number of L1 load ports
+    pub load_ports: u32,
+    /// bytes one load port moves per cycle (16 on SNB/IVB, 32 on HSW/BDW)
+    pub load_port_bytes: u32,
+    /// number of store ports
+    pub store_ports: u32,
+    /// bytes one store port moves per cycle
+    pub store_port_bytes: u32,
+    /// stand-alone ADD/SUB pipes (1 on all four Xeons)
+    pub add_ports: u32,
+    /// MUL pipes (1 on SNB/IVB, 2 on HSW/BDW)
+    pub mul_ports: u32,
+    /// FMA pipes (0 on SNB/IVB, 2 on HSW/BDW)
+    pub fma_ports: u32,
+    /// pipeline latencies in cycles
+    pub add_latency: u32,
+    pub mul_latency: u32,
+    pub fma_latency: u32,
+    pub load_latency: u32,
+    /// architectural SIMD registers available for unrolling (16 for AVX2)
+    pub simd_registers: u32,
+    /// widest native SIMD register in bytes (32 = AVX, 64 = AVX-512)
+    pub simd_width_bytes: u32,
+}
+
+impl CoreModel {
+    /// Port-cycles one instruction of `unit` at `width_bytes` occupies.
+    ///
+    /// Encodes the paper's key micro-architectural point: on SNB/IVB an AVX
+    /// load is split into two 16-byte halves, so only one 32-byte load
+    /// retires per cycle even though there are two load ports.
+    pub fn slots(&self, unit: Unit, width_bytes: u32) -> f64 {
+        match unit {
+            Unit::Load => (width_bytes as f64 / self.load_port_bytes as f64).max(1.0),
+            Unit::Store => (width_bytes as f64 / self.store_port_bytes as f64).max(1.0),
+            // FP pipes are full-width on all modeled machines
+            Unit::Add | Unit::Mul | Unit::Fma => 1.0,
+        }
+    }
+
+    /// Number of ports that can execute `unit`.
+    pub fn ports(&self, unit: Unit) -> u32 {
+        match unit {
+            Unit::Load => self.load_ports,
+            Unit::Store => self.store_ports,
+            Unit::Add => self.add_ports,
+            Unit::Mul => self.mul_ports,
+            Unit::Fma => self.fma_ports,
+        }
+    }
+
+    pub fn latency(&self, unit: Unit) -> u32 {
+        match unit {
+            Unit::Load => self.load_latency,
+            Unit::Store => 1,
+            Unit::Add => self.add_latency,
+            Unit::Mul => self.mul_latency,
+            Unit::Fma => self.fma_latency,
+        }
+    }
+}
+
+/// One cache level (L1 is index 0). `bytes_per_cy_from_inner` is the bus
+/// width toward the *next-inner* level (so for L2 it is the L2→L1 bus).
+#[derive(Clone, Debug)]
+pub struct CacheLevel {
+    pub name: &'static str,
+    pub size_bytes: u64,
+    /// data bus bytes/cycle toward the next-inner level (L1 entry unused)
+    pub bytes_per_cy_to_inner: u32,
+    /// set associativity (used by the LRU cache simulator)
+    pub ways: u32,
+}
+
+/// Memory interface of the socket.
+#[derive(Clone, Debug)]
+pub struct MemoryModel {
+    /// nominal peak bandwidth (GB/s)
+    pub peak_bw_gbs: f64,
+    /// measured load-only bandwidth (GB/s) — what streaming loads see
+    pub load_bw_gbs: f64,
+    /// the paper's empirical latency penalty, cycles per cache line
+    pub latency_penalty_cy_per_cl: f64,
+}
+
+/// A full socket description (Table 1 column).
+#[derive(Clone, Debug)]
+pub struct Machine {
+    pub name: &'static str,
+    pub shorthand: &'static str,
+    pub xeon_model: &'static str,
+    pub year: &'static str,
+    pub clock_ghz: f64,
+    pub cores: u32,
+    pub threads: u32,
+    pub core: CoreModel,
+    /// cache levels, L1 first; all inclusive (Intel through BDW)
+    pub caches: Vec<CacheLevel>,
+    pub memory: MemoryModel,
+    pub cache_line_bytes: u32,
+    /// HSW quirk: Uncore clock drops when one core is active, stretching the
+    /// L3↔L2 transfer time by this factor (5.54/4 on HSW, 1.0 elsewhere).
+    pub uncore_single_core_factor: f64,
+    /// main memory channels description (Table 1 "Main memory" row)
+    pub dram: &'static str,
+}
+
+impl Machine {
+    /// Cycles to move one cache line from memory to L3 at load-only
+    /// bandwidth (Table 1 last row), *excluding* the latency penalty.
+    pub fn t_l3mem_per_cl(&self) -> f64 {
+        self.cache_line_bytes as f64 * self.clock_ghz / self.memory.load_bw_gbs
+    }
+
+    /// Cycles to move one cache line between cache level `outer` (1-based
+    /// level index of the outer cache, e.g. 1 = L2→L1) and the next-inner
+    /// level, accounting for the single-core Uncore quirk on the L3→L2 bus.
+    pub fn t_cache_per_cl(&self, outer: usize, single_core: bool) -> f64 {
+        let lvl = &self.caches[outer];
+        let base = self.cache_line_bytes as f64 / lvl.bytes_per_cy_to_inner as f64;
+        // the Uncore boundary is the L3→L2 bus (outer index 2)
+        if outer == 2 && single_core {
+            base * self.uncore_single_core_factor
+        } else {
+            base
+        }
+    }
+
+    /// Last-level cache size (for sweep classification).
+    pub fn llc_bytes(&self) -> u64 {
+        self.caches.last().map(|c| c.size_bytes).unwrap_or(0)
+    }
+
+    /// Which memory-hierarchy level a working set of `bytes` lives in:
+    /// 0 = L1, ..., caches.len() = main memory.
+    pub fn residence_level(&self, bytes: u64) -> usize {
+        for (i, c) in self.caches.iter().enumerate() {
+            if bytes <= c.size_bytes {
+                return i;
+            }
+        }
+        self.caches.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use presets::*;
+
+    #[test]
+    fn table1_t_l3mem_values() {
+        // Table 1 last row: 3.96 / 3.05 / 2.43 / 3.49 cy per CL
+        let cases = [
+            (PresetId::Snb, 3.96),
+            (PresetId::Ivb, 3.05),
+            (PresetId::Hsw, 2.43),
+            (PresetId::Bdw, 3.49),
+        ];
+        for (id, expect) in cases {
+            let m = preset(id);
+            let got = m.t_l3mem_per_cl();
+            assert!(
+                (got - expect).abs() < 0.02,
+                "{}: t_l3mem {got:.3} != {expect}",
+                m.shorthand
+            );
+        }
+    }
+
+    #[test]
+    fn cache_bus_cycles_per_cl() {
+        let ivb = preset(PresetId::Ivb);
+        assert_eq!(ivb.t_cache_per_cl(1, true), 2.0); // 32 B/cy L2→L1
+        assert_eq!(ivb.t_cache_per_cl(2, true), 2.0); // 32 B/cy L3→L2
+        let hsw = preset(PresetId::Hsw);
+        assert_eq!(hsw.t_cache_per_cl(1, true), 1.0); // 64 B/cy L2→L1
+        // HSW single-core Uncore slowdown: 2 cy * 5.54/4
+        assert!((hsw.t_cache_per_cl(2, true) - 2.77).abs() < 1e-9);
+        assert_eq!(hsw.t_cache_per_cl(2, false), 2.0);
+    }
+
+    #[test]
+    fn avx_load_slots_by_generation() {
+        let ivb = preset(PresetId::Ivb);
+        assert_eq!(ivb.core.slots(Unit::Load, 32), 2.0); // split AVX load
+        assert_eq!(ivb.core.slots(Unit::Load, 16), 1.0);
+        let hsw = preset(PresetId::Hsw);
+        assert_eq!(hsw.core.slots(Unit::Load, 32), 1.0);
+    }
+
+    #[test]
+    fn residence_levels() {
+        let ivb = preset(PresetId::Ivb);
+        assert_eq!(ivb.residence_level(16 * 1024), 0);
+        assert_eq!(ivb.residence_level(100 * 1024), 1);
+        assert_eq!(ivb.residence_level(10 * 1024 * 1024), 2);
+        assert_eq!(ivb.residence_level(200 * 1024 * 1024), 3);
+    }
+}

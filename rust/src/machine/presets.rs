@@ -1,0 +1,250 @@
+//! The four Table-1 sockets, encoded verbatim from the paper, plus the
+//! empirical latency penalties from Table 2.
+//!
+//! | row            | SNB        | IVB        | HSW        | BDW      |
+//! |----------------|-----------|------------|------------|----------|
+//! | Xeon           | E5-2680   | E5-2690 v2 | E5-2695 v3 | D-1540   |
+//! | clock (fixed)  | 2.7 GHz   | 2.2 GHz    | 2.3 GHz    | 1.8 GHz  |
+//! | cores          | 8         | 10         | 14         | 8        |
+//! | L1 ports       | 2×16+1×16 | 2×16+1×16  | 2×32+1×32  | 2×32+1×32|
+//! | L2→L1 bus      | 32 B/cy   | 32 B/cy    | 64 B/cy    | 64 B/cy  |
+//! | L3→L2 bus      | 32 B/cy   | 32 B/cy    | 32 B/cy    | 32 B/cy  |
+//! | LLC            | 20 MiB    | 25 MiB     | 35 MiB     | 12 MiB   |
+//! | load-only BW   | 43.6 GB/s | 46.1 GB/s  | 60.6 GB/s  | 33 GB/s  |
+//! | mem penalty/CL | 2.55      | 1.45       | 5.55       | 0.5      |
+//!
+//! (penalty/CL is half the per-work-unit penalty of Table 2, since the dot
+//! work unit moves two cache lines).
+
+use super::{CacheLevel, CoreModel, Machine, MemoryModel};
+
+/// Identifier for the paper's four testbed sockets.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum PresetId {
+    Snb,
+    Ivb,
+    Hsw,
+    Bdw,
+}
+
+impl PresetId {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "snb" | "sandybridge" => Some(Self::Snb),
+            "ivb" | "ivybridge" => Some(Self::Ivb),
+            "hsw" | "haswell" => Some(Self::Hsw),
+            "bdw" | "broadwell" => Some(Self::Bdw),
+            _ => None,
+        }
+    }
+}
+
+const KIB: u64 = 1024;
+const MIB: u64 = 1024 * 1024;
+
+fn pre_hsw_core() -> CoreModel {
+    CoreModel {
+        load_ports: 2,
+        load_port_bytes: 16,
+        store_ports: 1,
+        store_port_bytes: 16,
+        add_ports: 1,
+        mul_ports: 1,
+        fma_ports: 0,
+        add_latency: 3,
+        mul_latency: 5,
+        fma_latency: 5, // unused (no FMA units)
+        load_latency: 4,
+        simd_registers: 16,
+        simd_width_bytes: 32,
+    }
+}
+
+fn hsw_core() -> CoreModel {
+    CoreModel {
+        load_ports: 2,
+        load_port_bytes: 32,
+        store_ports: 1,
+        store_port_bytes: 32,
+        add_ports: 1, // only one of the two FMA pipes takes stand-alone ADDs
+        mul_ports: 2,
+        fma_ports: 2,
+        add_latency: 3,
+        mul_latency: 5,
+        fma_latency: 5,
+        load_latency: 4,
+        simd_registers: 16,
+        simd_width_bytes: 32,
+    }
+}
+
+fn caches(l3_mib: u64, l2l1_bus: u32) -> Vec<CacheLevel> {
+    vec![
+        CacheLevel { name: "L1", size_bytes: 32 * KIB, bytes_per_cy_to_inner: 0, ways: 8 },
+        CacheLevel { name: "L2", size_bytes: 256 * KIB, bytes_per_cy_to_inner: l2l1_bus, ways: 8 },
+        CacheLevel {
+            name: "L3",
+            size_bytes: l3_mib * MIB,
+            bytes_per_cy_to_inner: 32,
+            ways: 20,
+        },
+    ]
+}
+
+/// SandyBridge-EP, Xeon E5-2680.
+pub fn snb() -> Machine {
+    Machine {
+        name: "SandyBridge-EP",
+        shorthand: "SNB",
+        xeon_model: "E5-2680",
+        year: "03/2012",
+        clock_ghz: 2.7,
+        cores: 8,
+        threads: 16,
+        core: pre_hsw_core(),
+        caches: caches(20, 32),
+        memory: MemoryModel {
+            peak_bw_gbs: 51.2,
+            load_bw_gbs: 43.6,
+            latency_penalty_cy_per_cl: 2.55,
+        },
+        cache_line_bytes: 64,
+        uncore_single_core_factor: 1.0,
+        dram: "4xDDR3-1600",
+    }
+}
+
+/// IvyBridge-EP, Xeon E5-2690 v2 — the paper's primary analysis machine.
+pub fn ivb() -> Machine {
+    Machine {
+        name: "IvyBridge-EP",
+        shorthand: "IVB",
+        xeon_model: "E5-2690 v2",
+        year: "09/2013",
+        clock_ghz: 2.2,
+        cores: 10,
+        threads: 20,
+        core: pre_hsw_core(),
+        caches: caches(25, 32),
+        memory: MemoryModel {
+            peak_bw_gbs: 51.2,
+            load_bw_gbs: 46.1,
+            latency_penalty_cy_per_cl: 1.45,
+        },
+        cache_line_bytes: 64,
+        uncore_single_core_factor: 1.0,
+        dram: "4xDDR3-1866",
+    }
+}
+
+/// Haswell-EP, Xeon E5-2695 v3.
+pub fn hsw() -> Machine {
+    Machine {
+        name: "Haswell-EP",
+        shorthand: "HSW",
+        xeon_model: "E5-2695 v3",
+        year: "09/2014",
+        clock_ghz: 2.3,
+        cores: 14,
+        threads: 28,
+        core: hsw_core(),
+        caches: caches(35, 64),
+        memory: MemoryModel {
+            peak_bw_gbs: 68.3,
+            load_bw_gbs: 60.6,
+            latency_penalty_cy_per_cl: 5.55,
+        },
+        cache_line_bytes: 64,
+        // paper: T_L2L3 is 5.54 cy instead of 4 cy when one core is active
+        uncore_single_core_factor: 5.54 / 4.0,
+        dram: "4xDDR4-2133",
+    }
+}
+
+/// Broadwell Xeon D-1540 (pre-release silicon in the paper).
+pub fn bdw() -> Machine {
+    Machine {
+        name: "Broadwell-D",
+        shorthand: "BDW",
+        xeon_model: "D-1540",
+        year: "03/2015",
+        clock_ghz: 1.8,
+        cores: 8,
+        threads: 16,
+        core: hsw_core(),
+        caches: caches(12, 64),
+        memory: MemoryModel {
+            peak_bw_gbs: 34.1,
+            load_bw_gbs: 33.0,
+            latency_penalty_cy_per_cl: 0.5,
+        },
+        cache_line_bytes: 64,
+        uncore_single_core_factor: 1.0,
+        dram: "4xDDR4-2133",
+    }
+}
+
+pub fn preset(id: PresetId) -> Machine {
+    match id {
+        PresetId::Snb => snb(),
+        PresetId::Ivb => ivb(),
+        PresetId::Hsw => hsw(),
+        PresetId::Bdw => bdw(),
+    }
+}
+
+/// All four sockets in paper order.
+pub fn all_presets() -> Vec<Machine> {
+    vec![snb(), ivb(), hsw(), bdw()]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_shorthands() {
+        assert_eq!(PresetId::parse("IVB"), Some(PresetId::Ivb));
+        assert_eq!(PresetId::parse("haswell"), Some(PresetId::Hsw));
+        assert_eq!(PresetId::parse("k6"), None);
+    }
+
+    #[test]
+    fn table1_clock_and_cores() {
+        let rows = [
+            (snb(), 2.7, 8),
+            (ivb(), 2.2, 10),
+            (hsw(), 2.3, 14),
+            (bdw(), 1.8, 8),
+        ];
+        for (m, f, c) in rows {
+            assert_eq!(m.clock_ghz, f, "{}", m.shorthand);
+            assert_eq!(m.cores, c, "{}", m.shorthand);
+            assert_eq!(m.threads, 2 * c, "{}", m.shorthand);
+        }
+    }
+
+    #[test]
+    fn table1_llc_sizes() {
+        assert_eq!(snb().llc_bytes(), 20 * MIB);
+        assert_eq!(ivb().llc_bytes(), 25 * MIB);
+        assert_eq!(hsw().llc_bytes(), 35 * MIB);
+        assert_eq!(bdw().llc_bytes(), 12 * MIB);
+    }
+
+    #[test]
+    fn fma_only_on_hsw_bdw() {
+        assert_eq!(snb().core.fma_ports, 0);
+        assert_eq!(ivb().core.fma_ports, 0);
+        assert_eq!(hsw().core.fma_ports, 2);
+        assert_eq!(bdw().core.fma_ports, 2);
+    }
+
+    #[test]
+    fn roofline_light_speed_ivb() {
+        // paper §3: P_BW = (1 update / 8 B) * b_S = 5.76 GUP/s on IVB (SP)
+        let m = ivb();
+        let p_bw = m.memory.load_bw_gbs / 8.0;
+        assert!((p_bw - 5.76).abs() < 0.01, "{p_bw}");
+    }
+}

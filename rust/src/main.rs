@@ -1,0 +1,9 @@
+//! `repro` — CLI entry point: regenerate every table and figure of the
+//! paper, run validations, sweeps and the host microbenchmarks.
+//!
+//! Run `repro help` for the experiment list.
+
+fn main() {
+    let code = kahan_ecm::coordinator::cli_main();
+    std::process::exit(code);
+}

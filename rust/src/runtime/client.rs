@@ -1,0 +1,265 @@
+//! The PJRT client wrapper: compile-once / execute-many over the manifest's
+//! HLO-text artifacts (pattern from /opt/xla-example/load_hlo).
+
+use super::manifest::{ArtifactMeta, Manifest};
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::HashMap;
+
+/// A loaded PJRT runtime: CPU client + executable cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    cache: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client and load the manifest from the default
+    /// artifacts directory.
+    pub fn new() -> Result<Self> {
+        Self::with_manifest(Manifest::load_default()?)
+    }
+
+    pub fn with_manifest(manifest: Manifest) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        Ok(Runtime { client, manifest, cache: HashMap::new() })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (or fetch from cache) the executable for `name`.
+    pub fn load(&mut self, name: &str) -> Result<&xla::PjRtLoadedExecutable> {
+        if !self.cache.contains_key(name) {
+            let meta = self
+                .manifest
+                .get(name)
+                .ok_or_else(|| anyhow!("unknown artifact `{name}`"))?
+                .clone();
+            let path = self.manifest.hlo_path(&meta);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("non-utf8 path")?,
+            )
+            .map_err(|e| anyhow!("parse {path:?}: {e:?}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compile {name}: {e:?}"))?;
+            self.cache.insert(name.to_string(), exe);
+        }
+        Ok(self.cache.get(name).unwrap())
+    }
+
+    /// Number of executables currently compiled.
+    pub fn cached(&self) -> usize {
+        self.cache.len()
+    }
+
+    fn execute_scalar_out(
+        exe: &xla::PjRtLoadedExecutable,
+        inputs: &[xla::Literal],
+    ) -> Result<Vec<f32>> {
+        let result = exe
+            .execute::<xla::Literal>(inputs)
+            .map_err(|e| anyhow!("execute: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("to_literal: {e:?}"))?;
+        let out = result.to_tuple1().map_err(|e| anyhow!("tuple: {e:?}"))?;
+        out.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e:?}"))
+    }
+
+    fn execute_scalar_out_f64(
+        exe: &xla::PjRtLoadedExecutable,
+        inputs: &[xla::Literal],
+    ) -> Result<Vec<f64>> {
+        let result = exe
+            .execute::<xla::Literal>(inputs)
+            .map_err(|e| anyhow!("execute: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("to_literal: {e:?}"))?;
+        let out = result.to_tuple1().map_err(|e| anyhow!("tuple: {e:?}"))?;
+        out.to_vec::<f64>().map_err(|e| anyhow!("to_vec: {e:?}"))
+    }
+
+    /// Pad `v` with zeros to `n` (zeros are neutral for dot/ksum, including
+    /// under compensation).
+    fn pad_f32(v: &[f32], n: usize) -> Vec<f32> {
+        let mut out = v.to_vec();
+        out.resize(n, 0.0);
+        out
+    }
+
+    fn pad_f64(v: &[f64], n: usize) -> Vec<f64> {
+        let mut out = v.to_vec();
+        out.resize(n, 0.0);
+        out
+    }
+
+    /// Run a (non-batched) f32 dot artifact on `a`,`b` (padded as needed).
+    pub fn dot_f32(&mut self, name: &str, a: &[f32], b: &[f32]) -> Result<f32> {
+        let meta = self.meta_checked(name, "f32", false)?;
+        if a.len() != b.len() {
+            bail!("length mismatch {} vs {}", a.len(), b.len());
+        }
+        if a.len() > meta.n {
+            bail!("input {} exceeds artifact size {}", a.len(), meta.n);
+        }
+        let n = meta.n;
+        let exe = self.load(name)?;
+        let xa = xla::Literal::vec1(&Self::pad_f32(a, n));
+        let xb = xla::Literal::vec1(&Self::pad_f32(b, n));
+        let v = Self::execute_scalar_out(exe, &[xa, xb])?;
+        Ok(v[0])
+    }
+
+    /// Run a (non-batched) f64 dot artifact.
+    pub fn dot_f64(&mut self, name: &str, a: &[f64], b: &[f64]) -> Result<f64> {
+        let meta = self.meta_checked(name, "f64", false)?;
+        if a.len() != b.len() {
+            bail!("length mismatch");
+        }
+        if a.len() > meta.n {
+            bail!("input too long");
+        }
+        let n = meta.n;
+        let exe = self.load(name)?;
+        let xa = xla::Literal::vec1(&Self::pad_f64(a, n));
+        let xb = xla::Literal::vec1(&Self::pad_f64(b, n));
+        let v = Self::execute_scalar_out_f64(exe, &[xa, xb])?;
+        Ok(v[0])
+    }
+
+    /// Run a f32 Kahan-sum artifact.
+    pub fn ksum_f32(&mut self, name: &str, x: &[f32]) -> Result<f32> {
+        let meta = self
+            .manifest
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown artifact `{name}`"))?
+            .clone();
+        if meta.kind != "ksum" {
+            bail!("{name} is not a ksum artifact");
+        }
+        if x.len() > meta.n {
+            bail!("input too long");
+        }
+        let n = meta.n;
+        let exe = self.load(name)?;
+        let xa = xla::Literal::vec1(&Self::pad_f32(x, n));
+        let v = Self::execute_scalar_out(exe, &[xa])?;
+        Ok(v[0])
+    }
+
+    /// Run a batched f32 dot artifact: `pairs` must have exactly
+    /// `meta.batch` rows (pad with zero rows to fill a batch).
+    pub fn batched_dot_f32(&mut self, name: &str, pairs: &[(Vec<f32>, Vec<f32>)]) -> Result<Vec<f32>> {
+        let meta = self.meta_checked(name, "f32", true)?;
+        if pairs.len() > meta.batch {
+            bail!("batch {} exceeds artifact batch {}", pairs.len(), meta.batch);
+        }
+        let (bsz, n) = (meta.batch, meta.n);
+        let mut xs = vec![0.0f32; bsz * n];
+        let mut ys = vec![0.0f32; bsz * n];
+        for (row, (a, b)) in pairs.iter().enumerate() {
+            if a.len() != b.len() || a.len() > n {
+                bail!("row {row}: bad lengths {} {}", a.len(), b.len());
+            }
+            xs[row * n..row * n + a.len()].copy_from_slice(a);
+            ys[row * n..row * n + b.len()].copy_from_slice(b);
+        }
+        let exe = self.load(name)?;
+        let xa = xla::Literal::vec1(&xs)
+            .reshape(&[bsz as i64, n as i64])
+            .map_err(|e| anyhow!("reshape: {e:?}"))?;
+        let xb = xla::Literal::vec1(&ys)
+            .reshape(&[bsz as i64, n as i64])
+            .map_err(|e| anyhow!("reshape: {e:?}"))?;
+        let v = Self::execute_scalar_out(exe, &[xa, xb])?;
+        Ok(v[..pairs.len()].to_vec())
+    }
+
+    fn meta_checked(&self, name: &str, dtype: &str, batched: bool) -> Result<ArtifactMeta> {
+        let meta = self
+            .manifest
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown artifact `{name}`"))?;
+        if meta.dtype != dtype {
+            bail!("{name} has dtype {}, want {dtype}", meta.dtype);
+        }
+        if batched && meta.batch == 0 {
+            bail!("{name} is not batched");
+        }
+        if !batched && meta.batch != 0 {
+            bail!("{name} is batched");
+        }
+        Ok(meta.clone())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::accuracy::exact::exact_dot_f32;
+    use crate::util::Rng;
+
+    fn runtime_or_skip() -> Option<Runtime> {
+        if !super::super::manifest::artifacts_dir().join("manifest.tsv").exists() {
+            eprintln!("skipping runtime test: run `make artifacts` first");
+            return None;
+        }
+        Some(Runtime::new().expect("runtime"))
+    }
+
+    #[test]
+    fn dot_f32_matches_exact() {
+        let Some(mut rt) = runtime_or_skip() else { return };
+        let mut rng = Rng::new(1);
+        let a = rng.normal_f32_vec(4096);
+        let b = rng.normal_f32_vec(4096);
+        let got = rt.dot_f32("dot_kahan_f32_n4096", &a, &b).unwrap() as f64;
+        let want = exact_dot_f32(&a, &b);
+        assert!((got - want).abs() < 1e-2, "got {got} want {want}");
+        // naive artifact too
+        let gn = rt.dot_f32("dot_naive_f32_n4096", &a, &b).unwrap() as f64;
+        assert!((gn - want).abs() < 1e-1);
+    }
+
+    #[test]
+    fn dot_f32_padding_matches_short_input() {
+        let Some(mut rt) = runtime_or_skip() else { return };
+        let mut rng = Rng::new(2);
+        let a = rng.normal_f32_vec(1000);
+        let b = rng.normal_f32_vec(1000);
+        let got = rt.dot_f32("dot_kahan_f32_n4096", &a, &b).unwrap() as f64;
+        let want = exact_dot_f32(&a, &b);
+        assert!((got - want).abs() < 1e-2, "got {got} want {want}");
+    }
+
+    #[test]
+    fn executable_cache_reuses() {
+        let Some(mut rt) = runtime_or_skip() else { return };
+        let a = vec![1.0f32; 8];
+        let b = vec![2.0f32; 8];
+        rt.dot_f32("dot_kahan_f32_n4096", &a, &b).unwrap();
+        assert_eq!(rt.cached(), 1);
+        rt.dot_f32("dot_kahan_f32_n4096", &a, &b).unwrap();
+        assert_eq!(rt.cached(), 1);
+    }
+
+    #[test]
+    fn error_paths() {
+        let Some(mut rt) = runtime_or_skip() else { return };
+        assert!(rt.dot_f32("nope", &[], &[]).is_err());
+        let too_long = vec![0.0f32; 5000];
+        assert!(rt.dot_f32("dot_kahan_f32_n4096", &too_long, &too_long).is_err());
+        let a = vec![0.0f32; 8];
+        let b = vec![0.0f32; 9];
+        assert!(rt.dot_f32("dot_kahan_f32_n4096", &a, &b).is_err());
+        // dtype guard
+        assert!(rt.dot_f32("dot_kahan_f64_n65536", &a, &a).is_err());
+    }
+}

@@ -1,0 +1,177 @@
+//! Artifact manifest: the TSV index `aot.py` writes next to the HLO files.
+
+use anyhow::{bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// Metadata for one AOT-compiled computation.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ArtifactMeta {
+    pub name: String,
+    /// "dot" or "ksum"
+    pub kind: String,
+    /// "naive" or "kahan"
+    pub variant: String,
+    /// "f32" or "f64"
+    pub dtype: String,
+    /// 0 for unbatched
+    pub batch: usize,
+    pub n: usize,
+    pub block: usize,
+    pub lanes: usize,
+    pub file: String,
+}
+
+impl ArtifactMeta {
+    pub fn num_inputs(&self) -> usize {
+        if self.kind == "ksum" {
+            1
+        } else {
+            2
+        }
+    }
+}
+
+/// Parsed manifest plus its directory.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub entries: Vec<ArtifactMeta>,
+}
+
+/// Locate the artifacts directory: $KAHAN_ECM_ARTIFACTS, then
+/// `<manifest dir>/artifacts` relative to the crate root, then ./artifacts.
+pub fn artifacts_dir() -> PathBuf {
+    if let Ok(p) = std::env::var("KAHAN_ECM_ARTIFACTS") {
+        return PathBuf::from(p);
+    }
+    let candidates = [
+        concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"),
+        "artifacts",
+    ];
+    for c in candidates {
+        let p = PathBuf::from(c);
+        if p.join("manifest.tsv").exists() {
+            return p;
+        }
+    }
+    PathBuf::from(candidates[0])
+}
+
+impl Manifest {
+    /// Load `manifest.tsv` from `dir`.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join("manifest.tsv");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?}; run `make artifacts` first"))?;
+        let mut entries = Vec::new();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let f: Vec<&str> = line.split('\t').collect();
+            if f.len() != 9 {
+                bail!("manifest line {} has {} fields, want 9", lineno + 1, f.len());
+            }
+            entries.push(ArtifactMeta {
+                name: f[0].to_string(),
+                kind: f[1].to_string(),
+                variant: f[2].to_string(),
+                dtype: f[3].to_string(),
+                batch: f[4].parse().context("batch")?,
+                n: f[5].parse().context("n")?,
+                block: f[6].parse().context("block")?,
+                lanes: f[7].parse().context("lanes")?,
+                file: f[8].to_string(),
+            });
+        }
+        if entries.is_empty() {
+            bail!("manifest {path:?} has no entries");
+        }
+        Ok(Manifest { dir: dir.to_path_buf(), entries })
+    }
+
+    /// Load from the default location.
+    pub fn load_default() -> Result<Self> {
+        Self::load(&artifacts_dir())
+    }
+
+    pub fn get(&self, name: &str) -> Option<&ArtifactMeta> {
+        self.entries.iter().find(|e| e.name == name)
+    }
+
+    /// Find the smallest artifact matching kind/variant/dtype that can hold
+    /// `n` elements (used by the service to route requests).
+    pub fn best_fit(&self, kind: &str, variant: &str, dtype: &str, n: usize) -> Option<&ArtifactMeta> {
+        self.entries
+            .iter()
+            .filter(|e| e.kind == kind && e.variant == variant && e.dtype == dtype)
+            .filter(|e| e.batch == 0 && e.n >= n)
+            .min_by_key(|e| e.n)
+    }
+
+    pub fn hlo_path(&self, meta: &ArtifactMeta) -> PathBuf {
+        self.dir.join(&meta.file)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_manifest(dir: &Path, body: &str) {
+        std::fs::create_dir_all(dir).unwrap();
+        std::fs::write(dir.join("manifest.tsv"), body).unwrap();
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        let dir = std::env::temp_dir().join("kahan_ecm_manifest_test");
+        write_manifest(
+            &dir,
+            "# name\tkind\tvariant\tdtype\tbatch\tn\tblock\tlanes\tfile\n\
+             dot_kahan_f32_n4096\tdot\tkahan\tf32\t0\t4096\t4096\t1024\tdot_kahan_f32_n4096.hlo.txt\n",
+        );
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.entries.len(), 1);
+        let e = m.get("dot_kahan_f32_n4096").unwrap();
+        assert_eq!(e.n, 4096);
+        assert_eq!(e.num_inputs(), 2);
+        assert!(m.hlo_path(e).to_string_lossy().ends_with(".hlo.txt"));
+    }
+
+    #[test]
+    fn best_fit_prefers_smallest_sufficient() {
+        let dir = std::env::temp_dir().join("kahan_ecm_manifest_fit");
+        write_manifest(
+            &dir,
+            "a\tdot\tkahan\tf32\t0\t4096\t4096\t1024\ta.hlo.txt\n\
+             b\tdot\tkahan\tf32\t0\t65536\t8192\t1024\tb.hlo.txt\n\
+             c\tdot\tkahan\tf32\t8\t16384\t8192\t1024\tc.hlo.txt\n",
+        );
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.best_fit("dot", "kahan", "f32", 1000).unwrap().name, "a");
+        assert_eq!(m.best_fit("dot", "kahan", "f32", 5000).unwrap().name, "b");
+        assert!(m.best_fit("dot", "kahan", "f32", 100_000).is_none());
+        assert!(m.best_fit("dot", "naive", "f32", 10).is_none());
+    }
+
+    #[test]
+    fn malformed_rows_rejected() {
+        let dir = std::env::temp_dir().join("kahan_ecm_manifest_bad");
+        write_manifest(&dir, "only\tthree\tfields\n");
+        assert!(Manifest::load(&dir).is_err());
+    }
+
+    #[test]
+    fn real_manifest_if_built() {
+        // exercised fully once `make artifacts` has run; skip silently in
+        // a bare checkout
+        let dir = artifacts_dir();
+        if dir.join("manifest.tsv").exists() {
+            let m = Manifest::load(&dir).unwrap();
+            assert!(m.entries.len() >= 8);
+            assert!(m.get("dot_kahan_f32_n65536").is_some());
+        }
+    }
+}

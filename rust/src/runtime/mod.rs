@@ -1,0 +1,12 @@
+//! PJRT runtime: load the AOT-lowered HLO artifacts (`artifacts/*.hlo.txt`)
+//! and execute them on the CPU PJRT client from the Rust hot path.
+//!
+//! Python never runs here — `make artifacts` produced the HLO text once at
+//! build time (see `python/compile/aot.py` and /opt/xla-example/README.md
+//! for why the interchange format is HLO *text*).
+
+pub mod client;
+pub mod manifest;
+
+pub use client::Runtime;
+pub use manifest::{artifacts_dir, ArtifactMeta, Manifest};

@@ -1,0 +1,347 @@
+//! Single-core sweep engine: the virtual testbed's replacement for running
+//! likwid-bench on real silicon.
+//!
+//! For a given kernel and per-stream working-set size it:
+//! 1. runs the port scoreboard to get the steady-state in-core time,
+//! 2. streams both arrays through the LRU cache hierarchy to find where
+//!    each cache line is actually served from (no residence heuristics),
+//! 3. composes core and transfer time per the ECM overlap rule, adding the
+//!    level-specific miss-handling overheads (`params`) where the core has
+//!    no slack to hide them, and
+//! 4. applies a small deterministic jitter so curves look like measurements
+//!    and downstream consumers cannot fit to exact model output.
+//!
+//! Output is in the paper's Fig. 2 unit: **cycles per cache line**.
+
+use super::cache::CacheSim;
+use super::core::steady_state_cycles_per_unit;
+use super::params::SimParams;
+use crate::isa::{KernelDesc, Op};
+use crate::machine::Machine;
+
+/// One point of a working-set sweep.
+#[derive(Clone, Copy, Debug)]
+pub struct SweepPoint {
+    /// total working set (all streams), bytes
+    pub ws_bytes: u64,
+    /// simulated "measured" cycles per cache line
+    pub cy_per_cl: f64,
+    /// equivalent performance in GUP/s
+    pub gups: f64,
+    /// fraction of lines served per level [L1, L2, L3, Mem]
+    pub service_mix: [f64; 4],
+}
+
+/// Load-port cycles per unit of work (T_nOL), computed directly from the
+/// instruction stream.
+fn load_port_cycles_per_unit(machine: &Machine, kernel: &KernelDesc) -> f64 {
+    let c = &machine.core;
+    let slots: f64 = kernel
+        .insts
+        .iter()
+        .filter(|i| i.op == Op::Load)
+        .map(|i| c.slots(crate::machine::Unit::Load, i.width_bytes))
+        .sum();
+    slots / kernel.units_per_stream_pass as f64 / c.load_ports as f64
+}
+
+/// Deterministic per-point jitter in [-1, 1] derived from the inputs.
+fn jitter_unit(ws: u64, salt: u64) -> f64 {
+    let mut h = ws ^ salt.wrapping_mul(0x9E3779B97F4A7C15);
+    h ^= h >> 33;
+    h = h.wrapping_mul(0xFF51AFD7ED558CCD);
+    h ^= h >> 33;
+    (h >> 11) as f64 / (1u64 << 53) as f64 * 2.0 - 1.0
+}
+
+/// Service mix for a steady-state cyclic traversal of the kernel's streams,
+/// from the real LRU hierarchy. `elems` is the per-stream element count.
+fn service_mix(machine: &Machine, kernel: &KernelDesc, elems: u64) -> [f64; 4] {
+    let line = machine.cache_line_bytes as u64;
+    let stream_bytes = elems * kernel.elem_bytes as u64;
+    let total = stream_bytes * kernel.n_streams as u64;
+
+    // beyond the LLC, cyclic LRU provably serves everything from memory
+    // (zero reuse distance fits); keep simulating only inside a 25% margin
+    // where set-imbalance effects could still matter
+    if total > machine.llc_bytes() + machine.llc_bytes() / 4 {
+        return [0.0, 0.0, 0.0, 1.0];
+    }
+
+    let mut sim = CacheSim::new(machine);
+    // streams placed 1 GiB apart like likwid-bench's separate arrays
+    let bases: Vec<u64> = (0..kernel.n_streams as u64).map(|s| s << 32).collect();
+    let cls_per_stream = (stream_bytes + line - 1) / line;
+    // warm-up traversal + measured traversal, interleaved like the kernel
+    for pass in 0..2 {
+        if pass == 1 {
+            sim.reset_counters();
+        }
+        for cl in 0..cls_per_stream {
+            for b in &bases {
+                sim.access(b + cl * line);
+            }
+        }
+    }
+    let tot = sim.accesses as f64;
+    [
+        sim.served[0] as f64 / tot,
+        sim.served[1] as f64 / tot,
+        sim.served[2] as f64 / tot,
+        sim.served[3] as f64 / tot,
+    ]
+}
+
+/// Simulate one working-set size. `elems` is per-stream element count;
+/// `single_core` selects the Uncore clock behaviour.
+pub fn simulate_working_set(
+    machine: &Machine,
+    kernel: &KernelDesc,
+    elems: u64,
+    single_core: bool,
+) -> SweepPoint {
+    let t_core = steady_state_cycles_per_unit(&machine.core, kernel);
+    simulate_working_set_with_core(machine, kernel, elems, single_core, t_core)
+}
+
+/// Ablation entry point: simulate with the miss-handling overheads zeroed
+/// (and no jitter). The result collapses onto the analytic ECM model,
+/// demonstrating the overheads are the *only* non-Table-1 behaviour in the
+/// simulator (see `coordinator::ablation`).
+pub fn simulate_working_set_no_overhead(
+    machine: &Machine,
+    kernel: &KernelDesc,
+    elems: u64,
+    single_core: bool,
+) -> SweepPoint {
+    let t_core = steady_state_cycles_per_unit(&machine.core, kernel);
+    let params =
+        SimParams { l2_miss_overhead_cy: 0.0, l3_miss_overhead_cy: 0.0, jitter_rel: 0.0 };
+    simulate_with(machine, kernel, elems, single_core, t_core, params)
+}
+
+/// Same as [`simulate_working_set`] with a precomputed in-core time —
+/// sweeps reuse one scoreboard run across all sizes (§Perf change 4).
+pub fn simulate_working_set_with_core(
+    machine: &Machine,
+    kernel: &KernelDesc,
+    elems: u64,
+    single_core: bool,
+    t_core: f64,
+) -> SweepPoint {
+    let params = SimParams::for_machine(machine.shorthand);
+    simulate_with(machine, kernel, elems, single_core, t_core, params)
+}
+
+fn simulate_with(
+    machine: &Machine,
+    kernel: &KernelDesc,
+    elems: u64,
+    single_core: bool,
+    t_core: f64,
+    params: SimParams,
+) -> SweepPoint {
+    let t_nol = load_port_cycles_per_unit(machine, kernel);
+    let mix = service_mix(machine, kernel, elems);
+
+    // per-CL transfer cost and overhead by serving level
+    let mut transfer_per_cl = [0.0f64; 4];
+    let mut overhead_per_cl = [0.0f64; 4];
+    for (level, (t, oh)) in transfer_per_cl.iter_mut().zip(overhead_per_cl.iter_mut()).enumerate()
+    {
+        for j in 1..=level.min(machine.caches.len() - 1) {
+            *t += machine.t_cache_per_cl(j, single_core);
+        }
+        if level == machine.caches.len() {
+            // unreachable with 3 cache levels + the [f64;4] layout below
+        }
+        *oh = match level {
+            1 => params.l2_miss_overhead_cy,
+            2 => params.l3_miss_overhead_cy,
+            _ => 0.0,
+        };
+    }
+    // memory level (index 3): all cache buses + DRAM time + latency penalty
+    transfer_per_cl[3] = machine.t_cache_per_cl(1, single_core)
+        + machine.t_cache_per_cl(2, single_core)
+        + machine.t_l3mem_per_cl()
+        + machine.memory.latency_penalty_cy_per_cl;
+
+    // reads + write-backs cross every boundary for written streams
+    let cls = kernel.cl_transfers_per_unit() as f64;
+    let transfer_unit: f64 =
+        cls * mix.iter().zip(transfer_per_cl).map(|(f, t)| f * t).sum::<f64>();
+    let oh_unit: f64 = cls * mix.iter().zip(overhead_per_cl).map(|(f, t)| f * t).sum::<f64>();
+
+    // ECM overlap rule, then account for miss-handling overhead the core
+    // cannot hide: slack is the FP-work surplus over the serialized
+    // load+transfer path
+    let serialized = t_nol + transfer_unit;
+    let base = t_core.max(serialized);
+    let slack = base - serialized;
+    let mut t_unit = base + (oh_unit - slack).max(0.0);
+
+    // deterministic "measurement" jitter
+    t_unit *= 1.0 + params.jitter_rel * jitter_unit(elems, kernel.insts.len() as u64);
+
+    let ws_bytes = elems * kernel.bytes_per_iter(); // total across streams
+    let cy_per_cl = t_unit / cls;
+    let gups = kernel.iters_per_unit as f64 * machine.clock_ghz / t_unit;
+    SweepPoint { ws_bytes, cy_per_cl, gups, service_mix: mix }
+}
+
+/// Default Fig. 2 x-axis: log-spaced total working sets from 8 KiB to 1 GiB.
+pub fn default_sweep_sizes() -> Vec<u64> {
+    let mut sizes = Vec::new();
+    let mut ws = 8 * 1024u64;
+    while ws <= 1 << 30 {
+        sizes.push(ws);
+        // 4 points per octave
+        let next = ws as f64 * 2f64.powf(0.25);
+        ws = next.round() as u64;
+    }
+    sizes
+}
+
+/// Sweep the working set; `sizes` are **total** bytes across streams.
+pub fn simulate_sweep(
+    machine: &Machine,
+    kernel: &KernelDesc,
+    sizes: &[u64],
+    single_core: bool,
+) -> Vec<SweepPoint> {
+    let t_core = steady_state_cycles_per_unit(&machine.core, kernel);
+    sizes
+        .iter()
+        .map(|&total| {
+            let elems = total / kernel.bytes_per_iter().max(1);
+            simulate_working_set_with_core(machine, kernel, elems.max(64), single_core, t_core)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ecm;
+    use crate::isa::{generate, Precision, Simd, Variant};
+    use crate::machine::presets::ivb;
+
+    const KIB: u64 = 1024;
+    const MIB: u64 = 1024 * 1024;
+
+    fn point(kernel: &KernelDesc, total_ws: u64) -> SweepPoint {
+        let m = ivb();
+        let elems = total_ws / kernel.bytes_per_iter();
+        simulate_working_set(&m, kernel, elems, true)
+    }
+
+    /// Fig. 2 anchor values on IVB (SP), in cycles/CL (= cy per unit / 2):
+    /// scalar flat ~32 everywhere; SSE ~8 in L1..L3; AVX ~4 in L1/L2.
+    #[test]
+    fn fig2_anchors() {
+        let scalar = generate(Variant::Kahan, Simd::Scalar, Precision::Sp, 0);
+        let sse = generate(Variant::Kahan, Simd::Sse, Precision::Sp, 0);
+        let avx = generate(Variant::Kahan, Simd::Avx, Precision::Sp, 0);
+
+        for ws in [16 * KIB, 128 * KIB, 4 * MIB, 256 * MIB] {
+            let p = point(&scalar, ws);
+            assert!((p.cy_per_cl - 32.0).abs() < 2.0, "scalar at {ws}: {}", p.cy_per_cl);
+        }
+        // SSE: flat 8 cy/CL up to L3
+        for ws in [16 * KIB, 128 * KIB, 4 * MIB] {
+            let p = point(&sse, ws);
+            assert!((p.cy_per_cl - 8.0).abs() < 0.8, "sse at {ws}: {}", p.cy_per_cl);
+        }
+        // AVX: 4 cy/CL in L1; slightly above in L2 (the paper's "falls
+        // slightly short of the prediction in L2")
+        let p = point(&avx, 16 * KIB);
+        assert!((p.cy_per_cl - 4.0).abs() < 0.4, "avx L1: {}", p.cy_per_cl);
+        let p = point(&avx, 128 * KIB);
+        assert!(
+            p.cy_per_cl > 4.05 && p.cy_per_cl < 5.5,
+            "avx L2 should exceed the 4 cy/CL prediction slightly: {}",
+            p.cy_per_cl
+        );
+        // memory: ~10.5 cy/CL (21 cy per unit)
+        let p = point(&avx, 256 * MIB);
+        assert!((p.cy_per_cl - 10.5).abs() < 1.0, "avx mem: {}", p.cy_per_cl);
+    }
+
+    /// Naive AVX and Kahan AVX must coincide from L2 outward (the headline).
+    #[test]
+    fn naive_equals_kahan_beyond_l2() {
+        let naive = generate(Variant::Naive, Simd::Avx, Precision::Sp, 0);
+        let kahan = generate(Variant::Kahan, Simd::Avx, Precision::Sp, 0);
+        for ws in [128 * KIB, 4 * MIB, 256 * MIB] {
+            let pn = point(&naive, ws);
+            let pk = point(&kahan, ws);
+            let ratio = pk.cy_per_cl / pn.cy_per_cl;
+            assert!(
+                (0.93..=1.07).contains(&ratio),
+                "ws {ws}: kahan/naive = {ratio:.3}"
+            );
+        }
+        // ...but in L1 Kahan pays 2x (8 vs 4 cy/unit)
+        let pn = point(&naive, 16 * KIB);
+        let pk = point(&kahan, 16 * KIB);
+        let ratio = pk.cy_per_cl / pn.cy_per_cl;
+        assert!((1.7..=2.3).contains(&ratio), "L1 kahan/naive = {ratio:.3}");
+    }
+
+    /// The simulated curve must track the ECM prediction within 25% at every
+    /// residence level (the paper's model-quality claim), while NOT being
+    /// identical to it (it is a measurement stand-in, not the model).
+    #[test]
+    fn tracks_ecm_within_tolerance() {
+        let m = ivb();
+        for variant in [Variant::Naive, Variant::Kahan] {
+            for simd in [Simd::Scalar, Simd::Sse, Simd::Avx] {
+                let k = generate(variant, simd, Precision::Sp, 0);
+                let e = ecm::build(&m, &k, true);
+                for (level, ws) in [16 * KIB, 128 * KIB, 4 * MIB, 256 * MIB].iter().enumerate() {
+                    let p = point(&k, *ws);
+                    let pred = e.prediction(level) / 2.0; // per CL
+                    let rel = (p.cy_per_cl - pred).abs() / pred;
+                    assert!(
+                        rel < 0.25,
+                        "{variant:?}/{simd:?} level {level}: sim {:.2} vs ecm {pred:.2}",
+                        p.cy_per_cl
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn service_mix_transitions() {
+        let k = generate(Variant::Kahan, Simd::Avx, Precision::Sp, 0);
+        let p = point(&k, 16 * KIB);
+        assert!(p.service_mix[0] > 0.95, "L1 resident: {:?}", p.service_mix);
+        let p = point(&k, 4 * MIB);
+        assert!(p.service_mix[2] > 0.9, "L3 resident: {:?}", p.service_mix);
+        let p = point(&k, 512 * MIB);
+        assert!(p.service_mix[3] > 0.99, "mem resident: {:?}", p.service_mix);
+    }
+
+    #[test]
+    fn sweep_is_monotone_ish_and_deterministic() {
+        let m = ivb();
+        let k = generate(Variant::Kahan, Simd::Avx, Precision::Sp, 0);
+        let sizes: Vec<u64> = vec![16 * KIB, 64 * KIB, 512 * KIB, 4 * MIB, 64 * MIB];
+        let a = simulate_sweep(&m, &k, &sizes, true);
+        let b = simulate_sweep(&m, &k, &sizes, true);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.cy_per_cl, y.cy_per_cl, "determinism");
+        }
+        assert!(a.last().unwrap().cy_per_cl > a[0].cy_per_cl * 1.5);
+    }
+
+    #[test]
+    fn default_sizes_cover_hierarchy() {
+        let s = default_sweep_sizes();
+        assert!(s.len() > 40);
+        assert!(*s.first().unwrap() <= 16 * KIB);
+        assert!(*s.last().unwrap() >= 512 * MIB);
+    }
+}

@@ -1,0 +1,29 @@
+//! The virtual testbed: a trace-driven simulator standing in for the
+//! paper's four Xeon sockets (DESIGN.md §1, substitution table).
+//!
+//! Components:
+//! * [`core`] — port scoreboard executing the kernel's virtual instruction
+//!   stream with pipeline latencies and loop-carried dependencies;
+//! * [`cache`] — set-associative, inclusive, LRU cache hierarchy simulated
+//!   at cache-line granularity;
+//! * [`params`] — per-socket behavioural constants that Table 1 does not
+//!   carry (miss-handling overheads of the L2/Uncore datapaths);
+//! * [`engine`] — single-core working-set sweep: composes core time and
+//!   transfer time per the ECM overlap rules but with *simulated* residence
+//!   and miss overheads, producing "measured-like" cycles per cache line;
+//! * [`multicore`] — n cores sharing the memory interface (capacity
+//!   queueing), producing the saturation curves of Figs. 3 and 4b.
+//!
+//! The simulator never reads ECM *predictions*; it shares only the machine
+//! description and the kernel instruction streams, so model-vs-simulation
+//! comparisons are meaningful (they disagree exactly where the paper's
+//! model-vs-measurement plots disagree).
+
+pub mod cache;
+pub mod core;
+pub mod engine;
+pub mod multicore;
+pub mod params;
+
+pub use engine::{simulate_sweep, simulate_working_set, SweepPoint};
+pub use multicore::simulate_scaling;

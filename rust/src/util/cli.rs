@@ -1,0 +1,138 @@
+//! Tiny CLI argument parser (offline replacement for `clap`).
+//!
+//! Grammar: `repro <subcommand> [--key value]... [--flag]...`. Unknown keys
+//! are rejected at `finish()` so typos fail loudly.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    kv: BTreeMap<String, String>,
+    flags: Vec<String>,
+    consumed: std::cell::RefCell<Vec<String>>,
+}
+
+#[derive(Debug)]
+pub struct CliError(pub String);
+
+impl std::fmt::Display for CliError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+impl std::error::Error for CliError {}
+
+impl Args {
+    /// Parse from an iterator of raw arguments (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Result<Self, CliError> {
+        let mut it = raw.into_iter().peekable();
+        let subcommand = match it.peek() {
+            Some(s) if !s.starts_with("--") => it.next(),
+            _ => None,
+        };
+        let mut kv = BTreeMap::new();
+        let mut flags = Vec::new();
+        while let Some(tok) = it.next() {
+            let key = tok
+                .strip_prefix("--")
+                .ok_or_else(|| CliError(format!("expected --option, got `{tok}`")))?
+                .to_string();
+            match it.peek() {
+                Some(v) if !v.starts_with("--") => {
+                    kv.insert(key, it.next().unwrap());
+                }
+                _ => flags.push(key),
+            }
+        }
+        Ok(Self { subcommand, kv, flags, consumed: Default::default() })
+    }
+
+    pub fn from_env() -> Result<Self, CliError> {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    /// String option with default.
+    pub fn opt(&self, key: &str, default: &str) -> String {
+        self.consumed.borrow_mut().push(key.to_string());
+        self.kv.get(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    /// Optional string option.
+    pub fn opt_maybe(&self, key: &str) -> Option<String> {
+        self.consumed.borrow_mut().push(key.to_string());
+        self.kv.get(key).cloned()
+    }
+
+    /// Typed numeric option with default.
+    pub fn num<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T, CliError> {
+        self.consumed.borrow_mut().push(key.to_string());
+        match self.kv.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse::<T>()
+                .map_err(|_| CliError(format!("--{key}: cannot parse `{v}`"))),
+        }
+    }
+
+    /// Boolean flag (present or absent).
+    pub fn flag(&self, key: &str) -> bool {
+        self.consumed.borrow_mut().push(key.to_string());
+        self.flags.iter().any(|f| f == key)
+    }
+
+    /// Reject any option that no `opt`/`num`/`flag` call asked about.
+    pub fn finish(&self) -> Result<(), CliError> {
+        let seen = self.consumed.borrow();
+        for k in self.kv.keys().chain(self.flags.iter()) {
+            if !seen.iter().any(|s| s == k) {
+                return Err(CliError(format!("unknown option --{k}")));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(toks: &[&str]) -> Args {
+        Args::parse(toks.iter().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let a = parse(&["fig2", "--arch", "ivb", "--csv"]);
+        assert_eq!(a.subcommand.as_deref(), Some("fig2"));
+        assert_eq!(a.opt("arch", "snb"), "ivb");
+        assert!(a.flag("csv"));
+        a.finish().unwrap();
+    }
+
+    #[test]
+    fn numeric_parse_and_default() {
+        let a = parse(&["x", "--cores", "10"]);
+        assert_eq!(a.num("cores", 1u32).unwrap(), 10);
+        assert_eq!(a.num("reps", 3u32).unwrap(), 3);
+    }
+
+    #[test]
+    fn bad_number_is_error() {
+        let a = parse(&["x", "--cores", "ten"]);
+        assert!(a.num("cores", 1u32).is_err());
+    }
+
+    #[test]
+    fn unknown_option_rejected() {
+        let a = parse(&["x", "--bogus", "1"]);
+        assert!(a.finish().is_err());
+    }
+
+    #[test]
+    fn no_subcommand() {
+        let a = parse(&["--help"]);
+        assert_eq!(a.subcommand, None);
+        assert!(a.flag("help"));
+    }
+}

@@ -1,0 +1,52 @@
+//! Minimal CSV writer for experiment data series (the files a plotting tool
+//! or the paper's gnuplot scripts would consume).
+
+use std::fs::File;
+use std::io::{BufWriter, Write as _};
+use std::path::Path;
+
+/// Write `rows` (plus a header) to `path` as CSV. Values containing commas
+/// or quotes are quoted per RFC 4180.
+pub fn write_csv<P: AsRef<Path>>(
+    path: P,
+    header: &[&str],
+    rows: &[Vec<String>],
+) -> std::io::Result<()> {
+    if let Some(parent) = path.as_ref().parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    let mut w = BufWriter::new(File::create(path)?);
+    writeln!(w, "{}", header.iter().map(|c| escape(c)).collect::<Vec<_>>().join(","))?;
+    for row in rows {
+        writeln!(w, "{}", row.iter().map(|c| escape(c)).collect::<Vec<_>>().join(","))?;
+    }
+    Ok(())
+}
+
+fn escape(cell: &str) -> String {
+    if cell.contains(',') || cell.contains('"') || cell.contains('\n') {
+        format!("\"{}\"", cell.replace('"', "\"\""))
+    } else {
+        cell.to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_simple() {
+        let dir = std::env::temp_dir().join("kahan_ecm_csv_test");
+        let p = dir.join("t.csv");
+        write_csv(&p, &["a", "b"], &[vec!["1".into(), "x,y".into()]]).unwrap();
+        let s = std::fs::read_to_string(&p).unwrap();
+        assert_eq!(s, "a,b\n1,\"x,y\"\n");
+    }
+
+    #[test]
+    fn escape_quotes() {
+        assert_eq!(escape("he said \"hi\""), "\"he said \"\"hi\"\"\"");
+        assert_eq!(escape("plain"), "plain");
+    }
+}

@@ -1,0 +1,75 @@
+//! Number formatting helpers shared by the table/notation printers.
+
+/// Format a cycle count the way the paper does: integers bare, otherwise
+/// up to two decimals with trailing zeros trimmed ("6.1", "5.54", "8").
+pub fn cy(v: f64) -> String {
+    if !v.is_finite() {
+        return format!("{v}");
+    }
+    let rounded = (v * 100.0).round() / 100.0;
+    if (rounded - rounded.round()).abs() < 1e-9 {
+        format!("{}", rounded.round() as i64)
+    } else {
+        let s = format!("{rounded:.2}");
+        s.trim_end_matches('0').trim_end_matches('.').to_string()
+    }
+}
+
+/// Format a performance number with 3 significant digits ("8.80", "0.55").
+pub fn perf(v: f64) -> String {
+    if !v.is_finite() {
+        return format!("{v}");
+    }
+    if v == 0.0 {
+        return "0.00".into();
+    }
+    let digits = v.abs().log10().floor() as i32;
+    let decimals = (2 - digits).max(0) as usize;
+    format!("{v:.decimals$}")
+}
+
+/// Format a byte count with binary units ("32 KiB", "2.5 MiB").
+pub fn bytes(b: u64) -> String {
+    const UNITS: [&str; 5] = ["B", "KiB", "MiB", "GiB", "TiB"];
+    let mut v = b as f64;
+    let mut u = 0;
+    while v >= 1024.0 && u < UNITS.len() - 1 {
+        v /= 1024.0;
+        u += 1;
+    }
+    if (v - v.round()).abs() < 1e-9 {
+        format!("{} {}", v.round() as u64, UNITS[u])
+    } else {
+        format!("{:.1} {}", v, UNITS[u])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cy_matches_paper_style() {
+        assert_eq!(cy(8.0), "8");
+        assert_eq!(cy(6.1), "6.1");
+        assert_eq!(cy(5.54), "5.54");
+        assert_eq!(cy(18.100000001), "18.1");
+        assert_eq!(cy(7.92), "7.92");
+    }
+
+    #[test]
+    fn perf_three_sig_digits() {
+        assert_eq!(perf(8.8), "8.80");
+        assert_eq!(perf(0.55), "0.550");
+        assert_eq!(perf(4.4), "4.40");
+        assert_eq!(perf(28.0), "28.0");
+    }
+
+    #[test]
+    fn bytes_units() {
+        assert_eq!(bytes(64), "64 B");
+        assert_eq!(bytes(32 * 1024), "32 KiB");
+        assert_eq!(bytes(20 * 1024 * 1024), "20 MiB");
+        assert_eq!(bytes(2560), "2.5 KiB");
+    }
+}

@@ -1,0 +1,16 @@
+//! Small shared utilities: deterministic PRNG, statistics, table/CSV
+//! rendering, a mini property-testing harness, and a CLI argument parser.
+//!
+//! The container is offline, so these replace `rand`, `proptest`, `clap`,
+//! `prettytable` and `csv` (see Cargo.toml header note).
+
+pub mod cli;
+pub mod csv;
+pub mod fmt;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod table;
+
+pub use rng::Rng;
+pub use table::Table;

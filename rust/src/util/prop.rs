@@ -1,0 +1,94 @@
+//! Mini property-testing harness (offline replacement for `proptest`).
+//!
+//! Runs a property over `cases` deterministic random inputs derived from a
+//! base seed; on failure it reports the case seed so the exact input can be
+//! replayed with `check_one`. No shrinking — inputs here are small enough to
+//! debug directly from the seed.
+
+use crate::util::rng::Rng;
+
+/// Result of a property over one generated input.
+pub type PropResult = Result<(), String>;
+
+/// Run `prop` over `cases` seeded inputs. Panics (test-failure style) with
+/// the first failing seed and message.
+pub fn check(name: &str, cases: u64, mut prop: impl FnMut(&mut Rng) -> PropResult) {
+    let base = fnv1a(name.as_bytes());
+    for case in 0..cases {
+        let seed = base ^ (case.wrapping_mul(0x9E3779B97F4A7C15));
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!("property `{name}` failed at case {case} (seed {seed:#x}): {msg}");
+        }
+    }
+}
+
+/// Replay a single case by seed (for debugging a `check` failure).
+pub fn check_one(seed: u64, mut prop: impl FnMut(&mut Rng) -> PropResult) {
+    let mut rng = Rng::new(seed);
+    if let Err(msg) = prop(&mut rng) {
+        panic!("property failed (seed {seed:#x}): {msg}");
+    }
+}
+
+/// Assert helper: build an `Err` with formatted context unless `cond`.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)*) => {
+        if !$cond {
+            return Err(format!($($fmt)*));
+        }
+    };
+}
+
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut n = 0;
+        check("always-true", 50, |_| {
+            n += 1;
+            Ok(())
+        });
+        assert_eq!(n, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property `fails`")]
+    fn failing_property_panics_with_seed() {
+        check("fails", 10, |r| {
+            let v = r.uniform();
+            if v >= 0.0 {
+                Err(format!("v={v}"))
+            } else {
+                Ok(())
+            }
+        });
+    }
+
+    #[test]
+    fn deterministic_inputs_per_name() {
+        let mut first: Vec<u64> = vec![];
+        check("det", 5, |r| {
+            first.push(r.next_u64());
+            Ok(())
+        });
+        let mut second: Vec<u64> = vec![];
+        check("det", 5, |r| {
+            second.push(r.next_u64());
+            Ok(())
+        });
+        assert_eq!(first, second);
+    }
+}

@@ -1,0 +1,137 @@
+//! Aligned ASCII / Markdown table rendering for experiment reports.
+
+/// A simple column-aligned table. Rows are strings; alignment is computed at
+/// render time. Used by every experiment report and by the benches.
+#[derive(Clone, Debug, Default)]
+pub struct Table {
+    title: String,
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str) -> Self {
+        Self { title: title.to_string(), ..Default::default() }
+    }
+
+    pub fn headers<S: Into<String>, I: IntoIterator<Item = S>>(mut self, hs: I) -> Self {
+        self.headers = hs.into_iter().map(Into::into).collect();
+        self
+    }
+
+    pub fn row<S: Into<String>, I: IntoIterator<Item = S>>(&mut self, cells: I) -> &mut Self {
+        self.rows.push(cells.into_iter().map(Into::into).collect());
+        self
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    pub fn n_rows(&self) -> usize {
+        self.rows.len()
+    }
+
+    fn widths(&self) -> Vec<usize> {
+        let ncol = self
+            .rows
+            .iter()
+            .map(|r| r.len())
+            .chain(std::iter::once(self.headers.len()))
+            .max()
+            .unwrap_or(0);
+        let mut w = vec![0usize; ncol];
+        for (i, h) in self.headers.iter().enumerate() {
+            w[i] = w[i].max(h.chars().count());
+        }
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                w[i] = w[i].max(c.chars().count());
+            }
+        }
+        w
+    }
+
+    /// Render as an aligned plain-text table.
+    pub fn render(&self) -> String {
+        let w = self.widths();
+        let mut out = String::new();
+        if !self.title.is_empty() {
+            out.push_str(&format!("## {}\n", self.title));
+        }
+        let fmt_row = |cells: &[String]| -> String {
+            let mut line = String::new();
+            for (i, width) in w.iter().enumerate() {
+                let cell = cells.get(i).map(String::as_str).unwrap_or("");
+                line.push_str(&format!("{cell:<width$}"));
+                if i + 1 != w.len() {
+                    line.push_str("  ");
+                }
+            }
+            line.trim_end().to_string()
+        };
+        if !self.headers.is_empty() {
+            out.push_str(&fmt_row(&self.headers));
+            out.push('\n');
+            let total: usize = w.iter().sum::<usize>() + 2 * (w.len().saturating_sub(1));
+            out.push_str(&"-".repeat(total));
+            out.push('\n');
+        }
+        for r in &self.rows {
+            out.push_str(&fmt_row(r));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Render as GitHub-flavored Markdown.
+    pub fn render_markdown(&self) -> String {
+        let mut out = String::new();
+        if !self.title.is_empty() {
+            out.push_str(&format!("### {}\n\n", self.title));
+        }
+        let ncol = self.widths().len();
+        let hdr: Vec<String> = (0..ncol)
+            .map(|i| self.headers.get(i).cloned().unwrap_or_default())
+            .collect();
+        out.push_str(&format!("| {} |\n", hdr.join(" | ")));
+        out.push_str(&format!("|{}\n", "---|".repeat(ncol)));
+        for r in &self.rows {
+            let cells: Vec<String> =
+                (0..ncol).map(|i| r.get(i).cloned().unwrap_or_default()).collect();
+            out.push_str(&format!("| {} |\n", cells.join(" | ")));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn aligns_columns() {
+        let mut t = Table::new("t").headers(["a", "long-header"]);
+        t.row(["xxxxxx", "1"]);
+        t.row(["y", "22"]);
+        let r = t.render();
+        let lines: Vec<&str> = r.lines().collect();
+        assert!(lines[1].starts_with("a       "));
+        assert!(lines[3].contains("xxxxxx  1"));
+    }
+
+    #[test]
+    fn markdown_shape() {
+        let mut t = Table::new("").headers(["x", "y"]);
+        t.row(["1", "2"]);
+        let md = t.render_markdown();
+        assert!(md.starts_with("| x | y |\n|---|---|\n| 1 | 2 |"));
+    }
+
+    #[test]
+    fn ragged_rows_ok() {
+        let mut t = Table::new("").headers(["a"]);
+        t.row(["1", "2", "3"]);
+        assert!(t.render().contains("3"));
+    }
+}

@@ -1,0 +1,182 @@
+//! Integration: the full three-layer stack — AOT artifacts (JAX/Pallas,
+//! built by `make artifacts`) loaded and executed from Rust via PJRT,
+//! including the batching service. These tests REQUIRE artifacts; `make
+//! test` builds them first.
+
+use kahan_ecm::accuracy::exact::{exact_dot_f32, exact_dot_f64};
+use kahan_ecm::coordinator::{DotService, ServiceConfig};
+use kahan_ecm::runtime::{artifacts_dir, Manifest, Runtime};
+use kahan_ecm::util::Rng;
+
+fn require_artifacts() {
+    assert!(
+        artifacts_dir().join("manifest.tsv").exists(),
+        "artifacts missing — run `make artifacts` before `cargo test`"
+    );
+}
+
+#[test]
+fn manifest_covers_required_artifacts() {
+    require_artifacts();
+    let m = Manifest::load_default().unwrap();
+    for name in [
+        "dot_naive_f32_n4096",
+        "dot_kahan_f32_n4096",
+        "dot_kahan_f32_n65536",
+        "dot_naive_f32_n65536",
+        "dot_kahan_f64_n65536",
+        "dot_naive_f64_n65536",
+        "ksum_f32_n65536",
+        "batched_dot_kahan_f32_b8_n16384",
+        "batched_dot_naive_f32_b8_n16384",
+    ] {
+        assert!(m.get(name).is_some(), "missing artifact {name}");
+        let meta = m.get(name).unwrap();
+        assert!(m.hlo_path(meta).exists(), "missing HLO file for {name}");
+    }
+}
+
+#[test]
+fn all_unbatched_f32_artifacts_compute_correct_dots() {
+    require_artifacts();
+    let mut rt = Runtime::new().unwrap();
+    let entries: Vec<_> = rt
+        .manifest()
+        .entries
+        .iter()
+        .filter(|e| e.kind == "dot" && e.dtype == "f32" && e.batch == 0 && e.n <= 65536)
+        .cloned()
+        .collect();
+    assert!(entries.len() >= 4);
+    let mut rng = Rng::new(17);
+    for meta in entries {
+        let a = rng.normal_f32_vec(meta.n);
+        let b = rng.normal_f32_vec(meta.n);
+        let got = rt.dot_f32(&meta.name, &a, &b).unwrap() as f64;
+        let want = exact_dot_f32(&a, &b);
+        let scale: f64 =
+            a.iter().zip(&b).map(|(x, y)| (x * y).abs() as f64).sum::<f64>().max(1.0);
+        assert!(
+            (got - want).abs() / scale < 1e-5,
+            "{}: got {got}, want {want}",
+            meta.name
+        );
+    }
+}
+
+#[test]
+fn f64_artifact_has_f64_accuracy() {
+    require_artifacts();
+    let mut rt = Runtime::new().unwrap();
+    let mut rng = Rng::new(23);
+    let a = rng.normal_f64_vec(65536);
+    let b = rng.normal_f64_vec(65536);
+    let got = rt.dot_f64("dot_kahan_f64_n65536", &a, &b).unwrap();
+    let want = exact_dot_f64(&a, &b);
+    let scale: f64 = a.iter().zip(&b).map(|(x, y)| (x * y).abs()).sum();
+    assert!((got - want).abs() / scale < 1e-14, "got {got}, want {want}");
+}
+
+#[test]
+fn kahan_artifact_beats_naive_on_large_accumulator() {
+    require_artifacts();
+    let mut rt = Runtime::new().unwrap();
+    let n = 65536;
+    let mut rng = Rng::new(29);
+    let mut a: Vec<f32> = (0..n).map(|_| rng.uniform() as f32).collect();
+    a[0] = 1e8;
+    let ones = vec![1.0f32; n];
+    let exact = exact_dot_f32(&a, &ones);
+    let kahan = rt.dot_f32("dot_kahan_f32_n65536", &a, &ones).unwrap() as f64;
+    let naive = rt.dot_f32("dot_naive_f32_n65536", &a, &ones).unwrap() as f64;
+    let ek = (kahan - exact).abs() / exact;
+    let en = (naive - exact).abs() / exact;
+    // the lane-parallel naive artifact already splits sums across 1024
+    // lanes, so its error is far below sequential naive; Kahan must still
+    // not be worse, and must be near-exact
+    assert!(ek < 1e-6, "kahan rel err {ek:e}");
+    assert!(ek <= en + 1e-9, "kahan {ek:e} vs naive {en:e}");
+}
+
+#[test]
+fn ksum_artifact_sums() {
+    require_artifacts();
+    let mut rt = Runtime::new().unwrap();
+    let mut rng = Rng::new(31);
+    let x = rng.normal_f32_vec(65536);
+    let got = rt.ksum_f32("ksum_f32_n65536", &x).unwrap() as f64;
+    let want = exact_dot_f32(&x, &vec![1.0f32; x.len()]);
+    assert!((got - want).abs() < 1e-2, "got {got} want {want}");
+}
+
+#[test]
+fn batched_artifact_matches_singles() {
+    require_artifacts();
+    let mut rt = Runtime::new().unwrap();
+    let mut rng = Rng::new(37);
+    let pairs: Vec<(Vec<f32>, Vec<f32>)> = (0..5)
+        .map(|i| {
+            let n = 1000 + 500 * i; // ragged: exercises padding
+            (rng.normal_f32_vec(n), rng.normal_f32_vec(n))
+        })
+        .collect();
+    let batched = rt.batched_dot_f32("batched_dot_kahan_f32_b8_n16384", &pairs).unwrap();
+    assert_eq!(batched.len(), 5);
+    for (i, (a, b)) in pairs.iter().enumerate() {
+        let want = exact_dot_f32(a, b);
+        assert!(
+            (batched[i] as f64 - want).abs() < 1e-2,
+            "row {i}: {} vs {want}",
+            batched[i]
+        );
+    }
+}
+
+#[test]
+fn service_full_workload_with_errors_and_batching() {
+    require_artifacts();
+    let (svc, client) = DotService::start(ServiceConfig::default()).unwrap();
+    let mut rng = Rng::new(41);
+
+    // mix of good requests, an oversized one, and a length-mismatched one
+    let mut rxs = Vec::new();
+    let mut wants = Vec::new();
+    for i in 0..8u64 {
+        let a = rng.normal_f32_vec(3000);
+        let b = rng.normal_f32_vec(3000);
+        wants.push(exact_dot_f32(&a, &b));
+        rxs.push(client.submit(i, if i % 2 == 0 { "kahan" } else { "naive" }, a, b));
+    }
+    let bad_big = client.submit(100, "kahan", vec![0.0; 1 << 21], vec![0.0; 1 << 21]);
+    let bad_len = client.submit(101, "kahan", vec![0.0; 10], vec![0.0; 11]);
+
+    for (i, rx) in rxs.into_iter().enumerate() {
+        let resp = rx.recv().unwrap();
+        let v = resp.value.expect("good request") as f64;
+        assert!((v - wants[i]).abs() < 1e-2);
+    }
+    assert!(bad_big.recv().unwrap().value.is_err(), "oversized must error");
+    assert!(bad_len.recv().unwrap().value.is_err(), "mismatch must error");
+
+    let stats = svc.stop();
+    assert_eq!(stats.requests, 10);
+    assert!(stats.errors >= 1);
+}
+
+#[test]
+fn hlo_artifacts_are_text_not_proto() {
+    require_artifacts();
+    let m = Manifest::load_default().unwrap();
+    for e in &m.entries {
+        let head: String = std::fs::read_to_string(m.hlo_path(e))
+            .unwrap()
+            .chars()
+            .take(64)
+            .collect();
+        assert!(
+            head.starts_with("HloModule"),
+            "{}: artifacts must be HLO text (xla_extension 0.5.1 rejects jax>=0.5 protos)",
+            e.name
+        );
+    }
+}

@@ -1,0 +1,130 @@
+//! Integration: the paper's published numbers, end to end through the
+//! public API (machine presets -> kernel generation -> ECM -> simulator).
+
+use kahan_ecm::coordinator::{experiments, validate};
+use kahan_ecm::ecm;
+use kahan_ecm::isa::{generate, paper_kernels, Precision, Simd, Variant};
+use kahan_ecm::machine::{all_presets, presets};
+
+#[test]
+fn every_paper_number_within_tolerance() {
+    let checks = validate::run_all();
+    let failures: Vec<String> = checks
+        .iter()
+        .filter(|c| !c.pass())
+        .map(|c| format!("{}: paper {} vs ours {:.4}", c.name, c.expected, c.got))
+        .collect();
+    assert!(
+        failures.is_empty(),
+        "{} of {} checks failed:\n{}",
+        failures.len(),
+        checks.len(),
+        failures.join("\n")
+    );
+}
+
+#[test]
+fn validation_report_renders() {
+    let (table, ok) = validate::report();
+    assert!(ok);
+    let r = table.render();
+    assert!(r.contains("PASS"));
+    assert!(!r.contains("FAIL"));
+}
+
+#[test]
+fn table2_full_render_matches_paper_rows() {
+    let r = experiments::table2().render();
+    // every socket's performance row, as printed in the paper
+    for s in [
+        "{5.40 | 5.40 | 3.60 | 1.73}",
+        "{4.40 | 4.40 | 2.93 | 1.68}",
+        "{4.60 | 4.60 | 3.86 | 1.44}",
+        "{3.60 | 3.60 | 3.60 | 1.80}",
+    ] {
+        assert!(r.contains(s), "missing {s} in\n{r}");
+    }
+}
+
+/// The paper's overall conclusion, §5: "the Kahan algorithm comes with no
+/// performance penalties ... in the L2 cache, the L3 cache, and in memory
+/// if implemented optimally" — checked across ALL four sockets and both
+/// precisions on the simulated testbed.
+#[test]
+fn kahan_for_free_on_every_socket() {
+    for m in all_presets() {
+        for prec in [Precision::Sp, Precision::Dp] {
+            let naive = generate(Variant::Naive, Simd::Avx, prec, 0);
+            let kahan = generate(Variant::Kahan, Simd::Avx, prec, 0);
+            let en = ecm::build(&m, &naive, true);
+            let ek = ecm::build(&m, &kahan, true);
+            for level in 2..4 {
+                // L3 and memory: free on every socket
+                let ratio = ek.prediction(level) / en.prediction(level);
+                assert!(
+                    ratio <= 1.35,
+                    "{} {} level {level}: kahan/naive = {ratio:.2}",
+                    m.shorthand,
+                    prec.name()
+                );
+            }
+            // memory exactly free
+            let ratio = ek.prediction(3) / en.prediction(3);
+            assert!((ratio - 1.0).abs() < 1e-9, "{} mem ratio {ratio}", m.shorthand);
+        }
+    }
+}
+
+#[test]
+fn kernel_zoo_is_complete_for_both_precisions() {
+    for prec in [Precision::Sp, Precision::Dp] {
+        let zoo = paper_kernels(prec);
+        assert_eq!(zoo.len(), 4);
+        // every kernel feeds the model without panicking on every socket
+        for m in all_presets() {
+            for k in &zoo {
+                let e = ecm::build(&m, k, true);
+                assert!(e.prediction(3) > 0.0);
+                assert!(e.saturation_cores() >= 1);
+            }
+        }
+    }
+}
+
+/// Cross-validation: analytic ECM core time vs the trace-driven scoreboard,
+/// over the full kernel zoo and all sockets — the two must agree within 15%
+/// because they consume the same instruction streams.
+#[test]
+fn ecm_and_scoreboard_agree_everywhere() {
+    for m in all_presets() {
+        for prec in [Precision::Sp, Precision::Dp] {
+            for k in paper_kernels(prec) {
+                let e = ecm::build(&m, &k, true);
+                let sim = kahan_ecm::sim::core::steady_state_cycles_per_unit(&m.core, &k);
+                let ana = e.prediction(0);
+                let rel = (sim - ana).abs() / ana;
+                assert!(
+                    rel < 0.15,
+                    "{} {}: scoreboard {sim:.2} vs ECM {ana:.2}",
+                    m.shorthand,
+                    k.name
+                );
+            }
+        }
+    }
+}
+
+/// The DP/SP relationship of §3: SIMD predictions in cycles are identical,
+/// scalar DP is exactly half the scalar SP cycle count.
+#[test]
+fn dp_sp_cycle_relationships() {
+    let m = presets::ivb();
+    let sp = ecm::build(&m, &generate(Variant::Kahan, Simd::Avx, Precision::Sp, 0), true);
+    let dp = ecm::build(&m, &generate(Variant::Kahan, Simd::Avx, Precision::Dp, 0), true);
+    for level in 0..4 {
+        assert!((sp.prediction(level) - dp.prediction(level)).abs() < 1e-9);
+    }
+    let sp_s = ecm::build(&m, &generate(Variant::Kahan, Simd::Scalar, Precision::Sp, 0), true);
+    let dp_s = ecm::build(&m, &generate(Variant::Kahan, Simd::Scalar, Precision::Dp, 0), true);
+    assert_eq!(sp_s.prediction(0), 2.0 * dp_s.prediction(0));
+}

@@ -1,0 +1,320 @@
+//! Property-based integration tests on the simulator and model invariants
+//! (hand-rolled harness in `util::prop`; proptest is unavailable offline).
+
+use kahan_ecm::ecm;
+use kahan_ecm::isa::{generate, generate_ext, Precision, Simd, Variant};
+use kahan_ecm::machine::{all_presets, presets::ivb};
+use kahan_ecm::prop_assert;
+use kahan_ecm::sim;
+use kahan_ecm::util::prop::check;
+
+fn random_kernel(rng: &mut kahan_ecm::util::Rng) -> kahan_ecm::isa::KernelDesc {
+    let variant = match rng.below(3) {
+        0 => Variant::Naive,
+        1 => Variant::Kahan,
+        _ => Variant::KahanFma,
+    };
+    let simd = match rng.below(4) {
+        0 => Simd::Scalar,
+        1 => Simd::Sse,
+        2 => Simd::Avx,
+        _ => Simd::Avx512,
+    };
+    let prec = if rng.below(2) == 0 { Precision::Sp } else { Precision::Dp };
+    let unroll = rng.below(8) as usize; // 0 = auto
+    generate(variant, simd, prec, unroll)
+}
+
+/// ECM predictions are monotone in residence level: deeper data can never be
+/// faster.
+#[test]
+fn prop_ecm_monotone_in_level() {
+    check("ecm-monotone-level", 100, |rng| {
+        let m = &all_presets()[rng.below(4) as usize];
+        let k = random_kernel(rng);
+        let e = ecm::build(m, &k, rng.below(2) == 0);
+        let p = e.predictions();
+        for w in p.windows(2) {
+            prop_assert!(w[1] >= w[0] - 1e-9, "{}: {:?}", k.name, p);
+        }
+        Ok(())
+    });
+}
+
+/// T_ECM >= both of its overlap components (Eq. 1 lower bounds).
+#[test]
+fn prop_ecm_respects_overlap_bounds() {
+    check("ecm-overlap-bounds", 100, |rng| {
+        let m = &all_presets()[rng.below(4) as usize];
+        let k = random_kernel(rng);
+        let e = ecm::build(m, &k, true);
+        for level in 0..4 {
+            let p = e.prediction(level);
+            prop_assert!(p >= e.t_ol - 1e-9, "T_ECM < T_OL");
+            prop_assert!(p >= e.t_nol - 1e-9, "T_ECM < T_nOL");
+        }
+        Ok(())
+    });
+}
+
+/// More unrolling never makes the ECM in-core time worse (until the
+/// register budget caps it).
+#[test]
+fn prop_unroll_never_hurts_core_time() {
+    check("unroll-monotone", 60, |rng| {
+        let m = ivb();
+        let variant = if rng.below(2) == 0 { Variant::Naive } else { Variant::Kahan };
+        let simd = if rng.below(2) == 0 { Simd::Sse } else { Simd::Avx };
+        let u = 1 + rng.below(6) as usize;
+        let k1 = generate_ext(variant, simd, Precision::Sp, u, None);
+        let k2 = generate_ext(variant, simd, Precision::Sp, u + 1, None);
+        let e1 = ecm::build(&m, &k1, true).prediction(0);
+        let e2 = ecm::build(&m, &k2, true).prediction(0);
+        prop_assert!(e2 <= e1 + 1e-9, "unroll {u}->{}: {e1} -> {e2}", u + 1);
+        Ok(())
+    });
+}
+
+/// The simulator's sweep is weakly monotone in working-set size (up to its
+/// deterministic jitter) and always at least the in-core time.
+#[test]
+fn prop_sim_sweep_monotone_in_ws() {
+    check("sim-monotone-ws", 25, |rng| {
+        let m = &all_presets()[rng.below(4) as usize];
+        let k = random_kernel(rng);
+        let t_core = sim::core::steady_state_cycles_per_unit(&m.core, &k);
+        let mut prev = 0.0f64;
+        for ws_kib in [8u64, 64, 1024, 8192, 262_144] {
+            let elems = ws_kib * 1024 / k.bytes_per_iter();
+            let p = sim::simulate_working_set(m, &k, elems.max(64), true);
+            prop_assert!(
+                p.cy_per_cl >= prev * 0.93,
+                "{} on {}: {} then {}",
+                k.name,
+                m.shorthand,
+                prev,
+                p.cy_per_cl
+            );
+            prop_assert!(
+                p.cy_per_cl * k.cls_per_unit() as f64 >= t_core * 0.93,
+                "below core time"
+            );
+            prev = prev.max(p.cy_per_cl);
+        }
+        Ok(())
+    });
+}
+
+/// Cache-sim conservation: every access is served by exactly one level.
+#[test]
+fn prop_cache_sim_conservation() {
+    check("cache-conservation", 30, |rng| {
+        let m = &all_presets()[rng.below(4) as usize];
+        let mut cs = sim::cache::CacheSim::new(m);
+        let n = 1000 + rng.below(20_000);
+        for _ in 0..n {
+            // random-ish strided mix of two streams
+            let s = rng.below(2) << 30;
+            cs.access(s + rng.below(1 << 22));
+        }
+        let served: u64 = cs.served.iter().sum();
+        prop_assert!(served == cs.accesses, "{} vs {}", served, cs.accesses);
+        prop_assert!(cs.accesses == n, "access count");
+        Ok(())
+    });
+}
+
+/// Repeated small-set accesses eventually all hit L1 (cache warms up).
+#[test]
+fn prop_cache_warms_up() {
+    check("cache-warmup", 20, |rng| {
+        let m = ivb();
+        let mut cs = sim::cache::CacheSim::new(&m);
+        let lines = 1 + rng.below(400); // <= 25 KiB, fits L1
+        for _ in 0..3 {
+            for i in 0..lines {
+                cs.access(i * 64);
+            }
+        }
+        cs.reset_counters();
+        for i in 0..lines {
+            cs.access(i * 64);
+        }
+        prop_assert!(cs.served[0] == lines, "{} of {} hit L1", cs.served[0], lines);
+        Ok(())
+    });
+}
+
+/// Multicore scaling: monotone in cores, capped by the roofline, and
+/// linear before the knee.
+#[test]
+fn prop_scaling_invariants() {
+    check("scaling-invariants", 20, |rng| {
+        let m = &all_presets()[rng.below(4) as usize];
+        let k = random_kernel(rng);
+        let pts = sim::simulate_scaling(m, &k, 64 * 1024 * 1024, m.cores);
+        let roof = m.memory.load_bw_gbs / k.bytes_per_iter() as f64;
+        for w in pts.windows(2) {
+            prop_assert!(w[1].gups >= w[0].gups - 1e-9, "non-monotone");
+        }
+        for p in &pts {
+            prop_assert!(p.gups <= roof * 1.02, "{} exceeds roofline {roof}", p.gups);
+            prop_assert!(p.bw_utilization <= 1.0 + 1e-9, "utilization");
+        }
+        // linearity before saturation
+        if pts.len() >= 2 && pts[1].bw_utilization < 1.0 {
+            let lin = pts[1].gups / pts[0].gups;
+            prop_assert!((lin - 2.0).abs() < 0.02, "2-core linearity {lin}");
+        }
+        Ok(())
+    });
+}
+
+/// Host kernels vs virtual kernels: the ISA generator's instruction counts
+/// must match what the real AVX2 kernel does per unit (4 loads, 2 mul,
+/// 8 adds per 16 SP iterations — the §3 counting).
+#[test]
+fn isa_counts_match_real_kernel_structure() {
+    let k = generate(Variant::Kahan, Simd::Avx, Precision::Sp, 0);
+    let per_unit = |op: kahan_ecm::isa::Op| {
+        k.insts.iter().filter(|i| i.op == op).count() as f64 / k.units_per_stream_pass as f64
+    };
+    assert_eq!(per_unit(kahan_ecm::isa::Op::Load), 4.0);
+    assert_eq!(per_unit(kahan_ecm::isa::Op::Mul), 2.0);
+    assert_eq!(per_unit(kahan_ecm::isa::Op::Add), 8.0);
+}
+
+// ---------------------------------------------------------------------------
+// §5 generalization: the summation kernel family (one stream, no multiply)
+// ---------------------------------------------------------------------------
+
+/// ECM for the Kahan SUM on IVB (SP, AVX): one stream means half the loads
+/// and half the transfer traffic of dot — {8 || 2 | 2 | 2 | ~3+1.45}:
+/// ADD-bound flat through L3, and "for free" vs the naive sum in memory.
+#[test]
+fn sum_kernel_ecm_shapes() {
+    use kahan_ecm::isa::kernelgen::generate_sum;
+    let m = ivb();
+    let kahan = generate_sum(Variant::Kahan, Simd::Avx, Precision::Sp, 0);
+    let naive = generate_sum(Variant::Naive, Simd::Avx, Precision::Sp, 0);
+    assert_eq!(kahan.n_streams, 1);
+    let ek = ecm::build(&m, &kahan, true);
+    let en = ecm::build(&m, &naive, true);
+    // Kahan sum: 8 ADDs per unit on one port -> 8 cy, loads 2 cy
+    assert_eq!(ek.t_ol, 8.0);
+    assert_eq!(ek.t_nol, 2.0);
+    assert_eq!(ek.t_l1l2, 2.0); // one CL per unit
+    // ADD-bound flat through L3
+    assert_eq!(ek.prediction(0), 8.0);
+    assert_eq!(ek.prediction(1), 8.0);
+    assert_eq!(ek.prediction(2), 8.0);
+    // in memory: identical to the naive sum — Kahan for free
+    let ratio = ek.prediction(3) / en.prediction(3);
+    assert!((ratio - 1.0).abs() < 0.05, "kahan-sum/naive-sum in mem = {ratio}");
+    // but 4x in L1 (1 ADD vs 4 ADDs; naive is load-bound at 2 cy)
+    assert_eq!(en.prediction(0), 2.0);
+}
+
+/// The simulator handles one-stream kernels end to end.
+#[test]
+fn sum_kernel_simulates() {
+    use kahan_ecm::isa::kernelgen::generate_sum;
+    let m = ivb();
+    let k = generate_sum(Variant::Kahan, Simd::Avx, Precision::Sp, 0);
+    let e = ecm::build(&m, &k, true);
+    for (level, ws) in [16u64 << 10, 128 << 10, 4 << 20, 256 << 20].iter().enumerate() {
+        let elems = ws / k.bytes_per_iter();
+        let p = sim::simulate_working_set(&m, &k, elems, true);
+        let pred = e.prediction(level) / k.cls_per_unit() as f64;
+        let rel = (p.cy_per_cl - pred).abs() / pred;
+        assert!(rel < 0.30, "level {level}: sim {} vs model {pred}", p.cy_per_cl);
+    }
+    // scaling saturates at the sum roofline (1 update / 4 B)
+    let pts = sim::simulate_scaling(&m, &k, 256 << 20, m.cores);
+    let roof = m.memory.load_bw_gbs / 4.0;
+    assert!((pts.last().unwrap().gups - roof).abs() / roof < 0.05);
+}
+
+/// Property: sum kernels have exactly half the per-unit transfer volume of
+/// dot kernels at every SIMD width and precision.
+#[test]
+fn prop_sum_half_the_traffic_of_dot() {
+    use kahan_ecm::isa::kernelgen::generate_sum;
+    check("sum-half-traffic", 40, |rng| {
+        let m = &all_presets()[rng.below(4) as usize];
+        let simd = match rng.below(4) {
+            0 => Simd::Scalar,
+            1 => Simd::Sse,
+            2 => Simd::Avx,
+            _ => Simd::Avx512,
+        };
+        let prec = if rng.below(2) == 0 { Precision::Sp } else { Precision::Dp };
+        let sum = generate_sum(Variant::Kahan, simd, prec, 0);
+        let dot = generate(Variant::Kahan, simd, prec, 0);
+        let es = ecm::build(m, &sum, true);
+        let ed = ecm::build(m, &dot, true);
+        prop_assert!(es.t_l1l2 * 2.0 == ed.t_l1l2, "L1L2 traffic");
+        prop_assert!(
+            (es.t_l3mem_bw * 2.0 - ed.t_l3mem_bw).abs() < 1e-9,
+            "mem traffic"
+        );
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// store-traffic extension: the axpy kernel (Stengel et al.'s canonical ECM
+// example) — exercises store ports and write-back accounting
+// ---------------------------------------------------------------------------
+
+/// ECM for AVX daxpy on IVB: {2 || 4 | 6 | 6 | ~13.5} cy per unit (8 DP
+/// iterations; 3 CL transfers per unit: x read, y read, y write-back).
+#[test]
+fn axpy_ecm_on_ivb() {
+    use kahan_ecm::isa::generate_axpy;
+    let m = ivb();
+    let k = generate_axpy(Simd::Avx, Precision::Dp, 0);
+    assert_eq!(k.n_streams, 2);
+    assert_eq!(k.written_streams, 1);
+    assert_eq!(k.cl_transfers_per_unit(), 3);
+    assert_eq!(k.traffic_bytes_per_iter(), 24);
+    let e = ecm::build(&m, &k, true);
+    assert_eq!(e.t_ol, 2.0); // 2 MULs | 2 ADDs per unit, separate ports
+    assert_eq!(e.t_nol, 4.0); // 4 split AVX loads / 2 ports; 2 split stores / 1 port
+    assert_eq!(e.t_l1l2, 6.0); // 3 CLs x 2 cy
+    assert_eq!(e.t_l2l3, 6.0);
+    // memory-bound intensity: 1 update / 24 B -> 46.1/24 = 1.92 GUP/s roof
+    assert!((e.roofline_gups() - 1.92).abs() < 0.01);
+    // L1 prediction: store/load-port bound, not FP bound
+    assert_eq!(e.prediction(0), 4.0);
+}
+
+/// On HSW the wider store path (32 B) halves the store-port time.
+#[test]
+fn axpy_hsw_store_path() {
+    use kahan_ecm::isa::generate_axpy;
+    let m = kahan_ecm::machine::presets::hsw();
+    let k = generate_axpy(Simd::Avx, Precision::Dp, 0);
+    let e = ecm::build(&m, &k, true);
+    assert_eq!(e.t_nol, 2.0); // 2 LD/cy + 1 ST/cy at full AVX width
+    assert_eq!(e.t_l1l2, 3.0); // 3 CLs x 1 cy on the 64 B/cy bus
+}
+
+/// The simulator consumes axpy end to end and lands on the model.
+#[test]
+fn axpy_simulates_and_scales() {
+    use kahan_ecm::isa::generate_axpy;
+    let m = ivb();
+    let k = generate_axpy(Simd::Avx, Precision::Dp, 0);
+    let e = ecm::build(&m, &k, true);
+    for (level, ws) in [16u64 << 10, 128 << 10, 4 << 20, 256 << 20].iter().enumerate() {
+        let elems = ws / k.bytes_per_iter();
+        let p = sim::simulate_working_set(&m, &k, elems, true);
+        let pred = e.prediction(level) / k.cl_transfers_per_unit() as f64;
+        let rel = (p.cy_per_cl - pred).abs() / pred;
+        assert!(rel < 0.35, "level {level}: sim {} vs model {pred}", p.cy_per_cl);
+    }
+    let pts = sim::simulate_scaling(&m, &k, 256 << 20, m.cores);
+    let roof = m.memory.load_bw_gbs / 24.0;
+    assert!((pts.last().unwrap().gups - roof).abs() / roof < 0.05, "axpy saturates at its roofline");
+}
