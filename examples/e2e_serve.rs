@@ -1,37 +1,43 @@
-//! End-to-end driver (DESIGN.md §4, experiment E2E): the full three-layer
-//! stack under a real serving workload.
+//! End-to-end driver (DESIGN.md §4, experiment E2E): the serving stack
+//! under a real workload.
 //!
-//!   client threads ──► DotClient ──► mpsc ──► batching worker ──► PJRT
-//!        ▲                                          │
-//!        └────────── per-request responses ◄────────┘
+//!   client threads ──► DotClient ──► mpsc ──► worker ──► backend
+//!        ▲                                       │
+//!        └────────── per-request responses ◄─────┘
 //!
-//! * the served computation is the AOT-lowered Pallas Kahan kernel
-//!   (`artifacts/*.hlo.txt`) — Python is not running;
-//! * requests arrive in bursts with mixed sizes and variants, so the
-//!   dynamic batcher actually gets to fuse compatible requests;
-//! * every response is checked against the exact dot, and the run reports
-//!   throughput, latency percentiles, batching efficiency and accuracy.
+//! * default backend is the **persistent host engine** (`crate::engine`):
+//!   pooled 64-byte-aligned buffers, pinned long-lived workers, autotuned
+//!   SIMD kernel dispatch — no artifacts, no Python, works anywhere;
+//! * `--pjrt` switches to the original PJRT batching path (requires AOT
+//!   artifacts and the `pjrt` cargo feature);
+//! * requests arrive in bursts with mixed sizes and variants; every
+//!   response is checked against the exact dot, and the run reports
+//!   throughput, latency percentiles and accuracy.
 //!
-//! Results of a reference run are recorded in EXPERIMENTS.md §E2E.
-//!
-//! Run: `cargo run --release --example e2e_serve [-- --requests N]`
+//! Run: `cargo run --release --example e2e_serve [-- --requests N] [--pjrt]`
 
 use kahan_ecm::accuracy::exact::exact_dot_f32;
-use kahan_ecm::coordinator::{DotService, ServiceConfig};
+use kahan_ecm::coordinator::{Backend, DotService, ServiceConfig};
 use kahan_ecm::util::{stats, Rng};
 use std::time::Instant;
 
 fn main() -> anyhow::Result<()> {
     let mut requests: usize = 2000;
+    let mut backend = Backend::Host;
     let mut args = std::env::args().skip(1);
     while let Some(a) = args.next() {
         if a == "--requests" {
             requests = args.next().and_then(|v| v.parse().ok()).unwrap_or(requests);
+        } else if a == "--pjrt" {
+            backend = Backend::Pjrt;
         }
     }
 
-    println!("starting dot service (PJRT CPU, dynamic batching, window 2 ms)...");
-    let (svc, client) = DotService::start(ServiceConfig::default())?;
+    match backend {
+        Backend::Host => println!("starting dot service (persistent host engine)..."),
+        Backend::Pjrt => println!("starting dot service (PJRT CPU, dynamic batching, window 2 ms)..."),
+    }
+    let (svc, client) = DotService::start(ServiceConfig { backend, ..ServiceConfig::default() })?;
 
     // --- workload: bursts of mixed-size, mixed-variant requests ---
     let mut rng = Rng::new(2024);
@@ -76,6 +82,7 @@ fn main() -> anyhow::Result<()> {
 
     // --- report ---
     println!("\n=== E2E serving report ===");
+    println!("backend            : {backend:?}");
     println!("requests           : {served}");
     println!("wall time          : {wall:.2} s");
     println!("throughput         : {:.0} req/s", served as f64 / wall);
@@ -85,21 +92,38 @@ fn main() -> anyhow::Result<()> {
         stats::percentile(&latencies_us, 95.0),
         stats::percentile(&latencies_us, 99.0)
     );
-    println!("mean batch size    : {:.2}", stats::mean(&batch_sizes));
-    println!(
-        "PJRT calls         : {} ({} batched) for {} requests",
-        stats_out.pjrt_calls, stats_out.batched_calls, stats_out.requests
-    );
+    match backend {
+        Backend::Host => {
+            let e = kahan_ecm::engine::DotEngine::global().stats();
+            println!(
+                "engine             : {} calls ({} chunked-parallel), pool hits/misses {}/{}",
+                stats_out.engine_calls, e.parallel, e.pool.hits, e.pool.misses
+            );
+        }
+        Backend::Pjrt => {
+            println!("mean batch size    : {:.2}", stats::mean(&batch_sizes));
+            println!(
+                "PJRT calls         : {} ({} batched) for {} requests",
+                stats_out.pjrt_calls, stats_out.batched_calls, stats_out.requests
+            );
+        }
+    }
     println!("errors             : {}", stats_out.errors);
     println!("max rel error      : {max_rel_err:.3e} (vs exact dot, scaled by |a|.|b|)");
 
     assert_eq!(stats_out.errors, 0, "no request may fail");
     assert!(max_rel_err < 1e-5, "accuracy must hold end-to-end");
-    assert!(
-        (stats_out.pjrt_calls as usize) < served,
-        "batching must fuse requests ({} calls for {served})",
-        stats_out.pjrt_calls
-    );
-    println!("\nE2E PASS: all responses correct, batching effective");
+    match backend {
+        Backend::Host => assert_eq!(
+            stats_out.engine_calls as usize, served,
+            "every request must execute on the engine"
+        ),
+        Backend::Pjrt => assert!(
+            (stats_out.pjrt_calls as usize) < served,
+            "batching must fuse requests ({} calls for {served})",
+            stats_out.pjrt_calls
+        ),
+    }
+    println!("\nE2E PASS: all responses correct, backend effective");
     Ok(())
 }

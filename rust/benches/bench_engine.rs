@@ -1,0 +1,222 @@
+//! Bench ENGINE: the persistent parallel dot engine vs the old
+//! spawn-per-call request path, at LLC- and memory-resident sizes.
+//!
+//! Baseline ("spawn"): what the pre-engine code did per request — clone
+//! both streams into fresh (unaligned, cold-page) `Vec`s, spawn + pin a
+//! thread per chunk, join, fold. Engine ("engine"): admit into recycled
+//! 64-byte-aligned pooled buffers and run on the persistent pinned worker
+//! pool; "engine-pooled" is the zero-copy steady state (streams already
+//! admitted, e.g. a server holding hot vectors).
+//!
+//! Emits `BENCH_engine.json` (path overridable with `--json P`; `--smoke`
+//! shrinks sizes/reps for CI). The acceptance line is `memory_speedup`:
+//! engine vs spawn-per-call at the memory-resident size.
+
+use kahan_ecm::bench::kernels::{compensated_fold_f32, KernelFn};
+use kahan_ecm::bench::threads::pin_to_cpu;
+use kahan_ecm::engine::{dispatch, DotEngine, EngineConfig, SizeClass};
+use kahan_ecm::isa::{Precision, Variant};
+use kahan_ecm::machine::detect::detect_host_cached;
+use kahan_ecm::util::{stats, Rng, Table};
+use std::sync::Arc;
+use std::time::Instant;
+
+/// The old request path, verbatim in spirit: fresh clones, fresh threads.
+fn spawn_per_call_dot(
+    threads: usize,
+    f: fn(&[f32], &[f32]) -> f32,
+    a: &[f32],
+    b: &[f32],
+) -> f32 {
+    let a: Arc<Vec<f32>> = Arc::new(a.to_vec());
+    let b: Arc<Vec<f32>> = Arc::new(b.to_vec());
+    let n = a.len();
+    let chunk = (n + threads - 1) / threads;
+    let mut handles = Vec::with_capacity(threads);
+    for t in 0..threads {
+        let a = Arc::clone(&a);
+        let b = Arc::clone(&b);
+        handles.push(std::thread::spawn(move || {
+            pin_to_cpu(t);
+            let lo = (t * chunk).min(n);
+            let hi = ((t + 1) * chunk).min(n);
+            f(&a[lo..hi], &b[lo..hi])
+        }));
+    }
+    let sums: Vec<f32> = handles.into_iter().map(|h| h.join().expect("spawned chunk")).collect();
+    let comps = vec![0.0f32; sums.len()];
+    compensated_fold_f32(&sums, &comps)
+}
+
+fn median_us<F: FnMut() -> f32>(reps: usize, mut f: F) -> f64 {
+    let mut samples = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        let t = Instant::now();
+        std::hint::black_box(f());
+        samples.push(t.elapsed().as_secs_f64() * 1e6);
+    }
+    stats::median(&samples)
+}
+
+struct Row {
+    label: &'static str,
+    ws_bytes: u64,
+    class: SizeClass,
+    spawn_us: f64,
+    engine_us: f64,
+    engine_pooled_us: f64,
+}
+
+fn json_escape_free(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v:.3}")
+    } else {
+        "null".to_string()
+    }
+}
+
+fn main() {
+    let mut smoke = false;
+    let mut json_path = "BENCH_engine.json".to_string();
+    let mut args = std::env::args().skip(1);
+    while let Some(a) = args.next() {
+        match a.as_str() {
+            "--smoke" => smoke = true,
+            "--json" => json_path = args.next().unwrap_or(json_path),
+            "--bench" => {} // cargo bench passes this through
+            other => eprintln!("ignoring unknown arg `{other}`"),
+        }
+    }
+
+    println!("=== bench_engine: persistent engine vs spawn-per-call ===\n");
+    let m = detect_host_cached();
+    let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let llc = m.caches[2].size_bytes;
+    let mem_ws = if smoke {
+        (2 * llc).min(32 << 20).max(llc + (4 << 20))
+    } else {
+        (2 * llc).min(64 << 20).max(llc + (8 << 20))
+    };
+    let sizes: Vec<(&'static str, u64)> = vec![
+        ("L2-resident", (m.caches[1].size_bytes / 2).max(128 << 10)),
+        ("LLC-resident", llc / 2),
+        ("memory-resident", mem_ws),
+    ];
+    let reps = if smoke { 7 } else { 15 };
+
+    println!("host: {} | {} threads | LLC {}", m.name, threads, kahan_ecm::util::fmt::bytes(llc));
+    println!("calibrating autotuned dispatch (one-time)...");
+    let table = dispatch();
+    println!("{}", table.render().render());
+
+    let engine = DotEngine::new(EngineConfig::default());
+    let mut rng = Rng::new(2025);
+    let mut rows: Vec<Row> = Vec::new();
+
+    for &(label, ws) in &sizes {
+        let n = (ws / 8).max(1024) as usize; // two f32 streams
+        let class = SizeClass::of(2 * n as u64 * 4);
+        let a = rng.normal_f32_vec(n);
+        let b = rng.normal_f32_vec(n);
+        let f = match table.select(Precision::Sp, Variant::Kahan, class).f {
+            KernelFn::F32(f) => f,
+            KernelFn::F64(_) => unreachable!(),
+        };
+
+        // warm-up both paths (page in sources, fill the pool, calibrate)
+        std::hint::black_box(engine.dot_f32(Variant::Kahan, &a, &b));
+        std::hint::black_box(spawn_per_call_dot(threads, f, &a, &b));
+
+        let spawn_us = median_us(reps, || spawn_per_call_dot(threads, f, &a, &b));
+        let engine_us = median_us(reps, || engine.dot_f32(Variant::Kahan, &a, &b));
+        let pa = engine.admit_f32(&a);
+        let pb = engine.admit_f32(&b);
+        let engine_pooled_us =
+            median_us(reps, || engine.dot_pooled_f32(Variant::Kahan, &pa, &pb));
+
+        rows.push(Row {
+            label,
+            ws_bytes: 2 * n as u64 * 4,
+            class,
+            spawn_us,
+            engine_us,
+            engine_pooled_us,
+        });
+    }
+
+    let mut t = Table::new("per-call wall clock (median, us; lower is better)").headers([
+        "working set",
+        "class",
+        "spawn/call",
+        "engine",
+        "engine (pooled)",
+        "speedup",
+        "speedup (pooled)",
+    ]);
+    for r in &rows {
+        t.row([
+            format!("{} ({})", r.label, kahan_ecm::util::fmt::bytes(r.ws_bytes)),
+            r.class.name().to_string(),
+            format!("{:.1}", r.spawn_us),
+            format!("{:.1}", r.engine_us),
+            format!("{:.1}", r.engine_pooled_us),
+            format!("{:.2}x", r.spawn_us / r.engine_us),
+            format!("{:.2}x", r.spawn_us / r.engine_pooled_us),
+        ]);
+    }
+    println!("{}", t.render());
+
+    let mem_row = rows.last().expect("memory row");
+    let memory_speedup = mem_row.spawn_us / mem_row.engine_us;
+    let memory_speedup_pooled = mem_row.spawn_us / mem_row.engine_pooled_us;
+    let es = engine.stats();
+    println!(
+        "memory-resident: engine {:.2}x, pooled {:.2}x over spawn-per-call",
+        memory_speedup, memory_speedup_pooled
+    );
+    println!(
+        "engine stats: {} requests, {} parallel, pool hits/misses {}/{}",
+        es.requests, es.parallel, es.pool.hits, es.pool.misses
+    );
+
+    // --- BENCH_engine.json ---
+    let mut json = String::new();
+    json.push_str("{\n");
+    json.push_str("  \"bench\": \"bench_engine\",\n");
+    json.push_str(&format!("  \"smoke\": {smoke},\n"));
+    json.push_str(&format!("  \"threads\": {threads},\n"));
+    json.push_str(&format!("  \"llc_bytes\": {llc},\n"));
+    json.push_str("  \"rows\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        json.push_str(&format!(
+            "    {{\"label\": \"{}\", \"class\": \"{}\", \"ws_bytes\": {}, \"spawn_us\": {}, \"engine_us\": {}, \"engine_pooled_us\": {}, \"speedup\": {}, \"speedup_pooled\": {}}}{}\n",
+            r.label,
+            r.class.name(),
+            r.ws_bytes,
+            json_escape_free(r.spawn_us),
+            json_escape_free(r.engine_us),
+            json_escape_free(r.engine_pooled_us),
+            json_escape_free(r.spawn_us / r.engine_us),
+            json_escape_free(r.spawn_us / r.engine_pooled_us),
+            if i + 1 == rows.len() { "" } else { "," }
+        ));
+    }
+    json.push_str("  ],\n");
+    json.push_str(&format!("  \"memory_speedup\": {},\n", json_escape_free(memory_speedup)));
+    json.push_str(&format!(
+        "  \"memory_speedup_pooled\": {},\n",
+        json_escape_free(memory_speedup_pooled)
+    ));
+    json.push_str(&format!("  \"meets_2x\": {}\n", memory_speedup >= 2.0));
+    json.push_str("}\n");
+    std::fs::write(&json_path, &json).expect("write BENCH_engine.json");
+    println!("wrote {json_path}");
+
+    if memory_speedup < 2.0 {
+        eprintln!(
+            "WARNING: memory-resident speedup {memory_speedup:.2}x is below the 2x target \
+             (recorded in {json_path})"
+        );
+    }
+    println!("bench_engine: OK");
+}

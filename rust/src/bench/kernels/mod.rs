@@ -98,8 +98,9 @@ pub fn compensated_fold_f64(sums: &[f64], comps: &[f64]) -> f64 {
     s + c
 }
 
-/// All host kernels, with availability determined at runtime.
-pub fn registry() -> Vec<HostKernel> {
+/// Detect CPU features and build the registry (runs once; see
+/// [`registry_static`]).
+fn detect_registry() -> Vec<HostKernel> {
     let avx2 = is_x86_feature_detected!("avx2");
     let fma = avx2 && is_x86_feature_detected!("fma");
     let avx512 = is_x86_feature_detected!("avx512f");
@@ -127,9 +128,25 @@ pub fn registry() -> Vec<HostKernel> {
     ]
 }
 
-/// Look up a kernel by name (exact match).
+/// The process-wide kernel registry. CPU feature detection and the
+/// registry `Vec` are built once behind a `OnceLock` — `by_name` and the
+/// engine's autotuner sit on the per-request path, so they must not
+/// re-detect (`is_x86_feature_detected!` is a cpuid + cache lookup) or
+/// reallocate per call.
+pub fn registry_static() -> &'static [HostKernel] {
+    static REGISTRY: std::sync::OnceLock<Vec<HostKernel>> = std::sync::OnceLock::new();
+    REGISTRY.get_or_init(detect_registry)
+}
+
+/// All host kernels, with availability determined at runtime (compat
+/// wrapper over [`registry_static`] for callers that want ownership).
+pub fn registry() -> Vec<HostKernel> {
+    registry_static().to_vec()
+}
+
+/// Look up a kernel by name (exact match; allocation-free).
 pub fn by_name(name: &str) -> Option<HostKernel> {
-    registry().into_iter().find(|k| k.name == name)
+    registry_static().iter().find(|k| k.name == name).copied()
 }
 
 #[cfg(test)]
@@ -252,5 +269,12 @@ mod tests {
         assert!(r.iter().any(|k| k.prec == Precision::Dp));
         assert!(by_name("kahan-AVX2-SP").is_some());
         assert!(by_name("bogus").is_none());
+    }
+
+    #[test]
+    fn registry_is_cached_behind_once_lock() {
+        // same backing storage on every call: feature detection ran once
+        assert!(std::ptr::eq(registry_static().as_ptr(), registry_static().as_ptr()));
+        assert_eq!(registry_static().len(), registry().len());
     }
 }

@@ -69,7 +69,7 @@ pub fn run_sweep(kernel: &HostKernel, sizes: &[u64], reps: usize, seed: u64) -> 
             };
             let (cy, cv) = point;
             let cls = (2 * n as u64 * elem_bytes) as f64 / 64.0;
-            let ghz = crate::machine::detect::calibrate_tsc_ghz();
+            let ghz = crate::machine::detect::calibrate_tsc_ghz_cached();
             HostSweepPoint {
                 ws_bytes: 2 * n as u64 * elem_bytes,
                 cy_per_cl: cy / cls,
@@ -91,7 +91,7 @@ pub fn measure_load_bandwidth() -> f64 {
     let f = super::kernels::avx2::naive_f32;
     let m = measure_adaptive(10_000_000.0, 5, || f(&a, &b));
     let bytes = (2 * n * 4) as f64;
-    let ghz = crate::machine::detect::calibrate_tsc_ghz();
+    let ghz = crate::machine::detect::calibrate_tsc_ghz_cached();
     bytes * ghz / m.min_cy
 }
 

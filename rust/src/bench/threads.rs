@@ -2,15 +2,27 @@
 //! set, aggregate GUP/s is reported per thread count — the measurement side
 //! of Figs. 3a/3b/4b.
 //!
-//! On this container only one core is online, so host scaling degenerates to
-//! n = 1 (the simulator carries the multicore reproduction); the harness
-//! still exercises the full path — spawn, pin, barrier, measure, reduce —
-//! and scales on real multicore hosts.
+//! The harness runs on the persistent [`WorkerPool`] from `crate::engine`:
+//! [`scaling_curve`] spawns the pool once and reuses it for every thread
+//! count (the pool's workers are already pinned), instead of spawning and
+//! pinning fresh threads per measurement point.
+//!
+//! Timing: every iteration samples `Instant::now()` exactly once and that
+//! same sample drives both the stop decision and the reported elapsed
+//! time, so the final iteration of a slow thread is never charged against
+//! a clock read taken before it finished (the old code read
+//! `t0.elapsed()` again after the loop, biasing per-thread GUP/s).
+//!
+//! On this container only one core is online, so host scaling degenerates
+//! to n = 1 (the simulator carries the multicore reproduction); the
+//! harness still exercises the full path — submit, barrier, measure,
+//! reduce — and scales on real multicore hosts.
 
 use super::kernels::{HostKernel, KernelFn};
+use crate::engine::WorkerPool;
 use crate::util::Rng;
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{Arc, Barrier};
+use std::sync::{mpsc, Arc, Barrier};
 use std::time::Instant;
 
 /// Result for one thread count.
@@ -18,7 +30,8 @@ use std::time::Instant;
 pub struct ThreadScalePoint {
     pub threads: u32,
     pub gups: f64,
-    /// per-thread GUP/s spread (max/min), contention indicator
+    /// per-thread GUP/s spread (max/min), contention indicator; 1.0 for a
+    /// single thread by definition
     pub imbalance: f64,
 }
 
@@ -37,69 +50,108 @@ pub fn pin_to_cpu(cpu: usize) {
     }
 }
 
-/// Run `kernel` on `threads` pinned threads for ~`millis` ms each over a
-/// per-thread working set of `elems` elements per stream.
-pub fn run_threads(kernel: &HostKernel, threads: u32, elems: usize, millis: u64) -> ThreadScalePoint {
+/// Timed streaming loop shared by both precisions: returns this thread's
+/// updates/s. One `Instant::now()` per iteration serves both the stop
+/// check and the elapsed measurement.
+fn stream_loop<T: Copy>(
+    f: fn(&[T], &[T]) -> T,
+    a: &[T],
+    b: &[T],
+    millis: u64,
+    barrier: &Barrier,
+    stop: &AtomicBool,
+) -> f64 {
+    std::hint::black_box(f(a, b)); // warm caches + page-fault the streams
+    barrier.wait();
+    let t0 = Instant::now();
+    let mut t_end = t0;
+    let mut iters = 0u64;
+    while !stop.load(Ordering::Relaxed) {
+        std::hint::black_box(f(a, b));
+        iters += 1;
+        t_end = Instant::now();
+        if t_end.duration_since(t0).as_millis() as u64 >= millis {
+            stop.store(true, Ordering::Relaxed);
+        }
+    }
+    let elapsed = t_end.duration_since(t0).as_secs_f64().max(1e-9);
+    iters as f64 * a.len().min(b.len()) as f64 / elapsed / 1e9
+}
+
+/// Run `kernel` on `threads` workers of an existing pool for ~`millis` ms
+/// each over a per-thread working set of `elems` elements per stream.
+/// Workers `0..threads` of `pool` are used (they are pinned to CPUs
+/// `0..threads`), so `threads` must not exceed `pool.size()`.
+pub fn run_threads_on(
+    pool: &WorkerPool,
+    kernel: &HostKernel,
+    threads: u32,
+    elems: usize,
+    millis: u64,
+) -> ThreadScalePoint {
+    assert!(threads >= 1, "need at least one thread");
+    assert!(
+        threads as usize <= pool.size(),
+        "asked for {threads} threads on a pool of {}",
+        pool.size()
+    );
     let barrier = Arc::new(Barrier::new(threads as usize));
     let stop = Arc::new(AtomicBool::new(false));
-    let mut handles = Vec::new();
+    let (tx, rx) = mpsc::channel::<f64>();
 
     for t in 0..threads {
-        let barrier = barrier.clone();
-        let stop = stop.clone();
+        let barrier = Arc::clone(&barrier);
+        let stop = Arc::clone(&stop);
+        let tx = tx.clone();
         let f = kernel.f;
-        handles.push(std::thread::spawn(move || {
-            pin_to_cpu(t as usize);
-            let mut rng = Rng::new(1000 + t as u64);
-            let mut iters = 0u64;
-            let elapsed;
-            match f {
-                KernelFn::F32(f) => {
-                    let a = rng.normal_f32_vec(elems);
-                    let b = rng.normal_f32_vec(elems);
-                    std::hint::black_box(f(&a, &b));
-                    barrier.wait();
-                    let t0 = Instant::now();
-                    while !stop.load(Ordering::Relaxed) {
-                        std::hint::black_box(f(&a, &b));
-                        iters += 1;
-                        if t0.elapsed().as_millis() as u64 >= millis {
-                            stop.store(true, Ordering::Relaxed);
-                        }
+        pool.submit_to(
+            t as usize,
+            Box::new(move || {
+                let mut rng = Rng::new(1000 + t as u64);
+                let gups = match f {
+                    KernelFn::F32(f) => {
+                        let a = rng.normal_f32_vec(elems);
+                        let b = rng.normal_f32_vec(elems);
+                        stream_loop(f, &a, &b, millis, &barrier, &stop)
                     }
-                    elapsed = t0.elapsed().as_secs_f64();
-                }
-                KernelFn::F64(f) => {
-                    let a = rng.normal_f64_vec(elems);
-                    let b = rng.normal_f64_vec(elems);
-                    std::hint::black_box(f(&a, &b));
-                    barrier.wait();
-                    let t0 = Instant::now();
-                    while !stop.load(Ordering::Relaxed) {
-                        std::hint::black_box(f(&a, &b));
-                        iters += 1;
-                        if t0.elapsed().as_millis() as u64 >= millis {
-                            stop.store(true, Ordering::Relaxed);
-                        }
+                    KernelFn::F64(f) => {
+                        let a = rng.normal_f64_vec(elems);
+                        let b = rng.normal_f64_vec(elems);
+                        stream_loop(f, &a, &b, millis, &barrier, &stop)
                     }
-                    elapsed = t0.elapsed().as_secs_f64();
-                }
-            }
-            // updates/s for this thread
-            iters as f64 * elems as f64 / elapsed / 1e9
-        }));
+                };
+                let _ = tx.send(gups);
+            }),
+        );
     }
+    drop(tx);
 
-    let per_thread: Vec<f64> = handles.into_iter().map(|h| h.join().expect("bench thread")).collect();
+    let per_thread: Vec<f64> = rx.iter().collect();
+    assert_eq!(per_thread.len(), threads as usize, "a bench worker died");
     let total: f64 = per_thread.iter().sum();
     let max = per_thread.iter().cloned().fold(f64::MIN, f64::max);
     let min = per_thread.iter().cloned().fold(f64::MAX, f64::min);
-    ThreadScalePoint { threads, gups: total, imbalance: if min > 0.0 { max / min } else { f64::NAN } }
+    let imbalance = if per_thread.len() <= 1 {
+        1.0
+    } else if min > 0.0 {
+        max / min
+    } else {
+        f64::INFINITY
+    };
+    ThreadScalePoint { threads, gups: total, imbalance }
 }
 
-/// Scaling curve for 1..=max_threads.
+/// Convenience wrapper: run one measurement on a transient pool.
+pub fn run_threads(kernel: &HostKernel, threads: u32, elems: usize, millis: u64) -> ThreadScalePoint {
+    let pool = WorkerPool::new(threads as usize);
+    run_threads_on(&pool, kernel, threads, elems, millis)
+}
+
+/// Scaling curve for 1..=max_threads over ONE persistent worker pool
+/// (spawned and pinned once, reused for every point).
 pub fn scaling_curve(kernel: &HostKernel, max_threads: u32, elems: usize, millis: u64) -> Vec<ThreadScalePoint> {
-    (1..=max_threads).map(|n| run_threads(kernel, n, elems, millis)).collect()
+    let pool = WorkerPool::new(max_threads.max(1) as usize);
+    (1..=max_threads).map(|n| run_threads_on(&pool, kernel, n, elems, millis)).collect()
 }
 
 #[cfg(test)]
@@ -113,6 +165,7 @@ mod tests {
         let p = run_threads(&k, 1, 64 * 1024, 30);
         assert_eq!(p.threads, 1);
         assert!(p.gups > 0.01, "{p:?}");
+        assert_eq!(p.imbalance, 1.0, "single thread is balanced by definition: {p:?}");
     }
 
     #[test]
@@ -120,6 +173,26 @@ mod tests {
         let k = by_name("naive-AVX2-SP").unwrap();
         let p = run_threads(&k, 2, 16 * 1024, 20);
         assert!(p.gups > 0.0);
+        assert!(p.imbalance.is_finite() && p.imbalance >= 1.0, "{p:?}");
+    }
+
+    #[test]
+    fn pool_is_reused_across_points() {
+        let k = by_name("kahan-scalar-SP").unwrap();
+        let pool = WorkerPool::new(2);
+        let p1 = run_threads_on(&pool, &k, 1, 8 * 1024, 10);
+        let p2 = run_threads_on(&pool, &k, 2, 8 * 1024, 10);
+        let p1b = run_threads_on(&pool, &k, 1, 8 * 1024, 10);
+        assert!(p1.gups > 0.0 && p2.gups > 0.0 && p1b.gups > 0.0);
+    }
+
+    #[test]
+    fn scaling_curve_has_every_point() {
+        let k = by_name("kahan-scalar-SP").unwrap();
+        let pts = scaling_curve(&k, 2, 8 * 1024, 10);
+        assert_eq!(pts.len(), 2);
+        assert_eq!(pts[0].threads, 1);
+        assert_eq!(pts[1].threads, 2);
     }
 
     #[test]

@@ -35,6 +35,8 @@ Host silicon (likwid-bench analog):
                         sweep real SIMD kernels on this machine
   host-scaling [--threads N]
                         thread scaling on this machine
+  engine-info           persistent dot engine: autotuned kernel dispatch
+                        table, worker/pool state, smoke dot
   accuracy [--n N] [--trials T]
                         error vs condition number (algorithm zoo)
 
@@ -200,6 +202,25 @@ pub fn run(args: &Args) -> Result<(), String> {
                 ]);
             }
             println!("{}", t.render());
+        }
+        "engine-info" => {
+            println!("calibrating kernel dispatch (first use only)...");
+            let table = crate::engine::dispatch();
+            println!("{}", table.render().render());
+            let e = crate::engine::DotEngine::global();
+            println!("engine workers: {} (pinned, persistent)", e.threads());
+            let mut rng = crate::util::Rng::new(1);
+            let n = 1 << 20;
+            let a = rng.normal_f32_vec(n);
+            let b = rng.normal_f32_vec(n);
+            let exact = crate::accuracy::exact::exact_dot_f32(&a, &b);
+            let got = e.dot_f32(crate::isa::Variant::Kahan, &a, &b) as f64;
+            let s = e.stats();
+            println!("smoke dot (n = {n}): engine {got:.6e}, exact {exact:.6e}");
+            println!(
+                "engine stats: {} requests, {} parallel, pool hits/misses {}/{}",
+                s.requests, s.parallel, s.pool.hits, s.pool.misses
+            );
         }
         "accuracy" => {
             let n = args.num("n", 2048usize).map_err(|e| e.to_string())?;

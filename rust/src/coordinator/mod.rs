@@ -11,4 +11,4 @@ pub mod service;
 pub mod validate;
 
 pub use cli::cli_main;
-pub use service::{DotRequest, DotResponse, DotService, ServiceConfig};
+pub use service::{Backend, DotRequest, DotResponse, DotService, ServiceConfig, ServiceStats};

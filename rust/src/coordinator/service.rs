@@ -1,17 +1,28 @@
-//! Batched dot service: the request-path component that executes AOT
-//! artifacts via PJRT with dynamic batching — the engine behind the
-//! end-to-end example (`examples/e2e_serve.rs`).
+//! Batched dot service: the request-path component behind the end-to-end
+//! example (`examples/e2e_serve.rs`).
 //!
-//! Architecture (std-only; the offline container has no tokio):
-//! * callers submit `DotRequest`s over an mpsc channel and receive their
-//!   `DotResponse` on a per-request return channel;
-//! * one worker thread owns the PJRT `Runtime` (executables are not shared
-//!   across threads), drains the queue with a batching window, groups
-//!   compatible requests (same variant, fits the batched artifact), and
-//!   executes them in one PJRT call when possible;
-//! * Python is never involved: this is the "self-contained rust binary"
-//!   property of the three-layer design.
+//! Two backends share one client API:
+//!
+//! * [`Backend::Host`] (default) — requests execute on the persistent
+//!   parallel engine (`crate::engine`): pooled 64-byte-aligned buffers,
+//!   pinned long-lived workers, autotuned SIMD kernel dispatch. The engine
+//!   reads the request's own vectors — small dots run on them in place,
+//!   large dots pay a single admission copy into recycled aligned pool
+//!   buffers; nothing is cloned per call (the old PJRT grouping code
+//!   cloned every stream per batched call) and the steady state performs
+//!   no heap allocation. Works on any host, no artifacts needed.
+//! * [`Backend::Pjrt`] — the original PJRT path: one worker thread owns
+//!   the `Runtime` (executables are not shared across threads), drains the
+//!   queue with a batching window, groups compatible requests, and
+//!   executes them in one PJRT call when possible. Needs AOT artifacts and
+//!   the `pjrt` cargo feature.
+//!
+//! Architecture (std-only; the offline container has no tokio): callers
+//! submit `DotRequest`s over an mpsc channel and receive their
+//! `DotResponse` on a per-request return channel.
 
+use crate::engine::DotEngine;
+use crate::isa::Variant;
 use crate::runtime::Runtime;
 use std::sync::mpsc;
 use std::time::{Duration, Instant};
@@ -24,6 +35,16 @@ enum Msg {
     Shutdown,
 }
 
+/// Which execution path serves requests.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum Backend {
+    /// persistent host engine (pooled buffers + pinned workers)
+    #[default]
+    Host,
+    /// PJRT execution of the AOT artifacts (requires the `pjrt` feature)
+    Pjrt,
+}
+
 /// A dot-product request.
 pub struct DotRequest {
     pub id: u64,
@@ -32,6 +53,9 @@ pub struct DotRequest {
     pub a: Vec<f32>,
     pub b: Vec<f32>,
     reply: mpsc::Sender<DotResponse>,
+    /// stamped in `DotClient::submit`, so reported latency includes the
+    /// time spent queued in the channel, not just the execute time
+    submitted: Instant,
 }
 
 /// The service's answer.
@@ -39,7 +63,7 @@ pub struct DotRequest {
 pub struct DotResponse {
     pub id: u64,
     pub value: Result<f32, String>,
-    /// how many requests shared the PJRT call that served this one
+    /// how many requests shared the backend call that served this one
     pub batch_size: usize,
     /// queue + execute time
     pub latency: Duration,
@@ -48,9 +72,10 @@ pub struct DotResponse {
 /// Service configuration.
 #[derive(Clone, Debug)]
 pub struct ServiceConfig {
-    /// max requests fused into one batched execute
+    pub backend: Backend,
+    /// max requests fused into one batched execute (Pjrt backend)
     pub max_batch: usize,
-    /// how long the batcher waits to fill a batch
+    /// how long the batcher waits to fill a batch (Pjrt backend)
     pub window: Duration,
     /// name of the batched artifact to use (must exist in the manifest)
     pub batched_artifact_kahan: String,
@@ -63,6 +88,7 @@ pub struct ServiceConfig {
 impl Default for ServiceConfig {
     fn default() -> Self {
         ServiceConfig {
+            backend: Backend::Host,
             max_batch: 8,
             window: Duration::from_millis(2),
             batched_artifact_kahan: "batched_dot_kahan_f32_b8_n16384".into(),
@@ -77,6 +103,8 @@ impl Default for ServiceConfig {
 #[derive(Clone, Debug, Default)]
 pub struct ServiceStats {
     pub requests: u64,
+    /// engine executions (Host backend)
+    pub engine_calls: u64,
     pub pjrt_calls: u64,
     pub batched_calls: u64,
     pub errors: u64,
@@ -104,7 +132,7 @@ impl DotClient {
         b: Vec<f32>,
     ) -> mpsc::Receiver<DotResponse> {
         let (reply, rx) = mpsc::channel();
-        let req = DotRequest { id, variant, a, b, reply };
+        let req = DotRequest { id, variant, a, b, reply, submitted: Instant::now() };
         // a send error means the service stopped; the caller sees it as a
         // disconnected receiver
         let _ = self.tx.send(Msg::Req(req));
@@ -122,35 +150,45 @@ impl DotClient {
 }
 
 impl DotService {
-    /// Start the worker thread with its own PJRT runtime.
+    /// Start the worker thread for the configured backend.
     ///
-    /// PJRT handles are not `Send`, so the `Runtime` must be constructed
-    /// *inside* the worker thread; startup errors are relayed back through a
-    /// one-shot channel so callers still see them synchronously.
+    /// Host backend: the worker borrows the process-wide engine
+    /// (`DotEngine::global()`), so startup is immediate and cannot fail.
+    ///
+    /// Pjrt backend: PJRT handles are not `Send`, so the `Runtime` must be
+    /// constructed *inside* the worker thread; startup errors are relayed
+    /// back through a one-shot channel so callers still see them
+    /// synchronously.
     pub fn start(config: ServiceConfig) -> anyhow::Result<(Self, DotClient)> {
         let (tx, rx) = mpsc::channel::<Msg>();
-        let (ready_tx, ready_rx) = mpsc::channel::<Result<(), String>>();
-        let worker = std::thread::spawn(move || match Runtime::new() {
-            Ok(rt) => {
-                let _ = ready_tx.send(Ok(()));
-                worker_loop(rt, rx, config)
+        let worker = match config.backend {
+            Backend::Host => std::thread::spawn(move || worker_loop_host(rx)),
+            Backend::Pjrt => {
+                let (ready_tx, ready_rx) = mpsc::channel::<Result<(), String>>();
+                let worker = std::thread::spawn(move || match Runtime::new() {
+                    Ok(rt) => {
+                        let _ = ready_tx.send(Ok(()));
+                        worker_loop_pjrt(rt, rx, config)
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(e.to_string()));
+                        ServiceStats::default()
+                    }
+                });
+                match ready_rx.recv() {
+                    Ok(Ok(())) => {}
+                    Ok(Err(e)) => {
+                        let _ = worker.join();
+                        anyhow::bail!("service startup: {e}");
+                    }
+                    Err(_) => {
+                        let _ = worker.join();
+                        anyhow::bail!("service worker died during startup");
+                    }
+                }
+                worker
             }
-            Err(e) => {
-                let _ = ready_tx.send(Err(e.to_string()));
-                ServiceStats::default()
-            }
-        });
-        match ready_rx.recv() {
-            Ok(Ok(())) => {}
-            Ok(Err(e)) => {
-                let _ = worker.join();
-                anyhow::bail!("service startup: {e}");
-            }
-            Err(_) => {
-                let _ = worker.join();
-                anyhow::bail!("service worker died during startup");
-            }
-        }
+        };
         let client = DotClient { tx: tx.clone() };
         Ok((DotService { tx: Some(tx), worker: Some(worker) }, client))
     }
@@ -175,12 +213,50 @@ impl Drop for DotService {
     }
 }
 
-struct Pending {
-    req: DotRequest,
-    arrived: Instant,
+/// Host backend: every request runs straight through the persistent
+/// engine. No batching window — the engine parallelizes *within* a dot,
+/// so queueing requests to fuse them would only add latency.
+fn worker_loop_host(rx: mpsc::Receiver<Msg>) -> ServiceStats {
+    let engine = DotEngine::global();
+    // calibrate the dispatch table now, not on the first request
+    let _ = crate::engine::dispatch();
+    let mut stats = ServiceStats::default();
+    while let Ok(msg) = rx.recv() {
+        let req = match msg {
+            Msg::Req(r) => r,
+            Msg::Shutdown => break,
+        };
+        stats.requests += 1;
+        let variant = match req.variant {
+            "kahan" => Ok(Variant::Kahan),
+            "naive" => Ok(Variant::Naive),
+            other => Err(format!("unknown variant `{other}`")),
+        };
+        let value = if req.a.len() != req.b.len() {
+            Err(format!("length mismatch {} vs {}", req.a.len(), req.b.len()))
+        } else {
+            // no per-request heap churn: the engine reads the request's own
+            // vectors (small dots run on them in place; large dots pay one
+            // admission copy into recycled aligned pool buffers)
+            variant.map(|v| {
+                stats.engine_calls += 1;
+                engine.dot_f32(v, &req.a, &req.b)
+            })
+        };
+        if value.is_err() {
+            stats.errors += 1;
+        }
+        let _ = req.reply.send(DotResponse {
+            id: req.id,
+            value,
+            batch_size: 1,
+            latency: req.submitted.elapsed(),
+        });
+    }
+    stats
 }
 
-fn worker_loop(
+fn worker_loop_pjrt(
     mut rt: Runtime,
     rx: mpsc::Receiver<Msg>,
     cfg: ServiceConfig,
@@ -199,7 +275,7 @@ fn worker_loop(
             Ok(Msg::Req(r)) => r,
             Ok(Msg::Shutdown) | Err(_) => break,
         };
-        let mut queue = vec![Pending { req: first, arrived: Instant::now() }];
+        let mut queue = vec![first];
         // batching window: gather more requests
         let deadline = Instant::now() + cfg.window;
         while queue.len() < cfg.max_batch {
@@ -208,7 +284,7 @@ fn worker_loop(
                 break;
             }
             match rx.recv_timeout(deadline - now) {
-                Ok(Msg::Req(r)) => queue.push(Pending { req: r, arrived: Instant::now() }),
+                Ok(Msg::Req(r)) => queue.push(r),
                 Ok(Msg::Shutdown) => {
                     // serve what we already accepted, then exit
                     shutdown = true;
@@ -221,11 +297,11 @@ fn worker_loop(
 
         // group by variant; batch-execute groups where every request fits
         for variant in ["kahan", "naive"] {
-            let group: Vec<Pending> = {
+            let group: Vec<DotRequest> = {
                 let mut g = Vec::new();
                 let mut rest = Vec::new();
                 for p in queue.drain(..) {
-                    if p.req.variant == variant {
+                    if p.variant == variant {
                         g.push(p);
                     } else {
                         rest.push(p);
@@ -245,22 +321,22 @@ fn worker_loop(
 
             let fits = group.len() >= 2
                 && batched_max_n > 0
-                && group.iter().all(|p| p.req.a.len() <= batched_max_n);
+                && group.iter().all(|p| p.a.len() <= batched_max_n);
             if fits {
                 stats.pjrt_calls += 1;
                 stats.batched_calls += 1;
                 let pairs: Vec<(Vec<f32>, Vec<f32>)> =
-                    group.iter().map(|p| (p.req.a.clone(), p.req.b.clone())).collect();
+                    group.iter().map(|p| (p.a.clone(), p.b.clone())).collect();
                 match rt.batched_dot_f32(batched_name, &pairs) {
                     Ok(values) => {
                         let bsz = group.len();
                         for (p, v) in group.into_iter().zip(values) {
                             stats.requests += 1;
-                            let _ = p.req.reply.send(DotResponse {
-                                id: p.req.id,
+                            let _ = p.reply.send(DotResponse {
+                                id: p.id,
                                 value: Ok(v),
                                 batch_size: bsz,
-                                latency: p.arrived.elapsed(),
+                                latency: p.submitted.elapsed(),
                             });
                         }
                     }
@@ -268,11 +344,11 @@ fn worker_loop(
                         stats.errors += 1;
                         for p in group {
                             stats.requests += 1;
-                            let _ = p.req.reply.send(DotResponse {
-                                id: p.req.id,
+                            let _ = p.reply.send(DotResponse {
+                                id: p.id,
                                 value: Err(format!("batched execute: {e}")),
                                 batch_size: 0,
-                                latency: p.arrived.elapsed(),
+                                latency: p.submitted.elapsed(),
                             });
                         }
                     }
@@ -282,16 +358,16 @@ fn worker_loop(
                     stats.requests += 1;
                     stats.pjrt_calls += 1;
                     let value = rt
-                        .dot_f32(single_name, &p.req.a, &p.req.b)
+                        .dot_f32(single_name, &p.a, &p.b)
                         .map_err(|e| e.to_string());
                     if value.is_err() {
                         stats.errors += 1;
                     }
-                    let _ = p.req.reply.send(DotResponse {
-                        id: p.req.id,
+                    let _ = p.reply.send(DotResponse {
+                        id: p.id,
                         value,
                         batch_size: 1,
-                        latency: p.arrived.elapsed(),
+                        latency: p.submitted.elapsed(),
                     });
                 }
             }
@@ -304,11 +380,81 @@ fn worker_loop(
 mod tests {
     use super::*;
     use crate::accuracy::exact::exact_dot_f32;
+    use crate::accuracy::gen_dot_f32;
     use crate::util::Rng;
 
     fn artifacts_present() -> bool {
-        crate::runtime::artifacts_dir().join("manifest.tsv").exists()
+        // the stub Runtime (no `pjrt` feature) fails closed, so the PJRT
+        // tests must skip even when artifacts exist on disk
+        cfg!(feature = "pjrt")
+            && crate::runtime::artifacts_dir().join("manifest.tsv").exists()
     }
+
+    fn pjrt_config() -> ServiceConfig {
+        ServiceConfig { backend: Backend::Pjrt, ..ServiceConfig::default() }
+    }
+
+    // ---- Host backend (default): no artifacts needed ----
+
+    #[test]
+    fn host_backend_round_trip_matches_exact() {
+        let (svc, client) = DotService::start(ServiceConfig::default()).unwrap();
+        let mut rng = Rng::new(5);
+        let mut rxs = Vec::new();
+        let mut expected = Vec::new();
+        let mut scales = Vec::new();
+        // mixed sizes: inline path and chunked-parallel path
+        for (i, n) in [1000usize, 2048, 400_000].iter().enumerate() {
+            let a = rng.normal_f32_vec(*n);
+            let b = rng.normal_f32_vec(*n);
+            expected.push(exact_dot_f32(&a, &b));
+            scales.push(
+                a.iter().zip(&b).map(|(x, y)| (x * y).abs() as f64).sum::<f64>().max(1e-30),
+            );
+            rxs.push(client.submit(i as u64, if i == 1 { "naive" } else { "kahan" }, a, b));
+        }
+        for (i, rx) in rxs.into_iter().enumerate() {
+            let resp = rx.recv().expect("response");
+            assert_eq!(resp.id, i as u64);
+            let v = resp.value.expect("value") as f64;
+            assert!(
+                (v - expected[i]).abs() / scales[i] < 1e-4,
+                "req {i}: {v} vs {}",
+                expected[i]
+            );
+        }
+        let stats = svc.stop();
+        assert_eq!(stats.requests, 3);
+        assert_eq!(stats.engine_calls, 3);
+        assert_eq!(stats.pjrt_calls, 0);
+        assert_eq!(stats.errors, 0);
+    }
+
+    #[test]
+    fn host_backend_kahan_survives_ill_conditioned_input() {
+        let (svc, client) = DotService::start(ServiceConfig::default()).unwrap();
+        let mut rng = Rng::new(9);
+        let (a, b, exact, _cond) = gen_dot_f32(4096, 1e6, &mut rng);
+        let absdot: f64 =
+            a.iter().zip(&b).map(|(x, y)| (*x as f64 * *y as f64).abs()).sum::<f64>().max(1e-30);
+        let v = client.dot_blocking("kahan", a, b).unwrap() as f64;
+        assert!(
+            (v - exact).abs() / absdot < 1e-5,
+            "kahan service result must stay within the Kahan bound: {v} vs {exact}"
+        );
+        svc.stop();
+    }
+
+    #[test]
+    fn host_backend_rejects_length_mismatch() {
+        let (svc, client) = DotService::start(ServiceConfig::default()).unwrap();
+        let r = client.dot_blocking("kahan", vec![0.0; 10], vec![0.0; 11]);
+        assert!(r.is_err());
+        let stats = svc.stop();
+        assert_eq!(stats.errors, 1);
+    }
+
+    // ---- Pjrt backend: skipped without artifacts ----
 
     #[test]
     fn service_round_trip_and_batching() {
@@ -316,7 +462,7 @@ mod tests {
             eprintln!("skipping: no artifacts");
             return;
         }
-        let (svc, client) = DotService::start(ServiceConfig::default()).unwrap();
+        let (svc, client) = DotService::start(pjrt_config()).unwrap();
         let mut rng = Rng::new(5);
         let n = 2048;
         // submit a burst so the batcher can fuse them
@@ -348,7 +494,7 @@ mod tests {
         if !artifacts_present() {
             return;
         }
-        let (svc, client) = DotService::start(ServiceConfig::default()).unwrap();
+        let (svc, client) = DotService::start(pjrt_config()).unwrap();
         let a = vec![1.0f32; 100];
         let b = vec![2.0f32; 100];
         let vk = client.dot_blocking("kahan", a.clone(), b.clone()).unwrap();
@@ -363,7 +509,7 @@ mod tests {
         if !artifacts_present() {
             return;
         }
-        let (svc, client) = DotService::start(ServiceConfig::default()).unwrap();
+        let (svc, client) = DotService::start(pjrt_config()).unwrap();
         let big = vec![0.0f32; 1 << 21]; // 2M > 65536 and > batched n
         let r = client.dot_blocking("kahan", big.clone(), big);
         assert!(r.is_err());

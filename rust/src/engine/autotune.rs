@@ -1,0 +1,256 @@
+//! First-use micro-calibration: which registry kernel is fastest on *this*
+//! host at each size class?
+//!
+//! The paper's answer is analytic (ECM: the best kernel depends on which
+//! level of the memory hierarchy bounds the loop), but silicon has the last
+//! word — AVX-512 downclocking, missing FMA, SMT siblings and virtualized
+//! LLCs all shuffle the ranking. So on first use the engine times every
+//! available kernel from `bench::kernels` at three probe sizes
+//! (L1-resident, LLC-resident, memory-resident), picks the fastest naive
+//! and fastest compensated kernel per `(Precision, SizeClass)`, and caches
+//! the dispatch table in a `OnceLock` for the life of the process.
+//!
+//! Calibration costs ~1 s once; every later `select` is an array index.
+
+use crate::bench::kernels::{registry_static, HostKernel, KernelFn};
+use crate::bench::timer::measure_adaptive;
+use crate::isa::{Precision, Variant};
+use crate::machine::detect::detect_host_cached;
+use crate::util::Rng;
+use std::sync::OnceLock;
+
+/// Where a working set of a given total size lives on this host.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SizeClass {
+    /// both streams fit in L1
+    L1,
+    /// fits in the last-level cache
+    Llc,
+    /// memory-resident
+    Mem,
+}
+
+impl SizeClass {
+    pub const ALL: [SizeClass; 3] = [SizeClass::L1, SizeClass::Llc, SizeClass::Mem];
+
+    pub fn index(self) -> usize {
+        match self {
+            SizeClass::L1 => 0,
+            SizeClass::Llc => 1,
+            SizeClass::Mem => 2,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            SizeClass::L1 => "L1",
+            SizeClass::Llc => "LLC",
+            SizeClass::Mem => "MEM",
+        }
+    }
+
+    /// Classify a total working-set size (both streams, bytes) against the
+    /// detected host cache hierarchy.
+    pub fn of(total_bytes: u64) -> SizeClass {
+        let m = detect_host_cached();
+        if total_bytes <= m.caches[0].size_bytes {
+            SizeClass::L1
+        } else if total_bytes <= m.caches[2].size_bytes {
+            SizeClass::Llc
+        } else {
+            SizeClass::Mem
+        }
+    }
+}
+
+fn prec_index(prec: Precision) -> usize {
+    match prec {
+        Precision::Sp => 0,
+        Precision::Dp => 1,
+    }
+}
+
+/// The two kernels the engine dispatches between for one
+/// `(Precision, SizeClass)` cell.
+#[derive(Clone, Copy)]
+pub struct Choice {
+    /// fastest compensated kernel (Kahan or Kahan-FMA)
+    pub kahan: HostKernel,
+    /// fastest uncompensated kernel
+    pub naive: HostKernel,
+    /// measured cycles per invocation at the probe size, (kahan, naive)
+    pub probe_cy: (f64, f64),
+}
+
+/// Calibrated dispatch table: `[precision][size class] -> Choice`.
+pub struct DispatchTable {
+    choices: [[Choice; 3]; 2],
+    /// total probe bytes used per class (for reporting)
+    pub probe_bytes: [u64; 3],
+}
+
+fn median_cycles_f32(f: fn(&[f32], &[f32]) -> f32, a: &[f32], b: &[f32], reps: usize) -> f64 {
+    measure_adaptive(200_000.0, reps, || f(a, b)).median_cy
+}
+
+fn median_cycles_f64(f: fn(&[f64], &[f64]) -> f64, a: &[f64], b: &[f64], reps: usize) -> f64 {
+    measure_adaptive(200_000.0, reps, || f(a, b)).median_cy
+}
+
+impl DispatchTable {
+    /// Time every available kernel at each probe size and keep the winners.
+    /// `probe_bytes[c]` is the total working set (both streams) for class
+    /// `c`; tests pass tiny probes to keep calibration instant.
+    pub fn calibrate(probe_bytes: [u64; 3], reps: usize) -> DispatchTable {
+        let mut rng = Rng::new(0xCA11B);
+        let mut rows: Vec<[Choice; 3]> = Vec::with_capacity(2);
+        for prec in [Precision::Sp, Precision::Dp] {
+            let elem = match prec {
+                Precision::Sp => 4u64,
+                Precision::Dp => 8u64,
+            };
+            let mut per_class: Vec<Choice> = Vec::with_capacity(3);
+            for &total in &probe_bytes {
+                let n = (total / (2 * elem)).max(64) as usize;
+                let mut best_kahan: Option<(f64, HostKernel)> = None;
+                let mut best_naive: Option<(f64, HostKernel)> = None;
+                match prec {
+                    Precision::Sp => {
+                        let a = rng.normal_f32_vec(n);
+                        let b = rng.normal_f32_vec(n);
+                        for k in registry_static().iter().filter(|k| k.available) {
+                            let KernelFn::F32(f) = k.f else { continue };
+                            if k.prec != prec {
+                                continue;
+                            }
+                            let cy = median_cycles_f32(f, &a, &b, reps);
+                            let slot = if k.variant == Variant::Naive {
+                                &mut best_naive
+                            } else {
+                                &mut best_kahan
+                            };
+                            if slot.map_or(true, |(c, _)| cy < c) {
+                                *slot = Some((cy, *k));
+                            }
+                        }
+                    }
+                    Precision::Dp => {
+                        let a = rng.normal_f64_vec(n);
+                        let b = rng.normal_f64_vec(n);
+                        for k in registry_static().iter().filter(|k| k.available) {
+                            let KernelFn::F64(f) = k.f else { continue };
+                            if k.prec != prec {
+                                continue;
+                            }
+                            let cy = median_cycles_f64(f, &a, &b, reps);
+                            let slot = if k.variant == Variant::Naive {
+                                &mut best_naive
+                            } else {
+                                &mut best_kahan
+                            };
+                            if slot.map_or(true, |(c, _)| cy < c) {
+                                *slot = Some((cy, *k));
+                            }
+                        }
+                    }
+                }
+                // scalar naive + scalar kahan are always available, so both
+                // slots are guaranteed to be filled
+                let (kc, kahan) = best_kahan.expect("at least one compensated kernel");
+                let (nc, naive) = best_naive.expect("at least one naive kernel");
+                per_class.push(Choice { kahan, naive, probe_cy: (kc, nc) });
+            }
+            rows.push([per_class[0], per_class[1], per_class[2]]);
+        }
+        DispatchTable { choices: [rows[0], rows[1]], probe_bytes }
+    }
+
+    pub fn choice(&self, prec: Precision, class: SizeClass) -> &Choice {
+        &self.choices[prec_index(prec)][class.index()]
+    }
+
+    /// Kernel for a request: `Variant::Naive` maps to the naive winner,
+    /// every compensated variant maps to the Kahan winner.
+    pub fn select(&self, prec: Precision, variant: Variant, class: SizeClass) -> &HostKernel {
+        let c = self.choice(prec, class);
+        if variant == Variant::Naive {
+            &c.naive
+        } else {
+            &c.kahan
+        }
+    }
+
+    /// Human-readable dispatch table (for `repro engine-info` and benches).
+    pub fn render(&self) -> crate::util::Table {
+        let mut t = crate::util::Table::new("autotuned kernel dispatch (per size class)")
+            .headers(["prec", "class", "probe WS", "kahan winner", "naive winner"]);
+        for prec in [Precision::Sp, Precision::Dp] {
+            for class in SizeClass::ALL {
+                let c = self.choice(prec, class);
+                t.row([
+                    if prec == Precision::Sp { "SP" } else { "DP" }.to_string(),
+                    class.name().to_string(),
+                    crate::util::fmt::bytes(self.probe_bytes[class.index()]),
+                    format!("{} ({:.0} cy)", c.kahan.name, c.probe_cy.0),
+                    format!("{} ({:.0} cy)", c.naive.name, c.probe_cy.1),
+                ]);
+            }
+        }
+        t
+    }
+}
+
+/// Default probe sizes from the detected cache hierarchy: half-L1,
+/// half-LLC, and a memory-resident set strictly beyond the LLC (capped at
+/// 64 MiB so first-use calibration stays around a second).
+fn default_probe_bytes() -> [u64; 3] {
+    let m = detect_host_cached();
+    let l1 = m.caches[0].size_bytes / 2;
+    let llc_full = m.caches[2].size_bytes;
+    let mem = (2 * llc_full).min(64 << 20).max(llc_full + (8 << 20));
+    [l1, llc_full / 2, mem]
+}
+
+/// The process-wide dispatch table, calibrated on first use.
+pub fn dispatch() -> &'static DispatchTable {
+    static TABLE: OnceLock<DispatchTable> = OnceLock::new();
+    TABLE.get_or_init(|| DispatchTable::calibrate(default_probe_bytes(), 3))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Tiny probes keep this test fast; we only assert structure, not that
+    /// any particular kernel wins.
+    #[test]
+    fn calibrate_fills_every_cell_with_matching_kernels() {
+        let t = DispatchTable::calibrate([8 << 10, 64 << 10, 256 << 10], 1);
+        for prec in [Precision::Sp, Precision::Dp] {
+            for class in SizeClass::ALL {
+                let c = t.choice(prec, class);
+                assert_eq!(c.kahan.prec, prec);
+                assert_eq!(c.naive.prec, prec);
+                assert!(c.kahan.available && c.naive.available);
+                assert_ne!(c.kahan.variant, Variant::Naive);
+                assert_eq!(c.naive.variant, Variant::Naive);
+                assert!(c.probe_cy.0 > 0.0 && c.probe_cy.1 > 0.0);
+            }
+        }
+        // select maps variants onto the right column
+        let k = t.select(Precision::Sp, Variant::Kahan, SizeClass::L1);
+        assert_ne!(k.variant, Variant::Naive);
+        let n = t.select(Precision::Sp, Variant::Naive, SizeClass::Mem);
+        assert_eq!(n.variant, Variant::Naive);
+        // render shouldn't panic
+        let _ = t.render().render();
+    }
+
+    #[test]
+    fn size_class_ordering_is_monotone() {
+        let m = detect_host_cached();
+        assert_eq!(SizeClass::of(1024), SizeClass::L1);
+        assert_eq!(SizeClass::of(m.caches[2].size_bytes), SizeClass::Llc);
+        assert_eq!(SizeClass::of(4 * m.caches[2].size_bytes), SizeClass::Mem);
+    }
+}

@@ -1,0 +1,310 @@
+//! Persistent parallel dot engine — the allocation-free request hot path.
+//!
+//! The paper's headline is that a Kahan-compensated dot is (nearly) free
+//! once SIMD, unrolling and bandwidth saturation are exploited. This module
+//! is the serving-side consequence: keep everything that is expensive to
+//! set up — aligned buffers, pinned threads, kernel selection — alive
+//! across requests, so the steady-state cost of a served dot is the
+//! streaming cost the paper models and nothing else.
+//!
+//! # Architecture: pool → partition → kernel → compensated merge
+//!
+//! ```text
+//!                  ┌────────────────────────────────────────────────┐
+//!   request(a, b)  │ DotEngine                                      │
+//!   ─────────────► │  1. pool   : admit streams into recycled       │
+//!                  │              64-byte-aligned buffers (zero     │
+//!                  │              heap allocation at steady state)  │
+//!                  │  2. partition: cut into cache-line-aligned     │
+//!                  │              chunks, one per pinned worker     │
+//!                  │  3. kernel : per chunk, the autotuned best     │
+//!                  │              host SIMD kernel for              │
+//!                  │              (precision, size class)           │
+//!                  │  4. merge  : compensated (Neumaier) fold of    │
+//!                  │              per-chunk partials, chunk order   │
+//!                  └────────────────────────────────────────────────┘
+//! ```
+//!
+//! * [`pool`] — the recycling aligned buffer pool ([`BufferPool`]).
+//! * [`parallel`] — the long-lived pinned worker pool ([`WorkerPool`]) and
+//!   the chunked compensated reduction (`parallel_dot_*`).
+//! * [`autotune`] — first-use micro-calibration of the kernel registry into
+//!   a `(Precision, SizeClass)` dispatch table behind a `OnceLock`.
+//!
+//! # Accuracy
+//!
+//! Each chunk is a full Kahan dot (per-lane compensation folded by the
+//! kernel); the cross-chunk merge reuses the registry's compensated fold.
+//! The parallel result therefore keeps the sequential Kahan error bound
+//! `O(u)·Σ|aᵢbᵢ|` for any chunk count — see the property tests in
+//! `rust/tests/test_engine.rs` (random lengths, chunk counts, and
+//! Ogita–Rump–Oishi ill-conditioned inputs).
+//!
+//! # Determinism
+//!
+//! Chunk boundaries depend only on `(n, worker count)` and partials merge
+//! in chunk order, so results are bit-reproducible run to run for a fixed
+//! engine configuration.
+//!
+//! # Who uses it
+//!
+//! * `coordinator::service` executes host-backend requests here (the
+//!   default backend; PJRT remains available behind `Backend::Pjrt`).
+//! * `bench::threads::scaling_curve` reuses one [`WorkerPool`] across all
+//!   thread counts instead of re-spawning per measurement.
+//! * `benches/bench_engine.rs` records the engine-vs-spawn-per-call
+//!   speedup into `BENCH_engine.json`.
+
+pub mod autotune;
+pub mod parallel;
+pub mod pool;
+
+pub use autotune::{dispatch, Choice, DispatchTable, SizeClass};
+pub use parallel::{chunk_ranges, parallel_dot_f32, parallel_dot_f64, WorkerPool};
+pub use pool::{BufferPool, PoolStats, PooledSlice};
+
+use crate::bench::kernels::KernelFn;
+use crate::isa::{Precision, Variant};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, OnceLock};
+
+/// Engine configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct EngineConfig {
+    /// worker threads; 0 = one per online CPU
+    pub threads: usize,
+    /// total working sets (both streams, bytes) below this run on the
+    /// caller's thread directly over the caller's slices (zero copy, zero
+    /// dispatch) — small dots don't amortize a hand-off
+    pub parallel_cutoff_bytes: usize,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        EngineConfig { threads: 0, parallel_cutoff_bytes: 256 * 1024 }
+    }
+}
+
+/// Aggregate engine counters.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct EngineStats {
+    /// dots served
+    pub requests: u64,
+    /// dots that took the chunked-parallel path
+    pub parallel: u64,
+    pub pool: PoolStats,
+}
+
+/// Generates the per-precision serve methods so the size-class / cutoff /
+/// admit policy lives in exactly one place.
+macro_rules! engine_dot_methods {
+    ($dot:ident, $dot_pooled:ident, $select:ident, $admit:ident,
+     $parallel:ident, $arm:ident, $ty:ty, $prec:expr) => {
+        fn $select(&self, variant: Variant, total_bytes: u64) -> fn(&[$ty], &[$ty]) -> $ty {
+            let class = SizeClass::of(total_bytes);
+            match dispatch().select($prec, variant, class).f {
+                KernelFn::$arm(f) => f,
+                _ => unreachable!("dispatch returned a kernel of the wrong precision"),
+            }
+        }
+
+        /// Serve one dot. Small dots run inline on the caller's slices
+        /// (zero copy, zero dispatch — a hand-off doesn't amortize); large
+        /// dots are admitted into pooled aligned buffers and chunked
+        /// across the worker pool.
+        pub fn $dot(&self, variant: Variant, a: &[$ty], b: &[$ty]) -> $ty {
+            self.requests.fetch_add(1, Ordering::Relaxed);
+            let n = a.len().min(b.len());
+            let total_bytes = (2 * n * std::mem::size_of::<$ty>()) as u64;
+            let f = self.$select(variant, total_bytes);
+            if total_bytes < self.cfg.parallel_cutoff_bytes as u64 || self.workers.size() == 1 {
+                return f(&a[..n], &b[..n]);
+            }
+            let pa = self.$admit(&a[..n]);
+            let pb = self.$admit(&b[..n]);
+            self.parallel_jobs.fetch_add(1, Ordering::Relaxed);
+            $parallel(&self.workers, f, &pa, &pb, self.workers.size())
+        }
+
+        /// The zero-copy steady-state path: dot two already-admitted
+        /// streams.
+        pub fn $dot_pooled(
+            &self,
+            variant: Variant,
+            a: &Arc<PooledSlice<$ty>>,
+            b: &Arc<PooledSlice<$ty>>,
+        ) -> $ty {
+            self.requests.fetch_add(1, Ordering::Relaxed);
+            let n = a.len().min(b.len());
+            let total_bytes = (2 * n * std::mem::size_of::<$ty>()) as u64;
+            let f = self.$select(variant, total_bytes);
+            if total_bytes < self.cfg.parallel_cutoff_bytes as u64 || self.workers.size() == 1 {
+                return f(&a.as_slice()[..n], &b.as_slice()[..n]);
+            }
+            self.parallel_jobs.fetch_add(1, Ordering::Relaxed);
+            $parallel(&self.workers, f, a, b, self.workers.size())
+        }
+    };
+}
+
+/// The persistent engine: one buffer pool + one pinned worker pool,
+/// alive for the life of the process (or of an explicitly created engine).
+pub struct DotEngine {
+    pool: Arc<BufferPool>,
+    workers: WorkerPool,
+    cfg: EngineConfig,
+    requests: AtomicU64,
+    parallel_jobs: AtomicU64,
+}
+
+impl DotEngine {
+    pub fn new(cfg: EngineConfig) -> DotEngine {
+        let threads = if cfg.threads == 0 {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        } else {
+            cfg.threads
+        };
+        DotEngine {
+            pool: BufferPool::new(),
+            workers: WorkerPool::new(threads),
+            cfg,
+            requests: AtomicU64::new(0),
+            parallel_jobs: AtomicU64::new(0),
+        }
+    }
+
+    /// The process-wide engine (used by the service's host backend).
+    pub fn global() -> &'static DotEngine {
+        static ENGINE: OnceLock<DotEngine> = OnceLock::new();
+        ENGINE.get_or_init(|| DotEngine::new(EngineConfig::default()))
+    }
+
+    pub fn threads(&self) -> usize {
+        self.workers.size()
+    }
+
+    pub fn stats(&self) -> EngineStats {
+        EngineStats {
+            requests: self.requests.load(Ordering::Relaxed),
+            parallel: self.parallel_jobs.load(Ordering::Relaxed),
+            pool: self.pool.stats(),
+        }
+    }
+
+    /// Admit a stream into the engine's pooled aligned storage (for callers
+    /// that hold inputs across many dots — the zero-copy steady state).
+    pub fn admit_f32(&self, v: &[f32]) -> Arc<PooledSlice<f32>> {
+        Arc::new(self.pool.admit(v))
+    }
+
+    pub fn admit_f64(&self, v: &[f64]) -> Arc<PooledSlice<f64>> {
+        Arc::new(self.pool.admit(v))
+    }
+
+    engine_dot_methods!(
+        dot_f32,
+        dot_pooled_f32,
+        select_f32,
+        admit_f32,
+        parallel_dot_f32,
+        F32,
+        f32,
+        Precision::Sp
+    );
+    engine_dot_methods!(
+        dot_f64,
+        dot_pooled_f64,
+        select_f64,
+        admit_f64,
+        parallel_dot_f64,
+        F64,
+        f64,
+        Precision::Dp
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::accuracy::exact::exact_dot_f32;
+    use crate::util::Rng;
+
+    /// One engine for the module's tests: calibration (via `dispatch()`)
+    /// runs once per process.
+    fn engine() -> DotEngine {
+        DotEngine::new(EngineConfig { threads: 2, ..EngineConfig::default() })
+    }
+
+    #[test]
+    fn small_and_large_paths_agree_with_exact() {
+        let e = engine();
+        let mut rng = Rng::new(11);
+        // n=1000 stays inline; n=200_000 (1.6 MB) takes the parallel path
+        for n in [1000usize, 200_000] {
+            let a = rng.normal_f32_vec(n);
+            let b = rng.normal_f32_vec(n);
+            let exact = exact_dot_f32(&a, &b);
+            let scale: f64 =
+                a.iter().zip(&b).map(|(x, y)| (x * y).abs() as f64).sum::<f64>().max(1e-30);
+            let got = e.dot_f32(Variant::Kahan, &a, &b) as f64;
+            assert!((got - exact).abs() / scale < 1e-6, "n={n}");
+            let gotn = e.dot_f32(Variant::Naive, &a, &b) as f64;
+            assert!((gotn - exact).abs() / scale < 1e-4, "naive n={n}");
+        }
+        let s = e.stats();
+        assert_eq!(s.requests, 4);
+        assert_eq!(s.parallel, 2, "only the large dots may go parallel: {s:?}");
+    }
+
+    #[test]
+    fn pooled_path_reuses_buffers_and_matches() {
+        let e = engine();
+        let mut rng = Rng::new(13);
+        let n = 300_000;
+        let av = rng.normal_f32_vec(n);
+        let bv = rng.normal_f32_vec(n);
+        let exact = exact_dot_f32(&av, &bv);
+        let scale: f64 =
+            av.iter().zip(&bv).map(|(x, y)| (x * y).abs() as f64).sum::<f64>().max(1e-30);
+
+        // request path: admit per call — buffers recycle after round 1
+        let first = e.dot_f32(Variant::Kahan, &av, &bv);
+        for _ in 0..3 {
+            let again = e.dot_f32(Variant::Kahan, &av, &bv);
+            assert_eq!(first.to_bits(), again.to_bits(), "deterministic");
+        }
+        assert!(e.stats().pool.hits >= 6, "{:?}", e.stats());
+
+        // steady-state path: admit once, dot many
+        let pa = e.admit_f32(&av);
+        let pb = e.admit_f32(&bv);
+        let v = e.dot_pooled_f32(Variant::Kahan, &pa, &pb) as f64;
+        assert!((v - exact).abs() / scale < 1e-6);
+    }
+
+    #[test]
+    fn f64_engine_path() {
+        use crate::accuracy::exact::exact_dot_f64;
+        let e = engine();
+        let mut rng = Rng::new(17);
+        let n = 150_000; // 2.4 MB total -> parallel
+        let a = rng.normal_f64_vec(n);
+        let b = rng.normal_f64_vec(n);
+        let exact = exact_dot_f64(&a, &b);
+        let scale: f64 = a.iter().zip(&b).map(|(x, y)| (x * y).abs()).sum::<f64>().max(1e-300);
+        let got = e.dot_f64(Variant::Kahan, &a, &b);
+        assert!((got - exact).abs() / scale < 1e-14);
+        // zero-copy steady state exists for f64 too
+        let pa = e.admit_f64(&a);
+        let pb = e.admit_f64(&b);
+        let pooled = e.dot_pooled_f64(Variant::Kahan, &pa, &pb);
+        assert!((pooled - exact).abs() / scale < 1e-14);
+    }
+
+    #[test]
+    fn global_engine_is_a_singleton() {
+        let a = DotEngine::global() as *const _;
+        let b = DotEngine::global() as *const _;
+        assert_eq!(a, b);
+    }
+}

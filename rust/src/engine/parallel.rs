@@ -1,0 +1,302 @@
+//! Long-lived pinned worker pool + chunked compensated dot: the compute
+//! side of the persistent engine.
+//!
+//! Workers are spawned **once** (pinned round-robin to CPUs, like the
+//! paper's likwid-pin runs) and park in a condvar between jobs — the
+//! request path never calls `thread::spawn`. A dot is partitioned into
+//! cache-line-aligned chunks (boundaries at 64-byte multiples of the
+//! element type), each chunk runs a host SIMD kernel from the registry,
+//! and the per-chunk partials are merged with the existing compensated
+//! (Neumaier) fold.
+//!
+//! Error bound: each chunk result is a Kahan-compensated dot of its
+//! sub-vectors (the registry kernels fold their per-lane compensation
+//! terms internally before returning, so a chunk's pending `comp` is
+//! already absorbed into its `sum`); the cross-chunk merge is itself
+//! compensated, adding one protected rounding per chunk. The parallel
+//! result therefore keeps the sequential Kahan bound
+//! `O(u)·Σ|aᵢbᵢ|` independent of chunk count — property-tested in
+//! `rust/tests/test_engine.rs` against `exact_dot_*` on Ogita–Rump–Oishi
+//! ill-conditioned inputs.
+//!
+//! Determinism: chunk boundaries depend only on `(n, chunks)` and the
+//! merge folds partials in chunk order, so a given engine configuration is
+//! bit-reproducible run to run regardless of worker scheduling.
+
+use super::pool::PooledSlice;
+use crate::bench::kernels::{compensated_fold_f32, compensated_fold_f64};
+use crate::bench::threads::pin_to_cpu;
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+
+/// A unit of work executed on a pool worker.
+pub type Job = Box<dyn FnOnce() + Send + 'static>;
+
+struct QueueState {
+    jobs: VecDeque<Job>,
+    closed: bool,
+}
+
+struct WorkerShared {
+    state: Mutex<QueueState>,
+    cv: Condvar,
+}
+
+struct WorkerHandle {
+    shared: Arc<WorkerShared>,
+    join: Option<std::thread::JoinHandle<()>>,
+}
+
+/// Persistent worker pool: spawn once, park between jobs, join on drop.
+pub struct WorkerPool {
+    workers: Vec<WorkerHandle>,
+    next: AtomicUsize,
+}
+
+fn worker_main(shared: &WorkerShared) {
+    loop {
+        let job = {
+            let mut g = shared.state.lock().unwrap();
+            loop {
+                if let Some(j) = g.jobs.pop_front() {
+                    break Some(j);
+                }
+                if g.closed {
+                    break None;
+                }
+                g = shared.cv.wait(g).unwrap();
+            }
+        };
+        match job {
+            Some(j) => j(),
+            None => return,
+        }
+    }
+}
+
+impl WorkerPool {
+    /// Spawn `threads` workers (at least one), worker `i` pinned to CPU `i`
+    /// (wrapping over the online CPU set).
+    pub fn new(threads: usize) -> WorkerPool {
+        let threads = threads.max(1);
+        let mut workers = Vec::with_capacity(threads);
+        for i in 0..threads {
+            let shared = Arc::new(WorkerShared {
+                state: Mutex::new(QueueState { jobs: VecDeque::new(), closed: false }),
+                cv: Condvar::new(),
+            });
+            let shared2 = Arc::clone(&shared);
+            let join = std::thread::Builder::new()
+                .name(format!("engine-worker-{i}"))
+                .spawn(move || {
+                    pin_to_cpu(i);
+                    worker_main(&shared2);
+                })
+                .expect("spawn engine worker");
+            workers.push(WorkerHandle { shared, join: Some(join) });
+        }
+        WorkerPool { workers, next: AtomicUsize::new(0) }
+    }
+
+    pub fn size(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Enqueue `job` on worker `worker % size()`.
+    pub fn submit_to(&self, worker: usize, job: Job) {
+        let w = &self.workers[worker % self.workers.len()];
+        let mut g = w.shared.state.lock().unwrap();
+        assert!(!g.closed, "submit to closed worker pool");
+        g.jobs.push_back(job);
+        w.shared.cv.notify_one();
+    }
+
+    /// Enqueue `job` on the next worker round-robin.
+    pub fn submit(&self, job: Job) {
+        let i = self.next.fetch_add(1, Ordering::Relaxed);
+        self.submit_to(i, job);
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        for w in &self.workers {
+            let mut g = w.shared.state.lock().unwrap();
+            g.closed = true;
+            w.shared.cv.notify_all();
+        }
+        for w in &mut self.workers {
+            if let Some(join) = w.join.take() {
+                let _ = join.join();
+            }
+        }
+    }
+}
+
+/// Split `n` elements into up to `chunks` ranges whose boundaries fall on
+/// cache-line multiples of the element type (`elems_per_cl` = 16 for f32,
+/// 8 for f64); the final range absorbs the tail. Empty ranges are dropped,
+/// so tiny `n` degenerates to a single chunk.
+pub fn chunk_ranges(n: usize, chunks: usize, elems_per_cl: usize) -> Vec<(usize, usize)> {
+    let chunks = chunks.max(1);
+    let per = ((n / chunks) / elems_per_cl) * elems_per_cl;
+    if per == 0 || chunks == 1 {
+        return if n == 0 { Vec::new() } else { vec![(0, n)] };
+    }
+    let mut out = Vec::with_capacity(chunks);
+    let mut start = 0;
+    for _ in 0..chunks - 1 {
+        out.push((start, start + per));
+        start += per;
+    }
+    if start < n {
+        out.push((start, n));
+    }
+    out
+}
+
+macro_rules! parallel_dot_impl {
+    ($name:ident, $ty:ty, $elems_per_cl:expr, $fold:ident) => {
+        /// Chunked-parallel compensated dot over pooled aligned streams:
+        /// each chunk runs `f` on a worker, partials merge with the
+        /// compensated fold in chunk order (deterministic).
+        pub fn $name(
+            pool: &WorkerPool,
+            f: fn(&[$ty], &[$ty]) -> $ty,
+            a: &Arc<PooledSlice<$ty>>,
+            b: &Arc<PooledSlice<$ty>>,
+            chunks: usize,
+        ) -> $ty {
+            let n = a.len().min(b.len());
+            let ranges = chunk_ranges(n, chunks, $elems_per_cl);
+            if ranges.len() <= 1 {
+                return f(&a.as_slice()[..n], &b.as_slice()[..n]);
+            }
+            let (tx, rx) = mpsc::channel::<(usize, $ty)>();
+            for (i, &(lo, hi)) in ranges.iter().enumerate() {
+                let a = Arc::clone(a);
+                let b = Arc::clone(b);
+                let tx = tx.clone();
+                pool.submit_to(i, Box::new(move || {
+                    let v = f(&a.as_slice()[lo..hi], &b.as_slice()[lo..hi]);
+                    let _ = tx.send((i, v));
+                }));
+            }
+            drop(tx);
+            // collect in chunk order for a deterministic merge
+            let mut sums = vec![0.0 as $ty; ranges.len()];
+            for (i, v) in rx {
+                sums[i] = v;
+            }
+            // per-chunk compensations are already folded into each chunk's
+            // sum by the kernel; the merge only needs its own compensation
+            let comps = vec![0.0 as $ty; sums.len()];
+            $fold(&sums, &comps)
+        }
+    };
+}
+
+parallel_dot_impl!(parallel_dot_f32, f32, 16, compensated_fold_f32);
+parallel_dot_impl!(parallel_dot_f64, f64, 8, compensated_fold_f64);
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::accuracy::exact::exact_dot_f32;
+    use crate::bench::kernels::scalar;
+    use crate::engine::pool::BufferPool;
+    use crate::util::Rng;
+
+    #[test]
+    fn chunk_ranges_cover_and_align() {
+        for (n, chunks) in [(0usize, 4usize), (5, 4), (64, 3), (1000, 7), (4096, 4), (100, 200)] {
+            let r = chunk_ranges(n, chunks, 16);
+            if n == 0 {
+                assert!(r.is_empty());
+                continue;
+            }
+            assert_eq!(r.first().unwrap().0, 0);
+            assert_eq!(r.last().unwrap().1, n);
+            for w in r.windows(2) {
+                assert_eq!(w[0].1, w[1].0, "contiguous");
+            }
+            for &(lo, hi) in &r[..r.len().saturating_sub(1)] {
+                assert_eq!(lo % 16, 0, "n={n} chunks={chunks}");
+                assert!(hi > lo);
+            }
+        }
+    }
+
+    #[test]
+    fn pool_runs_jobs_and_survives_reuse() {
+        let pool = WorkerPool::new(3);
+        for round in 0..3 {
+            let (tx, rx) = mpsc::channel();
+            for i in 0..10usize {
+                let tx = tx.clone();
+                pool.submit(Box::new(move || {
+                    let _ = tx.send(i);
+                }));
+            }
+            drop(tx);
+            let mut got: Vec<usize> = rx.iter().collect();
+            got.sort_unstable();
+            assert_eq!(got, (0..10).collect::<Vec<_>>(), "round {round}");
+        }
+    }
+
+    #[test]
+    fn parallel_dot_matches_exact_across_chunk_counts() {
+        let pool = WorkerPool::new(2);
+        let bufs = BufferPool::new();
+        let mut rng = Rng::new(77);
+        let n = 10_000;
+        let av = rng.normal_f32_vec(n);
+        let bv = rng.normal_f32_vec(n);
+        let exact = exact_dot_f32(&av, &bv);
+        let scale: f64 =
+            av.iter().zip(&bv).map(|(x, y)| (x * y).abs() as f64).sum::<f64>().max(1e-30);
+        let a = Arc::new(bufs.admit(&av));
+        let b = Arc::new(bufs.admit(&bv));
+        for chunks in [1usize, 2, 3, 5, 8, 17] {
+            let got =
+                parallel_dot_f32(&pool, scalar::kahan_unrolled_f32, &a, &b, chunks) as f64;
+            let rel = (got - exact).abs() / scale;
+            assert!(rel < 1e-6, "chunks={chunks}: rel={rel:e}");
+        }
+    }
+
+    #[test]
+    fn parallel_dot_is_deterministic() {
+        let pool = WorkerPool::new(4);
+        let bufs = BufferPool::new();
+        let mut rng = Rng::new(5);
+        let av = rng.normal_f32_vec(7777);
+        let bv = rng.normal_f32_vec(7777);
+        let a = Arc::new(bufs.admit(&av));
+        let b = Arc::new(bufs.admit(&bv));
+        let first = parallel_dot_f32(&pool, scalar::kahan_seq_f32, &a, &b, 4);
+        for _ in 0..5 {
+            let again = parallel_dot_f32(&pool, scalar::kahan_seq_f32, &a, &b, 4);
+            assert_eq!(first.to_bits(), again.to_bits(), "merge must be bit-stable");
+        }
+    }
+
+    #[test]
+    fn f64_parallel_dot_matches() {
+        use crate::accuracy::exact::exact_dot_f64;
+        let pool = WorkerPool::new(2);
+        let bufs = BufferPool::new();
+        let mut rng = Rng::new(9);
+        let av = rng.normal_f64_vec(4097);
+        let bv = rng.normal_f64_vec(4097);
+        let exact = exact_dot_f64(&av, &bv);
+        let scale: f64 =
+            av.iter().zip(&bv).map(|(x, y)| (x * y).abs()).sum::<f64>().max(1e-300);
+        let a = Arc::new(bufs.admit(&av));
+        let b = Arc::new(bufs.admit(&bv));
+        let got = parallel_dot_f64(&pool, scalar::kahan_unrolled_f64, &a, &b, 3);
+        assert!((got - exact).abs() / scale < 1e-14);
+    }
+}

@@ -15,6 +15,9 @@
 //!   hierarchy + memory interface) standing in for the paper's silicon;
 //! * [`bench`] — a likwid-bench-style host microbenchmark framework with
 //!   real `std::arch` SIMD Kahan kernels;
+//! * [`engine`] — the persistent parallel dot engine: pooled aligned
+//!   buffers, a pinned worker pool with chunked compensated reduction, and
+//!   an autotuned kernel dispatch table (the serving hot path);
 //! * [`accuracy`] — error-free transformations, exact dot products and the
 //!   Ogita–Rump–Oishi ill-conditioned generator;
 //! * [`runtime`] — PJRT execution of the AOT-lowered JAX/Pallas artifacts;
@@ -25,6 +28,7 @@ pub mod accuracy;
 pub mod bench;
 pub mod coordinator;
 pub mod ecm;
+pub mod engine;
 pub mod isa;
 pub mod machine;
 pub mod runtime;

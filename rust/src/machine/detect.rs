@@ -147,6 +147,21 @@ pub fn detect_host() -> Machine {
     }
 }
 
+/// Cached TSC frequency (the calibration busy-waits ~20 ms; the sweep and
+/// engine paths need it per measurement point).
+pub fn calibrate_tsc_ghz_cached() -> f64 {
+    static GHZ: std::sync::OnceLock<f64> = std::sync::OnceLock::new();
+    *GHZ.get_or_init(calibrate_tsc_ghz)
+}
+
+/// Cached host detection. `detect_host` busy-waits ~20 ms calibrating the
+/// TSC, so anything on a request path (the engine's size classifier, the
+/// autotuner) must use this instead of re-detecting.
+pub fn detect_host_cached() -> &'static Machine {
+    static HOST: std::sync::OnceLock<Machine> = std::sync::OnceLock::new();
+    HOST.get_or_init(detect_host)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -166,6 +181,13 @@ mod tests {
         let a = calibrate_tsc_ghz();
         let b = calibrate_tsc_ghz();
         assert!((a - b).abs() / a < 0.2, "a={a} b={b}");
+    }
+
+    #[test]
+    fn cached_host_is_stable() {
+        let a = detect_host_cached() as *const Machine;
+        let b = detect_host_cached() as *const Machine;
+        assert_eq!(a, b, "detection must run once");
     }
 
     #[test]

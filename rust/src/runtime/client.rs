@@ -1,206 +1,304 @@
 //! The PJRT client wrapper: compile-once / execute-many over the manifest's
 //! HLO-text artifacts (pattern from /opt/xla-example/load_hlo).
+//!
+//! The real client needs the `xla` bindings plus a native xla_extension
+//! install, neither of which the offline container ships, so it is gated
+//! behind the off-by-default `pjrt` cargo feature. Without the feature a
+//! stub with the identical public surface keeps every caller compiling;
+//! `Runtime::new()` then fails cleanly and the host engine
+//! (`crate::engine`) serves all dot traffic instead.
 
-use super::manifest::{ArtifactMeta, Manifest};
-use anyhow::{anyhow, bail, Context, Result};
-use std::collections::HashMap;
+#[cfg(feature = "pjrt")]
+mod pjrt_client {
+    use crate::runtime::manifest::{ArtifactMeta, Manifest};
+    use anyhow::{anyhow, bail, Context, Result};
+    use std::collections::HashMap;
 
-/// A loaded PJRT runtime: CPU client + executable cache.
-pub struct Runtime {
-    client: xla::PjRtClient,
-    manifest: Manifest,
-    cache: HashMap<String, xla::PjRtLoadedExecutable>,
-}
-
-impl Runtime {
-    /// Create a CPU PJRT client and load the manifest from the default
-    /// artifacts directory.
-    pub fn new() -> Result<Self> {
-        Self::with_manifest(Manifest::load_default()?)
+    /// A loaded PJRT runtime: CPU client + executable cache.
+    pub struct Runtime {
+        client: xla::PjRtClient,
+        manifest: Manifest,
+        cache: HashMap<String, xla::PjRtLoadedExecutable>,
     }
 
-    pub fn with_manifest(manifest: Manifest) -> Result<Self> {
-        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
-        Ok(Runtime { client, manifest, cache: HashMap::new() })
-    }
+    impl Runtime {
+        /// Create a CPU PJRT client and load the manifest from the default
+        /// artifacts directory.
+        pub fn new() -> Result<Self> {
+            Self::with_manifest(Manifest::load_default()?)
+        }
 
-    pub fn manifest(&self) -> &Manifest {
-        &self.manifest
-    }
+        pub fn with_manifest(manifest: Manifest) -> Result<Self> {
+            let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+            Ok(Runtime { client, manifest, cache: HashMap::new() })
+        }
 
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
+        pub fn manifest(&self) -> &Manifest {
+            &self.manifest
+        }
 
-    /// Compile (or fetch from cache) the executable for `name`.
-    pub fn load(&mut self, name: &str) -> Result<&xla::PjRtLoadedExecutable> {
-        if !self.cache.contains_key(name) {
+        pub fn platform(&self) -> String {
+            self.client.platform_name()
+        }
+
+        /// Compile (or fetch from cache) the executable for `name`.
+        pub fn load(&mut self, name: &str) -> Result<&xla::PjRtLoadedExecutable> {
+            if !self.cache.contains_key(name) {
+                let meta = self
+                    .manifest
+                    .get(name)
+                    .ok_or_else(|| anyhow!("unknown artifact `{name}`"))?
+                    .clone();
+                let path = self.manifest.hlo_path(&meta);
+                let proto = xla::HloModuleProto::from_text_file(
+                    path.to_str().context("non-utf8 path")?,
+                )
+                .map_err(|e| anyhow!("parse {path:?}: {e:?}"))?;
+                let comp = xla::XlaComputation::from_proto(&proto);
+                let exe = self
+                    .client
+                    .compile(&comp)
+                    .map_err(|e| anyhow!("compile {name}: {e:?}"))?;
+                self.cache.insert(name.to_string(), exe);
+            }
+            Ok(self.cache.get(name).unwrap())
+        }
+
+        /// Number of executables currently compiled.
+        pub fn cached(&self) -> usize {
+            self.cache.len()
+        }
+
+        fn execute_scalar_out(
+            exe: &xla::PjRtLoadedExecutable,
+            inputs: &[xla::Literal],
+        ) -> Result<Vec<f32>> {
+            let result = exe
+                .execute::<xla::Literal>(inputs)
+                .map_err(|e| anyhow!("execute: {e:?}"))?[0][0]
+                .to_literal_sync()
+                .map_err(|e| anyhow!("to_literal: {e:?}"))?;
+            let out = result.to_tuple1().map_err(|e| anyhow!("tuple: {e:?}"))?;
+            out.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e:?}"))
+        }
+
+        fn execute_scalar_out_f64(
+            exe: &xla::PjRtLoadedExecutable,
+            inputs: &[xla::Literal],
+        ) -> Result<Vec<f64>> {
+            let result = exe
+                .execute::<xla::Literal>(inputs)
+                .map_err(|e| anyhow!("execute: {e:?}"))?[0][0]
+                .to_literal_sync()
+                .map_err(|e| anyhow!("to_literal: {e:?}"))?;
+            let out = result.to_tuple1().map_err(|e| anyhow!("tuple: {e:?}"))?;
+            out.to_vec::<f64>().map_err(|e| anyhow!("to_vec: {e:?}"))
+        }
+
+        /// Pad `v` with zeros to `n` (zeros are neutral for dot/ksum,
+        /// including under compensation).
+        fn pad_f32(v: &[f32], n: usize) -> Vec<f32> {
+            let mut out = v.to_vec();
+            out.resize(n, 0.0);
+            out
+        }
+
+        fn pad_f64(v: &[f64], n: usize) -> Vec<f64> {
+            let mut out = v.to_vec();
+            out.resize(n, 0.0);
+            out
+        }
+
+        /// Run a (non-batched) f32 dot artifact on `a`,`b` (padded as needed).
+        pub fn dot_f32(&mut self, name: &str, a: &[f32], b: &[f32]) -> Result<f32> {
+            let meta = self.meta_checked(name, "f32", false)?;
+            if a.len() != b.len() {
+                bail!("length mismatch {} vs {}", a.len(), b.len());
+            }
+            if a.len() > meta.n {
+                bail!("input {} exceeds artifact size {}", a.len(), meta.n);
+            }
+            let n = meta.n;
+            let exe = self.load(name)?;
+            let xa = xla::Literal::vec1(&Self::pad_f32(a, n));
+            let xb = xla::Literal::vec1(&Self::pad_f32(b, n));
+            let v = Self::execute_scalar_out(exe, &[xa, xb])?;
+            Ok(v[0])
+        }
+
+        /// Run a (non-batched) f64 dot artifact.
+        pub fn dot_f64(&mut self, name: &str, a: &[f64], b: &[f64]) -> Result<f64> {
+            let meta = self.meta_checked(name, "f64", false)?;
+            if a.len() != b.len() {
+                bail!("length mismatch");
+            }
+            if a.len() > meta.n {
+                bail!("input too long");
+            }
+            let n = meta.n;
+            let exe = self.load(name)?;
+            let xa = xla::Literal::vec1(&Self::pad_f64(a, n));
+            let xb = xla::Literal::vec1(&Self::pad_f64(b, n));
+            let v = Self::execute_scalar_out_f64(exe, &[xa, xb])?;
+            Ok(v[0])
+        }
+
+        /// Run a f32 Kahan-sum artifact.
+        pub fn ksum_f32(&mut self, name: &str, x: &[f32]) -> Result<f32> {
             let meta = self
                 .manifest
                 .get(name)
                 .ok_or_else(|| anyhow!("unknown artifact `{name}`"))?
                 .clone();
-            let path = self.manifest.hlo_path(&meta);
-            let proto = xla::HloModuleProto::from_text_file(
-                path.to_str().context("non-utf8 path")?,
-            )
-            .map_err(|e| anyhow!("parse {path:?}: {e:?}"))?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            let exe = self
-                .client
-                .compile(&comp)
-                .map_err(|e| anyhow!("compile {name}: {e:?}"))?;
-            self.cache.insert(name.to_string(), exe);
-        }
-        Ok(self.cache.get(name).unwrap())
-    }
-
-    /// Number of executables currently compiled.
-    pub fn cached(&self) -> usize {
-        self.cache.len()
-    }
-
-    fn execute_scalar_out(
-        exe: &xla::PjRtLoadedExecutable,
-        inputs: &[xla::Literal],
-    ) -> Result<Vec<f32>> {
-        let result = exe
-            .execute::<xla::Literal>(inputs)
-            .map_err(|e| anyhow!("execute: {e:?}"))?[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow!("to_literal: {e:?}"))?;
-        let out = result.to_tuple1().map_err(|e| anyhow!("tuple: {e:?}"))?;
-        out.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e:?}"))
-    }
-
-    fn execute_scalar_out_f64(
-        exe: &xla::PjRtLoadedExecutable,
-        inputs: &[xla::Literal],
-    ) -> Result<Vec<f64>> {
-        let result = exe
-            .execute::<xla::Literal>(inputs)
-            .map_err(|e| anyhow!("execute: {e:?}"))?[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow!("to_literal: {e:?}"))?;
-        let out = result.to_tuple1().map_err(|e| anyhow!("tuple: {e:?}"))?;
-        out.to_vec::<f64>().map_err(|e| anyhow!("to_vec: {e:?}"))
-    }
-
-    /// Pad `v` with zeros to `n` (zeros are neutral for dot/ksum, including
-    /// under compensation).
-    fn pad_f32(v: &[f32], n: usize) -> Vec<f32> {
-        let mut out = v.to_vec();
-        out.resize(n, 0.0);
-        out
-    }
-
-    fn pad_f64(v: &[f64], n: usize) -> Vec<f64> {
-        let mut out = v.to_vec();
-        out.resize(n, 0.0);
-        out
-    }
-
-    /// Run a (non-batched) f32 dot artifact on `a`,`b` (padded as needed).
-    pub fn dot_f32(&mut self, name: &str, a: &[f32], b: &[f32]) -> Result<f32> {
-        let meta = self.meta_checked(name, "f32", false)?;
-        if a.len() != b.len() {
-            bail!("length mismatch {} vs {}", a.len(), b.len());
-        }
-        if a.len() > meta.n {
-            bail!("input {} exceeds artifact size {}", a.len(), meta.n);
-        }
-        let n = meta.n;
-        let exe = self.load(name)?;
-        let xa = xla::Literal::vec1(&Self::pad_f32(a, n));
-        let xb = xla::Literal::vec1(&Self::pad_f32(b, n));
-        let v = Self::execute_scalar_out(exe, &[xa, xb])?;
-        Ok(v[0])
-    }
-
-    /// Run a (non-batched) f64 dot artifact.
-    pub fn dot_f64(&mut self, name: &str, a: &[f64], b: &[f64]) -> Result<f64> {
-        let meta = self.meta_checked(name, "f64", false)?;
-        if a.len() != b.len() {
-            bail!("length mismatch");
-        }
-        if a.len() > meta.n {
-            bail!("input too long");
-        }
-        let n = meta.n;
-        let exe = self.load(name)?;
-        let xa = xla::Literal::vec1(&Self::pad_f64(a, n));
-        let xb = xla::Literal::vec1(&Self::pad_f64(b, n));
-        let v = Self::execute_scalar_out_f64(exe, &[xa, xb])?;
-        Ok(v[0])
-    }
-
-    /// Run a f32 Kahan-sum artifact.
-    pub fn ksum_f32(&mut self, name: &str, x: &[f32]) -> Result<f32> {
-        let meta = self
-            .manifest
-            .get(name)
-            .ok_or_else(|| anyhow!("unknown artifact `{name}`"))?
-            .clone();
-        if meta.kind != "ksum" {
-            bail!("{name} is not a ksum artifact");
-        }
-        if x.len() > meta.n {
-            bail!("input too long");
-        }
-        let n = meta.n;
-        let exe = self.load(name)?;
-        let xa = xla::Literal::vec1(&Self::pad_f32(x, n));
-        let v = Self::execute_scalar_out(exe, &[xa])?;
-        Ok(v[0])
-    }
-
-    /// Run a batched f32 dot artifact: `pairs` must have exactly
-    /// `meta.batch` rows (pad with zero rows to fill a batch).
-    pub fn batched_dot_f32(&mut self, name: &str, pairs: &[(Vec<f32>, Vec<f32>)]) -> Result<Vec<f32>> {
-        let meta = self.meta_checked(name, "f32", true)?;
-        if pairs.len() > meta.batch {
-            bail!("batch {} exceeds artifact batch {}", pairs.len(), meta.batch);
-        }
-        let (bsz, n) = (meta.batch, meta.n);
-        let mut xs = vec![0.0f32; bsz * n];
-        let mut ys = vec![0.0f32; bsz * n];
-        for (row, (a, b)) in pairs.iter().enumerate() {
-            if a.len() != b.len() || a.len() > n {
-                bail!("row {row}: bad lengths {} {}", a.len(), b.len());
+            if meta.kind != "ksum" {
+                bail!("{name} is not a ksum artifact");
             }
-            xs[row * n..row * n + a.len()].copy_from_slice(a);
-            ys[row * n..row * n + b.len()].copy_from_slice(b);
+            if x.len() > meta.n {
+                bail!("input too long");
+            }
+            let n = meta.n;
+            let exe = self.load(name)?;
+            let xa = xla::Literal::vec1(&Self::pad_f32(x, n));
+            let v = Self::execute_scalar_out(exe, &[xa])?;
+            Ok(v[0])
         }
-        let exe = self.load(name)?;
-        let xa = xla::Literal::vec1(&xs)
-            .reshape(&[bsz as i64, n as i64])
-            .map_err(|e| anyhow!("reshape: {e:?}"))?;
-        let xb = xla::Literal::vec1(&ys)
-            .reshape(&[bsz as i64, n as i64])
-            .map_err(|e| anyhow!("reshape: {e:?}"))?;
-        let v = Self::execute_scalar_out(exe, &[xa, xb])?;
-        Ok(v[..pairs.len()].to_vec())
-    }
 
-    fn meta_checked(&self, name: &str, dtype: &str, batched: bool) -> Result<ArtifactMeta> {
-        let meta = self
-            .manifest
-            .get(name)
-            .ok_or_else(|| anyhow!("unknown artifact `{name}`"))?;
-        if meta.dtype != dtype {
-            bail!("{name} has dtype {}, want {dtype}", meta.dtype);
+        /// Run a batched f32 dot artifact: `pairs` must have at most
+        /// `meta.batch` rows (padded with zero rows to fill a batch).
+        pub fn batched_dot_f32(
+            &mut self,
+            name: &str,
+            pairs: &[(Vec<f32>, Vec<f32>)],
+        ) -> Result<Vec<f32>> {
+            let meta = self.meta_checked(name, "f32", true)?;
+            if pairs.len() > meta.batch {
+                bail!("batch {} exceeds artifact batch {}", pairs.len(), meta.batch);
+            }
+            let (bsz, n) = (meta.batch, meta.n);
+            let mut xs = vec![0.0f32; bsz * n];
+            let mut ys = vec![0.0f32; bsz * n];
+            for (row, (a, b)) in pairs.iter().enumerate() {
+                if a.len() != b.len() || a.len() > n {
+                    bail!("row {row}: bad lengths {} {}", a.len(), b.len());
+                }
+                xs[row * n..row * n + a.len()].copy_from_slice(a);
+                ys[row * n..row * n + b.len()].copy_from_slice(b);
+            }
+            let exe = self.load(name)?;
+            let xa = xla::Literal::vec1(&xs)
+                .reshape(&[bsz as i64, n as i64])
+                .map_err(|e| anyhow!("reshape: {e:?}"))?;
+            let xb = xla::Literal::vec1(&ys)
+                .reshape(&[bsz as i64, n as i64])
+                .map_err(|e| anyhow!("reshape: {e:?}"))?;
+            let v = Self::execute_scalar_out(exe, &[xa, xb])?;
+            Ok(v[..pairs.len()].to_vec())
         }
-        if batched && meta.batch == 0 {
-            bail!("{name} is not batched");
+
+        fn meta_checked(&self, name: &str, dtype: &str, batched: bool) -> Result<ArtifactMeta> {
+            let meta = self
+                .manifest
+                .get(name)
+                .ok_or_else(|| anyhow!("unknown artifact `{name}`"))?;
+            if meta.dtype != dtype {
+                bail!("{name} has dtype {}, want {dtype}", meta.dtype);
+            }
+            if batched && meta.batch == 0 {
+                bail!("{name} is not batched");
+            }
+            if !batched && meta.batch != 0 {
+                bail!("{name} is batched");
+            }
+            Ok(meta.clone())
         }
-        if !batched && meta.batch != 0 {
-            bail!("{name} is batched");
-        }
-        Ok(meta.clone())
     }
 }
 
-#[cfg(test)]
+#[cfg(feature = "pjrt")]
+pub use pjrt_client::Runtime;
+
+#[cfg(not(feature = "pjrt"))]
+mod stub {
+    use crate::runtime::manifest::Manifest;
+    use anyhow::{bail, Result};
+
+    /// Same-API stand-in for builds without the `pjrt` feature.
+    ///
+    /// Construction always fails (so no caller can silently compute wrong
+    /// results); the methods exist only to keep the runtime surface
+    /// compiling for benches, examples and the Pjrt service backend.
+    pub struct Runtime {
+        manifest: Manifest,
+    }
+
+    const DISABLED: &str =
+        "built without the `pjrt` feature: PJRT execution is unavailable \
+         (the host engine in crate::engine serves dot requests)";
+
+    impl Runtime {
+        pub fn new() -> Result<Self> {
+            bail!(DISABLED)
+        }
+
+        pub fn with_manifest(_manifest: Manifest) -> Result<Self> {
+            bail!(DISABLED)
+        }
+
+        pub fn manifest(&self) -> &Manifest {
+            &self.manifest
+        }
+
+        pub fn platform(&self) -> String {
+            "none (pjrt feature disabled)".to_string()
+        }
+
+        /// Stub `load` drops the executable handle from the signature — all
+        /// in-tree callers discard it (`rt.load(name)?;`).
+        pub fn load(&mut self, _name: &str) -> Result<()> {
+            bail!(DISABLED)
+        }
+
+        pub fn cached(&self) -> usize {
+            0
+        }
+
+        pub fn dot_f32(&mut self, _name: &str, _a: &[f32], _b: &[f32]) -> Result<f32> {
+            bail!(DISABLED)
+        }
+
+        pub fn dot_f64(&mut self, _name: &str, _a: &[f64], _b: &[f64]) -> Result<f64> {
+            bail!(DISABLED)
+        }
+
+        pub fn ksum_f32(&mut self, _name: &str, _x: &[f32]) -> Result<f32> {
+            bail!(DISABLED)
+        }
+
+        pub fn batched_dot_f32(
+            &mut self,
+            _name: &str,
+            _pairs: &[(Vec<f32>, Vec<f32>)],
+        ) -> Result<Vec<f32>> {
+            bail!(DISABLED)
+        }
+    }
+}
+
+#[cfg(not(feature = "pjrt"))]
+pub use stub::Runtime;
+
+#[cfg(all(test, not(feature = "pjrt")))]
+mod stub_tests {
+    use super::Runtime;
+
+    #[test]
+    fn stub_runtime_fails_closed_with_clear_message() {
+        let err = Runtime::new().err().expect("stub must not construct");
+        assert!(err.to_string().contains("pjrt"), "{err}");
+    }
+}
+
+#[cfg(all(test, feature = "pjrt"))]
 mod tests {
     use super::*;
     use crate::accuracy::exact::exact_dot_f32;

@@ -1,23 +1,39 @@
 //! Integration: the full three-layer stack — AOT artifacts (JAX/Pallas,
 //! built by `make artifacts`) loaded and executed from Rust via PJRT,
-//! including the batching service. These tests REQUIRE artifacts; `make
-//! test` builds them first.
+//! including the batching service. These tests need artifacts and the
+//! `pjrt` feature; without them each test skips (the engine-backed host
+//! serving path is covered artifact-free in `test_engine.rs` and the
+//! service's own tests).
 
 use kahan_ecm::accuracy::exact::{exact_dot_f32, exact_dot_f64};
-use kahan_ecm::coordinator::{DotService, ServiceConfig};
+use kahan_ecm::coordinator::{Backend, DotService, ServiceConfig};
 use kahan_ecm::runtime::{artifacts_dir, Manifest, Runtime};
 use kahan_ecm::util::Rng;
 
-fn require_artifacts() {
-    assert!(
-        artifacts_dir().join("manifest.tsv").exists(),
-        "artifacts missing — run `make artifacts` before `cargo test`"
-    );
+/// Returns false (test should skip) when the PJRT artifacts are absent or
+/// the crate was built without the `pjrt` feature (the stub `Runtime`
+/// fails closed, so proceeding would panic rather than skip).
+#[must_use]
+fn artifacts_present() -> bool {
+    if !cfg!(feature = "pjrt") {
+        eprintln!("skipping: built without the `pjrt` feature");
+        return false;
+    }
+    let ok = artifacts_dir().join("manifest.tsv").exists();
+    if !ok {
+        eprintln!("skipping: artifacts missing (run `make artifacts` for the PJRT tests)");
+    }
+    ok
 }
 
 #[test]
 fn manifest_covers_required_artifacts() {
-    require_artifacts();
+    // pure manifest parsing — needs the files on disk but no Runtime, so
+    // it must run even in builds without the `pjrt` feature
+    if !artifacts_dir().join("manifest.tsv").exists() {
+        eprintln!("skipping: artifacts missing (run `make artifacts`)");
+        return;
+    }
     let m = Manifest::load_default().unwrap();
     for name in [
         "dot_naive_f32_n4096",
@@ -38,7 +54,9 @@ fn manifest_covers_required_artifacts() {
 
 #[test]
 fn all_unbatched_f32_artifacts_compute_correct_dots() {
-    require_artifacts();
+    if !artifacts_present() {
+        return;
+    }
     let mut rt = Runtime::new().unwrap();
     let entries: Vec<_> = rt
         .manifest()
@@ -66,7 +84,9 @@ fn all_unbatched_f32_artifacts_compute_correct_dots() {
 
 #[test]
 fn f64_artifact_has_f64_accuracy() {
-    require_artifacts();
+    if !artifacts_present() {
+        return;
+    }
     let mut rt = Runtime::new().unwrap();
     let mut rng = Rng::new(23);
     let a = rng.normal_f64_vec(65536);
@@ -79,7 +99,9 @@ fn f64_artifact_has_f64_accuracy() {
 
 #[test]
 fn kahan_artifact_beats_naive_on_large_accumulator() {
-    require_artifacts();
+    if !artifacts_present() {
+        return;
+    }
     let mut rt = Runtime::new().unwrap();
     let n = 65536;
     let mut rng = Rng::new(29);
@@ -100,7 +122,9 @@ fn kahan_artifact_beats_naive_on_large_accumulator() {
 
 #[test]
 fn ksum_artifact_sums() {
-    require_artifacts();
+    if !artifacts_present() {
+        return;
+    }
     let mut rt = Runtime::new().unwrap();
     let mut rng = Rng::new(31);
     let x = rng.normal_f32_vec(65536);
@@ -111,7 +135,9 @@ fn ksum_artifact_sums() {
 
 #[test]
 fn batched_artifact_matches_singles() {
-    require_artifacts();
+    if !artifacts_present() {
+        return;
+    }
     let mut rt = Runtime::new().unwrap();
     let mut rng = Rng::new(37);
     let pairs: Vec<(Vec<f32>, Vec<f32>)> = (0..5)
@@ -134,8 +160,12 @@ fn batched_artifact_matches_singles() {
 
 #[test]
 fn service_full_workload_with_errors_and_batching() {
-    require_artifacts();
-    let (svc, client) = DotService::start(ServiceConfig::default()).unwrap();
+    if !artifacts_present() {
+        return;
+    }
+    let (svc, client) =
+        DotService::start(ServiceConfig { backend: Backend::Pjrt, ..ServiceConfig::default() })
+            .unwrap();
     let mut rng = Rng::new(41);
 
     // mix of good requests, an oversized one, and a length-mismatched one
@@ -165,7 +195,9 @@ fn service_full_workload_with_errors_and_batching() {
 
 #[test]
 fn hlo_artifacts_are_text_not_proto() {
-    require_artifacts();
+    if !artifacts_present() {
+        return;
+    }
     let m = Manifest::load_default().unwrap();
     for e in &m.entries {
         let head: String = std::fs::read_to_string(m.hlo_path(e))

@@ -1,0 +1,191 @@
+//! Engine integration + accuracy properties: the chunked-parallel
+//! compensated dot must keep the *sequential* Kahan error bound
+//! `O(u)·Σ|aᵢbᵢ|` for every length, chunk count, and conditioning —
+//! including Ogita–Rump–Oishi ill-conditioned inputs — and the engine
+//! facade must serve correct results through both its inline and pooled
+//! parallel paths.
+
+use kahan_ecm::accuracy::exact::{exact_dot_f32, exact_dot_f64};
+use kahan_ecm::accuracy::gen_dot_f32;
+use kahan_ecm::bench::kernels::{by_name, scalar, KernelFn};
+use kahan_ecm::engine::{
+    parallel_dot_f32, parallel_dot_f64, BufferPool, DotEngine, EngineConfig, WorkerPool,
+};
+use kahan_ecm::isa::Variant;
+use kahan_ecm::prop_assert;
+use kahan_ecm::util::prop;
+use std::sync::Arc;
+
+/// Sequential-Kahan-style bound, with slack for the cross-chunk merge and
+/// the f32 accumulation of `Σ|aᵢbᵢ|`: `err ≤ 64·u·Σ|aᵢbᵢ|` (u = 2⁻²⁴ for
+/// f32). Sequential Kahan itself satisfies `2u + O(u²)`, so 64u leaves
+/// room without ever excusing a broken merge (a single lost product would
+/// show up at ~u·cond·|result|, orders of magnitude larger on the
+/// ill-conditioned inputs below).
+fn f32_bound(absdot: f64) -> f64 {
+    64.0 * (f32::EPSILON as f64 / 2.0) * absdot.max(1e-30)
+}
+
+fn f64_bound(absdot: f64) -> f64 {
+    64.0 * (f64::EPSILON / 2.0) * absdot.max(1e-300)
+}
+
+fn absdot_f32(a: &[f32], b: &[f32]) -> f64 {
+    a.iter().zip(b).map(|(x, y)| (*x as f64 * *y as f64).abs()).sum()
+}
+
+/// Random lengths x random chunk counts x random data: the parallel
+/// compensated reduction agrees with the exact dot to the sequential
+/// Kahan bound.
+#[test]
+fn property_chunked_kahan_keeps_sequential_bound_f32() {
+    let pool = WorkerPool::new(2);
+    let bufs = BufferPool::new();
+    prop::check("engine-chunked-kahan-f32", 40, |rng| {
+        let n = 8 + rng.below(6000) as usize;
+        let chunks = 1 + rng.below(12) as usize;
+        let av = rng.normal_f32_vec(n);
+        let bv = rng.normal_f32_vec(n);
+        let exact = exact_dot_f32(&av, &bv);
+        let bound = f32_bound(absdot_f32(&av, &bv));
+        let a = Arc::new(bufs.admit(&av));
+        let b = Arc::new(bufs.admit(&bv));
+        let got = parallel_dot_f32(&pool, scalar::kahan_unrolled_f32, &a, &b, chunks) as f64;
+        prop_assert!(
+            (got - exact).abs() <= bound,
+            "n={n} chunks={chunks}: got {got}, exact {exact}, err {:e} > bound {bound:e}",
+            (got - exact).abs()
+        );
+        Ok(())
+    });
+}
+
+/// Same property on ill-conditioned inputs from the Ogita–Rump–Oishi
+/// generator: massive cancellation is exactly where a sloppy merge would
+/// surface (error scales with `u·cond` for naive, stays at `u·Σ|aᵢbᵢ|`
+/// for Kahan).
+#[test]
+fn property_chunked_kahan_ill_conditioned_gendot() {
+    let pool = WorkerPool::new(2);
+    let bufs = BufferPool::new();
+    prop::check("engine-chunked-kahan-gendot", 12, |rng| {
+        let n = 64 + rng.below(2048) as usize;
+        let chunks = 1 + rng.below(8) as usize;
+        let target_cond = [1e4, 1e6, 1e8][rng.below(3) as usize];
+        let (av, bv, exact, _cond) = gen_dot_f32(n.max(6), target_cond, rng);
+        let bound = f32_bound(absdot_f32(&av, &bv));
+        let a = Arc::new(bufs.admit(&av));
+        let b = Arc::new(bufs.admit(&bv));
+        for f in [scalar::kahan_unrolled_f32, scalar::kahan_seq_f32] {
+            let got = parallel_dot_f32(&pool, f, &a, &b, chunks) as f64;
+            prop_assert!(
+                (got - exact).abs() <= bound,
+                "n={n} chunks={chunks} cond~{target_cond:e}: err {:e} > bound {bound:e}",
+                (got - exact).abs()
+            );
+        }
+        Ok(())
+    });
+}
+
+/// The SIMD kernels behave identically under chunking (tail handling at
+/// unaligned chunk boundaries is where they'd break).
+#[test]
+fn property_chunked_simd_kernels_agree_f32() {
+    let Some(k) = by_name("kahan-AVX2-SP").filter(|k| k.available) else {
+        eprintln!("skipping: no AVX2");
+        return;
+    };
+    let KernelFn::F32(f) = k.f else { unreachable!() };
+    let pool = WorkerPool::new(3);
+    let bufs = BufferPool::new();
+    prop::check("engine-chunked-avx2", 25, |rng| {
+        let n = 1 + rng.below(10_000) as usize;
+        let chunks = 1 + rng.below(7) as usize;
+        let av = rng.normal_f32_vec(n);
+        let bv = rng.normal_f32_vec(n);
+        let exact = exact_dot_f32(&av, &bv);
+        let bound = f32_bound(absdot_f32(&av, &bv));
+        let a = Arc::new(bufs.admit(&av));
+        let b = Arc::new(bufs.admit(&bv));
+        let got = parallel_dot_f32(&pool, f, &a, &b, chunks) as f64;
+        prop_assert!(
+            (got - exact).abs() <= bound,
+            "n={n} chunks={chunks}: err {:e} > bound {bound:e}",
+            (got - exact).abs()
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn property_chunked_kahan_keeps_sequential_bound_f64() {
+    let pool = WorkerPool::new(2);
+    let bufs = BufferPool::new();
+    prop::check("engine-chunked-kahan-f64", 25, |rng| {
+        let n = 8 + rng.below(5000) as usize;
+        let chunks = 1 + rng.below(10) as usize;
+        let av = rng.normal_f64_vec(n);
+        let bv = rng.normal_f64_vec(n);
+        let exact = exact_dot_f64(&av, &bv);
+        let absdot: f64 = av.iter().zip(&bv).map(|(x, y)| (x * y).abs()).sum();
+        let bound = f64_bound(absdot);
+        let a = Arc::new(bufs.admit(&av));
+        let b = Arc::new(bufs.admit(&bv));
+        let got = parallel_dot_f64(&pool, scalar::kahan_unrolled_f64, &a, &b, chunks);
+        prop_assert!(
+            (got - exact).abs() <= bound,
+            "n={n} chunks={chunks}: err {:e} > bound {bound:e}",
+            (got - exact).abs()
+        );
+        Ok(())
+    });
+}
+
+/// End-to-end through the engine facade (autotuned dispatch + pool +
+/// workers): the served result keeps the bound on both the inline and the
+/// chunked-parallel path, and repeated calls are bit-stable.
+#[test]
+fn engine_facade_serves_accurate_deterministic_results() {
+    let engine = DotEngine::new(EngineConfig { threads: 2, ..EngineConfig::default() });
+    let mut rng = kahan_ecm::util::Rng::new(123);
+    for n in [4096usize, 500_000] {
+        let a = rng.normal_f32_vec(n);
+        let b = rng.normal_f32_vec(n);
+        let exact = exact_dot_f32(&a, &b);
+        let bound = f32_bound(absdot_f32(&a, &b));
+        let first = engine.dot_f32(Variant::Kahan, &a, &b);
+        assert!(
+            (first as f64 - exact).abs() <= bound,
+            "n={n}: {first} vs {exact} (bound {bound:e})"
+        );
+        for _ in 0..3 {
+            let again = engine.dot_f32(Variant::Kahan, &a, &b);
+            assert_eq!(first.to_bits(), again.to_bits(), "n={n} must be bit-stable");
+        }
+    }
+    let s = engine.stats();
+    assert_eq!(s.requests, 8);
+    assert_eq!(s.parallel, 4, "only the 500k dots go parallel: {s:?}");
+    assert!(s.pool.hits >= 6, "steady state must recycle buffers: {s:?}");
+}
+
+/// The engine's ill-conditioned behaviour end-to-end: Kahan stays at the
+/// bound while naive drifts far beyond it (sanity that dispatch routes
+/// variants to genuinely different kernels).
+#[test]
+fn engine_kahan_beats_naive_on_ill_conditioned_input() {
+    let engine = DotEngine::new(EngineConfig { threads: 2, ..EngineConfig::default() });
+    let mut rng = kahan_ecm::util::Rng::new(7);
+    let (a, b, exact, cond) = gen_dot_f32(4096, 1e7, &mut rng);
+    let bound = f32_bound(absdot_f32(&a, &b));
+    let kahan = engine.dot_f32(Variant::Kahan, &a, &b) as f64;
+    let naive = engine.dot_f32(Variant::Naive, &a, &b) as f64;
+    let ek = (kahan - exact).abs();
+    let en = (naive - exact).abs();
+    assert!(ek <= bound, "kahan err {ek:e} > bound {bound:e} (cond {cond:e})");
+    assert!(
+        ek * 10.0 < en.max(1e-30) || en <= bound,
+        "kahan ({ek:e}) should beat naive ({en:e}) at cond {cond:e}"
+    );
+}
