@@ -94,10 +94,10 @@ fn main() -> anyhow::Result<()> {
     );
     match backend {
         Backend::Host => {
-            let e = kahan_ecm::engine::DotEngine::global().stats();
+            let e = kahan_ecm::engine::ShardedEngine::global().stats();
             println!(
-                "engine             : {} calls ({} chunked-parallel), pool hits/misses {}/{}",
-                stats_out.engine_calls, e.parallel, e.pool.hits, e.pool.misses
+                "engine             : {} calls on {} shard(s) ({} chunked-parallel, {} split), pool hits/misses {}/{}",
+                stats_out.engine_calls, e.shards, e.parallel, e.split_dots, e.pool.hits, e.pool.misses
             );
         }
         Backend::Pjrt => {

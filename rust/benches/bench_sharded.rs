@@ -1,0 +1,194 @@
+//! Bench SHARDED: the NUMA-sharded serving tier vs the single persistent
+//! engine, at LLC- and memory-resident sizes.
+//!
+//! Three configurations per size:
+//! * "engine"       — one `DotEngine` spanning every online CPU (the PR 1
+//!   single-socket baseline);
+//! * "sharded-auto" — `ShardedEngine` over the *discovered* topology (on a
+//!   single-node host this is one shard and should track "engine" within
+//!   noise — that null result is itself the degrade-gracefully check);
+//! * "sharded-2"    — a forced two-shard split of the online CPUs
+//!   (`Topology::fake_even(2)`), exercising the cross-shard split + merge
+//!   machinery even on single-node hosts. On a real multi-socket box the
+//!   auto config is the one that shows the per-domain bandwidth win.
+//!
+//! Emits `BENCH_sharded.json` (path overridable with `--json P`; `--smoke`
+//! shrinks sizes/reps for CI). The headline fields are `auto_speedup` and
+//! `forced2_speedup`: sharded vs single-engine wall clock at the
+//! memory-resident size.
+
+use kahan_ecm::engine::{
+    dispatch, topology_cached, DotEngine, EngineConfig, ShardedConfig, ShardedEngine, Topology,
+};
+use kahan_ecm::isa::Variant;
+use kahan_ecm::machine::detect::detect_host_cached;
+use kahan_ecm::util::{stats, Rng, Table};
+use std::time::Instant;
+
+fn median_us<F: FnMut() -> f32>(reps: usize, mut f: F) -> f64 {
+    let mut samples = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        let t = Instant::now();
+        std::hint::black_box(f());
+        samples.push(t.elapsed().as_secs_f64() * 1e6);
+    }
+    stats::median(&samples)
+}
+
+fn jnum(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v:.3}")
+    } else {
+        "null".to_string()
+    }
+}
+
+struct Row {
+    label: &'static str,
+    ws_bytes: u64,
+    engine_us: f64,
+    auto_us: f64,
+    forced2_us: f64,
+}
+
+fn main() {
+    let mut smoke = false;
+    let mut json_path = "BENCH_sharded.json".to_string();
+    let mut args = std::env::args().skip(1);
+    while let Some(a) = args.next() {
+        match a.as_str() {
+            "--smoke" => smoke = true,
+            "--json" => json_path = args.next().unwrap_or(json_path),
+            "--bench" => {} // cargo bench passes this through
+            other => eprintln!("ignoring unknown arg `{other}`"),
+        }
+    }
+
+    println!("=== bench_sharded: NUMA-sharded tier vs single engine ===\n");
+    let m = detect_host_cached();
+    let topo = topology_cached();
+    println!(
+        "host: {} | numa: {} domain(s) [{}]",
+        m.name,
+        topo.nodes.len(),
+        topo.render()
+    );
+    println!("calibrating autotuned dispatch (one-time)...");
+    let _ = dispatch();
+
+    let llc = m.caches[2].size_bytes;
+    let mem_ws = if smoke {
+        (2 * llc).min(32 << 20).max(llc + (4 << 20))
+    } else {
+        (2 * llc).min(64 << 20).max(llc + (8 << 20))
+    };
+    let sizes: Vec<(&'static str, u64)> =
+        vec![("LLC-resident", llc / 2), ("memory-resident", mem_ws)];
+    let reps = if smoke { 7 } else { 15 };
+
+    // split threshold low enough that both probe sizes take the split path
+    // on the multi-shard configs
+    let sharded_cfg = ShardedConfig { split_min_bytes: 512 << 10, ..ShardedConfig::default() };
+    let engine = DotEngine::new(EngineConfig::default());
+    let auto = ShardedEngine::new(sharded_cfg);
+    let forced2 = ShardedEngine::from_topology(&Topology::fake_even(2), sharded_cfg);
+    println!(
+        "engines: single ({} workers) | sharded-auto ({} shard(s), {} workers) | sharded-2 \
+         ({} shards, {} workers)\n",
+        engine.threads(),
+        auto.shards(),
+        auto.total_workers(),
+        forced2.shards(),
+        forced2.total_workers()
+    );
+
+    let mut rng = Rng::new(77);
+    let mut rows: Vec<Row> = Vec::new();
+    for &(label, ws) in &sizes {
+        let n = (ws / 8).max(1024) as usize; // two f32 streams
+        let a = rng.normal_f32_vec(n);
+        let b = rng.normal_f32_vec(n);
+
+        // warm-up: page in sources, fill every pool
+        std::hint::black_box(engine.dot_f32(Variant::Kahan, &a, &b));
+        std::hint::black_box(auto.dot_f32(Variant::Kahan, &a, &b));
+        std::hint::black_box(forced2.dot_f32(Variant::Kahan, &a, &b));
+
+        let engine_us = median_us(reps, || engine.dot_f32(Variant::Kahan, &a, &b));
+        let auto_us = median_us(reps, || auto.dot_f32(Variant::Kahan, &a, &b));
+        let forced2_us = median_us(reps, || forced2.dot_f32(Variant::Kahan, &a, &b));
+        rows.push(Row { label, ws_bytes: 2 * n as u64 * 4, engine_us, auto_us, forced2_us });
+    }
+
+    let mut t = Table::new("per-call wall clock (median, us; lower is better)").headers([
+        "working set",
+        "engine",
+        "sharded-auto",
+        "sharded-2",
+        "auto speedup",
+        "2-shard speedup",
+    ]);
+    for r in &rows {
+        t.row([
+            format!("{} ({})", r.label, kahan_ecm::util::fmt::bytes(r.ws_bytes)),
+            format!("{:.1}", r.engine_us),
+            format!("{:.1}", r.auto_us),
+            format!("{:.1}", r.forced2_us),
+            format!("{:.2}x", r.engine_us / r.auto_us),
+            format!("{:.2}x", r.engine_us / r.forced2_us),
+        ]);
+    }
+    println!("{}", t.render());
+
+    let mem_row = rows.last().expect("memory row");
+    let auto_speedup = mem_row.engine_us / mem_row.auto_us;
+    let forced2_speedup = mem_row.engine_us / mem_row.forced2_us;
+    let ast = auto.stats();
+    let fst = forced2.stats();
+    println!(
+        "memory-resident: sharded-auto {auto_speedup:.2}x, forced-2 {forced2_speedup:.2}x vs \
+         single engine"
+    );
+    println!(
+        "sharded-auto stats: {} requests, {} split, pin failures {}",
+        ast.requests, ast.split_dots, ast.pin_failures
+    );
+    println!(
+        "sharded-2   stats: {} requests, {} split, pin failures {}",
+        fst.requests, fst.split_dots, fst.pin_failures
+    );
+
+    let mut json = String::new();
+    json.push_str("{\n");
+    json.push_str("  \"bench\": \"bench_sharded\",\n");
+    json.push_str(&format!("  \"smoke\": {smoke},\n"));
+    json.push_str(&format!("  \"numa_domains\": {},\n", topo.nodes.len()));
+    json.push_str(&format!("  \"auto_shards\": {},\n", auto.shards()));
+    json.push_str(&format!("  \"total_workers\": {},\n", auto.total_workers()));
+    json.push_str(&format!("  \"forced2_split_dots\": {},\n", fst.split_dots));
+    json.push_str("  \"rows\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        json.push_str(&format!(
+            "    {{\"label\": \"{}\", \"ws_bytes\": {}, \"engine_us\": {}, \"sharded_auto_us\": {}, \"sharded2_us\": {}, \"auto_speedup\": {}, \"forced2_speedup\": {}}}{}\n",
+            r.label,
+            r.ws_bytes,
+            jnum(r.engine_us),
+            jnum(r.auto_us),
+            jnum(r.forced2_us),
+            jnum(r.engine_us / r.auto_us),
+            jnum(r.engine_us / r.forced2_us),
+            if i + 1 == rows.len() { "" } else { "," }
+        ));
+    }
+    json.push_str("  ],\n");
+    json.push_str(&format!("  \"auto_speedup\": {},\n", jnum(auto_speedup)));
+    json.push_str(&format!("  \"forced2_speedup\": {}\n", jnum(forced2_speedup)));
+    json.push_str("}\n");
+    std::fs::write(&json_path, &json).expect("write BENCH_sharded.json");
+    println!("wrote {json_path}");
+
+    // sanity, not a perf gate: the multi-shard config must actually have
+    // split the measured dots, and results must agree with the baseline
+    assert!(fst.split_dots > 0, "forced 2-shard config never split a dot");
+    println!("bench_sharded: OK");
+}

@@ -35,18 +35,116 @@ pub struct ThreadScalePoint {
     pub imbalance: f64,
 }
 
-/// Pin the calling thread to `cpu` (best effort; ignored on failure).
-pub fn pin_to_cpu(cpu: usize) {
+/// Logical CPUs this **process** is allowed to run on AND that are online
+/// — under taskset / cgroup cpusets the allowed ids need not start at 0
+/// (so a bare `0..available_parallelism()` range would name forbidden
+/// CPUs), and on hotplug-capable VMs `Cpus_allowed` can include ids that
+/// are not online (so the mask alone would name unpinnable CPUs).
+///
+/// The affinity mask is read from `/proc/self/status`
+/// (`Cpus_allowed_list` of the thread-group leader) rather than
+/// `sched_getaffinity(0)`: the latter reports the *calling thread's*
+/// mask, which `pin_to_cpu` itself shrinks — a pool built from an
+/// already-pinned thread would otherwise wrap every worker onto that one
+/// CPU and report success. Fallbacks: the calling thread's mask, then
+/// `0..available_parallelism()`. The result is intersected with
+/// `/sys/devices/system/cpu/online`, sorted, cached for the process
+/// lifetime, and never empty.
+pub fn allowed_cpus() -> Vec<usize> {
+    static ALLOWED: std::sync::OnceLock<Vec<usize>> = std::sync::OnceLock::new();
+    ALLOWED
+        .get_or_init(|| {
+            let mut cpus = process_mask_cpus();
+            if let Some(online) = online_cpu_list() {
+                if cpus.is_empty() {
+                    cpus = online;
+                } else {
+                    cpus.retain(|c| online.binary_search(c).is_ok());
+                }
+            }
+            if cpus.is_empty() {
+                let n = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+                cpus = (0..n).collect();
+            }
+            cpus
+        })
+        .clone()
+}
+
+/// The process affinity mask as CPU ids (may include offline ids; see
+/// [`allowed_cpus`] for the intersection). Empty when unreadable.
+fn process_mask_cpus() -> Vec<usize> {
+    if let Ok(status) = std::fs::read_to_string("/proc/self/status") {
+        if let Some(line) = status.lines().find(|l| l.starts_with("Cpus_allowed_list:")) {
+            let cpus = crate::engine::topology::parse_cpu_list(
+                line.trim_start_matches("Cpus_allowed_list:"),
+            );
+            if !cpus.is_empty() {
+                return cpus;
+            }
+        }
+    }
     #[cfg(target_os = "linux")]
     unsafe {
         let mut set: libc::cpu_set_t = std::mem::zeroed();
-        libc::CPU_ZERO(&mut set);
-        libc::CPU_SET(cpu % libc::CPU_SETSIZE as usize, &mut set);
-        libc::sched_setaffinity(0, std::mem::size_of::<libc::cpu_set_t>(), &set);
+        if libc::sched_getaffinity(0, std::mem::size_of::<libc::cpu_set_t>(), &mut set) == 0 {
+            let mut cpus = Vec::new();
+            for c in 0..libc::CPU_SETSIZE as usize {
+                if libc::CPU_ISSET(c, &set) {
+                    cpus.push(c);
+                }
+            }
+            if !cpus.is_empty() {
+                return cpus;
+            }
+        }
+    }
+    Vec::new()
+}
+
+/// The kernel's online CPU list, if readable (sorted; `None` off-Linux or
+/// when sysfs is hidden).
+fn online_cpu_list() -> Option<Vec<usize>> {
+    std::fs::read_to_string("/sys/devices/system/cpu/online")
+        .ok()
+        .map(|s| crate::engine::topology::parse_cpu_list(&s))
+        .filter(|v| !v.is_empty())
+}
+
+/// Pin the calling thread to the `cpu`-th CPU of the process's *allowed*
+/// CPU set, wrapping over that set — not over `CPU_SETSIZE` (the kernel's
+/// 1024-slot mask), where wrapping silently requested offline CPUs on
+/// oversubscribed pools, and not over a bare online count, which names
+/// forbidden ids under taskset/cgroup masks. The old code also discarded
+/// the `sched_setaffinity` result, so an unpinned thread gave no signal.
+///
+/// Best effort with a signal: returns `true` iff the affinity call
+/// succeeded (always `false` on non-Linux, where pinning is unsupported).
+pub fn pin_to_cpu(cpu: usize) -> bool {
+    let allowed = allowed_cpus();
+    pin_to_exact_cpu(allowed[cpu % allowed.len()])
+}
+
+/// Pin the calling thread to exactly logical CPU `cpu` (no wrapping; the
+/// caller vouches the id is valid, e.g. it came from a sysfs NUMA node
+/// cpulist). Returns `true` iff the affinity call succeeded.
+pub fn pin_to_exact_cpu(cpu: usize) -> bool {
+    #[cfg(target_os = "linux")]
+    {
+        if cpu >= libc::CPU_SETSIZE as usize {
+            return false;
+        }
+        unsafe {
+            let mut set: libc::cpu_set_t = std::mem::zeroed();
+            libc::CPU_ZERO(&mut set);
+            libc::CPU_SET(cpu, &mut set);
+            libc::sched_setaffinity(0, std::mem::size_of::<libc::cpu_set_t>(), &set) == 0
+        }
     }
     #[cfg(not(target_os = "linux"))]
     {
         let _ = cpu;
+        false
     }
 }
 
@@ -197,7 +295,20 @@ mod tests {
 
     #[test]
     fn pin_is_best_effort() {
-        pin_to_cpu(0);
-        pin_to_cpu(999); // wraps, must not panic
+        let allowed = allowed_cpus();
+        assert!(!allowed.is_empty());
+        // on Linux, wrapping over the process's *allowed* set must land on
+        // a pinnable CPU even under taskset/cgroup masks whose ids don't
+        // start at 0; elsewhere pinning reports failure
+        let a = pin_to_cpu(0);
+        let b = pin_to_cpu(999); // wraps over the allowed set, must not panic
+        if cfg!(target_os = "linux") {
+            assert!(a && b, "wrapped pin must target an allowed CPU ({allowed:?})");
+        } else {
+            assert!(!a && !b);
+        }
+        // out-of-mask exact pin reports failure instead of silently
+        // pinning somewhere else
+        assert!(!pin_to_exact_cpu(usize::MAX));
     }
 }

@@ -170,6 +170,8 @@ pub fn run(args: &Args) -> Result<(), String> {
                 "simd: sse={} avx2={} fma={} avx512f={}",
                 simd.sse, simd.avx2, simd.fma, simd.avx512f
             );
+            let topo = crate::engine::topology_cached();
+            println!("numa: {} domain(s) [{}]", topo.nodes.len(), topo.render());
             for c in &m.caches {
                 println!("{}: {}", c.name, crate::util::fmt::bytes(c.size_bytes));
             }
@@ -207,8 +209,24 @@ pub fn run(args: &Args) -> Result<(), String> {
             println!("calibrating kernel dispatch (first use only)...");
             let table = crate::engine::dispatch();
             println!("{}", table.render().render());
-            let e = crate::engine::DotEngine::global();
-            println!("engine workers: {} (pinned, persistent)", e.threads());
+            let topo = crate::engine::topology_cached();
+            println!("numa topology: {} domain(s) [{}]", topo.nodes.len(), topo.render());
+            let e = crate::engine::ShardedEngine::global();
+            println!(
+                "sharded engine: {} shard(s), {} workers total (pinned per-domain), \
+                 split threshold {}",
+                e.shards(),
+                e.total_workers(),
+                crate::util::fmt::bytes(e.config().split_min_bytes as u64)
+            );
+            for s in 0..e.shards() {
+                let es = e.shard(s).stats();
+                println!(
+                    "  shard {s}: {} workers, pin failures {}",
+                    e.shard(s).threads(),
+                    es.pin_failures
+                );
+            }
             let mut rng = crate::util::Rng::new(1);
             let n = 1 << 20;
             let a = rng.normal_f32_vec(n);
@@ -218,8 +236,8 @@ pub fn run(args: &Args) -> Result<(), String> {
             let s = e.stats();
             println!("smoke dot (n = {n}): engine {got:.6e}, exact {exact:.6e}");
             println!(
-                "engine stats: {} requests, {} parallel, pool hits/misses {}/{}",
-                s.requests, s.parallel, s.pool.hits, s.pool.misses
+                "engine stats: {} requests, {} parallel, {} split, pool hits/misses {}/{}",
+                s.requests, s.parallel, s.split_dots, s.pool.hits, s.pool.misses
             );
         }
         "accuracy" => {

@@ -3,14 +3,16 @@
 //!
 //! Two backends share one client API:
 //!
-//! * [`Backend::Host`] (default) — requests execute on the persistent
-//!   parallel engine (`crate::engine`): pooled 64-byte-aligned buffers,
-//!   pinned long-lived workers, autotuned SIMD kernel dispatch. The engine
-//!   reads the request's own vectors — small dots run on them in place,
-//!   large dots pay a single admission copy into recycled aligned pool
-//!   buffers; nothing is cloned per call (the old PJRT grouping code
-//!   cloned every stream per batched call) and the steady state performs
-//!   no heap allocation. Works on any host, no artifacts needed.
+//! * [`Backend::Host`] (default) — requests execute on the NUMA-sharded
+//!   serving tier (`crate::engine::ShardedEngine`): one pinned worker pool
+//!   + recycling 64-byte-aligned buffer pool per memory domain, autotuned
+//!   SIMD kernel dispatch, and a shard router keyed on **admission
+//!   locality** — streams admitted via [`DotClient::admit_blocking`]
+//!   remember their home shard and every later pooled dot executes there
+//!   (the data is already domain-local); fresh one-shot requests
+//!   round-robin across shards, and very large ones split across every
+//!   shard with a compensated cross-shard merge. Single-node hosts
+//!   degrade to one shard. Works anywhere, no artifacts needed.
 //! * [`Backend::Pjrt`] — the original PJRT path: one worker thread owns
 //!   the `Runtime` (executables are not shared across threads), drains the
 //!   queue with a batching window, groups compatible requests, and
@@ -21,17 +23,35 @@
 //! submit `DotRequest`s over an mpsc channel and receive their
 //! `DotResponse` on a per-request return channel.
 
-use crate::engine::DotEngine;
+use crate::engine::{HomedSlice, ShardedEngine};
 use crate::isa::Variant;
 use crate::runtime::Runtime;
+use std::collections::HashMap;
 use std::sync::mpsc;
 use std::time::{Duration, Instant};
 
-/// Message to the worker: a request or an explicit shutdown (needed
-/// because `DotClient` clones keep the channel alive — dropping the
-/// service's own sender alone would never disconnect the worker).
+/// Message to the worker: a request, stream admission/release, or an
+/// explicit shutdown (needed because `DotClient` clones keep the channel
+/// alive — dropping the service's own sender alone would never disconnect
+/// the worker).
 enum Msg {
     Req(DotRequest),
+    /// Admit a stream into the sharded engine's pooled storage; replies
+    /// with the stream handle (Host backend only). `near` co-locates the
+    /// stream on the home shard of an existing handle.
+    Admit { data: Vec<f32>, near: Option<u64>, reply: mpsc::Sender<Result<u64, String>> },
+    /// Dot two admitted streams on the home shard of `a` (Host backend
+    /// only).
+    ReqPooled {
+        id: u64,
+        variant: &'static str,
+        a: u64,
+        b: u64,
+        reply: mpsc::Sender<DotResponse>,
+        submitted: Instant,
+    },
+    /// Drop an admitted stream, returning its buffer to the shard pool.
+    Release { handle: u64 },
     Shutdown,
 }
 
@@ -105,6 +125,13 @@ pub struct ServiceStats {
     pub requests: u64,
     /// engine executions (Host backend)
     pub engine_calls: u64,
+    /// streams admitted into shard-local pooled storage (Host backend)
+    pub admitted: u64,
+    /// dots served over already-admitted streams on their home shard.
+    /// (Cross-shard split counts live in `ShardedEngine::stats` — the
+    /// engine is process-global, so a per-service delta would misattribute
+    /// splits whenever two services or a direct engine user coexist.)
+    pub pooled_calls: u64,
     pub pjrt_calls: u64,
     pub batched_calls: u64,
     pub errors: u64,
@@ -147,13 +174,67 @@ impl DotClient {
             Err(_) => Err("service stopped".into()),
         }
     }
+
+    /// Admit a stream into the serving tier's pooled shard-local storage
+    /// and get back its handle. The stream's home shard is fixed at
+    /// admission; every later [`DotClient::dot_pooled_blocking`] over it
+    /// executes there (Host backend only — the PJRT worker rejects it).
+    pub fn admit_blocking(&self, data: Vec<f32>) -> Result<u64, String> {
+        self.admit_near_blocking(data, None)
+    }
+
+    /// Like [`DotClient::admit_blocking`], but co-locate the stream on the
+    /// home shard of `near` (an earlier handle) — the placement for
+    /// streams that will be dotted against each other, so the pair never
+    /// crosses a NUMA domain. A `near` that no longer exists falls back to
+    /// round-robin placement.
+    pub fn admit_near_blocking(&self, data: Vec<f32>, near: Option<u64>) -> Result<u64, String> {
+        let (reply, rx) = mpsc::channel();
+        if self.tx.send(Msg::Admit { data, near, reply }).is_err() {
+            return Err("service stopped".into());
+        }
+        match rx.recv() {
+            Ok(r) => r,
+            Err(_) => Err("service stopped".into()),
+        }
+    }
+
+    /// Submit a dot over two admitted streams; returns the response
+    /// receiver.
+    pub fn submit_pooled(
+        &self,
+        id: u64,
+        variant: &'static str,
+        a: u64,
+        b: u64,
+    ) -> mpsc::Receiver<DotResponse> {
+        let (reply, rx) = mpsc::channel();
+        let _ = self.tx.send(Msg::ReqPooled { id, variant, a, b, reply, submitted: Instant::now() });
+        rx
+    }
+
+    /// Convenience: blocking dot over two admitted streams.
+    pub fn dot_pooled_blocking(&self, variant: &'static str, a: u64, b: u64) -> Result<f32, String> {
+        let rx = self.submit_pooled(0, variant, a, b);
+        match rx.recv() {
+            Ok(resp) => resp.value,
+            Err(_) => Err("service stopped".into()),
+        }
+    }
+
+    /// Release an admitted stream (its buffer recycles into the home
+    /// shard's pool). Unknown handles are ignored.
+    pub fn release(&self, handle: u64) {
+        let _ = self.tx.send(Msg::Release { handle });
+    }
 }
 
 impl DotService {
     /// Start the worker thread for the configured backend.
     ///
-    /// Host backend: the worker borrows the process-wide engine
-    /// (`DotEngine::global()`), so startup is immediate and cannot fail.
+    /// Host backend: the worker borrows the process-wide sharded engine
+    /// (`ShardedEngine::global()`), so startup is immediate and cannot
+    /// fail.
     ///
     /// Pjrt backend: PJRT handles are not `Send`, so the `Runtime` must be
     /// constructed *inside* the worker thread; startup errors are relayed
@@ -213,45 +294,99 @@ impl Drop for DotService {
     }
 }
 
-/// Host backend: every request runs straight through the persistent
-/// engine. No batching window — the engine parallelizes *within* a dot,
-/// so queueing requests to fuse them would only add latency.
+fn parse_variant(s: &str) -> Result<Variant, String> {
+    match s {
+        "kahan" => Ok(Variant::Kahan),
+        "naive" => Ok(Variant::Naive),
+        other => Err(format!("unknown variant `{other}`")),
+    }
+}
+
+/// Host backend: the shard router. Every request runs on the NUMA-sharded
+/// engine — fresh requests round-robin across shards (the engine splits
+/// very large ones across all of them), admitted streams execute on their
+/// home shard. No batching window — the engine parallelizes *within* a
+/// dot, so queueing requests to fuse them would only add latency.
+///
+/// Length mismatches are rejected HERE, before the engine: the engine's
+/// documented policy is debug-assert + truncate (see the engine module's
+/// "Length policy"), so the service is the layer that turns a mismatch
+/// into a client-visible error.
 fn worker_loop_host(rx: mpsc::Receiver<Msg>) -> ServiceStats {
-    let engine = DotEngine::global();
+    let engine = ShardedEngine::global();
     // calibrate the dispatch table now, not on the first request
     let _ = crate::engine::dispatch();
     let mut stats = ServiceStats::default();
+    // admitted streams: handle -> home-shard slice
+    let mut streams: HashMap<u64, HomedSlice<f32>> = HashMap::new();
+    let mut next_handle: u64 = 1;
     while let Ok(msg) = rx.recv() {
-        let req = match msg {
-            Msg::Req(r) => r,
+        match msg {
             Msg::Shutdown => break,
-        };
-        stats.requests += 1;
-        let variant = match req.variant {
-            "kahan" => Ok(Variant::Kahan),
-            "naive" => Ok(Variant::Naive),
-            other => Err(format!("unknown variant `{other}`")),
-        };
-        let value = if req.a.len() != req.b.len() {
-            Err(format!("length mismatch {} vs {}", req.a.len(), req.b.len()))
-        } else {
-            // no per-request heap churn: the engine reads the request's own
-            // vectors (small dots run on them in place; large dots pay one
-            // admission copy into recycled aligned pool buffers)
-            variant.map(|v| {
-                stats.engine_calls += 1;
-                engine.dot_f32(v, &req.a, &req.b)
-            })
-        };
-        if value.is_err() {
-            stats.errors += 1;
+            Msg::Req(req) => {
+                stats.requests += 1;
+                let value = if req.a.len() != req.b.len() {
+                    Err(format!("length mismatch {} vs {}", req.a.len(), req.b.len()))
+                } else {
+                    // no per-request heap churn: the engine reads the
+                    // request's own vectors (small dots run on them in
+                    // place; large dots pay one admission copy into the
+                    // target shard's recycled aligned pool buffers)
+                    parse_variant(req.variant).map(|v| {
+                        stats.engine_calls += 1;
+                        engine.dot_f32(v, &req.a, &req.b)
+                    })
+                };
+                if value.is_err() {
+                    stats.errors += 1;
+                }
+                let _ = req.reply.send(DotResponse {
+                    id: req.id,
+                    value,
+                    batch_size: 1,
+                    latency: req.submitted.elapsed(),
+                });
+            }
+            Msg::Admit { data, near, reply } => {
+                let handle = next_handle;
+                next_handle += 1;
+                let homed = match near.and_then(|h| streams.get(&h)) {
+                    Some(neighbor) => engine.admit_to_f32(neighbor.shard, &data),
+                    None => engine.admit_f32(&data),
+                };
+                streams.insert(handle, homed);
+                stats.admitted += 1;
+                let _ = reply.send(Ok(handle));
+            }
+            Msg::ReqPooled { id, variant, a, b, reply, submitted } => {
+                stats.requests += 1;
+                let value = match (streams.get(&a), streams.get(&b)) {
+                    (Some(sa), Some(sb)) if sa.len() == sb.len() => {
+                        parse_variant(variant).map(|v| {
+                            stats.engine_calls += 1;
+                            stats.pooled_calls += 1;
+                            engine.dot_homed_f32(v, sa, sb)
+                        })
+                    }
+                    (Some(sa), Some(sb)) => {
+                        Err(format!("length mismatch {} vs {}", sa.len(), sb.len()))
+                    }
+                    _ => Err(format!("unknown stream handle {}", if streams.contains_key(&a) { b } else { a })),
+                };
+                if value.is_err() {
+                    stats.errors += 1;
+                }
+                let _ = reply.send(DotResponse {
+                    id,
+                    value,
+                    batch_size: 1,
+                    latency: submitted.elapsed(),
+                });
+            }
+            Msg::Release { handle } => {
+                streams.remove(&handle);
+            }
         }
-        let _ = req.reply.send(DotResponse {
-            id: req.id,
-            value,
-            batch_size: 1,
-            latency: req.submitted.elapsed(),
-        });
     }
     stats
 }
@@ -269,11 +404,32 @@ fn worker_loop_pjrt(
         .map(|m| m.n)
         .unwrap_or(0);
 
+    // pooled-stream admission is a Host-backend feature: the PJRT worker
+    // rejects it synchronously rather than pretending to hold streams
+    let reject_pooled = |msg: Msg| match msg {
+        Msg::Admit { reply, .. } => {
+            let _ = reply.send(Err("stream admission requires the Host backend".into()));
+        }
+        Msg::ReqPooled { id, reply, submitted, .. } => {
+            let _ = reply.send(DotResponse {
+                id,
+                value: Err("pooled dots require the Host backend".into()),
+                batch_size: 0,
+                latency: submitted.elapsed(),
+            });
+        }
+        _ => {}
+    };
+
     while !shutdown {
         // block for the first request
         let first = match rx.recv() {
             Ok(Msg::Req(r)) => r,
             Ok(Msg::Shutdown) | Err(_) => break,
+            Ok(other) => {
+                reject_pooled(other);
+                continue;
+            }
         };
         let mut queue = vec![first];
         // batching window: gather more requests
@@ -290,6 +446,7 @@ fn worker_loop_pjrt(
                     shutdown = true;
                     break;
                 }
+                Ok(other) => reject_pooled(other),
                 Err(mpsc::RecvTimeoutError::Timeout) => break,
                 Err(mpsc::RecvTimeoutError::Disconnected) => break,
             }
@@ -450,6 +607,50 @@ mod tests {
         let (svc, client) = DotService::start(ServiceConfig::default()).unwrap();
         let r = client.dot_blocking("kahan", vec![0.0; 10], vec![0.0; 11]);
         assert!(r.is_err());
+        let stats = svc.stop();
+        assert_eq!(stats.errors, 1);
+    }
+
+    #[test]
+    fn host_backend_pooled_streams_round_trip_on_home_shard() {
+        let (svc, client) = DotService::start(ServiceConfig::default()).unwrap();
+        let mut rng = Rng::new(21);
+        let n = 50_000;
+        let av = rng.normal_f32_vec(n);
+        let bv = rng.normal_f32_vec(n);
+        let exact = exact_dot_f32(&av, &bv);
+        let scale: f64 =
+            av.iter().zip(&bv).map(|(x, y)| (x * y).abs() as f64).sum::<f64>().max(1e-30);
+
+        let ha = client.admit_blocking(av).expect("admit a");
+        // co-locate b with a so the steady-state pair shares a home shard
+        let hb = client.admit_near_blocking(bv, Some(ha)).expect("admit b");
+        assert_ne!(ha, hb);
+        // admit once, dot many: the steady-state serving pattern
+        let first = client.dot_pooled_blocking("kahan", ha, hb).expect("pooled dot");
+        assert!((first as f64 - exact).abs() / scale < 1e-6);
+        for _ in 0..3 {
+            let again = client.dot_pooled_blocking("kahan", ha, hb).expect("pooled dot");
+            assert_eq!(first.to_bits(), again.to_bits(), "home-shard dots are bit-stable");
+        }
+        // unknown handles and released handles are clean errors, not hangs
+        assert!(client.dot_pooled_blocking("kahan", ha, 999).is_err());
+        client.release(hb);
+        assert!(client.dot_pooled_blocking("kahan", ha, hb).is_err());
+
+        let stats = svc.stop();
+        assert_eq!(stats.admitted, 2);
+        assert_eq!(stats.pooled_calls, 4);
+        assert_eq!(stats.errors, 2);
+        assert_eq!(stats.requests, 6);
+    }
+
+    #[test]
+    fn host_backend_pooled_rejects_length_mismatch() {
+        let (svc, client) = DotService::start(ServiceConfig::default()).unwrap();
+        let ha = client.admit_blocking(vec![1.0; 100]).unwrap();
+        let hb = client.admit_blocking(vec![1.0; 101]).unwrap();
+        assert!(client.dot_pooled_blocking("kahan", ha, hb).is_err());
         let stats = svc.stop();
         assert_eq!(stats.errors, 1);
     }

@@ -7,22 +7,38 @@
 //! across requests, so the steady-state cost of a served dot is the
 //! streaming cost the paper models and nothing else.
 //!
-//! # Architecture: pool → partition → kernel → compensated merge
+//! # Architecture: shard → pool → partition → kernel → compensated merge
 //!
 //! ```text
-//!                  ┌────────────────────────────────────────────────┐
-//!   request(a, b)  │ DotEngine                                      │
-//!   ─────────────► │  1. pool   : admit streams into recycled       │
-//!                  │              64-byte-aligned buffers (zero     │
-//!                  │              heap allocation at steady state)  │
-//!                  │  2. partition: cut into cache-line-aligned     │
-//!                  │              chunks, one per pinned worker     │
-//!                  │  3. kernel : per chunk, the autotuned best     │
-//!                  │              host SIMD kernel for              │
-//!                  │              (precision, size class)           │
-//!                  │  4. merge  : compensated (Neumaier) fold of    │
-//!                  │              per-chunk partials, chunk order   │
-//!                  └────────────────────────────────────────────────┘
+//!                  ┌──────────────────────────────────────────────────┐
+//!   request(a, b)  │ ShardedEngine (one shard per NUMA domain;        │
+//!   ─────────────► │ single-node hosts degrade to exactly one shard)  │
+//!                  │  0. route  : pooled streams go to their home     │
+//!                  │              shard; fresh requests round-robin;  │
+//!                  │              very large dots split across every  │
+//!                  │              shard on global chunk boundaries    │
+//!                  │ ┌──────────────────────────────────────────────┐ │
+//!                  │ │ DotEngine (per shard: own BufferPool + own   │ │
+//!                  │ │ WorkerPool pinned to the domain's CPU list)  │ │
+//!                  │ │  1. pool   : admit streams into recycled     │ │
+//!                  │ │              64-byte-aligned NUMA-local      │ │
+//!                  │ │              buffers (zero heap allocation   │ │
+//!                  │ │              at steady state)                │ │
+//!                  │ │  2. partition: cut into cache-line-aligned,  │ │
+//!                  │ │              balanced chunks (max−min ≤ one  │ │
+//!                  │ │              cache line), one per worker     │ │
+//!                  │ │  3. kernel : per chunk, the autotuned best   │ │
+//!                  │ │              host SIMD kernel for            │ │
+//!                  │ │              (precision, size class)         │ │
+//!                  │ │  4. merge  : compensated (Neumaier) fold of  │ │
+//!                  │ │              per-chunk partials, chunk order │ │
+//!                  │ └──────────────────────────────────────────────┘ │
+//!                  │  5. merge  : the *same* compensated fold over    │
+//!                  │              all shards' per-chunk partials in   │
+//!                  │              global chunk order — one more       │
+//!                  │              reduction level, same Kahan bound,  │
+//!                  │              same bits for 1 or N shards         │
+//!                  └──────────────────────────────────────────────────┘
 //! ```
 //!
 //! * [`pool`] — the recycling aligned buffer pool ([`BufferPool`]).
@@ -30,6 +46,19 @@
 //!   the chunked compensated reduction (`parallel_dot_*`).
 //! * [`autotune`] — first-use micro-calibration of the kernel registry into
 //!   a `(Precision, SizeClass)` dispatch table behind a `OnceLock`.
+//! * [`topology`] — NUMA domain discovery (`/sys/devices/system/node`,
+//!   with a single-node fallback when sysfs is absent).
+//! * [`sharded`] — the multi-socket tier: [`ShardedEngine`] owns one
+//!   [`DotEngine`] per NUMA domain and routes/splits requests across them.
+//!
+//! # Length policy
+//!
+//! THE one place the policy is defined: `dot_*`/`dot_pooled_*` compute over
+//! the first `min(a.len(), b.len())` elements of each stream. Mismatched
+//! lengths are a caller bug — the engine `debug_assert`s equality (so test
+//! builds catch drift) but truncates in release rather than panicking on
+//! the hot path. Public request surfaces (`coordinator::service`) reject
+//! mismatched requests *before* they reach the engine; keep it that way.
 //!
 //! # Accuracy
 //!
@@ -58,15 +87,19 @@
 pub mod autotune;
 pub mod parallel;
 pub mod pool;
+pub mod sharded;
+pub mod topology;
 
 pub use autotune::{dispatch, Choice, DispatchTable, SizeClass};
 pub use parallel::{chunk_ranges, parallel_dot_f32, parallel_dot_f64, WorkerPool};
 pub use pool::{BufferPool, PoolStats, PooledSlice};
+pub use sharded::{HomedSlice, ShardedConfig, ShardedEngine, ShardedStats};
+pub use topology::{topology_cached, NumaNode, Topology};
 
 use crate::bench::kernels::KernelFn;
 use crate::isa::{Precision, Variant};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, OnceLock};
+use std::sync::Arc;
 
 /// Engine configuration.
 #[derive(Clone, Copy, Debug)]
@@ -93,51 +126,101 @@ pub struct EngineStats {
     /// dots that took the chunked-parallel path
     pub parallel: u64,
     pub pool: PoolStats,
+    /// workers whose CPU-affinity call failed (best-effort pinning signal)
+    pub pin_failures: u64,
+}
+
+/// Autotuned kernel for one request shape. Free functions (not methods):
+/// the dispatch table is process-wide, and the sharded tier must select
+/// the kernel **once** for the full request size before splitting it, so
+/// every shard runs the same kernel and bit-determinism survives sharding.
+pub fn kernel_for_f32(variant: Variant, total_bytes: u64) -> fn(&[f32], &[f32]) -> f32 {
+    match dispatch().select(Precision::Sp, variant, SizeClass::of(total_bytes)).f {
+        KernelFn::F32(f) => f,
+        KernelFn::F64(_) => unreachable!("dispatch returned a kernel of the wrong precision"),
+    }
+}
+
+pub fn kernel_for_f64(variant: Variant, total_bytes: u64) -> fn(&[f64], &[f64]) -> f64 {
+    match dispatch().select(Precision::Dp, variant, SizeClass::of(total_bytes)).f {
+        KernelFn::F64(f) => f,
+        KernelFn::F32(_) => unreachable!("dispatch returned a kernel of the wrong precision"),
+    }
 }
 
 /// Generates the per-precision serve methods so the size-class / cutoff /
 /// admit policy lives in exactly one place.
 macro_rules! engine_dot_methods {
-    ($dot:ident, $dot_pooled:ident, $select:ident, $admit:ident,
-     $parallel:ident, $arm:ident, $ty:ty, $prec:expr) => {
-        fn $select(&self, variant: Variant, total_bytes: u64) -> fn(&[$ty], &[$ty]) -> $ty {
-            let class = SizeClass::of(total_bytes);
-            match dispatch().select($prec, variant, class).f {
-                KernelFn::$arm(f) => f,
-                _ => unreachable!("dispatch returned a kernel of the wrong precision"),
-            }
+    ($dot:ident, $dot_pooled:ident, $kernel_for:ident, $admit_local:ident,
+     $parallel:ident, $ty:ty) => {
+        /// Admit `v` into this engine's pool with the copy executed **on
+        /// one of the engine's own pinned workers**, so first-touch page
+        /// placement of a fresh buffer lands in the workers' NUMA domain
+        /// (recycled buffers keep their prior placement, which is also
+        /// in-domain once the pool has warmed up through this path).
+        ///
+        /// Blocks until the copy completes. Must not be called from one of
+        /// this engine's own workers (the job would wait behind itself).
+        pub fn $admit_local(&self, v: &[$ty]) -> Arc<PooledSlice<$ty>> {
+            let (tx, rx) = std::sync::mpsc::channel();
+            let pool = Arc::clone(&self.pool);
+            let ptr = v.as_ptr() as usize;
+            let len = v.len();
+            self.workers.submit(Box::new(move || {
+                // SAFETY: the caller blocks on `rx` until this job has
+                // finished, so the borrow behind `ptr` outlives every use
+                // of the reconstructed slice
+                let src = unsafe { std::slice::from_raw_parts(ptr as *const $ty, len) };
+                let _ = tx.send(Arc::new(pool.admit(src)));
+            }));
+            rx.recv().expect("admission worker died")
         }
-
         /// Serve one dot. Small dots run inline on the caller's slices
         /// (zero copy, zero dispatch — a hand-off doesn't amortize); large
         /// dots are admitted into pooled aligned buffers and chunked
         /// across the worker pool.
+        ///
+        /// Lengths: see the module-level "Length policy" — equal lengths
+        /// are the contract (`debug_assert`ed), release builds truncate to
+        /// the shorter stream.
         pub fn $dot(&self, variant: Variant, a: &[$ty], b: &[$ty]) -> $ty {
+            debug_assert_eq!(
+                a.len(),
+                b.len(),
+                "engine dot called with mismatched stream lengths (see engine length policy)"
+            );
             self.requests.fetch_add(1, Ordering::Relaxed);
             let n = a.len().min(b.len());
             let total_bytes = (2 * n * std::mem::size_of::<$ty>()) as u64;
-            let f = self.$select(variant, total_bytes);
+            let f = $kernel_for(variant, total_bytes);
             if total_bytes < self.cfg.parallel_cutoff_bytes as u64 || self.workers.size() == 1 {
                 return f(&a[..n], &b[..n]);
             }
-            let pa = self.$admit(&a[..n]);
-            let pb = self.$admit(&b[..n]);
+            // worker-side admission: first-touch places fresh pool pages
+            // in the workers' NUMA domain, not the caller's
+            let pa = self.$admit_local(&a[..n]);
+            let pb = self.$admit_local(&b[..n]);
             self.parallel_jobs.fetch_add(1, Ordering::Relaxed);
             $parallel(&self.workers, f, &pa, &pb, self.workers.size())
         }
 
         /// The zero-copy steady-state path: dot two already-admitted
-        /// streams.
+        /// streams. Length policy as for the slice path.
         pub fn $dot_pooled(
             &self,
             variant: Variant,
             a: &Arc<PooledSlice<$ty>>,
             b: &Arc<PooledSlice<$ty>>,
         ) -> $ty {
+            debug_assert_eq!(
+                a.len(),
+                b.len(),
+                "engine dot called with mismatched stream lengths (see engine length policy)"
+            );
             self.requests.fetch_add(1, Ordering::Relaxed);
             let n = a.len().min(b.len());
             let total_bytes = (2 * n * std::mem::size_of::<$ty>()) as u64;
-            let f = self.$select(variant, total_bytes);
+            let f = $kernel_for(variant, total_bytes);
             if total_bytes < self.cfg.parallel_cutoff_bytes as u64 || self.workers.size() == 1 {
                 return f(&a.as_slice()[..n], &b.as_slice()[..n]);
             }
@@ -159,24 +242,42 @@ pub struct DotEngine {
 
 impl DotEngine {
     pub fn new(cfg: EngineConfig) -> DotEngine {
-        let threads = if cfg.threads == 0 {
-            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
-        } else {
+        Self::new_on(cfg, &[])
+    }
+
+    /// Engine whose workers are pinned round-robin onto the explicit CPU
+    /// list `cpus` — the per-NUMA-domain shard constructor. `cfg.threads ==
+    /// 0` means one worker per listed CPU (or per online CPU when `cpus`
+    /// is empty, which also falls back to default online-set pinning).
+    pub fn new_on(cfg: EngineConfig, cpus: &[usize]) -> DotEngine {
+        let threads = if cfg.threads != 0 {
             cfg.threads
+        } else if !cpus.is_empty() {
+            cpus.len()
+        } else {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
         };
         DotEngine {
             pool: BufferPool::new(),
-            workers: WorkerPool::new(threads),
+            workers: WorkerPool::new_on(threads, cpus),
             cfg,
             requests: AtomicU64::new(0),
             parallel_jobs: AtomicU64::new(0),
         }
     }
 
-    /// The process-wide engine (used by the service's host backend).
+    /// The shard tier schedules chunk jobs straight onto a shard's workers.
+    pub(crate) fn workers(&self) -> &WorkerPool {
+        &self.workers
+    }
+
+    /// The process-wide engine: the first shard of
+    /// [`ShardedEngine::global`]. Delegating (rather than holding a second
+    /// `OnceLock`) means a process that touches both globals gets ONE
+    /// pinned worker fleet, not two fleets contending for the same CPUs.
+    /// Standalone engines remain available via [`DotEngine::new`].
     pub fn global() -> &'static DotEngine {
-        static ENGINE: OnceLock<DotEngine> = OnceLock::new();
-        ENGINE.get_or_init(|| DotEngine::new(EngineConfig::default()))
+        ShardedEngine::global().shard(0)
     }
 
     pub fn threads(&self) -> usize {
@@ -188,6 +289,7 @@ impl DotEngine {
             requests: self.requests.load(Ordering::Relaxed),
             parallel: self.parallel_jobs.load(Ordering::Relaxed),
             pool: self.pool.stats(),
+            pin_failures: self.workers.pin_failures() as u64,
         }
     }
 
@@ -204,22 +306,18 @@ impl DotEngine {
     engine_dot_methods!(
         dot_f32,
         dot_pooled_f32,
-        select_f32,
-        admit_f32,
+        kernel_for_f32,
+        admit_local_f32,
         parallel_dot_f32,
-        F32,
-        f32,
-        Precision::Sp
+        f32
     );
     engine_dot_methods!(
         dot_f64,
         dot_pooled_f64,
-        select_f64,
-        admit_f64,
+        kernel_for_f64,
+        admit_local_f64,
         parallel_dot_f64,
-        F64,
-        f64,
-        Precision::Dp
+        f64
     );
 }
 

@@ -52,6 +52,7 @@ struct WorkerHandle {
 pub struct WorkerPool {
     workers: Vec<WorkerHandle>,
     next: AtomicUsize,
+    pin_failures: Arc<AtomicUsize>,
 }
 
 fn worker_main(shared: &WorkerShared) {
@@ -69,17 +70,37 @@ fn worker_main(shared: &WorkerShared) {
             }
         };
         match job {
-            Some(j) => j(),
+            // A panicking job must not kill the worker: a dead worker would
+            // leave its queue draining to nobody, so any later dot routed to
+            // it would block its caller forever. The unwind is caught here
+            // (jobs that need the payload, like `parallel_dot_*`, also wrap
+            // their own body to report the panic explicitly).
+            Some(j) => {
+                let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(j));
+            }
             None => return,
         }
     }
 }
 
 impl WorkerPool {
-    /// Spawn `threads` workers (at least one), worker `i` pinned to CPU `i`
-    /// (wrapping over the online CPU set).
+    /// Spawn `threads` workers (at least one), worker `i` pinned to the
+    /// `i`-th CPU of the process's **allowed** CPU set, wrapping over that
+    /// set (see [`pin_to_cpu`]). Pinning is best effort: failures are
+    /// counted and visible via [`WorkerPool::pin_failures`].
     pub fn new(threads: usize) -> WorkerPool {
+        Self::new_on(threads, &[])
+    }
+
+    /// Spawn `threads` workers (at least one) pinned round-robin onto the
+    /// explicit CPU list `cpus` (worker `i` → `cpus[i % cpus.len()]`,
+    /// exact ids, no wrapping) — this is how a NUMA shard keeps its
+    /// workers inside its own domain. An empty `cpus` falls back to the
+    /// process's allowed CPU set (worker `i` → `i`-th allowed CPU,
+    /// wrapped).
+    pub fn new_on(threads: usize, cpus: &[usize]) -> WorkerPool {
         let threads = threads.max(1);
+        let pin_failures = Arc::new(AtomicUsize::new(0));
         let mut workers = Vec::with_capacity(threads);
         for i in 0..threads {
             let shared = Arc::new(WorkerShared {
@@ -87,20 +108,34 @@ impl WorkerPool {
                 cv: Condvar::new(),
             });
             let shared2 = Arc::clone(&shared);
+            let failures = Arc::clone(&pin_failures);
+            let target = if cpus.is_empty() { None } else { Some(cpus[i % cpus.len()]) };
             let join = std::thread::Builder::new()
                 .name(format!("engine-worker-{i}"))
                 .spawn(move || {
-                    pin_to_cpu(i);
+                    let pinned = match target {
+                        Some(cpu) => crate::bench::threads::pin_to_exact_cpu(cpu),
+                        None => pin_to_cpu(i),
+                    };
+                    if !pinned {
+                        failures.fetch_add(1, Ordering::Relaxed);
+                    }
                     worker_main(&shared2);
                 })
                 .expect("spawn engine worker");
             workers.push(WorkerHandle { shared, join: Some(join) });
         }
-        WorkerPool { workers, next: AtomicUsize::new(0) }
+        WorkerPool { workers, next: AtomicUsize::new(0), pin_failures }
     }
 
     pub fn size(&self) -> usize {
         self.workers.len()
+    }
+
+    /// Workers whose affinity call failed (best-effort pinning signal;
+    /// 0 on a healthy Linux host, `size()` on platforms without pinning).
+    pub fn pin_failures(&self) -> usize {
+        self.pin_failures.load(Ordering::Relaxed)
     }
 
     /// Enqueue `job` on worker `worker % size()`.
@@ -136,22 +171,68 @@ impl Drop for WorkerPool {
 
 /// Split `n` elements into up to `chunks` ranges whose boundaries fall on
 /// cache-line multiples of the element type (`elems_per_cl` = 16 for f32,
-/// 8 for f64); the final range absorbs the tail. Empty ranges are dropped,
-/// so tiny `n` degenerates to a single chunk.
+/// 8 for f64), balanced to within one cache line: whole cache lines are
+/// dealt `⌊lines/chunks⌋` each with the `lines % chunks` leftovers going
+/// one apiece to the leading chunks, and only the final range absorbs the
+/// sub-line tail. (The old code gave the entire remainder to the last
+/// chunk — `n=1000, chunks=7` produced six chunks of 128 and one of 232,
+/// a ~1.8× straggler that stretched the parallel critical path.)
+/// `chunks` is capped so every range holds at least one cache line, so
+/// tiny `n` degenerates to a single chunk.
 pub fn chunk_ranges(n: usize, chunks: usize, elems_per_cl: usize) -> Vec<(usize, usize)> {
-    let chunks = chunks.max(1);
-    let per = ((n / chunks) / elems_per_cl) * elems_per_cl;
-    if per == 0 || chunks == 1 {
-        return if n == 0 { Vec::new() } else { vec![(0, n)] };
+    if n == 0 {
+        return Vec::new();
     }
+    let lines = n / elems_per_cl;
+    let chunks = chunks.max(1).min(lines.max(1));
+    if chunks == 1 {
+        return vec![(0, n)];
+    }
+    let base = lines / chunks;
+    let extra = lines % chunks;
     let mut out = Vec::with_capacity(chunks);
     let mut start = 0;
-    for _ in 0..chunks - 1 {
-        out.push((start, start + per));
-        start += per;
+    for i in 0..chunks {
+        let len_lines = base + usize::from(i < extra);
+        let end = if i == chunks - 1 { n } else { start + len_lines * elems_per_cl };
+        out.push((start, end));
+        start = end;
     }
-    if start < n {
-        out.push((start, n));
+    out
+}
+
+/// Render a panic payload for cross-thread propagation.
+pub(crate) fn panic_message(e: Box<dyn std::any::Any + Send>) -> String {
+    if let Some(s) = e.downcast_ref::<&'static str>() {
+        (*s).to_string()
+    } else if let Some(s) = e.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+/// Drain per-chunk outcomes and re-assemble them in chunk order. A chunk
+/// that panicked (or never reported — a worker died, which the pool's
+/// unwind guard should make impossible) propagates as a panic on the
+/// caller's thread: the old code fabricated a silent `0.0` partial for a
+/// lost chunk and returned a wrong value.
+pub(crate) fn collect_partials<T: Copy>(
+    rx: mpsc::Receiver<(usize, Result<T, String>)>,
+    count: usize,
+    what: &str,
+) -> Vec<T> {
+    let mut slots: Vec<Option<Result<T, String>>> = (0..count).map(|_| None).collect();
+    for (i, r) in rx {
+        slots[i] = Some(r);
+    }
+    let mut out = Vec::with_capacity(count);
+    for (i, slot) in slots.into_iter().enumerate() {
+        match slot {
+            Some(Ok(v)) => out.push(v),
+            Some(Err(msg)) => panic!("{what}: chunk {i} panicked: {msg}"),
+            None => panic!("{what}: chunk {i} reported no partial (worker died)"),
+        }
     }
     out
 }
@@ -161,6 +242,11 @@ macro_rules! parallel_dot_impl {
         /// Chunked-parallel compensated dot over pooled aligned streams:
         /// each chunk runs `f` on a worker, partials merge with the
         /// compensated fold in chunk order (deterministic).
+        ///
+        /// Panic policy: each chunk job reports an explicit outcome, so a
+        /// panicking kernel re-panics *here* with the original payload
+        /// message instead of leaving a silent `0.0` partial in the merge,
+        /// and the pool's workers survive for the next request.
         pub fn $name(
             pool: &WorkerPool,
             f: fn(&[$ty], &[$ty]) -> $ty,
@@ -173,22 +259,22 @@ macro_rules! parallel_dot_impl {
             if ranges.len() <= 1 {
                 return f(&a.as_slice()[..n], &b.as_slice()[..n]);
             }
-            let (tx, rx) = mpsc::channel::<(usize, $ty)>();
+            let (tx, rx) = mpsc::channel::<(usize, Result<$ty, String>)>();
             for (i, &(lo, hi)) in ranges.iter().enumerate() {
                 let a = Arc::clone(a);
                 let b = Arc::clone(b);
                 let tx = tx.clone();
                 pool.submit_to(i, Box::new(move || {
-                    let v = f(&a.as_slice()[lo..hi], &b.as_slice()[lo..hi]);
-                    let _ = tx.send((i, v));
+                    let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                        f(&a.as_slice()[lo..hi], &b.as_slice()[lo..hi])
+                    }));
+                    let _ = tx.send((i, r.map_err(panic_message)));
                 }));
             }
             drop(tx);
-            // collect in chunk order for a deterministic merge
-            let mut sums = vec![0.0 as $ty; ranges.len()];
-            for (i, v) in rx {
-                sums[i] = v;
-            }
+            // collect in chunk order for a deterministic merge; a panicked
+            // or missing chunk propagates instead of folding a zero
+            let sums = collect_partials(rx, ranges.len(), stringify!($name));
             // per-chunk compensations are already folded into each chunk's
             // sum by the kernel; the merge only needs its own compensation
             let comps = vec![0.0 as $ty; sums.len()];
@@ -210,7 +296,16 @@ mod tests {
 
     #[test]
     fn chunk_ranges_cover_and_align() {
-        for (n, chunks) in [(0usize, 4usize), (5, 4), (64, 3), (1000, 7), (4096, 4), (100, 200)] {
+        for (n, chunks) in [
+            (0usize, 4usize),
+            (5, 4),
+            (64, 3),
+            (1000, 7),
+            (4096, 4),
+            (100, 200),
+            (999_983, 13),
+            (1 << 20, 64),
+        ] {
             let r = chunk_ranges(n, chunks, 16);
             if n == 0 {
                 assert!(r.is_empty());
@@ -225,6 +320,41 @@ mod tests {
                 assert_eq!(lo % 16, 0, "n={n} chunks={chunks}");
                 assert!(hi > lo);
             }
+            // balance: the remainder is distributed in cache-line quanta,
+            // so max and min chunk size stay within two cache lines
+            let max = r.iter().map(|&(lo, hi)| hi - lo).max().unwrap();
+            let min = r.iter().map(|&(lo, hi)| hi - lo).min().unwrap();
+            assert!(
+                max - min <= 2 * 16,
+                "n={n} chunks={chunks}: chunk sizes {min}..{max} differ by more than 2 cache lines"
+            );
+        }
+        // the headline imbalance case from the old code: n=1000, chunks=7
+        // used to produce six chunks of 128 and one straggler of 232
+        let r = chunk_ranges(1000, 7, 16);
+        assert_eq!(r.len(), 7);
+        let max = r.iter().map(|&(lo, hi)| hi - lo).max().unwrap();
+        assert!(max <= 144, "straggler chunk is back: {r:?}");
+    }
+
+    #[test]
+    fn panicking_job_does_not_kill_worker() {
+        let pool = WorkerPool::new(2);
+        // a job that panics must neither poison the pool nor kill the
+        // worker thread its queue belongs to
+        for round in 0..2 {
+            pool.submit_to(0, Box::new(|| panic!("injected job panic")));
+            let (tx, rx) = mpsc::channel();
+            for w in 0..2 {
+                let tx = tx.clone();
+                pool.submit_to(w, Box::new(move || {
+                    let _ = tx.send(w);
+                }));
+            }
+            drop(tx);
+            let mut got: Vec<usize> = rx.iter().collect();
+            got.sort_unstable();
+            assert_eq!(got, vec![0, 1], "round {round}: worker died after a panicking job");
         }
     }
 

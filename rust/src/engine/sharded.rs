@@ -1,0 +1,445 @@
+//! NUMA-sharded serving tier: one persistent [`DotEngine`] per memory
+//! domain, a locality-aware router in front, and a cross-shard compensated
+//! merge behind.
+//!
+//! Per Hofmann et al. (CCPE 2016) and the four-generation study, a
+//! multi-socket machine only serves dots at full speed when every NUMA
+//! domain streams its own local data — remote-socket traffic halves
+//! effective bandwidth. So each shard owns a private [`BufferPool`] (its
+//! recycled buffers stay resident in its domain) and a private
+//! `WorkerPool` pinned to that domain's CPU list (exact sysfs ids, not
+//! naive CPU `i`).
+//!
+//! Routing:
+//! * **pooled streams** ([`HomedSlice`]) remember the shard that admitted
+//!   them and always execute there (data is already local); pairs that
+//!   will be dotted together should co-locate via `admit_to_*`;
+//! * **fresh requests** round-robin across shards;
+//! * **very large dots** (≥ `split_min_bytes`) split across *all* shards:
+//!   the request is cut once into globally balanced cache-line-aligned
+//!   chunks, contiguous chunk blocks go to each shard weighted by its
+//!   worker count (one admission copy per block, executed **on a worker
+//!   of that shard** so fresh pages first-touch in-domain), and every
+//!   per-chunk partial merges with the **same** compensated (Neumaier)
+//!   fold the single-engine chunk merge uses, in global chunk order.
+//!
+//! Accuracy & determinism: because the cross-shard merge is the flat
+//! compensated fold over the *global* chunk partials (not a fold of
+//! per-shard folds), the sequential Kahan bound `O(u)·Σ|aᵢbᵢ|` survives
+//! the extra reduction level, and for a fixed chunk geometry the result
+//! is bit-identical whether 1 or N shards execute it — property-tested in
+//! `rust/tests/test_engine.rs`.
+//!
+//! On a single-node host (this container included) [`ShardedEngine`]
+//! degrades to exactly one shard and delegates straight to its
+//! [`DotEngine`], bit-identical to an unsharded engine of the same
+//! configuration.
+
+use super::parallel::{chunk_ranges, collect_partials, panic_message};
+use super::pool::{PoolStats, PooledSlice};
+use super::topology::{topology_cached, Topology};
+use super::{kernel_for_f32, kernel_for_f64, DotEngine, EngineConfig};
+use crate::bench::kernels::{compensated_fold_f32, compensated_fold_f64};
+use crate::isa::Variant;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, OnceLock};
+
+/// Sharded-tier configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct ShardedConfig {
+    /// per-shard engine config; `threads == 0` means one worker per CPU of
+    /// the shard's NUMA domain
+    pub engine: EngineConfig,
+    /// total working set (both streams, bytes) at which a fresh dot is
+    /// split across every shard instead of routed to one
+    pub split_min_bytes: usize,
+    /// global chunk count for split dots; 0 = total workers across shards.
+    /// Fixing this fixes the chunk geometry, making results bit-identical
+    /// for any shard count.
+    pub chunks: usize,
+}
+
+impl Default for ShardedConfig {
+    fn default() -> Self {
+        ShardedConfig {
+            engine: EngineConfig::default(),
+            split_min_bytes: 4 << 20,
+            chunks: 0,
+        }
+    }
+}
+
+/// A pooled stream plus the shard that admitted it (its NUMA home). Dots
+/// over homed slices execute on the home shard of their first operand.
+#[derive(Clone)]
+pub struct HomedSlice<T: Copy> {
+    pub shard: usize,
+    pub slice: Arc<PooledSlice<T>>,
+}
+
+impl<T: Copy> HomedSlice<T> {
+    pub fn len(&self) -> usize {
+        self.slice.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.slice.is_empty()
+    }
+}
+
+/// Aggregate counters across every shard.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ShardedStats {
+    pub shards: usize,
+    /// dots served (per-shard requests plus split dots, which execute
+    /// across shards but count once)
+    pub requests: u64,
+    /// dots that took a chunked-parallel path inside one shard engine
+    pub parallel: u64,
+    /// dots served by the split path (cut on global chunk boundaries over
+    /// the whole shard set; on a single-shard host this is the same
+    /// chunked reduction, still counted here because it bypasses the
+    /// shard engine's own counters)
+    pub split_dots: u64,
+    pub pool: PoolStats,
+    pub pin_failures: u64,
+}
+
+/// The multi-socket serving tier: one pinned engine per NUMA domain.
+pub struct ShardedEngine {
+    shards: Vec<DotEngine>,
+    cfg: ShardedConfig,
+    next: AtomicUsize,
+    split_dots: AtomicU64,
+}
+
+macro_rules! sharded_dot_impl {
+    ($dot:ident, $dot_homed:ident, $admit:ident, $admit_to:ident, $split:ident,
+     $engine_dot:ident, $engine_dot_pooled:ident, $engine_admit:ident, $kernel_for:ident,
+     $fold:ident, $ty:ty, $elems_per_cl:expr) => {
+        /// Serve one dot: single-shard hosts and sub-split sizes route to
+        /// one shard round-robin; very large dots split across all shards.
+        /// Length policy as for [`DotEngine`] (see the engine module doc).
+        pub fn $dot(&self, variant: Variant, a: &[$ty], b: &[$ty]) -> $ty {
+            debug_assert_eq!(
+                a.len(),
+                b.len(),
+                "sharded dot called with mismatched stream lengths (see engine length policy)"
+            );
+            let n = a.len().min(b.len());
+            let total_bytes = (2 * n * std::mem::size_of::<$ty>()) as u64;
+            if (total_bytes as usize) < self.cfg.split_min_bytes {
+                let s = self.route();
+                return self.shards[s].$engine_dot(variant, &a[..n], &b[..n]);
+            }
+            // above the threshold every host takes the split path — on a
+            // single shard with default `chunks` it degenerates to exactly
+            // the per-engine chunked reduction (same geometry, same fold,
+            // same bits), so 1-vs-N sharding stays bit-identical
+            self.$split(variant, &a[..n], &b[..n])
+        }
+
+        /// Split one dot across every shard on global chunk boundaries and
+        /// merge all per-chunk partials with the compensated fold in
+        /// global chunk order (the same fold, one more reduction level).
+        fn $split(&self, variant: Variant, a: &[$ty], b: &[$ty]) -> $ty {
+            let n = a.len();
+            let total_bytes = (2 * n * std::mem::size_of::<$ty>()) as u64;
+            // select the kernel ONCE for the full request size: every
+            // shard must run the same kernel for bit-determinism
+            let f = $kernel_for(variant, total_bytes);
+            let chunks = if self.cfg.chunks == 0 { self.total_workers() } else { self.cfg.chunks };
+            let ranges = chunk_ranges(n, chunks, $elems_per_cl);
+            if ranges.len() <= 1 {
+                let s = self.route();
+                return self.shards[s].$engine_dot(variant, a, b);
+            }
+            // every split-path dot is counted here (it never reaches a
+            // shard engine's own `requests` counter) — including on a
+            // single-shard host, where the split path degenerates to the
+            // ordinary chunked reduction but must still show up in stats
+            self.split_dots.fetch_add(1, Ordering::Relaxed);
+            // contiguous chunk blocks per shard, weighted by each shard's
+            // worker count (equal-count dealing would hand an 8-worker and
+            // a 16-worker domain the same share and re-create the
+            // straggler imbalance one level up); boundaries are the
+            // deterministic cumulative-weight rounding, so the assignment
+            // never affects the partials or the fold
+            let total_w = self.total_workers();
+            let mut blocks: Vec<(usize, usize, usize)> = Vec::with_capacity(self.shards.len());
+            {
+                let mut cum = 0usize;
+                let mut prev = 0usize;
+                for (s, sh) in self.shards.iter().enumerate() {
+                    cum += sh.threads();
+                    let end = ranges.len() * cum / total_w;
+                    if end > prev {
+                        blocks.push((s, prev, end));
+                        prev = end;
+                    }
+                }
+            }
+            let (tx, rx) = mpsc::channel::<(usize, Result<$ty, String>)>();
+            for &(s, clo, chi) in &blocks {
+                let span_lo = ranges[clo].0;
+                let span_hi = ranges[chi - 1].1;
+                // worker-side admission: the copy runs on a worker pinned
+                // inside shard `s`, so fresh pages first-touch in-domain
+                let pa = self.shards[s].$engine_admit(&a[span_lo..span_hi]);
+                let pb = self.shards[s].$engine_admit(&b[span_lo..span_hi]);
+                for (w, ci) in (clo..chi).enumerate() {
+                    let (lo, hi) = (ranges[ci].0 - span_lo, ranges[ci].1 - span_lo);
+                    let pa = Arc::clone(&pa);
+                    let pb = Arc::clone(&pb);
+                    let tx = tx.clone();
+                    self.shards[s].workers().submit_to(
+                        w,
+                        Box::new(move || {
+                            let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                                f(&pa.as_slice()[lo..hi], &pb.as_slice()[lo..hi])
+                            }));
+                            let _ = tx.send((ci, r.map_err(panic_message)));
+                        }),
+                    );
+                }
+            }
+            drop(tx);
+            let sums = collect_partials(rx, ranges.len(), stringify!($split));
+            let comps = vec![0.0 as $ty; sums.len()];
+            $fold(&sums, &comps)
+        }
+
+        /// Admit a stream into the next shard round-robin; the returned
+        /// handle remembers its home shard for every later dot. Streams
+        /// that will be dotted against each other should co-locate via
+        /// [`ShardedEngine::admit_to_f32`]/`admit_to_f64` instead —
+        /// round-robin placement puts a back-to-back admitted pair on
+        /// *different* shards, and every later dot over the pair then
+        /// streams one operand from a remote domain.
+        pub fn $admit(&self, v: &[$ty]) -> HomedSlice<$ty> {
+            let shard = self.route();
+            self.$admit_to(shard, v)
+        }
+
+        /// Admit a stream onto an explicit shard (clamped), e.g. the home
+        /// shard of the stream it will be dotted against. The copy runs on
+        /// one of that shard's pinned workers so fresh pages first-touch
+        /// in-domain.
+        pub fn $admit_to(&self, shard: usize, v: &[$ty]) -> HomedSlice<$ty> {
+            let shard = shard % self.shards.len();
+            HomedSlice { shard, slice: self.shards[shard].$engine_admit(v) }
+        }
+
+        /// Zero-copy steady state: execute on the home shard of `a`
+        /// (admission locality — the data is already in that domain).
+        pub fn $dot_homed(
+            &self,
+            variant: Variant,
+            a: &HomedSlice<$ty>,
+            b: &HomedSlice<$ty>,
+        ) -> $ty {
+            let s = a.shard.min(self.shards.len() - 1);
+            self.shards[s].$engine_dot_pooled(variant, &a.slice, &b.slice)
+        }
+    };
+}
+
+impl ShardedEngine {
+    /// One shard per discovered NUMA domain (single shard when the host
+    /// has no NUMA hierarchy).
+    pub fn new(cfg: ShardedConfig) -> ShardedEngine {
+        Self::from_topology(topology_cached(), cfg)
+    }
+
+    /// Build shards for an explicit topology (tests and benches use
+    /// [`Topology::fake_even`] to exercise multi-shard layouts on
+    /// single-node hosts).
+    pub fn from_topology(topo: &Topology, cfg: ShardedConfig) -> ShardedEngine {
+        assert!(!topo.nodes.is_empty(), "topology must have at least one node");
+        let shards = topo
+            .nodes
+            .iter()
+            .map(|node| DotEngine::new_on(cfg.engine, &node.cpus))
+            .collect();
+        ShardedEngine { shards, cfg, next: AtomicUsize::new(0), split_dots: AtomicU64::new(0) }
+    }
+
+    /// The process-wide sharded engine (used by the service's host
+    /// backend).
+    pub fn global() -> &'static ShardedEngine {
+        static ENGINE: OnceLock<ShardedEngine> = OnceLock::new();
+        ENGINE.get_or_init(|| ShardedEngine::new(ShardedConfig::default()))
+    }
+
+    pub fn shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    pub fn shard(&self, i: usize) -> &DotEngine {
+        &self.shards[i]
+    }
+
+    pub fn config(&self) -> &ShardedConfig {
+        &self.cfg
+    }
+
+    pub fn total_workers(&self) -> usize {
+        self.shards.iter().map(|s| s.threads()).sum()
+    }
+
+    /// Round-robin shard for a fresh (un-homed) request.
+    fn route(&self) -> usize {
+        self.next.fetch_add(1, Ordering::Relaxed) % self.shards.len()
+    }
+
+    pub fn stats(&self) -> ShardedStats {
+        let mut st = ShardedStats {
+            shards: self.shards.len(),
+            split_dots: self.split_dots.load(Ordering::Relaxed),
+            ..ShardedStats::default()
+        };
+        for sh in &self.shards {
+            let e = sh.stats();
+            st.requests += e.requests;
+            st.parallel += e.parallel;
+            st.pool.hits += e.pool.hits;
+            st.pool.misses += e.pool.misses;
+            st.pool.returned += e.pool.returned;
+            st.pin_failures += e.pin_failures;
+        }
+        st.requests += st.split_dots;
+        st
+    }
+
+    sharded_dot_impl!(
+        dot_f32,
+        dot_homed_f32,
+        admit_f32,
+        admit_to_f32,
+        split_dot_f32,
+        dot_f32,
+        dot_pooled_f32,
+        admit_local_f32,
+        kernel_for_f32,
+        compensated_fold_f32,
+        f32,
+        16
+    );
+    sharded_dot_impl!(
+        dot_f64,
+        dot_homed_f64,
+        admit_f64,
+        admit_to_f64,
+        split_dot_f64,
+        dot_f64,
+        dot_pooled_f64,
+        admit_local_f64,
+        kernel_for_f64,
+        compensated_fold_f64,
+        f64,
+        8
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::accuracy::exact::exact_dot_f32;
+    use crate::util::Rng;
+
+    fn cfg(threads: usize, split_min_bytes: usize, chunks: usize) -> ShardedConfig {
+        ShardedConfig {
+            engine: EngineConfig { threads, ..EngineConfig::default() },
+            split_min_bytes,
+            chunks,
+        }
+    }
+
+    #[test]
+    fn single_node_degrades_to_one_shard_bit_identical_to_dot_engine() {
+        let sharded =
+            ShardedEngine::from_topology(&Topology::single_node(), cfg(2, 4 << 20, 0));
+        assert_eq!(sharded.shards(), 1);
+        let plain = DotEngine::new(EngineConfig { threads: 2, ..EngineConfig::default() });
+        let mut rng = Rng::new(41);
+        // inline path, chunked-parallel path, and above-split-threshold
+        // path (1 << 20 elements = 8 MB total ≥ the 4 MB threshold)
+        for n in [1000usize, 300_000, 1 << 20] {
+            let a = rng.normal_f32_vec(n);
+            let b = rng.normal_f32_vec(n);
+            let s = sharded.dot_f32(Variant::Kahan, &a, &b);
+            let p = plain.dot_f32(Variant::Kahan, &a, &b);
+            assert_eq!(s.to_bits(), p.to_bits(), "n={n}");
+        }
+        // the one above-threshold dot took the (degenerate) split path and
+        // must be visible in stats; the two routed dots count on the shard
+        let st = sharded.stats();
+        assert_eq!(st.split_dots, 1, "{st:?}");
+        assert_eq!(st.requests, 3, "routed + split dots must all be counted: {st:?}");
+    }
+
+    #[test]
+    fn split_dot_matches_exact_across_fake_shards() {
+        let sharded = ShardedEngine::from_topology(&Topology::fake_even(2), cfg(1, 64 << 10, 0));
+        assert_eq!(sharded.shards(), 2);
+        let mut rng = Rng::new(43);
+        let n = 100_000; // 800 KB total >> 64 KB split threshold
+        let a = rng.normal_f32_vec(n);
+        let b = rng.normal_f32_vec(n);
+        let exact = exact_dot_f32(&a, &b);
+        let scale: f64 =
+            a.iter().zip(&b).map(|(x, y)| (x * y).abs() as f64).sum::<f64>().max(1e-30);
+        let got = sharded.dot_f32(Variant::Kahan, &a, &b) as f64;
+        assert!((got - exact).abs() / scale < 1e-6, "{got} vs {exact}");
+        let st = sharded.stats();
+        assert_eq!(st.split_dots, 1, "{st:?}");
+    }
+
+    #[test]
+    fn homed_streams_execute_on_their_admission_shard() {
+        let sharded = ShardedEngine::from_topology(&Topology::fake_even(3), cfg(1, 4 << 20, 0));
+        let mut rng = Rng::new(47);
+        let n = 4096;
+        let av = rng.normal_f32_vec(n);
+        let bv = rng.normal_f32_vec(n);
+        let exact = exact_dot_f32(&av, &bv);
+        let scale: f64 =
+            av.iter().zip(&bv).map(|(x, y)| (x * y).abs() as f64).sum::<f64>().max(1e-30);
+        let a = sharded.admit_f32(&av);
+        let b = sharded.admit_f32(&bv);
+        assert!(a.shard < sharded.shards());
+        let before = sharded.shard(a.shard).stats().requests;
+        let got = sharded.dot_homed_f32(Variant::Kahan, &a, &b) as f64;
+        assert!((got - exact).abs() / scale < 1e-6);
+        let after = sharded.shard(a.shard).stats().requests;
+        assert_eq!(after, before + 1, "dot must run on the home shard of `a`");
+
+        // co-located admission: the partner stream lands on a's shard, so
+        // the steady-state pair never crosses a domain
+        let b2 = sharded.admit_to_f32(a.shard, &bv);
+        assert_eq!(b2.shard, a.shard);
+        let got2 = sharded.dot_homed_f32(Variant::Kahan, &a, &b2) as f64;
+        assert!((got2 - exact).abs() / scale < 1e-6);
+    }
+
+    #[test]
+    fn f64_split_path_matches_exact() {
+        use crate::accuracy::exact::exact_dot_f64;
+        let sharded = ShardedEngine::from_topology(&Topology::fake_even(2), cfg(1, 64 << 10, 0));
+        let mut rng = Rng::new(53);
+        let n = 50_000; // 800 KB total
+        let a = rng.normal_f64_vec(n);
+        let b = rng.normal_f64_vec(n);
+        let exact = exact_dot_f64(&a, &b);
+        let scale: f64 = a.iter().zip(&b).map(|(x, y)| (x * y).abs()).sum::<f64>().max(1e-300);
+        let got = sharded.dot_f64(Variant::Kahan, &a, &b);
+        assert!((got - exact).abs() / scale < 1e-14);
+    }
+
+    #[test]
+    fn global_sharded_engine_is_a_singleton() {
+        let a = ShardedEngine::global() as *const _;
+        let b = ShardedEngine::global() as *const _;
+        assert_eq!(a, b);
+    }
+}

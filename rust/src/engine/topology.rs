@@ -1,0 +1,249 @@
+//! NUMA topology discovery: which logical CPUs belong to which memory
+//! domain.
+//!
+//! The follow-up papers (Hofmann et al., CCPE 2016; the four-generation
+//! study) show Kahan-dot saturation is governed by **per-socket** memory
+//! bandwidth: a multi-socket machine only streams at full speed when each
+//! NUMA domain reads its own local data. The sharded engine therefore
+//! needs to know the domains and their CPU lists; this module reads them
+//! from `/sys/devices/system/node/node*/cpulist` and falls back to a
+//! single node spanning the online CPUs when that hierarchy is absent
+//! (containers, non-Linux, old kernels).
+//!
+//! Discovery runs once per process ([`topology_cached`]); tests and
+//! benches that need a multi-shard layout on a single-node host can build
+//! a synthetic split with [`Topology::fake_even`].
+
+use std::path::Path;
+use std::sync::OnceLock;
+
+/// One NUMA domain: its sysfs id and the logical CPUs local to it.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct NumaNode {
+    pub id: usize,
+    pub cpus: Vec<usize>,
+}
+
+/// The machine's NUMA layout (only nodes that own at least one CPU;
+/// memory-only nodes are skipped because a shard needs workers to pin).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Topology {
+    pub nodes: Vec<NumaNode>,
+}
+
+impl Topology {
+    /// Discover the host topology, falling back to a single node covering
+    /// the online CPU set when sysfs has no NUMA hierarchy.
+    pub fn detect() -> Topology {
+        Self::from_sysfs(Path::new("/sys/devices/system/node"))
+            .unwrap_or_else(Self::single_node)
+    }
+
+    /// Parse `node*/cpulist` under `dir`, keeping only CPUs this process
+    /// may actually run on (each node's list is intersected with
+    /// `allowed_cpus()` — a cgroup/taskset-restricted pod on a 2-socket
+    /// host must not spawn one worker per *machine* CPU and pin them to
+    /// forbidden ids). Returns `None` when the directory is missing or no
+    /// node retains a usable CPU (then the single-node fallback, which is
+    /// the allowed set itself, applies).
+    fn from_sysfs(dir: &Path) -> Option<Topology> {
+        let entries = std::fs::read_dir(dir).ok()?;
+        let allowed = crate::bench::threads::allowed_cpus();
+        let mut nodes: Vec<NumaNode> = Vec::new();
+        for entry in entries.flatten() {
+            let name = entry.file_name();
+            let name = name.to_string_lossy();
+            let Some(id) = name.strip_prefix("node").and_then(|s| s.parse::<usize>().ok())
+            else {
+                continue;
+            };
+            let Ok(list) = std::fs::read_to_string(entry.path().join("cpulist")) else {
+                continue;
+            };
+            let mut cpus = parse_cpu_list(&list);
+            cpus.retain(|c| allowed.binary_search(c).is_ok());
+            if !cpus.is_empty() {
+                nodes.push(NumaNode { id, cpus });
+            }
+        }
+        if nodes.is_empty() {
+            return None;
+        }
+        nodes.sort_by_key(|n| n.id);
+        Some(Topology { nodes })
+    }
+
+    /// One node spanning the process's allowed CPU set — the degenerate
+    /// layout every single-socket host (and this container) reduces to.
+    /// Uses the affinity mask rather than `0..online` so shard workers pin
+    /// to pinnable ids under taskset/cgroup masks.
+    pub fn single_node() -> Topology {
+        Topology { nodes: vec![NumaNode { id: 0, cpus: crate::bench::threads::allowed_cpus() }] }
+    }
+
+    /// Synthetic layout for tests/benches: split the allowed CPUs into
+    /// `shards` contiguous groups (each gets at least one CPU; extra
+    /// shards beyond the CPU count share CPU ids round-robin so the
+    /// requested shard count is always honored).
+    pub fn fake_even(shards: usize) -> Topology {
+        let shards = shards.max(1);
+        let allowed = crate::bench::threads::allowed_cpus();
+        let mut nodes = Vec::with_capacity(shards);
+        if shards <= allowed.len() {
+            let base = allowed.len() / shards;
+            let extra = allowed.len() % shards;
+            let mut start = 0;
+            for id in 0..shards {
+                let len = base + usize::from(id < extra);
+                nodes.push(NumaNode { id, cpus: allowed[start..start + len].to_vec() });
+                start += len;
+            }
+        } else {
+            for id in 0..shards {
+                nodes.push(NumaNode { id, cpus: vec![allowed[id % allowed.len()]] });
+            }
+        }
+        Topology { nodes }
+    }
+
+    pub fn total_cpus(&self) -> usize {
+        self.nodes.iter().map(|n| n.cpus.len()).sum()
+    }
+
+    /// Compact human-readable form, e.g. `node0: 0-17 | node1: 18-35`.
+    pub fn render(&self) -> String {
+        self.nodes
+            .iter()
+            .map(|n| format!("node{}: {}", n.id, render_cpu_list(&n.cpus)))
+            .collect::<Vec<_>>()
+            .join(" | ")
+    }
+}
+
+/// Parse the kernel's cpulist format (`"0-3,8,10-11"`) into sorted CPU
+/// ids. Malformed fields are skipped (best effort — sysfs is trusted but
+/// this must never panic on a weird kernel).
+pub fn parse_cpu_list(s: &str) -> Vec<usize> {
+    let mut out = Vec::new();
+    for field in s.trim().split(',') {
+        let field = field.trim();
+        if field.is_empty() {
+            continue;
+        }
+        match field.split_once('-') {
+            Some((lo, hi)) => {
+                if let (Ok(lo), Ok(hi)) = (lo.trim().parse::<usize>(), hi.trim().parse::<usize>())
+                {
+                    if lo <= hi && hi - lo < 4096 {
+                        out.extend(lo..=hi);
+                    }
+                }
+            }
+            None => {
+                if let Ok(cpu) = field.parse::<usize>() {
+                    out.push(cpu);
+                }
+            }
+        }
+    }
+    out.sort_unstable();
+    out.dedup();
+    out
+}
+
+/// Inverse of [`parse_cpu_list`] for display.
+fn render_cpu_list(cpus: &[usize]) -> String {
+    let mut parts: Vec<String> = Vec::new();
+    let mut i = 0;
+    while i < cpus.len() {
+        let start = cpus[i];
+        let mut end = start;
+        while i + 1 < cpus.len() && cpus[i + 1] == end + 1 {
+            i += 1;
+            end = cpus[i];
+        }
+        parts.push(if start == end {
+            format!("{start}")
+        } else {
+            format!("{start}-{end}")
+        });
+        i += 1;
+    }
+    parts.join(",")
+}
+
+/// The process-wide topology, discovered on first use.
+pub fn topology_cached() -> &'static Topology {
+    static TOPO: OnceLock<Topology> = OnceLock::new();
+    TOPO.get_or_init(Topology::detect)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_kernel_cpulist_grammar() {
+        assert_eq!(parse_cpu_list("0-3\n"), vec![0, 1, 2, 3]);
+        assert_eq!(parse_cpu_list("0-1,4,6-7"), vec![0, 1, 4, 6, 7]);
+        assert_eq!(parse_cpu_list("5"), vec![5]);
+        assert_eq!(parse_cpu_list(""), Vec::<usize>::new());
+        // malformed fields are skipped, not fatal
+        assert_eq!(parse_cpu_list("x,2,3-1,4"), vec![2, 4]);
+        // duplicates collapse
+        assert_eq!(parse_cpu_list("1,1,0-2"), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn render_round_trips() {
+        for s in ["0-3", "0-1,4,6-7", "5", "0,2,4"] {
+            let cpus = parse_cpu_list(s);
+            assert_eq!(parse_cpu_list(&render_cpu_list(&cpus)), cpus, "{s}");
+        }
+    }
+
+    #[test]
+    fn detect_never_returns_zero_nodes() {
+        let t = Topology::detect();
+        assert!(!t.nodes.is_empty());
+        assert!(t.total_cpus() >= 1);
+        for n in &t.nodes {
+            assert!(!n.cpus.is_empty(), "node{} has no CPUs", n.id);
+        }
+        // ids are sorted and unique
+        for w in t.nodes.windows(2) {
+            assert!(w[0].id < w[1].id);
+        }
+    }
+
+    #[test]
+    fn missing_sysfs_falls_back_to_single_node() {
+        let t = Topology::from_sysfs(Path::new("/definitely/not/a/real/sysfs"));
+        assert!(t.is_none());
+        let single = Topology::single_node();
+        assert_eq!(single.nodes.len(), 1);
+        assert_eq!(single.nodes[0].id, 0);
+        assert_eq!(single.total_cpus(), single.nodes[0].cpus.len());
+    }
+
+    #[test]
+    fn fake_even_covers_and_honors_shard_count() {
+        for shards in [1usize, 2, 3, 7] {
+            let t = Topology::fake_even(shards);
+            assert_eq!(t.nodes.len(), shards);
+            for n in &t.nodes {
+                assert!(!n.cpus.is_empty());
+            }
+        }
+        let allowed = crate::bench::threads::allowed_cpus().len();
+        let t = Topology::fake_even(allowed);
+        assert_eq!(t.total_cpus(), allowed, "even split must cover every allowed CPU");
+    }
+
+    #[test]
+    fn cached_topology_is_stable() {
+        let a = topology_cached() as *const Topology;
+        let b = topology_cached() as *const Topology;
+        assert_eq!(a, b);
+    }
+}

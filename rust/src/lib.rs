@@ -15,9 +15,10 @@
 //!   hierarchy + memory interface) standing in for the paper's silicon;
 //! * [`bench`] — a likwid-bench-style host microbenchmark framework with
 //!   real `std::arch` SIMD Kahan kernels;
-//! * [`engine`] — the persistent parallel dot engine: pooled aligned
-//!   buffers, a pinned worker pool with chunked compensated reduction, and
-//!   an autotuned kernel dispatch table (the serving hot path);
+//! * [`engine`] — the persistent parallel dot engine and its NUMA-sharded
+//!   serving tier: pooled aligned buffers, pinned per-domain worker pools
+//!   with chunked compensated reduction, autotuned kernel dispatch, and a
+//!   locality-aware shard router (the serving hot path);
 //! * [`accuracy`] — error-free transformations, exact dot products and the
 //!   Ogita–Rump–Oishi ill-conditioned generator;
 //! * [`runtime`] — PJRT execution of the AOT-lowered JAX/Pallas artifacts;

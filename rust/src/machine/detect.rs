@@ -162,6 +162,13 @@ pub fn detect_host_cached() -> &'static Machine {
     HOST.get_or_init(detect_host)
 }
 
+/// NUMA domains on this host (1 on single-socket machines and containers
+/// without a sysfs node hierarchy). Delegates to the engine's cached
+/// topology discovery so detection and sharding can never disagree.
+pub fn numa_node_count() -> usize {
+    crate::engine::topology_cached().nodes.len()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -188,6 +195,13 @@ mod tests {
         let a = detect_host_cached() as *const Machine;
         let b = detect_host_cached() as *const Machine;
         assert_eq!(a, b, "detection must run once");
+    }
+
+    #[test]
+    fn numa_node_count_matches_topology() {
+        let n = numa_node_count();
+        assert!(n >= 1);
+        assert_eq!(n, crate::engine::topology_cached().nodes.len());
     }
 
     #[test]

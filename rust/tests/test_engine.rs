@@ -9,7 +9,8 @@ use kahan_ecm::accuracy::exact::{exact_dot_f32, exact_dot_f64};
 use kahan_ecm::accuracy::gen_dot_f32;
 use kahan_ecm::bench::kernels::{by_name, scalar, KernelFn};
 use kahan_ecm::engine::{
-    parallel_dot_f32, parallel_dot_f64, BufferPool, DotEngine, EngineConfig, WorkerPool,
+    parallel_dot_f32, parallel_dot_f64, BufferPool, DotEngine, EngineConfig, ShardedConfig,
+    ShardedEngine, Topology, WorkerPool,
 };
 use kahan_ecm::isa::Variant;
 use kahan_ecm::prop_assert;
@@ -168,6 +169,109 @@ fn engine_facade_serves_accurate_deterministic_results() {
     assert_eq!(s.requests, 8);
     assert_eq!(s.parallel, 4, "only the 500k dots go parallel: {s:?}");
     assert!(s.pool.hits >= 6, "steady state must recycle buffers: {s:?}");
+}
+
+fn panicking_kernel(_a: &[f32], _b: &[f32]) -> f32 {
+    panic!("injected kernel panic");
+}
+
+/// The headline bugfix regression: a panicking chunk kernel must neither
+/// hang the caller (the old collector looped on a channel whose job died
+/// holding `tx`, and the dead worker would deadlock every later dot routed
+/// to it) nor fold a silent `0.0` partial into the result. The panic
+/// propagates with its payload, and the same pool serves correct dots
+/// afterwards.
+#[test]
+fn panicking_kernel_neither_hangs_nor_fabricates_a_value() {
+    let pool = WorkerPool::new(2);
+    let bufs = BufferPool::new();
+    let mut rng = kahan_ecm::util::Rng::new(99);
+    let n = 20_000;
+    let av = rng.normal_f32_vec(n);
+    let bv = rng.normal_f32_vec(n);
+    let a = Arc::new(bufs.admit(&av));
+    let b = Arc::new(bufs.admit(&bv));
+
+    for round in 0..2 {
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            parallel_dot_f32(&pool, panicking_kernel, &a, &b, 4)
+        }));
+        let err = match r {
+            Err(e) => e,
+            Ok(v) => panic!("round {round}: a panicking chunk must propagate, got {v}"),
+        };
+        let msg = err
+            .downcast_ref::<String>()
+            .cloned()
+            .unwrap_or_else(|| "non-string payload".into());
+        assert!(msg.contains("injected kernel panic"), "round {round}: payload lost: {msg}");
+
+        // no dead workers left behind: the same pool immediately serves a
+        // correct dot whose chunks land on the same workers
+        let exact = exact_dot_f32(&av, &bv);
+        let bound = f32_bound(absdot_f32(&av, &bv));
+        let got = parallel_dot_f32(&pool, scalar::kahan_unrolled_f32, &a, &b, 4) as f64;
+        assert!(
+            (got - exact).abs() <= bound,
+            "round {round}: pool is broken after a panicking job: {got} vs {exact}"
+        );
+    }
+}
+
+fn sharded_cfg(threads: usize, split_min_bytes: usize, chunks: usize) -> ShardedConfig {
+    ShardedConfig {
+        engine: EngineConfig { threads, ..EngineConfig::default() },
+        split_min_bytes,
+        chunks,
+    }
+}
+
+/// Cross-shard merged Kahan keeps the *sequential* bound on
+/// Ogita–Rump–Oishi ill-conditioned inputs: the shard merge is one more
+/// compensated reduction level, and massive cancellation is exactly where
+/// a sloppy cross-shard fold (or a lost shard partial) would surface.
+#[test]
+fn property_sharded_split_keeps_sequential_bound_ill_conditioned() {
+    let sharded = ShardedEngine::from_topology(&Topology::fake_even(3), sharded_cfg(1, 1, 0));
+    prop::check("sharded-split-gendot", 10, |rng| {
+        let n = 512 + rng.below(4096) as usize;
+        let target_cond = [1e4, 1e6, 1e8][rng.below(3) as usize];
+        let (av, bv, exact, _cond) = gen_dot_f32(n, target_cond, rng);
+        let bound = f32_bound(absdot_f32(&av, &bv));
+        let got = sharded.dot_f32(Variant::Kahan, &av, &bv) as f64;
+        prop_assert!(
+            (got - exact).abs() <= bound,
+            "n={n} cond~{target_cond:e}: err {:e} > bound {bound:e}",
+            (got - exact).abs()
+        );
+        Ok(())
+    });
+    assert!(sharded.stats().split_dots > 0, "split threshold of 1 byte must force splits");
+}
+
+/// Fixed chunk geometry ⇒ the sharded result is bit-identical whether 1 or
+/// N shards execute it: the split fold runs over the *global* per-chunk
+/// partials in chunk order, so the shard assignment cannot change a bit.
+#[test]
+fn property_sharded_split_bit_identical_1_vs_n_shards() {
+    let chunks = 8;
+    let one = ShardedEngine::from_topology(&Topology::fake_even(1), sharded_cfg(2, 1, chunks));
+    let two = ShardedEngine::from_topology(&Topology::fake_even(2), sharded_cfg(1, 1, chunks));
+    let three = ShardedEngine::from_topology(&Topology::fake_even(3), sharded_cfg(1, 1, chunks));
+    prop::check("sharded-bit-identity", 12, |rng| {
+        let n = 256 + rng.below(40_000) as usize;
+        let av = rng.normal_f32_vec(n);
+        let bv = rng.normal_f32_vec(n);
+        let base = one.dot_f32(Variant::Kahan, &av, &bv);
+        for (label, e) in [("2 shards", &two), ("3 shards", &three)] {
+            let got = e.dot_f32(Variant::Kahan, &av, &bv);
+            prop_assert!(
+                base.to_bits() == got.to_bits(),
+                "n={n}: {label} diverged: {base:e} vs {got:e}"
+            );
+        }
+        Ok(())
+    });
 }
 
 /// The engine's ill-conditioned behaviour end-to-end: Kahan stays at the
