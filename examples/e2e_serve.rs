@@ -1,53 +1,45 @@
 //! End-to-end driver (DESIGN.md §4, experiment E2E): the serving stack
 //! under a real workload.
 //!
-//!   client threads ──► DotClient ──► mpsc ──► worker ──► backend
-//!        ▲                                       │
-//!        └────────── per-request responses ◄─────┘
+//!   client threads ──► DotClient (routes) ──► per-shard bounded queues
+//!        ▲                                        │
+//!        │                            submitter pool (one per shard)
+//!        │                                        │
+//!        └────────── per-request responses ◄── backend engine
 //!
-//! * default backend is the **persistent host engine** (`crate::engine`):
-//!   pooled 64-byte-aligned buffers, pinned long-lived workers, autotuned
-//!   SIMD kernel dispatch — no artifacts, no Python, works anywhere;
+//! * default backend is the **persistent host engine** (`crate::engine`)
+//!   behind the service's router pool: pooled 64-byte-aligned buffers,
+//!   pinned long-lived workers, autotuned SIMD kernel dispatch — no
+//!   artifacts, no Python, works anywhere. `--clients N` threads submit
+//!   concurrently (default 4); independent requests execute on different
+//!   shards in parallel;
 //! * `--pjrt` switches to the original PJRT batching path (requires AOT
 //!   artifacts and the `pjrt` cargo feature);
 //! * requests arrive in bursts with mixed sizes and variants; every
 //!   response is checked against the exact dot, and the run reports
-//!   throughput, latency percentiles and accuracy.
+//!   throughput, latency percentiles, accuracy, and router-lane balance.
 //!
-//! Run: `cargo run --release --example e2e_serve [-- --requests N] [--pjrt]`
+//! Run: `cargo run --release --example e2e_serve [-- --requests N] [--clients C] [--pjrt]`
 
 use kahan_ecm::accuracy::exact::exact_dot_f32;
-use kahan_ecm::coordinator::{Backend, DotService, ServiceConfig};
+use kahan_ecm::coordinator::{Backend, DotClient, DotService, ServiceConfig};
 use kahan_ecm::util::{stats, Rng};
 use std::time::Instant;
 
-fn main() -> anyhow::Result<()> {
-    let mut requests: usize = 2000;
-    let mut backend = Backend::Host;
-    let mut args = std::env::args().skip(1);
-    while let Some(a) = args.next() {
-        if a == "--requests" {
-            requests = args.next().and_then(|v| v.parse().ok()).unwrap_or(requests);
-        } else if a == "--pjrt" {
-            backend = Backend::Pjrt;
-        }
-    }
-
-    match backend {
-        Backend::Host => println!("starting dot service (persistent host engine)..."),
-        Backend::Pjrt => println!("starting dot service (PJRT CPU, dynamic batching, window 2 ms)..."),
-    }
-    let (svc, client) = DotService::start(ServiceConfig { backend, ..ServiceConfig::default() })?;
-
-    // --- workload: bursts of mixed-size, mixed-variant requests ---
-    let mut rng = Rng::new(2024);
+/// One client thread's share of the workload: bursts of mixed-size,
+/// mixed-variant requests. Returns (latencies_us, batch_sizes, max_rel_err).
+fn run_client(
+    client: &DotClient,
+    thread_id: u64,
+    requests: usize,
+) -> (Vec<f64>, Vec<f64>, f64) {
+    let mut rng = Rng::new(2024 + thread_id);
     let sizes = [512usize, 2048, 8192, 16384];
-    let t0 = Instant::now();
     let mut latencies_us: Vec<f64> = Vec::with_capacity(requests);
     let mut batch_sizes: Vec<f64> = Vec::with_capacity(requests);
     let mut max_rel_err = 0.0f64;
     let mut served = 0usize;
-    let mut id = 0u64;
+    let mut id = thread_id << 32;
 
     while served < requests {
         // a burst of 4..12 requests, then a think-time gap
@@ -77,12 +69,62 @@ fn main() -> anyhow::Result<()> {
             served += 1;
         }
     }
+    (latencies_us, batch_sizes, max_rel_err)
+}
+
+fn main() -> anyhow::Result<()> {
+    let mut requests: usize = 2000;
+    let mut clients: usize = 4;
+    let mut backend = Backend::Host;
+    let mut args = std::env::args().skip(1);
+    while let Some(a) = args.next() {
+        if a == "--requests" {
+            requests = args.next().and_then(|v| v.parse().ok()).unwrap_or(requests);
+        } else if a == "--clients" {
+            clients = args.next().and_then(|v| v.parse().ok()).unwrap_or(clients).max(1);
+        } else if a == "--pjrt" {
+            backend = Backend::Pjrt;
+        }
+    }
+
+    match backend {
+        Backend::Host => println!(
+            "starting dot service (persistent host engine, router pool, {clients} client thread(s))..."
+        ),
+        Backend::Pjrt => println!("starting dot service (PJRT CPU, dynamic batching, window 2 ms)..."),
+    }
+    let (svc, client) = DotService::start(ServiceConfig { backend, ..ServiceConfig::default() })?;
+
+    // --- workload: `clients` threads submit concurrently ---
+    let t0 = Instant::now();
+    let per_client = requests / clients;
+    let remainder = requests % clients;
+    let mut latencies_us: Vec<f64> = Vec::with_capacity(requests);
+    let mut batch_sizes: Vec<f64> = Vec::with_capacity(requests);
+    let mut max_rel_err = 0.0f64;
+    std::thread::scope(|s| {
+        let handles: Vec<_> = (0..clients)
+            .map(|c| {
+                let client = client.clone();
+                let share = per_client + usize::from(c < remainder);
+                s.spawn(move || run_client(&client, c as u64, share))
+            })
+            .collect();
+        for h in handles {
+            let (lat, bsz, err) = h.join().expect("client thread");
+            latencies_us.extend(lat);
+            batch_sizes.extend(bsz);
+            max_rel_err = max_rel_err.max(err);
+        }
+    });
+    let served = latencies_us.len();
     let wall = t0.elapsed().as_secs_f64();
     let stats_out = svc.stop();
 
     // --- report ---
     println!("\n=== E2E serving report ===");
     println!("backend            : {backend:?}");
+    println!("client threads     : {clients}");
     println!("requests           : {served}");
     println!("wall time          : {wall:.2} s");
     println!("throughput         : {:.0} req/s", served as f64 / wall);
@@ -99,6 +141,13 @@ fn main() -> anyhow::Result<()> {
                 "engine             : {} calls on {} shard(s) ({} chunked-parallel, {} split), pool hits/misses {}/{}",
                 stats_out.engine_calls, e.shards, e.parallel, e.split_dots, e.pool.hits, e.pool.misses
             );
+            for (i, lane) in stats_out.lanes.iter().enumerate() {
+                println!(
+                    "router lane {i}      : {} routed, {} executed, {} queue-full stalls",
+                    lane.routed, lane.executed, lane.queue_full_stalls
+                );
+            }
+            println!("queue-full stalls  : {}", stats_out.queue_full_stalls);
         }
         Backend::Pjrt => {
             println!("mean batch size    : {:.2}", stats::mean(&batch_sizes));
@@ -114,10 +163,17 @@ fn main() -> anyhow::Result<()> {
     assert_eq!(stats_out.errors, 0, "no request may fail");
     assert!(max_rel_err < 1e-5, "accuracy must hold end-to-end");
     match backend {
-        Backend::Host => assert_eq!(
-            stats_out.engine_calls as usize, served,
-            "every request must execute on the engine"
-        ),
+        Backend::Host => {
+            assert_eq!(
+                stats_out.engine_calls as usize, served,
+                "every request must execute on the engine"
+            );
+            assert_eq!(
+                stats_out.lanes.iter().map(|l| l.executed).sum::<u64>() as usize,
+                served,
+                "every request must be accounted to a router lane"
+            );
+        }
         Backend::Pjrt => assert!(
             (stats_out.pjrt_calls as usize) < served,
             "batching must fuse requests ({} calls for {served})",

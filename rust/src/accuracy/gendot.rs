@@ -3,12 +3,23 @@
 //! Mirrors `python/compile/kernels/ref.py::gen_dot` so the two stacks
 //! evaluate on statistically identical workloads.
 
-use super::exact::exact_dot_f32;
+use super::exact::{exact_dot_f32, exact_dot_f64, two_sum};
 use crate::util::Rng;
 
-/// Generate `(x, y, exact, achieved_cond)` in f32 with dot-product condition
-/// number near `target_cond`.
-pub fn gen_dot_f32(n: usize, target_cond: f64, rng: &mut Rng) -> (Vec<f32>, Vec<f32>, f64, f64) {
+/// Running Neumaier accumulation of `p` into `(s, c)` — the construction
+/// below needs an accurate running dot to steer the cancellation. Built on
+/// the crate's error-free `two_sum` rather than a second hand-rolled
+/// compensated primitive.
+fn neumaier_acc(p: f64, s: &mut f64, c: &mut f64) {
+    let (t, e) = two_sum(*s, p);
+    *c += e;
+    *s = t;
+}
+
+/// The two-phase construction both precisions share, carried out in f64:
+/// the first half spreads exponents up to `cond^(1/2)`, the second half
+/// steers the running dot towards zero through the Neumaier accumulator.
+fn gen_dot_core(n: usize, target_cond: f64, rng: &mut Rng) -> (Vec<f64>, Vec<f64>) {
     assert!(n >= 6, "gen_dot needs n >= 6");
     let b = target_cond.log2();
     let half = n / 2;
@@ -30,17 +41,8 @@ pub fn gen_dot_f32(n: usize, target_cond: f64, rng: &mut Rng) -> (Vec<f32>, Vec<
     // running Neumaier accumulator over x[i]*y[i]
     let mut s = 0.0f64;
     let mut c = 0.0f64;
-    let acc = |p: f64, s: &mut f64, c: &mut f64| {
-        let t = *s + p;
-        if s.abs() >= p.abs() {
-            *c += (*s - t) + p;
-        } else {
-            *c += (p - t) + *s;
-        }
-        *s = t;
-    };
     for i in 0..half {
-        acc(x[i] * y[i], &mut s, &mut c);
+        neumaier_acc(x[i] * y[i], &mut s, &mut c);
     }
 
     // second half: drive the running dot towards zero
@@ -53,15 +55,34 @@ pub fn gen_dot_f32(n: usize, target_cond: f64, rng: &mut Rng) -> (Vec<f32>, Vec<
         }
         let cur = s + c;
         y[i] = ((2.0 * rng.uniform() - 1.0) * e.exp2() - cur) / x[i];
-        acc(x[i] * y[i], &mut s, &mut c);
+        neumaier_acc(x[i] * y[i], &mut s, &mut c);
     }
+    (x, y)
+}
 
+/// Generate `(x, y, exact, achieved_cond)` in f32 with dot-product condition
+/// number near `target_cond`.
+pub fn gen_dot_f32(n: usize, target_cond: f64, rng: &mut Rng) -> (Vec<f32>, Vec<f32>, f64, f64) {
+    let (x, y) = gen_dot_core(n, target_cond, rng);
     let xf: Vec<f32> = x.iter().map(|&v| v as f32).collect();
     let yf: Vec<f32> = y.iter().map(|&v| v as f32).collect();
     let exact = exact_dot_f32(&xf, &yf);
     let absdot: f64 = xf.iter().zip(&yf).map(|(a, b)| (*a as f64 * *b as f64).abs()).sum();
     let cond = if exact == 0.0 { f64::INFINITY } else { 2.0 * absdot / exact.abs() };
     (xf, yf, exact, cond)
+}
+
+/// Generate `(x, y, exact, achieved_cond)` in f64 with dot-product
+/// condition number near `target_cond` — the double-precision sibling of
+/// [`gen_dot_f32`]. Unlike the f32 version there is no final cast, so the
+/// carefully-cancelled construction survives intact and reachable
+/// condition numbers extend to ~1/eps ≈ 1e15.
+pub fn gen_dot_f64(n: usize, target_cond: f64, rng: &mut Rng) -> (Vec<f64>, Vec<f64>, f64, f64) {
+    let (x, y) = gen_dot_core(n, target_cond, rng);
+    let exact = exact_dot_f64(&x, &y);
+    let absdot: f64 = x.iter().zip(&y).map(|(a, b)| (a * b).abs()).sum();
+    let cond = if exact == 0.0 { f64::INFINITY } else { 2.0 * absdot / exact.abs() };
+    (x, y, exact, cond)
 }
 
 #[cfg(test)]
@@ -89,6 +110,27 @@ mod tests {
     fn deterministic_per_seed() {
         let (x1, y1, _, _) = gen_dot_f32(64, 1e6, &mut Rng::new(3));
         let (x2, y2, _, _) = gen_dot_f32(64, 1e6, &mut Rng::new(3));
+        assert_eq!(x1, x2);
+        assert_eq!(y1, y2);
+    }
+
+    #[test]
+    fn f64_hits_target_condition_within_slack() {
+        let mut rng = Rng::new(23);
+        for target in [1e6, 1e10, 1e14] {
+            let (_, _, exact, cond) = gen_dot_f64(512, target, &mut rng);
+            assert!(exact.is_finite());
+            assert!(
+                cond >= target / 1e2 && cond <= target * 1e4,
+                "target {target:e}, got {cond:e}"
+            );
+        }
+    }
+
+    #[test]
+    fn f64_deterministic_per_seed() {
+        let (x1, y1, _, _) = gen_dot_f64(64, 1e10, &mut Rng::new(7));
+        let (x2, y2, _, _) = gen_dot_f64(64, 1e10, &mut Rng::new(7));
         assert_eq!(x1, x2);
         assert_eq!(y1, y2);
     }

@@ -13,4 +13,4 @@ pub mod gendot;
 
 pub use analysis::{error_sweep, AlgoError};
 pub use exact::{exact_dot_f32, exact_dot_f64, two_prod, two_sum};
-pub use gendot::gen_dot_f32;
+pub use gendot::{gen_dot_f32, gen_dot_f64};

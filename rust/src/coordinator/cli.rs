@@ -219,8 +219,15 @@ pub fn run(args: &Args) -> Result<(), String> {
                 e.total_workers(),
                 crate::util::fmt::bytes(e.config().split_min_bytes as u64)
             );
-            for s in 0..e.shards() {
-                let es = e.shard(s).stats();
+            let svc_cfg = crate::coordinator::ServiceConfig::default();
+            println!(
+                "service router pool: {} submitter(s) (one per shard), default per-shard \
+                 queue depth {} (configurable; senders block when full, stalls counted \
+                 in ServiceStats)",
+                e.shards(),
+                svc_cfg.router_queue_depth
+            );
+            for (s, es) in e.stats_per_shard().iter().enumerate() {
                 println!(
                     "  shard {s}: {} workers, pin failures {}",
                     e.shard(s).threads(),

@@ -11,4 +11,7 @@ pub mod service;
 pub mod validate;
 
 pub use cli::cli_main;
-pub use service::{Backend, DotRequest, DotResponse, DotService, ServiceConfig, ServiceStats};
+pub use service::{
+    Backend, DotClient, DotRequest, DotResponse, DotService, LaneStats, ServiceConfig,
+    ServiceStats,
+};

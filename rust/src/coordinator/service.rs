@@ -4,53 +4,81 @@
 //! Two backends share one client API:
 //!
 //! * [`Backend::Host`] (default) — requests execute on the NUMA-sharded
-//!   serving tier (`crate::engine::ShardedEngine`): one pinned worker pool
-//!   + recycling 64-byte-aligned buffer pool per memory domain, autotuned
-//!   SIMD kernel dispatch, and a shard router keyed on **admission
-//!   locality** — streams admitted via [`DotClient::admit_blocking`]
-//!   remember their home shard and every later pooled dot executes there
-//!   (the data is already domain-local); fresh one-shot requests
-//!   round-robin across shards, and very large ones split across every
-//!   shard with a compensated cross-shard merge. Single-node hosts
-//!   degrade to one shard. Works anywhere, no artifacts needed.
+//!   serving tier (`crate::engine::ShardedEngine`) through a **router
+//!   pool**: one submitter thread per shard, each fed by its own bounded
+//!   queue. The client routes messages itself (no central router thread to
+//!   serialize behind): pooled streams go to the submitter of their home
+//!   shard, fresh requests round-robin across submitters, and each
+//!   submitter executes on *its* shard — so two small independent requests
+//!   run concurrently on different shards. Very large dots still fan out
+//!   across every shard with the flat compensated cross-shard merge (the
+//!   submitter only initiates the split), which keeps the sequential Kahan
+//!   bound and 1-vs-N-shard bit-identity intact. Queues are bounded
+//!   (`ServiceConfig::router_queue_depth`): when a lane is full the
+//!   client's send blocks — back-pressure instead of unbounded queue
+//!   growth — and the stall is counted in
+//!   [`ServiceStats::queue_full_stalls`]. Shutdown is graceful: each
+//!   submitter drains and serves everything already queued behind the
+//!   shutdown marker before exiting (see `submitter_loop`).
 //! * [`Backend::Pjrt`] — the original PJRT path: one worker thread owns
 //!   the `Runtime` (executables are not shared across threads), drains the
 //!   queue with a batching window, groups compatible requests, and
 //!   executes them in one PJRT call when possible. Needs AOT artifacts and
 //!   the `pjrt` cargo feature.
 //!
+//! Ordering: each lane is FIFO, and pooled-dot operands are resolved at
+//! *submit* time in the caller's program order while `release` removes the
+//! stream-table entry synchronously on the caller's thread. One client
+//! therefore keeps exactly the old single-router FIFO semantics — a
+//! `release` after `submit_pooled` never invalidates the in-flight dot
+//! (the message holds the resolved `Arc`s), and a `release` before a
+//! submit is always visible to it. Concurrent clients racing a release
+//! against a submit get one outcome or the other, never a dangling read.
+//!
 //! Architecture (std-only; the offline container has no tokio): callers
-//! submit `DotRequest`s over an mpsc channel and receive their
+//! submit `DotRequest`s over per-shard bounded channels and receive their
 //! `DotResponse` on a per-request return channel.
 
+use crate::engine::parallel::panic_message;
 use crate::engine::{HomedSlice, ShardedEngine};
 use crate::isa::Variant;
 use crate::runtime::Runtime;
 use std::collections::HashMap;
-use std::sync::mpsc;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, RwLock};
 use std::time::{Duration, Instant};
 
-/// Message to the worker: a request, stream admission/release, or an
-/// explicit shutdown (needed because `DotClient` clones keep the channel
-/// alive — dropping the service's own sender alone would never disconnect
-/// the worker).
+/// Message to a submitter (Host) or the worker (Pjrt): a request, stream
+/// admission/release, or an explicit shutdown marker (needed because
+/// `DotClient` clones keep the channels alive — dropping the service's own
+/// senders alone would never disconnect the receivers).
 enum Msg {
     Req(DotRequest),
     /// Admit a stream into the sharded engine's pooled storage; replies
-    /// with the stream handle (Host backend only). `near` co-locates the
-    /// stream on the home shard of an existing handle.
-    Admit { data: Vec<f32>, near: Option<u64>, reply: mpsc::Sender<Result<u64, String>> },
+    /// with the stream handle (Host backend only). Placement is the lane
+    /// the message was routed to: the client resolves `near` co-location
+    /// *before* sending, so the admission copy always runs on the target
+    /// shard's own workers.
+    Admit { data: Vec<f32>, reply: mpsc::Sender<Result<u64, String>> },
     /// Dot two admitted streams on the home shard of `a` (Host backend
-    /// only).
+    /// only). The operands are resolved from the stream table at *submit*
+    /// time on the client thread — program order of one client therefore
+    /// decides what a dot sees (exactly the old single-router FIFO
+    /// semantics): a `release` after `submit_pooled` can never invalidate
+    /// an in-flight dot (the message holds the slices alive), and a
+    /// `release` before it is always visible (`sa`/`sb` arrive `None`).
     ReqPooled {
         id: u64,
         variant: &'static str,
         a: u64,
         b: u64,
+        sa: Option<HomedSlice<f32>>,
+        sb: Option<HomedSlice<f32>>,
         reply: mpsc::Sender<DotResponse>,
         submitted: Instant,
     },
-    /// Drop an admitted stream, returning its buffer to the shard pool.
+    /// Drop an admitted stream (Pjrt path only — the Host client removes
+    /// it from the shared stream table synchronously instead).
     Release { handle: u64 },
     Shutdown,
 }
@@ -93,6 +121,12 @@ pub struct DotResponse {
 #[derive(Clone, Debug)]
 pub struct ServiceConfig {
     pub backend: Backend,
+    /// Host backend: per-shard submitter queue depth. When a lane holds
+    /// this many undelivered messages the next send *blocks* the caller
+    /// (back-pressure: admission copies must not pile up behind a busy
+    /// shard and starve compute), and the stall is counted in
+    /// [`ServiceStats::queue_full_stalls`].
+    pub router_queue_depth: usize,
     /// max requests fused into one batched execute (Pjrt backend)
     pub max_batch: usize,
     /// how long the batcher waits to fill a batch (Pjrt backend)
@@ -109,6 +143,7 @@ impl Default for ServiceConfig {
     fn default() -> Self {
         ServiceConfig {
             backend: Backend::Host,
+            router_queue_depth: 64,
             max_batch: 8,
             window: Duration::from_millis(2),
             batched_artifact_kahan: "batched_dot_kahan_f32_b8_n16384".into(),
@@ -117,6 +152,21 @@ impl Default for ServiceConfig {
             single_artifact_naive: "dot_naive_f32_n65536".into(),
         }
     }
+}
+
+/// Per-submitter-lane counters (Host backend; lane index == shard index).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct LaneStats {
+    /// messages accepted into this lane's queue. Sends rejected by a
+    /// stopped lane are not counted; a send that wins the race into the
+    /// queue just as the submitter exits is counted but never served
+    /// (its client sees a disconnect), so during a shutdown race this
+    /// may exceed the lane's served total by the few in-flight sends.
+    pub routed: u64,
+    /// dots (fresh + pooled) executed by this lane's submitter
+    pub executed: u64,
+    /// sends that found this lane's queue full and had to block
+    pub queue_full_stalls: u64,
 }
 
 /// Aggregate service statistics.
@@ -135,22 +185,279 @@ pub struct ServiceStats {
     pub pjrt_calls: u64,
     pub batched_calls: u64,
     pub errors: u64,
+    /// total sends that hit a full lane queue and blocked (back-pressure)
+    pub queue_full_stalls: u64,
+    /// messages served during the shutdown drain (they were queued behind
+    /// the shutdown marker and would have been dropped without the drain)
+    pub drained: u64,
+    /// per-shard router lanes (empty for the Pjrt backend)
+    pub lanes: Vec<LaneStats>,
+}
+
+/// One submitter lane's live counters.
+#[derive(Default)]
+struct LaneCounters {
+    routed: AtomicU64,
+    executed: AtomicU64,
+    queue_full_stalls: AtomicU64,
+}
+
+/// Shared state of the Host router pool: the per-shard bounded queues,
+/// the admitted-stream table, and every counter. Clients route against it
+/// directly — there is no central router thread.
+struct HostRouter {
+    engine: &'static ShardedEngine,
+    /// bounded hand-off to each shard's submitter (index == shard)
+    queues: Vec<mpsc::SyncSender<Msg>>,
+    /// admitted streams: handle -> home-shard slice. Inserted by the
+    /// owning submitter at admission, removed by *client* threads in
+    /// `DotClient::release` (synchronously — that is what makes a release
+    /// ordered against the same client's later submits), and read by
+    /// clients at submit time to resolve pooled operands.
+    streams: RwLock<HashMap<u64, HomedSlice<f32>>>,
+    next_handle: AtomicU64,
+    /// round-robin cursor for fresh (un-homed) messages
+    rr: AtomicUsize,
+    lanes: Vec<LaneCounters>,
+    requests: AtomicU64,
+    engine_calls: AtomicU64,
+    admitted: AtomicU64,
+    pooled_calls: AtomicU64,
+    errors: AtomicU64,
+    drained: AtomicU64,
+}
+
+impl HostRouter {
+    /// Lane for the next fresh (un-homed) message.
+    fn route_fresh(&self) -> usize {
+        self.rr.fetch_add(1, Ordering::Relaxed) % self.queues.len()
+    }
+
+    /// Home shard of an admitted stream, if it is still live.
+    fn shard_of(&self, handle: u64) -> Option<usize> {
+        self.streams.read().unwrap().get(&handle).map(|h| h.shard)
+    }
+
+    /// Hand `msg` to shard `s`'s submitter. The queue is bounded: a full
+    /// lane counts a stall and then *blocks* until the submitter catches
+    /// up — back-pressure, not unbounded growth. A send after shutdown is
+    /// dropped; the caller observes it as a disconnected reply channel.
+    fn send_to(&self, s: usize, msg: Msg) {
+        match self.queues[s].try_send(msg) {
+            Ok(()) => {
+                self.lanes[s].routed.fetch_add(1, Ordering::Relaxed);
+            }
+            Err(mpsc::TrySendError::Full(msg)) => {
+                self.lanes[s].queue_full_stalls.fetch_add(1, Ordering::Relaxed);
+                // count only accepted messages — a *rejected* send must
+                // not inflate `routed` (acceptance can still race the
+                // submitter's exit; see the `LaneStats::routed` doc)
+                if self.queues[s].send(msg).is_ok() {
+                    self.lanes[s].routed.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+            Err(mpsc::TrySendError::Disconnected(_)) => {}
+        }
+    }
+
+    /// Shared tail of both dot arms: bump the execution counters, run the
+    /// engine call with panic isolation, and turn an unwind into the
+    /// request's own error (the client must see the real panic text).
+    fn execute(
+        &self,
+        s: usize,
+        variant: &'static str,
+        pooled: bool,
+        dot: impl FnOnce(Variant) -> f32,
+    ) -> Result<f32, String> {
+        parse_variant(variant).and_then(|v| {
+            self.engine_calls.fetch_add(1, Ordering::Relaxed);
+            if pooled {
+                self.pooled_calls.fetch_add(1, Ordering::Relaxed);
+            }
+            self.lanes[s].executed.fetch_add(1, Ordering::Relaxed);
+            std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| dot(v)))
+                .map_err(|e| format!("engine panic: {}", panic_message(e)))
+        })
+    }
+
+    /// Execute one message on lane `s`'s submitter thread.
+    ///
+    /// Length mismatches are rejected HERE, before the engine: the
+    /// engine's documented policy is debug-assert + truncate (see the
+    /// engine module's "Length policy"), so the service is the layer that
+    /// turns a mismatch into a client-visible error.
+    fn serve(&self, s: usize, msg: Msg) {
+        match msg {
+            Msg::Shutdown => {}
+            Msg::Req(req) => {
+                self.requests.fetch_add(1, Ordering::Relaxed);
+                let value = if req.a.len() != req.b.len() {
+                    Err(format!("length mismatch {} vs {}", req.a.len(), req.b.len()))
+                } else {
+                    // no per-request heap churn: the engine reads the
+                    // request's own vectors (small dots run on them in
+                    // place; large dots pay one admission copy into the
+                    // target shard's recycled aligned pool buffers).
+                    // Executes on THIS lane's shard (routing already
+                    // balanced fresh requests round-robin); the engine
+                    // keeps the split-vs-route threshold and fans very
+                    // large dots out across every shard
+                    self.execute(s, req.variant, false, |v| {
+                        self.engine.dot_on_f32(s, v, &req.a, &req.b)
+                    })
+                };
+                if value.is_err() {
+                    self.errors.fetch_add(1, Ordering::Relaxed);
+                }
+                let _ = req.reply.send(DotResponse {
+                    id: req.id,
+                    value,
+                    batch_size: 1,
+                    latency: req.submitted.elapsed(),
+                });
+            }
+            Msg::Admit { data, reply } => {
+                // the copy runs on shard `s`'s own pinned workers, so
+                // fresh pages first-touch in-domain
+                let homed = self.engine.admit_to_f32(s, &data);
+                let handle = self.next_handle.fetch_add(1, Ordering::Relaxed);
+                self.streams.write().unwrap().insert(handle, homed);
+                self.admitted.fetch_add(1, Ordering::Relaxed);
+                let _ = reply.send(Ok(handle));
+            }
+            Msg::ReqPooled { id, variant, a, b, sa, sb, reply, submitted } => {
+                self.requests.fetch_add(1, Ordering::Relaxed);
+                let value = match (sa, sb) {
+                    (Some(sa), Some(sb)) if sa.len() == sb.len() => {
+                        self.execute(s, variant, true, |v| self.engine.dot_homed_f32(v, &sa, &sb))
+                    }
+                    (Some(sa), Some(sb)) => {
+                        Err(format!("length mismatch {} vs {}", sa.len(), sb.len()))
+                    }
+                    (sa, _) => Err(format!(
+                        "unknown stream handle {}",
+                        if sa.is_some() { b } else { a }
+                    )),
+                };
+                if value.is_err() {
+                    self.errors.fetch_add(1, Ordering::Relaxed);
+                }
+                let _ = reply.send(DotResponse {
+                    id,
+                    value,
+                    batch_size: 1,
+                    latency: submitted.elapsed(),
+                });
+            }
+            Msg::Release { handle } => {
+                // unreachable on the Host path (the client releases
+                // synchronously); kept for match exhaustiveness
+                self.streams.write().unwrap().remove(&handle);
+            }
+        }
+    }
+
+    fn snapshot(&self) -> ServiceStats {
+        let lanes: Vec<LaneStats> = self
+            .lanes
+            .iter()
+            .map(|l| LaneStats {
+                routed: l.routed.load(Ordering::Relaxed),
+                executed: l.executed.load(Ordering::Relaxed),
+                queue_full_stalls: l.queue_full_stalls.load(Ordering::Relaxed),
+            })
+            .collect();
+        ServiceStats {
+            requests: self.requests.load(Ordering::Relaxed),
+            engine_calls: self.engine_calls.load(Ordering::Relaxed),
+            admitted: self.admitted.load(Ordering::Relaxed),
+            pooled_calls: self.pooled_calls.load(Ordering::Relaxed),
+            pjrt_calls: 0,
+            batched_calls: 0,
+            errors: self.errors.load(Ordering::Relaxed),
+            queue_full_stalls: lanes.iter().map(|l| l.queue_full_stalls).sum(),
+            drained: self.drained.load(Ordering::Relaxed),
+            lanes,
+        }
+    }
+}
+
+/// One shard's submitter: drain the lane queue in FIFO order, executing
+/// each message on this shard. On the shutdown marker, everything already
+/// queued behind it is *served* (not dropped) before the thread exits —
+/// the old single-router loop broke out of `recv` on shutdown and silently
+/// dropped queued requests, leaving their clients with a disconnected
+/// reply channel.
+fn submitter_loop(router: &HostRouter, shard: usize, rx: mpsc::Receiver<Msg>) {
+    // calibrate the dispatch table before the first request, on a worker
+    // thread so `DotService::start` stays non-blocking (the OnceLock makes
+    // one submitter calibrate while its peers wait)
+    let _ = crate::engine::dispatch();
+    while let Ok(msg) = rx.recv() {
+        if matches!(msg, Msg::Shutdown) {
+            while let Ok(m) = rx.try_recv() {
+                if !matches!(m, Msg::Shutdown) {
+                    router.drained.fetch_add(1, Ordering::Relaxed);
+                    serve_caught(router, shard, m);
+                }
+            }
+            return;
+        }
+        serve_caught(router, shard, msg);
+    }
+}
+
+/// `serve`, but a panic (realistically: a chunk kernel panic that
+/// `collect_partials` re-raises in the caller — here, this submitter)
+/// must not kill the lane: a dead submitter would silently blackhole
+/// every future message routed to its shard (`send_to` swallows
+/// disconnects) while `ServiceStats` stays clean — a partial, invisible
+/// outage. The panicking request's reply sender unwinds with the frame,
+/// so its client sees a disconnect; the failure is counted and the lane
+/// lives on. (The engine's worker pool survives job panics by the same
+/// policy, so the next request finds it healthy.)
+fn serve_caught(router: &HostRouter, shard: usize, msg: Msg) {
+    let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| router.serve(shard, msg)));
+    if r.is_err() {
+        router.errors.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+enum ServiceInner {
+    Host {
+        router: Arc<HostRouter>,
+        submitters: Vec<std::thread::JoinHandle<()>>,
+    },
+    Pjrt {
+        tx: Option<mpsc::Sender<Msg>>,
+        worker: Option<std::thread::JoinHandle<ServiceStats>>,
+    },
 }
 
 /// Handle to a running service.
 pub struct DotService {
-    tx: Option<mpsc::Sender<Msg>>,
-    worker: Option<std::thread::JoinHandle<ServiceStats>>,
+    inner: ServiceInner,
 }
 
-/// Client-side handle for submitting requests.
+#[derive(Clone)]
+enum ClientInner {
+    Host(Arc<HostRouter>),
+    Pjrt(mpsc::Sender<Msg>),
+}
+
+/// Client-side handle for submitting requests. Cloneable and `Send`: on
+/// the Host backend every clone routes directly against the shared router
+/// state, so N client threads submit to N shard lanes concurrently.
 #[derive(Clone)]
 pub struct DotClient {
-    tx: mpsc::Sender<Msg>,
+    inner: ClientInner,
 }
 
 impl DotClient {
-    /// Submit a request; returns the receiver for its response.
+    /// Submit a request; returns the receiver for its response. Fresh
+    /// requests round-robin across the shard lanes; a full lane blocks
+    /// (back-pressure).
     pub fn submit(
         &self,
         id: u64,
@@ -160,9 +467,17 @@ impl DotClient {
     ) -> mpsc::Receiver<DotResponse> {
         let (reply, rx) = mpsc::channel();
         let req = DotRequest { id, variant, a, b, reply, submitted: Instant::now() };
-        // a send error means the service stopped; the caller sees it as a
-        // disconnected receiver
-        let _ = self.tx.send(Msg::Req(req));
+        match &self.inner {
+            ClientInner::Host(r) => {
+                let s = r.route_fresh();
+                r.send_to(s, Msg::Req(req));
+            }
+            // a send error means the service stopped; the caller sees it
+            // as a disconnected receiver
+            ClientInner::Pjrt(tx) => {
+                let _ = tx.send(Msg::Req(req));
+            }
+        }
         rx
     }
 
@@ -190,8 +505,16 @@ impl DotClient {
     /// round-robin placement.
     pub fn admit_near_blocking(&self, data: Vec<f32>, near: Option<u64>) -> Result<u64, String> {
         let (reply, rx) = mpsc::channel();
-        if self.tx.send(Msg::Admit { data, near, reply }).is_err() {
-            return Err("service stopped".into());
+        match &self.inner {
+            ClientInner::Host(r) => {
+                let s = near.and_then(|h| r.shard_of(h)).unwrap_or_else(|| r.route_fresh());
+                r.send_to(s, Msg::Admit { data, reply });
+            }
+            ClientInner::Pjrt(tx) => {
+                if tx.send(Msg::Admit { data, reply }).is_err() {
+                    return Err("service stopped".into());
+                }
+            }
         }
         match rx.recv() {
             Ok(r) => r,
@@ -200,7 +523,10 @@ impl DotClient {
     }
 
     /// Submit a dot over two admitted streams; returns the response
-    /// receiver.
+    /// receiver. Routed to the home shard of `a` (admission locality).
+    /// The operands are resolved here, in the caller's program order —
+    /// see `Msg::ReqPooled` for why that makes `release` safe to call
+    /// right after submitting.
     pub fn submit_pooled(
         &self,
         id: u64,
@@ -209,7 +535,30 @@ impl DotClient {
         b: u64,
     ) -> mpsc::Receiver<DotResponse> {
         let (reply, rx) = mpsc::channel();
-        let _ = self.tx.send(Msg::ReqPooled { id, variant, a, b, reply, submitted: Instant::now() });
+        match &self.inner {
+            ClientInner::Host(r) => {
+                let (sa, sb) = {
+                    let m = r.streams.read().unwrap();
+                    (m.get(&a).cloned(), m.get(&b).cloned())
+                };
+                // an unknown handle still travels a lane so the submitter
+                // reports it as a per-request error, not a silent drop
+                let s = sa.as_ref().map(|h| h.shard).unwrap_or_else(|| r.route_fresh());
+                r.send_to(s, Msg::ReqPooled { id, variant, a, b, sa, sb, reply, submitted: Instant::now() });
+            }
+            ClientInner::Pjrt(tx) => {
+                let _ = tx.send(Msg::ReqPooled {
+                    id,
+                    variant,
+                    a,
+                    b,
+                    sa: None,
+                    sb: None,
+                    reply,
+                    submitted: Instant::now(),
+                });
+            }
+        }
         rx
     }
 
@@ -222,29 +571,40 @@ impl DotClient {
         }
     }
 
-    /// Release an admitted stream (its buffer recycles into the home
-    /// shard's pool). Unknown handles are ignored.
+    /// Release an admitted stream. Takes effect immediately (the entry is
+    /// removed from the stream table on the caller's thread): later dots
+    /// from this client see it gone, while dots already submitted keep
+    /// their resolved operands and finish normally. The buffer recycles
+    /// into the home shard's pool once the last in-flight reference
+    /// drops. Unknown handles are ignored.
     pub fn release(&self, handle: u64) {
-        let _ = self.tx.send(Msg::Release { handle });
+        match &self.inner {
+            ClientInner::Host(r) => {
+                r.streams.write().unwrap().remove(&handle);
+            }
+            ClientInner::Pjrt(tx) => {
+                let _ = tx.send(Msg::Release { handle });
+            }
+        }
     }
 }
 
 impl DotService {
-    /// Start the worker thread for the configured backend.
+    /// Start the configured backend.
     ///
-    /// Host backend: the worker borrows the process-wide sharded engine
-    /// (`ShardedEngine::global()`), so startup is immediate and cannot
-    /// fail.
+    /// Host backend: a router pool over the process-wide sharded engine
+    /// (`ShardedEngine::global()`) — one submitter thread per shard;
+    /// startup is immediate and cannot fail.
     ///
     /// Pjrt backend: PJRT handles are not `Send`, so the `Runtime` must be
     /// constructed *inside* the worker thread; startup errors are relayed
     /// back through a one-shot channel so callers still see them
     /// synchronously.
     pub fn start(config: ServiceConfig) -> anyhow::Result<(Self, DotClient)> {
-        let (tx, rx) = mpsc::channel::<Msg>();
-        let worker = match config.backend {
-            Backend::Host => std::thread::spawn(move || worker_loop_host(rx)),
+        match config.backend {
+            Backend::Host => Ok(Self::start_on(config, ShardedEngine::global())),
             Backend::Pjrt => {
+                let (tx, rx) = mpsc::channel::<Msg>();
                 let (ready_tx, ready_rx) = mpsc::channel::<Result<(), String>>();
                 let worker = std::thread::spawn(move || match Runtime::new() {
                     Ok(rt) => {
@@ -267,30 +627,92 @@ impl DotService {
                         anyhow::bail!("service worker died during startup");
                     }
                 }
-                worker
+                let client = DotClient { inner: ClientInner::Pjrt(tx.clone()) };
+                Ok((
+                    DotService { inner: ServiceInner::Pjrt { tx: Some(tx), worker: Some(worker) } },
+                    client,
+                ))
             }
-        };
-        let client = DotClient { tx: tx.clone() };
-        Ok((DotService { tx: Some(tx), worker: Some(worker) }, client))
+        }
     }
 
-    /// Stop the service and return its statistics.
-    pub fn stop(mut self) -> ServiceStats {
-        if let Some(tx) = self.tx.take() {
-            let _ = tx.send(Msg::Shutdown);
+    /// Start a Host-backend router pool on an explicit engine (tests and
+    /// benches hand in a leaked `ShardedEngine` over a synthetic
+    /// `Topology::fake_even` layout to exercise multi-shard routing on
+    /// single-node hosts). `config.backend` is ignored: this is always the
+    /// host path.
+    pub fn start_on(config: ServiceConfig, engine: &'static ShardedEngine) -> (Self, DotClient) {
+        let depth = config.router_queue_depth.max(1);
+        let shards = engine.shards();
+        let mut queues = Vec::with_capacity(shards);
+        let mut receivers = Vec::with_capacity(shards);
+        for _ in 0..shards {
+            let (tx, rx) = mpsc::sync_channel::<Msg>(depth);
+            queues.push(tx);
+            receivers.push(rx);
         }
-        self.worker.take().map(|w| w.join().unwrap_or_default()).unwrap_or_default()
+        let router = Arc::new(HostRouter {
+            engine,
+            queues,
+            streams: RwLock::new(HashMap::new()),
+            next_handle: AtomicU64::new(1),
+            rr: AtomicUsize::new(0),
+            lanes: (0..shards).map(|_| LaneCounters::default()).collect(),
+            requests: AtomicU64::new(0),
+            engine_calls: AtomicU64::new(0),
+            admitted: AtomicU64::new(0),
+            pooled_calls: AtomicU64::new(0),
+            errors: AtomicU64::new(0),
+            drained: AtomicU64::new(0),
+        });
+        let submitters = receivers
+            .into_iter()
+            .enumerate()
+            .map(|(s, rx)| {
+                let r = Arc::clone(&router);
+                std::thread::Builder::new()
+                    .name(format!("dot-submitter-{s}"))
+                    .spawn(move || submitter_loop(&r, s, rx))
+                    .expect("spawn dot submitter")
+            })
+            .collect();
+        let client = DotClient { inner: ClientInner::Host(Arc::clone(&router)) };
+        (DotService { inner: ServiceInner::Host { router, submitters } }, client)
+    }
+
+    /// Stop the service and return its statistics. Host backend: every
+    /// lane gets a shutdown marker, each submitter serves what is already
+    /// queued (in-flight requests are drained, not dropped), then joins.
+    pub fn stop(mut self) -> ServiceStats {
+        self.shutdown()
+    }
+
+    fn shutdown(&mut self) -> ServiceStats {
+        match &mut self.inner {
+            ServiceInner::Host { router, submitters } => {
+                if !submitters.is_empty() {
+                    for q in &router.queues {
+                        let _ = q.send(Msg::Shutdown);
+                    }
+                    for h in submitters.drain(..) {
+                        let _ = h.join();
+                    }
+                }
+                router.snapshot()
+            }
+            ServiceInner::Pjrt { tx, worker } => {
+                if let Some(tx) = tx.take() {
+                    let _ = tx.send(Msg::Shutdown);
+                }
+                worker.take().map(|w| w.join().unwrap_or_default()).unwrap_or_default()
+            }
+        }
     }
 }
 
 impl Drop for DotService {
     fn drop(&mut self) {
-        if let Some(tx) = self.tx.take() {
-            let _ = tx.send(Msg::Shutdown);
-        }
-        if let Some(w) = self.worker.take() {
-            let _ = w.join();
-        }
+        let _ = self.shutdown();
     }
 }
 
@@ -300,95 +722,6 @@ fn parse_variant(s: &str) -> Result<Variant, String> {
         "naive" => Ok(Variant::Naive),
         other => Err(format!("unknown variant `{other}`")),
     }
-}
-
-/// Host backend: the shard router. Every request runs on the NUMA-sharded
-/// engine — fresh requests round-robin across shards (the engine splits
-/// very large ones across all of them), admitted streams execute on their
-/// home shard. No batching window — the engine parallelizes *within* a
-/// dot, so queueing requests to fuse them would only add latency.
-///
-/// Length mismatches are rejected HERE, before the engine: the engine's
-/// documented policy is debug-assert + truncate (see the engine module's
-/// "Length policy"), so the service is the layer that turns a mismatch
-/// into a client-visible error.
-fn worker_loop_host(rx: mpsc::Receiver<Msg>) -> ServiceStats {
-    let engine = ShardedEngine::global();
-    // calibrate the dispatch table now, not on the first request
-    let _ = crate::engine::dispatch();
-    let mut stats = ServiceStats::default();
-    // admitted streams: handle -> home-shard slice
-    let mut streams: HashMap<u64, HomedSlice<f32>> = HashMap::new();
-    let mut next_handle: u64 = 1;
-    while let Ok(msg) = rx.recv() {
-        match msg {
-            Msg::Shutdown => break,
-            Msg::Req(req) => {
-                stats.requests += 1;
-                let value = if req.a.len() != req.b.len() {
-                    Err(format!("length mismatch {} vs {}", req.a.len(), req.b.len()))
-                } else {
-                    // no per-request heap churn: the engine reads the
-                    // request's own vectors (small dots run on them in
-                    // place; large dots pay one admission copy into the
-                    // target shard's recycled aligned pool buffers)
-                    parse_variant(req.variant).map(|v| {
-                        stats.engine_calls += 1;
-                        engine.dot_f32(v, &req.a, &req.b)
-                    })
-                };
-                if value.is_err() {
-                    stats.errors += 1;
-                }
-                let _ = req.reply.send(DotResponse {
-                    id: req.id,
-                    value,
-                    batch_size: 1,
-                    latency: req.submitted.elapsed(),
-                });
-            }
-            Msg::Admit { data, near, reply } => {
-                let handle = next_handle;
-                next_handle += 1;
-                let homed = match near.and_then(|h| streams.get(&h)) {
-                    Some(neighbor) => engine.admit_to_f32(neighbor.shard, &data),
-                    None => engine.admit_f32(&data),
-                };
-                streams.insert(handle, homed);
-                stats.admitted += 1;
-                let _ = reply.send(Ok(handle));
-            }
-            Msg::ReqPooled { id, variant, a, b, reply, submitted } => {
-                stats.requests += 1;
-                let value = match (streams.get(&a), streams.get(&b)) {
-                    (Some(sa), Some(sb)) if sa.len() == sb.len() => {
-                        parse_variant(variant).map(|v| {
-                            stats.engine_calls += 1;
-                            stats.pooled_calls += 1;
-                            engine.dot_homed_f32(v, sa, sb)
-                        })
-                    }
-                    (Some(sa), Some(sb)) => {
-                        Err(format!("length mismatch {} vs {}", sa.len(), sb.len()))
-                    }
-                    _ => Err(format!("unknown stream handle {}", if streams.contains_key(&a) { b } else { a })),
-                };
-                if value.is_err() {
-                    stats.errors += 1;
-                }
-                let _ = reply.send(DotResponse {
-                    id,
-                    value,
-                    batch_size: 1,
-                    latency: submitted.elapsed(),
-                });
-            }
-            Msg::Release { handle } => {
-                streams.remove(&handle);
-            }
-        }
-    }
-    stats
 }
 
 fn worker_loop_pjrt(
@@ -421,34 +754,58 @@ fn worker_loop_pjrt(
         _ => {}
     };
 
-    while !shutdown {
-        // block for the first request
-        let first = match rx.recv() {
-            Ok(Msg::Req(r)) => r,
-            Ok(Msg::Shutdown) | Err(_) => break,
-            Ok(other) => {
-                reject_pooled(other);
-                continue;
+    loop {
+        // block for the first request; after the shutdown marker, keep
+        // draining whatever is already queued (serving, not dropping it)
+        // and exit once the channel is empty
+        let first = if shutdown {
+            match rx.try_recv() {
+                Ok(Msg::Req(r)) => {
+                    stats.drained += 1;
+                    r
+                }
+                Ok(Msg::Shutdown) => continue,
+                Ok(other) => {
+                    reject_pooled(other);
+                    continue;
+                }
+                Err(_) => break,
+            }
+        } else {
+            match rx.recv() {
+                Ok(Msg::Req(r)) => r,
+                Ok(Msg::Shutdown) => {
+                    shutdown = true;
+                    continue;
+                }
+                Ok(other) => {
+                    reject_pooled(other);
+                    continue;
+                }
+                Err(_) => break,
             }
         };
         let mut queue = vec![first];
-        // batching window: gather more requests
-        let deadline = Instant::now() + cfg.window;
-        while queue.len() < cfg.max_batch {
-            let now = Instant::now();
-            if now >= deadline {
-                break;
-            }
-            match rx.recv_timeout(deadline - now) {
-                Ok(Msg::Req(r)) => queue.push(r),
-                Ok(Msg::Shutdown) => {
-                    // serve what we already accepted, then exit
-                    shutdown = true;
+        if !shutdown {
+            // batching window: gather more requests
+            let deadline = Instant::now() + cfg.window;
+            while queue.len() < cfg.max_batch {
+                let now = Instant::now();
+                if now >= deadline {
                     break;
                 }
-                Ok(other) => reject_pooled(other),
-                Err(mpsc::RecvTimeoutError::Timeout) => break,
-                Err(mpsc::RecvTimeoutError::Disconnected) => break,
+                match rx.recv_timeout(deadline - now) {
+                    Ok(Msg::Req(r)) => queue.push(r),
+                    Ok(Msg::Shutdown) => {
+                        // serve what we already accepted; the outer loop
+                        // then drains the rest of the channel
+                        shutdown = true;
+                        break;
+                    }
+                    Ok(other) => reject_pooled(other),
+                    Err(mpsc::RecvTimeoutError::Timeout) => break,
+                    Err(mpsc::RecvTimeoutError::Disconnected) => break,
+                }
             }
         }
 
@@ -538,7 +895,9 @@ mod tests {
     use super::*;
     use crate::accuracy::exact::exact_dot_f32;
     use crate::accuracy::gen_dot_f32;
+    use crate::engine::{EngineConfig, ShardedConfig, Topology};
     use crate::util::Rng;
+    use std::sync::{Condvar, Mutex};
 
     fn artifacts_present() -> bool {
         // the stub Runtime (no `pjrt` feature) fails closed, so the PJRT
@@ -549,6 +908,59 @@ mod tests {
 
     fn pjrt_config() -> ServiceConfig {
         ServiceConfig { backend: Backend::Pjrt, ..ServiceConfig::default() }
+    }
+
+    /// A private pinned engine for router tests (leaked: submitter threads
+    /// need `'static`, and the process exits with the test binary).
+    fn leak_engine(topo: &Topology, threads: usize) -> &'static ShardedEngine {
+        Box::leak(Box::new(ShardedEngine::from_topology(
+            topo,
+            ShardedConfig {
+                engine: EngineConfig { threads, ..EngineConfig::default() },
+                ..ShardedConfig::default()
+            },
+        )))
+    }
+
+    /// Occupy every worker of `shard` until `open` is called: lets a test
+    /// hold a submitter *inside* a parallel-path dot deterministically.
+    struct Gate(Arc<(Mutex<bool>, Condvar)>);
+
+    impl Gate {
+        fn close(engine: &ShardedEngine, shard: usize) -> Gate {
+            let gate = Arc::new((Mutex::new(false), Condvar::new()));
+            for w in 0..engine.shard(shard).threads() {
+                let g = Arc::clone(&gate);
+                engine.shard(shard).workers().submit_to(
+                    w,
+                    Box::new(move || {
+                        let (m, cv) = &*g;
+                        let mut open = m.lock().unwrap();
+                        while !*open {
+                            open = cv.wait(open).unwrap();
+                        }
+                    }),
+                );
+            }
+            Gate(gate)
+        }
+
+        fn open(&self) {
+            let (m, cv) = &*self.0;
+            *m.lock().unwrap() = true;
+            cv.notify_all();
+        }
+    }
+
+    impl Drop for Gate {
+        /// A test that panics with the gate still closed would otherwise
+        /// deadlock: unwinding drops the `DotService`, whose shutdown
+        /// joins a submitter blocked behind the gate jobs — the failure
+        /// message would be masked by a CI timeout. Opening on drop makes
+        /// every panic path unwind cleanly.
+        fn drop(&mut self) {
+            self.open();
+        }
     }
 
     // ---- Host backend (default): no artifacts needed ----
@@ -585,6 +997,8 @@ mod tests {
         assert_eq!(stats.engine_calls, 3);
         assert_eq!(stats.pjrt_calls, 0);
         assert_eq!(stats.errors, 0);
+        // every fresh request was routed to and executed by some lane
+        assert_eq!(stats.lanes.iter().map(|l| l.executed).sum::<u64>(), 3);
     }
 
     #[test]
@@ -653,6 +1067,181 @@ mod tests {
         assert!(client.dot_pooled_blocking("kahan", ha, hb).is_err());
         let stats = svc.stop();
         assert_eq!(stats.errors, 1);
+    }
+
+    /// Regression for the lane-race the router pool introduced: with the
+    /// pair on *different* shards (plain round-robin admission), a
+    /// strictly sequential `submit_pooled(a, b)` → `release(b)` must
+    /// behave like the old single-router FIFO — the in-flight dot keeps
+    /// its operands, and only *later* submits see the release.
+    #[test]
+    fn release_after_submit_never_invalidates_inflight_cross_shard_dot() {
+        let engine = leak_engine(&Topology::fake_even(2), 1);
+        let (svc, client) = DotService::start_on(ServiceConfig::default(), engine);
+        let mut rng = Rng::new(41);
+        let n = 4096;
+        let av = rng.normal_f32_vec(n);
+        let bv = rng.normal_f32_vec(n);
+        let exact = exact_dot_f32(&av, &bv);
+        let scale: f64 =
+            av.iter().zip(&bv).map(|(x, y)| (x * y).abs() as f64).sum::<f64>().max(1e-30);
+        for round in 0..20 {
+            let ha = client.admit_blocking(av.clone()).unwrap();
+            let hb = client.admit_blocking(bv.clone()).unwrap();
+            let rx = client.submit_pooled(round, "kahan", ha, hb);
+            client.release(hb);
+            client.release(ha);
+            let v = rx
+                .recv()
+                .expect("reply")
+                .value
+                .expect("release-after-submit must not invalidate the in-flight dot")
+                as f64;
+            assert!((v - exact).abs() / scale < 1e-6, "round {round}");
+            // ...while a dot submitted after the release cleanly errors
+            assert!(client.dot_pooled_blocking("kahan", ha, hb).is_err(), "round {round}");
+        }
+        let stats = svc.stop();
+        assert_eq!(stats.admitted, 40);
+        assert_eq!(stats.pooled_calls, 20);
+        assert_eq!(stats.errors, 20);
+        assert_eq!(stats.requests, 40);
+    }
+
+    // ---- router pool: concurrency, back-pressure, shutdown drain ----
+
+    /// Two independent requests must NOT serialize behind one router
+    /// thread: with shard 0's workers gated (its submitter is stuck inside
+    /// a parallel-path dot), a small request routed to shard 1 completes
+    /// while the first is still blocked.
+    #[test]
+    fn independent_requests_do_not_serialize_behind_one_router() {
+        let engine = leak_engine(&Topology::fake_even(2), 2);
+        let (svc, client) = DotService::start_on(ServiceConfig::default(), engine);
+        let gate = Gate::close(engine, 0);
+
+        let mut rng = Rng::new(31);
+        let n = 200_000; // 1.6 MB total: parallel path, blocks on the gate
+        let rx1 = client.submit(1, "kahan", rng.normal_f32_vec(n), rng.normal_f32_vec(n));
+        // fresh requests round-robin: request 2 lands on shard 1
+        let a2 = rng.normal_f32_vec(1000);
+        let b2 = rng.normal_f32_vec(1000);
+        let exact2 = exact_dot_f32(&a2, &b2);
+        let rx2 = client.submit(2, "kahan", a2, b2);
+
+        // shard 1 serves its request while shard 0 is still blocked
+        let resp2 = rx2
+            .recv_timeout(Duration::from_secs(30))
+            .expect("request on the free shard must not queue behind the blocked one");
+        let v2 = resp2.value.expect("value") as f64;
+        assert!((v2 - exact2).abs() < 1e-2 * exact2.abs().max(1.0));
+        assert!(
+            matches!(rx1.try_recv(), Err(mpsc::TryRecvError::Empty)),
+            "gated request cannot have completed"
+        );
+
+        gate.open();
+        assert!(rx1.recv_timeout(Duration::from_secs(30)).expect("gated reply").value.is_ok());
+        let stats = svc.stop();
+        assert_eq!(stats.lanes.len(), 2);
+        assert_eq!(stats.lanes[0].executed, 1, "{stats:?}");
+        assert_eq!(stats.lanes[1].executed, 1, "{stats:?}");
+    }
+
+    /// Bounded lanes: with queue depth 1 and the only shard's workers
+    /// stalled, a burst of requests blocks the producer instead of growing
+    /// the queue, and the stall counter advances.
+    #[test]
+    fn backpressure_blocks_producer_and_counts_stalls() {
+        let engine = leak_engine(&Topology::single_node(), 2);
+        let (svc, client) = DotService::start_on(
+            ServiceConfig { router_queue_depth: 1, ..ServiceConfig::default() },
+            engine,
+        );
+        let gate = Gate::close(engine, 0);
+
+        let accepted = Arc::new(AtomicU64::new(0));
+        let (rx_tx, rx_rx) = mpsc::channel();
+        let producer = {
+            let client = client.clone();
+            let accepted = Arc::clone(&accepted);
+            std::thread::spawn(move || {
+                let mut rng = Rng::new(33);
+                // first request takes the parallel path and blocks on the
+                // gate; the rest are small
+                let sizes = [200_000usize, 64, 64, 64, 64];
+                for (i, n) in sizes.iter().enumerate() {
+                    let rx = client.submit(
+                        i as u64,
+                        "kahan",
+                        rng.normal_f32_vec(*n),
+                        rng.normal_f32_vec(*n),
+                    );
+                    accepted.fetch_add(1, Ordering::SeqCst);
+                    rx_tx.send(rx).unwrap();
+                }
+            })
+        };
+
+        // the producer can hand over at most 2 requests while the gate is
+        // closed: one executing (blocked), one in the depth-1 queue; the
+        // third send blocks. Wait for that steady state, then verify it
+        // holds — the queue must not keep growing.
+        let t0 = Instant::now();
+        while accepted.load(Ordering::SeqCst) < 2 && t0.elapsed() < Duration::from_secs(30) {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        assert_eq!(accepted.load(Ordering::SeqCst), 2);
+        std::thread::sleep(Duration::from_millis(100));
+        assert_eq!(
+            accepted.load(Ordering::SeqCst),
+            2,
+            "producer must be blocked by back-pressure, not queueing unboundedly"
+        );
+
+        gate.open();
+        producer.join().unwrap();
+        for rx in rx_rx.iter() {
+            assert!(rx.recv().expect("reply").value.is_ok());
+        }
+        let stats = svc.stop();
+        assert_eq!(stats.requests, 5);
+        assert_eq!(stats.errors, 0);
+        assert!(
+            stats.queue_full_stalls >= 1,
+            "blocked sends must be visible in stats: {stats:?}"
+        );
+    }
+
+    /// Regression (shutdown-drop bug): requests queued behind the shutdown
+    /// marker must be served during the drain, not dropped with a
+    /// disconnected reply channel.
+    #[test]
+    fn shutdown_drains_queued_requests_instead_of_dropping() {
+        let engine = leak_engine(&Topology::single_node(), 2);
+        let (svc, client) =
+            DotService::start_on(ServiceConfig { router_queue_depth: 8, ..Default::default() }, engine);
+        let gate = Gate::close(engine, 0);
+
+        let mut rng = Rng::new(37);
+        let n = 200_000;
+        // the submitter picks this up and blocks inside the gated engine
+        let rx1 = client.submit(1, "kahan", rng.normal_f32_vec(n), rng.normal_f32_vec(n));
+        // inject the shutdown marker *ahead* of two more requests: without
+        // the drain, the submitter would exit at the marker and drop them
+        let ServiceInner::Host { router, .. } = &svc.inner else { unreachable!() };
+        router.queues[0].send(Msg::Shutdown).unwrap();
+        let rx2 = client.submit(2, "kahan", vec![1.0; 64], vec![2.0; 64]);
+        let rx3 = client.submit(3, "kahan", vec![1.0; 64], vec![3.0; 64]);
+
+        gate.open();
+        let stats = svc.stop();
+        assert!(rx1.recv().expect("pre-shutdown reply").value.is_ok());
+        assert_eq!(rx2.recv().expect("drained reply 2").value.expect("value"), 128.0);
+        assert_eq!(rx3.recv().expect("drained reply 3").value.expect("value"), 192.0);
+        assert_eq!(stats.requests, 3);
+        assert_eq!(stats.drained, 2, "{stats:?}");
+        assert_eq!(stats.errors, 0);
     }
 
     // ---- Pjrt backend: skipped without artifacts ----

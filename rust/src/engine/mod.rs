@@ -7,9 +7,18 @@
 //! across requests, so the steady-state cost of a served dot is the
 //! streaming cost the paper models and nothing else.
 //!
-//! # Architecture: shard → pool → partition → kernel → compensated merge
+//! # Architecture: route → shard → pool → partition → kernel → merge
 //!
 //! ```text
+//!   clients (any thread)
+//!   ──► DotClient routes: pooled → home-shard lane, fresh → round-robin
+//!        │  bounded per-shard queues (back-pressure: a full lane blocks
+//!        │  the sender; stalls counted in ServiceStats)
+//!        ▼
+//!   submitter threads, one per shard (coordinator::service router pool —
+//!   independent requests execute concurrently on different shards)
+//!        │
+//!        ▼
 //!                  ┌──────────────────────────────────────────────────┐
 //!   request(a, b)  │ ShardedEngine (one shard per NUMA domain;        │
 //!   ─────────────► │ single-node hosts degrade to exactly one shard)  │
@@ -77,8 +86,11 @@
 //!
 //! # Who uses it
 //!
-//! * `coordinator::service` executes host-backend requests here (the
-//!   default backend; PJRT remains available behind `Backend::Pjrt`).
+//! * `coordinator::service` executes host-backend requests here through
+//!   its per-shard submitter pool (the default backend; PJRT remains
+//!   available behind `Backend::Pjrt`). Each submitter calls its own
+//!   shard's engine directly; only above-`split_min_bytes` dots go
+//!   through the sharded split path.
 //! * `bench::threads::scaling_curve` reuses one [`WorkerPool`] across all
 //!   thread counts instead of re-spawning per measurement.
 //! * `benches/bench_engine.rs` records the engine-vs-spawn-per-call

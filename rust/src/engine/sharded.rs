@@ -15,6 +15,10 @@
 //!   them and always execute there (data is already local); pairs that
 //!   will be dotted together should co-locate via `admit_to_*`;
 //! * **fresh requests** round-robin across shards;
+//! * the serving tier (`coordinator::service`) layers a router *pool* on
+//!   top: one submitter thread per shard, fed by a bounded queue, calling
+//!   straight into that shard's engine — request-level parallelism across
+//!   shards without a central router thread;
 //! * **very large dots** (≥ `split_min_bytes`) split across *all* shards:
 //!   the request is cut once into globally balanced cache-line-aligned
 //!   chunks, contiguous chunk blocks go to each shard weighted by its
@@ -38,7 +42,7 @@
 use super::parallel::{chunk_ranges, collect_partials, panic_message};
 use super::pool::{PoolStats, PooledSlice};
 use super::topology::{topology_cached, Topology};
-use super::{kernel_for_f32, kernel_for_f64, DotEngine, EngineConfig};
+use super::{kernel_for_f32, kernel_for_f64, DotEngine, EngineConfig, EngineStats};
 use crate::bench::kernels::{compensated_fold_f32, compensated_fold_f64};
 use crate::isa::Variant;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
@@ -114,13 +118,29 @@ pub struct ShardedEngine {
 }
 
 macro_rules! sharded_dot_impl {
-    ($dot:ident, $dot_homed:ident, $admit:ident, $admit_to:ident, $split:ident,
+    ($dot:ident, $dot_on:ident, $dot_homed:ident, $admit:ident, $admit_to:ident, $split:ident,
      $engine_dot:ident, $engine_dot_pooled:ident, $engine_admit:ident, $kernel_for:ident,
      $fold:ident, $ty:ty, $elems_per_cl:expr) => {
         /// Serve one dot: single-shard hosts and sub-split sizes route to
         /// one shard round-robin; very large dots split across all shards.
         /// Length policy as for [`DotEngine`] (see the engine module doc).
+        /// (The round-robin cursor also advances on split-path dots, which
+        /// ignore it — harmless, and it keeps every threshold decision in
+        /// the preferred-shard method below.)
         pub fn $dot(&self, variant: Variant, a: &[$ty], b: &[$ty]) -> $ty {
+            self.$dot_on(self.route(), variant, a, b)
+        }
+
+        /// Like the round-robin dot, but with the sub-split shard chosen
+        /// by the caller (clamped) — the service's router lanes use this
+        /// so the shard decided at routing time and the shard that
+        /// executes are the same one, while the split-vs-route threshold
+        /// stays defined HERE, in one layer. Very large dots still split
+        /// across every shard: on a single shard with default `chunks`
+        /// the split path degenerates to exactly the per-engine chunked
+        /// reduction (same geometry, same fold, same bits), so 1-vs-N
+        /// sharding stays bit-identical.
+        pub fn $dot_on(&self, shard: usize, variant: Variant, a: &[$ty], b: &[$ty]) -> $ty {
             debug_assert_eq!(
                 a.len(),
                 b.len(),
@@ -129,13 +149,9 @@ macro_rules! sharded_dot_impl {
             let n = a.len().min(b.len());
             let total_bytes = (2 * n * std::mem::size_of::<$ty>()) as u64;
             if (total_bytes as usize) < self.cfg.split_min_bytes {
-                let s = self.route();
+                let s = shard % self.shards.len();
                 return self.shards[s].$engine_dot(variant, &a[..n], &b[..n]);
             }
-            // above the threshold every host takes the split path — on a
-            // single shard with default `chunks` it degenerates to exactly
-            // the per-engine chunked reduction (same geometry, same fold,
-            // same bits), so 1-vs-N sharding stays bit-identical
             self.$split(variant, &a[..n], &b[..n])
         }
 
@@ -292,6 +308,14 @@ impl ShardedEngine {
         self.next.fetch_add(1, Ordering::Relaxed) % self.shards.len()
     }
 
+    /// Per-shard engine counters, indexed by shard — the observability
+    /// hook behind `repro engine-info` and the service-concurrency tests
+    /// (which assert that concurrently submitted requests actually landed
+    /// on more than one shard).
+    pub fn stats_per_shard(&self) -> Vec<EngineStats> {
+        self.shards.iter().map(|s| s.stats()).collect()
+    }
+
     pub fn stats(&self) -> ShardedStats {
         let mut st = ShardedStats {
             shards: self.shards.len(),
@@ -313,6 +337,7 @@ impl ShardedEngine {
 
     sharded_dot_impl!(
         dot_f32,
+        dot_on_f32,
         dot_homed_f32,
         admit_f32,
         admit_to_f32,
@@ -327,6 +352,7 @@ impl ShardedEngine {
     );
     sharded_dot_impl!(
         dot_f64,
+        dot_on_f64,
         dot_homed_f64,
         admit_f64,
         admit_to_f64,

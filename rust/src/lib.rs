@@ -23,7 +23,8 @@
 //!   Ogita–Rump–Oishi ill-conditioned generator;
 //! * [`runtime`] — PJRT execution of the AOT-lowered JAX/Pallas artifacts;
 //! * [`coordinator`] — experiment registry, reports, validation against the
-//!   paper's published numbers, and a batched-dot service.
+//!   paper's published numbers, and the concurrent dot service (per-shard
+//!   router pool with bounded, back-pressured queues).
 
 pub mod accuracy;
 pub mod bench;

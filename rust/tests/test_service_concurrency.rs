@@ -1,0 +1,358 @@
+//! Serving-tier concurrency: the router pool must execute independent
+//! requests on different shards in parallel, keep bit-identity between
+//! concurrent and sequential submission, keep the sequential Kahan error
+//! bound on the pooled and split paths under concurrent load, and shut
+//! down gracefully (no hangs, no dropped-but-accepted requests).
+//!
+//! Every test runs the service on a leaked private `ShardedEngine` over a
+//! synthetic `Topology::fake_even` layout, so multi-shard routing is
+//! exercised even on the single-NUMA-node CI runner.
+
+use kahan_ecm::accuracy::exact::{exact_dot_f32, exact_dot_f64};
+use kahan_ecm::accuracy::{gen_dot_f32, gen_dot_f64};
+use kahan_ecm::coordinator::{DotService, ServiceConfig};
+use kahan_ecm::engine::{EngineConfig, ShardedConfig, ShardedEngine, Topology};
+use kahan_ecm::isa::Variant;
+use kahan_ecm::prop_assert;
+use kahan_ecm::util::{prop, Rng};
+use std::sync::Barrier;
+use std::time::Duration;
+
+/// A private engine for one test: submitter threads need `'static`, and
+/// the leak dies with the test process.
+fn leak_engine(topo: &Topology, threads: usize, split_min_bytes: usize) -> &'static ShardedEngine {
+    Box::leak(Box::new(ShardedEngine::from_topology(
+        topo,
+        ShardedConfig {
+            engine: EngineConfig { threads, ..EngineConfig::default() },
+            split_min_bytes,
+            chunks: 0,
+        },
+    )))
+}
+
+fn absdot_f32(a: &[f32], b: &[f32]) -> f64 {
+    a.iter().zip(b).map(|(x, y)| (*x as f64 * *y as f64).abs()).sum::<f64>().max(1e-30)
+}
+
+/// Sequential-Kahan-style bound with merge slack (see test_engine.rs).
+fn f32_bound(absdot: f64) -> f64 {
+    64.0 * (f32::EPSILON as f64 / 2.0) * absdot
+}
+
+fn f64_bound(absdot: f64) -> f64 {
+    64.0 * (f64::EPSILON / 2.0) * absdot.max(1e-300)
+}
+
+/// Deterministic per-request workload: the concurrent and the sequential
+/// phase must regenerate the exact same inputs.
+fn case_inputs(t: usize, k: usize) -> (&'static str, Vec<f32>, Vec<f32>) {
+    let mut rng = Rng::new(0xC0FFEE + (t as u64) * 1000 + k as u64);
+    let n = 512 + 256 * ((t + k) % 5);
+    let variant = if k % 3 == 0 { "naive" } else { "kahan" };
+    (variant, rng.normal_f32_vec(n), rng.normal_f32_vec(n))
+}
+
+/// Barrier-started threads hammer the service with small pooled-size dots;
+/// all must complete, land on more than one shard, and agree bit-for-bit
+/// with the same dots submitted sequentially afterwards.
+#[test]
+fn concurrent_small_dots_use_multiple_shards_and_match_sequential() {
+    let engine = leak_engine(&Topology::fake_even(2), 1, 4 << 20);
+    let (svc, client) = DotService::start_on(ServiceConfig::default(), engine);
+
+    const THREADS: usize = 4;
+    const PER_THREAD: usize = 8;
+    let barrier = Barrier::new(THREADS);
+    let concurrent: Vec<Vec<u32>> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..THREADS)
+            .map(|t| {
+                let client = client.clone();
+                let barrier = &barrier;
+                s.spawn(move || {
+                    barrier.wait();
+                    (0..PER_THREAD)
+                        .map(|k| {
+                            let (variant, a, b) = case_inputs(t, k);
+                            let rx = client.submit((t * PER_THREAD + k) as u64, variant, a, b);
+                            let resp = rx
+                                .recv_timeout(Duration::from_secs(60))
+                                .expect("response under concurrency");
+                            resp.value.expect("value").to_bits()
+                        })
+                        .collect::<Vec<u32>>()
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("client thread")).collect()
+    });
+
+    // sequential reference over the SAME service and inputs
+    for (t, bits) in concurrent.iter().enumerate() {
+        for (k, &got) in bits.iter().enumerate() {
+            let (variant, a, b) = case_inputs(t, k);
+            let serial = client.dot_blocking(variant, a, b).expect("serial value");
+            assert_eq!(
+                got,
+                serial.to_bits(),
+                "thread {t} request {k}: concurrent submission changed the bits"
+            );
+        }
+    }
+
+    let stats = svc.stop();
+    let total = (2 * THREADS * PER_THREAD) as u64;
+    assert_eq!(stats.requests, total, "{stats:?}");
+    assert_eq!(stats.errors, 0, "{stats:?}");
+    assert_eq!(stats.lanes.len(), 2);
+    let busy_lanes = stats.lanes.iter().filter(|l| l.executed > 0).count();
+    assert!(busy_lanes > 1, "work must land on more than one shard: {stats:?}");
+    assert_eq!(stats.lanes.iter().map(|l| l.executed).sum::<u64>(), total);
+    // the engine's own per-shard counters agree that both shards computed
+    let per_shard = engine.stats_per_shard();
+    assert!(
+        per_shard.iter().filter(|s| s.requests > 0).count() > 1,
+        "engine-side per-shard stats must show multi-shard execution: {per_shard:?}"
+    );
+}
+
+/// Shutdown under load: submitting threads race `stop()`. Every submitted
+/// request must resolve — served with a correct value or a clean
+/// disconnect — and every request the service accepted must have been
+/// replied to (the drain guarantee), with no hang either way.
+#[test]
+fn shutdown_under_load_neither_hangs_nor_drops_accepted_requests() {
+    let engine = leak_engine(&Topology::fake_even(2), 1, 4 << 20);
+    let (svc, client) = DotService::start_on(
+        ServiceConfig { router_queue_depth: 4, ..ServiceConfig::default() },
+        engine,
+    );
+
+    const THREADS: usize = 4;
+    const PER_THREAD: usize = 50;
+    let barrier = Barrier::new(THREADS + 1);
+    let (served, stopped, stats) = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..THREADS)
+            .map(|t| {
+                let client = client.clone();
+                let barrier = &barrier;
+                s.spawn(move || {
+                    barrier.wait();
+                    let mut rng = Rng::new(4000 + t as u64);
+                    let rxs: Vec<_> = (0..PER_THREAD)
+                        .map(|k| {
+                            let n = 256;
+                            client.submit(
+                                (t * PER_THREAD + k) as u64,
+                                "kahan",
+                                rng.normal_f32_vec(n),
+                                rng.normal_f32_vec(n),
+                            )
+                        })
+                        .collect();
+                    let mut served = 0u64;
+                    let mut stopped = 0u64;
+                    for rx in rxs {
+                        // a timeout here IS the hang the test exists to catch
+                        match rx.recv_timeout(Duration::from_secs(60)) {
+                            Ok(resp) => {
+                                resp.value.expect("served request must carry a value");
+                                served += 1;
+                            }
+                            Err(mpsc_err) => {
+                                assert!(
+                                    matches!(
+                                        mpsc_err,
+                                        std::sync::mpsc::RecvTimeoutError::Disconnected
+                                    ),
+                                    "request neither served nor cleanly rejected"
+                                );
+                                stopped += 1;
+                            }
+                        }
+                    }
+                    (served, stopped)
+                })
+            })
+            .collect();
+        barrier.wait();
+        // stop while the producers are mid-burst
+        std::thread::sleep(Duration::from_millis(2));
+        let stats = svc.stop();
+        let mut served = 0u64;
+        let mut stopped = 0u64;
+        for h in handles {
+            let (sv, st) = h.join().expect("producer thread");
+            served += sv;
+            stopped += st;
+        }
+        (served, stopped, stats)
+    });
+
+    assert_eq!(served + stopped, (THREADS * PER_THREAD) as u64);
+    // drain guarantee: everything the service accepted was served and
+    // replied to — an accepted-but-dropped request would leave
+    // requests > served (its reply channel died without a response)
+    assert_eq!(stats.requests, served, "{stats:?} served={served} stopped={stopped}");
+    assert_eq!(stats.errors, 0, "{stats:?}");
+}
+
+/// Property: pooled-path dots fired concurrently from N threads are
+/// bit-identical to the same dots submitted serially, and stay inside the
+/// sequential Kahan bound — Ogita–Rump–Oishi ill-conditioned f32 inputs,
+/// where a single lost or reordered partial would blow the bound by
+/// orders of magnitude.
+#[test]
+fn prop_pooled_f32_concurrent_bit_identical_to_serial() {
+    let engine = leak_engine(&Topology::fake_even(2), 2, 4 << 20);
+    let (svc, client) = DotService::start_on(ServiceConfig::default(), engine);
+
+    prop::check("pooled-concurrent-f32", 6, |rng| {
+        // spans the inline and the chunked-parallel home-shard path
+        let n = 4096 + rng.below(60_000) as usize;
+        let (a, b, exact, _cond) = gen_dot_f32(n, 1e6, rng);
+        let absdot = absdot_f32(&a, &b);
+        let ha = client.admit_blocking(a)?;
+        let hb = client.admit_near_blocking(b, Some(ha))?;
+
+        let serial = client.dot_pooled_blocking("kahan", ha, hb)?;
+        prop_assert!(
+            (serial as f64 - exact).abs() <= f32_bound(absdot),
+            "n={n}: serial pooled dot broke the Kahan bound: {serial} vs {exact}"
+        );
+
+        let bits: Vec<u32> = std::thread::scope(|s| {
+            let handles: Vec<_> = (0..4)
+                .map(|_| {
+                    let client = client.clone();
+                    s.spawn(move || {
+                        (0..2)
+                            .map(|_| {
+                                client
+                                    .dot_pooled_blocking("kahan", ha, hb)
+                                    .expect("pooled dot")
+                                    .to_bits()
+                            })
+                            .collect::<Vec<u32>>()
+                    })
+                })
+                .collect();
+            handles.into_iter().flat_map(|h| h.join().expect("thread")).collect()
+        });
+        for got in bits {
+            prop_assert!(
+                got == serial.to_bits(),
+                "n={n}: concurrent pooled dot changed bits: {got:#x} vs {:#x}",
+                serial.to_bits()
+            );
+        }
+        client.release(ha);
+        client.release(hb);
+        Ok(())
+    });
+    let stats = svc.stop();
+    assert_eq!(stats.errors, 0, "{stats:?}");
+}
+
+/// The f64 flavour of the same property, through the engine's pooled
+/// (homed) path that the service wraps: concurrent `dot_homed_f64` calls
+/// are bit-identical to a serial call and inside the Kahan bound on
+/// ill-conditioned inputs.
+#[test]
+fn prop_pooled_f64_concurrent_bit_identical_to_serial() {
+    let engine = leak_engine(&Topology::fake_even(2), 2, 4 << 20);
+
+    prop::check("pooled-concurrent-f64", 5, |rng| {
+        let n = 2048 + rng.below(30_000) as usize;
+        let (a, b, exact, _cond) = gen_dot_f64(n, 1e10, rng);
+        let absdot: f64 = a.iter().zip(&b).map(|(x, y)| (x * y).abs()).sum();
+        let ha = engine.admit_f64(&a);
+        let hb = engine.admit_to_f64(ha.shard, &b);
+
+        let serial = engine.dot_homed_f64(Variant::Kahan, &ha, &hb);
+        prop_assert!(
+            (serial - exact).abs() <= f64_bound(absdot),
+            "n={n}: serial homed dot broke the Kahan bound: {serial} vs {exact}"
+        );
+        let exact_check = exact_dot_f64(&a, &b);
+        prop_assert!(exact_check == exact, "generator/exact mismatch");
+
+        let bits: Vec<u64> = std::thread::scope(|s| {
+            let handles: Vec<_> = (0..4)
+                .map(|_| {
+                    let (ha, hb) = (ha.clone(), hb.clone());
+                    s.spawn(move || {
+                        engine.dot_homed_f64(Variant::Kahan, &ha, &hb).to_bits()
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().expect("thread")).collect()
+        });
+        for got in bits {
+            prop_assert!(
+                got == serial.to_bits(),
+                "n={n}: concurrent homed dot changed bits"
+            );
+        }
+        Ok(())
+    });
+}
+
+/// The split (cross-shard fan-out) path under concurrent submission:
+/// results stay bit-identical to a 1-shard engine with the same chunk
+/// geometry, and inside the Kahan bound — the acceptance criterion that
+/// sharding plus request-level parallelism changes no numerics.
+#[test]
+fn split_path_bits_and_bound_survive_concurrent_submission() {
+    // same total worker count (=> same global chunk geometry) on both
+    let two = leak_engine(&Topology::fake_even(2), 1, 64 << 10);
+    let one = leak_engine(&Topology::single_node(), 2, 64 << 10);
+    let (svc2, client2) = DotService::start_on(ServiceConfig::default(), two);
+    let (svc1, client1) = DotService::start_on(ServiceConfig::default(), one);
+
+    let mut rng = Rng::new(61);
+    let n = 100_000; // 800 KB total >> 64 KB split threshold on both
+    let a = rng.normal_f32_vec(n);
+    let b = rng.normal_f32_vec(n);
+    let exact = exact_dot_f32(&a, &b);
+    let absdot = absdot_f32(&a, &b);
+
+    let serial2 = client2.dot_blocking("kahan", a.clone(), b.clone()).expect("2-shard dot");
+    let serial1 = client1.dot_blocking("kahan", a.clone(), b.clone()).expect("1-shard dot");
+    assert_eq!(
+        serial2.to_bits(),
+        serial1.to_bits(),
+        "1-vs-2-shard split must be bit-identical"
+    );
+    assert!(
+        (serial2 as f64 - exact).abs() <= f32_bound(absdot),
+        "split dot broke the Kahan bound: {serial2} vs {exact}"
+    );
+
+    let bits: Vec<u32> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..4)
+            .map(|_| {
+                let client = client2.clone();
+                let (a, b) = (a.clone(), b.clone());
+                s.spawn(move || {
+                    (0..3)
+                        .map(|_| {
+                            client
+                                .dot_blocking("kahan", a.clone(), b.clone())
+                                .expect("concurrent split dot")
+                                .to_bits()
+                        })
+                        .collect::<Vec<u32>>()
+                })
+            })
+            .collect();
+        handles.into_iter().flat_map(|h| h.join().expect("thread")).collect()
+    });
+    for got in bits {
+        assert_eq!(got, serial2.to_bits(), "concurrent split submission changed bits");
+    }
+
+    assert!(two.stats().split_dots >= 13, "{:?}", two.stats());
+    svc2.stop();
+    svc1.stop();
+}
