@@ -148,6 +148,13 @@ fn main() -> anyhow::Result<()> {
                 );
             }
             println!("queue-full stalls  : {}", stats_out.queue_full_stalls);
+            println!(
+                "lane batching      : {} batches fused {} of {} requests ({} admit batches)",
+                stats_out.batches,
+                stats_out.batched_requests,
+                stats_out.requests,
+                stats_out.admit_batches
+            );
         }
         Backend::Pjrt => {
             println!("mean batch size    : {:.2}", stats::mean(&batch_sizes));
@@ -164,9 +171,14 @@ fn main() -> anyhow::Result<()> {
     assert!(max_rel_err < 1e-5, "accuracy must hold end-to-end");
     match backend {
         Backend::Host => {
+            // a batch of k requests is one engine call: singles
+            // (engine_calls - batches) plus batched requests must account
+            // for every served request
             assert_eq!(
-                stats_out.engine_calls as usize, served,
-                "every request must execute on the engine"
+                (stats_out.engine_calls - stats_out.batches + stats_out.batched_requests)
+                    as usize,
+                served,
+                "every request must execute on the engine (as a single or inside a batch)"
             );
             assert_eq!(
                 stats_out.lanes.iter().map(|l| l.executed).sum::<u64>() as usize,

@@ -1,12 +1,25 @@
 //! AVX2 (256-bit) host kernels: 8 f32 / 4 f64 lanes, four accumulator
 //! slots, plus the §4 FMA variant (compensated adds issued as FMAs with a
 //! unit multiplicand so both FMA pipes participate).
+//!
+//! Every public entry dispatches on pointer alignment at the call site:
+//! pooled-path buffers start on 64-byte boundaries (two whole ymm), so
+//! admitted streams take `_mm256_load_*`; arbitrary caller slices fall
+//! back to `loadu`. Aligned and unaligned loads read identical values, so
+//! the dispatch never changes results, only the load µops.
 
-use super::{compensated_fold_f32, compensated_fold_f64};
+use super::{both_aligned, compensated_fold_f32, compensated_fold_f64};
+
+/// ymm width in bytes — the alignment the `load` (vs `loadu`) forms need.
+const YMM_ALIGN: usize = 32;
 
 pub fn naive_f32(a: &[f32], b: &[f32]) -> f32 {
     if is_x86_feature_detected!("avx2") {
-        unsafe { naive_f32_impl(a, b) }
+        if both_aligned(a, b, YMM_ALIGN) {
+            unsafe { naive_f32_al(a, b) }
+        } else {
+            unsafe { naive_f32_impl(a, b) }
+        }
     } else {
         super::scalar::naive_f32(a, b)
     }
@@ -14,7 +27,11 @@ pub fn naive_f32(a: &[f32], b: &[f32]) -> f32 {
 
 pub fn naive_f64(a: &[f64], b: &[f64]) -> f64 {
     if is_x86_feature_detected!("avx2") {
-        unsafe { naive_f64_impl(a, b) }
+        if both_aligned(a, b, YMM_ALIGN) {
+            unsafe { naive_f64_al(a, b) }
+        } else {
+            unsafe { naive_f64_impl(a, b) }
+        }
     } else {
         super::scalar::naive_f64(a, b)
     }
@@ -22,7 +39,11 @@ pub fn naive_f64(a: &[f64], b: &[f64]) -> f64 {
 
 pub fn kahan_f32(a: &[f32], b: &[f32]) -> f32 {
     if is_x86_feature_detected!("avx2") {
-        unsafe { kahan_f32_impl(a, b) }
+        if both_aligned(a, b, YMM_ALIGN) {
+            unsafe { kahan_f32_al(a, b) }
+        } else {
+            unsafe { kahan_f32_impl(a, b) }
+        }
     } else {
         super::sse::kahan_f32(a, b)
     }
@@ -30,7 +51,11 @@ pub fn kahan_f32(a: &[f32], b: &[f32]) -> f32 {
 
 pub fn kahan_f64(a: &[f64], b: &[f64]) -> f64 {
     if is_x86_feature_detected!("avx2") {
-        unsafe { kahan_f64_impl(a, b) }
+        if both_aligned(a, b, YMM_ALIGN) {
+            unsafe { kahan_f64_al(a, b) }
+        } else {
+            unsafe { kahan_f64_impl(a, b) }
+        }
     } else {
         super::sse::kahan_f64(a, b)
     }
@@ -38,7 +63,11 @@ pub fn kahan_f64(a: &[f64], b: &[f64]) -> f64 {
 
 pub fn kahan_fma_f32(a: &[f32], b: &[f32]) -> f32 {
     if is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma") {
-        unsafe { kahan_fma_f32_impl(a, b) }
+        if both_aligned(a, b, YMM_ALIGN) {
+            unsafe { kahan_fma_f32_al(a, b) }
+        } else {
+            unsafe { kahan_fma_f32_impl(a, b) }
+        }
     } else {
         kahan_f32(a, b)
     }
@@ -46,68 +75,93 @@ pub fn kahan_fma_f32(a: &[f32], b: &[f32]) -> f32 {
 
 pub fn kahan_fma_f64(a: &[f64], b: &[f64]) -> f64 {
     if is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma") {
-        unsafe { kahan_fma_f64_impl(a, b) }
+        if both_aligned(a, b, YMM_ALIGN) {
+            unsafe { kahan_fma_f64_al(a, b) }
+        } else {
+            unsafe { kahan_fma_f64_impl(a, b) }
+        }
     } else {
         kahan_f64(a, b)
     }
 }
 
+/// Four-slot naive body; `$load` selects `loadu` vs aligned `load`.
+macro_rules! naive_avx_body {
+    ($a:ident, $b:ident, $elem:ty, $lanes:expr, $load:ident, $mul:ident, $add:ident,
+     $zero:ident, $store:ident) => {{
+        use core::arch::x86_64::*;
+        let n = $a.len().min($b.len());
+        let mut s0 = $zero();
+        let mut s1 = $zero();
+        let mut s2 = $zero();
+        let mut s3 = $zero();
+        let mut i = 0usize;
+        while i + 4 * $lanes <= n {
+            s0 = $add(s0, $mul($load($a.as_ptr().add(i)), $load($b.as_ptr().add(i))));
+            s1 = $add(
+                s1,
+                $mul($load($a.as_ptr().add(i + $lanes)), $load($b.as_ptr().add(i + $lanes))),
+            );
+            s2 = $add(
+                s2,
+                $mul(
+                    $load($a.as_ptr().add(i + 2 * $lanes)),
+                    $load($b.as_ptr().add(i + 2 * $lanes)),
+                ),
+            );
+            s3 = $add(
+                s3,
+                $mul(
+                    $load($a.as_ptr().add(i + 3 * $lanes)),
+                    $load($b.as_ptr().add(i + 3 * $lanes)),
+                ),
+            );
+            i += 4 * $lanes;
+        }
+        let mut lanes = [0.0 as $elem; 4 * $lanes];
+        $store(lanes.as_mut_ptr(), s0);
+        $store(lanes.as_mut_ptr().add($lanes), s1);
+        $store(lanes.as_mut_ptr().add(2 * $lanes), s2);
+        $store(lanes.as_mut_ptr().add(3 * $lanes), s3);
+        let mut s: $elem = lanes.iter().sum();
+        while i < n {
+            s += $a[i] * $b[i];
+            i += 1;
+        }
+        s
+    }};
+}
+
 #[target_feature(enable = "avx2")]
 unsafe fn naive_f32_impl(a: &[f32], b: &[f32]) -> f32 {
-    use core::arch::x86_64::*;
-    let n = a.len().min(b.len());
-    let mut s0 = _mm256_setzero_ps();
-    let mut s1 = _mm256_setzero_ps();
-    let mut s2 = _mm256_setzero_ps();
-    let mut s3 = _mm256_setzero_ps();
-    let mut i = 0usize;
-    while i + 32 <= n {
-        s0 = _mm256_add_ps(s0, _mm256_mul_ps(_mm256_loadu_ps(a.as_ptr().add(i)), _mm256_loadu_ps(b.as_ptr().add(i))));
-        s1 = _mm256_add_ps(s1, _mm256_mul_ps(_mm256_loadu_ps(a.as_ptr().add(i + 8)), _mm256_loadu_ps(b.as_ptr().add(i + 8))));
-        s2 = _mm256_add_ps(s2, _mm256_mul_ps(_mm256_loadu_ps(a.as_ptr().add(i + 16)), _mm256_loadu_ps(b.as_ptr().add(i + 16))));
-        s3 = _mm256_add_ps(s3, _mm256_mul_ps(_mm256_loadu_ps(a.as_ptr().add(i + 24)), _mm256_loadu_ps(b.as_ptr().add(i + 24))));
-        i += 32;
-    }
-    let mut lanes = [0.0f32; 32];
-    _mm256_storeu_ps(lanes.as_mut_ptr(), s0);
-    _mm256_storeu_ps(lanes.as_mut_ptr().add(8), s1);
-    _mm256_storeu_ps(lanes.as_mut_ptr().add(16), s2);
-    _mm256_storeu_ps(lanes.as_mut_ptr().add(24), s3);
-    let mut s: f32 = lanes.iter().sum();
-    while i < n {
-        s += a[i] * b[i];
-        i += 1;
-    }
-    s
+    naive_avx_body!(
+        a, b, f32, 8, _mm256_loadu_ps, _mm256_mul_ps, _mm256_add_ps, _mm256_setzero_ps,
+        _mm256_storeu_ps
+    )
+}
+
+#[target_feature(enable = "avx2")]
+unsafe fn naive_f32_al(a: &[f32], b: &[f32]) -> f32 {
+    naive_avx_body!(
+        a, b, f32, 8, _mm256_load_ps, _mm256_mul_ps, _mm256_add_ps, _mm256_setzero_ps,
+        _mm256_storeu_ps
+    )
 }
 
 #[target_feature(enable = "avx2")]
 unsafe fn naive_f64_impl(a: &[f64], b: &[f64]) -> f64 {
-    use core::arch::x86_64::*;
-    let n = a.len().min(b.len());
-    let mut s0 = _mm256_setzero_pd();
-    let mut s1 = _mm256_setzero_pd();
-    let mut s2 = _mm256_setzero_pd();
-    let mut s3 = _mm256_setzero_pd();
-    let mut i = 0usize;
-    while i + 16 <= n {
-        s0 = _mm256_add_pd(s0, _mm256_mul_pd(_mm256_loadu_pd(a.as_ptr().add(i)), _mm256_loadu_pd(b.as_ptr().add(i))));
-        s1 = _mm256_add_pd(s1, _mm256_mul_pd(_mm256_loadu_pd(a.as_ptr().add(i + 4)), _mm256_loadu_pd(b.as_ptr().add(i + 4))));
-        s2 = _mm256_add_pd(s2, _mm256_mul_pd(_mm256_loadu_pd(a.as_ptr().add(i + 8)), _mm256_loadu_pd(b.as_ptr().add(i + 8))));
-        s3 = _mm256_add_pd(s3, _mm256_mul_pd(_mm256_loadu_pd(a.as_ptr().add(i + 12)), _mm256_loadu_pd(b.as_ptr().add(i + 12))));
-        i += 16;
-    }
-    let mut lanes = [0.0f64; 16];
-    _mm256_storeu_pd(lanes.as_mut_ptr(), s0);
-    _mm256_storeu_pd(lanes.as_mut_ptr().add(4), s1);
-    _mm256_storeu_pd(lanes.as_mut_ptr().add(8), s2);
-    _mm256_storeu_pd(lanes.as_mut_ptr().add(12), s3);
-    let mut s: f64 = lanes.iter().sum();
-    while i < n {
-        s += a[i] * b[i];
-        i += 1;
-    }
-    s
+    naive_avx_body!(
+        a, b, f64, 4, _mm256_loadu_pd, _mm256_mul_pd, _mm256_add_pd, _mm256_setzero_pd,
+        _mm256_storeu_pd
+    )
+}
+
+#[target_feature(enable = "avx2")]
+unsafe fn naive_f64_al(a: &[f64], b: &[f64]) -> f64 {
+    naive_avx_body!(
+        a, b, f64, 4, _mm256_load_pd, _mm256_mul_pd, _mm256_add_pd, _mm256_setzero_pd,
+        _mm256_storeu_pd
+    )
 }
 
 macro_rules! kahan_avx_body {
@@ -197,107 +251,104 @@ unsafe fn kahan_f64_impl(a: &[f64], b: &[f64]) -> f64 {
     compensated_fold_f64(&[head, s], &[0.0, c])
 }
 
+#[target_feature(enable = "avx2")]
+unsafe fn kahan_f32_al(a: &[f32], b: &[f32]) -> f32 {
+    let (sums, comps, s, c) = kahan_avx_body!(
+        a, b, f32, 8, _mm256_load_ps, _mm256_mul_ps, _mm256_sub_ps, _mm256_add_ps,
+        _mm256_setzero_ps, _mm256_storeu_ps
+    );
+    let head = compensated_fold_f32(&sums, &comps);
+    compensated_fold_f32(&[head, s], &[0.0, c])
+}
+
+#[target_feature(enable = "avx2")]
+unsafe fn kahan_f64_al(a: &[f64], b: &[f64]) -> f64 {
+    let (sums, comps, s, c) = kahan_avx_body!(
+        a, b, f64, 4, _mm256_load_pd, _mm256_mul_pd, _mm256_sub_pd, _mm256_add_pd,
+        _mm256_setzero_pd, _mm256_storeu_pd
+    );
+    let head = compensated_fold_f64(&sums, &comps);
+    compensated_fold_f64(&[head, s], &[0.0, c])
+}
+
 /// FMA flavor: `t = s*1 + y` and the product via `fmadd(x, y, -c)`... the
 /// subtraction of the compensation is fused into the product FMA, which both
 /// saves one op and (bonus over the paper) makes the product *error* smaller
-/// because `x*y - c` rounds once.
+/// because `x*y - c` rounds once. 6 slots: the register budget the paper's
+/// §4 discussion hits. `$load` selects `loadu` vs aligned `load`.
+macro_rules! kahan_fma_avx_body {
+    ($a:ident, $b:ident, $elem:ty, $lanes:expr, $load:ident, $fmadd:ident, $fmsub:ident,
+     $sub:ident, $set1:ident, $zero:ident, $store:ident, $fold:ident) => {{
+        use core::arch::x86_64::*;
+        let n = $a.len().min($b.len());
+        let ones = $set1(1.0);
+        let mut s = [$zero(); 6];
+        let mut c = [$zero(); 6];
+        let mut i = 0usize;
+        while i + 6 * $lanes <= n {
+            for k in 0..6 {
+                let x = $load($a.as_ptr().add(i + k * $lanes));
+                let yv = $load($b.as_ptr().add(i + k * $lanes));
+                // y = x*b - c (fused)
+                let y = $fmsub(x, yv, c[k]);
+                // t = s*1 + y (keeps the ADD on the FMA pipes)
+                let t = $fmadd(s[k], ones, y);
+                c[k] = $sub($sub(t, s[k]), y);
+                s[k] = t;
+            }
+            i += 6 * $lanes;
+        }
+        let mut sums = [0.0 as $elem; 6 * $lanes];
+        let mut comps = [0.0 as $elem; 6 * $lanes];
+        for k in 0..6 {
+            $store(sums.as_mut_ptr().add(k * $lanes), s[k]);
+            $store(comps.as_mut_ptr().add(k * $lanes), c[k]);
+        }
+        let mut st = 0.0 as $elem;
+        let mut ct = 0.0 as $elem;
+        while i < n {
+            let prod = $a[i] * $b[i];
+            let y = prod - ct;
+            let t = st + y;
+            ct = (t - st) - y;
+            st = t;
+            i += 1;
+        }
+        let head = $fold(&sums, &comps);
+        $fold(&[head, st], &[0.0 as $elem, ct])
+    }};
+}
+
 #[target_feature(enable = "avx2", enable = "fma")]
 unsafe fn kahan_fma_f32_impl(a: &[f32], b: &[f32]) -> f32 {
-    use core::arch::x86_64::*;
-    const L: usize = 8;
-    let n = a.len().min(b.len());
-    let ones = _mm256_set1_ps(1.0);
-    let mut s = [_mm256_setzero_ps(); 6];
-    let mut c = [_mm256_setzero_ps(); 6];
-    let mut i = 0usize;
-    while i + 6 * L <= n {
-        // 6 slots: the register budget the paper's §4 discussion hits
-        macro_rules! slot {
-            ($k:expr) => {{
-                let x = _mm256_loadu_ps(a.as_ptr().add(i + $k * L));
-                let yv = _mm256_loadu_ps(b.as_ptr().add(i + $k * L));
-                // y = x*b - c (fused)
-                let y = _mm256_fmsub_ps(x, yv, c[$k]);
-                // t = s*1 + y (keeps the ADD on the FMA pipes)
-                let t = _mm256_fmadd_ps(s[$k], ones, y);
-                c[$k] = _mm256_sub_ps(_mm256_sub_ps(t, s[$k]), y);
-                s[$k] = t;
-            }};
-        }
-        slot!(0);
-        slot!(1);
-        slot!(2);
-        slot!(3);
-        slot!(4);
-        slot!(5);
-        i += 6 * L;
-    }
-    let mut sums = [0.0f32; 6 * L];
-    let mut comps = [0.0f32; 6 * L];
-    for k in 0..6 {
-        _mm256_storeu_ps(sums.as_mut_ptr().add(k * L), s[k]);
-        _mm256_storeu_ps(comps.as_mut_ptr().add(k * L), c[k]);
-    }
-    let mut st = 0.0f32;
-    let mut ct = 0.0f32;
-    while i < n {
-        let prod = a[i] * b[i];
-        let y = prod - ct;
-        let t = st + y;
-        ct = (t - st) - y;
-        st = t;
-        i += 1;
-    }
-    let head = compensated_fold_f32(&sums, &comps);
-    compensated_fold_f32(&[head, st], &[0.0, ct])
+    kahan_fma_avx_body!(
+        a, b, f32, 8, _mm256_loadu_ps, _mm256_fmadd_ps, _mm256_fmsub_ps, _mm256_sub_ps,
+        _mm256_set1_ps, _mm256_setzero_ps, _mm256_storeu_ps, compensated_fold_f32
+    )
+}
+
+#[target_feature(enable = "avx2", enable = "fma")]
+unsafe fn kahan_fma_f32_al(a: &[f32], b: &[f32]) -> f32 {
+    kahan_fma_avx_body!(
+        a, b, f32, 8, _mm256_load_ps, _mm256_fmadd_ps, _mm256_fmsub_ps, _mm256_sub_ps,
+        _mm256_set1_ps, _mm256_setzero_ps, _mm256_storeu_ps, compensated_fold_f32
+    )
 }
 
 #[target_feature(enable = "avx2", enable = "fma")]
 unsafe fn kahan_fma_f64_impl(a: &[f64], b: &[f64]) -> f64 {
-    use core::arch::x86_64::*;
-    const L: usize = 4;
-    let n = a.len().min(b.len());
-    let ones = _mm256_set1_pd(1.0);
-    let mut s = [_mm256_setzero_pd(); 6];
-    let mut c = [_mm256_setzero_pd(); 6];
-    let mut i = 0usize;
-    while i + 6 * L <= n {
-        macro_rules! slot {
-            ($k:expr) => {{
-                let x = _mm256_loadu_pd(a.as_ptr().add(i + $k * L));
-                let yv = _mm256_loadu_pd(b.as_ptr().add(i + $k * L));
-                let y = _mm256_fmsub_pd(x, yv, c[$k]);
-                let t = _mm256_fmadd_pd(s[$k], ones, y);
-                c[$k] = _mm256_sub_pd(_mm256_sub_pd(t, s[$k]), y);
-                s[$k] = t;
-            }};
-        }
-        slot!(0);
-        slot!(1);
-        slot!(2);
-        slot!(3);
-        slot!(4);
-        slot!(5);
-        i += 6 * L;
-    }
-    let mut sums = [0.0f64; 6 * L];
-    let mut comps = [0.0f64; 6 * L];
-    for k in 0..6 {
-        _mm256_storeu_pd(sums.as_mut_ptr().add(k * L), s[k]);
-        _mm256_storeu_pd(comps.as_mut_ptr().add(k * L), c[k]);
-    }
-    let mut st = 0.0f64;
-    let mut ct = 0.0f64;
-    while i < n {
-        let prod = a[i] * b[i];
-        let y = prod - ct;
-        let t = st + y;
-        ct = (t - st) - y;
-        st = t;
-        i += 1;
-    }
-    let head = compensated_fold_f64(&sums, &comps);
-    compensated_fold_f64(&[head, st], &[0.0, ct])
+    kahan_fma_avx_body!(
+        a, b, f64, 4, _mm256_loadu_pd, _mm256_fmadd_pd, _mm256_fmsub_pd, _mm256_sub_pd,
+        _mm256_set1_pd, _mm256_setzero_pd, _mm256_storeu_pd, compensated_fold_f64
+    )
+}
+
+#[target_feature(enable = "avx2", enable = "fma")]
+unsafe fn kahan_fma_f64_al(a: &[f64], b: &[f64]) -> f64 {
+    kahan_fma_avx_body!(
+        a, b, f64, 4, _mm256_load_pd, _mm256_fmadd_pd, _mm256_fmsub_pd, _mm256_sub_pd,
+        _mm256_set1_pd, _mm256_setzero_pd, _mm256_storeu_pd, compensated_fold_f64
+    )
 }
 
 #[cfg(test)]
@@ -325,6 +376,43 @@ mod tests {
             let b = vec![3.0f32; n];
             assert_eq!(kahan_f32(&a, &b), (6 * n) as f32, "n={n}");
             assert_eq!(kahan_fma_f32(&a, &b), (6 * n) as f32, "n={n}");
+        }
+    }
+
+    /// The 64-byte-aligned (pooled) path must be bit-identical to the
+    /// `loadu` path on the same values — aligned loads only change µops.
+    /// The unaligned side is a guaranteed-misaligned copy (a bare `Vec`
+    /// could land 32-byte-aligned by allocator luck and test nothing).
+    #[test]
+    fn aligned_dispatch_is_bit_identical() {
+        let pool = crate::engine::BufferPool::new();
+        let n = 137; // forces main loop + tail
+        let src: Vec<f32> = (0..n).map(|i| (i as f32).cos()).collect();
+        let a = pool.admit(&src);
+        let b = pool.admit(&src);
+        assert_eq!(a.addr() % 64, 0);
+        let mis = crate::bench::kernels::tests_support::misaligned_copy(&src, 32);
+        for (f, name) in [
+            (naive_f32 as fn(&[f32], &[f32]) -> f32, "naive"),
+            (kahan_f32, "kahan"),
+            (kahan_fma_f32, "kahan-fma"),
+        ] {
+            let pooled = f(a.as_slice(), b.as_slice());
+            let plain = f(mis.as_slice(), mis.as_slice());
+            assert_eq!(pooled.to_bits(), plain.to_bits(), "{name}");
+        }
+        let srcd: Vec<f64> = (0..n).map(|i| (i as f64).cos()).collect();
+        let ad = pool.admit(&srcd);
+        let bd = pool.admit(&srcd);
+        let misd = crate::bench::kernels::tests_support::misaligned_copy(&srcd, 32);
+        for (f, name) in [
+            (naive_f64 as fn(&[f64], &[f64]) -> f64, "naive"),
+            (kahan_f64, "kahan"),
+            (kahan_fma_f64, "kahan-fma"),
+        ] {
+            let pooled = f(ad.as_slice(), bd.as_slice());
+            let plain = f(misd.as_slice(), misd.as_slice());
+            assert_eq!(pooled.to_bits(), plain.to_bits(), "{name}");
         }
     }
 }

@@ -1,100 +1,247 @@
-//! AVX-512 (512-bit) host kernels: 16 f32 lanes. Post-paper hardware; this
-//! is the extension study (does "Kahan for free" still hold when the vector
-//! width doubles again? — yes, the ADD-throughput argument is width-blind).
+//! AVX-512 (512-bit) host kernels: 16 f32 / 8 f64 lanes. Post-paper
+//! hardware; this is the extension study (does "Kahan for free" still hold
+//! when the vector width doubles again? — yes, the ADD-throughput argument
+//! is width-blind). Full variant set: naive, Kahan, and Kahan-FMA (the §4
+//! trick with `vfmadd`/`vfmsub` on zmm — AVX-512F includes the FMA forms,
+//! no separate feature bit needed), in both precisions.
+//!
+//! Every public entry dispatches on pointer alignment at the call site:
+//! pooled-path buffers start on 64-byte boundaries (exactly one zmm), so
+//! admitted streams take `_mm512_load_*`; arbitrary caller slices fall
+//! back to `loadu`. Aligned and unaligned loads read identical values, so
+//! the dispatch never changes results.
 
-use super::compensated_fold_f32;
+use super::{both_aligned, compensated_fold_f32, compensated_fold_f64};
 
-pub fn naive_f32(a: &[f32], b: &[f32]) -> f32 {
-    if is_x86_feature_detected!("avx512f") {
-        unsafe { naive_f32_impl(a, b) }
-    } else {
-        super::avx2::naive_f32(a, b)
-    }
+/// zmm width in bytes — the alignment the `load` (vs `loadu`) forms need.
+const ZMM_ALIGN: usize = 64;
+
+macro_rules! avx512_wrappers {
+    ($naive:ident, $kahan:ident, $kahan_fma:ident, $ty:ty,
+     $naive_u:ident, $naive_a:ident, $kahan_u:ident, $kahan_a:ident,
+     $fma_u:ident, $fma_a:ident,
+     $naive_fb:path, $kahan_fb:path, $fma_fb:path) => {
+        pub fn $naive(a: &[$ty], b: &[$ty]) -> $ty {
+            if is_x86_feature_detected!("avx512f") {
+                if both_aligned(a, b, ZMM_ALIGN) {
+                    unsafe { $naive_a(a, b) }
+                } else {
+                    unsafe { $naive_u(a, b) }
+                }
+            } else {
+                $naive_fb(a, b)
+            }
+        }
+
+        pub fn $kahan(a: &[$ty], b: &[$ty]) -> $ty {
+            if is_x86_feature_detected!("avx512f") {
+                if both_aligned(a, b, ZMM_ALIGN) {
+                    unsafe { $kahan_a(a, b) }
+                } else {
+                    unsafe { $kahan_u(a, b) }
+                }
+            } else {
+                $kahan_fb(a, b)
+            }
+        }
+
+        pub fn $kahan_fma(a: &[$ty], b: &[$ty]) -> $ty {
+            if is_x86_feature_detected!("avx512f") {
+                if both_aligned(a, b, ZMM_ALIGN) {
+                    unsafe { $fma_a(a, b) }
+                } else {
+                    unsafe { $fma_u(a, b) }
+                }
+            } else {
+                $fma_fb(a, b)
+            }
+        }
+    };
 }
 
-pub fn kahan_f32(a: &[f32], b: &[f32]) -> f32 {
-    if is_x86_feature_detected!("avx512f") {
-        unsafe { kahan_f32_impl(a, b) }
-    } else {
-        super::avx2::kahan_f32(a, b)
-    }
+avx512_wrappers!(
+    naive_f32, kahan_f32, kahan_fma_f32, f32,
+    naive_f32_impl, naive_f32_al, kahan_f32_impl, kahan_f32_al,
+    kahan_fma_f32_impl, kahan_fma_f32_al,
+    super::avx2::naive_f32, super::avx2::kahan_f32, super::avx2::kahan_fma_f32
+);
+avx512_wrappers!(
+    naive_f64, kahan_f64, kahan_fma_f64, f64,
+    naive_f64_impl, naive_f64_al, kahan_f64_impl, kahan_f64_al,
+    kahan_fma_f64_impl, kahan_fma_f64_al,
+    super::avx2::naive_f64, super::avx2::kahan_f64, super::avx2::kahan_fma_f64
+);
+
+/// Two-slot naive body (one zmm pair per slot, 2·L elements per pass),
+/// horizontal reduce, scalar tail.
+macro_rules! naive_avx512_body {
+    ($a:ident, $b:ident, $elem:ty, $lanes:expr, $load:ident, $mul:ident, $add:ident,
+     $zero:ident, $reduce:ident) => {{
+        use core::arch::x86_64::*;
+        let n = $a.len().min($b.len());
+        let mut s0 = $zero();
+        let mut s1 = $zero();
+        let mut i = 0usize;
+        while i + 2 * $lanes <= n {
+            s0 = $add(s0, $mul($load($a.as_ptr().add(i)), $load($b.as_ptr().add(i))));
+            s1 = $add(
+                s1,
+                $mul($load($a.as_ptr().add(i + $lanes)), $load($b.as_ptr().add(i + $lanes))),
+            );
+            i += 2 * $lanes;
+        }
+        let mut s = $reduce($add(s0, s1));
+        while i < n {
+            s += $a[i] * $b[i];
+            i += 1;
+        }
+        s
+    }};
 }
 
-#[target_feature(enable = "avx512f")]
-unsafe fn naive_f32_impl(a: &[f32], b: &[f32]) -> f32 {
-    use core::arch::x86_64::*;
-    let n = a.len().min(b.len());
-    let mut s0 = _mm512_setzero_ps();
-    let mut s1 = _mm512_setzero_ps();
-    let mut i = 0usize;
-    while i + 32 <= n {
-        s0 = _mm512_add_ps(
-            s0,
-            _mm512_mul_ps(_mm512_loadu_ps(a.as_ptr().add(i)), _mm512_loadu_ps(b.as_ptr().add(i))),
-        );
-        s1 = _mm512_add_ps(
-            s1,
-            _mm512_mul_ps(
-                _mm512_loadu_ps(a.as_ptr().add(i + 16)),
-                _mm512_loadu_ps(b.as_ptr().add(i + 16)),
-            ),
-        );
-        i += 32;
-    }
-    let mut s = _mm512_reduce_add_ps(_mm512_add_ps(s0, s1));
-    while i < n {
-        s += a[i] * b[i];
-        i += 1;
-    }
-    s
+/// Two-slot Kahan body: per-lane sum + compensation per slot, compensated
+/// scalar tail, compensated lane fold.
+macro_rules! kahan_avx512_body {
+    ($a:ident, $b:ident, $elem:ty, $lanes:expr, $load:ident, $mul:ident, $sub:ident,
+     $add:ident, $zero:ident, $store:ident, $fold:ident) => {{
+        use core::arch::x86_64::*;
+        let n = $a.len().min($b.len());
+        let mut s0 = $zero();
+        let mut c0 = $zero();
+        let mut s1 = $zero();
+        let mut c1 = $zero();
+        let mut i = 0usize;
+        while i + 2 * $lanes <= n {
+            let p0 = $mul($load($a.as_ptr().add(i)), $load($b.as_ptr().add(i)));
+            let y0 = $sub(p0, c0);
+            let t0 = $add(s0, y0);
+            c0 = $sub($sub(t0, s0), y0);
+            s0 = t0;
+
+            let p1 = $mul($load($a.as_ptr().add(i + $lanes)), $load($b.as_ptr().add(i + $lanes)));
+            let y1 = $sub(p1, c1);
+            let t1 = $add(s1, y1);
+            c1 = $sub($sub(t1, s1), y1);
+            s1 = t1;
+            i += 2 * $lanes;
+        }
+        let mut sums = [0.0 as $elem; 2 * $lanes];
+        let mut comps = [0.0 as $elem; 2 * $lanes];
+        $store(sums.as_mut_ptr(), s0);
+        $store(sums.as_mut_ptr().add($lanes), s1);
+        $store(comps.as_mut_ptr(), c0);
+        $store(comps.as_mut_ptr().add($lanes), c1);
+        let mut s = 0.0 as $elem;
+        let mut c = 0.0 as $elem;
+        while i < n {
+            let prod = $a[i] * $b[i];
+            let y = prod - c;
+            let t = s + y;
+            c = (t - s) - y;
+            s = t;
+            i += 1;
+        }
+        let head = $fold(&sums, &comps);
+        $fold(&[head, s], &[0.0 as $elem, c])
+    }};
 }
 
-#[target_feature(enable = "avx512f")]
-unsafe fn kahan_f32_impl(a: &[f32], b: &[f32]) -> f32 {
-    use core::arch::x86_64::*;
-    const L: usize = 16;
-    let n = a.len().min(b.len());
-    let mut s0 = _mm512_setzero_ps();
-    let mut c0 = _mm512_setzero_ps();
-    let mut s1 = _mm512_setzero_ps();
-    let mut c1 = _mm512_setzero_ps();
-    let mut i = 0usize;
-    while i + 2 * L <= n {
-        let p0 = _mm512_mul_ps(_mm512_loadu_ps(a.as_ptr().add(i)), _mm512_loadu_ps(b.as_ptr().add(i)));
-        let y0 = _mm512_sub_ps(p0, c0);
-        let t0 = _mm512_add_ps(s0, y0);
-        c0 = _mm512_sub_ps(_mm512_sub_ps(t0, s0), y0);
-        s0 = t0;
-
-        let p1 = _mm512_mul_ps(
-            _mm512_loadu_ps(a.as_ptr().add(i + L)),
-            _mm512_loadu_ps(b.as_ptr().add(i + L)),
-        );
-        let y1 = _mm512_sub_ps(p1, c1);
-        let t1 = _mm512_add_ps(s1, y1);
-        c1 = _mm512_sub_ps(_mm512_sub_ps(t1, s1), y1);
-        s1 = t1;
-        i += 2 * L;
-    }
-    let mut sums = [0.0f32; 2 * L];
-    let mut comps = [0.0f32; 2 * L];
-    _mm512_storeu_ps(sums.as_mut_ptr(), s0);
-    _mm512_storeu_ps(sums.as_mut_ptr().add(L), s1);
-    _mm512_storeu_ps(comps.as_mut_ptr(), c0);
-    _mm512_storeu_ps(comps.as_mut_ptr().add(L), c1);
-    let mut s = 0.0f32;
-    let mut c = 0.0f32;
-    while i < n {
-        let prod = a[i] * b[i];
-        let y = prod - c;
-        let t = s + y;
-        c = (t - s) - y;
-        s = t;
-        i += 1;
-    }
-    let head = compensated_fold_f32(&sums, &comps);
-    compensated_fold_f32(&[head, s], &[0.0, c])
+/// Four-slot Kahan-FMA body: the compensation subtraction fuses into the
+/// product (`y = a*b - c` rounds once) and the accumulate issues as
+/// `t = s*1 + y`, so both operations run on the FMA pipes (§4 trick, zmm
+/// edition — four slots to cover the longer FMA latency).
+macro_rules! kahan_fma_avx512_body {
+    ($a:ident, $b:ident, $elem:ty, $lanes:expr, $load:ident, $fmadd:ident, $fmsub:ident,
+     $sub:ident, $set1:ident, $zero:ident, $store:ident, $fold:ident) => {{
+        use core::arch::x86_64::*;
+        let n = $a.len().min($b.len());
+        let ones = $set1(1.0);
+        let mut s = [$zero(); 4];
+        let mut c = [$zero(); 4];
+        let mut i = 0usize;
+        while i + 4 * $lanes <= n {
+            for k in 0..4 {
+                let x = $load($a.as_ptr().add(i + k * $lanes));
+                let yv = $load($b.as_ptr().add(i + k * $lanes));
+                let y = $fmsub(x, yv, c[k]);
+                let t = $fmadd(s[k], ones, y);
+                c[k] = $sub($sub(t, s[k]), y);
+                s[k] = t;
+            }
+            i += 4 * $lanes;
+        }
+        let mut sums = [0.0 as $elem; 4 * $lanes];
+        let mut comps = [0.0 as $elem; 4 * $lanes];
+        for k in 0..4 {
+            $store(sums.as_mut_ptr().add(k * $lanes), s[k]);
+            $store(comps.as_mut_ptr().add(k * $lanes), c[k]);
+        }
+        let mut st = 0.0 as $elem;
+        let mut ct = 0.0 as $elem;
+        while i < n {
+            let prod = $a[i] * $b[i];
+            let y = prod - ct;
+            let t = st + y;
+            ct = (t - st) - y;
+            st = t;
+            i += 1;
+        }
+        let head = $fold(&sums, &comps);
+        $fold(&[head, st], &[0.0 as $elem, ct])
+    }};
 }
+
+/// Instantiate the `loadu` and aligned-`load` flavors of one body macro
+/// (`$lanes` = zmm lane count for the element type: 16 f32 / 8 f64).
+macro_rules! avx512_impl_pair {
+    ($body:ident, $unaligned:ident, $aligned:ident, $elem:ty, $lanes:expr,
+     $loadu:ident, $loada:ident $(, $rest:ident)*) => {
+        #[target_feature(enable = "avx512f")]
+        unsafe fn $unaligned(a: &[$elem], b: &[$elem]) -> $elem {
+            $body!(a, b, $elem, $lanes, $loadu $(, $rest)*)
+        }
+
+        #[target_feature(enable = "avx512f")]
+        unsafe fn $aligned(a: &[$elem], b: &[$elem]) -> $elem {
+            $body!(a, b, $elem, $lanes, $loada $(, $rest)*)
+        }
+    };
+}
+
+avx512_impl_pair!(
+    naive_avx512_body, naive_f32_impl, naive_f32_al, f32, 16,
+    _mm512_loadu_ps, _mm512_load_ps,
+    _mm512_mul_ps, _mm512_add_ps, _mm512_setzero_ps, _mm512_reduce_add_ps
+);
+avx512_impl_pair!(
+    naive_avx512_body, naive_f64_impl, naive_f64_al, f64, 8,
+    _mm512_loadu_pd, _mm512_load_pd,
+    _mm512_mul_pd, _mm512_add_pd, _mm512_setzero_pd, _mm512_reduce_add_pd
+);
+avx512_impl_pair!(
+    kahan_avx512_body, kahan_f32_impl, kahan_f32_al, f32, 16,
+    _mm512_loadu_ps, _mm512_load_ps,
+    _mm512_mul_ps, _mm512_sub_ps, _mm512_add_ps, _mm512_setzero_ps, _mm512_storeu_ps,
+    compensated_fold_f32
+);
+avx512_impl_pair!(
+    kahan_avx512_body, kahan_f64_impl, kahan_f64_al, f64, 8,
+    _mm512_loadu_pd, _mm512_load_pd,
+    _mm512_mul_pd, _mm512_sub_pd, _mm512_add_pd, _mm512_setzero_pd, _mm512_storeu_pd,
+    compensated_fold_f64
+);
+avx512_impl_pair!(
+    kahan_fma_avx512_body, kahan_fma_f32_impl, kahan_fma_f32_al, f32, 16,
+    _mm512_loadu_ps, _mm512_load_ps,
+    _mm512_fmadd_ps, _mm512_fmsub_ps, _mm512_sub_ps, _mm512_set1_ps, _mm512_setzero_ps,
+    _mm512_storeu_ps, compensated_fold_f32
+);
+avx512_impl_pair!(
+    kahan_fma_avx512_body, kahan_fma_f64_impl, kahan_fma_f64_al, f64, 8,
+    _mm512_loadu_pd, _mm512_load_pd,
+    _mm512_fmadd_pd, _mm512_fmsub_pd, _mm512_sub_pd, _mm512_set1_pd, _mm512_setzero_pd,
+    _mm512_storeu_pd, compensated_fold_f64
+);
 
 #[cfg(test)]
 mod tests {
@@ -107,14 +254,51 @@ mod tests {
         let b = vec![1.0f32; 200];
         assert_eq!(naive_f32(&a, &b), 20100.0);
         assert_eq!(kahan_f32(&a, &b), 20100.0);
+        assert_eq!(kahan_fma_f32(&a, &b), 20100.0);
+        let a: Vec<f64> = (1..=200).map(|i| i as f64).collect();
+        let b = vec![1.0f64; 200];
+        assert_eq!(naive_f64(&a, &b), 20100.0);
+        assert_eq!(kahan_f64(&a, &b), 20100.0);
+        assert_eq!(kahan_fma_f64(&a, &b), 20100.0);
     }
 
     #[test]
     fn tails() {
-        for n in [5usize, 17, 33, 65] {
+        for n in [5usize, 17, 33, 65, 129] {
             let a = vec![1.5f32; n];
             let b = vec![2.0f32; n];
             assert_eq!(kahan_f32(&a, &b), 3.0 * n as f32, "n={n}");
+            assert_eq!(kahan_fma_f32(&a, &b), 3.0 * n as f32, "n={n}");
+            let a = vec![1.5f64; n];
+            let b = vec![2.0f64; n];
+            assert_eq!(kahan_f64(&a, &b), 3.0 * n as f64, "n={n}");
+            assert_eq!(naive_f64(&a, &b), 3.0 * n as f64, "n={n}");
+        }
+    }
+
+    /// Aligned-load dispatch must not change values: compare every variant
+    /// on a 64-byte-aligned view of the data vs a DETERMINISTICALLY
+    /// misaligned view of the same values (an offset into an
+    /// over-allocated copy, chosen so the head provably misses every
+    /// 64-byte boundary — a plain `Vec` head alone could land aligned by
+    /// allocator luck, making the comparison vacuous).
+    #[test]
+    fn aligned_and_unaligned_paths_agree() {
+        let pool = crate::engine::BufferPool::new();
+        let n = 203;
+        let src: Vec<f32> = (0..n).map(|i| (i as f32).sin()).collect();
+        let a = pool.admit(&src);
+        let b = pool.admit(&src);
+        assert_eq!(a.addr() % 64, 0);
+        let mis = crate::bench::kernels::tests_support::misaligned_copy(&src, 64);
+        for (f, name) in [
+            (naive_f32 as fn(&[f32], &[f32]) -> f32, "naive"),
+            (kahan_f32, "kahan"),
+            (kahan_fma_f32, "kahan-fma"),
+        ] {
+            let via_aligned = f(a.as_slice(), b.as_slice());
+            let via_loadu = f(mis.as_slice(), mis.as_slice());
+            assert_eq!(via_aligned.to_bits(), via_loadu.to_bits(), "{name}");
         }
     }
 }

@@ -1,0 +1,675 @@
+//! Fused multi-dot kernels: execute a batch of independent small dot
+//! products in ONE kernel call, sharing loop/dispatch/reduction overhead
+//! across requests.
+//!
+//! The paper's small-N regime is bounded by per-iteration and per-call
+//! overhead, not arithmetic; the CCPE follow-up's fix at the instruction
+//! level — more independent accumulator chains via unrolling — applies one
+//! level up too: stripe *requests* across the unroll slots. Each request
+//! keeps its own accumulator state (sum + compensation), so a batch of B
+//! short dependency chains fills the ADD/FMA pipes that a single short
+//! chain leaves idle, while loop control and the call prologue are paid
+//! once instead of B times.
+//!
+//! # The batching invariant
+//!
+//! **Batching never changes bits.** Every fused kernel here is paired (via
+//! [`BatchKernel::matches`]) with one single-dot kernel from the main
+//! registry, and produces, for every request in the batch, *exactly* the
+//! value that single-dot kernel produces for that request alone. This holds
+//! by construction: interleaving only reorders operations *between*
+//! requests, never within one — each request's own operation sequence
+//! (slot structure, iteration order, tail handling, reduction order) is
+//! copied verbatim from its single-dot twin, and IEEE arithmetic on
+//! independent data is oblivious to interleaving. Batches with leftover
+//! requests (batch size not a multiple of the interleave width) finish by
+//! calling the single-dot twin directly. Property-tested on
+//! Ogita–Rump–Oishi ill-conditioned inputs below and in
+//! `rust/tests/test_batch.rs`.
+//!
+//! The engine only ever *selects* a fused kernel through the autotuned
+//! dispatch table (`engine::autotune`), which pairs it with the single
+//! winner of the same `(Precision, SizeClass)` cell and keeps it only where
+//! calibration shows fusion winning — so correctness never depends on the
+//! performance question.
+
+use super::{avx2, scalar, compensated_fold_f32, compensated_fold_f64};
+
+/// A fused multi-dot entry point: `f(pairs, out)` writes `out[i] = dot of
+/// pairs[i]` for every `i` (slices must be the same length).
+pub type BatchFnF32 = fn(&[(&[f32], &[f32])], &mut [f32]);
+pub type BatchFnF64 = fn(&[(&[f64], &[f64])], &mut [f64]);
+
+/// One fused kernel entry point (one per precision).
+#[derive(Clone, Copy)]
+pub enum BatchKernelFn {
+    F32(BatchFnF32),
+    F64(BatchFnF64),
+}
+
+/// Registry entry: one fused multi-dot kernel, tied to the single-dot
+/// kernel it reproduces bit-for-bit per request.
+#[derive(Clone, Copy)]
+pub struct BatchKernel {
+    pub name: &'static str,
+    /// name of the single-dot registry kernel each per-request result is
+    /// bit-identical to (the pairing the dispatch table relies on)
+    pub matches: &'static str,
+    /// whether the host CPU supports the required ISA extension
+    pub available: bool,
+    pub f: BatchKernelFn,
+}
+
+impl BatchKernel {
+    pub fn call_f32(&self, pairs: &[(&[f32], &[f32])], out: &mut [f32]) {
+        match self.f {
+            BatchKernelFn::F32(f) => f(pairs, out),
+            BatchKernelFn::F64(_) => panic!("{} is a f64 batch kernel", self.name),
+        }
+    }
+
+    pub fn call_f64(&self, pairs: &[(&[f64], &[f64])], out: &mut [f64]) {
+        match self.f {
+            BatchKernelFn::F64(f) => f(pairs, out),
+            BatchKernelFn::F32(_) => panic!("{} is a f32 batch kernel", self.name),
+        }
+    }
+}
+
+/// Serial fallback executor: one single-dot call per pair. This is what a
+/// batch degrades to when no fused kernel exists (or calibration showed
+/// fusion losing) — the handoff/admission coalescing above this layer
+/// still applies, only the kernel fusion is skipped.
+pub fn serial_f32(f: fn(&[f32], &[f32]) -> f32, pairs: &[(&[f32], &[f32])], out: &mut [f32]) {
+    assert_eq!(pairs.len(), out.len());
+    for (o, &(a, b)) in out.iter_mut().zip(pairs) {
+        *o = f(a, b);
+    }
+}
+
+pub fn serial_f64(f: fn(&[f64], &[f64]) -> f64, pairs: &[(&[f64], &[f64])], out: &mut [f64]) {
+    assert_eq!(pairs.len(), out.len());
+    for (o, &(a, b)) in out.iter_mut().zip(pairs) {
+        *o = f(a, b);
+    }
+}
+
+/// One sequential-Kahan step (Fig. 1b) — identical to the body of
+/// `scalar::kahan_seq_*`.
+macro_rules! kahan_step {
+    ($a:ident, $b:ident, $i:expr, $s:ident, $c:ident) => {{
+        let prod = $a[$i] * $b[$i];
+        let y = prod - $c;
+        let t = $s + y;
+        $c = (t - $s) - y;
+        $s = t;
+    }};
+}
+
+/// 4-way fused twin of the strictly sequential Kahan dot
+/// (`kahan-compiler-*`): four requests advance in lock step through one
+/// loop, each on its own `(s, c)` chain. The single kernel is a *single*
+/// latency-bound dependency chain — striping four independent requests
+/// across the iteration is exactly the paper's modulo-unrolling win, paid
+/// for by other requests instead of other slots.
+macro_rules! kahan_seq_batch_impl {
+    ($name:ident, $ty:ty, $single:path) => {
+        pub fn $name(pairs: &[(&[$ty], &[$ty])], out: &mut [$ty]) {
+            assert_eq!(pairs.len(), out.len());
+            let mut g = 0usize;
+            while g + 4 <= pairs.len() {
+                let (a0, b0) = pairs[g];
+                let (a1, b1) = pairs[g + 1];
+                let (a2, b2) = pairs[g + 2];
+                let (a3, b3) = pairs[g + 3];
+                let n0 = a0.len().min(b0.len());
+                let n1 = a1.len().min(b1.len());
+                let n2 = a2.len().min(b2.len());
+                let n3 = a3.len().min(b3.len());
+                let m = n0.min(n1).min(n2).min(n3);
+                let (mut s0, mut c0) = (0.0 as $ty, 0.0 as $ty);
+                let (mut s1, mut c1) = (0.0 as $ty, 0.0 as $ty);
+                let (mut s2, mut c2) = (0.0 as $ty, 0.0 as $ty);
+                let (mut s3, mut c3) = (0.0 as $ty, 0.0 as $ty);
+                for i in 0..m {
+                    kahan_step!(a0, b0, i, s0, c0);
+                    kahan_step!(a1, b1, i, s1, c1);
+                    kahan_step!(a2, b2, i, s2, c2);
+                    kahan_step!(a3, b3, i, s3, c3);
+                }
+                // finish each request alone: the continuation of its own
+                // (unchanged) operation sequence
+                for i in m..n0 {
+                    kahan_step!(a0, b0, i, s0, c0);
+                }
+                for i in m..n1 {
+                    kahan_step!(a1, b1, i, s1, c1);
+                }
+                for i in m..n2 {
+                    kahan_step!(a2, b2, i, s2, c2);
+                }
+                for i in m..n3 {
+                    kahan_step!(a3, b3, i, s3, c3);
+                }
+                out[g] = s0;
+                out[g + 1] = s1;
+                out[g + 2] = s2;
+                out[g + 3] = s3;
+                g += 4;
+            }
+            // leftover requests run the single-dot twin itself
+            while g < pairs.len() {
+                let (a, b) = pairs[g];
+                out[g] = $single(a, b);
+                g += 1;
+            }
+        }
+    };
+}
+
+kahan_seq_batch_impl!(kahan_seq_batch_f32, f32, scalar::kahan_seq_f32);
+kahan_seq_batch_impl!(kahan_seq_batch_f64, f64, scalar::kahan_seq_f64);
+
+/// 4-way fused twin of the sequential naive dot (`naive-scalar-*`): same
+/// striping as the Kahan twin, single accumulator per request.
+macro_rules! naive_seq_batch_impl {
+    ($name:ident, $ty:ty, $single:path) => {
+        pub fn $name(pairs: &[(&[$ty], &[$ty])], out: &mut [$ty]) {
+            assert_eq!(pairs.len(), out.len());
+            let mut g = 0usize;
+            while g + 4 <= pairs.len() {
+                let (a0, b0) = pairs[g];
+                let (a1, b1) = pairs[g + 1];
+                let (a2, b2) = pairs[g + 2];
+                let (a3, b3) = pairs[g + 3];
+                let n0 = a0.len().min(b0.len());
+                let n1 = a1.len().min(b1.len());
+                let n2 = a2.len().min(b2.len());
+                let n3 = a3.len().min(b3.len());
+                let m = n0.min(n1).min(n2).min(n3);
+                let mut s0 = 0.0 as $ty;
+                let mut s1 = 0.0 as $ty;
+                let mut s2 = 0.0 as $ty;
+                let mut s3 = 0.0 as $ty;
+                for i in 0..m {
+                    s0 += a0[i] * b0[i];
+                    s1 += a1[i] * b1[i];
+                    s2 += a2[i] * b2[i];
+                    s3 += a3[i] * b3[i];
+                }
+                for i in m..n0 {
+                    s0 += a0[i] * b0[i];
+                }
+                for i in m..n1 {
+                    s1 += a1[i] * b1[i];
+                }
+                for i in m..n2 {
+                    s2 += a2[i] * b2[i];
+                }
+                for i in m..n3 {
+                    s3 += a3[i] * b3[i];
+                }
+                out[g] = s0;
+                out[g + 1] = s1;
+                out[g + 2] = s2;
+                out[g + 3] = s3;
+                g += 4;
+            }
+            while g < pairs.len() {
+                let (a, b) = pairs[g];
+                out[g] = $single(a, b);
+                g += 1;
+            }
+        }
+    };
+}
+
+naive_seq_batch_impl!(naive_seq_batch_f32, f32, scalar::naive_f32);
+naive_seq_batch_impl!(naive_seq_batch_f64, f64, scalar::naive_f64);
+
+/// One 4-slot AVX2 Kahan iteration over `$a/$b` at offset `$i` — the exact
+/// loop body of `avx2::kahan_avx_body!` (slot order 0→3, same op order per
+/// slot), with accumulators held in 4-element arrays.
+macro_rules! kahan_iter4 {
+    ($a:ident, $b:ident, $i:expr, $s:ident, $c:ident, $lanes:expr,
+     $load:ident, $mul:ident, $sub:ident, $add:ident) => {{
+        let p0 = $mul($load($a.as_ptr().add($i)), $load($b.as_ptr().add($i)));
+        let y0 = $sub(p0, $c[0]);
+        let t0 = $add($s[0], y0);
+        $c[0] = $sub($sub(t0, $s[0]), y0);
+        $s[0] = t0;
+
+        let p1 = $mul($load($a.as_ptr().add($i + $lanes)), $load($b.as_ptr().add($i + $lanes)));
+        let y1 = $sub(p1, $c[1]);
+        let t1 = $add($s[1], y1);
+        $c[1] = $sub($sub(t1, $s[1]), y1);
+        $s[1] = t1;
+
+        let p2 = $mul(
+            $load($a.as_ptr().add($i + 2 * $lanes)),
+            $load($b.as_ptr().add($i + 2 * $lanes)),
+        );
+        let y2 = $sub(p2, $c[2]);
+        let t2 = $add($s[2], y2);
+        $c[2] = $sub($sub(t2, $s[2]), y2);
+        $s[2] = t2;
+
+        let p3 = $mul(
+            $load($a.as_ptr().add($i + 3 * $lanes)),
+            $load($b.as_ptr().add($i + 3 * $lanes)),
+        );
+        let y3 = $sub(p3, $c[3]);
+        let t3 = $add($s[3], y3);
+        $c[3] = $sub($sub(t3, $s[3]), y3);
+        $s[3] = t3;
+    }};
+}
+
+/// The exact epilogue of `avx2::kahan_avx_body!` for one request: store the
+/// 4 slots, run the compensated scalar tail from `$i`, then the two
+/// compensated folds, in the single kernel's order.
+macro_rules! kahan_finish {
+    ($a:ident, $b:ident, $i:ident, $n:expr, $s:ident, $c:ident, $elem:ty, $lanes:expr,
+     $store:ident, $fold:ident) => {{
+        let mut sums = [0.0 as $elem; 4 * $lanes];
+        let mut comps = [0.0 as $elem; 4 * $lanes];
+        $store(sums.as_mut_ptr(), $s[0]);
+        $store(sums.as_mut_ptr().add($lanes), $s[1]);
+        $store(sums.as_mut_ptr().add(2 * $lanes), $s[2]);
+        $store(sums.as_mut_ptr().add(3 * $lanes), $s[3]);
+        $store(comps.as_mut_ptr(), $c[0]);
+        $store(comps.as_mut_ptr().add($lanes), $c[1]);
+        $store(comps.as_mut_ptr().add(2 * $lanes), $c[2]);
+        $store(comps.as_mut_ptr().add(3 * $lanes), $c[3]);
+        let mut st = 0.0 as $elem;
+        let mut ct = 0.0 as $elem;
+        while $i < $n {
+            kahan_step!($a, $b, $i, st, ct);
+            $i += 1;
+        }
+        let head = $fold(&sums, &comps);
+        $fold(&[head, st], &[0.0 as $elem, ct])
+    }};
+}
+
+/// Two requests through the 4-slot AVX2 Kahan body with interleaved main
+/// loops. While both requests have a full 4-slot stripe left, one combined
+/// iteration advances both (8 independent chains in flight); once one runs
+/// short, the other finishes alone. Either way each request's own op
+/// sequence equals `avx2::kahan_f32/f64` exactly.
+macro_rules! kahan_avx2_x2_impl {
+    ($name:ident, $elem:ty, $lanes:expr, $load:ident, $mul:ident, $sub:ident,
+     $add:ident, $zero:ident, $store:ident, $fold:ident) => {
+        #[target_feature(enable = "avx2")]
+        unsafe fn $name(
+            a0: &[$elem],
+            b0: &[$elem],
+            a1: &[$elem],
+            b1: &[$elem],
+        ) -> ($elem, $elem) {
+            use core::arch::x86_64::*;
+            let n0 = a0.len().min(b0.len());
+            let n1 = a1.len().min(b1.len());
+            let mut s0 = [$zero(); 4];
+            let mut c0 = [$zero(); 4];
+            let mut s1 = [$zero(); 4];
+            let mut c1 = [$zero(); 4];
+            let mut i0 = 0usize;
+            let mut i1 = 0usize;
+            while i0 + 4 * $lanes <= n0 && i1 + 4 * $lanes <= n1 {
+                kahan_iter4!(a0, b0, i0, s0, c0, $lanes, $load, $mul, $sub, $add);
+                kahan_iter4!(a1, b1, i1, s1, c1, $lanes, $load, $mul, $sub, $add);
+                i0 += 4 * $lanes;
+                i1 += 4 * $lanes;
+            }
+            while i0 + 4 * $lanes <= n0 {
+                kahan_iter4!(a0, b0, i0, s0, c0, $lanes, $load, $mul, $sub, $add);
+                i0 += 4 * $lanes;
+            }
+            while i1 + 4 * $lanes <= n1 {
+                kahan_iter4!(a1, b1, i1, s1, c1, $lanes, $load, $mul, $sub, $add);
+                i1 += 4 * $lanes;
+            }
+            let r0 = kahan_finish!(a0, b0, i0, n0, s0, c0, $elem, $lanes, $store, $fold);
+            let r1 = kahan_finish!(a1, b1, i1, n1, s1, c1, $elem, $lanes, $store, $fold);
+            (r0, r1)
+        }
+    };
+}
+
+kahan_avx2_x2_impl!(
+    kahan_avx2_x2_f32,
+    f32,
+    8,
+    _mm256_loadu_ps,
+    _mm256_mul_ps,
+    _mm256_sub_ps,
+    _mm256_add_ps,
+    _mm256_setzero_ps,
+    _mm256_storeu_ps,
+    compensated_fold_f32
+);
+kahan_avx2_x2_impl!(
+    kahan_avx2_x2_f64,
+    f64,
+    4,
+    _mm256_loadu_pd,
+    _mm256_mul_pd,
+    _mm256_sub_pd,
+    _mm256_add_pd,
+    _mm256_setzero_pd,
+    _mm256_storeu_pd,
+    compensated_fold_f64
+);
+
+/// One 4-slot AVX2 naive iteration — the exact loop body of
+/// `avx2::naive_f32_impl`/`naive_f64_impl` with accumulators in an array.
+macro_rules! naive_iter4 {
+    ($a:ident, $b:ident, $i:expr, $s:ident, $lanes:expr, $load:ident, $mul:ident, $add:ident) => {{
+        $s[0] = $add($s[0], $mul($load($a.as_ptr().add($i)), $load($b.as_ptr().add($i))));
+        $s[1] = $add(
+            $s[1],
+            $mul($load($a.as_ptr().add($i + $lanes)), $load($b.as_ptr().add($i + $lanes))),
+        );
+        $s[2] = $add(
+            $s[2],
+            $mul(
+                $load($a.as_ptr().add($i + 2 * $lanes)),
+                $load($b.as_ptr().add($i + 2 * $lanes)),
+            ),
+        );
+        $s[3] = $add(
+            $s[3],
+            $mul(
+                $load($a.as_ptr().add($i + 3 * $lanes)),
+                $load($b.as_ptr().add($i + 3 * $lanes)),
+            ),
+        );
+    }};
+}
+
+/// The exact epilogue of `avx2::naive_f32_impl`/`naive_f64_impl` for one
+/// request: store the 4 slots, in-order lane sum, scalar tail.
+macro_rules! naive_finish {
+    ($a:ident, $b:ident, $i:ident, $n:expr, $s:ident, $elem:ty, $lanes:expr, $store:ident) => {{
+        let mut lanes = [0.0 as $elem; 4 * $lanes];
+        $store(lanes.as_mut_ptr(), $s[0]);
+        $store(lanes.as_mut_ptr().add($lanes), $s[1]);
+        $store(lanes.as_mut_ptr().add(2 * $lanes), $s[2]);
+        $store(lanes.as_mut_ptr().add(3 * $lanes), $s[3]);
+        let mut acc: $elem = lanes.iter().sum();
+        while $i < $n {
+            acc += $a[$i] * $b[$i];
+            $i += 1;
+        }
+        acc
+    }};
+}
+
+/// Two requests through the 4-slot AVX2 naive body (interleaved main
+/// loops); per-request op sequence equals `avx2::naive_f32/f64` exactly,
+/// including the in-order lane sum of the epilogue.
+macro_rules! naive_avx2_x2_impl {
+    ($name:ident, $elem:ty, $lanes:expr, $load:ident, $mul:ident, $add:ident,
+     $zero:ident, $store:ident) => {
+        #[target_feature(enable = "avx2")]
+        unsafe fn $name(
+            a0: &[$elem],
+            b0: &[$elem],
+            a1: &[$elem],
+            b1: &[$elem],
+        ) -> ($elem, $elem) {
+            use core::arch::x86_64::*;
+            let n0 = a0.len().min(b0.len());
+            let n1 = a1.len().min(b1.len());
+            let mut s0 = [$zero(); 4];
+            let mut s1 = [$zero(); 4];
+            let mut i0 = 0usize;
+            let mut i1 = 0usize;
+            while i0 + 4 * $lanes <= n0 && i1 + 4 * $lanes <= n1 {
+                naive_iter4!(a0, b0, i0, s0, $lanes, $load, $mul, $add);
+                naive_iter4!(a1, b1, i1, s1, $lanes, $load, $mul, $add);
+                i0 += 4 * $lanes;
+                i1 += 4 * $lanes;
+            }
+            while i0 + 4 * $lanes <= n0 {
+                naive_iter4!(a0, b0, i0, s0, $lanes, $load, $mul, $add);
+                i0 += 4 * $lanes;
+            }
+            while i1 + 4 * $lanes <= n1 {
+                naive_iter4!(a1, b1, i1, s1, $lanes, $load, $mul, $add);
+                i1 += 4 * $lanes;
+            }
+            let r0 = naive_finish!(a0, b0, i0, n0, s0, $elem, $lanes, $store);
+            let r1 = naive_finish!(a1, b1, i1, n1, s1, $elem, $lanes, $store);
+            (r0, r1)
+        }
+    };
+}
+
+naive_avx2_x2_impl!(
+    naive_avx2_x2_f32,
+    f32,
+    8,
+    _mm256_loadu_ps,
+    _mm256_mul_ps,
+    _mm256_add_ps,
+    _mm256_setzero_ps,
+    _mm256_storeu_ps
+);
+naive_avx2_x2_impl!(
+    naive_avx2_x2_f64,
+    f64,
+    4,
+    _mm256_loadu_pd,
+    _mm256_mul_pd,
+    _mm256_add_pd,
+    _mm256_setzero_pd,
+    _mm256_storeu_pd
+);
+
+/// Public wrapper over a pairwise-fused AVX2 twin: requests are taken two
+/// at a time; a trailing odd request (and the no-AVX2 fallback) calls the
+/// single-dot twin itself, so results are bit-identical in every case.
+macro_rules! avx2_batch_wrapper {
+    ($name:ident, $ty:ty, $x2:ident, $single:path) => {
+        pub fn $name(pairs: &[(&[$ty], &[$ty])], out: &mut [$ty]) {
+            assert_eq!(pairs.len(), out.len());
+            if !is_x86_feature_detected!("avx2") {
+                // same values as the single kernel's own fallback chain
+                for (o, &(a, b)) in out.iter_mut().zip(pairs) {
+                    *o = $single(a, b);
+                }
+                return;
+            }
+            let mut g = 0usize;
+            while g + 2 <= pairs.len() {
+                let (a0, b0) = pairs[g];
+                let (a1, b1) = pairs[g + 1];
+                let (r0, r1) = unsafe { $x2(a0, b0, a1, b1) };
+                out[g] = r0;
+                out[g + 1] = r1;
+                g += 2;
+            }
+            if g < pairs.len() {
+                let (a, b) = pairs[g];
+                out[g] = $single(a, b);
+            }
+        }
+    };
+}
+
+avx2_batch_wrapper!(kahan_avx2_batch_f32, f32, kahan_avx2_x2_f32, avx2::kahan_f32);
+avx2_batch_wrapper!(kahan_avx2_batch_f64, f64, kahan_avx2_x2_f64, avx2::kahan_f64);
+avx2_batch_wrapper!(naive_avx2_batch_f32, f32, naive_avx2_x2_f32, avx2::naive_f32);
+avx2_batch_wrapper!(naive_avx2_batch_f64, f64, naive_avx2_x2_f64, avx2::naive_f64);
+
+/// Detect CPU features and build the batch registry (runs once; see
+/// [`batch_registry_static`]).
+fn detect_batch_registry() -> Vec<BatchKernel> {
+    let avx2 = is_x86_feature_detected!("avx2");
+    vec![
+        // --- f32 ---
+        BatchKernel { name: "batch4-kahan-compiler-SP", matches: "kahan-compiler-SP", available: true, f: BatchKernelFn::F32(kahan_seq_batch_f32) },
+        BatchKernel { name: "batch4-naive-scalar-SP", matches: "naive-scalar-SP", available: true, f: BatchKernelFn::F32(naive_seq_batch_f32) },
+        BatchKernel { name: "batch2-kahan-AVX2-SP", matches: "kahan-AVX2-SP", available: avx2, f: BatchKernelFn::F32(kahan_avx2_batch_f32) },
+        BatchKernel { name: "batch2-naive-AVX2-SP", matches: "naive-AVX2-SP", available: avx2, f: BatchKernelFn::F32(naive_avx2_batch_f32) },
+        // --- f64 ---
+        BatchKernel { name: "batch4-kahan-compiler-DP", matches: "kahan-compiler-DP", available: true, f: BatchKernelFn::F64(kahan_seq_batch_f64) },
+        BatchKernel { name: "batch4-naive-scalar-DP", matches: "naive-scalar-DP", available: true, f: BatchKernelFn::F64(naive_seq_batch_f64) },
+        BatchKernel { name: "batch2-kahan-AVX2-DP", matches: "kahan-AVX2-DP", available: avx2, f: BatchKernelFn::F64(kahan_avx2_batch_f64) },
+        BatchKernel { name: "batch2-naive-AVX2-DP", matches: "naive-AVX2-DP", available: avx2, f: BatchKernelFn::F64(naive_avx2_batch_f64) },
+    ]
+}
+
+/// The process-wide fused-kernel registry (feature detection runs once).
+pub fn batch_registry_static() -> &'static [BatchKernel] {
+    static REGISTRY: std::sync::OnceLock<Vec<BatchKernel>> = std::sync::OnceLock::new();
+    REGISTRY.get_or_init(detect_batch_registry)
+}
+
+/// The fused twin of a single-dot registry kernel, if one exists and the
+/// host supports it.
+pub fn batch_for(single_name: &str) -> Option<&'static BatchKernel> {
+    batch_registry_static().iter().find(|k| k.available && k.matches == single_name)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{by_name, KernelFn};
+    use super::*;
+    use crate::accuracy::{gen_dot_f32, gen_dot_f64};
+    use crate::util::Rng;
+
+    fn single_f32(name: &str) -> fn(&[f32], &[f32]) -> f32 {
+        match by_name(name).expect("matched single kernel must exist").f {
+            KernelFn::F32(f) => f,
+            KernelFn::F64(_) => panic!("{name} is not f32"),
+        }
+    }
+
+    fn single_f64(name: &str) -> fn(&[f64], &[f64]) -> f64 {
+        match by_name(name).expect("matched single kernel must exist").f {
+            KernelFn::F64(f) => f,
+            KernelFn::F32(_) => panic!("{name} is not f64"),
+        }
+    }
+
+    /// THE invariant: every available fused kernel is bit-identical, per
+    /// request, to its single-dot twin — on ill-conditioned
+    /// Ogita–Rump–Oishi inputs, random lengths (tails included), and every
+    /// batch size 1..=6 (odd sizes exercise the leftover path).
+    #[test]
+    fn fused_kernels_bit_identical_to_single_twin() {
+        crate::util::prop::check("batch-kernels-bit-identical", 25, |rng| {
+            let bsz = 1 + rng.below(6) as usize;
+            let mut pairs_f32: Vec<(Vec<f32>, Vec<f32>)> = Vec::new();
+            let mut pairs_f64: Vec<(Vec<f64>, Vec<f64>)> = Vec::new();
+            for _ in 0..bsz {
+                // mix ill-conditioned constructions with awkward lengths
+                if rng.uniform() < 0.5 {
+                    let n = 6 + rng.below(600) as usize;
+                    let (a, b, _, _) = gen_dot_f32(n, 1e6, rng);
+                    pairs_f32.push((a, b));
+                    let n = 6 + rng.below(600) as usize;
+                    let (a, b, _, _) = gen_dot_f64(n, 1e10, rng);
+                    pairs_f64.push((a, b));
+                } else {
+                    let n = rng.below(130) as usize; // covers 0, 1, tails
+                    pairs_f32.push((rng.normal_f32_vec(n), rng.normal_f32_vec(n)));
+                    let n = rng.below(70) as usize;
+                    pairs_f64.push((rng.normal_f64_vec(n), rng.normal_f64_vec(n)));
+                }
+            }
+            let view32: Vec<(&[f32], &[f32])> =
+                pairs_f32.iter().map(|(a, b)| (a.as_slice(), b.as_slice())).collect();
+            let view64: Vec<(&[f64], &[f64])> =
+                pairs_f64.iter().map(|(a, b)| (a.as_slice(), b.as_slice())).collect();
+            for k in batch_registry_static().iter().filter(|k| k.available) {
+                match k.f {
+                    BatchKernelFn::F32(_) => {
+                        let f = single_f32(k.matches);
+                        let mut out = vec![0.0f32; view32.len()];
+                        k.call_f32(&view32, &mut out);
+                        for (i, &(a, b)) in view32.iter().enumerate() {
+                            let want = f(a, b);
+                            crate::prop_assert!(
+                                out[i].to_bits() == want.to_bits(),
+                                "{} req {i}/{bsz} (n={}): {:e} vs single {:e}",
+                                k.name,
+                                a.len(),
+                                out[i],
+                                want
+                            );
+                        }
+                    }
+                    BatchKernelFn::F64(_) => {
+                        let f = single_f64(k.matches);
+                        let mut out = vec![0.0f64; view64.len()];
+                        k.call_f64(&view64, &mut out);
+                        for (i, &(a, b)) in view64.iter().enumerate() {
+                            let want = f(a, b);
+                            crate::prop_assert!(
+                                out[i].to_bits() == want.to_bits(),
+                                "{} req {i}/{bsz} (n={}): {:e} vs single {:e}",
+                                k.name,
+                                a.len(),
+                                out[i],
+                                want
+                            );
+                        }
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn serial_fallback_is_trivially_identical() {
+        let mut rng = Rng::new(91);
+        let pairs: Vec<(Vec<f32>, Vec<f32>)> =
+            (0..5).map(|_| (rng.normal_f32_vec(100), rng.normal_f32_vec(100))).collect();
+        let view: Vec<(&[f32], &[f32])> =
+            pairs.iter().map(|(a, b)| (a.as_slice(), b.as_slice())).collect();
+        let mut out = vec![0.0f32; 5];
+        serial_f32(scalar::kahan_unrolled_f32, &view, &mut out);
+        for (i, &(a, b)) in view.iter().enumerate() {
+            assert_eq!(out[i].to_bits(), scalar::kahan_unrolled_f32(a, b).to_bits());
+        }
+    }
+
+    #[test]
+    fn every_fused_kernel_matches_a_registered_single_kernel() {
+        for k in batch_registry_static() {
+            let single = by_name(k.matches)
+                .unwrap_or_else(|| panic!("{}: no single kernel named {}", k.name, k.matches));
+            // precision of the pairing must line up
+            match (k.f, single.f) {
+                (BatchKernelFn::F32(_), KernelFn::F32(_)) => {}
+                (BatchKernelFn::F64(_), KernelFn::F64(_)) => {}
+                _ => panic!("{}: precision mismatch with {}", k.name, k.matches),
+            }
+            // lookup by the single name finds this kernel when available
+            if k.available {
+                assert!(batch_for(k.matches).is_some());
+            }
+        }
+        assert!(batch_for("bogus-kernel").is_none());
+    }
+
+    #[test]
+    fn exact_small_cases() {
+        let a: Vec<f32> = (1..=100).map(|i| i as f32).collect();
+        let b = vec![1.0f32; 100];
+        let pairs: Vec<(&[f32], &[f32])> =
+            (0..5).map(|_| (a.as_slice(), b.as_slice())).collect();
+        let mut out = vec![0.0f32; 5];
+        kahan_seq_batch_f32(&pairs, &mut out);
+        assert_eq!(out, vec![5050.0; 5]);
+        kahan_avx2_batch_f32(&pairs, &mut out);
+        assert_eq!(out, vec![5050.0; 5]);
+        naive_avx2_batch_f32(&pairs, &mut out);
+        assert_eq!(out, vec![5050.0; 5]);
+    }
+}

@@ -12,10 +12,20 @@
 
 pub mod avx2;
 pub mod avx512;
+pub mod batch;
 pub mod scalar;
 pub mod sse;
 
 use crate::isa::{Precision, Simd, Variant};
+
+/// True when both slice heads sit on an `align`-byte boundary — the pooled
+/// fast path (`engine::BufferPool` guarantees 64-byte block starts, and
+/// chunk boundaries are cut on cache-line element multiples). Aligned and
+/// unaligned loads read identical values, so dispatching on this never
+/// changes results, only the load µops.
+pub(crate) fn both_aligned<T>(a: &[T], b: &[T], align: usize) -> bool {
+    (a.as_ptr() as usize) % align == 0 && (b.as_ptr() as usize) % align == 0
+}
 
 /// A host kernel entry point (one per precision).
 #[derive(Clone, Copy)]
@@ -117,6 +127,7 @@ fn detect_registry() -> Vec<HostKernel> {
         HostKernel { name: "kahan-fma-AVX2-SP", variant: Variant::KahanFma, simd: Simd::Avx, prec: Precision::Sp, available: fma, f: KernelFn::F32(avx2::kahan_fma_f32) },
         HostKernel { name: "naive-AVX512-SP", variant: Variant::Naive, simd: Simd::Avx512, prec: Precision::Sp, available: avx512, f: KernelFn::F32(avx512::naive_f32) },
         HostKernel { name: "kahan-AVX512-SP", variant: Variant::Kahan, simd: Simd::Avx512, prec: Precision::Sp, available: avx512, f: KernelFn::F32(avx512::kahan_f32) },
+        HostKernel { name: "kahan-fma-AVX512-SP", variant: Variant::KahanFma, simd: Simd::Avx512, prec: Precision::Sp, available: avx512, f: KernelFn::F32(avx512::kahan_fma_f32) },
         // --- f64 ---
         HostKernel { name: "naive-scalar-DP", variant: Variant::Naive, simd: Simd::Scalar, prec: Precision::Dp, available: true, f: KernelFn::F64(scalar::naive_f64) },
         HostKernel { name: "naive-AVX2-DP", variant: Variant::Naive, simd: Simd::Avx, prec: Precision::Dp, available: avx2, f: KernelFn::F64(avx2::naive_f64) },
@@ -125,6 +136,9 @@ fn detect_registry() -> Vec<HostKernel> {
         HostKernel { name: "kahan-SSE-DP", variant: Variant::Kahan, simd: Simd::Sse, prec: Precision::Dp, available: sse, f: KernelFn::F64(sse::kahan_f64) },
         HostKernel { name: "kahan-AVX2-DP", variant: Variant::Kahan, simd: Simd::Avx, prec: Precision::Dp, available: avx2, f: KernelFn::F64(avx2::kahan_f64) },
         HostKernel { name: "kahan-fma-AVX2-DP", variant: Variant::KahanFma, simd: Simd::Avx, prec: Precision::Dp, available: fma, f: KernelFn::F64(avx2::kahan_fma_f64) },
+        HostKernel { name: "naive-AVX512-DP", variant: Variant::Naive, simd: Simd::Avx512, prec: Precision::Dp, available: avx512, f: KernelFn::F64(avx512::naive_f64) },
+        HostKernel { name: "kahan-AVX512-DP", variant: Variant::Kahan, simd: Simd::Avx512, prec: Precision::Dp, available: avx512, f: KernelFn::F64(avx512::kahan_f64) },
+        HostKernel { name: "kahan-fma-AVX512-DP", variant: Variant::KahanFma, simd: Simd::Avx512, prec: Precision::Dp, available: avx512, f: KernelFn::F64(avx512::kahan_fma_f64) },
     ]
 }
 
@@ -147,6 +161,50 @@ pub fn registry() -> Vec<HostKernel> {
 /// Look up a kernel by name (exact match; allocation-free).
 pub fn by_name(name: &str) -> Option<HostKernel> {
     registry_static().iter().find(|k| k.name == name).copied()
+}
+
+/// Test-only helper shared by the per-ISA alignment-dispatch tests.
+#[cfg(test)]
+pub(crate) mod tests_support {
+    /// A copy of `src` whose slice head is GUARANTEED not aligned to
+    /// `align` bytes. A plain `Vec` head alone could land aligned by
+    /// allocator luck, silently turning an aligned-vs-unaligned
+    /// comparison into aligned-vs-aligned; here the values live at an
+    /// element offset into an over-allocated buffer, with the offset
+    /// found at runtime so the head provably misses every boundary.
+    pub struct MisalignedCopy<T> {
+        buf: Vec<T>,
+        off: usize,
+        len: usize,
+    }
+
+    impl<T: Copy> MisalignedCopy<T> {
+        pub fn as_slice(&self) -> &[T] {
+            &self.buf[self.off..self.off + self.len]
+        }
+    }
+
+    pub fn misaligned_copy<T: Copy + Default>(src: &[T], align: usize) -> MisalignedCopy<T> {
+        let elem = std::mem::size_of::<T>();
+        let slots = align / elem + 1;
+        let mut buf = vec![T::default(); src.len() + slots];
+        // element offsets advance `elem` bytes apiece, so among
+        // `align/elem + 1` consecutive offsets at most one can sit on an
+        // `align` boundary — a misaligned one always exists
+        let off = (1..=slots)
+            .find(|&o| (buf[o..].as_ptr() as usize) % align != 0)
+            .expect("a misaligned offset always exists");
+        buf[off..off + src.len()].copy_from_slice(src);
+        MisalignedCopy { buf, off, len: src.len() }
+    }
+
+    #[test]
+    fn misaligned_copy_is_misaligned_and_value_identical() {
+        let src: Vec<f32> = (0..100).map(|i| i as f32 * 0.25).collect();
+        let m = misaligned_copy(&src, 64);
+        assert_ne!(m.as_slice().as_ptr() as usize % 64, 0);
+        assert_eq!(m.as_slice(), &src[..]);
+    }
 }
 
 #[cfg(test)]

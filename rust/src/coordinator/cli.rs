@@ -227,6 +227,12 @@ pub fn run(args: &Args) -> Result<(), String> {
                 e.shards(),
                 svc_cfg.router_queue_depth
             );
+            println!(
+                "lane batching: up to {} queued small dots fuse into one engine batch \
+                 per wake-up (bit-identical to serial; admission bursts coalesce into \
+                 one worker pass)",
+                svc_cfg.max_batch
+            );
             for (s, es) in e.stats_per_shard().iter().enumerate() {
                 println!(
                     "  shard {s}: {} workers, pin failures {}",
@@ -243,8 +249,9 @@ pub fn run(args: &Args) -> Result<(), String> {
             let s = e.stats();
             println!("smoke dot (n = {n}): engine {got:.6e}, exact {exact:.6e}");
             println!(
-                "engine stats: {} requests, {} parallel, {} split, pool hits/misses {}/{}",
-                s.requests, s.parallel, s.split_dots, s.pool.hits, s.pool.misses
+                "engine stats: {} requests, {} parallel, {} batched, {} split, pool \
+                 hits/misses {}/{}",
+                s.requests, s.parallel, s.batched, s.split_dots, s.pool.hits, s.pool.misses
             );
         }
         "accuracy" => {

@@ -10,7 +10,15 @@
 //!   serialize behind): pooled streams go to the submitter of their home
 //!   shard, fresh requests round-robin across submitters, and each
 //!   submitter executes on *its* shard — so two small independent requests
-//!   run concurrently on different shards. Very large dots still fan out
+//!   run concurrently on different shards. Submitters drain their queue
+//!   **greedily**: a wake-up that finds k ≥ 2 queued small dots executes
+//!   them as one engine batch (`ServiceConfig::max_batch` caps the fuse;
+//!   results are bit-identical to serial execution — the engine module's
+//!   "Batching invariant"), and a burst of admissions to one shard
+//!   coalesces into a single worker pass (`Msg::AdmitPair` admits a
+//!   co-located pair in one message). Runs never cross a message of a
+//!   different kind, so each lane keeps exact FIFO order. Very large dots
+//!   still fan out
 //!   across every shard with the flat compensated cross-shard merge (the
 //!   submitter only initiates the split), which keeps the sequential Kahan
 //!   bound and 1-vs-N-shard bit-identity intact. Queues are bounded
@@ -77,10 +85,33 @@ enum Msg {
         reply: mpsc::Sender<DotResponse>,
         submitted: Instant,
     },
+    /// Admit a stream pair in ONE message (Host backend only): both
+    /// streams land on the same shard in a single worker pass — the
+    /// co-located placement `admit_near` needed two routing round-trips
+    /// for.
+    AdmitPair {
+        a: Vec<f32>,
+        b: Vec<f32>,
+        reply: mpsc::Sender<Result<(u64, u64), String>>,
+    },
     /// Drop an admitted stream (Pjrt path only — the Host client removes
     /// it from the shared stream table synchronously instead).
     Release { handle: u64 },
     Shutdown,
+}
+
+/// Discriminant for run-grouping in the submitter's greedy drain: only
+/// consecutive messages of the same kind coalesce, so each lane keeps its
+/// exact FIFO execution order.
+fn msg_kind(m: &Msg) -> u8 {
+    match m {
+        Msg::Req(_) => 0,
+        Msg::ReqPooled { .. } => 1,
+        Msg::Admit { .. } => 2,
+        Msg::AdmitPair { .. } => 3,
+        Msg::Release { .. } => 4,
+        Msg::Shutdown => 5,
+    }
 }
 
 /// Which execution path serves requests.
@@ -127,7 +158,13 @@ pub struct ServiceConfig {
     /// shard and starve compute), and the stall is counted in
     /// [`ServiceStats::queue_full_stalls`].
     pub router_queue_depth: usize,
-    /// max requests fused into one batched execute (Pjrt backend)
+    /// Max requests fused into one batched execute. Host backend: a
+    /// submitter that wakes up with k ≥ 2 queued small dots executes them
+    /// as ONE engine batch (chunks of at most `max_batch`; bit-identical
+    /// to serial execution — see the engine module's batching invariant),
+    /// and bursts of admissions coalesce into one worker pass the same
+    /// way. `max_batch = 1` disables coalescing. Pjrt backend: the batch
+    /// window size, as before.
     pub max_batch: usize,
     /// how long the batcher waits to fill a batch (Pjrt backend)
     pub window: Duration,
@@ -144,7 +181,7 @@ impl Default for ServiceConfig {
         ServiceConfig {
             backend: Backend::Host,
             router_queue_depth: 64,
-            max_batch: 8,
+            max_batch: 16,
             window: Duration::from_millis(2),
             batched_artifact_kahan: "batched_dot_kahan_f32_b8_n16384".into(),
             batched_artifact_naive: "batched_dot_naive_f32_b8_n16384".into(),
@@ -184,6 +221,13 @@ pub struct ServiceStats {
     pub pooled_calls: u64,
     pub pjrt_calls: u64,
     pub batched_calls: u64,
+    /// Host backend: engine batch calls that fused ≥ 2 queued dots into
+    /// one execution (each also counts once in `engine_calls`)
+    pub batches: u64,
+    /// Host backend: dots served inside those batches
+    pub batched_requests: u64,
+    /// Host backend: admission bursts coalesced into one worker pass
+    pub admit_batches: u64,
     pub errors: u64,
     /// total sends that hit a full lane queue and blocked (back-pressure)
     pub queue_full_stalls: u64,
@@ -207,6 +251,8 @@ struct LaneCounters {
 /// directly — there is no central router thread.
 struct HostRouter {
     engine: &'static ShardedEngine,
+    /// coalescing cap per engine batch (`ServiceConfig::max_batch`, ≥ 1)
+    max_batch: usize,
     /// bounded hand-off to each shard's submitter (index == shard)
     queues: Vec<mpsc::SyncSender<Msg>>,
     /// admitted streams: handle -> home-shard slice. Inserted by the
@@ -223,6 +269,9 @@ struct HostRouter {
     engine_calls: AtomicU64,
     admitted: AtomicU64,
     pooled_calls: AtomicU64,
+    batches: AtomicU64,
+    batched_requests: AtomicU64,
+    admit_batches: AtomicU64,
     errors: AtomicU64,
     drained: AtomicU64,
 }
@@ -350,10 +399,306 @@ impl HostRouter {
                     latency: submitted.elapsed(),
                 });
             }
+            Msg::AdmitPair { a, b, reply } => {
+                // one message, one worker pass, one shard for both streams
+                // — the steady-state pair placement without the second
+                // routing round-trip `admit_near` paid
+                let homed = self.engine.admit_many_to_f32(s, &[&a, &b]);
+                let mut handles = homed.into_iter().map(|h| {
+                    let handle = self.next_handle.fetch_add(1, Ordering::Relaxed);
+                    self.streams.write().unwrap().insert(handle, h);
+                    handle
+                });
+                let ha = handles.next().expect("pair admission");
+                let hb = handles.next().expect("pair admission");
+                self.admitted.fetch_add(2, Ordering::Relaxed);
+                let _ = reply.send(Ok((ha, hb)));
+            }
             Msg::Release { handle } => {
                 // unreachable on the Host path (the client releases
                 // synchronously); kept for match exhaustiveness
                 self.streams.write().unwrap().remove(&handle);
+            }
+        }
+    }
+
+    /// Serve a coalesced run of fresh dot requests: validate each, then
+    /// execute same-variant chunks of ≥ 2 as ONE engine batch on this
+    /// lane's shard (bit-identical to per-request execution). On a batch
+    /// panic the chunk falls back to per-request serves, so only the
+    /// culprit request errors.
+    fn serve_req_batch(&self, s: usize, reqs: Vec<DotRequest>) {
+        self.requests.fetch_add(reqs.len() as u64, Ordering::Relaxed);
+        let mut kahan: Vec<DotRequest> = Vec::new();
+        let mut naive: Vec<DotRequest> = Vec::new();
+        for req in reqs {
+            match parse_variant(req.variant) {
+                Err(e) => {
+                    self.errors.fetch_add(1, Ordering::Relaxed);
+                    let _ = req.reply.send(DotResponse {
+                        id: req.id,
+                        value: Err(e),
+                        batch_size: 1,
+                        latency: req.submitted.elapsed(),
+                    });
+                }
+                Ok(_) if req.a.len() != req.b.len() => {
+                    self.errors.fetch_add(1, Ordering::Relaxed);
+                    let _ = req.reply.send(DotResponse {
+                        id: req.id,
+                        value: Err(format!(
+                            "length mismatch {} vs {}",
+                            req.a.len(),
+                            req.b.len()
+                        )),
+                        batch_size: 1,
+                        latency: req.submitted.elapsed(),
+                    });
+                }
+                Ok(Variant::Naive) => naive.push(req),
+                Ok(_) => kahan.push(req),
+            }
+        }
+        for (v, mut group) in [(Variant::Kahan, kahan), (Variant::Naive, naive)] {
+            while !group.is_empty() {
+                let take = group.len().min(self.max_batch);
+                let chunk: Vec<DotRequest> = group.drain(..take).collect();
+                self.serve_req_chunk(s, v, chunk);
+            }
+        }
+    }
+
+    /// One engine batch call for a same-variant chunk of validated fresh
+    /// requests (or the plain single-request path for a chunk of one).
+    fn serve_req_chunk(&self, s: usize, v: Variant, chunk: Vec<DotRequest>) {
+        if chunk.len() == 1 {
+            // mirror of the Msg::Req single path, minus the re-validation
+            let req = &chunk[0];
+            let value = self.execute(s, req.variant, false, |var| {
+                self.engine.dot_on_f32(s, var, &req.a, &req.b)
+            });
+            if value.is_err() {
+                self.errors.fetch_add(1, Ordering::Relaxed);
+            }
+            let req = chunk.into_iter().next().expect("chunk of one");
+            let _ = req.reply.send(DotResponse {
+                id: req.id,
+                value,
+                batch_size: 1,
+                latency: req.submitted.elapsed(),
+            });
+            return;
+        }
+        let pairs: Vec<(&[f32], &[f32])> =
+            chunk.iter().map(|r| (r.a.as_slice(), r.b.as_slice())).collect();
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            self.engine.dot_batch_on_f32(s, v, &pairs)
+        }));
+        drop(pairs);
+        match r {
+            Ok(vals) => {
+                let bsz = chunk.len();
+                // counted only on success: the panic fallback below routes
+                // every request through `execute`, which does its own
+                // counting — counting both would break the
+                // `engine_calls - batches + batched_requests == served`
+                // identity the e2e driver asserts
+                self.engine_calls.fetch_add(1, Ordering::Relaxed);
+                self.batches.fetch_add(1, Ordering::Relaxed);
+                self.batched_requests.fetch_add(bsz as u64, Ordering::Relaxed);
+                self.lanes[s].executed.fetch_add(bsz as u64, Ordering::Relaxed);
+                for (req, val) in chunk.into_iter().zip(vals) {
+                    let _ = req.reply.send(DotResponse {
+                        id: req.id,
+                        value: Ok(val),
+                        batch_size: bsz,
+                        latency: req.submitted.elapsed(),
+                    });
+                }
+            }
+            Err(_) => {
+                // the batch died (a kernel panicked): fall back to
+                // per-request execution so only the culprit errors
+                self.errors.fetch_add(1, Ordering::Relaxed);
+                for req in chunk {
+                    let value = self.execute(s, req.variant, false, |var| {
+                        self.engine.dot_on_f32(s, var, &req.a, &req.b)
+                    });
+                    if value.is_err() {
+                        self.errors.fetch_add(1, Ordering::Relaxed);
+                    }
+                    let _ = req.reply.send(DotResponse {
+                        id: req.id,
+                        value,
+                        batch_size: 1,
+                        latency: req.submitted.elapsed(),
+                    });
+                }
+            }
+        }
+    }
+
+    /// Serve a coalesced run of pooled dots: operands were resolved at
+    /// submit time, so validation here is presence + length; valid
+    /// same-variant chunks of ≥ 2 execute as one homed engine batch on
+    /// the pairs' home shards.
+    fn serve_pooled_batch(&self, s: usize, msgs: Vec<Msg>) {
+        struct Pooled {
+            id: u64,
+            variant: &'static str,
+            sa: HomedSlice<f32>,
+            sb: HomedSlice<f32>,
+            reply: mpsc::Sender<DotResponse>,
+            submitted: Instant,
+        }
+        self.requests.fetch_add(msgs.len() as u64, Ordering::Relaxed);
+        let mut kahan: Vec<Pooled> = Vec::new();
+        let mut naive: Vec<Pooled> = Vec::new();
+        for msg in msgs {
+            let Msg::ReqPooled { id, variant, a, b, sa, sb, reply, submitted } = msg else {
+                unreachable!("serve_pooled_batch takes ReqPooled runs only");
+            };
+            let validated: Result<Variant, String> = match (parse_variant(variant), &sa, &sb) {
+                (Err(e), _, _) => Err(e),
+                (Ok(v), Some(sa), Some(sb)) if sa.len() == sb.len() => Ok(v),
+                (Ok(_), Some(sa), Some(sb)) => {
+                    Err(format!("length mismatch {} vs {}", sa.len(), sb.len()))
+                }
+                (Ok(_), sa, _) => Err(format!(
+                    "unknown stream handle {}",
+                    if sa.is_some() { b } else { a }
+                )),
+            };
+            let v = match validated {
+                Err(e) => {
+                    self.errors.fetch_add(1, Ordering::Relaxed);
+                    let _ = reply.send(DotResponse {
+                        id,
+                        value: Err(e),
+                        batch_size: 1,
+                        latency: submitted.elapsed(),
+                    });
+                    continue;
+                }
+                Ok(v) => v,
+            };
+            let p = Pooled {
+                id,
+                variant,
+                sa: sa.expect("validated"),
+                sb: sb.expect("validated"),
+                reply,
+                submitted,
+            };
+            if v == Variant::Naive {
+                naive.push(p);
+            } else {
+                kahan.push(p);
+            }
+        }
+        for (v, mut group) in [(Variant::Kahan, kahan), (Variant::Naive, naive)] {
+            while !group.is_empty() {
+                let take = group.len().min(self.max_batch);
+                let chunk: Vec<Pooled> = group.drain(..take).collect();
+                if chunk.len() == 1 {
+                    let p = &chunk[0];
+                    let value = self.execute(s, p.variant, true, |var| {
+                        self.engine.dot_homed_f32(var, &p.sa, &p.sb)
+                    });
+                    if value.is_err() {
+                        self.errors.fetch_add(1, Ordering::Relaxed);
+                    }
+                    let p = chunk.into_iter().next().expect("chunk of one");
+                    let _ = p.reply.send(DotResponse {
+                        id: p.id,
+                        value,
+                        batch_size: 1,
+                        latency: p.submitted.elapsed(),
+                    });
+                    continue;
+                }
+                let pairs: Vec<(&HomedSlice<f32>, &HomedSlice<f32>)> =
+                    chunk.iter().map(|p| (&p.sa, &p.sb)).collect();
+                let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    self.engine.dot_batch_homed_f32(v, &pairs)
+                }));
+                drop(pairs);
+                match r {
+                    Ok(vals) => {
+                        // success-only counting, as in `serve_req_chunk`:
+                        // the panic fallback's `execute` calls count for
+                        // themselves
+                        let bsz = chunk.len();
+                        self.engine_calls.fetch_add(1, Ordering::Relaxed);
+                        self.pooled_calls.fetch_add(bsz as u64, Ordering::Relaxed);
+                        self.batches.fetch_add(1, Ordering::Relaxed);
+                        self.batched_requests.fetch_add(bsz as u64, Ordering::Relaxed);
+                        self.lanes[s].executed.fetch_add(bsz as u64, Ordering::Relaxed);
+                        for (p, val) in chunk.into_iter().zip(vals) {
+                            let _ = p.reply.send(DotResponse {
+                                id: p.id,
+                                value: Ok(val),
+                                batch_size: bsz,
+                                latency: p.submitted.elapsed(),
+                            });
+                        }
+                    }
+                    Err(_) => {
+                        self.errors.fetch_add(1, Ordering::Relaxed);
+                        for p in chunk {
+                            let value = self.execute(s, p.variant, true, |var| {
+                                self.engine.dot_homed_f32(var, &p.sa, &p.sb)
+                            });
+                            if value.is_err() {
+                                self.errors.fetch_add(1, Ordering::Relaxed);
+                            }
+                            let _ = p.reply.send(DotResponse {
+                                id: p.id,
+                                value,
+                                batch_size: 1,
+                                latency: p.submitted.elapsed(),
+                            });
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// Serve a coalesced run of admissions: one worker pass copies up to
+    /// `max_batch` streams into shard `s`'s pool (the ROADMAP's
+    /// admission-coalescing item), then handles are minted and replied in
+    /// order. `max_batch = 1` degrades to the per-message path, as the
+    /// config documents.
+    fn serve_admit_batch(&self, s: usize, mut msgs: Vec<Msg>) {
+        while !msgs.is_empty() {
+            let take = msgs.len().min(self.max_batch);
+            let rest = msgs.split_off(take);
+            let group = std::mem::replace(&mut msgs, rest);
+            if group.len() == 1 {
+                for m in group {
+                    self.serve(s, m);
+                }
+                continue;
+            }
+            let mut datas: Vec<Vec<f32>> = Vec::with_capacity(group.len());
+            let mut replies: Vec<mpsc::Sender<Result<u64, String>>> =
+                Vec::with_capacity(group.len());
+            for msg in group {
+                let Msg::Admit { data, reply } = msg else {
+                    unreachable!("serve_admit_batch takes Admit runs only");
+                };
+                datas.push(data);
+                replies.push(reply);
+            }
+            let views: Vec<&[f32]> = datas.iter().map(|d| d.as_slice()).collect();
+            let homed = self.engine.admit_many_to_f32(s, &views);
+            self.admit_batches.fetch_add(1, Ordering::Relaxed);
+            for (h, reply) in homed.into_iter().zip(replies) {
+                let handle = self.next_handle.fetch_add(1, Ordering::Relaxed);
+                self.streams.write().unwrap().insert(handle, h);
+                self.admitted.fetch_add(1, Ordering::Relaxed);
+                let _ = reply.send(Ok(handle));
             }
         }
     }
@@ -375,6 +720,9 @@ impl HostRouter {
             pooled_calls: self.pooled_calls.load(Ordering::Relaxed),
             pjrt_calls: 0,
             batched_calls: 0,
+            batches: self.batches.load(Ordering::Relaxed),
+            batched_requests: self.batched_requests.load(Ordering::Relaxed),
+            admit_batches: self.admit_batches.load(Ordering::Relaxed),
             errors: self.errors.load(Ordering::Relaxed),
             queue_full_stalls: lanes.iter().map(|l| l.queue_full_stalls).sum(),
             drained: self.drained.load(Ordering::Relaxed),
@@ -383,28 +731,108 @@ impl HostRouter {
     }
 }
 
-/// One shard's submitter: drain the lane queue in FIFO order, executing
-/// each message on this shard. On the shutdown marker, everything already
-/// queued behind it is *served* (not dropped) before the thread exits —
-/// the old single-router loop broke out of `recv` on shutdown and silently
-/// dropped queued requests, leaving their clients with a disconnected
-/// reply channel.
+/// One shard's submitter: drain the lane queue GREEDILY in FIFO order.
+/// Each wake-up takes everything already queued (capped), then serves it
+/// as runs — consecutive small dots become one engine batch, consecutive
+/// admissions one worker pass — so a burst pays one handoff instead of
+/// one per request, without reordering anything (runs never cross a
+/// message of a different kind). On the shutdown marker, everything
+/// already queued behind it is *served* (not dropped) before the thread
+/// exits — the old single-router loop broke out of `recv` on shutdown and
+/// silently dropped queued requests, leaving their clients with a
+/// disconnected reply channel.
 fn submitter_loop(router: &HostRouter, shard: usize, rx: mpsc::Receiver<Msg>) {
     // calibrate the dispatch table before the first request, on a worker
     // thread so `DotService::start` stays non-blocking (the OnceLock makes
     // one submitter calibrate while its peers wait)
     let _ = crate::engine::dispatch();
-    while let Ok(msg) = rx.recv() {
-        if matches!(msg, Msg::Shutdown) {
-            while let Ok(m) = rx.try_recv() {
-                if !matches!(m, Msg::Shutdown) {
-                    router.drained.fetch_add(1, Ordering::Relaxed);
-                    serve_caught(router, shard, m);
-                }
+    // bound one wake-up's gather so a firehose producer cannot starve the
+    // executions it is waiting on
+    let gather_cap = router.max_batch.max(1) * 4;
+    let mut shutdown = false;
+    loop {
+        let first = if shutdown {
+            match rx.try_recv() {
+                Ok(m) => m,
+                Err(_) => return,
             }
-            return;
+        } else {
+            match rx.recv() {
+                Ok(m) => m,
+                Err(_) => return,
+            }
+        };
+        let mut pending: Vec<Msg> = Vec::new();
+        match first {
+            Msg::Shutdown => shutdown = true,
+            m => {
+                if shutdown {
+                    router.drained.fetch_add(1, Ordering::Relaxed);
+                }
+                pending.push(m);
+            }
         }
-        serve_caught(router, shard, msg);
+        while pending.len() < gather_cap {
+            match rx.try_recv() {
+                Ok(Msg::Shutdown) => shutdown = true,
+                Ok(m) => {
+                    // messages gathered behind the marker are the drain set
+                    if shutdown {
+                        router.drained.fetch_add(1, Ordering::Relaxed);
+                    }
+                    pending.push(m);
+                }
+                Err(_) => break,
+            }
+        }
+        serve_pending(router, shard, pending);
+    }
+}
+
+/// Serve one wake-up's gathered messages as maximal same-kind runs, in
+/// arrival order.
+fn serve_pending(router: &HostRouter, shard: usize, msgs: Vec<Msg>) {
+    let mut run: Vec<Msg> = Vec::new();
+    for m in msgs {
+        if !run.is_empty() && msg_kind(&run[0]) != msg_kind(&m) {
+            serve_run(router, shard, std::mem::take(&mut run));
+        }
+        run.push(m);
+    }
+    if !run.is_empty() {
+        serve_run(router, shard, run);
+    }
+}
+
+/// Execute one same-kind run: dot and admission runs of ≥ 2 take the
+/// coalesced paths, everything else the per-message path. Panic isolation
+/// as for `serve_caught` — a dead lane would silently blackhole its shard.
+fn serve_run(router: &HostRouter, shard: usize, mut run: Vec<Msg>) {
+    if run.len() == 1 {
+        serve_caught(router, shard, run.pop().expect("run of one"));
+        return;
+    }
+    let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| match msg_kind(&run[0]) {
+        0 => {
+            let reqs: Vec<DotRequest> = run
+                .into_iter()
+                .map(|m| match m {
+                    Msg::Req(r) => r,
+                    _ => unreachable!("mixed run"),
+                })
+                .collect();
+            router.serve_req_batch(shard, reqs);
+        }
+        1 => router.serve_pooled_batch(shard, run),
+        2 => router.serve_admit_batch(shard, run),
+        _ => {
+            for m in run {
+                router.serve(shard, m);
+            }
+        }
+    }));
+    if r.is_err() {
+        router.errors.fetch_add(1, Ordering::Relaxed);
     }
 }
 
@@ -496,6 +924,33 @@ impl DotClient {
     /// executes there (Host backend only — the PJRT worker rejects it).
     pub fn admit_blocking(&self, data: Vec<f32>) -> Result<u64, String> {
         self.admit_near_blocking(data, None)
+    }
+
+    /// Admit a stream PAIR in one message: both streams land on the same
+    /// shard in a single worker pass — the co-located steady-state
+    /// placement (`admit_near`) without the second routing round-trip.
+    /// Host backend only.
+    pub fn admit_pair_blocking(
+        &self,
+        a: Vec<f32>,
+        b: Vec<f32>,
+    ) -> Result<(u64, u64), String> {
+        let (reply, rx) = mpsc::channel();
+        match &self.inner {
+            ClientInner::Host(r) => {
+                let s = r.route_fresh();
+                r.send_to(s, Msg::AdmitPair { a, b, reply });
+            }
+            ClientInner::Pjrt(tx) => {
+                if tx.send(Msg::AdmitPair { a, b, reply }).is_err() {
+                    return Err("service stopped".into());
+                }
+            }
+        }
+        match rx.recv() {
+            Ok(r) => r,
+            Err(_) => Err("service stopped".into()),
+        }
     }
 
     /// Like [`DotClient::admit_blocking`], but co-locate the stream on the
@@ -653,6 +1108,7 @@ impl DotService {
         }
         let router = Arc::new(HostRouter {
             engine,
+            max_batch: config.max_batch.max(1),
             queues,
             streams: RwLock::new(HashMap::new()),
             next_handle: AtomicU64::new(1),
@@ -662,6 +1118,9 @@ impl DotService {
             engine_calls: AtomicU64::new(0),
             admitted: AtomicU64::new(0),
             pooled_calls: AtomicU64::new(0),
+            batches: AtomicU64::new(0),
+            batched_requests: AtomicU64::new(0),
+            admit_batches: AtomicU64::new(0),
             errors: AtomicU64::new(0),
             drained: AtomicU64::new(0),
         });
@@ -741,6 +1200,9 @@ fn worker_loop_pjrt(
     // rejects it synchronously rather than pretending to hold streams
     let reject_pooled = |msg: Msg| match msg {
         Msg::Admit { reply, .. } => {
+            let _ = reply.send(Err("stream admission requires the Host backend".into()));
+        }
+        Msg::AdmitPair { reply, .. } => {
             let _ = reply.send(Err("stream admission requires the Host backend".into()));
         }
         Msg::ReqPooled { id, reply, submitted, .. } => {
@@ -994,7 +1456,14 @@ mod tests {
         }
         let stats = svc.stop();
         assert_eq!(stats.requests, 3);
-        assert_eq!(stats.engine_calls, 3);
+        // a burst may coalesce into engine batches (timing-dependent), but
+        // singles + batched requests must account for every request
+        assert!(stats.engine_calls >= 1 && stats.engine_calls <= 3, "{stats:?}");
+        assert_eq!(
+            (stats.engine_calls - stats.batches) + stats.batched_requests,
+            3,
+            "{stats:?}"
+        );
         assert_eq!(stats.pjrt_calls, 0);
         assert_eq!(stats.errors, 0);
         // every fresh request was routed to and executed by some lane
@@ -1242,6 +1711,182 @@ mod tests {
         assert_eq!(stats.requests, 3);
         assert_eq!(stats.drained, 2, "{stats:?}");
         assert_eq!(stats.errors, 0);
+    }
+
+    // ---- lane batching: coalescing, admission batching, controls ----
+
+    /// Wait until shard 0's engine has started executing at least `n`
+    /// requests (the submitter is then *inside* the engine, so everything
+    /// submitted next queues up behind it deterministically).
+    fn wait_engine_requests(engine: &ShardedEngine, n: u64) {
+        let t0 = Instant::now();
+        while engine.shard(0).stats().requests < n {
+            assert!(t0.elapsed() < Duration::from_secs(30), "engine never started request {n}");
+            std::thread::sleep(Duration::from_millis(1));
+        }
+    }
+
+    /// THE tentpole behavior, deterministically: a lane that wakes up with
+    /// k ≥ 2 queued small dots executes them as ONE engine batch, with
+    /// bit-identical results to serial re-submission.
+    #[test]
+    fn lane_coalesces_queued_small_dots_into_one_engine_batch() {
+        let engine = leak_engine(&Topology::single_node(), 2);
+        let (svc, client) = DotService::start_on(ServiceConfig::default(), engine);
+        let gate = Gate::close(engine, 0);
+
+        let mut rng = Rng::new(61);
+        let n_big = 200_000; // 1.6 MB: parallel path, blocks on the gate
+        let rx_big = client.submit(0, "kahan", rng.normal_f32_vec(n_big), rng.normal_f32_vec(n_big));
+        // the submitter must be INSIDE the big dot before the burst is
+        // queued, so the burst becomes exactly one wake-up's gather
+        wait_engine_requests(engine, 1);
+
+        let smalls: Vec<(Vec<f32>, Vec<f32>)> = [512usize, 1024, 700, 2048, 64, 4096]
+            .iter()
+            .map(|&n| (rng.normal_f32_vec(n), rng.normal_f32_vec(n)))
+            .collect();
+        let rxs: Vec<_> = smalls
+            .iter()
+            .enumerate()
+            .map(|(i, (a, b))| client.submit(1 + i as u64, "kahan", a.clone(), b.clone()))
+            .collect();
+
+        gate.open();
+        assert!(rx_big.recv_timeout(Duration::from_secs(30)).expect("big").value.is_ok());
+        let batched: Vec<f32> = rxs
+            .into_iter()
+            .map(|rx| {
+                let resp = rx.recv_timeout(Duration::from_secs(30)).expect("batched reply");
+                assert_eq!(resp.batch_size, 6, "all six queued smalls must share one batch");
+                resp.value.expect("batched value")
+            })
+            .collect();
+        // serial re-submission (blocking ⇒ no coalescing) must be
+        // bit-identical: batching never changes bits
+        for (i, (a, b)) in smalls.iter().enumerate() {
+            let serial = client.dot_blocking("kahan", a.clone(), b.clone()).expect("serial");
+            assert_eq!(
+                serial.to_bits(),
+                batched[i].to_bits(),
+                "req {i}: batched vs serial bits differ"
+            );
+        }
+
+        let stats = svc.stop();
+        assert_eq!(stats.batches, 1, "{stats:?}");
+        assert_eq!(stats.batched_requests, 6, "{stats:?}");
+        assert_eq!(stats.requests, 13, "{stats:?}");
+        assert_eq!(stats.errors, 0, "{stats:?}");
+        // one batch call + the big dot + 6 serial singles
+        assert_eq!(stats.engine_calls, 8, "{stats:?}");
+        assert_eq!(stats.lanes[0].executed, 13, "{stats:?}");
+        let est = engine.stats();
+        assert_eq!(est.batched, 6, "engine must see the 6 batched dots: {est:?}");
+    }
+
+    /// `max_batch = 1` is the unbatched control: the identical burst
+    /// executes per-request.
+    #[test]
+    fn max_batch_one_disables_coalescing() {
+        let engine = leak_engine(&Topology::single_node(), 2);
+        let (svc, client) = DotService::start_on(
+            ServiceConfig { max_batch: 1, ..ServiceConfig::default() },
+            engine,
+        );
+        let gate = Gate::close(engine, 0);
+        let mut rng = Rng::new(63);
+        let n_big = 200_000;
+        let rx_big = client.submit(0, "kahan", rng.normal_f32_vec(n_big), rng.normal_f32_vec(n_big));
+        wait_engine_requests(engine, 1);
+        let rxs: Vec<_> = (0..4)
+            .map(|i| {
+                client.submit(1 + i, "kahan", rng.normal_f32_vec(256), rng.normal_f32_vec(256))
+            })
+            .collect();
+        gate.open();
+        assert!(rx_big.recv().expect("big").value.is_ok());
+        for rx in rxs {
+            let resp = rx.recv().expect("reply");
+            assert_eq!(resp.batch_size, 1);
+            assert!(resp.value.is_ok());
+        }
+        let stats = svc.stop();
+        assert_eq!(stats.batches, 0, "{stats:?}");
+        assert_eq!(stats.batched_requests, 0, "{stats:?}");
+        assert_eq!(stats.engine_calls, 5, "{stats:?}");
+    }
+
+    /// The ROADMAP item, deterministically: a burst of admissions to one
+    /// shard coalesces into ONE worker pass.
+    #[test]
+    fn admit_burst_coalesces_into_one_worker_pass() {
+        let engine = leak_engine(&Topology::single_node(), 2);
+        let (svc, client) = DotService::start_on(ServiceConfig::default(), engine);
+        let gate = Gate::close(engine, 0);
+        let mut rng = Rng::new(67);
+        let n_big = 200_000;
+        let rx_big = client.submit(0, "kahan", rng.normal_f32_vec(n_big), rng.normal_f32_vec(n_big));
+        wait_engine_requests(engine, 1);
+
+        // queue three admissions behind the blocked submitter (send the
+        // raw messages: the blocking client API would deadlock here)
+        let ServiceInner::Host { router, .. } = &svc.inner else { unreachable!() };
+        let n = 4096;
+        let va = rng.normal_f32_vec(n);
+        let vb = rng.normal_f32_vec(n);
+        let vc = rng.normal_f32_vec(n);
+        let mut replies = Vec::new();
+        for v in [&va, &vb, &vc] {
+            let (reply, rx) = mpsc::channel();
+            router.send_to(0, Msg::Admit { data: v.clone(), reply });
+            replies.push(rx);
+        }
+
+        gate.open();
+        assert!(rx_big.recv().expect("big").value.is_ok());
+        let handles: Vec<u64> = replies
+            .into_iter()
+            .map(|rx| rx.recv_timeout(Duration::from_secs(30)).expect("admit reply").expect("handle"))
+            .collect();
+        assert_eq!(handles.len(), 3);
+
+        // the admitted streams are live and dot correctly
+        let got = client.dot_pooled_blocking("kahan", handles[0], handles[1]).expect("pooled");
+        let want = client.dot_blocking("kahan", va.clone(), vb.clone()).expect("direct");
+        assert_eq!(got.to_bits(), want.to_bits());
+
+        let stats = svc.stop();
+        assert_eq!(stats.admitted, 3, "{stats:?}");
+        assert_eq!(stats.admit_batches, 1, "burst must be one worker pass: {stats:?}");
+        assert_eq!(stats.errors, 0, "{stats:?}");
+    }
+
+    /// `admit_pair` admits a co-located stream pair in a single message.
+    #[test]
+    fn admit_pair_places_both_streams_on_one_shard_in_one_message() {
+        let engine = leak_engine(&Topology::fake_even(2), 1);
+        let (svc, client) = DotService::start_on(ServiceConfig::default(), engine);
+        let mut rng = Rng::new(71);
+        let n = 8192;
+        let va = rng.normal_f32_vec(n);
+        let vb = rng.normal_f32_vec(n);
+        let (ha, hb) = client.admit_pair_blocking(va.clone(), vb.clone()).expect("pair");
+        assert_ne!(ha, hb);
+        let ServiceInner::Host { router, .. } = &svc.inner else { unreachable!() };
+        {
+            let streams = router.streams.read().unwrap();
+            assert_eq!(
+                streams[&ha].shard, streams[&hb].shard,
+                "pair must share one home shard"
+            );
+        }
+        let got = client.dot_pooled_blocking("kahan", ha, hb).expect("pooled dot");
+        let want = client.dot_blocking("kahan", va, vb).expect("direct dot");
+        assert_eq!(got.to_bits(), want.to_bits(), "co-located pair must not change bits");
+        let stats = svc.stop();
+        assert_eq!(stats.admitted, 2, "{stats:?}");
+        assert_eq!(stats.errors, 0, "{stats:?}");
     }
 
     // ---- Pjrt backend: skipped without artifacts ----

@@ -10,8 +10,23 @@
 //! and fastest compensated kernel per `(Precision, SizeClass)`, and caches
 //! the dispatch table in a `OnceLock` for the life of the process.
 //!
+//! Probe buffers come from a recycling [`BufferPool`], so calibration
+//! measures the same 64-byte-aligned memory the serving path streams
+//! (the kernels' aligned-load fast path included), not cold fresh `Vec`s.
+//!
+//! The table also carries a **batched-kernel choice** per cell: if the
+//! cell's single winner has a fused multi-dot twin
+//! (`bench::kernels::batch`), the twin is timed against a serial loop of
+//! the winner at the probe size, and kept only where fusion wins. The kept
+//! set is forced monotone over size classes — batching never applies above
+//! the class where it stops winning — and the memory-resident class is
+//! always serial (a memory-bound dot gains nothing from fusing and the
+//! engine's small-dot batching never reaches that size anyway).
+//!
 //! Calibration costs ~1 s once; every later `select` is an array index.
 
+use super::pool::BufferPool;
+use crate::bench::kernels::batch::{batch_for, BatchKernel, BatchKernelFn};
 use crate::bench::kernels::{registry_static, HostKernel, KernelFn};
 use crate::bench::timer::measure_adaptive;
 use crate::isa::{Precision, Variant};
@@ -70,7 +85,35 @@ fn prec_index(prec: Precision) -> usize {
     }
 }
 
-/// The two kernels the engine dispatches between for one
+/// Requests fused per batch probe (and the divisor for per-request cycles).
+const BATCH_PROBE_B: usize = 4;
+
+/// Per-request working-set cap for batch probes: batching is a small-dot
+/// mechanism, so the LLC-class probe is measured at a serving-realistic
+/// request size instead of B half-LLC monsters.
+const BATCH_PROBE_MAX_BYTES: u64 = 512 << 10;
+
+/// The batched-execution decision for one `(Precision, Variant, SizeClass)`
+/// cell: the fused twin of the cell's single winner, kept only where
+/// calibration showed fusion winning (else the engine loops the single
+/// kernel — batching above the handoff layer still applies).
+#[derive(Clone, Copy)]
+pub struct BatchChoice {
+    /// fused multi-dot kernel bit-identical (per request) to the cell's
+    /// single winner; `None` = serial execution within a batch
+    pub fused: Option<&'static BatchKernel>,
+    /// measured per-request cycles at the probe, (fused, serial);
+    /// `(0.0, 0.0)` when the cell was not probed (no twin, or MEM class)
+    pub probe_cy: (f64, f64),
+}
+
+impl BatchChoice {
+    fn unmeasured() -> BatchChoice {
+        BatchChoice { fused: None, probe_cy: (0.0, 0.0) }
+    }
+}
+
+/// The kernels the engine dispatches between for one
 /// `(Precision, SizeClass)` cell.
 #[derive(Clone, Copy)]
 pub struct Choice {
@@ -80,6 +123,10 @@ pub struct Choice {
     pub naive: HostKernel,
     /// measured cycles per invocation at the probe size, (kahan, naive)
     pub probe_cy: (f64, f64),
+    /// fused-batch decision for the compensated winner
+    pub kahan_batch: BatchChoice,
+    /// fused-batch decision for the naive winner
+    pub naive_batch: BatchChoice,
 }
 
 /// Calibrated dispatch table: `[precision][size class] -> Choice`.
@@ -97,12 +144,70 @@ fn median_cycles_f64(f: fn(&[f64], &[f64]) -> f64, a: &[f64], b: &[f64], reps: u
     measure_adaptive(200_000.0, reps, || f(a, b)).median_cy
 }
 
+/// Generates the per-precision batch-probe helper: time the fused twin of
+/// `winner` against a serial loop of `winner` over [`BATCH_PROBE_B`]
+/// distinct pooled pairs, and keep the twin only if it wins.
+macro_rules! probe_batch_impl {
+    ($name:ident, $ty:ty, $gen:ident, $kernel_variant:ident, $batch_variant:ident) => {
+        fn $name(
+            pool: &std::sync::Arc<BufferPool>,
+            rng: &mut Rng,
+            total_bytes: u64,
+            reps: usize,
+            winner: &HostKernel,
+        ) -> BatchChoice {
+            let Some(bk) = batch_for(winner.name) else {
+                return BatchChoice::unmeasured();
+            };
+            let (KernelFn::$kernel_variant(f), BatchKernelFn::$batch_variant(bf)) =
+                (winner.f, bk.f)
+            else {
+                return BatchChoice::unmeasured();
+            };
+            let per_req = total_bytes.min(BATCH_PROBE_MAX_BYTES);
+            let n = (per_req / (2 * std::mem::size_of::<$ty>() as u64)).max(64) as usize;
+            let data: Vec<_> = (0..BATCH_PROBE_B)
+                .map(|_| {
+                    let av = rng.$gen(n);
+                    let bv = rng.$gen(n);
+                    (pool.admit(&av), pool.admit(&bv))
+                })
+                .collect();
+            let pairs: Vec<(&[$ty], &[$ty])> =
+                data.iter().map(|(a, b)| (a.as_slice(), b.as_slice())).collect();
+            let mut vals = vec![0.0 as $ty; BATCH_PROBE_B];
+            let fused_cy = measure_adaptive(200_000.0, reps, || {
+                bf(&pairs, &mut vals);
+                vals[0]
+            })
+            .median_cy
+                / BATCH_PROBE_B as f64;
+            let serial_cy = measure_adaptive(200_000.0, reps, || {
+                let mut acc = 0.0 as $ty;
+                for &(a, b) in &pairs {
+                    acc += std::hint::black_box(f(a, b));
+                }
+                acc
+            })
+            .median_cy
+                / BATCH_PROBE_B as f64;
+            BatchChoice { fused: (fused_cy < serial_cy).then_some(bk), probe_cy: (fused_cy, serial_cy) }
+        }
+    };
+}
+
+probe_batch_impl!(probe_batch_f32, f32, normal_f32_vec, F32, F32);
+probe_batch_impl!(probe_batch_f64, f64, normal_f64_vec, F64, F64);
+
 impl DispatchTable {
     /// Time every available kernel at each probe size and keep the winners.
     /// `probe_bytes[c]` is the total working set (both streams) for class
     /// `c`; tests pass tiny probes to keep calibration instant.
     pub fn calibrate(probe_bytes: [u64; 3], reps: usize) -> DispatchTable {
         let mut rng = Rng::new(0xCA11B);
+        // probe inputs live in a recycling pool: calibration streams the
+        // same 64-byte-aligned recycled memory the serving path uses
+        let pool = BufferPool::new();
         let mut rows: Vec<[Choice; 3]> = Vec::with_capacity(2);
         for prec in [Precision::Sp, Precision::Dp] {
             let elem = match prec {
@@ -110,20 +215,23 @@ impl DispatchTable {
                 Precision::Dp => 8u64,
             };
             let mut per_class: Vec<Choice> = Vec::with_capacity(3);
-            for &total in &probe_bytes {
+            for (ci, &total) in probe_bytes.iter().enumerate() {
                 let n = (total / (2 * elem)).max(64) as usize;
                 let mut best_kahan: Option<(f64, HostKernel)> = None;
                 let mut best_naive: Option<(f64, HostKernel)> = None;
+                let mut batches = (BatchChoice::unmeasured(), BatchChoice::unmeasured());
                 match prec {
                     Precision::Sp => {
-                        let a = rng.normal_f32_vec(n);
-                        let b = rng.normal_f32_vec(n);
+                        let av = rng.normal_f32_vec(n);
+                        let bv = rng.normal_f32_vec(n);
+                        let a = pool.admit(&av);
+                        let b = pool.admit(&bv);
                         for k in registry_static().iter().filter(|k| k.available) {
                             let KernelFn::F32(f) = k.f else { continue };
                             if k.prec != prec {
                                 continue;
                             }
-                            let cy = median_cycles_f32(f, &a, &b, reps);
+                            let cy = median_cycles_f32(f, a.as_slice(), b.as_slice(), reps);
                             let slot = if k.variant == Variant::Naive {
                                 &mut best_naive
                             } else {
@@ -133,16 +241,26 @@ impl DispatchTable {
                                 *slot = Some((cy, *k));
                             }
                         }
+                        if ci < SizeClass::Mem.index() {
+                            let (_, kw) = best_kahan.expect("compensated winner");
+                            let (_, nw) = best_naive.expect("naive winner");
+                            batches = (
+                                probe_batch_f32(&pool, &mut rng, total, reps, &kw),
+                                probe_batch_f32(&pool, &mut rng, total, reps, &nw),
+                            );
+                        }
                     }
                     Precision::Dp => {
-                        let a = rng.normal_f64_vec(n);
-                        let b = rng.normal_f64_vec(n);
+                        let av = rng.normal_f64_vec(n);
+                        let bv = rng.normal_f64_vec(n);
+                        let a = pool.admit(&av);
+                        let b = pool.admit(&bv);
                         for k in registry_static().iter().filter(|k| k.available) {
                             let KernelFn::F64(f) = k.f else { continue };
                             if k.prec != prec {
                                 continue;
                             }
-                            let cy = median_cycles_f64(f, &a, &b, reps);
+                            let cy = median_cycles_f64(f, a.as_slice(), b.as_slice(), reps);
                             let slot = if k.variant == Variant::Naive {
                                 &mut best_naive
                             } else {
@@ -151,6 +269,14 @@ impl DispatchTable {
                             if slot.map_or(true, |(c, _)| cy < c) {
                                 *slot = Some((cy, *k));
                             }
+                        }
+                        if ci < SizeClass::Mem.index() {
+                            let (_, kw) = best_kahan.expect("compensated winner");
+                            let (_, nw) = best_naive.expect("naive winner");
+                            batches = (
+                                probe_batch_f64(&pool, &mut rng, total, reps, &kw),
+                                probe_batch_f64(&pool, &mut rng, total, reps, &nw),
+                            );
                         }
                     }
                 }
@@ -158,7 +284,28 @@ impl DispatchTable {
                 // slots are guaranteed to be filled
                 let (kc, kahan) = best_kahan.expect("at least one compensated kernel");
                 let (nc, naive) = best_naive.expect("at least one naive kernel");
-                per_class.push(Choice { kahan, naive, probe_cy: (kc, nc) });
+                per_class.push(Choice {
+                    kahan,
+                    naive,
+                    probe_cy: (kc, nc),
+                    kahan_batch: batches.0,
+                    naive_batch: batches.1,
+                });
+            }
+            // the calibrated batch cutoff: batching must never be used
+            // above the size class where it stops winning, so once a class
+            // comes out serial every larger class is forced serial too
+            let mut kahan_on = true;
+            let mut naive_on = true;
+            for c in per_class.iter_mut() {
+                if !kahan_on {
+                    c.kahan_batch.fused = None;
+                }
+                if !naive_on {
+                    c.naive_batch.fused = None;
+                }
+                kahan_on &= c.kahan_batch.fused.is_some();
+                naive_on &= c.naive_batch.fused.is_some();
             }
             rows.push([per_class[0], per_class[1], per_class[2]]);
         }
@@ -180,10 +327,36 @@ impl DispatchTable {
         }
     }
 
+    /// Fused multi-dot kernel for a batch of requests in this cell, if
+    /// calibration kept one. `None` means: execute the batch as a serial
+    /// loop of the single winner (request coalescing above the kernel
+    /// still applies). The returned kernel is bit-identical, per request,
+    /// to what [`DispatchTable::select`] returns for the same cell.
+    pub fn select_batch(
+        &self,
+        prec: Precision,
+        variant: Variant,
+        class: SizeClass,
+    ) -> Option<&'static BatchKernel> {
+        let c = self.choice(prec, class);
+        if variant == Variant::Naive {
+            c.naive_batch.fused
+        } else {
+            c.kahan_batch.fused
+        }
+    }
+
     /// Human-readable dispatch table (for `repro engine-info` and benches).
     pub fn render(&self) -> crate::util::Table {
+        fn batched(b: &BatchChoice) -> String {
+            match b.fused {
+                Some(bk) => format!("{} ({:.0} vs {:.0} cy/req)", bk.name, b.probe_cy.0, b.probe_cy.1),
+                None if b.probe_cy.1 > 0.0 => "serial (fusion lost probe)".to_string(),
+                None => "serial".to_string(),
+            }
+        }
         let mut t = crate::util::Table::new("autotuned kernel dispatch (per size class)")
-            .headers(["prec", "class", "probe WS", "kahan winner", "naive winner"]);
+            .headers(["prec", "class", "probe WS", "kahan winner", "naive winner", "batched (kahan)"]);
         for prec in [Precision::Sp, Precision::Dp] {
             for class in SizeClass::ALL {
                 let c = self.choice(prec, class);
@@ -193,6 +366,7 @@ impl DispatchTable {
                     crate::util::fmt::bytes(self.probe_bytes[class.index()]),
                     format!("{} ({:.0} cy)", c.kahan.name, c.probe_cy.0),
                     format!("{} ({:.0} cy)", c.naive.name, c.probe_cy.1),
+                    batched(&c.kahan_batch),
                 ]);
             }
         }
@@ -252,5 +426,38 @@ mod tests {
         assert_eq!(SizeClass::of(1024), SizeClass::L1);
         assert_eq!(SizeClass::of(m.caches[2].size_bytes), SizeClass::Llc);
         assert_eq!(SizeClass::of(4 * m.caches[2].size_bytes), SizeClass::Mem);
+    }
+
+    /// Batched-choice invariants: a kept fused kernel is always the twin of
+    /// the cell's single winner, MEM is always serial, and the kept set is
+    /// monotone (no class may batch if a smaller one does not).
+    #[test]
+    fn batch_choice_pairs_with_winner_and_cutoff_is_monotone() {
+        let t = DispatchTable::calibrate([8 << 10, 64 << 10, 256 << 10], 1);
+        for prec in [Precision::Sp, Precision::Dp] {
+            for variant in [Variant::Kahan, Variant::Naive] {
+                assert!(
+                    t.select_batch(prec, variant, SizeClass::Mem).is_none(),
+                    "memory-resident dots must never take the fused path"
+                );
+                let mut prev_on = true;
+                for class in SizeClass::ALL {
+                    let fused = t.select_batch(prec, variant, class);
+                    if let Some(bk) = fused {
+                        assert!(
+                            prev_on,
+                            "batch cutoff must be monotone over size classes"
+                        );
+                        let winner = t.select(prec, variant, class);
+                        assert_eq!(
+                            bk.matches, winner.name,
+                            "fused kernel must be the twin of the single winner"
+                        );
+                        assert!(bk.available);
+                    }
+                    prev_on = fused.is_some();
+                }
+            }
+        }
     }
 }

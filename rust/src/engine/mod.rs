@@ -16,7 +16,12 @@
 //!        │  the sender; stalls counted in ServiceStats)
 //!        ▼
 //!   submitter threads, one per shard (coordinator::service router pool —
-//!   independent requests execute concurrently on different shards)
+//!   independent requests execute concurrently on different shards).
+//!   Each submitter drains its queue greedily: k ≥ 2 queued small dots
+//!   become ONE engine batch (dot_batch_on), a burst of admissions ONE
+//!   worker pass (admit_local_many) — request overhead amortizes like the
+//!   paper amortizes loop overhead, and bits never change (see "Batching
+//!   invariant" below)
 //!        │
 //!        ▼
 //!                  ┌──────────────────────────────────────────────────┐
@@ -69,6 +74,24 @@
 //! the hot path. Public request surfaces (`coordinator::service`) reject
 //! mismatched requests *before* they reach the engine; keep it that way.
 //!
+//! # Batching invariant
+//!
+//! **Batching never changes bits.** `dot_batch_*` here, the sharded tier's
+//! `dot_batch_*`/`dot_batch_on_*`/`dot_batch_homed_*`, and the service's
+//! lane coalescing all return, for every request in a batch, exactly the
+//! value the serial single-request path returns. The mechanism: requests
+//! that would run inline are grouped (one worker handoff per chunk-group
+//! instead of one per request) and executed either by a fused multi-dot
+//! kernel (`bench::kernels::batch`) that interleaves requests across
+//! unroll slots while keeping each request's own operation sequence
+//! identical to its single-dot kernel, or by a serial loop of that same
+//! single kernel; requests big enough for the chunked-parallel or
+//! cross-shard split path take the exact serial route, one by one. The
+//! fused kernels are only reachable through the dispatch table, which
+//! pairs them with the single winner of the same cell and keeps them only
+//! below the calibrated batch-size cutoff. Property-tested on
+//! Ogita–Rump–Oishi inputs at every layer in `rust/tests/test_batch.rs`.
+//!
 //! # Accuracy
 //!
 //! Each chunk is a full Kahan dot (per-lane compensation folded by the
@@ -102,7 +125,7 @@ pub mod pool;
 pub mod sharded;
 pub mod topology;
 
-pub use autotune::{dispatch, Choice, DispatchTable, SizeClass};
+pub use autotune::{dispatch, BatchChoice, Choice, DispatchTable, SizeClass};
 pub use parallel::{chunk_ranges, parallel_dot_f32, parallel_dot_f64, WorkerPool};
 pub use pool::{BufferPool, PoolStats, PooledSlice};
 pub use sharded::{HomedSlice, ShardedConfig, ShardedEngine, ShardedStats};
@@ -137,6 +160,9 @@ pub struct EngineStats {
     pub requests: u64,
     /// dots that took the chunked-parallel path
     pub parallel: u64,
+    /// dots served through a batched execution path (`dot_batch_*` or a
+    /// sharded/homed batch group) — a subset of `requests`
+    pub batched: u64,
     pub pool: PoolStats,
     /// workers whose CPU-affinity call failed (best-effort pinning signal)
     pub pin_failures: u64,
@@ -205,7 +231,7 @@ macro_rules! engine_dot_methods {
             let n = a.len().min(b.len());
             let total_bytes = (2 * n * std::mem::size_of::<$ty>()) as u64;
             let f = $kernel_for(variant, total_bytes);
-            if total_bytes < self.cfg.parallel_cutoff_bytes as u64 || self.workers.size() == 1 {
+            if self.serves_inline(total_bytes) {
                 return f(&a[..n], &b[..n]);
             }
             // worker-side admission: first-touch places fresh pool pages
@@ -233,11 +259,203 @@ macro_rules! engine_dot_methods {
             let n = a.len().min(b.len());
             let total_bytes = (2 * n * std::mem::size_of::<$ty>()) as u64;
             let f = $kernel_for(variant, total_bytes);
-            if total_bytes < self.cfg.parallel_cutoff_bytes as u64 || self.workers.size() == 1 {
+            if self.serves_inline(total_bytes) {
                 return f(&a.as_slice()[..n], &b.as_slice()[..n]);
             }
             self.parallel_jobs.fetch_add(1, Ordering::Relaxed);
             $parallel(&self.workers, f, a, b, self.workers.size())
+        }
+    };
+}
+
+/// Generates the per-precision batch executor: run a group of
+/// inline-class requests on the CURRENT thread, sending `(index, result)`
+/// per request. Maximal same-size-class runs of ≥ 2 requests go through
+/// the calibrated fused multi-dot kernel (bit-identical per request to the
+/// cell's single winner); everything else — shorter runs, cells whose
+/// calibration kept no fused kernel, and the per-request fallback after a
+/// fused-kernel panic — loops the single winner itself.
+macro_rules! exec_batch_impl {
+    ($name:ident, $ty:ty, $prec:expr, $kernel_for:ident, $call:ident) => {
+        pub(crate) fn $name(
+            variant: Variant,
+            items: &[(usize, &[$ty], &[$ty])],
+            tx: &std::sync::mpsc::Sender<(usize, Result<$ty, String>)>,
+        ) {
+            let total = |a: &[$ty]| (2 * a.len() * std::mem::size_of::<$ty>()) as u64;
+            let mut i = 0usize;
+            while i < items.len() {
+                let class = SizeClass::of(total(items[i].1));
+                let mut j = i + 1;
+                while j < items.len() && SizeClass::of(total(items[j].1)) == class {
+                    j += 1;
+                }
+                let run = &items[i..j];
+                // same class ⇒ same single winner and same fused choice as
+                // the serial path — the batching invariant needs exactly that
+                let single = $kernel_for(variant, total(run[0].1));
+                let mut fused_done = false;
+                if run.len() >= 2 {
+                    if let Some(bk) = dispatch().select_batch($prec, variant, class) {
+                        let pairs: Vec<(&[$ty], &[$ty])> =
+                            run.iter().map(|&(_, a, b)| (a, b)).collect();
+                        let mut vals = vec![0.0 as $ty; run.len()];
+                        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                            bk.$call(&pairs, &mut vals)
+                        }));
+                        if r.is_ok() {
+                            for (&(idx, _, _), v) in run.iter().zip(&vals) {
+                                let _ = tx.send((idx, Ok(*v)));
+                            }
+                            fused_done = true;
+                        }
+                        // a fused-kernel panic falls through to the serial
+                        // loop: only the truly panicking request errors
+                    }
+                }
+                if !fused_done {
+                    for &(idx, a, b) in run {
+                        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                            single(a, b)
+                        }))
+                        .map_err(parallel::panic_message);
+                        let _ = tx.send((idx, r));
+                    }
+                }
+                i = j;
+            }
+        }
+    };
+}
+
+exec_batch_impl!(exec_batch_f32, f32, Precision::Sp, kernel_for_f32, call_f32);
+exec_batch_impl!(exec_batch_f64, f64, Precision::Dp, kernel_for_f64, call_f64);
+
+/// Generates the per-precision batch methods on [`DotEngine`].
+macro_rules! engine_batch_methods {
+    ($dot_batch:ident, $admit_many:ident, $dot:ident, $exec:ident, $ty:ty) => {
+        /// Admit several streams in ONE worker job (a single handoff and
+        /// one in-domain first-touch copy pass) — the admission-coalescing
+        /// primitive behind the service's `Admit` burst batching. Blocks
+        /// until the copies complete; must not be called from one of this
+        /// engine's own workers.
+        pub fn $admit_many(&self, vs: &[&[$ty]]) -> Vec<Arc<PooledSlice<$ty>>> {
+            if vs.is_empty() {
+                return Vec::new();
+            }
+            let (tx, rx) = std::sync::mpsc::channel();
+            let pool = Arc::clone(&self.pool);
+            let raw: Vec<(usize, usize)> =
+                vs.iter().map(|v| (v.as_ptr() as usize, v.len())).collect();
+            self.workers.submit(Box::new(move || {
+                // SAFETY: the caller blocks on `rx` until this job has
+                // finished, so the borrows behind the raw pointers outlive
+                // every reconstructed slice
+                let out: Vec<Arc<PooledSlice<$ty>>> = raw
+                    .iter()
+                    .map(|&(p, n)| {
+                        let src = unsafe { std::slice::from_raw_parts(p as *const $ty, n) };
+                        Arc::new(pool.admit(src))
+                    })
+                    .collect();
+                let _ = tx.send(out);
+            }));
+            rx.recv().expect("admission worker died")
+        }
+
+        /// Serve a batch of independent dots — bit-identical to calling
+        /// the single-dot method once per request (the module's "Batching
+        /// invariant"). Inline-class requests are grouped into one
+        /// fused/serial kernel pass per worker-job chunk-group (or run on
+        /// the calling thread when the whole batch is cheaper than a
+        /// handoff); requests big enough for the chunked-parallel path
+        /// take the exact serial route one by one. Must not be called
+        /// from one of this engine's own workers.
+        pub fn $dot_batch(&self, variant: Variant, reqs: &[(&[$ty], &[$ty])]) -> Vec<$ty> {
+            let mut out = vec![0.0 as $ty; reqs.len()];
+            let mut smalls: Vec<(usize, &[$ty], &[$ty])> = Vec::with_capacity(reqs.len());
+            let mut bigs: Vec<usize> = Vec::new();
+            let mut small_bytes = 0u64;
+            for (i, &(a, b)) in reqs.iter().enumerate() {
+                debug_assert_eq!(
+                    a.len(),
+                    b.len(),
+                    "engine dot called with mismatched stream lengths (see engine length policy)"
+                );
+                let n = a.len().min(b.len());
+                let total = (2 * n * std::mem::size_of::<$ty>()) as u64;
+                if self.serves_inline(total) {
+                    small_bytes += total;
+                    smalls.push((i, &a[..n], &b[..n]));
+                } else {
+                    bigs.push(i);
+                }
+            }
+            self.note_batch(smalls.len());
+            let (tx, rx) = std::sync::mpsc::channel();
+            if !smalls.is_empty() {
+                if small_bytes < self.cfg.parallel_cutoff_bytes as u64
+                    || self.workers.size() == 1
+                {
+                    // the whole batch is cheaper than a handoff: fused
+                    // execution right here, zero dispatch
+                    $exec(variant, &smalls, &tx);
+                } else {
+                    // one worker job per contiguous chunk-group of requests
+                    let groups = self.workers.size().min(smalls.len());
+                    for g in 0..groups {
+                        let lo = smalls.len() * g / groups;
+                        let hi = smalls.len() * (g + 1) / groups;
+                        let raw: Vec<(usize, usize, usize, usize)> = smalls[lo..hi]
+                            .iter()
+                            .map(|&(i, a, b)| {
+                                (i, a.as_ptr() as usize, b.as_ptr() as usize, a.len())
+                            })
+                            .collect();
+                        let tx = tx.clone();
+                        self.workers.submit_to(
+                            g,
+                            Box::new(move || {
+                                // SAFETY: the caller blocks on `rx` below
+                                // until every request has reported, so the
+                                // borrows behind the raw pointers outlive
+                                // every reconstructed slice
+                                let items: Vec<(usize, &[$ty], &[$ty])> = raw
+                                    .iter()
+                                    .map(|&(i, pa, pb, n)| unsafe {
+                                        (
+                                            i,
+                                            std::slice::from_raw_parts(pa as *const $ty, n),
+                                            std::slice::from_raw_parts(pb as *const $ty, n),
+                                        )
+                                    })
+                                    .collect();
+                                $exec(variant, &items, &tx);
+                            }),
+                        );
+                    }
+                }
+            }
+            drop(tx);
+            // big dots take the exact serial path while the groups run
+            for &i in &bigs {
+                let (a, b) = reqs[i];
+                out[i] = self.$dot(variant, a, b);
+            }
+            let mut got = 0usize;
+            for (i, r) in rx {
+                out[i] = r.unwrap_or_else(|m| {
+                    panic!("{}: request {i} panicked: {m}", stringify!($dot_batch))
+                });
+                got += 1;
+            }
+            assert_eq!(
+                got,
+                smalls.len(),
+                "{}: a batch group reported no result (worker died)",
+                stringify!($dot_batch)
+            );
+            out
         }
     };
 }
@@ -250,6 +468,7 @@ pub struct DotEngine {
     cfg: EngineConfig,
     requests: AtomicU64,
     parallel_jobs: AtomicU64,
+    batched: AtomicU64,
 }
 
 impl DotEngine {
@@ -275,7 +494,25 @@ impl DotEngine {
             cfg,
             requests: AtomicU64::new(0),
             parallel_jobs: AtomicU64::new(0),
+            batched: AtomicU64::new(0),
         }
+    }
+
+    /// Whether a request of `total_bytes` (both streams) runs inline on
+    /// the submitting thread rather than the chunked-parallel path — THE
+    /// predicate the dot methods use, shared with the batch paths so both
+    /// split requests identically (anything else would break the batching
+    /// invariant).
+    pub(crate) fn serves_inline(&self, total_bytes: u64) -> bool {
+        total_bytes < self.cfg.parallel_cutoff_bytes as u64 || self.workers.size() == 1
+    }
+
+    /// Count `k` requests served through a batched execution path (the
+    /// sharded tier's batch groups execute on workers and bypass the
+    /// per-request dot methods, so they report here).
+    pub(crate) fn note_batch(&self, k: usize) {
+        self.requests.fetch_add(k as u64, Ordering::Relaxed);
+        self.batched.fetch_add(k as u64, Ordering::Relaxed);
     }
 
     /// The shard tier schedules chunk jobs straight onto a shard's workers.
@@ -300,6 +537,7 @@ impl DotEngine {
         EngineStats {
             requests: self.requests.load(Ordering::Relaxed),
             parallel: self.parallel_jobs.load(Ordering::Relaxed),
+            batched: self.batched.load(Ordering::Relaxed),
             pool: self.pool.stats(),
             pin_failures: self.workers.pin_failures() as u64,
         }
@@ -331,6 +569,8 @@ impl DotEngine {
         parallel_dot_f64,
         f64
     );
+    engine_batch_methods!(dot_batch_f32, admit_local_many_f32, dot_f32, exec_batch_f32, f32);
+    engine_batch_methods!(dot_batch_f64, admit_local_many_f64, dot_f64, exec_batch_f64, f64);
 }
 
 #[cfg(test)]
@@ -416,5 +656,45 @@ mod tests {
         let a = DotEngine::global() as *const _;
         let b = DotEngine::global() as *const _;
         assert_eq!(a, b);
+    }
+
+    /// The batching invariant at the engine layer: a mixed-size batch
+    /// (inline-class smalls + one chunked-parallel big) returns exactly
+    /// the bits of serial execution, and the stats split out the batched
+    /// subset.
+    #[test]
+    fn dot_batch_bit_identical_to_serial_and_counted() {
+        let e = engine();
+        let mut rng = Rng::new(23);
+        let sizes = [64usize, 1000, 4096, 200_000, 257, 8192];
+        let reqs: Vec<(Vec<f32>, Vec<f32>)> =
+            sizes.iter().map(|&n| (rng.normal_f32_vec(n), rng.normal_f32_vec(n))).collect();
+        let view: Vec<(&[f32], &[f32])> =
+            reqs.iter().map(|(a, b)| (a.as_slice(), b.as_slice())).collect();
+        let serial: Vec<f32> =
+            view.iter().map(|&(a, b)| e.dot_f32(Variant::Kahan, a, b)).collect();
+        let batched = e.dot_batch_f32(Variant::Kahan, &view);
+        for (i, (s, g)) in serial.iter().zip(&batched).enumerate() {
+            assert_eq!(s.to_bits(), g.to_bits(), "req {i} (n={})", sizes[i]);
+        }
+        let st = e.stats();
+        // serial: 6 requests; batch: 6 more, 5 of them small (200_000
+        // elems = 1.6 MB takes the parallel path in both runs)
+        assert_eq!(st.requests, 12, "{st:?}");
+        assert_eq!(st.batched, 5, "{st:?}");
+        assert_eq!(st.parallel, 2, "{st:?}");
+    }
+
+    #[test]
+    fn admit_local_many_preserves_contents_in_one_pass() {
+        let e = engine();
+        let a: Vec<f32> = (0..1000).map(|i| i as f32).collect();
+        let b: Vec<f32> = (0..500).map(|i| -(i as f32)).collect();
+        let admitted = e.admit_local_many_f32(&[&a, &b]);
+        assert_eq!(admitted.len(), 2);
+        assert_eq!(admitted[0].as_slice(), &a[..]);
+        assert_eq!(admitted[1].as_slice(), &b[..]);
+        assert_eq!(admitted[0].addr() % 64, 0);
+        assert!(e.admit_local_many_f64(&[]).is_empty());
     }
 }

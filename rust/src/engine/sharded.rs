@@ -42,7 +42,10 @@
 use super::parallel::{chunk_ranges, collect_partials, panic_message};
 use super::pool::{PoolStats, PooledSlice};
 use super::topology::{topology_cached, Topology};
-use super::{kernel_for_f32, kernel_for_f64, DotEngine, EngineConfig, EngineStats};
+use super::{
+    exec_batch_f32, exec_batch_f64, kernel_for_f32, kernel_for_f64, DotEngine, EngineConfig,
+    EngineStats,
+};
 use crate::bench::kernels::{compensated_fold_f32, compensated_fold_f64};
 use crate::isa::Variant;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
@@ -100,6 +103,9 @@ pub struct ShardedStats {
     pub requests: u64,
     /// dots that took a chunked-parallel path inside one shard engine
     pub parallel: u64,
+    /// dots served through a batched execution path (see the engine
+    /// module's "Batching invariant") — a subset of `requests`
+    pub batched: u64,
     /// dots served by the split path (cut on global chunk boundaries over
     /// the whole shard set; on a single-shard host this is the same
     /// chunked reduction, still counted here because it bypasses the
@@ -119,7 +125,9 @@ pub struct ShardedEngine {
 
 macro_rules! sharded_dot_impl {
     ($dot:ident, $dot_on:ident, $dot_homed:ident, $admit:ident, $admit_to:ident, $split:ident,
-     $engine_dot:ident, $engine_dot_pooled:ident, $engine_admit:ident, $kernel_for:ident,
+     $dot_batch:ident, $dot_batch_on:ident, $dot_batch_homed:ident, $admit_many_to:ident,
+     $engine_dot:ident, $engine_dot_pooled:ident, $engine_admit:ident, $engine_dot_batch:ident,
+     $engine_admit_many:ident, $exec_batch:ident, $kernel_for:ident,
      $fold:ident, $ty:ty, $elems_per_cl:expr) => {
         /// Serve one dot: single-shard hosts and sub-split sizes route to
         /// one shard round-robin; very large dots split across all shards.
@@ -257,6 +265,214 @@ macro_rules! sharded_dot_impl {
             let s = a.shard.min(self.shards.len() - 1);
             self.shards[s].$engine_dot_pooled(variant, &a.slice, &b.slice)
         }
+
+        /// Admit several streams onto one shard (clamped) in a single
+        /// worker pass — one handoff and one in-domain first-touch copy
+        /// loop instead of one round trip per stream. This is the
+        /// admission-burst coalescing primitive behind the service's
+        /// `Admit`/`AdmitPair` batching.
+        pub fn $admit_many_to(&self, shard: usize, vs: &[&[$ty]]) -> Vec<HomedSlice<$ty>> {
+            let shard = shard % self.shards.len();
+            self.shards[shard]
+                .$engine_admit_many(vs)
+                .into_iter()
+                .map(|slice| HomedSlice { shard, slice })
+                .collect()
+        }
+
+        /// Serve a batch on ONE shard — the service lane's coalescing
+        /// call. Requests below the split threshold execute on shard `s`
+        /// as one engine batch; larger ones take the unchanged cross-shard
+        /// split path one by one. Bit-identical to per-request `dot_on`
+        /// calls (the engine module's batching invariant). Runs on the
+        /// caller's thread — call from a submitter, never from a worker.
+        pub fn $dot_batch_on(
+            &self,
+            shard: usize,
+            variant: Variant,
+            reqs: &[(&[$ty], &[$ty])],
+        ) -> Vec<$ty> {
+            let s = shard % self.shards.len();
+            let mut out = vec![0.0 as $ty; reqs.len()];
+            let mut small_idx: Vec<usize> = Vec::with_capacity(reqs.len());
+            let mut smalls: Vec<(&[$ty], &[$ty])> = Vec::with_capacity(reqs.len());
+            for (i, &(a, b)) in reqs.iter().enumerate() {
+                let n = a.len().min(b.len());
+                if 2 * n * std::mem::size_of::<$ty>() < self.cfg.split_min_bytes {
+                    small_idx.push(i);
+                    smalls.push((&a[..n], &b[..n]));
+                } else {
+                    out[i] = self.$dot_on(s, variant, a, b);
+                }
+            }
+            if !smalls.is_empty() {
+                let vals = self.shards[s].$engine_dot_batch(variant, &smalls);
+                for (i, v) in small_idx.into_iter().zip(vals) {
+                    out[i] = v;
+                }
+            }
+            out
+        }
+
+        /// Serve a batch across the whole shard set: every small request
+        /// is dealt a shard round-robin (exactly as serial submission
+        /// would deal them) and each shard's group executes CONCURRENTLY
+        /// as one worker-job batch on that shard; requests at or above the
+        /// split threshold take the unchanged cross-shard split path, and
+        /// mid-size requests (chunked-parallel inside one shard) the
+        /// unchanged per-request route. Bit-identical to the serial loop.
+        /// Must not be called from a shard worker.
+        pub fn $dot_batch(&self, variant: Variant, reqs: &[(&[$ty], &[$ty])]) -> Vec<$ty> {
+            let mut out = vec![0.0 as $ty; reqs.len()];
+            let mut per_shard: Vec<Vec<(usize, &[$ty], &[$ty])>> =
+                (0..self.shards.len()).map(|_| Vec::new()).collect();
+            let mut splits: Vec<(usize, usize)> = Vec::new();
+            let mut mids: Vec<(usize, usize)> = Vec::new();
+            for (i, &(a, b)) in reqs.iter().enumerate() {
+                let n = a.len().min(b.len());
+                let total = 2 * n * std::mem::size_of::<$ty>();
+                let s = self.route();
+                if total >= self.cfg.split_min_bytes {
+                    splits.push((i, s));
+                } else if self.shards[s].serves_inline(total as u64) {
+                    per_shard[s].push((i, &a[..n], &b[..n]));
+                } else {
+                    mids.push((i, s));
+                }
+            }
+            let (tx, rx) = mpsc::channel();
+            let mut dispatched = 0usize;
+            for (s, group) in per_shard.iter().enumerate() {
+                if group.is_empty() {
+                    continue;
+                }
+                dispatched += group.len();
+                self.shards[s].note_batch(group.len());
+                let raw: Vec<(usize, usize, usize, usize)> = group
+                    .iter()
+                    .map(|&(i, a, b)| (i, a.as_ptr() as usize, b.as_ptr() as usize, a.len()))
+                    .collect();
+                let tx = tx.clone();
+                self.shards[s].workers().submit(Box::new(move || {
+                    // SAFETY: the caller blocks on `rx` below until every
+                    // group has reported, so the borrows behind the raw
+                    // pointers outlive every reconstructed slice
+                    let items: Vec<(usize, &[$ty], &[$ty])> = raw
+                        .iter()
+                        .map(|&(i, pa, pb, n)| unsafe {
+                            (
+                                i,
+                                std::slice::from_raw_parts(pa as *const $ty, n),
+                                std::slice::from_raw_parts(pb as *const $ty, n),
+                            )
+                        })
+                        .collect();
+                    $exec_batch(variant, &items, &tx);
+                }));
+            }
+            drop(tx);
+            // splits and mid-size requests run on this thread while the
+            // shard groups execute concurrently
+            for &(i, s) in &splits {
+                let (a, b) = reqs[i];
+                out[i] = self.$dot_on(s, variant, a, b);
+            }
+            for &(i, s) in &mids {
+                let (a, b) = reqs[i];
+                out[i] = self.shards[s].$engine_dot(variant, a, b);
+            }
+            let mut got = 0usize;
+            for (i, r) in rx {
+                out[i] = r.unwrap_or_else(|m| {
+                    panic!("{}: request {i} panicked: {m}", stringify!($dot_batch))
+                });
+                got += 1;
+            }
+            assert_eq!(
+                got,
+                dispatched,
+                "{}: a shard batch group reported no result (worker died)",
+                stringify!($dot_batch)
+            );
+            out
+        }
+
+        /// Zero-copy steady-state batch: dot pairs of already-admitted
+        /// streams, grouped by the home shard of each pair's first operand
+        /// and executed concurrently as one worker-job batch per shard —
+        /// bit-identical to per-request `dot_homed` calls. Pairs big
+        /// enough for a shard's chunked-parallel path take the per-request
+        /// route. Must not be called from a shard worker.
+        pub fn $dot_batch_homed(
+            &self,
+            variant: Variant,
+            reqs: &[(&HomedSlice<$ty>, &HomedSlice<$ty>)],
+        ) -> Vec<$ty> {
+            let mut out = vec![0.0 as $ty; reqs.len()];
+            let mut per_shard: Vec<Vec<(usize, &[$ty], &[$ty])>> =
+                (0..self.shards.len()).map(|_| Vec::new()).collect();
+            let mut bigs: Vec<(usize, usize)> = Vec::new();
+            for (i, &(a, b)) in reqs.iter().enumerate() {
+                let s = a.shard.min(self.shards.len() - 1);
+                let n = a.len().min(b.len());
+                let total = (2 * n * std::mem::size_of::<$ty>()) as u64;
+                if self.shards[s].serves_inline(total) {
+                    per_shard[s].push((i, &a.slice.as_slice()[..n], &b.slice.as_slice()[..n]));
+                } else {
+                    bigs.push((i, s));
+                }
+            }
+            let (tx, rx) = mpsc::channel();
+            let mut dispatched = 0usize;
+            for (s, group) in per_shard.iter().enumerate() {
+                if group.is_empty() {
+                    continue;
+                }
+                dispatched += group.len();
+                self.shards[s].note_batch(group.len());
+                let raw: Vec<(usize, usize, usize, usize)> = group
+                    .iter()
+                    .map(|&(i, a, b)| (i, a.as_ptr() as usize, b.as_ptr() as usize, a.len()))
+                    .collect();
+                let tx = tx.clone();
+                self.shards[s].workers().submit(Box::new(move || {
+                    // SAFETY: the caller holds the `HomedSlice` refs in
+                    // `reqs` and blocks on `rx` until every group reports,
+                    // so the pooled buffers outlive the reconstructed
+                    // slices
+                    let items: Vec<(usize, &[$ty], &[$ty])> = raw
+                        .iter()
+                        .map(|&(i, pa, pb, n)| unsafe {
+                            (
+                                i,
+                                std::slice::from_raw_parts(pa as *const $ty, n),
+                                std::slice::from_raw_parts(pb as *const $ty, n),
+                            )
+                        })
+                        .collect();
+                    $exec_batch(variant, &items, &tx);
+                }));
+            }
+            drop(tx);
+            for &(i, s) in &bigs {
+                let (a, b) = reqs[i];
+                out[i] = self.shards[s].$engine_dot_pooled(variant, &a.slice, &b.slice);
+            }
+            let mut got = 0usize;
+            for (i, r) in rx {
+                out[i] = r.unwrap_or_else(|m| {
+                    panic!("{}: request {i} panicked: {m}", stringify!($dot_batch_homed))
+                });
+                got += 1;
+            }
+            assert_eq!(
+                got,
+                dispatched,
+                "{}: a shard batch group reported no result (worker died)",
+                stringify!($dot_batch_homed)
+            );
+            out
+        }
     };
 }
 
@@ -326,6 +542,7 @@ impl ShardedEngine {
             let e = sh.stats();
             st.requests += e.requests;
             st.parallel += e.parallel;
+            st.batched += e.batched;
             st.pool.hits += e.pool.hits;
             st.pool.misses += e.pool.misses;
             st.pool.returned += e.pool.returned;
@@ -342,9 +559,16 @@ impl ShardedEngine {
         admit_f32,
         admit_to_f32,
         split_dot_f32,
+        dot_batch_f32,
+        dot_batch_on_f32,
+        dot_batch_homed_f32,
+        admit_many_to_f32,
         dot_f32,
         dot_pooled_f32,
         admit_local_f32,
+        dot_batch_f32,
+        admit_local_many_f32,
+        exec_batch_f32,
         kernel_for_f32,
         compensated_fold_f32,
         f32,
@@ -357,9 +581,16 @@ impl ShardedEngine {
         admit_f64,
         admit_to_f64,
         split_dot_f64,
+        dot_batch_f64,
+        dot_batch_on_f64,
+        dot_batch_homed_f64,
+        admit_many_to_f64,
         dot_f64,
         dot_pooled_f64,
         admit_local_f64,
+        dot_batch_f64,
+        admit_local_many_f64,
+        exec_batch_f64,
         kernel_for_f64,
         compensated_fold_f64,
         f64,

@@ -1,0 +1,234 @@
+//! The batching invariant, property-tested at every layer: batched
+//! execution (fused kernels, engine `dot_batch_*`, the sharded tier's
+//! batch/homed-batch paths, and the service's lane coalescing) is
+//! bit-identical to serial single-request execution — on Ogita–Rump–Oishi
+//! ill-conditioned inputs, mixed sizes, and mixed batch shapes. A batch
+//! that changed even one bit would silently fork the serving tier's
+//! determinism guarantee, so every test here compares `to_bits()`, never
+//! tolerances.
+
+use kahan_ecm::accuracy::{gen_dot_f32, gen_dot_f64};
+use kahan_ecm::coordinator::{DotService, ServiceConfig};
+use kahan_ecm::engine::{
+    DotEngine, EngineConfig, ShardedConfig, ShardedEngine, Topology,
+};
+use kahan_ecm::isa::Variant;
+use kahan_ecm::util::{prop, Rng};
+
+fn cfg(threads: usize) -> EngineConfig {
+    EngineConfig { threads, ..EngineConfig::default() }
+}
+
+fn sharded_cfg(threads: usize, split_min_bytes: usize) -> ShardedConfig {
+    ShardedConfig { engine: cfg(threads), split_min_bytes, ..ShardedConfig::default() }
+}
+
+/// Mixed request generator: ill-conditioned ORO constructions plus plain
+/// normal vectors at awkward lengths (tails, empties, cache-line edges).
+fn gen_reqs_f32(rng: &mut Rng, count: usize) -> Vec<(Vec<f32>, Vec<f32>)> {
+    (0..count)
+        .map(|_| {
+            if rng.uniform() < 0.5 {
+                let n = 6 + rng.below(2000) as usize;
+                let (a, b, _, _) = gen_dot_f32(n, 1e6, rng);
+                (a, b)
+            } else {
+                let n = rng.below(3000) as usize;
+                (rng.normal_f32_vec(n), rng.normal_f32_vec(n))
+            }
+        })
+        .collect()
+}
+
+fn view_f32(reqs: &[(Vec<f32>, Vec<f32>)]) -> Vec<(&[f32], &[f32])> {
+    reqs.iter().map(|(a, b)| (a.as_slice(), b.as_slice())).collect()
+}
+
+/// Engine layer: `dot_batch_f32` vs a serial loop of `dot_f32`, on ORO
+/// inputs, every batch size, both variants.
+#[test]
+fn engine_dot_batch_bit_identical_on_oro_inputs() {
+    let e = DotEngine::new(cfg(2));
+    prop::check("engine-dot-batch-bit-identical", 15, |rng| {
+        let reqs = gen_reqs_f32(rng, 1 + rng.below(10) as usize);
+        let view = view_f32(&reqs);
+        let variant = if rng.uniform() < 0.7 { Variant::Kahan } else { Variant::Naive };
+        let serial: Vec<f32> = view.iter().map(|&(a, b)| e.dot_f32(variant, a, b)).collect();
+        let batched = e.dot_batch_f32(variant, &view);
+        for (i, (s, g)) in serial.iter().zip(&batched).enumerate() {
+            kahan_ecm::prop_assert!(
+                s.to_bits() == g.to_bits(),
+                "req {i} (n={}, {variant:?}): serial {s:e} vs batched {g:e}",
+                view[i].0.len()
+            );
+        }
+        Ok(())
+    });
+}
+
+/// Engine layer, f64: same invariant through the double-precision path.
+#[test]
+fn engine_dot_batch_f64_bit_identical_on_oro_inputs() {
+    let e = DotEngine::new(cfg(2));
+    prop::check("engine-dot-batch-f64-bit-identical", 10, |rng| {
+        let reqs: Vec<(Vec<f64>, Vec<f64>)> = (0..1 + rng.below(8) as usize)
+            .map(|_| {
+                if rng.uniform() < 0.5 {
+                    let n = 6 + rng.below(1500) as usize;
+                    let (a, b, _, _) = gen_dot_f64(n, 1e10, rng);
+                    (a, b)
+                } else {
+                    let n = rng.below(2000) as usize;
+                    (rng.normal_f64_vec(n), rng.normal_f64_vec(n))
+                }
+            })
+            .collect();
+        let view: Vec<(&[f64], &[f64])> =
+            reqs.iter().map(|(a, b)| (a.as_slice(), b.as_slice())).collect();
+        let serial: Vec<f64> =
+            view.iter().map(|&(a, b)| e.dot_f64(Variant::Kahan, a, b)).collect();
+        let batched = e.dot_batch_f64(Variant::Kahan, &view);
+        for (i, (s, g)) in serial.iter().zip(&batched).enumerate() {
+            kahan_ecm::prop_assert!(
+                s.to_bits() == g.to_bits(),
+                "req {i}: serial {s:e} vs batched {g:e}"
+            );
+        }
+        Ok(())
+    });
+}
+
+/// Mixed-size batch: large dots inside a batch must take the unchanged
+/// chunked-parallel path (visible in `parallel` stats), smalls the batch
+/// path, and every result must still match serial bits.
+#[test]
+fn engine_mixed_size_batch_routes_larges_through_parallel_path() {
+    let e = DotEngine::new(cfg(2));
+    let mut rng = Rng::new(77);
+    // 300_000 elems = 2.4 MB total ≥ the 256 KiB cutoff ⇒ parallel path
+    let sizes = [1000usize, 300_000, 512, 300_000, 2048];
+    let reqs: Vec<(Vec<f32>, Vec<f32>)> =
+        sizes.iter().map(|&n| (rng.normal_f32_vec(n), rng.normal_f32_vec(n))).collect();
+    let view = view_f32(&reqs);
+    let serial: Vec<f32> = view.iter().map(|&(a, b)| e.dot_f32(Variant::Kahan, a, b)).collect();
+    let before = e.stats();
+    let batched = e.dot_batch_f32(Variant::Kahan, &view);
+    let after = e.stats();
+    for (i, (s, g)) in serial.iter().zip(&batched).enumerate() {
+        assert_eq!(s.to_bits(), g.to_bits(), "req {i} (n={})", sizes[i]);
+    }
+    assert_eq!(
+        after.parallel - before.parallel,
+        2,
+        "both larges must take the chunked-parallel path inside the batch"
+    );
+    assert_eq!(after.batched - before.batched, 3, "three smalls batched");
+    assert_eq!(after.requests - before.requests, 5);
+}
+
+/// Sharded layer: `dot_batch_f32` across 2 forced shards vs the serial
+/// loop, with the cross-shard split path exercised inside the batch.
+#[test]
+fn sharded_dot_batch_bit_identical_and_splits_larges() {
+    let sharded =
+        ShardedEngine::from_topology(&Topology::fake_even(2), sharded_cfg(1, 64 << 10));
+    prop::check("sharded-dot-batch-bit-identical", 8, |rng| {
+        let mut reqs = gen_reqs_f32(rng, 1 + rng.below(8) as usize);
+        // one request above the 64 KiB split threshold (100k elems = 800 KB)
+        reqs.push((rng.normal_f32_vec(100_000), rng.normal_f32_vec(100_000)));
+        let view = view_f32(&reqs);
+        let serial: Vec<f32> =
+            view.iter().map(|&(a, b)| sharded.dot_f32(Variant::Kahan, a, b)).collect();
+        let split_before = sharded.stats().split_dots;
+        let batched = sharded.dot_batch_f32(Variant::Kahan, &view);
+        let split_after = sharded.stats().split_dots;
+        for (i, (s, g)) in serial.iter().zip(&batched).enumerate() {
+            kahan_ecm::prop_assert!(
+                s.to_bits() == g.to_bits(),
+                "req {i} (n={}): serial {s:e} vs batched {g:e}",
+                view[i].0.len()
+            );
+        }
+        kahan_ecm::prop_assert!(
+            split_after > split_before,
+            "the large request must take the split path inside the batch"
+        );
+        Ok(())
+    });
+}
+
+/// Sharded homed layer: batches of pooled pairs grouped by home shard vs
+/// serial `dot_homed_f32`, including a cross-shard pair (operands homed on
+/// different shards).
+#[test]
+fn sharded_homed_batch_bit_identical() {
+    let sharded =
+        ShardedEngine::from_topology(&Topology::fake_even(2), sharded_cfg(1, 4 << 20));
+    prop::check("sharded-homed-batch-bit-identical", 8, |rng| {
+        let count = 2 + rng.below(6) as usize;
+        let homed: Vec<_> = (0..count)
+            .map(|i| {
+                let n = 6 + rng.below(4000) as usize;
+                let (a, b, _, _) = gen_dot_f32(n, 1e5, rng);
+                let ha = sharded.admit_f32(&a);
+                // mostly co-located, sometimes deliberately cross-shard
+                let hb = if rng.uniform() < 0.8 {
+                    sharded.admit_to_f32(ha.shard, &b)
+                } else {
+                    sharded.admit_to_f32(ha.shard + i, &b)
+                };
+                (ha, hb)
+            })
+            .collect();
+        let pairs: Vec<_> = homed.iter().map(|(a, b)| (a, b)).collect();
+        let serial: Vec<f32> =
+            pairs.iter().map(|&(a, b)| sharded.dot_homed_f32(Variant::Kahan, a, b)).collect();
+        let batched = sharded.dot_batch_homed_f32(Variant::Kahan, &pairs);
+        for (i, (s, g)) in serial.iter().zip(&batched).enumerate() {
+            kahan_ecm::prop_assert!(
+                s.to_bits() == g.to_bits(),
+                "pair {i}: serial {s:e} vs batched {g:e}"
+            );
+        }
+        Ok(())
+    });
+}
+
+/// Service layer: concurrent bursty submission through the lanes (which
+/// coalesce opportunistically) must be bit-identical to sequential
+/// blocking resubmission of the same requests.
+#[test]
+fn service_bursts_bit_identical_to_sequential_resubmission() {
+    let engine: &'static ShardedEngine = Box::leak(Box::new(ShardedEngine::from_topology(
+        &Topology::fake_even(2),
+        sharded_cfg(1, 4 << 20),
+    )));
+    let (svc, client) = DotService::start_on(ServiceConfig::default(), engine);
+    prop::check("service-burst-bit-identical", 6, |rng| {
+        let reqs = gen_reqs_f32(rng, 4 + rng.below(12) as usize);
+        // burst-submit without draining replies between sends, so lanes
+        // can coalesce; then collect
+        let rxs: Vec<_> = reqs
+            .iter()
+            .enumerate()
+            .map(|(i, (a, b))| client.submit(i as u64, "kahan", a.clone(), b.clone()))
+            .collect();
+        let burst: Vec<f32> = rxs
+            .into_iter()
+            .map(|rx| rx.recv().expect("burst reply").value.expect("burst value"))
+            .collect();
+        for (i, (a, b)) in reqs.iter().enumerate() {
+            let serial =
+                client.dot_blocking("kahan", a.clone(), b.clone()).expect("serial value");
+            kahan_ecm::prop_assert!(
+                serial.to_bits() == burst[i].to_bits(),
+                "req {i} (n={}): serial {serial:e} vs burst {:e}",
+                a.len(),
+                burst[i]
+            );
+        }
+        Ok(())
+    });
+    let stats = svc.stop();
+    assert_eq!(stats.errors, 0, "{stats:?}");
+}
