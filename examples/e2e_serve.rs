@@ -149,11 +149,13 @@ fn main() -> anyhow::Result<()> {
             }
             println!("queue-full stalls  : {}", stats_out.queue_full_stalls);
             println!(
-                "lane batching      : {} batches fused {} of {} requests ({} admit batches)",
+                "lane batching      : {} batches fused {} of {} requests ({} admit batches, \
+                 {} adaptive-window waits)",
                 stats_out.batches,
                 stats_out.batched_requests,
                 stats_out.requests,
-                stats_out.admit_batches
+                stats_out.admit_batches,
+                stats_out.window_waits
             );
         }
         Backend::Pjrt => {

@@ -37,6 +37,9 @@ Host silicon (likwid-bench analog):
                         thread scaling on this machine
   engine-info           persistent dot engine: autotuned kernel dispatch
                         table, worker/pool state, smoke dot
+  plan --len N [--precision f32|f64] [--batch K] [--variant V] [--window-us U]
+                        explain the planner's decision for one request:
+                        route, size class, chosen kernel, fuse cutoff
   accuracy [--n N] [--trials T]
                         error vs condition number (algorithm zoo)
 
@@ -233,6 +236,12 @@ pub fn run(args: &Args) -> Result<(), String> {
                  one worker pass)",
                 svc_cfg.max_batch
             );
+            println!(
+                "adaptive window: batch_window_us = {} (0 = opportunistic only; when set, \
+                 lanes wait only where the planner says the fused kernel wins — see \
+                 `repro plan`)",
+                svc_cfg.batch_window_us
+            );
             for (s, es) in e.stats_per_shard().iter().enumerate() {
                 println!(
                     "  shard {s}: {} workers, pin failures {}",
@@ -253,6 +262,156 @@ pub fn run(args: &Args) -> Result<(), String> {
                  hits/misses {}/{}",
                 s.requests, s.parallel, s.batched, s.split_dots, s.pool.hits, s.pool.misses
             );
+        }
+        "plan" => {
+            let len = args.num("len", 0usize).map_err(|e| e.to_string())?;
+            let prec_s = args.opt("precision", "f32");
+            let variant_s = args.opt("variant", "kahan");
+            let batch = args.num("batch", 1usize).map_err(|e| e.to_string())?;
+            let window_us = args.num("window-us", 0u64).map_err(|e| e.to_string())?;
+            if len == 0 {
+                return Err("plan: --len N (elements per stream) is required".into());
+            }
+            let prec = match prec_s.as_str() {
+                "f32" | "sp" => Precision::Sp,
+                "f64" | "dp" => Precision::Dp,
+                other => return Err(format!("unknown precision `{other}` (f32|f64)")),
+            };
+            let variant = match variant_s.as_str() {
+                "kahan" => crate::isa::Variant::Kahan,
+                "naive" => crate::isa::Variant::Naive,
+                other => return Err(format!("unknown variant `{other}` (kahan|naive)")),
+            };
+            let batch = batch.max(1);
+            let elem: u64 = if prec == Precision::Sp { 4 } else { 8 };
+            let total_bytes = 2 * len as u64 * elem;
+
+            println!("calibrating kernel dispatch (first use only)...");
+            let table = crate::engine::dispatch();
+            let engine = crate::engine::ShardedEngine::global();
+            // the exact policy the serving stack routes by: the engine
+            // tier's thresholds plus the requested service knobs
+            let policy = engine.policy().clone().with_service(batch, window_us);
+            let plan = policy.plan_dot(0, total_bytes);
+            let kernel = table.select(prec, variant, plan.class);
+            let fused = crate::engine::plan::batch_exec(table, prec, variant, plan.class, batch);
+            let bytes = crate::util::fmt::bytes;
+
+            println!();
+            println!("plan for one {variant_s} {prec_s} dot, n = {len} per stream:");
+            println!(
+                "  working set : {} (both streams) -> size class {}",
+                bytes(plan.total_bytes),
+                plan.class.name()
+            );
+            println!("  route       : {}", plan.route.name());
+            use crate::engine::DotRoute;
+            match plan.route {
+                DotRoute::Inline => println!(
+                    "    why: {} < parallel cutoff {} — a worker handoff would cost more \
+                     than it amortizes, so the dot runs on the submitting thread",
+                    bytes(plan.total_bytes),
+                    bytes(policy.parallel_cutoff_bytes as u64)
+                ),
+                DotRoute::Parallel => println!(
+                    "    why: {} >= parallel cutoff {} but < split threshold {} — chunked \
+                     compensated reduction across shard {}'s {} worker(s)",
+                    bytes(plan.total_bytes),
+                    bytes(policy.parallel_cutoff_bytes as u64),
+                    bytes(policy.split_min_bytes as u64),
+                    plan.shard,
+                    policy.shard_workers[plan.shard]
+                ),
+                DotRoute::Split => {
+                    let chunks = policy.split_chunk_count();
+                    println!(
+                        "    why: {} >= split threshold {} — weighted split across all {} \
+                         shard(s), {} global chunks, flat compensated merge",
+                        bytes(plan.total_bytes),
+                        bytes(policy.split_min_bytes as u64),
+                        policy.shards(),
+                        chunks
+                    );
+                    for (s, lo, hi) in policy.split_blocks(chunks) {
+                        println!(
+                            "      shard {s}: chunks {lo}..{hi} ({} worker(s))",
+                            policy.shard_workers[s]
+                        );
+                    }
+                }
+            }
+            println!(
+                "  shard route : {} shard(s); fresh requests round-robin (this plan assumed \
+                 shard {}), pooled streams execute on their home shard",
+                policy.shards(),
+                plan.shard
+            );
+            println!("  kernel      : {} ({:.0} cy at calibration probe)", kernel.name, {
+                let c = table.choice(prec, plan.class);
+                if variant == crate::isa::Variant::Naive { c.probe_cy.1 } else { c.probe_cy.0 }
+            });
+            if plan.route != DotRoute::Inline {
+                println!(
+                    "  batch of {batch}: serial — {} requests take the per-request path at \
+                     any batch size (only inline-route dots fuse)",
+                    plan.route.name()
+                );
+            } else {
+                match fused {
+                    Some(bk) => println!(
+                        "  batch of {batch}: FUSE via {} (multi-dot twin of {}; bit-identical \
+                         per request)",
+                        bk.name, bk.matches
+                    ),
+                    None if batch < 2 => {
+                        println!("  batch of {batch}: serial (a single request has nothing to fuse)")
+                    }
+                    None => println!(
+                        "  batch of {batch}: serial loop of {} (calibration kept no fused twin \
+                         for this cell)",
+                        kernel.name
+                    ),
+                }
+            }
+            // the calibrated fuse cutoff for this (precision, variant) row
+            let cutoff: Vec<&str> = crate::engine::SizeClass::ALL
+                .iter()
+                .filter(|&&c| table.select_batch(prec, variant, c).is_some())
+                .map(|c| c.name())
+                .collect();
+            println!(
+                "  fuse cutoff : fused kernels kept for classes [{}] (monotone; MEM always \
+                 serial)",
+                cutoff.join(", ")
+            );
+            // mirror the lane's actual decision: only inline-route dots
+            // with a winning fused kernel may ever hold a window open
+            let fused_wins = plan.route == DotRoute::Inline && fused.is_some();
+            match policy.batch_window(1, fused_wins) {
+                Some(w) => println!(
+                    "  window      : a lane holding a short run may wait up to {} us for \
+                     more requests (planner-approved: fusion wins at batch {batch})",
+                    w.as_micros()
+                ),
+                None if window_us == 0 => println!(
+                    "  window      : 0 us — purely opportunistic coalescing (zero added \
+                     latency)"
+                ),
+                None if batch < 2 => println!(
+                    "  window      : configured {window_us} us but max_batch = {batch} — \
+                     there is no fuse to grow, so lanes never wait"
+                ),
+                None if plan.route != DotRoute::Inline => println!(
+                    "  window      : configured {window_us} us but {} requests never \
+                     wait — waiting cannot grow a fuse they will not join",
+                    plan.route.name()
+                ),
+                None => println!(
+                    "  window      : configured {window_us} us but the planner vetoes the \
+                     wait for this request (calibration kept no winning fused kernel for \
+                     this cell)"
+                ),
+            }
         }
         "accuracy" => {
             let n = args.num("n", 2048usize).map_err(|e| e.to_string())?;
@@ -356,5 +515,27 @@ mod tests {
         assert!(run(&args(&["models", "--arch", "z80"])).is_err());
         assert!(run(&args(&["frobnicate"])).is_err());
         assert!(run(&args(&["table1", "--bogus", "1"])).is_err());
+    }
+
+    /// `repro plan` explains a decision for every route without erroring
+    /// (exact routes depend on the host; the planner property tests pin
+    /// them down — this is the CLI surface).
+    #[test]
+    fn plan_command_runs_and_validates_inputs() {
+        run(&args(&["plan", "--len", "1000"])).unwrap();
+        run(&args(&["plan", "--len", "4096", "--precision", "f64", "--batch", "4"])).unwrap();
+        run(&args(&[
+            "plan",
+            "--len",
+            "1000000",
+            "--variant",
+            "naive",
+            "--window-us",
+            "100",
+        ]))
+        .unwrap();
+        assert!(run(&args(&["plan"])).is_err(), "--len is required");
+        assert!(run(&args(&["plan", "--len", "10", "--precision", "f16"])).is_err());
+        assert!(run(&args(&["plan", "--len", "10", "--variant", "exact"])).is_err());
     }
 }

@@ -1,0 +1,537 @@
+//! Per-shard submitter lanes: the greedy FIFO drain, same-kind run
+//! coalescing, the planner-gated adaptive batching window, and the
+//! batched serve paths.
+//!
+//! Each wake-up takes everything already queued (capped), then serves it
+//! as runs — consecutive small dots become one engine batch, consecutive
+//! admissions one worker pass — so a burst pays one handoff instead of
+//! one per request, without reordering anything (runs never cross a
+//! message of a different kind). When `ServiceConfig::batch_window_us` is
+//! set, a wake-up whose trailing fuse-eligible dot run is shorter than a
+//! full batch may additionally wait — but only when the planner
+//! ([`crate::engine::PlanPolicy::batch_window`]) confirms the fused
+//! kernel wins at the projected batch size; where fusion lost the
+//! calibration probe, added latency buys nothing and the lane serves
+//! immediately. Before waiting, everything queued AHEAD of the growable
+//! run (admissions, other-variant or parallel/split-route dots) is served
+//! — the window may only ever delay requests that stand to gain from it.
+
+use super::router::HostRouter;
+use super::{msg_kind, parse_variant, DotRequest, DotResponse, Msg};
+use crate::engine::plan::batch_exec;
+use crate::engine::{dispatch, DotRoute, HomedSlice};
+use crate::isa::{Precision, Variant};
+use std::sync::atomic::Ordering;
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+/// One shard's submitter: drain the lane queue GREEDILY in FIFO order.
+/// On the shutdown marker, everything already queued behind it is
+/// *served* (not dropped) before the thread exits — the old single-router
+/// loop broke out of `recv` on shutdown and silently dropped queued
+/// requests, leaving their clients with a disconnected reply channel.
+pub(super) fn submitter_loop(router: &HostRouter, shard: usize, rx: mpsc::Receiver<Msg>) {
+    // calibrate the dispatch table before the first request, on a worker
+    // thread so `DotService::start` stays non-blocking (the OnceLock makes
+    // one submitter calibrate while its peers wait)
+    let _ = crate::engine::dispatch();
+    // bound one wake-up's gather so a firehose producer cannot starve the
+    // executions it is waiting on (max_batch >= 1 is validated at start)
+    let gather_cap = router.policy.max_batch * 4;
+    let mut shutdown = false;
+    loop {
+        let first = if shutdown {
+            match rx.try_recv() {
+                Ok(m) => m,
+                Err(_) => return,
+            }
+        } else {
+            match rx.recv() {
+                Ok(m) => m,
+                Err(_) => return,
+            }
+        };
+        let mut pending: Vec<Msg> = Vec::new();
+        match first {
+            Msg::Shutdown => shutdown = true,
+            m => {
+                if shutdown {
+                    router.drained.fetch_add(1, Ordering::Relaxed);
+                }
+                pending.push(m);
+            }
+        }
+        while pending.len() < gather_cap {
+            match rx.try_recv() {
+                Ok(Msg::Shutdown) => shutdown = true,
+                Ok(m) => {
+                    // messages gathered behind the marker are the drain set
+                    if shutdown {
+                        router.drained.fetch_add(1, Ordering::Relaxed);
+                    }
+                    pending.push(m);
+                }
+                Err(_) => break,
+            }
+        }
+        // latency-aware adaptive batching: the greedy gather came up
+        // short of a full batch — if (and only if) the planner approves,
+        // trade a bounded wait for a bigger fuse. Never during shutdown:
+        // the drain must finish promptly.
+        if !shutdown && pending.len() < gather_cap {
+            if let Some((window, run, kind, variant)) = router.plan_window(shard, &pending) {
+                router.lanes[shard].window_waits.fetch_add(1, Ordering::Relaxed);
+                // serve everything AHEAD of the growable run first:
+                // admissions, pooled releases, and parallel/split-route or
+                // other-variant dots can never join this fuse, so holding
+                // them through the window would be pure added latency
+                // (FIFO order is preserved — they were queued earlier)
+                let head = pending.len() - run;
+                if head > 0 {
+                    let rest = pending.split_off(head);
+                    serve_pending(router, shard, std::mem::replace(&mut pending, rest));
+                }
+                let deadline = Instant::now() + window;
+                while pending.len() < router.policy.max_batch && pending.len() < gather_cap {
+                    let now = Instant::now();
+                    if now >= deadline {
+                        break;
+                    }
+                    match rx.recv_timeout(deadline - now) {
+                        Ok(Msg::Shutdown) => {
+                            shutdown = true;
+                            break;
+                        }
+                        Ok(m) => {
+                            let grew = router.grows_fuse(shard, &m, kind, variant);
+                            pending.push(m);
+                            if !grew {
+                                // a message that can't join the fuse ended
+                                // the run — more waiting can't grow it, and
+                                // would only delay this arrival, so serve
+                                break;
+                            }
+                        }
+                        Err(_) => break,
+                    }
+                }
+            }
+        }
+        serve_pending(router, shard, pending);
+    }
+}
+
+/// Serve one wake-up's gathered messages as maximal same-kind runs, in
+/// arrival order.
+fn serve_pending(router: &HostRouter, shard: usize, msgs: Vec<Msg>) {
+    let mut run: Vec<Msg> = Vec::new();
+    for m in msgs {
+        if !run.is_empty() && msg_kind(&run[0]) != msg_kind(&m) {
+            serve_run(router, shard, std::mem::take(&mut run));
+        }
+        run.push(m);
+    }
+    if !run.is_empty() {
+        serve_run(router, shard, run);
+    }
+}
+
+/// Execute one same-kind run: dot and admission runs of ≥ 2 take the
+/// coalesced paths, everything else the per-message path. Panic isolation
+/// as for `serve_caught` — a dead lane would silently blackhole its shard.
+fn serve_run(router: &HostRouter, shard: usize, mut run: Vec<Msg>) {
+    if run.len() == 1 {
+        serve_caught(router, shard, run.pop().expect("run of one"));
+        return;
+    }
+    let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| match msg_kind(&run[0]) {
+        0 => {
+            let reqs: Vec<DotRequest> = run
+                .into_iter()
+                .map(|m| match m {
+                    Msg::Req(r) => r,
+                    _ => unreachable!("mixed run"),
+                })
+                .collect();
+            router.serve_req_batch(shard, reqs);
+        }
+        1 => router.serve_pooled_batch(shard, run),
+        2 => router.serve_admit_batch(shard, run),
+        _ => {
+            for m in run {
+                router.serve(shard, m);
+            }
+        }
+    }));
+    if r.is_err() {
+        router.errors.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+/// `serve`, but a panic (realistically: a chunk kernel panic that
+/// `collect_partials` re-raises in the caller — here, this submitter)
+/// must not kill the lane: a dead submitter would silently blackhole
+/// every future message routed to its shard (`send_to` swallows
+/// disconnects) while `ServiceStats` stays clean — a partial, invisible
+/// outage. The panicking request's reply sender unwinds with the frame,
+/// so its client sees a disconnect; the failure is counted and the lane
+/// lives on. (The engine's worker pool survives job panics by the same
+/// policy, so the next request finds it healthy.)
+fn serve_caught(router: &HostRouter, shard: usize, msg: Msg) {
+    let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| router.serve(shard, msg)));
+    if r.is_err() {
+        router.errors.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+impl HostRouter {
+    /// Can `m` join the fuse being grown — same message kind and variant
+    /// as the run's head, and itself inline-route? Anything else takes
+    /// the serial path regardless of batch size, so waiting on its
+    /// account (or making it wait) would be pure added latency.
+    fn grows_fuse(&self, shard: usize, m: &Msg, kind: u8, variant: &'static str) -> bool {
+        if msg_kind(m) != kind {
+            return false;
+        }
+        let (v, n) = match m {
+            Msg::Req(r) => (r.variant, r.a.len().min(r.b.len())),
+            Msg::ReqPooled { variant, sa: Some(sa), sb: Some(sb), .. } => {
+                (*variant, sa.len().min(sb.len()))
+            }
+            _ => return false,
+        };
+        if v != variant {
+            return false;
+        }
+        let total_bytes = (2 * n * std::mem::size_of::<f32>()) as u64;
+        self.policy.plan_dot(shard, total_bytes).route == DotRoute::Inline
+    }
+
+    /// The planner's wait-for-k decision for one wake-up's gather: `Some`
+    /// only when the gather ENDS in a coalescible inline-route dot run
+    /// whose dispatch cell kept a fused kernel at the projected batch
+    /// size (`PlanPolicy::batch_window` holds the full condition list).
+    /// Returns the window, the length of the growable trailing run (only
+    /// messages that [`HostRouter::grows_fuse`] accepts count — the
+    /// caller serves everything ahead of that run before waiting), and
+    /// the run's kind/variant identity for growth checks during the wait.
+    fn plan_window(
+        &self,
+        shard: usize,
+        pending: &[Msg],
+    ) -> Option<(Duration, usize, u8, &'static str)> {
+        if self.policy.batch_window_us == 0 {
+            // the default: purely opportunistic, zero added latency
+            return None;
+        }
+        let last = pending.last()?;
+        let (variant, n) = match last {
+            Msg::Req(r) => (r.variant, r.a.len().min(r.b.len())),
+            Msg::ReqPooled { variant, sa: Some(sa), sb: Some(sb), .. } => {
+                (*variant, sa.len().min(sb.len()))
+            }
+            // only dot runs grow by waiting; admissions and invalid
+            // pooled operands serve immediately
+            _ => return None,
+        };
+        let v = parse_variant(variant).ok()?;
+        let total_bytes = (2 * n * std::mem::size_of::<f32>()) as u64;
+        // only inline-class dots ever fuse: a parallel- or split-route
+        // request takes the serial path at any batch size, so waiting
+        // would be pure added latency
+        let plan = self.policy.plan_dot(shard, total_bytes);
+        if plan.route != DotRoute::Inline {
+            return None;
+        }
+        let fused_wins =
+            batch_exec(dispatch(), Precision::Sp, v, plan.class, self.policy.max_batch).is_some();
+        let kind = msg_kind(last);
+        let run = pending
+            .iter()
+            .rev()
+            .take_while(|m| self.grows_fuse(shard, m, kind, variant))
+            .count();
+        self.policy.batch_window(run, fused_wins).map(|w| (w, run, kind, variant))
+    }
+
+    /// Serve a coalesced run of fresh dot requests: validate each, then
+    /// execute same-variant chunks of ≥ 2 as ONE engine batch on this
+    /// lane's shard (bit-identical to per-request execution). On a batch
+    /// panic the chunk falls back to per-request serves, so only the
+    /// culprit request errors.
+    fn serve_req_batch(&self, s: usize, reqs: Vec<DotRequest>) {
+        self.requests.fetch_add(reqs.len() as u64, Ordering::Relaxed);
+        let mut kahan: Vec<DotRequest> = Vec::new();
+        let mut naive: Vec<DotRequest> = Vec::new();
+        for req in reqs {
+            match parse_variant(req.variant) {
+                Err(e) => {
+                    self.errors.fetch_add(1, Ordering::Relaxed);
+                    let _ = req.reply.send(DotResponse {
+                        id: req.id,
+                        value: Err(e),
+                        batch_size: 1,
+                        latency: req.submitted.elapsed(),
+                    });
+                }
+                Ok(_) if req.a.len() != req.b.len() => {
+                    self.errors.fetch_add(1, Ordering::Relaxed);
+                    let _ = req.reply.send(DotResponse {
+                        id: req.id,
+                        value: Err(format!(
+                            "length mismatch {} vs {}",
+                            req.a.len(),
+                            req.b.len()
+                        )),
+                        batch_size: 1,
+                        latency: req.submitted.elapsed(),
+                    });
+                }
+                Ok(Variant::Naive) => naive.push(req),
+                Ok(_) => kahan.push(req),
+            }
+        }
+        for (v, mut group) in [(Variant::Kahan, kahan), (Variant::Naive, naive)] {
+            while !group.is_empty() {
+                let take = group.len().min(self.policy.max_batch);
+                let chunk: Vec<DotRequest> = group.drain(..take).collect();
+                self.serve_req_chunk(s, v, chunk);
+            }
+        }
+    }
+
+    /// One engine batch call for a same-variant chunk of validated fresh
+    /// requests (or the plain single-request path for a chunk of one).
+    fn serve_req_chunk(&self, s: usize, v: Variant, chunk: Vec<DotRequest>) {
+        if chunk.len() == 1 {
+            // mirror of the Msg::Req single path, minus the re-validation
+            let req = &chunk[0];
+            let value = self.execute(s, req.variant, false, |var| {
+                self.engine.dot_on_f32(s, var, &req.a, &req.b)
+            });
+            if value.is_err() {
+                self.errors.fetch_add(1, Ordering::Relaxed);
+            }
+            let req = chunk.into_iter().next().expect("chunk of one");
+            let _ = req.reply.send(DotResponse {
+                id: req.id,
+                value,
+                batch_size: 1,
+                latency: req.submitted.elapsed(),
+            });
+            return;
+        }
+        let pairs: Vec<(&[f32], &[f32])> =
+            chunk.iter().map(|r| (r.a.as_slice(), r.b.as_slice())).collect();
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            self.engine.dot_batch_on_f32(s, v, &pairs)
+        }));
+        drop(pairs);
+        match r {
+            Ok(vals) => {
+                let bsz = chunk.len();
+                // counted only on success: the panic fallback below routes
+                // every request through `execute`, which does its own
+                // counting — counting both would break the
+                // `engine_calls - batches + batched_requests == served`
+                // identity the e2e driver asserts
+                self.engine_calls.fetch_add(1, Ordering::Relaxed);
+                self.batches.fetch_add(1, Ordering::Relaxed);
+                self.batched_requests.fetch_add(bsz as u64, Ordering::Relaxed);
+                self.lanes[s].executed.fetch_add(bsz as u64, Ordering::Relaxed);
+                for (req, val) in chunk.into_iter().zip(vals) {
+                    let _ = req.reply.send(DotResponse {
+                        id: req.id,
+                        value: Ok(val),
+                        batch_size: bsz,
+                        latency: req.submitted.elapsed(),
+                    });
+                }
+            }
+            Err(_) => {
+                // the batch died (a kernel panicked): fall back to
+                // per-request execution so only the culprit errors
+                self.errors.fetch_add(1, Ordering::Relaxed);
+                for req in chunk {
+                    let value = self.execute(s, req.variant, false, |var| {
+                        self.engine.dot_on_f32(s, var, &req.a, &req.b)
+                    });
+                    if value.is_err() {
+                        self.errors.fetch_add(1, Ordering::Relaxed);
+                    }
+                    let _ = req.reply.send(DotResponse {
+                        id: req.id,
+                        value,
+                        batch_size: 1,
+                        latency: req.submitted.elapsed(),
+                    });
+                }
+            }
+        }
+    }
+
+    /// Serve a coalesced run of pooled dots: operands were resolved at
+    /// submit time, so validation here is presence + length; valid
+    /// same-variant chunks of ≥ 2 execute as one homed engine batch on
+    /// the pairs' home shards.
+    fn serve_pooled_batch(&self, s: usize, msgs: Vec<Msg>) {
+        struct Pooled {
+            id: u64,
+            variant: &'static str,
+            sa: HomedSlice<f32>,
+            sb: HomedSlice<f32>,
+            reply: mpsc::Sender<DotResponse>,
+            submitted: Instant,
+        }
+        self.requests.fetch_add(msgs.len() as u64, Ordering::Relaxed);
+        let mut kahan: Vec<Pooled> = Vec::new();
+        let mut naive: Vec<Pooled> = Vec::new();
+        for msg in msgs {
+            let Msg::ReqPooled { id, variant, a, b, sa, sb, reply, submitted } = msg else {
+                unreachable!("serve_pooled_batch takes ReqPooled runs only");
+            };
+            let validated: Result<Variant, String> = match (parse_variant(variant), &sa, &sb) {
+                (Err(e), _, _) => Err(e),
+                (Ok(v), Some(sa), Some(sb)) if sa.len() == sb.len() => Ok(v),
+                (Ok(_), Some(sa), Some(sb)) => {
+                    Err(format!("length mismatch {} vs {}", sa.len(), sb.len()))
+                }
+                (Ok(_), sa, _) => Err(format!(
+                    "unknown stream handle {}",
+                    if sa.is_some() { b } else { a }
+                )),
+            };
+            let v = match validated {
+                Err(e) => {
+                    self.errors.fetch_add(1, Ordering::Relaxed);
+                    let _ = reply.send(DotResponse {
+                        id,
+                        value: Err(e),
+                        batch_size: 1,
+                        latency: submitted.elapsed(),
+                    });
+                    continue;
+                }
+                Ok(v) => v,
+            };
+            let p = Pooled {
+                id,
+                variant,
+                sa: sa.expect("validated"),
+                sb: sb.expect("validated"),
+                reply,
+                submitted,
+            };
+            if v == Variant::Naive {
+                naive.push(p);
+            } else {
+                kahan.push(p);
+            }
+        }
+        for (v, mut group) in [(Variant::Kahan, kahan), (Variant::Naive, naive)] {
+            while !group.is_empty() {
+                let take = group.len().min(self.policy.max_batch);
+                let chunk: Vec<Pooled> = group.drain(..take).collect();
+                if chunk.len() == 1 {
+                    let p = &chunk[0];
+                    let value = self.execute(s, p.variant, true, |var| {
+                        self.engine.dot_homed_f32(var, &p.sa, &p.sb)
+                    });
+                    if value.is_err() {
+                        self.errors.fetch_add(1, Ordering::Relaxed);
+                    }
+                    let p = chunk.into_iter().next().expect("chunk of one");
+                    let _ = p.reply.send(DotResponse {
+                        id: p.id,
+                        value,
+                        batch_size: 1,
+                        latency: p.submitted.elapsed(),
+                    });
+                    continue;
+                }
+                let pairs: Vec<(&HomedSlice<f32>, &HomedSlice<f32>)> =
+                    chunk.iter().map(|p| (&p.sa, &p.sb)).collect();
+                let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    self.engine.dot_batch_homed_f32(v, &pairs)
+                }));
+                drop(pairs);
+                match r {
+                    Ok(vals) => {
+                        // success-only counting, as in `serve_req_chunk`:
+                        // the panic fallback's `execute` calls count for
+                        // themselves
+                        let bsz = chunk.len();
+                        self.engine_calls.fetch_add(1, Ordering::Relaxed);
+                        self.pooled_calls.fetch_add(bsz as u64, Ordering::Relaxed);
+                        self.batches.fetch_add(1, Ordering::Relaxed);
+                        self.batched_requests.fetch_add(bsz as u64, Ordering::Relaxed);
+                        self.lanes[s].executed.fetch_add(bsz as u64, Ordering::Relaxed);
+                        for (p, val) in chunk.into_iter().zip(vals) {
+                            let _ = p.reply.send(DotResponse {
+                                id: p.id,
+                                value: Ok(val),
+                                batch_size: bsz,
+                                latency: p.submitted.elapsed(),
+                            });
+                        }
+                    }
+                    Err(_) => {
+                        self.errors.fetch_add(1, Ordering::Relaxed);
+                        for p in chunk {
+                            let value = self.execute(s, p.variant, true, |var| {
+                                self.engine.dot_homed_f32(var, &p.sa, &p.sb)
+                            });
+                            if value.is_err() {
+                                self.errors.fetch_add(1, Ordering::Relaxed);
+                            }
+                            let _ = p.reply.send(DotResponse {
+                                id: p.id,
+                                value,
+                                batch_size: 1,
+                                latency: p.submitted.elapsed(),
+                            });
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// Serve a coalesced run of admissions: one worker pass copies up to
+    /// `max_batch` streams into shard `s`'s pool (the ROADMAP's
+    /// admission-coalescing item), then handles are minted and replied in
+    /// order. `max_batch = 1` degrades to the per-message path, as the
+    /// config documents.
+    fn serve_admit_batch(&self, s: usize, mut msgs: Vec<Msg>) {
+        while !msgs.is_empty() {
+            let take = msgs.len().min(self.policy.max_batch);
+            let rest = msgs.split_off(take);
+            let group = std::mem::replace(&mut msgs, rest);
+            if group.len() == 1 {
+                for m in group {
+                    self.serve(s, m);
+                }
+                continue;
+            }
+            let mut datas: Vec<Vec<f32>> = Vec::with_capacity(group.len());
+            let mut replies: Vec<mpsc::Sender<Result<u64, String>>> =
+                Vec::with_capacity(group.len());
+            for msg in group {
+                let Msg::Admit { data, reply } = msg else {
+                    unreachable!("serve_admit_batch takes Admit runs only");
+                };
+                datas.push(data);
+                replies.push(reply);
+            }
+            let views: Vec<&[f32]> = datas.iter().map(|d| d.as_slice()).collect();
+            let homed = self.engine.admit_many_to_f32(s, &views);
+            self.admit_batches.fetch_add(1, Ordering::Relaxed);
+            for (h, reply) in homed.into_iter().zip(replies) {
+                let handle = self.next_handle.fetch_add(1, Ordering::Relaxed);
+                self.streams.write().unwrap().insert(handle, h);
+                self.admitted.fetch_add(1, Ordering::Relaxed);
+                let _ = reply.send(Ok(handle));
+            }
+        }
+    }
+}

@@ -1,0 +1,423 @@
+//! Batched dot service: the request-path component behind the end-to-end
+//! example (`examples/e2e_serve.rs`).
+//!
+//! Two backends share one client API:
+//!
+//! * [`Backend::Host`] (default) — requests execute on the NUMA-sharded
+//!   serving tier (`crate::engine::ShardedEngine`) through a **router
+//!   pool**: one submitter thread per shard, each fed by its own bounded
+//!   queue. The client routes messages itself (no central router thread to
+//!   serialize behind): pooled streams go to the submitter of their home
+//!   shard, fresh requests round-robin across submitters, and each
+//!   submitter executes on *its* shard — so two small independent requests
+//!   run concurrently on different shards. Submitters drain their queue
+//!   **greedily**: a wake-up that finds k ≥ 2 queued small dots executes
+//!   them as one engine batch (`ServiceConfig::max_batch` caps the fuse;
+//!   results are bit-identical to serial execution — the engine plan
+//!   module's "Batching invariant"), and a burst of admissions to one
+//!   shard coalesces into a single worker pass (`Msg::AdmitPair` admits a
+//!   co-located pair in one message). Runs never cross a message of a
+//!   different kind, so each lane keeps exact FIFO order. With
+//!   [`ServiceConfig::batch_window_us`] set, a lane holding a short dot
+//!   run may additionally wait a bounded window for more requests — but
+//!   only when the planner ([`crate::engine::PlanPolicy::batch_window`])
+//!   says the fused kernel wins at the projected batch size; the default
+//!   of 0 keeps the purely opportunistic, zero-added-latency behavior.
+//!   Very large dots still fan out across every shard with the flat
+//!   compensated cross-shard merge (the submitter only initiates the
+//!   split), which keeps the sequential Kahan bound and 1-vs-N-shard
+//!   bit-identity intact. Queues are bounded
+//!   (`ServiceConfig::router_queue_depth`): when a lane is full the
+//!   client's send blocks — back-pressure instead of unbounded queue
+//!   growth — and the stall is counted in
+//!   [`ServiceStats::queue_full_stalls`]. Shutdown is graceful: each
+//!   submitter drains and serves everything already queued behind the
+//!   shutdown marker before exiting (see `lane::submitter_loop`).
+//! * [`Backend::Pjrt`] — the original PJRT path: one worker thread owns
+//!   the `Runtime` (executables are not shared across threads), drains the
+//!   queue with a batching window, groups compatible requests, and
+//!   executes them in one PJRT call when possible. Needs AOT artifacts and
+//!   the `pjrt` cargo feature.
+//!
+//! Ordering: each lane is FIFO, and pooled-dot operands are resolved at
+//! *submit* time in the caller's program order while `release` removes the
+//! stream-table entry synchronously on the caller's thread. One client
+//! therefore keeps exactly the old single-router FIFO semantics — a
+//! `release` after `submit_pooled` never invalidates the in-flight dot
+//! (the message holds the resolved `Arc`s), and a `release` before a
+//! submit is always visible to it. Concurrent clients racing a release
+//! against a submit get one outcome or the other, never a dangling read.
+//!
+//! Architecture (std-only; the offline container has no tokio): callers
+//! submit `DotRequest`s over per-shard bounded channels and receive their
+//! `DotResponse` on a per-request return channel.
+//!
+//! Module map (each file stays well under ~700 lines):
+//!
+//! * `mod.rs` — message/request/response types, [`ServiceConfig`]
+//!   (validated at service start), [`DotService`] lifecycle;
+//! * `router` — the shared [`Backend::Host`] router state (`HostRouter`)
+//!   and the client's routing ([`DotClient`]);
+//! * `lane` — the per-shard submitter loop: greedy drain, same-kind run
+//!   coalescing, the planner-gated adaptive batching window, and the
+//!   batched serve paths;
+//! * `streams` — the admitted-stream surface: admission, co-location,
+//!   pooled dots, release;
+//! * `stats` — [`ServiceStats`]/[`LaneStats`] and the snapshot;
+//! * `pjrt` — the [`Backend::Pjrt`] worker loop.
+
+mod lane;
+mod pjrt;
+mod router;
+mod stats;
+mod streams;
+#[cfg(test)]
+mod tests;
+#[cfg(test)]
+mod tests_window;
+
+pub use router::DotClient;
+pub use stats::{LaneStats, ServiceStats};
+
+use crate::engine::{HomedSlice, ShardedEngine};
+use crate::isa::Variant;
+use crate::runtime::Runtime;
+use router::{ClientInner, HostRouter};
+use std::sync::{mpsc, Arc};
+use std::time::{Duration, Instant};
+
+/// Message to a submitter (Host) or the worker (Pjrt): a request, stream
+/// admission/release, or an explicit shutdown marker (needed because
+/// `DotClient` clones keep the channels alive — dropping the service's own
+/// senders alone would never disconnect the receivers).
+enum Msg {
+    Req(DotRequest),
+    /// Admit a stream into the sharded engine's pooled storage; replies
+    /// with the stream handle (Host backend only). Placement is the lane
+    /// the message was routed to: the client resolves `near` co-location
+    /// *before* sending, so the admission copy always runs on the target
+    /// shard's own workers.
+    Admit { data: Vec<f32>, reply: mpsc::Sender<Result<u64, String>> },
+    /// Dot two admitted streams on the home shard of `a` (Host backend
+    /// only). The operands are resolved from the stream table at *submit*
+    /// time on the client thread — program order of one client therefore
+    /// decides what a dot sees (exactly the old single-router FIFO
+    /// semantics): a `release` after `submit_pooled` can never invalidate
+    /// an in-flight dot (the message holds the slices alive), and a
+    /// `release` before it is always visible (`sa`/`sb` arrive `None`).
+    ReqPooled {
+        id: u64,
+        variant: &'static str,
+        a: u64,
+        b: u64,
+        sa: Option<HomedSlice<f32>>,
+        sb: Option<HomedSlice<f32>>,
+        reply: mpsc::Sender<DotResponse>,
+        submitted: Instant,
+    },
+    /// Admit a stream pair in ONE message (Host backend only): both
+    /// streams land on the same shard in a single worker pass — the
+    /// co-located placement `admit_near` needed two routing round-trips
+    /// for.
+    AdmitPair {
+        a: Vec<f32>,
+        b: Vec<f32>,
+        reply: mpsc::Sender<Result<(u64, u64), String>>,
+    },
+    /// Drop an admitted stream (Pjrt path only — the Host client removes
+    /// it from the shared stream table synchronously instead).
+    Release { handle: u64 },
+    Shutdown,
+}
+
+/// Discriminant for run-grouping in the submitter's greedy drain: only
+/// consecutive messages of the same kind coalesce, so each lane keeps its
+/// exact FIFO execution order.
+fn msg_kind(m: &Msg) -> u8 {
+    match m {
+        Msg::Req(_) => 0,
+        Msg::ReqPooled { .. } => 1,
+        Msg::Admit { .. } => 2,
+        Msg::AdmitPair { .. } => 3,
+        Msg::Release { .. } => 4,
+        Msg::Shutdown => 5,
+    }
+}
+
+/// Which execution path serves requests.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum Backend {
+    /// persistent host engine (pooled buffers + pinned workers)
+    #[default]
+    Host,
+    /// PJRT execution of the AOT artifacts (requires the `pjrt` feature)
+    Pjrt,
+}
+
+/// A dot-product request.
+pub struct DotRequest {
+    pub id: u64,
+    /// "kahan" or "naive"
+    pub variant: &'static str,
+    pub a: Vec<f32>,
+    pub b: Vec<f32>,
+    reply: mpsc::Sender<DotResponse>,
+    /// stamped in `DotClient::submit`, so reported latency includes the
+    /// time spent queued in the channel, not just the execute time
+    submitted: Instant,
+}
+
+/// The service's answer.
+#[derive(Clone, Debug)]
+pub struct DotResponse {
+    pub id: u64,
+    pub value: Result<f32, String>,
+    /// how many requests shared the backend call that served this one
+    pub batch_size: usize,
+    /// queue + execute time
+    pub latency: Duration,
+}
+
+/// Cap on [`ServiceConfig::batch_window_us`]: a window is a per-wake-up
+/// latency budget, so anything beyond 10 s is a configuration bug (and a
+/// huge value could overflow the lane's deadline arithmetic) — validation
+/// rejects it instead of wedging every lane.
+pub const MAX_BATCH_WINDOW_US: u64 = 10_000_000;
+
+/// Service configuration.
+#[derive(Clone, Debug)]
+pub struct ServiceConfig {
+    pub backend: Backend,
+    /// Host backend: per-shard submitter queue depth. When a lane holds
+    /// this many undelivered messages the next send *blocks* the caller
+    /// (back-pressure: admission copies must not pile up behind a busy
+    /// shard and starve compute), and the stall is counted in
+    /// [`ServiceStats::queue_full_stalls`]. Must be ≥ 1 (validated at
+    /// service start).
+    pub router_queue_depth: usize,
+    /// Max requests fused into one batched execute. Host backend: a
+    /// submitter that wakes up with k ≥ 2 queued small dots executes them
+    /// as ONE engine batch (chunks of at most `max_batch`; bit-identical
+    /// to serial execution — see the engine plan module's batching
+    /// invariant), and bursts of admissions coalesce into one worker pass
+    /// the same way. `max_batch = 1` disables coalescing; 0 is rejected at
+    /// service start. Pjrt backend: the batch window size, as before.
+    pub max_batch: usize,
+    /// Host backend: latency-aware adaptive batching. When a lane wakes up
+    /// holding fewer than `max_batch` coalescible dots AND the planner
+    /// says the fused kernel wins at the projected batch size
+    /// ([`crate::engine::PlanPolicy::batch_window`]), it waits up to this
+    /// many microseconds for more requests before executing — trading a
+    /// bounded slice of p50 latency for bigger fuses under light load.
+    /// `0` (default) keeps the purely opportunistic coalescing with zero
+    /// added latency. Capped by [`MAX_BATCH_WINDOW_US`] (validated at
+    /// service start).
+    pub batch_window_us: u64,
+    /// how long the batcher waits to fill a batch (Pjrt backend)
+    pub window: Duration,
+    /// name of the batched artifact to use (must exist in the manifest)
+    pub batched_artifact_kahan: String,
+    pub batched_artifact_naive: String,
+    /// single-request fallback artifacts
+    pub single_artifact_kahan: String,
+    pub single_artifact_naive: String,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> Self {
+        ServiceConfig {
+            backend: Backend::Host,
+            router_queue_depth: 64,
+            max_batch: 16,
+            batch_window_us: 0,
+            window: Duration::from_millis(2),
+            batched_artifact_kahan: "batched_dot_kahan_f32_b8_n16384".into(),
+            batched_artifact_naive: "batched_dot_naive_f32_b8_n16384".into(),
+            single_artifact_kahan: "dot_kahan_f32_n65536".into(),
+            single_artifact_naive: "dot_naive_f32_n65536".into(),
+        }
+    }
+}
+
+impl ServiceConfig {
+    /// Validate the configuration. Run at every service start so a bad
+    /// config is a clean error, not a panic deep in a lane or a silently
+    /// wedged queue: `max_batch == 0` would make every coalescing chunk
+    /// empty, `router_queue_depth == 0` can never accept a message
+    /// (rendezvous channels would deadlock the blocking client), and an
+    /// oversized `batch_window_us` would stall lanes for minutes per
+    /// wake-up.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.max_batch == 0 {
+            return Err(
+                "ServiceConfig::max_batch must be >= 1 (use 1 to disable coalescing)".into()
+            );
+        }
+        if self.router_queue_depth == 0 {
+            return Err(
+                "ServiceConfig::router_queue_depth must be >= 1 (a depth-0 lane can never \
+                 accept a message)"
+                    .into(),
+            );
+        }
+        if self.batch_window_us > MAX_BATCH_WINDOW_US {
+            return Err(format!(
+                "ServiceConfig::batch_window_us = {} exceeds the {} us ({} s) cap — a window \
+                 is a per-wake-up latency budget, not a schedule",
+                self.batch_window_us,
+                MAX_BATCH_WINDOW_US,
+                MAX_BATCH_WINDOW_US / 1_000_000
+            ));
+        }
+        Ok(())
+    }
+}
+
+enum ServiceInner {
+    Host {
+        router: Arc<HostRouter>,
+        submitters: Vec<std::thread::JoinHandle<()>>,
+    },
+    Pjrt {
+        tx: Option<mpsc::Sender<Msg>>,
+        worker: Option<std::thread::JoinHandle<ServiceStats>>,
+    },
+}
+
+/// Handle to a running service.
+pub struct DotService {
+    inner: ServiceInner,
+}
+
+impl DotService {
+    /// Start the configured backend. The configuration is validated first
+    /// — an invalid one is returned as an error, never a wedged lane.
+    ///
+    /// Host backend: a router pool over the process-wide sharded engine
+    /// (`ShardedEngine::global()`) — one submitter thread per shard.
+    ///
+    /// Pjrt backend: PJRT handles are not `Send`, so the `Runtime` must be
+    /// constructed *inside* the worker thread; startup errors are relayed
+    /// back through a one-shot channel so callers still see them
+    /// synchronously.
+    pub fn start(config: ServiceConfig) -> anyhow::Result<(Self, DotClient)> {
+        config.validate().map_err(|e| anyhow::anyhow!("service config: {e}"))?;
+        match config.backend {
+            Backend::Host => Self::try_start_on(config, ShardedEngine::global())
+                .map_err(|e| anyhow::anyhow!("service config: {e}")),
+            Backend::Pjrt => {
+                let (tx, rx) = mpsc::channel::<Msg>();
+                let (ready_tx, ready_rx) = mpsc::channel::<Result<(), String>>();
+                let worker = std::thread::spawn(move || match Runtime::new() {
+                    Ok(rt) => {
+                        let _ = ready_tx.send(Ok(()));
+                        pjrt::worker_loop_pjrt(rt, rx, config)
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(e.to_string()));
+                        ServiceStats::default()
+                    }
+                });
+                match ready_rx.recv() {
+                    Ok(Ok(())) => {}
+                    Ok(Err(e)) => {
+                        let _ = worker.join();
+                        anyhow::bail!("service startup: {e}");
+                    }
+                    Err(_) => {
+                        let _ = worker.join();
+                        anyhow::bail!("service worker died during startup");
+                    }
+                }
+                let client = DotClient { inner: ClientInner::Pjrt(tx.clone()) };
+                Ok((
+                    DotService { inner: ServiceInner::Pjrt { tx: Some(tx), worker: Some(worker) } },
+                    client,
+                ))
+            }
+        }
+    }
+
+    /// Start a Host-backend router pool on an explicit engine (tests and
+    /// benches hand in a leaked `ShardedEngine` over a synthetic
+    /// `Topology::fake_even` layout to exercise multi-shard routing on
+    /// single-node hosts). `config.backend` is ignored: this is always the
+    /// host path. Panics on an invalid configuration — callers that want
+    /// the error instead use [`DotService::try_start_on`].
+    pub fn start_on(config: ServiceConfig, engine: &'static ShardedEngine) -> (Self, DotClient) {
+        match Self::try_start_on(config, engine) {
+            Ok(pair) => pair,
+            Err(e) => panic!("service config: {e}"),
+        }
+    }
+
+    /// [`DotService::start_on`], but an invalid configuration comes back
+    /// as a `Result` (what [`DotService::start`] uses under the hood).
+    pub fn try_start_on(
+        config: ServiceConfig,
+        engine: &'static ShardedEngine,
+    ) -> Result<(Self, DotClient), String> {
+        config.validate()?;
+        // the service's routing policy is the engine tier's compiled plan
+        // policy plus the service's batching knobs — one planner, layered
+        let policy =
+            engine.policy().clone().with_service(config.max_batch, config.batch_window_us);
+        let (router, receivers) = HostRouter::new(engine, policy, config.router_queue_depth);
+        let submitters = receivers
+            .into_iter()
+            .enumerate()
+            .map(|(s, rx)| {
+                let r = Arc::clone(&router);
+                std::thread::Builder::new()
+                    .name(format!("dot-submitter-{s}"))
+                    .spawn(move || lane::submitter_loop(&r, s, rx))
+                    .expect("spawn dot submitter")
+            })
+            .collect();
+        let client = DotClient { inner: ClientInner::Host(Arc::clone(&router)) };
+        Ok((DotService { inner: ServiceInner::Host { router, submitters } }, client))
+    }
+
+    /// Stop the service and return its statistics. Host backend: every
+    /// lane gets a shutdown marker, each submitter serves what is already
+    /// queued (in-flight requests are drained, not dropped), then joins.
+    pub fn stop(mut self) -> ServiceStats {
+        self.shutdown()
+    }
+
+    fn shutdown(&mut self) -> ServiceStats {
+        match &mut self.inner {
+            ServiceInner::Host { router, submitters } => {
+                if !submitters.is_empty() {
+                    for q in &router.queues {
+                        let _ = q.send(Msg::Shutdown);
+                    }
+                    for h in submitters.drain(..) {
+                        let _ = h.join();
+                    }
+                }
+                router.snapshot()
+            }
+            ServiceInner::Pjrt { tx, worker } => {
+                if let Some(tx) = tx.take() {
+                    let _ = tx.send(Msg::Shutdown);
+                }
+                worker.take().map(|w| w.join().unwrap_or_default()).unwrap_or_default()
+            }
+        }
+    }
+}
+
+impl Drop for DotService {
+    fn drop(&mut self) {
+        let _ = self.shutdown();
+    }
+}
+
+fn parse_variant(s: &str) -> Result<Variant, String> {
+    match s {
+        "kahan" => Ok(Variant::Kahan),
+        "naive" => Ok(Variant::Naive),
+        other => Err(format!("unknown variant `{other}`")),
+    }
+}

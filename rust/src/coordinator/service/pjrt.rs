@@ -1,0 +1,180 @@
+//! The [`super::Backend::Pjrt`] worker loop: one thread owns the
+//! `Runtime` (PJRT executables are not shared across threads), drains the
+//! queue with a batching window, groups compatible requests by variant,
+//! and executes them in one PJRT call when possible. Pooled-stream
+//! messages are a Host-backend feature and are rejected synchronously.
+
+use super::stats::ServiceStats;
+use super::{DotRequest, DotResponse, Msg, ServiceConfig};
+use crate::runtime::Runtime;
+use std::sync::mpsc;
+use std::time::Instant;
+
+pub(super) fn worker_loop_pjrt(
+    mut rt: Runtime,
+    rx: mpsc::Receiver<Msg>,
+    cfg: ServiceConfig,
+) -> ServiceStats {
+    let mut shutdown = false;
+    let mut stats = ServiceStats::default();
+    let batched_max_n = rt
+        .manifest()
+        .get(&cfg.batched_artifact_kahan)
+        .map(|m| m.n)
+        .unwrap_or(0);
+
+    // pooled-stream admission is a Host-backend feature: the PJRT worker
+    // rejects it synchronously rather than pretending to hold streams
+    let reject_pooled = |msg: Msg| match msg {
+        Msg::Admit { reply, .. } => {
+            let _ = reply.send(Err("stream admission requires the Host backend".into()));
+        }
+        Msg::AdmitPair { reply, .. } => {
+            let _ = reply.send(Err("stream admission requires the Host backend".into()));
+        }
+        Msg::ReqPooled { id, reply, submitted, .. } => {
+            let _ = reply.send(DotResponse {
+                id,
+                value: Err("pooled dots require the Host backend".into()),
+                batch_size: 0,
+                latency: submitted.elapsed(),
+            });
+        }
+        _ => {}
+    };
+
+    loop {
+        // block for the first request; after the shutdown marker, keep
+        // draining whatever is already queued (serving, not dropping it)
+        // and exit once the channel is empty
+        let first = if shutdown {
+            match rx.try_recv() {
+                Ok(Msg::Req(r)) => {
+                    stats.drained += 1;
+                    r
+                }
+                Ok(Msg::Shutdown) => continue,
+                Ok(other) => {
+                    reject_pooled(other);
+                    continue;
+                }
+                Err(_) => break,
+            }
+        } else {
+            match rx.recv() {
+                Ok(Msg::Req(r)) => r,
+                Ok(Msg::Shutdown) => {
+                    shutdown = true;
+                    continue;
+                }
+                Ok(other) => {
+                    reject_pooled(other);
+                    continue;
+                }
+                Err(_) => break,
+            }
+        };
+        let mut queue = vec![first];
+        if !shutdown {
+            // batching window: gather more requests
+            let deadline = Instant::now() + cfg.window;
+            while queue.len() < cfg.max_batch {
+                let now = Instant::now();
+                if now >= deadline {
+                    break;
+                }
+                match rx.recv_timeout(deadline - now) {
+                    Ok(Msg::Req(r)) => queue.push(r),
+                    Ok(Msg::Shutdown) => {
+                        // serve what we already accepted; the outer loop
+                        // then drains the rest of the channel
+                        shutdown = true;
+                        break;
+                    }
+                    Ok(other) => reject_pooled(other),
+                    Err(mpsc::RecvTimeoutError::Timeout) => break,
+                    Err(mpsc::RecvTimeoutError::Disconnected) => break,
+                }
+            }
+        }
+
+        // group by variant; batch-execute groups where every request fits
+        for variant in ["kahan", "naive"] {
+            let group: Vec<DotRequest> = {
+                let mut g = Vec::new();
+                let mut rest = Vec::new();
+                for p in queue.drain(..) {
+                    if p.variant == variant {
+                        g.push(p);
+                    } else {
+                        rest.push(p);
+                    }
+                }
+                queue = rest;
+                g
+            };
+            if group.is_empty() {
+                continue;
+            }
+            let (batched_name, single_name) = if variant == "kahan" {
+                (&cfg.batched_artifact_kahan, &cfg.single_artifact_kahan)
+            } else {
+                (&cfg.batched_artifact_naive, &cfg.single_artifact_naive)
+            };
+
+            let fits = group.len() >= 2
+                && batched_max_n > 0
+                && group.iter().all(|p| p.a.len() <= batched_max_n);
+            if fits {
+                stats.pjrt_calls += 1;
+                stats.batched_calls += 1;
+                let pairs: Vec<(Vec<f32>, Vec<f32>)> =
+                    group.iter().map(|p| (p.a.clone(), p.b.clone())).collect();
+                match rt.batched_dot_f32(batched_name, &pairs) {
+                    Ok(values) => {
+                        let bsz = group.len();
+                        for (p, v) in group.into_iter().zip(values) {
+                            stats.requests += 1;
+                            let _ = p.reply.send(DotResponse {
+                                id: p.id,
+                                value: Ok(v),
+                                batch_size: bsz,
+                                latency: p.submitted.elapsed(),
+                            });
+                        }
+                    }
+                    Err(e) => {
+                        stats.errors += 1;
+                        for p in group {
+                            stats.requests += 1;
+                            let _ = p.reply.send(DotResponse {
+                                id: p.id,
+                                value: Err(format!("batched execute: {e}")),
+                                batch_size: 0,
+                                latency: p.submitted.elapsed(),
+                            });
+                        }
+                    }
+                }
+            } else {
+                for p in group {
+                    stats.requests += 1;
+                    stats.pjrt_calls += 1;
+                    let value = rt
+                        .dot_f32(single_name, &p.a, &p.b)
+                        .map_err(|e| e.to_string());
+                    if value.is_err() {
+                        stats.errors += 1;
+                    }
+                    let _ = p.reply.send(DotResponse {
+                        id: p.id,
+                        value,
+                        batch_size: 1,
+                        latency: p.submitted.elapsed(),
+                    });
+                }
+            }
+        }
+    }
+    stats
+}

@@ -1,0 +1,286 @@
+//! The Host backend's shared router state and the client's routing.
+//!
+//! There is no central router thread: every [`DotClient`] clone routes
+//! messages itself against the shared [`HostRouter`] — pooled dots to the
+//! home-shard lane, fresh messages round-robin — and each shard's
+//! submitter (`super::lane`) executes on *its* shard. Routing decisions
+//! that depend on a threshold (split vs route, fuse vs serial, wait vs
+//! serve) are never made here: they flow through the engine's plan layer
+//! (`crate::engine::plan`), which the router carries as its
+//! [`PlanPolicy`].
+
+use super::stats::LaneCounters;
+use super::{parse_variant, DotRequest, DotResponse, Msg};
+use crate::engine::parallel::panic_message;
+use crate::engine::{HomedSlice, PlanPolicy, ShardedEngine};
+use crate::isa::Variant;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, RwLock};
+use std::time::Instant;
+
+/// Shared state of the Host router pool: the per-shard bounded queues,
+/// the admitted-stream table, and every counter. Clients route against it
+/// directly — there is no central router thread.
+pub(super) struct HostRouter {
+    pub(super) engine: &'static ShardedEngine,
+    /// the compiled routing policy: the engine tier's thresholds plus the
+    /// service's batching knobs (`max_batch`, `batch_window_us`) — every
+    /// coalescing and window decision in the lanes goes through it
+    pub(super) policy: PlanPolicy,
+    /// bounded hand-off to each shard's submitter (index == shard)
+    pub(super) queues: Vec<mpsc::SyncSender<Msg>>,
+    /// admitted streams: handle -> home-shard slice. Inserted by the
+    /// owning submitter at admission, removed by *client* threads in
+    /// `DotClient::release` (synchronously — that is what makes a release
+    /// ordered against the same client's later submits), and read by
+    /// clients at submit time to resolve pooled operands.
+    pub(super) streams: RwLock<HashMap<u64, HomedSlice<f32>>>,
+    pub(super) next_handle: AtomicU64,
+    /// round-robin cursor for fresh (un-homed) messages
+    pub(super) rr: AtomicUsize,
+    pub(super) lanes: Vec<LaneCounters>,
+    pub(super) requests: AtomicU64,
+    pub(super) engine_calls: AtomicU64,
+    pub(super) admitted: AtomicU64,
+    pub(super) pooled_calls: AtomicU64,
+    pub(super) batches: AtomicU64,
+    pub(super) batched_requests: AtomicU64,
+    pub(super) admit_batches: AtomicU64,
+    pub(super) errors: AtomicU64,
+    pub(super) drained: AtomicU64,
+}
+
+impl HostRouter {
+    /// Fresh router state plus the receiving half of every lane queue
+    /// (one bounded channel per shard; the caller spawns the submitters).
+    pub(super) fn new(
+        engine: &'static ShardedEngine,
+        policy: PlanPolicy,
+        queue_depth: usize,
+    ) -> (Arc<HostRouter>, Vec<mpsc::Receiver<Msg>>) {
+        let shards = engine.shards();
+        let mut queues = Vec::with_capacity(shards);
+        let mut receivers = Vec::with_capacity(shards);
+        for _ in 0..shards {
+            let (tx, rx) = mpsc::sync_channel::<Msg>(queue_depth);
+            queues.push(tx);
+            receivers.push(rx);
+        }
+        let router = Arc::new(HostRouter {
+            engine,
+            policy,
+            queues,
+            streams: RwLock::new(HashMap::new()),
+            next_handle: AtomicU64::new(1),
+            rr: AtomicUsize::new(0),
+            lanes: (0..shards).map(|_| LaneCounters::default()).collect(),
+            requests: AtomicU64::new(0),
+            engine_calls: AtomicU64::new(0),
+            admitted: AtomicU64::new(0),
+            pooled_calls: AtomicU64::new(0),
+            batches: AtomicU64::new(0),
+            batched_requests: AtomicU64::new(0),
+            admit_batches: AtomicU64::new(0),
+            errors: AtomicU64::new(0),
+            drained: AtomicU64::new(0),
+        });
+        (router, receivers)
+    }
+
+    /// Lane for the next fresh (un-homed) message.
+    pub(super) fn route_fresh(&self) -> usize {
+        self.rr.fetch_add(1, Ordering::Relaxed) % self.queues.len()
+    }
+
+    /// Hand `msg` to shard `s`'s submitter. The queue is bounded: a full
+    /// lane counts a stall and then *blocks* until the submitter catches
+    /// up — back-pressure, not unbounded growth. A send after shutdown is
+    /// dropped; the caller observes it as a disconnected reply channel.
+    pub(super) fn send_to(&self, s: usize, msg: Msg) {
+        match self.queues[s].try_send(msg) {
+            Ok(()) => {
+                self.lanes[s].routed.fetch_add(1, Ordering::Relaxed);
+            }
+            Err(mpsc::TrySendError::Full(msg)) => {
+                self.lanes[s].queue_full_stalls.fetch_add(1, Ordering::Relaxed);
+                // count only accepted messages — a *rejected* send must
+                // not inflate `routed` (acceptance can still race the
+                // submitter's exit; see the `LaneStats::routed` doc)
+                if self.queues[s].send(msg).is_ok() {
+                    self.lanes[s].routed.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+            Err(mpsc::TrySendError::Disconnected(_)) => {}
+        }
+    }
+
+    /// Shared tail of both dot arms: bump the execution counters, run the
+    /// engine call with panic isolation, and turn an unwind into the
+    /// request's own error (the client must see the real panic text).
+    pub(super) fn execute(
+        &self,
+        s: usize,
+        variant: &'static str,
+        pooled: bool,
+        dot: impl FnOnce(Variant) -> f32,
+    ) -> Result<f32, String> {
+        parse_variant(variant).and_then(|v| {
+            self.engine_calls.fetch_add(1, Ordering::Relaxed);
+            if pooled {
+                self.pooled_calls.fetch_add(1, Ordering::Relaxed);
+            }
+            self.lanes[s].executed.fetch_add(1, Ordering::Relaxed);
+            std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| dot(v)))
+                .map_err(|e| format!("engine panic: {}", panic_message(e)))
+        })
+    }
+
+    /// Execute one message on lane `s`'s submitter thread.
+    ///
+    /// Length mismatches are rejected HERE, before the engine: the
+    /// engine's documented policy is debug-assert + truncate (see the
+    /// plan module's "Length policy"), so the service is the layer that
+    /// turns a mismatch into a client-visible error.
+    pub(super) fn serve(&self, s: usize, msg: Msg) {
+        match msg {
+            Msg::Shutdown => {}
+            Msg::Req(req) => {
+                self.requests.fetch_add(1, Ordering::Relaxed);
+                let value = if req.a.len() != req.b.len() {
+                    Err(format!("length mismatch {} vs {}", req.a.len(), req.b.len()))
+                } else {
+                    // no per-request heap churn: the engine reads the
+                    // request's own vectors (small dots run on them in
+                    // place; large dots pay one admission copy into the
+                    // target shard's recycled aligned pool buffers).
+                    // Executes on THIS lane's shard (routing already
+                    // balanced fresh requests round-robin); the engine
+                    // consumes the planner's route and fans very large
+                    // dots out across every shard
+                    self.execute(s, req.variant, false, |v| {
+                        self.engine.dot_on_f32(s, v, &req.a, &req.b)
+                    })
+                };
+                if value.is_err() {
+                    self.errors.fetch_add(1, Ordering::Relaxed);
+                }
+                let _ = req.reply.send(DotResponse {
+                    id: req.id,
+                    value,
+                    batch_size: 1,
+                    latency: req.submitted.elapsed(),
+                });
+            }
+            Msg::Admit { data, reply } => {
+                // the copy runs on shard `s`'s own pinned workers, so
+                // fresh pages first-touch in-domain
+                let homed = self.engine.admit_to_f32(s, &data);
+                let handle = self.next_handle.fetch_add(1, Ordering::Relaxed);
+                self.streams.write().unwrap().insert(handle, homed);
+                self.admitted.fetch_add(1, Ordering::Relaxed);
+                let _ = reply.send(Ok(handle));
+            }
+            Msg::ReqPooled { id, variant, a, b, sa, sb, reply, submitted } => {
+                self.requests.fetch_add(1, Ordering::Relaxed);
+                let value = match (sa, sb) {
+                    (Some(sa), Some(sb)) if sa.len() == sb.len() => {
+                        self.execute(s, variant, true, |v| self.engine.dot_homed_f32(v, &sa, &sb))
+                    }
+                    (Some(sa), Some(sb)) => {
+                        Err(format!("length mismatch {} vs {}", sa.len(), sb.len()))
+                    }
+                    (sa, _) => Err(format!(
+                        "unknown stream handle {}",
+                        if sa.is_some() { b } else { a }
+                    )),
+                };
+                if value.is_err() {
+                    self.errors.fetch_add(1, Ordering::Relaxed);
+                }
+                let _ = reply.send(DotResponse {
+                    id,
+                    value,
+                    batch_size: 1,
+                    latency: submitted.elapsed(),
+                });
+            }
+            Msg::AdmitPair { a, b, reply } => {
+                // one message, one worker pass, one shard for both streams
+                // — the steady-state pair placement without the second
+                // routing round-trip `admit_near` paid
+                let homed = self.engine.admit_many_to_f32(s, &[&a, &b]);
+                let mut handles = homed.into_iter().map(|h| {
+                    let handle = self.next_handle.fetch_add(1, Ordering::Relaxed);
+                    self.streams.write().unwrap().insert(handle, h);
+                    handle
+                });
+                let ha = handles.next().expect("pair admission");
+                let hb = handles.next().expect("pair admission");
+                self.admitted.fetch_add(2, Ordering::Relaxed);
+                let _ = reply.send(Ok((ha, hb)));
+            }
+            Msg::Release { handle } => {
+                // unreachable on the Host path (the client releases
+                // synchronously); kept for match exhaustiveness
+                self.streams.write().unwrap().remove(&handle);
+            }
+        }
+    }
+}
+
+#[derive(Clone)]
+pub(super) enum ClientInner {
+    Host(Arc<HostRouter>),
+    Pjrt(mpsc::Sender<Msg>),
+}
+
+/// Client-side handle for submitting requests. Cloneable and `Send`: on
+/// the Host backend every clone routes directly against the shared router
+/// state, so N client threads submit to N shard lanes concurrently.
+#[derive(Clone)]
+pub struct DotClient {
+    pub(super) inner: ClientInner,
+}
+
+impl DotClient {
+    /// Submit a request; returns the receiver for its response. Fresh
+    /// requests round-robin across the shard lanes; a full lane blocks
+    /// (back-pressure).
+    pub fn submit(
+        &self,
+        id: u64,
+        variant: &'static str,
+        a: Vec<f32>,
+        b: Vec<f32>,
+    ) -> mpsc::Receiver<DotResponse> {
+        let (reply, rx) = mpsc::channel();
+        let req = DotRequest { id, variant, a, b, reply, submitted: Instant::now() };
+        match &self.inner {
+            ClientInner::Host(r) => {
+                let s = r.route_fresh();
+                r.send_to(s, Msg::Req(req));
+            }
+            // a send error means the service stopped; the caller sees it
+            // as a disconnected receiver
+            ClientInner::Pjrt(tx) => {
+                let _ = tx.send(Msg::Req(req));
+            }
+        }
+        rx
+    }
+
+    /// Convenience: blocking round-trip.
+    pub fn dot_blocking(
+        &self,
+        variant: &'static str,
+        a: Vec<f32>,
+        b: Vec<f32>,
+    ) -> Result<f32, String> {
+        let rx = self.submit(0, variant, a, b);
+        match rx.recv() {
+            Ok(resp) => resp.value,
+            Err(_) => Err("service stopped".into()),
+        }
+    }
+}

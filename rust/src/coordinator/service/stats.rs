@@ -1,0 +1,99 @@
+//! Service counters: per-lane live counters, the public snapshot types,
+//! and the aggregation that `DotService::stop` returns.
+
+use super::router::HostRouter;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Per-submitter-lane counters (Host backend; lane index == shard index).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct LaneStats {
+    /// messages accepted into this lane's queue. Sends rejected by a
+    /// stopped lane are not counted; a send that wins the race into the
+    /// queue just as the submitter exits is counted but never served
+    /// (its client sees a disconnect), so during a shutdown race this
+    /// may exceed the lane's served total by the few in-flight sends.
+    pub routed: u64,
+    /// dots (fresh + pooled) executed by this lane's submitter
+    pub executed: u64,
+    /// sends that found this lane's queue full and had to block
+    pub queue_full_stalls: u64,
+    /// wake-ups where this lane entered a planner-approved adaptive
+    /// batching window (waited up to `ServiceConfig::batch_window_us` for
+    /// more requests); always 0 with the default window of 0
+    pub window_waits: u64,
+}
+
+/// Aggregate service statistics.
+#[derive(Clone, Debug, Default)]
+pub struct ServiceStats {
+    pub requests: u64,
+    /// engine executions (Host backend)
+    pub engine_calls: u64,
+    /// streams admitted into shard-local pooled storage (Host backend)
+    pub admitted: u64,
+    /// dots served over already-admitted streams on their home shard.
+    /// (Cross-shard split counts live in `ShardedEngine::stats` — the
+    /// engine is process-global, so a per-service delta would misattribute
+    /// splits whenever two services or a direct engine user coexist.)
+    pub pooled_calls: u64,
+    pub pjrt_calls: u64,
+    pub batched_calls: u64,
+    /// Host backend: engine batch calls that fused ≥ 2 queued dots into
+    /// one execution (each also counts once in `engine_calls`)
+    pub batches: u64,
+    /// Host backend: dots served inside those batches
+    pub batched_requests: u64,
+    /// Host backend: admission bursts coalesced into one worker pass
+    pub admit_batches: u64,
+    pub errors: u64,
+    /// total sends that hit a full lane queue and blocked (back-pressure)
+    pub queue_full_stalls: u64,
+    /// messages served during the shutdown drain (they were queued behind
+    /// the shutdown marker and would have been dropped without the drain)
+    pub drained: u64,
+    /// lane wake-ups that entered an adaptive batching window (sum of
+    /// [`LaneStats::window_waits`])
+    pub window_waits: u64,
+    /// per-shard router lanes (empty for the Pjrt backend)
+    pub lanes: Vec<LaneStats>,
+}
+
+/// One submitter lane's live counters.
+#[derive(Default)]
+pub(super) struct LaneCounters {
+    pub(super) routed: AtomicU64,
+    pub(super) executed: AtomicU64,
+    pub(super) queue_full_stalls: AtomicU64,
+    pub(super) window_waits: AtomicU64,
+}
+
+impl HostRouter {
+    pub(super) fn snapshot(&self) -> ServiceStats {
+        let lanes: Vec<LaneStats> = self
+            .lanes
+            .iter()
+            .map(|l| LaneStats {
+                routed: l.routed.load(Ordering::Relaxed),
+                executed: l.executed.load(Ordering::Relaxed),
+                queue_full_stalls: l.queue_full_stalls.load(Ordering::Relaxed),
+                window_waits: l.window_waits.load(Ordering::Relaxed),
+            })
+            .collect();
+        ServiceStats {
+            requests: self.requests.load(Ordering::Relaxed),
+            engine_calls: self.engine_calls.load(Ordering::Relaxed),
+            admitted: self.admitted.load(Ordering::Relaxed),
+            pooled_calls: self.pooled_calls.load(Ordering::Relaxed),
+            pjrt_calls: 0,
+            batched_calls: 0,
+            batches: self.batches.load(Ordering::Relaxed),
+            batched_requests: self.batched_requests.load(Ordering::Relaxed),
+            admit_batches: self.admit_batches.load(Ordering::Relaxed),
+            errors: self.errors.load(Ordering::Relaxed),
+            queue_full_stalls: lanes.iter().map(|l| l.queue_full_stalls).sum(),
+            drained: self.drained.load(Ordering::Relaxed),
+            window_waits: lanes.iter().map(|l| l.window_waits).sum(),
+            lanes,
+        }
+    }
+}

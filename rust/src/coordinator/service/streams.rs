@@ -1,0 +1,158 @@
+//! The admitted-stream surface: admission (single, co-located, and
+//! paired), pooled dots over admitted streams, and release.
+//!
+//! The stream table itself lives on `HostRouter` (`streams`): inserted by
+//! the owning submitter at admission, *read* by client threads at submit
+//! time to resolve pooled operands, and *removed* by client threads in
+//! [`DotClient::release`] — synchronously, which is what keeps a release
+//! ordered against the same client's later submits (the old
+//! single-router FIFO semantics; see the module doc's "Ordering"
+//! paragraph and the `release_after_submit_never_invalidates_...`
+//! regression test).
+
+use super::router::{ClientInner, DotClient};
+use super::{DotResponse, Msg};
+use std::sync::mpsc;
+use std::time::Instant;
+
+impl super::router::HostRouter {
+    /// Home shard of an admitted stream, if it is still live.
+    pub(super) fn shard_of(&self, handle: u64) -> Option<usize> {
+        self.streams.read().unwrap().get(&handle).map(|h| h.shard)
+    }
+}
+
+impl DotClient {
+    /// Admit a stream into the serving tier's pooled shard-local storage
+    /// and get back its handle. The stream's home shard is fixed at
+    /// admission; every later [`DotClient::dot_pooled_blocking`] over it
+    /// executes there (Host backend only — the PJRT worker rejects it).
+    pub fn admit_blocking(&self, data: Vec<f32>) -> Result<u64, String> {
+        self.admit_near_blocking(data, None)
+    }
+
+    /// Admit a stream PAIR in one message: both streams land on the same
+    /// shard in a single worker pass — the co-located steady-state
+    /// placement (`admit_near`) without the second routing round-trip.
+    /// Host backend only.
+    pub fn admit_pair_blocking(
+        &self,
+        a: Vec<f32>,
+        b: Vec<f32>,
+    ) -> Result<(u64, u64), String> {
+        let (reply, rx) = mpsc::channel();
+        match &self.inner {
+            ClientInner::Host(r) => {
+                let s = r.route_fresh();
+                r.send_to(s, Msg::AdmitPair { a, b, reply });
+            }
+            ClientInner::Pjrt(tx) => {
+                if tx.send(Msg::AdmitPair { a, b, reply }).is_err() {
+                    return Err("service stopped".into());
+                }
+            }
+        }
+        match rx.recv() {
+            Ok(r) => r,
+            Err(_) => Err("service stopped".into()),
+        }
+    }
+
+    /// Like [`DotClient::admit_blocking`], but co-locate the stream on the
+    /// home shard of `near` (an earlier handle) — the placement for
+    /// streams that will be dotted against each other, so the pair never
+    /// crosses a NUMA domain. A `near` that no longer exists falls back to
+    /// round-robin placement.
+    pub fn admit_near_blocking(&self, data: Vec<f32>, near: Option<u64>) -> Result<u64, String> {
+        let (reply, rx) = mpsc::channel();
+        match &self.inner {
+            ClientInner::Host(r) => {
+                let s = near.and_then(|h| r.shard_of(h)).unwrap_or_else(|| r.route_fresh());
+                r.send_to(s, Msg::Admit { data, reply });
+            }
+            ClientInner::Pjrt(tx) => {
+                if tx.send(Msg::Admit { data, reply }).is_err() {
+                    return Err("service stopped".into());
+                }
+            }
+        }
+        match rx.recv() {
+            Ok(r) => r,
+            Err(_) => Err("service stopped".into()),
+        }
+    }
+
+    /// Submit a dot over two admitted streams; returns the response
+    /// receiver. Routed to the home shard of `a` (admission locality).
+    /// The operands are resolved here, in the caller's program order —
+    /// see `Msg::ReqPooled` for why that makes `release` safe to call
+    /// right after submitting.
+    pub fn submit_pooled(
+        &self,
+        id: u64,
+        variant: &'static str,
+        a: u64,
+        b: u64,
+    ) -> mpsc::Receiver<DotResponse> {
+        let (reply, rx) = mpsc::channel();
+        match &self.inner {
+            ClientInner::Host(r) => {
+                let (sa, sb) = {
+                    let m = r.streams.read().unwrap();
+                    (m.get(&a).cloned(), m.get(&b).cloned())
+                };
+                // an unknown handle still travels a lane so the submitter
+                // reports it as a per-request error, not a silent drop
+                let s = sa.as_ref().map(|h| h.shard).unwrap_or_else(|| r.route_fresh());
+                r.send_to(
+                    s,
+                    Msg::ReqPooled { id, variant, a, b, sa, sb, reply, submitted: Instant::now() },
+                );
+            }
+            ClientInner::Pjrt(tx) => {
+                let _ = tx.send(Msg::ReqPooled {
+                    id,
+                    variant,
+                    a,
+                    b,
+                    sa: None,
+                    sb: None,
+                    reply,
+                    submitted: Instant::now(),
+                });
+            }
+        }
+        rx
+    }
+
+    /// Convenience: blocking dot over two admitted streams.
+    pub fn dot_pooled_blocking(
+        &self,
+        variant: &'static str,
+        a: u64,
+        b: u64,
+    ) -> Result<f32, String> {
+        let rx = self.submit_pooled(0, variant, a, b);
+        match rx.recv() {
+            Ok(resp) => resp.value,
+            Err(_) => Err("service stopped".into()),
+        }
+    }
+
+    /// Release an admitted stream. Takes effect immediately (the entry is
+    /// removed from the stream table on the caller's thread): later dots
+    /// from this client see it gone, while dots already submitted keep
+    /// their resolved operands and finish normally. The buffer recycles
+    /// into the home shard's pool once the last in-flight reference
+    /// drops. Unknown handles are ignored.
+    pub fn release(&self, handle: u64) {
+        match &self.inner {
+            ClientInner::Host(r) => {
+                r.streams.write().unwrap().remove(&handle);
+            }
+            ClientInner::Pjrt(tx) => {
+                let _ = tx.send(Msg::Release { handle });
+            }
+        }
+    }
+}

@@ -1,0 +1,129 @@
+//! PR 5 service tests: `ServiceConfig` validation at service start and
+//! the latency-aware adaptive batching window (`batch_window_us`). The
+//! pre-PR-5 tests live, unmodified, in `tests.rs`; the shared `Gate` /
+//! `leak_engine` / `wait_engine_requests` helpers are reused from there.
+
+use super::tests::{leak_engine, wait_engine_requests, Gate};
+use super::*;
+use crate::accuracy::exact::exact_dot_f32;
+use crate::engine::Topology;
+use crate::util::Rng;
+use std::time::Duration;
+
+/// Satellite: an invalid configuration is a clean startup error — from
+/// `start` and `try_start_on` alike — never a panic deep in a lane or a
+/// silently wedged queue.
+#[test]
+fn invalid_config_is_a_start_error() {
+    let bad_batch = ServiceConfig { max_batch: 0, ..ServiceConfig::default() };
+    assert!(bad_batch.validate().is_err());
+    assert!(DotService::start(bad_batch).is_err());
+
+    let bad_depth = ServiceConfig { router_queue_depth: 0, ..ServiceConfig::default() };
+    assert!(bad_depth.validate().is_err());
+    assert!(DotService::start(bad_depth).is_err());
+
+    let bad_window = ServiceConfig {
+        batch_window_us: MAX_BATCH_WINDOW_US + 1,
+        ..ServiceConfig::default()
+    };
+    assert!(bad_window.validate().is_err());
+    assert!(DotService::start(bad_window).is_err());
+
+    // the explicit-engine path reports the same errors as a Result
+    let engine = leak_engine(&Topology::single_node(), 1);
+    assert!(DotService::try_start_on(
+        ServiceConfig { max_batch: 0, ..ServiceConfig::default() },
+        engine
+    )
+    .is_err());
+    // ...and a valid config still starts
+    let (svc, client) =
+        DotService::try_start_on(ServiceConfig::default(), engine).expect("valid config");
+    assert_eq!(client.dot_blocking("kahan", vec![1.0; 8], vec![2.0; 8]), Ok(16.0));
+    svc.stop();
+}
+
+/// The adaptive window must never wedge a lane: a lone blocking request
+/// against a windowed service completes (the wait is bounded), results
+/// are unchanged, and shutdown drains promptly with requests queued
+/// behind the marker.
+#[test]
+fn batch_window_bounded_wait_serves_singles_and_drains() {
+    let engine = leak_engine(&Topology::single_node(), 2);
+    let (svc, client) = DotService::start_on(
+        // 2 ms window: long enough to be real, short enough for tests
+        ServiceConfig { batch_window_us: 2_000, ..ServiceConfig::default() },
+        engine,
+    );
+    let mut rng = Rng::new(83);
+    // sequential blocking round-trips: each wake-up holds ONE dot, so a
+    // planner-approved lane waits the full window and must still answer
+    for round in 0..3 {
+        let a = rng.normal_f32_vec(1024);
+        let b = rng.normal_f32_vec(1024);
+        let exact = exact_dot_f32(&a, &b);
+        let v = client
+            .dot_blocking("kahan", a, b)
+            .expect("windowed lane must serve a lone request") as f64;
+        assert!((v - exact).abs() < 1e-2 * exact.abs().max(1.0), "round {round}");
+    }
+    // shutdown with work queued behind the marker still drains
+    let gate = Gate::close(engine, 0);
+    let n_big = 200_000;
+    let rx_big = client.submit(0, "kahan", rng.normal_f32_vec(n_big), rng.normal_f32_vec(n_big));
+    wait_engine_requests(engine, 4);
+    let ServiceInner::Host { router, .. } = &svc.inner else { unreachable!() };
+    router.queues[0].send(Msg::Shutdown).unwrap();
+    let rx2 = client.submit(4, "kahan", vec![1.0; 64], vec![2.0; 64]);
+    gate.open();
+    let stats = svc.stop();
+    assert!(rx_big.recv().expect("pre-shutdown reply").value.is_ok());
+    assert_eq!(rx2.recv().expect("drained reply").value.expect("value"), 128.0);
+    assert_eq!(stats.errors, 0, "{stats:?}");
+    assert_eq!(stats.requests, 5, "{stats:?}");
+}
+
+/// A windowed lane coalesces a queued burst exactly like the
+/// opportunistic lane does (the window only ever ADDS gather time) and
+/// stays bit-identical to serial execution.
+#[test]
+fn batch_window_burst_still_coalesces_bit_identically() {
+    let engine = leak_engine(&Topology::single_node(), 2);
+    let (svc, client) = DotService::start_on(
+        ServiceConfig { batch_window_us: 1_000, ..ServiceConfig::default() },
+        engine,
+    );
+    let gate = Gate::close(engine, 0);
+    let mut rng = Rng::new(89);
+    let n_big = 200_000;
+    let rx_big = client.submit(0, "kahan", rng.normal_f32_vec(n_big), rng.normal_f32_vec(n_big));
+    wait_engine_requests(engine, 1);
+    let smalls: Vec<(Vec<f32>, Vec<f32>)> = [512usize, 1024, 2048, 64]
+        .iter()
+        .map(|&n| (rng.normal_f32_vec(n), rng.normal_f32_vec(n)))
+        .collect();
+    let rxs: Vec<_> = smalls
+        .iter()
+        .enumerate()
+        .map(|(i, (a, b))| client.submit(1 + i as u64, "kahan", a.clone(), b.clone()))
+        .collect();
+    gate.open();
+    assert!(rx_big.recv_timeout(Duration::from_secs(30)).expect("big").value.is_ok());
+    let batched: Vec<f32> = rxs
+        .into_iter()
+        .map(|rx| {
+            let resp = rx.recv_timeout(Duration::from_secs(30)).expect("batched reply");
+            assert_eq!(resp.batch_size, 4, "the queued burst must share one batch");
+            resp.value.expect("batched value")
+        })
+        .collect();
+    for (i, (a, b)) in smalls.iter().enumerate() {
+        let serial = client.dot_blocking("kahan", a.clone(), b.clone()).expect("serial");
+        assert_eq!(serial.to_bits(), batched[i].to_bits(), "req {i}: window changed bits");
+    }
+    let stats = svc.stop();
+    assert_eq!(stats.batches, 1, "{stats:?}");
+    assert_eq!(stats.batched_requests, 4, "{stats:?}");
+    assert_eq!(stats.errors, 0, "{stats:?}");
+}

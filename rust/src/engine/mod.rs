@@ -7,7 +7,7 @@
 //! across requests, so the steady-state cost of a served dot is the
 //! streaming cost the paper models and nothing else.
 //!
-//! # Architecture: route → shard → pool → partition → kernel → merge
+//! # Architecture: plan → route → shard → pool → partition → kernel → merge
 //!
 //! ```text
 //!   clients (any thread)
@@ -20,8 +20,18 @@
 //!   Each submitter drains its queue greedily: k ≥ 2 queued small dots
 //!   become ONE engine batch (dot_batch_on), a burst of admissions ONE
 //!   worker pass (admit_local_many) — request overhead amortizes like the
-//!   paper amortizes loop overhead, and bits never change (see "Batching
-//!   invariant" below)
+//!   paper amortizes loop overhead, and bits never change (the plan
+//!   module's "Batching invariant"). When a window is configured, a lane
+//!   holding a short run may wait for more — but only when the planner
+//!   says the fused kernel wins at the projected batch size
+//!        │
+//!        ▼
+//!   ┌─ engine::plan — the PURE planning layer ──────────────────────────┐
+//!   │ PlanPolicy (autotuned DispatchTable + topology + ServiceConfig)   │
+//!   │ compiles every request into a DotPlan: inline / one-shard         │
+//!   │ parallel / fused batch with cutoff / weighted split with flat     │
+//!   │ compensated merge. Every threshold below is a planner call.       │
+//!   └───────────────────────────────────────────────────────────────────┘
 //!        │
 //!        ▼
 //!                  ┌──────────────────────────────────────────────────┐
@@ -60,37 +70,23 @@
 //!   the chunked compensated reduction (`parallel_dot_*`).
 //! * [`autotune`] — first-use micro-calibration of the kernel registry into
 //!   a `(Precision, SizeClass)` dispatch table behind a `OnceLock`.
+//! * [`plan`] — the pure request planner: one [`PlanPolicy`] holds every
+//!   route/batch/split threshold, and every layer consumes its compiled
+//!   [`DotPlan`]s instead of re-deriving decisions.
 //! * [`topology`] — NUMA domain discovery (`/sys/devices/system/node`,
 //!   with a single-node fallback when sysfs is absent).
 //! * [`sharded`] — the multi-socket tier: [`ShardedEngine`] owns one
 //!   [`DotEngine`] per NUMA domain and routes/splits requests across them.
 //!
-//! # Length policy
+//! # Length policy / Batching invariant
 //!
-//! THE one place the policy is defined: `dot_*`/`dot_pooled_*` compute over
-//! the first `min(a.len(), b.len())` elements of each stream. Mismatched
-//! lengths are a caller bug — the engine `debug_assert`s equality (so test
-//! builds catch drift) but truncates in release rather than panicking on
-//! the hot path. Public request surfaces (`coordinator::service`) reject
-//! mismatched requests *before* they reach the engine; keep it that way.
-//!
-//! # Batching invariant
-//!
-//! **Batching never changes bits.** `dot_batch_*` here, the sharded tier's
-//! `dot_batch_*`/`dot_batch_on_*`/`dot_batch_homed_*`, and the service's
-//! lane coalescing all return, for every request in a batch, exactly the
-//! value the serial single-request path returns. The mechanism: requests
-//! that would run inline are grouped (one worker handoff per chunk-group
-//! instead of one per request) and executed either by a fused multi-dot
-//! kernel (`bench::kernels::batch`) that interleaves requests across
-//! unroll slots while keeping each request's own operation sequence
-//! identical to its single-dot kernel, or by a serial loop of that same
-//! single kernel; requests big enough for the chunked-parallel or
-//! cross-shard split path take the exact serial route, one by one. The
-//! fused kernels are only reachable through the dispatch table, which
-//! pairs them with the single winner of the same cell and keeps them only
-//! below the calibrated batch-size cutoff. Property-tested on
-//! Ogita–Rump–Oishi inputs at every layer in `rust/tests/test_batch.rs`.
+//! Both contracts are documented once, next to [`DotPlan`] in the [`plan`]
+//! module — the layer that now enforces them. Short form: dots compute
+//! over `min(a.len(), b.len())` elements (mismatches are `debug_assert`ed
+//! and rejected by the service before the engine), and batching never
+//! changes bits (every batch path returns exactly the serial path's
+//! value, property-tested in `rust/tests/test_batch.rs` and
+//! `rust/tests/test_plan.rs`).
 //!
 //! # Accuracy
 //!
@@ -121,11 +117,13 @@
 
 pub mod autotune;
 pub mod parallel;
+pub mod plan;
 pub mod pool;
 pub mod sharded;
 pub mod topology;
 
 pub use autotune::{dispatch, BatchChoice, Choice, DispatchTable, SizeClass};
+pub use plan::{DotPlan, DotRoute, PlanPolicy};
 pub use parallel::{chunk_ranges, parallel_dot_f32, parallel_dot_f64, WorkerPool};
 pub use pool::{BufferPool, PoolStats, PooledSlice};
 pub use sharded::{HomedSlice, ShardedConfig, ShardedEngine, ShardedStats};
@@ -218,7 +216,7 @@ macro_rules! engine_dot_methods {
         /// dots are admitted into pooled aligned buffers and chunked
         /// across the worker pool.
         ///
-        /// Lengths: see the module-level "Length policy" — equal lengths
+        /// Lengths: see the "Length policy" in [`plan`] — equal lengths
         /// are the contract (`debug_assert`ed), release builds truncate to
         /// the shorter stream.
         pub fn $dot(&self, variant: Variant, a: &[$ty], b: &[$ty]) -> $ty {
@@ -295,23 +293,23 @@ macro_rules! exec_batch_impl {
                 // the serial path — the batching invariant needs exactly that
                 let single = $kernel_for(variant, total(run[0].1));
                 let mut fused_done = false;
-                if run.len() >= 2 {
-                    if let Some(bk) = dispatch().select_batch($prec, variant, class) {
-                        let pairs: Vec<(&[$ty], &[$ty])> =
-                            run.iter().map(|&(_, a, b)| (a, b)).collect();
-                        let mut vals = vec![0.0 as $ty; run.len()];
-                        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-                            bk.$call(&pairs, &mut vals)
-                        }));
-                        if r.is_ok() {
-                            for (&(idx, _, _), v) in run.iter().zip(&vals) {
-                                let _ = tx.send((idx, Ok(*v)));
-                            }
-                            fused_done = true;
+                // fuse-or-loop is the planner's call (the calibrated
+                // cutoff lives behind `plan::batch_exec`)
+                if let Some(bk) = plan::batch_exec(dispatch(), $prec, variant, class, run.len()) {
+                    let pairs: Vec<(&[$ty], &[$ty])> =
+                        run.iter().map(|&(_, a, b)| (a, b)).collect();
+                    let mut vals = vec![0.0 as $ty; run.len()];
+                    let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                        bk.$call(&pairs, &mut vals)
+                    }));
+                    if r.is_ok() {
+                        for (&(idx, _, _), v) in run.iter().zip(&vals) {
+                            let _ = tx.send((idx, Ok(*v)));
                         }
-                        // a fused-kernel panic falls through to the serial
-                        // loop: only the truly panicking request errors
+                        fused_done = true;
                     }
+                    // a fused-kernel panic falls through to the serial
+                    // loop: only the truly panicking request errors
                 }
                 if !fused_done {
                     for &(idx, a, b) in run {
@@ -364,8 +362,8 @@ macro_rules! engine_batch_methods {
         }
 
         /// Serve a batch of independent dots — bit-identical to calling
-        /// the single-dot method once per request (the module's "Batching
-        /// invariant"). Inline-class requests are grouped into one
+        /// the single-dot method once per request (the [`plan`] module's
+        /// "Batching invariant"). Inline-class requests are grouped into one
         /// fused/serial kernel pass per worker-job chunk-group (or run on
         /// the calling thread when the whole batch is cheaper than a
         /// handoff); requests big enough for the chunked-parallel path
@@ -394,9 +392,10 @@ macro_rules! engine_batch_methods {
             self.note_batch(smalls.len());
             let (tx, rx) = std::sync::mpsc::channel();
             if !smalls.is_empty() {
-                if small_bytes < self.cfg.parallel_cutoff_bytes as u64
-                    || self.workers.size() == 1
-                {
+                // the planner's inline predicate again, applied to the
+                // batch as a whole: if ALL the smalls together are under
+                // the cutoff, even one handoff can't pay for itself
+                if self.serves_inline(small_bytes) {
                     // the whole batch is cheaper than a handoff: fused
                     // execution right here, zero dispatch
                     $exec(variant, &smalls, &tx);
@@ -502,9 +501,10 @@ impl DotEngine {
     /// the submitting thread rather than the chunked-parallel path — THE
     /// predicate the dot methods use, shared with the batch paths so both
     /// split requests identically (anything else would break the batching
-    /// invariant).
+    /// invariant). The decision itself lives in the planner
+    /// ([`plan::serves_inline`]); this is just the engine's view of it.
     pub(crate) fn serves_inline(&self, total_bytes: u64) -> bool {
-        total_bytes < self.cfg.parallel_cutoff_bytes as u64 || self.workers.size() == 1
+        plan::serves_inline(total_bytes, self.cfg.parallel_cutoff_bytes, self.workers.size())
     }
 
     /// Count `k` requests served through a batched execution path (the

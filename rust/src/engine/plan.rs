@@ -1,0 +1,362 @@
+//! The unified request planner: every route / batch / split threshold in
+//! the serving stack, compiled in ONE pure, side-effect-free layer.
+//!
+//! The paper's central claim is that Kahan costs nothing *if the right
+//! low-level decisions are made*. This stack makes those decisions in
+//! several places — inline vs chunked-parallel inside a shard engine,
+//! route-to-one-shard vs split-across-all in the sharded tier, fuse vs
+//! serial-loop inside a batch, wait vs serve-now in a service lane — and
+//! Hofmann et al.'s follow-ups (CPE 2016; the four-generation study) show
+//! every one of those thresholds is machine-dependent. So they live here,
+//! in one calibrated, testable [`PlanPolicy`], and every execution layer
+//! *consumes* a compiled [`DotPlan`] instead of re-deriving the decision
+//! from scattered constants. The bit-identity and Kahan-bound invariants
+//! below are therefore enforced at one choke point and property-tested
+//! against the planner directly (`rust/tests/test_plan.rs`).
+//!
+//! Everything in this module is a pure function of its inputs: no
+//! counters, no I/O, no engine handles. (The only cached lookup is
+//! [`SizeClass::of`], which classifies against the host cache hierarchy
+//! detected once per process — deterministic for the life of the process.)
+//! Calibration data enters through an explicit [`DispatchTable`] argument
+//! where a decision needs it, so tests can drive the planner with any
+//! table.
+//!
+//! # Length policy
+//!
+//! THE one place the policy is defined: `dot_*`/`dot_pooled_*` compute
+//! over the first `min(a.len(), b.len())` elements of each stream.
+//! Mismatched lengths are a caller bug — the engine `debug_assert`s
+//! equality (so test builds catch drift) but truncates in release rather
+//! than panicking on the hot path. Public request surfaces
+//! (`coordinator::service`) reject mismatched requests *before* they
+//! reach the engine; keep it that way. Plans are always computed from the
+//! truncated length.
+//!
+//! # Batching invariant
+//!
+//! **Batching never changes bits.** The engine's `dot_batch_*`, the
+//! sharded tier's `dot_batch_*`/`dot_batch_on_*`/`dot_batch_homed_*`, and
+//! the service's lane coalescing all return, for every request in a
+//! batch, exactly the value the serial single-request path returns. The
+//! mechanism: requests the planner routes [`DotRoute::Inline`] are
+//! grouped (one worker handoff per chunk-group instead of one per
+//! request) and executed either by a fused multi-dot kernel
+//! (`bench::kernels::batch`) that interleaves requests across unroll
+//! slots while keeping each request's own operation sequence identical to
+//! its single-dot kernel, or by a serial loop of that same single kernel;
+//! requests the planner routes [`DotRoute::Parallel`] or
+//! [`DotRoute::Split`] take the exact serial route, one by one. The fused
+//! kernels are only reachable through [`batch_exec`], which consults the
+//! dispatch table — the table pairs them with the single winner of the
+//! same cell and keeps them only below the calibrated batch-size cutoff.
+//! Property-tested on Ogita–Rump–Oishi inputs at every layer in
+//! `rust/tests/test_batch.rs` and against the planner in
+//! `rust/tests/test_plan.rs`.
+//!
+//! # Who consumes plans
+//!
+//! * `DotEngine` — [`serves_inline`] is the inline-vs-parallel predicate
+//!   (shared by its serial and batch paths, so both split a request set
+//!   identically — anything else would break the batching invariant);
+//! * `ShardedEngine` — [`PlanPolicy::plan_dot`] routes every request,
+//!   [`PlanPolicy::split_chunk_count`]/[`PlanPolicy::split_blocks`]
+//!   compile the weighted cross-shard split geometry (whose flat
+//!   compensated merge keeps the sequential Kahan bound);
+//! * `coordinator::service` — lanes ask [`PlanPolicy::batch_window`]
+//!   whether a bounded wait-for-k is worth the latency (only when the
+//!   fused kernel wins at the projected batch size), and the batch
+//!   executors ask [`batch_exec`] whether a run fuses;
+//! * `repro plan` — the CLI prints a plan and its reasons, which makes
+//!   the planner a debugging/teaching tool.
+
+use super::autotune::{DispatchTable, SizeClass};
+use crate::bench::kernels::batch::BatchKernel;
+use crate::isa::{Precision, Variant};
+use std::time::Duration;
+
+/// How one dot request executes. Ordered by working-set size: as a
+/// request grows it can only move Inline → Parallel → Split (the
+/// monotonicity property test leans on the derived `Ord`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum DotRoute {
+    /// one kernel call on the submitting thread — no handoff, no copy
+    Inline,
+    /// chunked compensated reduction across ONE shard's pinned workers
+    Parallel,
+    /// weighted split across every shard, merged by the flat compensated
+    /// fold over global per-chunk partials (sequential Kahan bound and
+    /// 1-vs-N-shard bit-identity both survive)
+    Split,
+}
+
+impl DotRoute {
+    pub fn name(self) -> &'static str {
+        match self {
+            DotRoute::Inline => "inline",
+            DotRoute::Parallel => "one-shard parallel",
+            DotRoute::Split => "cross-shard split",
+        }
+    }
+}
+
+/// The compiled plan for one request: where it runs and what the
+/// autotuner knows about its size.
+#[derive(Clone, Copy, Debug)]
+pub struct DotPlan {
+    pub route: DotRoute,
+    /// executing shard for `Inline` / `Parallel` (the caller's preferred
+    /// shard, clamped into range); for `Split` the shard the cursor
+    /// suggested — execution fans out over every shard and ignores it
+    pub shard: usize,
+    /// size class of the total working set on this host
+    pub class: SizeClass,
+    /// total working set (both streams, bytes) the plan was compiled for
+    pub total_bytes: u64,
+}
+
+/// The inline-vs-parallel predicate, shared verbatim by the engine's
+/// serial and batch paths: a dot whose total working set (both streams)
+/// is under the cutoff — or an engine with a single worker — runs on the
+/// submitting thread, because a worker handoff would cost more than it
+/// amortizes.
+pub fn serves_inline(total_bytes: u64, parallel_cutoff_bytes: usize, workers: usize) -> bool {
+    total_bytes < parallel_cutoff_bytes as u64 || workers <= 1
+}
+
+/// Fuse-or-loop decision for one same-class run inside a batch: the fused
+/// multi-dot twin of the cell's single winner, if the run is long enough
+/// to fuse (≥ 2) and calibration kept a twin for this cell (the table's
+/// cutoff is monotone over size classes and always serial for
+/// memory-resident dots). `None` means: loop the single winner — request
+/// coalescing above the kernel still applies, bits never change either
+/// way.
+pub fn batch_exec(
+    table: &DispatchTable,
+    prec: Precision,
+    variant: Variant,
+    class: SizeClass,
+    run_len: usize,
+) -> Option<&'static BatchKernel> {
+    if run_len < 2 {
+        return None;
+    }
+    table.select_batch(prec, variant, class)
+}
+
+/// Every machine-dependent threshold the serving stack routes by, in one
+/// place. Built from the engine configuration plus the discovered
+/// topology (per-shard worker counts), optionally extended with the
+/// service's batching knobs via [`PlanPolicy::with_service`].
+#[derive(Clone, Debug)]
+pub struct PlanPolicy {
+    /// below this total working set (both streams, bytes) a dot runs
+    /// inline on the submitting thread (`EngineConfig::parallel_cutoff_bytes`)
+    pub parallel_cutoff_bytes: usize,
+    /// at or above this total working set a dot splits across every shard
+    /// (`ShardedConfig::split_min_bytes`)
+    pub split_min_bytes: usize,
+    /// global chunk count for split dots; 0 = one chunk per worker
+    /// (`ShardedConfig::chunks`) — fixing it fixes the chunk geometry,
+    /// making split results bit-identical for any shard count
+    pub split_chunks: usize,
+    /// worker count of each shard (index == shard); never empty
+    pub shard_workers: Vec<usize>,
+    /// service: max requests fused into one batched execute (1 = no
+    /// coalescing); engines that never batch leave the default 1
+    pub max_batch: usize,
+    /// service: latency-aware adaptive batching — the bounded wait-for-k
+    /// window in microseconds. 0 = purely opportunistic coalescing
+    /// (today's zero-added-latency behavior)
+    pub batch_window_us: u64,
+}
+
+impl PlanPolicy {
+    /// Policy for an engine tier: thresholds plus the realized per-shard
+    /// worker counts. Service knobs default to "no batching window".
+    pub fn new(
+        parallel_cutoff_bytes: usize,
+        split_min_bytes: usize,
+        split_chunks: usize,
+        shard_workers: Vec<usize>,
+    ) -> PlanPolicy {
+        assert!(!shard_workers.is_empty(), "a plan policy needs at least one shard");
+        PlanPolicy {
+            parallel_cutoff_bytes,
+            split_min_bytes,
+            split_chunks,
+            shard_workers,
+            max_batch: 1,
+            batch_window_us: 0,
+        }
+    }
+
+    /// Extend an engine policy with the service's batching knobs.
+    pub fn with_service(mut self, max_batch: usize, batch_window_us: u64) -> PlanPolicy {
+        self.max_batch = max_batch;
+        self.batch_window_us = batch_window_us;
+        self
+    }
+
+    pub fn shards(&self) -> usize {
+        self.shard_workers.len()
+    }
+
+    pub fn total_workers(&self) -> usize {
+        self.shard_workers.iter().sum()
+    }
+
+    /// Clamp a preferred shard into range (round-robin cursors overshoot
+    /// by design).
+    pub fn clamp_shard(&self, shard: usize) -> usize {
+        shard % self.shard_workers.len()
+    }
+
+    /// THE split predicate: does a dot of this total working set fan out
+    /// across every shard?
+    pub fn splits(&self, total_bytes: u64) -> bool {
+        total_bytes >= self.split_min_bytes as u64
+    }
+
+    /// THE inline predicate for a given shard (its worker count decides
+    /// whether a handoff can pay for itself).
+    pub fn serves_inline_on(&self, shard: usize, total_bytes: u64) -> bool {
+        serves_inline(
+            total_bytes,
+            self.parallel_cutoff_bytes,
+            self.shard_workers[self.clamp_shard(shard)],
+        )
+    }
+
+    /// Compile the plan for one dot of `total_bytes` (both streams) whose
+    /// router preferred `preferred_shard`. Deterministic and monotone in
+    /// `total_bytes`: for a fixed policy and shard, a larger request never
+    /// takes an earlier route (Inline → Parallel → Split).
+    pub fn plan_dot(&self, preferred_shard: usize, total_bytes: u64) -> DotPlan {
+        let shard = self.clamp_shard(preferred_shard);
+        let route = if self.splits(total_bytes) {
+            DotRoute::Split
+        } else if self.serves_inline_on(shard, total_bytes) {
+            DotRoute::Inline
+        } else {
+            DotRoute::Parallel
+        };
+        DotPlan { route, shard, class: SizeClass::of(total_bytes), total_bytes }
+    }
+
+    /// Global chunk count for a split dot (the explicit override, or one
+    /// chunk per worker across the whole shard set).
+    pub fn split_chunk_count(&self) -> usize {
+        if self.split_chunks == 0 {
+            self.total_workers()
+        } else {
+            self.split_chunks
+        }
+    }
+
+    /// The weighted split assignment: contiguous chunk blocks
+    /// `(shard, chunk_lo, chunk_hi)` per shard, weighted by each shard's
+    /// worker count (equal-count dealing would hand an 8-worker and a
+    /// 16-worker domain the same share and re-create the straggler
+    /// imbalance one level up). Boundaries are the deterministic
+    /// cumulative-weight rounding, so the assignment never affects the
+    /// partials or the compensated fold that merges them.
+    pub fn split_blocks(&self, chunk_count: usize) -> Vec<(usize, usize, usize)> {
+        let total_w = self.total_workers().max(1);
+        let mut blocks: Vec<(usize, usize, usize)> = Vec::with_capacity(self.shard_workers.len());
+        let mut cum = 0usize;
+        let mut prev = 0usize;
+        for (s, w) in self.shard_workers.iter().enumerate() {
+            cum += w;
+            let end = chunk_count * cum / total_w;
+            if end > prev {
+                blocks.push((s, prev, end));
+                prev = end;
+            }
+        }
+        blocks
+    }
+
+    /// Latency-aware adaptive batching: how long a service lane that woke
+    /// up with `queued_dots` coalescible dots may wait for more before
+    /// executing. `Some` only when every condition holds:
+    ///
+    /// * a window is configured (`batch_window_us > 0`) and batching is on
+    ///   (`max_batch ≥ 2`);
+    /// * there is a run to grow (`queued_dots ≥ 1`) that is not already a
+    ///   full batch (`queued_dots < max_batch`);
+    /// * the caller confirmed the fused kernel wins at the projected
+    ///   batch size (`fused_wins` — i.e. calibration kept a fused twin
+    ///   for the run's dispatch cell; where fusion lost the probe, added
+    ///   latency buys nothing, so the lane must not wait).
+    ///
+    /// With `batch_window_us == 0` this is always `None`: the lane keeps
+    /// today's purely opportunistic, zero-added-latency behavior.
+    pub fn batch_window(&self, queued_dots: usize, fused_wins: bool) -> Option<Duration> {
+        if self.batch_window_us == 0
+            || self.max_batch < 2
+            || !fused_wins
+            || queued_dots == 0
+            || queued_dots >= self.max_batch
+        {
+            return None;
+        }
+        Some(Duration::from_micros(self.batch_window_us))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn policy() -> PlanPolicy {
+        PlanPolicy::new(256 * 1024, 4 << 20, 0, vec![2, 2])
+    }
+
+    #[test]
+    fn routes_partition_the_size_axis() {
+        let p = policy();
+        assert_eq!(p.plan_dot(0, 1024).route, DotRoute::Inline);
+        assert_eq!(p.plan_dot(0, (256 * 1024) - 1).route, DotRoute::Inline);
+        assert_eq!(p.plan_dot(0, 256 * 1024).route, DotRoute::Parallel);
+        assert_eq!(p.plan_dot(0, (4 << 20) - 1).route, DotRoute::Parallel);
+        assert_eq!(p.plan_dot(0, 4 << 20).route, DotRoute::Split);
+        // a single-worker shard never goes parallel, but still splits
+        let single = PlanPolicy::new(256 * 1024, 4 << 20, 0, vec![1]);
+        assert_eq!(single.plan_dot(0, 1 << 20).route, DotRoute::Inline);
+        assert_eq!(single.plan_dot(0, 8 << 20).route, DotRoute::Split);
+    }
+
+    #[test]
+    fn preferred_shard_is_clamped_not_dropped() {
+        let p = policy();
+        assert_eq!(p.plan_dot(5, 1024).shard, 1);
+        assert_eq!(p.plan_dot(4, 1024).shard, 0);
+    }
+
+    #[test]
+    fn split_blocks_are_weighted_contiguous_and_exhaustive() {
+        let p = PlanPolicy::new(256 * 1024, 4 << 20, 0, vec![8, 16]);
+        let blocks = p.split_blocks(24);
+        assert_eq!(blocks, vec![(0, 0, 8), (1, 8, 24)]);
+        // fewer chunks than shards: a shard may get nothing, but coverage
+        // stays contiguous and complete
+        let b1 = p.split_blocks(1);
+        assert_eq!(b1.iter().map(|&(_, lo, hi)| hi - lo).sum::<usize>(), 1);
+        assert_eq!(b1.last().unwrap().2, 1);
+    }
+
+    #[test]
+    fn batch_window_requires_every_condition() {
+        let p = policy().with_service(4, 100);
+        assert_eq!(p.batch_window(1, true), Some(Duration::from_micros(100)));
+        assert_eq!(p.batch_window(3, true), Some(Duration::from_micros(100)));
+        assert_eq!(p.batch_window(0, true), None, "no run to grow");
+        assert_eq!(p.batch_window(4, true), None, "already a full batch");
+        assert_eq!(p.batch_window(1, false), None, "fusion lost the probe");
+        let off = policy().with_service(4, 0);
+        assert_eq!(off.batch_window(1, true), None, "window disabled by default");
+        let nobatch = policy().with_service(1, 100);
+        assert_eq!(nobatch.batch_window(1, true), None, "max_batch=1 never waits");
+    }
+}

@@ -40,6 +40,7 @@
 //! configuration.
 
 use super::parallel::{chunk_ranges, collect_partials, panic_message};
+use super::plan::{DotRoute, PlanPolicy};
 use super::pool::{PoolStats, PooledSlice};
 use super::topology::{topology_cached, Topology};
 use super::{
@@ -119,6 +120,9 @@ pub struct ShardedStats {
 pub struct ShardedEngine {
     shards: Vec<DotEngine>,
     cfg: ShardedConfig,
+    /// the compiled routing policy: every route/split threshold decision
+    /// below goes through this planner, never through raw `cfg` reads
+    policy: PlanPolicy,
     next: AtomicUsize,
     split_dots: AtomicU64,
 }
@@ -143,7 +147,8 @@ macro_rules! sharded_dot_impl {
         /// by the caller (clamped) — the service's router lanes use this
         /// so the shard decided at routing time and the shard that
         /// executes are the same one, while the split-vs-route threshold
-        /// stays defined HERE, in one layer. Very large dots still split
+        /// stays compiled by the planner (`self.policy`, the engine
+        /// tier's [`crate::engine::PlanPolicy`]). Very large dots still split
         /// across every shard: on a single shard with default `chunks`
         /// the split path degenerates to exactly the per-engine chunked
         /// reduction (same geometry, same fold, same bits), so 1-vs-N
@@ -156,11 +161,17 @@ macro_rules! sharded_dot_impl {
             );
             let n = a.len().min(b.len());
             let total_bytes = (2 * n * std::mem::size_of::<$ty>()) as u64;
-            if (total_bytes as usize) < self.cfg.split_min_bytes {
-                let s = shard % self.shards.len();
-                return self.shards[s].$engine_dot(variant, &a[..n], &b[..n]);
+            match self.policy.plan_dot(shard, total_bytes).route {
+                DotRoute::Split => self.$split(variant, &a[..n], &b[..n]),
+                // Inline vs Parallel is the engine's half of the same
+                // policy — it re-derives the identical plan from the
+                // shared predicate
+                _ => self.shards[self.policy.clamp_shard(shard)].$engine_dot(
+                    variant,
+                    &a[..n],
+                    &b[..n],
+                ),
             }
-            self.$split(variant, &a[..n], &b[..n])
         }
 
         /// Split one dot across every shard on global chunk boundaries and
@@ -172,8 +183,7 @@ macro_rules! sharded_dot_impl {
             // select the kernel ONCE for the full request size: every
             // shard must run the same kernel for bit-determinism
             let f = $kernel_for(variant, total_bytes);
-            let chunks = if self.cfg.chunks == 0 { self.total_workers() } else { self.cfg.chunks };
-            let ranges = chunk_ranges(n, chunks, $elems_per_cl);
+            let ranges = chunk_ranges(n, self.policy.split_chunk_count(), $elems_per_cl);
             if ranges.len() <= 1 {
                 let s = self.route();
                 return self.shards[s].$engine_dot(variant, a, b);
@@ -183,26 +193,11 @@ macro_rules! sharded_dot_impl {
             // single-shard host, where the split path degenerates to the
             // ordinary chunked reduction but must still show up in stats
             self.split_dots.fetch_add(1, Ordering::Relaxed);
-            // contiguous chunk blocks per shard, weighted by each shard's
-            // worker count (equal-count dealing would hand an 8-worker and
-            // a 16-worker domain the same share and re-create the
-            // straggler imbalance one level up); boundaries are the
-            // deterministic cumulative-weight rounding, so the assignment
-            // never affects the partials or the fold
-            let total_w = self.total_workers();
-            let mut blocks: Vec<(usize, usize, usize)> = Vec::with_capacity(self.shards.len());
-            {
-                let mut cum = 0usize;
-                let mut prev = 0usize;
-                for (s, sh) in self.shards.iter().enumerate() {
-                    cum += sh.threads();
-                    let end = ranges.len() * cum / total_w;
-                    if end > prev {
-                        blocks.push((s, prev, end));
-                        prev = end;
-                    }
-                }
-            }
+            // the weighted chunk-block assignment is compiled by the
+            // planner (contiguous blocks per shard, weighted by worker
+            // count, deterministic cumulative rounding — the assignment
+            // can never change the partials or the fold)
+            let blocks = self.policy.split_blocks(ranges.len());
             let (tx, rx) = mpsc::channel::<(usize, Result<$ty, String>)>();
             for &(s, clo, chi) in &blocks {
                 let span_lo = ranges[clo].0;
@@ -298,11 +293,12 @@ macro_rules! sharded_dot_impl {
             let mut smalls: Vec<(&[$ty], &[$ty])> = Vec::with_capacity(reqs.len());
             for (i, &(a, b)) in reqs.iter().enumerate() {
                 let n = a.len().min(b.len());
-                if 2 * n * std::mem::size_of::<$ty>() < self.cfg.split_min_bytes {
+                let total = (2 * n * std::mem::size_of::<$ty>()) as u64;
+                if self.policy.splits(total) {
+                    out[i] = self.$dot_on(s, variant, a, b);
+                } else {
                     small_idx.push(i);
                     smalls.push((&a[..n], &b[..n]));
-                } else {
-                    out[i] = self.$dot_on(s, variant, a, b);
                 }
             }
             if !smalls.is_empty() {
@@ -330,14 +326,12 @@ macro_rules! sharded_dot_impl {
             let mut mids: Vec<(usize, usize)> = Vec::new();
             for (i, &(a, b)) in reqs.iter().enumerate() {
                 let n = a.len().min(b.len());
-                let total = 2 * n * std::mem::size_of::<$ty>();
-                let s = self.route();
-                if total >= self.cfg.split_min_bytes {
-                    splits.push((i, s));
-                } else if self.shards[s].serves_inline(total as u64) {
-                    per_shard[s].push((i, &a[..n], &b[..n]));
-                } else {
-                    mids.push((i, s));
+                let total = (2 * n * std::mem::size_of::<$ty>()) as u64;
+                let plan = self.policy.plan_dot(self.route(), total);
+                match plan.route {
+                    DotRoute::Split => splits.push((i, plan.shard)),
+                    DotRoute::Inline => per_shard[plan.shard].push((i, &a[..n], &b[..n])),
+                    DotRoute::Parallel => mids.push((i, plan.shard)),
                 }
             }
             let (tx, rx) = mpsc::channel();
@@ -416,7 +410,7 @@ macro_rules! sharded_dot_impl {
                 let s = a.shard.min(self.shards.len() - 1);
                 let n = a.len().min(b.len());
                 let total = (2 * n * std::mem::size_of::<$ty>()) as u64;
-                if self.shards[s].serves_inline(total) {
+                if self.policy.serves_inline_on(s, total) {
                     per_shard[s].push((i, &a.slice.as_slice()[..n], &b.slice.as_slice()[..n]));
                 } else {
                     bigs.push((i, s));
@@ -488,12 +482,26 @@ impl ShardedEngine {
     /// single-node hosts).
     pub fn from_topology(topo: &Topology, cfg: ShardedConfig) -> ShardedEngine {
         assert!(!topo.nodes.is_empty(), "topology must have at least one node");
-        let shards = topo
+        let shards: Vec<DotEngine> = topo
             .nodes
             .iter()
             .map(|node| DotEngine::new_on(cfg.engine, &node.cpus))
             .collect();
-        ShardedEngine { shards, cfg, next: AtomicUsize::new(0), split_dots: AtomicU64::new(0) }
+        // compile the policy AFTER the shards exist: per-shard worker
+        // counts are only known once `threads == 0` has been resolved
+        let policy = PlanPolicy::new(
+            cfg.engine.parallel_cutoff_bytes,
+            cfg.split_min_bytes,
+            cfg.chunks,
+            shards.iter().map(|s| s.threads()).collect(),
+        );
+        ShardedEngine {
+            shards,
+            cfg,
+            policy,
+            next: AtomicUsize::new(0),
+            split_dots: AtomicU64::new(0),
+        }
     }
 
     /// The process-wide sharded engine (used by the service's host
@@ -513,6 +521,14 @@ impl ShardedEngine {
 
     pub fn config(&self) -> &ShardedConfig {
         &self.cfg
+    }
+
+    /// The engine tier's compiled routing policy (thresholds + realized
+    /// per-shard worker counts). The service clones it and layers its
+    /// batching knobs on via [`PlanPolicy::with_service`]; the `repro
+    /// plan` CLI prints it.
+    pub fn policy(&self) -> &PlanPolicy {
+        &self.policy
     }
 
     pub fn total_workers(&self) -> usize {

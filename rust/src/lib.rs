@@ -17,8 +17,10 @@
 //!   real `std::arch` SIMD Kahan kernels;
 //! * [`engine`] — the persistent parallel dot engine and its NUMA-sharded
 //!   serving tier: pooled aligned buffers, pinned per-domain worker pools
-//!   with chunked compensated reduction, autotuned kernel dispatch, and a
-//!   locality-aware shard router (the serving hot path);
+//!   with chunked compensated reduction, autotuned kernel dispatch, a
+//!   locality-aware shard router (the serving hot path), and the pure
+//!   request-planning layer (`engine::plan`) every routing threshold
+//!   flows through;
 //! * [`accuracy`] — error-free transformations, exact dot products and the
 //!   Ogita–Rump–Oishi ill-conditioned generator;
 //! * [`runtime`] — PJRT execution of the AOT-lowered JAX/Pallas artifacts;

@@ -1,0 +1,259 @@
+//! Planner property tests (PR 5): the pure `engine::plan` layer is the
+//! single choke point for every route/batch/split threshold, so its
+//! decisions must be (a) deterministic, (b) monotone in request size and
+//! batch size, and (c) in exact agreement with what the execution layers
+//! actually do — including bit-identity between every plan route and its
+//! pre-refactor execution path on Ogita–Rump–Oishi ill-conditioned
+//! inputs.
+
+use kahan_ecm::accuracy::gen_dot_f32;
+use kahan_ecm::engine::plan::batch_exec;
+use kahan_ecm::engine::{
+    kernel_for_f32, DispatchTable, DotEngine, DotRoute, EngineConfig, PlanPolicy, ShardedConfig,
+    ShardedEngine, SizeClass, Topology,
+};
+use kahan_ecm::isa::{Precision, Variant};
+use kahan_ecm::util::Rng;
+
+fn policy(cutoff: usize, split: usize, workers: Vec<usize>) -> PlanPolicy {
+    PlanPolicy::new(cutoff, split, 0, workers)
+}
+
+/// Exhaustive small grid: plan decisions are a pure function of their
+/// inputs (same input twice -> same plan) and the route is monotone in
+/// the working-set size — growing a request can only move it
+/// Inline -> Parallel -> Split, never backwards.
+#[test]
+fn plan_decisions_deterministic_and_monotone_in_length() {
+    let cutoff = 64 << 10;
+    let split = 1 << 20;
+    for workers in [vec![1usize], vec![2], vec![4, 4], vec![2, 8, 2]] {
+        let p = policy(cutoff, split, workers.clone());
+        for preferred in 0..=4usize {
+            let mut last = DotRoute::Inline;
+            // dense byte grid crossing both thresholds, boundaries included
+            let mut grid: Vec<u64> = (0u64..200).map(|i| i * 12 * 1024).collect();
+            grid.extend([
+                cutoff as u64 - 1,
+                cutoff as u64,
+                cutoff as u64 + 1,
+                split as u64 - 1,
+                split as u64,
+                split as u64 + 1,
+            ]);
+            grid.sort_unstable();
+            for total in grid {
+                let a = p.plan_dot(preferred, total);
+                let b = p.plan_dot(preferred, total);
+                assert_eq!(a.route, b.route, "non-deterministic route at {total}");
+                assert_eq!(a.shard, b.shard, "non-deterministic shard at {total}");
+                assert_eq!(a.shard, preferred % workers.len(), "shard must be the clamp");
+                assert!(
+                    a.route >= last,
+                    "route regressed at {total} bytes: {last:?} -> {:?} (workers {workers:?})",
+                    a.route
+                );
+                // the route must agree with the predicates it is built from
+                match a.route {
+                    DotRoute::Split => assert!(p.splits(total)),
+                    DotRoute::Inline => {
+                        assert!(!p.splits(total) && p.serves_inline_on(a.shard, total))
+                    }
+                    DotRoute::Parallel => {
+                        assert!(!p.splits(total) && !p.serves_inline_on(a.shard, total))
+                    }
+                }
+                last = a.route;
+            }
+            // single-worker shards never plan Parallel
+            if workers[preferred % workers.len()] == 1 {
+                for total in [1u64, cutoff as u64, (split as u64) - 1] {
+                    assert_ne!(p.plan_dot(preferred, total).route, DotRoute::Parallel);
+                }
+            }
+        }
+    }
+}
+
+/// The split geometry is a pure planner artifact: blocks are contiguous,
+/// exhaustive, weighted by worker count, and deterministic.
+#[test]
+fn split_blocks_cover_all_chunks_contiguously() {
+    for workers in [vec![1usize], vec![4], vec![8, 16], vec![3, 1, 2]] {
+        let p = policy(64 << 10, 1 << 20, workers.clone());
+        for chunks in 1..=64usize {
+            let blocks = p.split_blocks(chunks);
+            assert_eq!(blocks, p.split_blocks(chunks), "deterministic");
+            let mut expect_lo = 0usize;
+            for &(s, lo, hi) in &blocks {
+                assert!(s < workers.len());
+                assert_eq!(lo, expect_lo, "blocks must be contiguous");
+                assert!(hi > lo, "empty blocks are dropped");
+                expect_lo = hi;
+            }
+            assert_eq!(expect_lo, chunks, "every chunk must be assigned");
+        }
+    }
+}
+
+/// Batch-size monotonicity: for a fixed table and cell, once the planner
+/// fuses at batch size k it fuses at every k' >= k (the only batch-size
+/// threshold is "is there anything to fuse"), and the window decision is
+/// monotone the other way — a fuller run never waits when a shorter one
+/// would not.
+#[test]
+fn batch_decisions_monotone_in_batch_size() {
+    // a tiny private calibration keeps this test self-contained and fast
+    let table = DispatchTable::calibrate([8 << 10, 64 << 10, 256 << 10], 1);
+    for prec in [Precision::Sp, Precision::Dp] {
+        for variant in [Variant::Kahan, Variant::Naive] {
+            for class in SizeClass::ALL {
+                let mut was_fused = false;
+                for k in 0..=16usize {
+                    let fused = batch_exec(&table, prec, variant, class, k).is_some();
+                    assert!(
+                        !was_fused || fused,
+                        "fuse decision regressed at k={k} ({prec:?} {variant:?} {})",
+                        class.name()
+                    );
+                    was_fused = fused;
+                }
+                // and it is exactly the table's kept twin gated on k >= 2
+                assert!(batch_exec(&table, prec, variant, class, 1).is_none());
+                assert_eq!(
+                    batch_exec(&table, prec, variant, class, 2).is_some(),
+                    table.select_batch(prec, variant, class).is_some()
+                );
+            }
+        }
+    }
+    for max_batch in 1..=8usize {
+        let p = policy(64 << 10, 1 << 20, vec![2]).with_service(max_batch, 50);
+        let mut was_some = p.batch_window(0, true).is_some();
+        assert!(!was_some, "an empty run must never wait");
+        for k in 1..=20usize {
+            let now = p.batch_window(k, true).is_some();
+            // once a run is too full to wait, a fuller one is too
+            assert!(was_some || !now || k == 1, "window decision not monotone at k={k}");
+            was_some = now;
+            assert_eq!(
+                now,
+                max_batch >= 2 && k < max_batch,
+                "window must wait exactly while the fuse can still grow (k={k}, \
+                 max_batch={max_batch})"
+            );
+        }
+    }
+}
+
+/// Every plan route produces bit-identical results to its pre-refactor
+/// execution path on ORO ill-conditioned inputs, and the planner's route
+/// prediction agrees with the counters the execution layers bump:
+///
+/// * Inline  — one kernel call on the caller's slices (`kernel_for_f32`);
+/// * Parallel — the chunked reduction of a plain `DotEngine` with the
+///   same worker count;
+/// * Split   — the cross-shard split, bit-identical between a 1-shard and
+///   a 2-shard engine with the same fixed chunk geometry.
+#[test]
+fn plan_routes_bit_identical_to_pre_refactor_paths_on_oro_inputs() {
+    let cfg2 = ShardedConfig {
+        engine: EngineConfig { threads: 2, ..EngineConfig::default() },
+        split_min_bytes: 1 << 20,
+        chunks: 4, // fixed geometry: split bits must not depend on shard count
+    };
+    let sharded2 = ShardedEngine::from_topology(&Topology::fake_even(2), cfg2);
+    let sharded1 = ShardedEngine::from_topology(&Topology::fake_even(1), cfg2);
+    let plain = DotEngine::new(EngineConfig { threads: 2, ..EngineConfig::default() });
+    let policy = sharded2.policy();
+    assert_eq!(policy.shards(), 2);
+
+    let mut rng = Rng::new(0x9157);
+    // (elements, expected route): 8 KB inline; 400 KB parallel; 1.6 MB split
+    let cases = [
+        (1_000usize, DotRoute::Inline),
+        (50_000, DotRoute::Parallel),
+        (200_000, DotRoute::Split),
+    ];
+    for (n, want_route) in cases {
+        let total = (2 * n * std::mem::size_of::<f32>()) as u64;
+        for shard in 0..policy.shards() {
+            let plan = policy.plan_dot(shard, total);
+            assert_eq!(plan.route, want_route, "n={n} shard={shard}");
+        }
+        for variant in [Variant::Kahan, Variant::Naive] {
+            let (a, b, _, _) = gen_dot_f32(n, 1e6, &mut rng);
+            let before = sharded2.stats();
+            let got = sharded2.dot_f32(variant, &a, &b);
+            let after = sharded2.stats();
+            match want_route {
+                DotRoute::Inline => {
+                    let reference = kernel_for_f32(variant, total)(&a, &b);
+                    assert_eq!(got.to_bits(), reference.to_bits(), "inline n={n}");
+                    assert_eq!(after.parallel, before.parallel, "inline must not go parallel");
+                    assert_eq!(after.split_dots, before.split_dots);
+                }
+                DotRoute::Parallel => {
+                    let reference = plain.dot_f32(variant, &a, &b);
+                    assert_eq!(got.to_bits(), reference.to_bits(), "parallel n={n}");
+                    assert_eq!(after.parallel, before.parallel + 1, "must take the chunked path");
+                    assert_eq!(after.split_dots, before.split_dots);
+                }
+                DotRoute::Split => {
+                    let reference = sharded1.dot_f32(variant, &a, &b);
+                    assert_eq!(
+                        got.to_bits(),
+                        reference.to_bits(),
+                        "split n={n}: 1-vs-2-shard bits diverged"
+                    );
+                    assert_eq!(after.split_dots, before.split_dots + 1, "must take the split path");
+                }
+            }
+        }
+    }
+}
+
+/// The batch path partitions a mixed request set exactly as the planner
+/// says it will: split-plan requests land on the split counter, the rest
+/// stay off it, and the results match the serial loop bit for bit.
+#[test]
+fn batch_partition_agrees_with_planner_and_serial_bits() {
+    let cfg = ShardedConfig {
+        engine: EngineConfig { threads: 2, ..EngineConfig::default() },
+        split_min_bytes: 1 << 20,
+        chunks: 4,
+    };
+    let sharded = ShardedEngine::from_topology(&Topology::fake_even(2), cfg);
+    let policy = sharded.policy().clone();
+    let mut rng = Rng::new(0x515);
+    let sizes = [700usize, 200_000, 4_096, 50_000, 200_000, 64];
+    let reqs: Vec<(Vec<f32>, Vec<f32>)> = sizes
+        .iter()
+        .map(|&n| {
+            let (a, b, _, _) = gen_dot_f32(n, 1e5, &mut rng);
+            (a, b)
+        })
+        .collect();
+    let view: Vec<(&[f32], &[f32])> =
+        reqs.iter().map(|(a, b)| (a.as_slice(), b.as_slice())).collect();
+    let predicted_splits = sizes
+        .iter()
+        .filter(|&&n| policy.splits((2 * n * std::mem::size_of::<f32>()) as u64))
+        .count() as u64;
+    assert_eq!(predicted_splits, 2, "the fixture must exercise the split arm");
+
+    let serial: Vec<f32> =
+        view.iter().map(|&(a, b)| sharded.dot_f32(Variant::Kahan, a, b)).collect();
+    let before = sharded.stats();
+    let batched = sharded.dot_batch_f32(Variant::Kahan, &view);
+    let after = sharded.stats();
+    for (i, (s, g)) in serial.iter().zip(&batched).enumerate() {
+        assert_eq!(s.to_bits(), g.to_bits(), "req {i} (n={})", sizes[i]);
+    }
+    assert_eq!(
+        after.split_dots,
+        before.split_dots + predicted_splits,
+        "the batch must split exactly the requests the planner plans to split"
+    );
+    assert_eq!(after.requests, before.requests + sizes.len() as u64);
+}
