@@ -14,7 +14,13 @@
 
 use kahan_ecm::bench::kernels::{compensated_fold_f32, KernelFn};
 use kahan_ecm::bench::threads::pin_to_cpu;
-use kahan_ecm::engine::{dispatch, DotEngine, EngineConfig, SizeClass};
+use kahan_ecm::coordinator::{DotService, ServiceConfig};
+use kahan_ecm::ecm::governance::host_verdict;
+use kahan_ecm::engine::{
+    dispatch, kernel_for_f32, kernel_for_f64, parallel_dot_capped_f32, parallel_dot_capped_f64,
+    BufferPool, DotEngine, EngineConfig, ShardedConfig, ShardedEngine, SizeClass, Topology,
+    WorkerPool,
+};
 use kahan_ecm::isa::{Precision, Variant};
 use kahan_ecm::machine::detect::detect_host_cached;
 use kahan_ecm::util::{stats, Rng, Table};
@@ -73,6 +79,65 @@ fn json_escape_free(v: f64) -> String {
     } else {
         "null".to_string()
     }
+}
+
+/// A 2-shard sharded engine on a synthetic even topology, leaked for the
+/// `'static` lifetime the service tier requires. Built ungoverned
+/// (`governance: false`) so the scenario controls caps explicitly via
+/// `set_worker_caps` — the comparison must not depend on the CI host's
+/// detected memory bandwidth. The split threshold is set above any
+/// request so every dot exercises the single-shard capped parallel path.
+fn leak_sharded(shard_threads: usize) -> &'static mut ShardedEngine {
+    Box::leak(Box::new(ShardedEngine::from_topology(
+        &Topology::fake_even(2),
+        ShardedConfig {
+            engine: EngineConfig {
+                threads: shard_threads,
+                governance: false,
+                ..EngineConfig::default()
+            },
+            split_min_bytes: 1 << 30,
+            chunks: 0,
+        },
+    )))
+}
+
+/// Run one service scenario: `clients` threads each admit a co-located
+/// MEM-class pair once, then issue `reqs` zero-copy pooled Kahan dots.
+/// Returns (requests/sec, engine-level capped_requests from the stats
+/// snapshot). Round-robin admission lands the clients on different
+/// shards, so a capped engine leaves workers free for the other client.
+fn run_service_scenario(
+    engine: &'static ShardedEngine,
+    governance: &'static str,
+    n: usize,
+    clients: usize,
+    reqs: usize,
+) -> (f64, u64) {
+    let cfg = ServiceConfig { ecm_governance: governance.into(), ..ServiceConfig::default() };
+    let (svc, client) = DotService::try_start_on(cfg, engine).expect("service start");
+    let t = Instant::now();
+    let mut handles = Vec::with_capacity(clients);
+    for c in 0..clients {
+        let cl = client.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut rng = Rng::new(100 + c as u64);
+            let a = rng.normal_f32_vec(n);
+            let b = rng.normal_f32_vec(n);
+            let (ha, hb) = cl.admit_pair_blocking(a, b).expect("admit pair");
+            for _ in 0..reqs {
+                std::hint::black_box(
+                    cl.dot_pooled_blocking("kahan", ha, hb).expect("pooled dot"),
+                );
+            }
+        }));
+    }
+    for h in handles {
+        h.join().expect("service client");
+    }
+    let secs = t.elapsed().as_secs_f64();
+    let st = svc.stop();
+    ((clients * reqs) as f64 / secs, st.capped_requests)
 }
 
 fn main() {
@@ -179,6 +244,122 @@ fn main() {
         es.requests, es.parallel, es.pool.hits, es.pool.misses
     );
 
+    // --- ECM governance: predicted vs observed saturation ---
+    //
+    // The governance layer caps fan-out at the ECM-predicted saturation
+    // point n_S (paper §2: the core count where aggregate demand first
+    // meets the shared memory-bandwidth ceiling). Here we close the loop:
+    // sweep the worker cap k = 1..=threads with FIXED chunk geometry (the
+    // sweep varies only how many workers a dot may occupy — exactly what
+    // governance changes in serving, never the chunk split), and take the
+    // observed saturation as the smallest k within 5% of the best time.
+    println!("\n=== ECM governance: predicted vs observed saturation ===");
+    let verdict = host_verdict();
+    println!("model: {}", verdict.source.describe());
+    let gov_pool = WorkerPool::new(threads);
+    let bufs = BufferPool::new();
+    let sat_reps = if smoke { 3 } else { 7 };
+    // (json field suffix, precision index, predicted, observed)
+    let mut sat_results: Vec<(&'static str, usize, u32, u32)> = Vec::new();
+    macro_rules! sat_sweep {
+        ($pi:expr, $genvec:ident, $capped:ident, $kernel_for:ident, $elem:expr, $wrap:expr, $sets:expr) => {
+            for (suffix, n) in $sets {
+                let n: usize = n;
+                let av = rng.$genvec(n);
+                let bv = rng.$genvec(n);
+                let a = Arc::new(bufs.admit(&av));
+                let b = Arc::new(bufs.admit(&bv));
+                let total = 2 * n as u64 * $elem;
+                let class = SizeClass::of(total);
+                let f = $kernel_for(Variant::Kahan, total);
+                let wrap = $wrap;
+                let mut times = Vec::with_capacity(threads);
+                for k in 1..=threads {
+                    times.push(median_us(sat_reps, || {
+                        wrap($capped(&gov_pool, f, &a, &b, threads, k))
+                    }));
+                }
+                let best = times.iter().cloned().fold(f64::INFINITY, f64::min);
+                let obs = (times.iter().position(|&t| t <= best * 1.05).unwrap_or(threads - 1)
+                    + 1) as u32;
+                let pred = verdict.sat_cores[$pi][class.index()];
+                println!(
+                    "  {suffix} ({}, n = {n}): predicted {}, observed saturation at {obs} of {threads} worker(s)",
+                    class.name(),
+                    if pred == 0 { "no ceiling".to_string() } else { format!("{pred} core(s)") },
+                );
+                sat_results.push((suffix, $pi, pred, obs));
+            }
+        };
+    }
+    sat_sweep!(
+        0,
+        normal_f32_vec,
+        parallel_dot_capped_f32,
+        kernel_for_f32,
+        4u64,
+        (|x: f32| x),
+        [("sp_llc", (llc / 16) as usize), ("sp_mem", (mem_ws / 8) as usize)]
+    );
+    sat_sweep!(
+        1,
+        normal_f64_vec,
+        parallel_dot_capped_f64,
+        kernel_for_f64,
+        8u64,
+        (|x: f64| x as f32),
+        [("dp_llc", (llc / 32) as usize), ("dp_mem", (mem_ws / 16) as usize)]
+    );
+
+    // --- ECM governance: governed vs ungoverned service throughput ---
+    //
+    // Two clients each hammer a MEM-class pooled pair through the service.
+    // Ungoverned, every dot fans out across all of its shard's workers and
+    // the two requests contend for saturated memory bandwidth; governed,
+    // each dot is capped onto a worker subset and the freed workers serve
+    // the concurrent client. The cap is set explicitly (strictly below the
+    // per-shard worker count) so `capped_requests` is deterministic on any
+    // CI host; the engines are built ungoverned so the host's detected
+    // bandwidth cannot alter the comparison.
+    println!("\n=== ECM governance: governed vs ungoverned service (MEM-class) ===");
+    let shard_threads = 2usize;
+    let svc_n = (llc / 4) as usize + (1 << 18); // 2 f32 streams => 2*LLC + 2 MiB: MEM class
+    let svc_clients = 2usize;
+    let svc_reqs = if smoke { 6 } else { 20 };
+    let mem_cap = (verdict.sat_cores[0][2].max(1) as usize).min(shard_threads - 1).max(1);
+    let mut caps = [[usize::MAX; 3]; 2];
+    caps[0][2] = mem_cap;
+    caps[1][2] = mem_cap;
+    let open_engine: &'static ShardedEngine = leak_sharded(shard_threads);
+    let governed_engine: &'static mut ShardedEngine = leak_sharded(shard_threads);
+    governed_engine.set_worker_caps(caps);
+    let governed_engine: &'static ShardedEngine = governed_engine;
+    let (svc_rps_uncapped, svc_capped_ungoverned) =
+        run_service_scenario(open_engine, "off", svc_n, svc_clients, svc_reqs);
+    let (svc_rps_capped, svc_capped_governed) =
+        run_service_scenario(governed_engine, "on", svc_n, svc_clients, svc_reqs);
+    println!(
+        "governed {svc_rps_capped:.1} req/s ({svc_capped_governed} capped) vs \
+         ungoverned {svc_rps_uncapped:.1} req/s ({svc_capped_ungoverned} capped)"
+    );
+    if svc_rps_capped < svc_rps_uncapped {
+        eprintln!(
+            "WARNING: governed service throughput {svc_rps_capped:.1} req/s is below \
+             ungoverned {svc_rps_uncapped:.1} req/s (recorded in {json_path})"
+        );
+    }
+
+    // Feed mispredictions back into the autotuner's dispatch table as a
+    // correction factor (rel error beyond 25% stores observed/predicted).
+    // This runs AFTER the service comparison so the correction cannot
+    // retroactively open the governed scenario's explicit caps.
+    for &(_, pi, pred, obs) in &sat_results {
+        if pred > 0 {
+            let prec = if pi == 0 { Precision::Sp } else { Precision::Dp };
+            table.note_saturation(prec, pred, obs, 0.25);
+        }
+    }
+
     // --- BENCH_engine.json ---
     let mut json = String::new();
     json.push_str("{\n");
@@ -207,6 +388,16 @@ fn main() {
         "  \"memory_speedup_pooled\": {},\n",
         json_escape_free(memory_speedup_pooled)
     ));
+    for &(suffix, _, pred, obs) in &sat_results {
+        json.push_str(&format!("  \"ecm_pred_sat_{suffix}\": {pred},\n"));
+        json.push_str(&format!("  \"ecm_obs_sat_{suffix}\": {obs},\n"));
+    }
+    json.push_str(&format!("  \"svc_rps_uncapped\": {},\n", json_escape_free(svc_rps_uncapped)));
+    json.push_str(&format!("  \"svc_rps_capped\": {},\n", json_escape_free(svc_rps_capped)));
+    json.push_str(&format!(
+        "  \"svc_capped_requests_ungoverned\": {svc_capped_ungoverned},\n"
+    ));
+    json.push_str(&format!("  \"svc_capped_requests_governed\": {svc_capped_governed},\n"));
     json.push_str(&format!("  \"meets_2x\": {}\n", memory_speedup >= 2.0));
     json.push_str("}\n");
     std::fs::write(&json_path, &json).expect("write BENCH_engine.json");

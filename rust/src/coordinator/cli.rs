@@ -60,6 +60,38 @@ fn parse_prec(args: &Args) -> Result<Precision, String> {
     Precision::parse(&d).ok_or_else(|| format!("unknown dtype `{d}`"))
 }
 
+/// Print the host ECM governance verdict: which machine model produced it
+/// (detected host vs Table-1 preset fallback), the predicted saturation
+/// cores per (precision, size class), and the worker cap the given policy
+/// actually applies (autotuner-corrected; `policy` may be ungoverned, in
+/// which case every class prints uncapped).
+fn print_ecm_verdict(policy: &crate::engine::PlanPolicy) {
+    let v = crate::ecm::governance::host_verdict();
+    let table = crate::engine::dispatch();
+    println!("ecm governance: model from {}", v.source.describe());
+    for (pi, prec) in [Precision::Sp, Precision::Dp].into_iter().enumerate() {
+        for class in crate::engine::SizeClass::ALL.iter() {
+            let sat = v.sat_cores[pi][class.index()];
+            let pred = if sat == 0 {
+                "no shared-bandwidth ceiling predicted".to_string()
+            } else {
+                format!("predicted saturation at {sat} core(s)")
+            };
+            let cap = table.corrected_sat(prec, policy.worker_cap(prec, *class));
+            let applied = if cap == usize::MAX {
+                "fan-out uncapped".to_string()
+            } else {
+                format!("worker cap {cap} (clamped to each shard's worker count)")
+            };
+            println!(
+                "  {} {:<3}: {pred} -> {applied}",
+                crate::ecm::governance::PREC_NAMES[pi],
+                class.name()
+            );
+        }
+    }
+}
+
 /// Entry point; returns the process exit code.
 pub fn cli_main() -> i32 {
     let args = match Args::from_env() {
@@ -222,6 +254,7 @@ pub fn run(args: &Args) -> Result<(), String> {
                 e.total_workers(),
                 crate::util::fmt::bytes(e.config().split_min_bytes as u64)
             );
+            print_ecm_verdict(e.policy());
             let svc_cfg = crate::coordinator::ServiceConfig::default();
             println!(
                 "service router pool: {} submitter(s) (one per shard), default per-shard \
@@ -258,9 +291,15 @@ pub fn run(args: &Args) -> Result<(), String> {
             let s = e.stats();
             println!("smoke dot (n = {n}): engine {got:.6e}, exact {exact:.6e}");
             println!(
-                "engine stats: {} requests, {} parallel, {} batched, {} split, pool \
-                 hits/misses {}/{}",
-                s.requests, s.parallel, s.batched, s.split_dots, s.pool.hits, s.pool.misses
+                "engine stats: {} requests, {} parallel, {} batched, {} split, {} capped, \
+                 pool hits/misses {}/{}",
+                s.requests,
+                s.parallel,
+                s.batched,
+                s.split_dots,
+                s.capped_requests,
+                s.pool.hits,
+                s.pool.misses
             );
         }
         "plan" => {
@@ -346,6 +385,26 @@ pub fn run(args: &Args) -> Result<(), String> {
                 policy.shards(),
                 plan.shard
             );
+            // the governance verdict behind the fan-out this plan realizes
+            print_ecm_verdict(&policy);
+            {
+                let cap = table.corrected_sat(prec, policy.worker_cap(prec, plan.class));
+                let workers = policy.shard_workers[plan.shard];
+                if cap < workers {
+                    println!(
+                        "  governance  : this request's fan-out is capped at {cap} of shard \
+                         {}'s {workers} worker(s) — chunk geometry (and therefore bits) is \
+                         unchanged; the freed workers serve other lanes concurrently",
+                        plan.shard
+                    );
+                } else {
+                    println!(
+                        "  governance  : cap does not bind for this request (full fan-out on \
+                         shard {}'s {workers} worker(s))",
+                        plan.shard
+                    );
+                }
+            }
             println!("  kernel      : {} ({:.0} cy at calibration probe)", kernel.name, {
                 let c = table.choice(prec, plan.class);
                 if variant == crate::isa::Variant::Naive { c.probe_cy.1 } else { c.probe_cy.0 }

@@ -213,6 +213,14 @@ pub struct ServiceConfig {
     /// added latency. Capped by [`MAX_BATCH_WINDOW_US`] (validated at
     /// service start).
     pub batch_window_us: u64,
+    /// Host backend: ECM worker governance. `"on"` (default) keeps the
+    /// engine tier's governed plan policy — MEM-class fan-out is capped at
+    /// the host ECM verdict's predicted saturation cores, freeing workers
+    /// for other lanes' concurrent requests (concurrency only, never
+    /// bits). `"off"` serves every request with the full worker fan-out
+    /// (the pre-governance behaviour). Anything else is rejected at
+    /// service start.
+    pub ecm_governance: String,
     /// how long the batcher waits to fill a batch (Pjrt backend)
     pub window: Duration,
     /// name of the batched artifact to use (must exist in the manifest)
@@ -230,6 +238,7 @@ impl Default for ServiceConfig {
             router_queue_depth: 64,
             max_batch: 16,
             batch_window_us: 0,
+            ecm_governance: "on".into(),
             window: Duration::from_millis(2),
             batched_artifact_kahan: "batched_dot_kahan_f32_b8_n16384".into(),
             batched_artifact_naive: "batched_dot_naive_f32_b8_n16384".into(),
@@ -267,6 +276,12 @@ impl ServiceConfig {
                 self.batch_window_us,
                 MAX_BATCH_WINDOW_US,
                 MAX_BATCH_WINDOW_US / 1_000_000
+            ));
+        }
+        if self.ecm_governance != "on" && self.ecm_governance != "off" {
+            return Err(format!(
+                "ServiceConfig::ecm_governance = {:?} — must be \"on\" or \"off\"",
+                self.ecm_governance
             ));
         }
         Ok(())
@@ -359,9 +374,15 @@ impl DotService {
     ) -> Result<(Self, DotClient), String> {
         config.validate()?;
         // the service's routing policy is the engine tier's compiled plan
-        // policy plus the service's batching knobs — one planner, layered
-        let policy =
+        // policy plus the service's batching knobs — one planner, layered.
+        // `ecm_governance = "off"` opens the policy's worker caps (the
+        // shard engines the service executes on must be built ungoverned
+        // too for a fully open path — see the bench's paired scenarios)
+        let mut policy =
             engine.policy().clone().with_service(config.max_batch, config.batch_window_us);
+        if config.ecm_governance == "off" {
+            policy = policy.ungoverned();
+        }
         let (router, receivers) = HostRouter::new(engine, policy, config.router_queue_depth);
         let submitters = receivers
             .into_iter()

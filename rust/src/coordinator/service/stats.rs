@@ -46,6 +46,12 @@ pub struct ServiceStats {
     /// Host backend: admission bursts coalesced into one worker pass
     pub admit_batches: u64,
     pub errors: u64,
+    /// Host backend: dots whose fan-out the ECM governance layer capped
+    /// below the realized worker count, snapshotted from the backing
+    /// engine's counters ([`crate::engine::ShardedStats::capped_requests`]).
+    /// Like the split counts, this is engine-level: two services sharing
+    /// one engine both see the engine's total.
+    pub capped_requests: u64,
     /// total sends that hit a full lane queue and blocked (back-pressure)
     pub queue_full_stalls: u64,
     /// messages served during the shutdown drain (they were queued behind
@@ -90,6 +96,7 @@ impl HostRouter {
             batched_requests: self.batched_requests.load(Ordering::Relaxed),
             admit_batches: self.admit_batches.load(Ordering::Relaxed),
             errors: self.errors.load(Ordering::Relaxed),
+            capped_requests: self.engine.stats().capped_requests,
             queue_full_stalls: lanes.iter().map(|l| l.queue_full_stalls).sum(),
             drained: self.drained.load(Ordering::Relaxed),
             window_waits: lanes.iter().map(|l| l.window_waits).sum(),

@@ -1,0 +1,220 @@
+//! ECM-guided worker governance: bridge the analytic model onto the
+//! silicon the process is actually running on and turn its saturation
+//! prediction into per-(precision, size-class) worker caps for the
+//! execution tier.
+//!
+//! The paper's core multicore result (§2, end) is that a memory-bound dot
+//! stops scaling at n_S = ceil(T_ECM^mem / T_L3Mem) cores — every worker
+//! past saturation adds nothing but contention. This module computes that
+//! bound for the *detected* host (the saturation point shifts per
+//! generation, so a constant would be wrong on most machines):
+//!
+//! * [`bridge_host`] builds a governable [`Machine`] from
+//!   `machine::detect` plus the measured streaming load bandwidth
+//!   (replacing the detector's placeholder figure), falling back to the
+//!   nearest Table-1 preset when the calibration looks implausible
+//!   (virtualized TSC, throttled runners).
+//! * [`verdict_for`] evaluates the Kahan ECM model per precision and maps
+//!   saturation onto size classes: only the MEM class has a shared-
+//!   bandwidth ceiling — L1/L2 are core-private and the segmented L3
+//!   scales with active cores (paper §2/§3), so L1- and LLC-class dots
+//!   never cap.
+//! * [`host_verdict`] caches the whole thing per process (the bandwidth
+//!   measurement streams ~64 MiB).
+//!
+//! Consumers: `engine::plan::PlanPolicy::with_governance` carries the caps
+//! into routing, the engine/sharded execution paths realize them as worker
+//! *subsets* (concurrency only — never chunk geometry, so capped and
+//! uncapped execution are bit-identical), and `repro plan` /
+//! `repro engine-info` print the verdict.
+
+use super::model::{build, EcmModel};
+use crate::isa::{generate, Precision, Simd, Variant};
+use crate::machine::detect::{calibrate_tsc_ghz_cached, detect_host_cached, host_simd};
+use crate::machine::{nearest_preset, preset, Machine, PresetId};
+use std::sync::OnceLock;
+
+/// Index conventions shared with `engine::autotune`: precision 0 = SP,
+/// 1 = DP; size class 0 = L1, 1 = LLC, 2 = MEM.
+pub const PREC_NAMES: [&str; 2] = ["f32", "f64"];
+pub const CLASS_NAMES: [&str; 3] = ["L1", "LLC", "MEM"];
+
+/// Which machine description produced a verdict.
+#[derive(Clone, Copy, Debug)]
+pub enum ModelSource {
+    /// the detected host, with the measured streaming load bandwidth
+    /// (GB/s) substituted for the detector's placeholder
+    Detected { measured_bw_gbs: f64 },
+    /// detection looked implausible; the nearest Table-1 preset stands in
+    Preset(PresetId),
+}
+
+impl ModelSource {
+    /// One-line provenance for the CLI.
+    pub fn describe(&self) -> String {
+        match self {
+            ModelSource::Detected { measured_bw_gbs } => format!(
+                "detected host, measured load bandwidth {measured_bw_gbs:.1} GB/s"
+            ),
+            ModelSource::Preset(id) => format!("nearest Table-1 preset fallback ({id:?})"),
+        }
+    }
+}
+
+/// The ECM governance verdict for one machine: predicted saturation cores
+/// per (precision, size class) plus the provenance needed to explain it.
+#[derive(Clone, Debug)]
+pub struct EcmVerdict {
+    /// the machine model the prediction was evaluated on
+    pub machine: Machine,
+    pub source: ModelSource,
+    /// SIMD level of the Kahan kernel the model was built from
+    pub simd: Simd,
+    /// n_S per [precision][size class]; 0 means "does not saturate" (the
+    /// class has no shared-bandwidth ceiling)
+    pub sat_cores: [[u32; 3]; 2],
+}
+
+impl EcmVerdict {
+    /// The caps the planner consumes: `usize::MAX` where the class does
+    /// not saturate, n_S where it does. Monotone non-increasing in the
+    /// size class within a precision — growing a working set can only
+    /// move it toward the shared-bandwidth ceiling, never away from it.
+    pub fn worker_caps(&self) -> [[usize; 3]; 2] {
+        let mut caps = [[usize::MAX; 3]; 2];
+        for (pi, row) in self.sat_cores.iter().enumerate() {
+            for (ci, &n) in row.iter().enumerate() {
+                if n > 0 {
+                    caps[pi][ci] = n as usize;
+                }
+            }
+        }
+        caps
+    }
+
+    /// One cell of [`EcmVerdict::worker_caps`].
+    pub fn cap(&self, prec_idx: usize, class_idx: usize) -> usize {
+        let n = self.sat_cores[prec_idx][class_idx];
+        if n == 0 { usize::MAX } else { n as usize }
+    }
+}
+
+/// The widest SIMD level the host's Kahan kernels actually use.
+pub fn best_host_simd() -> Simd {
+    let s = host_simd();
+    if s.avx512f {
+        Simd::Avx512
+    } else if s.avx2 {
+        Simd::Avx
+    } else if s.sse {
+        Simd::Sse
+    } else {
+        Simd::Scalar
+    }
+}
+
+/// ECM model for the Kahan dot at `prec`/`simd` on `machine`, multicore
+/// Uncore behaviour (governance reasons about n > 1 cores).
+pub fn model_for(machine: &Machine, simd: Simd, prec: Precision) -> EcmModel {
+    build(machine, &generate(Variant::Kahan, simd, prec, 0), false)
+}
+
+/// Evaluate the governance verdict for one machine (pure; testable
+/// against the Table-1 presets).
+pub fn verdict_for(machine: &Machine, simd: Simd, source: ModelSource) -> EcmVerdict {
+    let mut sat_cores = [[0u32; 3]; 2];
+    for (pi, prec) in [Precision::Sp, Precision::Dp].into_iter().enumerate() {
+        let e = model_for(machine, simd, prec);
+        // only the MEM class contends on a shared resource: L1/L2 are
+        // per-core and the segmented L3 scales with active cores, so
+        // their classes keep sat = 0 ("does not saturate")
+        sat_cores[pi][2] = e.saturation_cores();
+    }
+    EcmVerdict { machine: machine.clone(), source, simd, sat_cores }
+}
+
+/// Bridge `machine::detect` into a governable machine model: take the
+/// detected topology, pin the clock to the cached TSC calibration, and
+/// substitute the measured streaming load bandwidth for the detector's
+/// placeholder. When either figure is implausible the nearest Table-1
+/// preset stands in, so governance always has *some* defensible model.
+pub fn bridge_host() -> (Machine, ModelSource) {
+    let host = detect_host_cached();
+    let ghz = calibrate_tsc_ghz_cached();
+    let bw = crate::bench::sweep::measure_load_bandwidth();
+    if (0.5..7.0).contains(&ghz) && (0.5..1000.0).contains(&bw) {
+        let mut m = host.clone();
+        m.clock_ghz = ghz;
+        m.memory.load_bw_gbs = bw;
+        m.memory.peak_bw_gbs = m.memory.peak_bw_gbs.max(bw);
+        (m, ModelSource::Detected { measured_bw_gbs: bw })
+    } else {
+        let id = nearest_preset(host);
+        (preset(id), ModelSource::Preset(id))
+    }
+}
+
+/// Process-wide cached host verdict. The bandwidth measurement behind
+/// [`bridge_host`] streams ~64 MiB, so everything on a construction path
+/// (engine setup, CLI) shares this one evaluation.
+pub fn host_verdict() -> &'static EcmVerdict {
+    static VERDICT: OnceLock<EcmVerdict> = OnceLock::new();
+    VERDICT.get_or_init(|| {
+        let (machine, source) = bridge_host();
+        verdict_for(&machine, best_host_simd(), source)
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::machine::presets::ivb;
+
+    /// The verdict reproduces the paper's §3 saturation points on IVB:
+    /// AVX Kahan SP saturates at 4 cores, scalar Kahan at 11 (SP) / 6 (DP).
+    #[test]
+    fn verdict_matches_paper_saturation_on_ivb() {
+        let m = ivb();
+        let avx = verdict_for(&m, Simd::Avx, ModelSource::Preset(PresetId::Ivb));
+        assert_eq!(avx.sat_cores[0][2], 4, "AVX SP n_S");
+        let scalar = verdict_for(&m, Simd::Scalar, ModelSource::Preset(PresetId::Ivb));
+        assert_eq!(scalar.sat_cores[0][2], 11, "scalar SP n_S");
+        assert_eq!(scalar.sat_cores[1][2], 6, "scalar DP n_S");
+    }
+
+    /// Cap semantics: cache classes never cap, MEM caps at n_S, and the
+    /// applied cap is monotone non-increasing in the size class.
+    #[test]
+    fn caps_only_bind_the_mem_class_and_are_monotone() {
+        let v = verdict_for(&ivb(), Simd::Avx, ModelSource::Preset(PresetId::Ivb));
+        let caps = v.worker_caps();
+        for pi in 0..2 {
+            assert_eq!(caps[pi][0], usize::MAX, "L1 class must not cap");
+            assert_eq!(caps[pi][1], usize::MAX, "LLC class must not cap");
+            assert!(caps[pi][2] >= 1);
+            for w in caps[pi].windows(2) {
+                assert!(w[1] <= w[0], "caps must be non-increasing in class");
+            }
+            for ci in 0..3 {
+                assert_eq!(v.cap(pi, ci), caps[pi][ci]);
+            }
+        }
+        assert_eq!(caps[0][2], 4);
+    }
+
+    /// The cached host verdict is computed once and is self-consistent
+    /// with its own machine model.
+    #[test]
+    fn host_verdict_cached_and_plausible() {
+        let a = host_verdict() as *const EcmVerdict;
+        let b = host_verdict() as *const EcmVerdict;
+        assert_eq!(a, b, "verdict must be evaluated once");
+        let v = host_verdict();
+        for pi in 0..2 {
+            let n = v.sat_cores[pi][2];
+            assert!(n >= 1, "a finite machine always has a MEM ceiling");
+            assert!(n < 10_000, "implausible saturation point {n}");
+        }
+        assert!(v.machine.clock_ghz > 0.4 && v.machine.clock_ghz < 8.0);
+    }
+}

@@ -7,9 +7,11 @@
 //! `crate::isa::KernelDesc` (the generated instruction stream), so the model
 //! is *derived from the kernel*, never hand-entered.
 
+pub mod governance;
 pub mod model;
 pub mod notation;
 pub mod scaling;
 
+pub use governance::{host_verdict, verdict_for, EcmVerdict, ModelSource};
 pub use model::{build, EcmModel};
-pub use scaling::{saturation_cores, scale_performance, ScalingCurve};
+pub use scaling::{scale_performance, ScalingCurve};

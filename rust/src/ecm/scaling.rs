@@ -24,6 +24,11 @@ pub struct ScalingCurve {
 
 /// Predicted multicore performance at `n` cores for in-memory working sets.
 ///
+/// Paper §2 (end): P(n) = min(n · P_ECM^mem, I · b_S) — linear single-core
+/// scaling clipped at the roofline bandwidth light speed, where
+/// P_ECM^mem = `EcmModel::perf_gups(3)` (the Eq. (1)/(2) in-memory
+/// prediction) and I · b_S = `EcmModel::roofline_gups()`.
+///
 /// Uses the *multi-core* ECM model (`single_core = false` Uncore behaviour
 /// should be baked into `e` by the caller when modeling n > 1).
 pub fn scale_performance(e: &EcmModel, n: u32) -> f64 {
@@ -31,12 +36,13 @@ pub fn scale_performance(e: &EcmModel, n: u32) -> f64 {
     (n as f64 * per_core).min(e.roofline_gups())
 }
 
-/// n_S = ceil(T_ECM^mem / T_L3Mem^bw-only).
-pub fn saturation_cores(e: &EcmModel) -> u32 {
-    e.saturation_cores()
-}
-
 /// Build the scaling curve for 1..=max_cores.
+///
+/// Each point is paper §2's P(n) = min(n · P_ECM^mem, I · b_S) (the same
+/// formula as [`scale_performance`], kept inline so the roofline is
+/// evaluated once), and the curve's saturation point is the paper's
+/// n_S = ceil(T_ECM^mem / T_L3Mem) via [`EcmModel::saturation_cores`] —
+/// the model's single home for that equation.
 pub fn curve(e: &EcmModel, max_cores: u32) -> ScalingCurve {
     let roof = e.roofline_gups();
     let points = (1..=max_cores)

@@ -78,7 +78,9 @@ impl SizeClass {
     }
 }
 
-fn prec_index(prec: Precision) -> usize {
+/// Row index of a precision in the `[precision][size class]` tables shared
+/// by the dispatch table, `PlanPolicy::worker_caps`, and the ECM verdict.
+pub(crate) fn prec_index(prec: Precision) -> usize {
     match prec {
         Precision::Sp => 0,
         Precision::Dp => 1,
@@ -134,6 +136,13 @@ pub struct DispatchTable {
     choices: [[Choice; 3]; 2],
     /// total probe bytes used per class (for reporting)
     pub probe_bytes: [u64; 3],
+    /// ECM governance correction per precision, fixed-point millis
+    /// (1000 = 1.0): observed/predicted saturation from the bench's
+    /// empirical sweep, applied by [`DispatchTable::corrected_sat`] when a
+    /// misprediction exceeded tolerance. Lives here — not in `PlanPolicy`
+    /// — because it is *measured calibration state* like the kernel
+    /// choices, while the policy stays a pure function of its config.
+    sat_scale: [std::sync::atomic::AtomicU32; 2],
 }
 
 fn median_cycles_f32(f: fn(&[f32], &[f32]) -> f32, a: &[f32], b: &[f32], reps: usize) -> f64 {
@@ -309,7 +318,45 @@ impl DispatchTable {
             }
             rows.push([per_class[0], per_class[1], per_class[2]]);
         }
-        DispatchTable { choices: [rows[0], rows[1]], probe_bytes }
+        DispatchTable {
+            choices: [rows[0], rows[1]],
+            probe_bytes,
+            sat_scale: [
+                std::sync::atomic::AtomicU32::new(1000),
+                std::sync::atomic::AtomicU32::new(1000),
+            ],
+        }
+    }
+
+    /// Feed back one predicted-vs-observed saturation measurement (from
+    /// `bench_engine`'s empirical sweep). When the relative misprediction
+    /// exceeds `tol`, the stored correction becomes observed/predicted
+    /// (clamped to [0.25, 4.0] so one noisy sweep cannot collapse or
+    /// explode the cap); within tolerance the correction resets to 1.0.
+    pub fn note_saturation(&self, prec: Precision, predicted: u32, observed: u32, tol: f64) {
+        use std::sync::atomic::Ordering;
+        if predicted == 0 || observed == 0 {
+            return;
+        }
+        let rel = (observed as f64 - predicted as f64).abs() / predicted as f64;
+        let scale = if rel > tol {
+            (observed as f64 / predicted as f64).clamp(0.25, 4.0)
+        } else {
+            1.0
+        };
+        self.sat_scale[prec_index(prec)].store((scale * 1000.0).round() as u32, Ordering::Relaxed);
+    }
+
+    /// Apply the stored saturation correction to a model-predicted cap.
+    /// `usize::MAX` means "uncapped" and passes through untouched; a
+    /// corrected cap never drops below one worker.
+    pub fn corrected_sat(&self, prec: Precision, base: usize) -> usize {
+        use std::sync::atomic::Ordering;
+        if base == usize::MAX {
+            return usize::MAX;
+        }
+        let scale = self.sat_scale[prec_index(prec)].load(Ordering::Relaxed) as f64 / 1000.0;
+        ((base as f64 * scale).round() as usize).max(1)
     }
 
     pub fn choice(&self, prec: Precision, class: SizeClass) -> &Choice {
@@ -426,6 +473,32 @@ mod tests {
         assert_eq!(SizeClass::of(1024), SizeClass::L1);
         assert_eq!(SizeClass::of(m.caches[2].size_bytes), SizeClass::Llc);
         assert_eq!(SizeClass::of(4 * m.caches[2].size_bytes), SizeClass::Mem);
+    }
+
+    /// The saturation-correction loop: identity by default, observed/
+    /// predicted once a misprediction exceeds tolerance, uncapped cells
+    /// untouched, floor of one worker.
+    #[test]
+    fn saturation_correction_applies_and_resets() {
+        let t = DispatchTable::calibrate([8 << 10, 64 << 10, 256 << 10], 1);
+        // default: identity
+        assert_eq!(t.corrected_sat(Precision::Sp, 4), 4);
+        assert_eq!(t.corrected_sat(Precision::Sp, usize::MAX), usize::MAX);
+        // within tolerance: stays identity
+        t.note_saturation(Precision::Sp, 4, 4, 0.25);
+        assert_eq!(t.corrected_sat(Precision::Sp, 4), 4);
+        // beyond tolerance: scaled by observed/predicted
+        t.note_saturation(Precision::Sp, 4, 8, 0.25);
+        assert_eq!(t.corrected_sat(Precision::Sp, 4), 8);
+        assert_eq!(t.corrected_sat(Precision::Sp, usize::MAX), usize::MAX, "uncapped survives");
+        // precision rows are independent
+        assert_eq!(t.corrected_sat(Precision::Dp, 4), 4);
+        // collapse is floored at one worker
+        t.note_saturation(Precision::Dp, 8, 1, 0.25);
+        assert_eq!(t.corrected_sat(Precision::Dp, 2), 1);
+        // back within tolerance: reset to identity
+        t.note_saturation(Precision::Sp, 4, 4, 0.25);
+        assert_eq!(t.corrected_sat(Precision::Sp, 4), 4);
     }
 
     /// Batched-choice invariants: a kept fused kernel is always the twin of

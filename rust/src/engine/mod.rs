@@ -7,7 +7,7 @@
 //! across requests, so the steady-state cost of a served dot is the
 //! streaming cost the paper models and nothing else.
 //!
-//! # Architecture: plan → route → shard → pool → partition → kernel → merge
+//! # Architecture: plan → govern → route → shard → pool → partition → kernel → merge
 //!
 //! ```text
 //!   clients (any thread)
@@ -31,6 +31,17 @@
 //!   │ compiles every request into a DotPlan: inline / one-shard         │
 //!   │ parallel / fused batch with cutoff / weighted split with flat     │
 //!   │ compensated merge. Every threshold below is a planner call.       │
+//!   └───────────────────────────────────────────────────────────────────┘
+//!        │
+//!        ▼
+//!   ┌─ ECM governance (crate::ecm::governance) ─────────────────────────┐
+//!   │ the host's EcmModel predicts the bandwidth saturation point n_S   │
+//!   │ per (precision, size class); fan-out is capped there (autotuner-  │
+//!   │ corrected, clamped to the realized worker count). A cap changes   │
+//!   │ CONCURRENCY ONLY: chunk geometry stays planner-derived, so capped │
+//!   │ runs are bit-identical to uncapped ones, and the freed workers    │
+//!   │ serve other lanes' requests concurrently (see "# ECM governance"  │
+//!   │ in the plan module)                                               │
 //!   └───────────────────────────────────────────────────────────────────┘
 //!        │
 //!        ▼
@@ -77,6 +88,9 @@
 //!   with a single-node fallback when sysfs is absent).
 //! * [`sharded`] — the multi-socket tier: [`ShardedEngine`] owns one
 //!   [`DotEngine`] per NUMA domain and routes/splits requests across them.
+//! * `crate::ecm::governance` — the ECM verdict for the detected host:
+//!   predicted saturation cores per (precision, size class) become the
+//!   worker caps this module and the planner enforce.
 //!
 //! # Length policy / Batching invariant
 //!
@@ -124,7 +138,10 @@ pub mod topology;
 
 pub use autotune::{dispatch, BatchChoice, Choice, DispatchTable, SizeClass};
 pub use plan::{DotPlan, DotRoute, PlanPolicy};
-pub use parallel::{chunk_ranges, parallel_dot_f32, parallel_dot_f64, WorkerPool};
+pub use parallel::{
+    chunk_ranges, parallel_dot_capped_f32, parallel_dot_capped_f64, parallel_dot_f32,
+    parallel_dot_f64, WorkerPool,
+};
 pub use pool::{BufferPool, PoolStats, PooledSlice};
 pub use sharded::{HomedSlice, ShardedConfig, ShardedEngine, ShardedStats};
 pub use topology::{topology_cached, NumaNode, Topology};
@@ -143,11 +160,16 @@ pub struct EngineConfig {
     /// caller's thread directly over the caller's slices (zero copy, zero
     /// dispatch) — small dots don't amortize a hand-off
     pub parallel_cutoff_bytes: usize,
+    /// consult the host's ECM verdict and cap parallel fan-out at the
+    /// predicted saturation cores (MEM-class dots stop scaling once the
+    /// memory bus saturates — extra workers only burn cores other
+    /// requests could use). Capping changes concurrency only, never bits.
+    pub governance: bool,
 }
 
 impl Default for EngineConfig {
     fn default() -> Self {
-        EngineConfig { threads: 0, parallel_cutoff_bytes: 256 * 1024 }
+        EngineConfig { threads: 0, parallel_cutoff_bytes: 256 * 1024, governance: true }
     }
 }
 
@@ -161,6 +183,9 @@ pub struct EngineStats {
     /// dots served through a batched execution path (`dot_batch_*` or a
     /// sharded/homed batch group) — a subset of `requests`
     pub batched: u64,
+    /// parallel dots whose fan-out the ECM governance layer capped below
+    /// the realized worker count — a subset of `parallel`
+    pub capped_requests: u64,
     pub pool: PoolStats,
     /// workers whose CPU-affinity call failed (best-effort pinning signal)
     pub pin_failures: u64,
@@ -188,7 +213,7 @@ pub fn kernel_for_f64(variant: Variant, total_bytes: u64) -> fn(&[f64], &[f64]) 
 /// admit policy lives in exactly one place.
 macro_rules! engine_dot_methods {
     ($dot:ident, $dot_pooled:ident, $kernel_for:ident, $admit_local:ident,
-     $parallel:ident, $ty:ty) => {
+     $parallel_capped:ident, $prec:expr, $ty:ty) => {
         /// Admit `v` into this engine's pool with the copy executed **on
         /// one of the engine's own pinned workers**, so first-touch page
         /// placement of a fresh buffer lands in the workers' NUMA domain
@@ -237,7 +262,13 @@ macro_rules! engine_dot_methods {
             let pa = self.$admit_local(&a[..n]);
             let pb = self.$admit_local(&b[..n]);
             self.parallel_jobs.fetch_add(1, Ordering::Relaxed);
-            $parallel(&self.workers, f, &pa, &pb, self.workers.size())
+            // governance: chunk count stays the full worker count (bit
+            // geometry), only the worker SUBSET that runs them may shrink
+            let cap = self.worker_cap($prec, total_bytes);
+            if cap < self.workers.size() {
+                self.note_capped();
+            }
+            $parallel_capped(&self.workers, f, &pa, &pb, self.workers.size(), cap)
         }
 
         /// The zero-copy steady-state path: dot two already-admitted
@@ -261,7 +292,11 @@ macro_rules! engine_dot_methods {
                 return f(&a.as_slice()[..n], &b.as_slice()[..n]);
             }
             self.parallel_jobs.fetch_add(1, Ordering::Relaxed);
-            $parallel(&self.workers, f, a, b, self.workers.size())
+            let cap = self.worker_cap($prec, total_bytes);
+            if cap < self.workers.size() {
+                self.note_capped();
+            }
+            $parallel_capped(&self.workers, f, a, b, self.workers.size(), cap)
         }
     };
 }
@@ -465,9 +500,14 @@ pub struct DotEngine {
     pool: Arc<BufferPool>,
     workers: WorkerPool,
     cfg: EngineConfig,
+    /// governance worker caps, `[precision][size class]` (`usize::MAX` =
+    /// the class does not saturate) — the host ECM verdict when
+    /// `cfg.governance`, fully open otherwise
+    caps: [[usize; 3]; 2],
     requests: AtomicU64,
     parallel_jobs: AtomicU64,
     batched: AtomicU64,
+    capped: AtomicU64,
 }
 
 impl DotEngine {
@@ -487,14 +527,45 @@ impl DotEngine {
         } else {
             std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
         };
+        let caps = if cfg.governance {
+            crate::ecm::governance::host_verdict().worker_caps()
+        } else {
+            [[usize::MAX; 3]; 2]
+        };
         DotEngine {
             pool: BufferPool::new(),
             workers: WorkerPool::new_on(threads, cpus),
             cfg,
+            caps,
             requests: AtomicU64::new(0),
             parallel_jobs: AtomicU64::new(0),
             batched: AtomicU64::new(0),
+            capped: AtomicU64::new(0),
         }
+    }
+
+    /// Override the governance caps (`[precision][size class]`,
+    /// `usize::MAX` = uncapped) — bench saturation sweeps and property
+    /// tests pin explicit caps so their capped-vs-uncapped comparisons
+    /// don't depend on the host the suite happens to run on.
+    pub fn set_worker_caps(&mut self, caps: [[usize; 3]; 2]) {
+        self.caps = caps;
+    }
+
+    /// The realized fan-out for one parallel dot: the governance cap for
+    /// the request's (precision, size class), corrected by the autotuner's
+    /// observed-saturation feedback, clamped into `[1, worker count]`.
+    /// With governance off (or a class that never saturates) this is
+    /// exactly the worker count — the pre-governance behaviour.
+    pub(crate) fn worker_cap(&self, prec: Precision, total_bytes: u64) -> usize {
+        let base = self.caps[autotune::prec_index(prec)][SizeClass::of(total_bytes).index()];
+        dispatch().corrected_sat(prec, base).min(self.workers.size()).max(1)
+    }
+
+    /// Count one parallel dot whose fan-out governance capped below the
+    /// realized worker count (the sharded split path reports its own).
+    pub(crate) fn note_capped(&self) {
+        self.capped.fetch_add(1, Ordering::Relaxed);
     }
 
     /// Whether a request of `total_bytes` (both streams) runs inline on
@@ -538,6 +609,7 @@ impl DotEngine {
             requests: self.requests.load(Ordering::Relaxed),
             parallel: self.parallel_jobs.load(Ordering::Relaxed),
             batched: self.batched.load(Ordering::Relaxed),
+            capped_requests: self.capped.load(Ordering::Relaxed),
             pool: self.pool.stats(),
             pin_failures: self.workers.pin_failures() as u64,
         }
@@ -558,7 +630,8 @@ impl DotEngine {
         dot_pooled_f32,
         kernel_for_f32,
         admit_local_f32,
-        parallel_dot_f32,
+        parallel_dot_capped_f32,
+        Precision::Sp,
         f32
     );
     engine_dot_methods!(
@@ -566,7 +639,8 @@ impl DotEngine {
         dot_pooled_f64,
         kernel_for_f64,
         admit_local_f64,
-        parallel_dot_f64,
+        parallel_dot_capped_f64,
+        Precision::Dp,
         f64
     );
     engine_batch_methods!(dot_batch_f32, admit_local_many_f32, dot_f32, exec_batch_f32, f32);
@@ -683,6 +757,36 @@ mod tests {
         assert_eq!(st.requests, 12, "{st:?}");
         assert_eq!(st.batched, 5, "{st:?}");
         assert_eq!(st.parallel, 2, "{st:?}");
+    }
+
+    /// The governance contract at the engine facade: an explicit cap
+    /// changes concurrency only (bits identical to an ungoverned engine)
+    /// and is visible in `EngineStats::capped_requests`; an ungoverned
+    /// engine never counts a capped request.
+    #[test]
+    fn governed_cap_is_concurrency_only_and_counted() {
+        let mut governed = DotEngine::new(EngineConfig {
+            threads: 2,
+            governance: false,
+            ..EngineConfig::default()
+        });
+        governed.set_worker_caps([[1, 1, 1], [1, 1, 1]]);
+        let open = DotEngine::new(EngineConfig {
+            threads: 2,
+            governance: false,
+            ..EngineConfig::default()
+        });
+        let mut rng = Rng::new(29);
+        let n = 200_000; // 1.6 MB total -> chunked-parallel path
+        let a = rng.normal_f32_vec(n);
+        let b = rng.normal_f32_vec(n);
+        let x = governed.dot_f32(Variant::Kahan, &a, &b);
+        let y = open.dot_f32(Variant::Kahan, &a, &b);
+        assert_eq!(x.to_bits(), y.to_bits(), "a worker cap must never change bits");
+        let (gs, os) = (governed.stats(), open.stats());
+        assert_eq!(gs.capped_requests, 1, "{gs:?}");
+        assert_eq!(gs.parallel, 1, "{gs:?}");
+        assert_eq!(os.capped_requests, 0, "{os:?}");
     }
 
     #[test]

@@ -152,6 +152,21 @@ impl WorkerPool {
         let i = self.next.fetch_add(1, Ordering::Relaxed);
         self.submit_to(i, job);
     }
+
+    /// Starting worker for a governed job that will occupy `span`
+    /// consecutive workers (mod `size()`). Advancing the shared cursor by
+    /// the whole span rotates concurrent capped requests onto *disjoint*
+    /// subsets, so the workers a saturation cap frees genuinely serve
+    /// other requests instead of idling behind the same queues. A
+    /// full-width span always starts at 0, which keeps the uncapped
+    /// path's chunk→worker assignment exactly what it was.
+    pub fn subset_start(&self, span: usize) -> usize {
+        if span >= self.workers.len() {
+            0
+        } else {
+            self.next.fetch_add(span, Ordering::Relaxed) % self.workers.len()
+        }
+    }
 }
 
 impl Drop for WorkerPool {
@@ -238,33 +253,44 @@ pub(crate) fn collect_partials<T: Copy>(
 }
 
 macro_rules! parallel_dot_impl {
-    ($name:ident, $ty:ty, $elems_per_cl:expr, $fold:ident) => {
+    ($name:ident, $capped:ident, $ty:ty, $elems_per_cl:expr, $fold:ident) => {
         /// Chunked-parallel compensated dot over pooled aligned streams:
         /// each chunk runs `f` on a worker, partials merge with the
         /// compensated fold in chunk order (deterministic).
+        ///
+        /// `max_workers` is the ECM governance cap: the chunks occupy at
+        /// most that many workers, submitted round-robin over a rotated
+        /// subset ([`WorkerPool::subset_start`]) so concurrent capped
+        /// requests spread across disjoint subsets. The cap changes
+        /// *concurrency only* — chunk geometry depends on `(n, chunks)`
+        /// alone and partials always merge in chunk order, so any
+        /// `max_workers` produces bit-identical results.
         ///
         /// Panic policy: each chunk job reports an explicit outcome, so a
         /// panicking kernel re-panics *here* with the original payload
         /// message instead of leaving a silent `0.0` partial in the merge,
         /// and the pool's workers survive for the next request.
-        pub fn $name(
+        pub fn $capped(
             pool: &WorkerPool,
             f: fn(&[$ty], &[$ty]) -> $ty,
             a: &Arc<PooledSlice<$ty>>,
             b: &Arc<PooledSlice<$ty>>,
             chunks: usize,
+            max_workers: usize,
         ) -> $ty {
             let n = a.len().min(b.len());
             let ranges = chunk_ranges(n, chunks, $elems_per_cl);
             if ranges.len() <= 1 {
                 return f(&a.as_slice()[..n], &b.as_slice()[..n]);
             }
+            let slots = max_workers.max(1).min(pool.size());
+            let base = pool.subset_start(slots);
             let (tx, rx) = mpsc::channel::<(usize, Result<$ty, String>)>();
             for (i, &(lo, hi)) in ranges.iter().enumerate() {
                 let a = Arc::clone(a);
                 let b = Arc::clone(b);
                 let tx = tx.clone();
-                pool.submit_to(i, Box::new(move || {
+                pool.submit_to(base + (i % slots), Box::new(move || {
                     let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
                         f(&a.as_slice()[lo..hi], &b.as_slice()[lo..hi])
                     }));
@@ -280,11 +306,23 @@ macro_rules! parallel_dot_impl {
             let comps = vec![0.0 as $ty; sums.len()];
             $fold(&sums, &comps)
         }
+
+        /// Uncapped convenience form: every chunk gets its own worker
+        /// (the pre-governance behaviour, chunk `i` on worker `i`).
+        pub fn $name(
+            pool: &WorkerPool,
+            f: fn(&[$ty], &[$ty]) -> $ty,
+            a: &Arc<PooledSlice<$ty>>,
+            b: &Arc<PooledSlice<$ty>>,
+            chunks: usize,
+        ) -> $ty {
+            $capped(pool, f, a, b, chunks, pool.size())
+        }
     };
 }
 
-parallel_dot_impl!(parallel_dot_f32, f32, 16, compensated_fold_f32);
-parallel_dot_impl!(parallel_dot_f64, f64, 8, compensated_fold_f64);
+parallel_dot_impl!(parallel_dot_f32, parallel_dot_capped_f32, f32, 16, compensated_fold_f32);
+parallel_dot_impl!(parallel_dot_f64, parallel_dot_capped_f64, f64, 8, compensated_fold_f64);
 
 #[cfg(test)]
 mod tests {
@@ -410,6 +448,31 @@ mod tests {
         for _ in 0..5 {
             let again = parallel_dot_f32(&pool, scalar::kahan_seq_f32, &a, &b, 4);
             assert_eq!(first.to_bits(), again.to_bits(), "merge must be bit-stable");
+        }
+    }
+
+    /// The governance cap changes which workers run the chunks, never the
+    /// chunk geometry or merge order — every cap must be bit-identical to
+    /// the uncapped reduction.
+    #[test]
+    fn capped_dot_bit_identical_to_uncapped() {
+        let pool = WorkerPool::new(4);
+        let bufs = BufferPool::new();
+        let mut rng = Rng::new(31);
+        let av = rng.normal_f32_vec(50_000);
+        let bv = rng.normal_f32_vec(50_000);
+        let a = Arc::new(bufs.admit(&av));
+        let b = Arc::new(bufs.admit(&bv));
+        let chunks = 8;
+        let uncapped = parallel_dot_f32(&pool, scalar::kahan_unrolled_f32, &a, &b, chunks);
+        for cap in [1usize, 2, 3, 4, 7, usize::MAX] {
+            let capped =
+                parallel_dot_capped_f32(&pool, scalar::kahan_unrolled_f32, &a, &b, chunks, cap);
+            assert_eq!(
+                uncapped.to_bits(),
+                capped.to_bits(),
+                "cap={cap}: governance changed bits"
+            );
         }
     }
 

@@ -54,6 +54,28 @@
 //! `rust/tests/test_batch.rs` and against the planner in
 //! `rust/tests/test_plan.rs`.
 //!
+//! # ECM governance
+//!
+//! **The worker cap changes concurrency only, never bits.** The policy
+//! carries per-(precision, size-class) worker caps derived from the ECM
+//! saturation prediction (`ecm::governance`: a memory-bound dot stops
+//! scaling at n_S = ceil(T_ECM^mem / T_L3Mem) cores, so workers past
+//! saturation are pure contention). The planner only *stores and reports*
+//! the cap ([`PlanPolicy::worker_cap`]); the execution layers realize it
+//! by running the planned chunks on a worker *subset*
+//! (`WorkerPool::subset_start` + modulo placement) while the freed
+//! workers serve concurrent requests from other lanes. Chunk and split
+//! geometry stay planner-derived ([`PlanPolicy::split_blocks`],
+//! cache-line-quanta `chunk_ranges`) independent of the realized worker
+//! count, and partials always merge in chunk order — so capped and
+//! uncapped execution are bit-identical and the sequential Kahan bound
+//! survives unchanged (property-tested in `rust/tests/test_plan.rs` and
+//! `rust/tests/test_engine.rs`). Within a precision the caps are monotone
+//! non-increasing in the size class: growing a working set can only move
+//! it toward the shared-bandwidth ceiling. The empirical correction loop
+//! (`DispatchTable::note_saturation`/`corrected_sat`) lives with the
+//! autotuner's calibration state, keeping this policy pure.
+//!
 //! # Who consumes plans
 //!
 //! * `DotEngine` — [`serves_inline`] is the inline-vs-parallel predicate
@@ -169,6 +191,11 @@ pub struct PlanPolicy {
     /// window in microseconds. 0 = purely opportunistic coalescing
     /// (today's zero-added-latency behavior)
     pub batch_window_us: u64,
+    /// ECM governance: worker cap per `[precision][size class]`
+    /// (`usize::MAX` = uncapped; see the module's "ECM governance"
+    /// section). Defaults to all-uncapped — governance is opt-in via
+    /// [`PlanPolicy::with_governance`].
+    pub worker_caps: [[usize; 3]; 2],
 }
 
 impl PlanPolicy {
@@ -188,6 +215,7 @@ impl PlanPolicy {
             shard_workers,
             max_batch: 1,
             batch_window_us: 0,
+            worker_caps: [[usize::MAX; 3]; 2],
         }
     }
 
@@ -196,6 +224,32 @@ impl PlanPolicy {
         self.max_batch = max_batch;
         self.batch_window_us = batch_window_us;
         self
+    }
+
+    /// Install ECM-derived worker caps (`[precision][size class]`,
+    /// `usize::MAX` = uncapped), e.g. `EcmVerdict::worker_caps()`.
+    pub fn with_governance(mut self, caps: [[usize; 3]; 2]) -> PlanPolicy {
+        self.worker_caps = caps;
+        self
+    }
+
+    /// Strip every worker cap (the `ecm_governance=off` control path).
+    pub fn ungoverned(self) -> PlanPolicy {
+        self.with_governance([[usize::MAX; 3]; 2])
+    }
+
+    /// The governance worker cap for one `(precision, size class)` cell.
+    /// `usize::MAX` = uncapped; execution layers additionally clamp to
+    /// the realized worker count and apply the autotuner's empirical
+    /// saturation correction (`DispatchTable::corrected_sat`).
+    pub fn worker_cap(&self, prec: Precision, class: SizeClass) -> usize {
+        self.worker_caps[super::autotune::prec_index(prec)][class.index()]
+    }
+
+    /// Would governance actually bind on `shard` — i.e. is the cap
+    /// strictly below the shard's realized worker count?
+    pub fn governed(&self, shard: usize, prec: Precision, class: SizeClass) -> bool {
+        self.worker_cap(prec, class) < self.shard_workers[self.clamp_shard(shard)]
     }
 
     pub fn shards(&self) -> usize {
@@ -344,6 +398,29 @@ mod tests {
         let b1 = p.split_blocks(1);
         assert_eq!(b1.iter().map(|&(_, lo, hi)| hi - lo).sum::<usize>(), 1);
         assert_eq!(b1.last().unwrap().2, 1);
+    }
+
+    #[test]
+    fn governance_caps_default_open_and_round_trip() {
+        let p = policy();
+        for prec in [Precision::Sp, Precision::Dp] {
+            for class in SizeClass::ALL {
+                assert_eq!(p.worker_cap(prec, class), usize::MAX, "default is uncapped");
+                assert!(!p.governed(0, prec, class), "uncapped never governs");
+            }
+        }
+        let caps = [[usize::MAX, usize::MAX, 1], [usize::MAX, 2, 1]];
+        let g = policy().with_governance(caps);
+        assert_eq!(g.worker_cap(Precision::Sp, SizeClass::Mem), 1);
+        assert_eq!(g.worker_cap(Precision::Dp, SizeClass::Llc), 2);
+        assert_eq!(g.worker_cap(Precision::Sp, SizeClass::L1), usize::MAX);
+        // binds only where the cap undercuts the shard's worker count (2)
+        assert!(g.governed(0, Precision::Sp, SizeClass::Mem));
+        assert!(!g.governed(0, Precision::Dp, SizeClass::Llc), "cap == workers does not bind");
+        assert!(!g.governed(1, Precision::Sp, SizeClass::L1));
+        // the off switch restores the open policy
+        let off = g.ungoverned();
+        assert_eq!(off.worker_cap(Precision::Dp, SizeClass::Mem), usize::MAX);
     }
 
     #[test]

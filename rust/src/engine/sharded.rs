@@ -48,7 +48,7 @@ use super::{
     EngineStats,
 };
 use crate::bench::kernels::{compensated_fold_f32, compensated_fold_f64};
-use crate::isa::Variant;
+use crate::isa::{Precision, Variant};
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, OnceLock};
 
@@ -112,6 +112,10 @@ pub struct ShardedStats {
     /// chunked reduction, still counted here because it bypasses the
     /// shard engine's own counters)
     pub split_dots: u64,
+    /// dots whose fan-out the ECM governance layer capped below the
+    /// realized worker count — per-shard engine caps plus split-path dots
+    /// where at least one shard ran on a capped worker subset
+    pub capped_requests: u64,
     pub pool: PoolStats,
     pub pin_failures: u64,
 }
@@ -125,6 +129,10 @@ pub struct ShardedEngine {
     policy: PlanPolicy,
     next: AtomicUsize,
     split_dots: AtomicU64,
+    /// split-path dots where governance capped at least one shard's
+    /// chunk-block onto a worker subset (the per-shard engines count
+    /// their own capped parallel dots)
+    split_capped: AtomicU64,
 }
 
 macro_rules! sharded_dot_impl {
@@ -132,7 +140,7 @@ macro_rules! sharded_dot_impl {
      $dot_batch:ident, $dot_batch_on:ident, $dot_batch_homed:ident, $admit_many_to:ident,
      $engine_dot:ident, $engine_dot_pooled:ident, $engine_admit:ident, $engine_dot_batch:ident,
      $engine_admit_many:ident, $exec_batch:ident, $kernel_for:ident,
-     $fold:ident, $ty:ty, $elems_per_cl:expr) => {
+     $fold:ident, $prec:expr, $ty:ty, $elems_per_cl:expr) => {
         /// Serve one dot: single-shard hosts and sub-split sizes route to
         /// one shard round-robin; very large dots split across all shards.
         /// Length policy as for [`DotEngine`] (see the engine module doc).
@@ -199,6 +207,7 @@ macro_rules! sharded_dot_impl {
             // can never change the partials or the fold)
             let blocks = self.policy.split_blocks(ranges.len());
             let (tx, rx) = mpsc::channel::<(usize, Result<$ty, String>)>();
+            let mut any_capped = false;
             for &(s, clo, chi) in &blocks {
                 let span_lo = ranges[clo].0;
                 let span_hi = ranges[chi - 1].1;
@@ -206,13 +215,28 @@ macro_rules! sharded_dot_impl {
                 // inside shard `s`, so fresh pages first-touch in-domain
                 let pa = self.shards[s].$engine_admit(&a[span_lo..span_hi]);
                 let pb = self.shards[s].$engine_admit(&b[span_lo..span_hi]);
+                // governance: the shard's chunk-block keeps its planner
+                // geometry but lands on a rotated worker SUBSET when the
+                // ECM cap binds — the freed workers stay available to
+                // other lanes' concurrent requests
+                let shard_workers = self.shards[s].threads();
+                let cap = self.shards[s].worker_cap($prec, total_bytes);
+                let slots = cap.min(chi - clo).min(shard_workers).max(1);
+                let base = if slots < shard_workers {
+                    self.shards[s].workers().subset_start(slots)
+                } else {
+                    0
+                };
+                if cap < shard_workers {
+                    any_capped = true;
+                }
                 for (w, ci) in (clo..chi).enumerate() {
                     let (lo, hi) = (ranges[ci].0 - span_lo, ranges[ci].1 - span_lo);
                     let pa = Arc::clone(&pa);
                     let pb = Arc::clone(&pb);
                     let tx = tx.clone();
                     self.shards[s].workers().submit_to(
-                        w,
+                        base + (w % slots),
                         Box::new(move || {
                             let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
                                 f(&pa.as_slice()[lo..hi], &pb.as_slice()[lo..hi])
@@ -221,6 +245,9 @@ macro_rules! sharded_dot_impl {
                         }),
                     );
                 }
+            }
+            if any_capped {
+                self.split_capped.fetch_add(1, Ordering::Relaxed);
             }
             drop(tx);
             let sums = collect_partials(rx, ranges.len(), stringify!($split));
@@ -495,12 +522,33 @@ impl ShardedEngine {
             cfg.chunks,
             shards.iter().map(|s| s.threads()).collect(),
         );
+        // governance: the compiled policy carries the host ECM verdict's
+        // worker caps so every consumer (split path, service, CLI) sees
+        // the same governed view the shard engines enforce internally
+        let policy = if cfg.engine.governance {
+            policy.with_governance(crate::ecm::governance::host_verdict().worker_caps())
+        } else {
+            policy
+        };
         ShardedEngine {
             shards,
             cfg,
             policy,
             next: AtomicUsize::new(0),
             split_dots: AtomicU64::new(0),
+            split_capped: AtomicU64::new(0),
+        }
+    }
+
+    /// Override the governance caps on the compiled policy AND every shard
+    /// engine (`[precision][size class]`, `usize::MAX` = uncapped) — see
+    /// [`DotEngine::set_worker_caps`]. Bench saturation sweeps and
+    /// property tests pin explicit caps here so capped-vs-uncapped
+    /// comparisons don't depend on the host the suite runs on.
+    pub fn set_worker_caps(&mut self, caps: [[usize; 3]; 2]) {
+        self.policy = self.policy.clone().with_governance(caps);
+        for sh in &mut self.shards {
+            sh.set_worker_caps(caps);
         }
     }
 
@@ -552,6 +600,7 @@ impl ShardedEngine {
         let mut st = ShardedStats {
             shards: self.shards.len(),
             split_dots: self.split_dots.load(Ordering::Relaxed),
+            capped_requests: self.split_capped.load(Ordering::Relaxed),
             ..ShardedStats::default()
         };
         for sh in &self.shards {
@@ -559,6 +608,7 @@ impl ShardedEngine {
             st.requests += e.requests;
             st.parallel += e.parallel;
             st.batched += e.batched;
+            st.capped_requests += e.capped_requests;
             st.pool.hits += e.pool.hits;
             st.pool.misses += e.pool.misses;
             st.pool.returned += e.pool.returned;
@@ -587,6 +637,7 @@ impl ShardedEngine {
         exec_batch_f32,
         kernel_for_f32,
         compensated_fold_f32,
+        Precision::Sp,
         f32,
         16
     );
@@ -609,6 +660,7 @@ impl ShardedEngine {
         exec_batch_f64,
         kernel_for_f64,
         compensated_fold_f64,
+        Precision::Dp,
         f64,
         8
     );
@@ -707,6 +759,29 @@ mod tests {
         let scale: f64 = a.iter().zip(&b).map(|(x, y)| (x * y).abs()).sum::<f64>().max(1e-300);
         let got = sharded.dot_f64(Variant::Kahan, &a, &b);
         assert!((got - exact).abs() / scale < 1e-14);
+    }
+
+    /// Governance at the split layer: capping every shard to one worker
+    /// changes nothing but concurrency (bits identical to an open engine
+    /// of the same geometry) and the capped split dot is counted.
+    #[test]
+    fn governed_split_is_bit_identical_and_counted() {
+        let mut c = cfg(2, 64 << 10, 4);
+        c.engine.governance = false;
+        let mut governed = ShardedEngine::from_topology(&Topology::fake_even(2), c);
+        governed.set_worker_caps([[1, 1, 1], [1, 1, 1]]);
+        let open = ShardedEngine::from_topology(&Topology::fake_even(2), c);
+        let mut rng = Rng::new(59);
+        let n = 100_000; // 800 KB total >> 64 KB split threshold
+        let a = rng.normal_f32_vec(n);
+        let b = rng.normal_f32_vec(n);
+        let x = governed.dot_f32(Variant::Kahan, &a, &b);
+        let y = open.dot_f32(Variant::Kahan, &a, &b);
+        assert_eq!(x.to_bits(), y.to_bits(), "a worker cap must never change bits");
+        let (gs, os) = (governed.stats(), open.stats());
+        assert_eq!(gs.split_dots, 1, "{gs:?}");
+        assert_eq!(gs.capped_requests, 1, "{gs:?}");
+        assert_eq!(os.capped_requests, 0, "{os:?}");
     }
 
     #[test]

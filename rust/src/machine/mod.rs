@@ -10,7 +10,7 @@
 pub mod detect;
 pub mod presets;
 
-pub use presets::{all_presets, preset, PresetId};
+pub use presets::{all_presets, nearest_preset, preset, PresetId};
 
 /// Functional unit classes relevant to the dot kernels (paper Table 1 rows
 /// "Load/Store throughput", "ADD/MUL/FMA throughput").

@@ -198,6 +198,29 @@ pub fn all_presets() -> Vec<Machine> {
     vec![snb(), ivb(), hsw(), bdw()]
 }
 
+/// The Table-1 socket closest to `m`: smallest summed relative distance on
+/// clock, core count, and LLC size — the three figures every machine
+/// (including a partially detected host) reliably has. Used by the ECM
+/// governance bridge as the fallback model when host detection produces
+/// implausible numbers.
+pub fn nearest_preset(m: &Machine) -> PresetId {
+    let ids = [PresetId::Snb, PresetId::Ivb, PresetId::Hsw, PresetId::Bdw];
+    let rel = |a: f64, b: f64| ((a - b) / b.max(1e-9)).abs();
+    let mut best = PresetId::Hsw;
+    let mut best_d = f64::INFINITY;
+    for id in ids {
+        let p = preset(id);
+        let d = rel(m.clock_ghz, p.clock_ghz)
+            + rel(m.cores as f64, p.cores as f64)
+            + rel(m.llc_bytes() as f64, p.llc_bytes() as f64);
+        if d < best_d {
+            best_d = d;
+            best = id;
+        }
+    }
+    best
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -238,6 +261,23 @@ mod tests {
         assert_eq!(ivb().core.fma_ports, 0);
         assert_eq!(hsw().core.fma_ports, 2);
         assert_eq!(bdw().core.fma_ports, 2);
+    }
+
+    #[test]
+    fn nearest_preset_is_identity_on_the_presets_and_total_elsewhere() {
+        for (m, id) in [
+            (snb(), PresetId::Snb),
+            (ivb(), PresetId::Ivb),
+            (hsw(), PresetId::Hsw),
+            (bdw(), PresetId::Bdw),
+        ] {
+            assert_eq!(nearest_preset(&m), id, "{}", m.shorthand);
+        }
+        // a mangled host-like machine still maps to *some* preset
+        let mut odd = ivb();
+        odd.clock_ghz = 3.1;
+        odd.cores = 9;
+        let _ = nearest_preset(&odd);
     }
 
     #[test]

@@ -8,6 +8,7 @@
 use kahan_ecm::accuracy::exact::{exact_dot_f32, exact_dot_f64};
 use kahan_ecm::accuracy::gen_dot_f32;
 use kahan_ecm::bench::kernels::{by_name, scalar, KernelFn};
+use kahan_ecm::coordinator::{DotService, ServiceConfig};
 use kahan_ecm::engine::{
     parallel_dot_f32, parallel_dot_f64, BufferPool, DotEngine, EngineConfig, ShardedConfig,
     ShardedEngine, Topology, WorkerPool,
@@ -292,4 +293,102 @@ fn engine_kahan_beats_naive_on_ill_conditioned_input() {
         ek * 10.0 < en.max(1e-30) || en <= bound,
         "kahan ({ek:e}) should beat naive ({en:e}) at cond {cond:e}"
     );
+}
+
+/// `sharded_cfg` with the host's ECM governance switched off, so the
+/// governance tests below control caps explicitly via `set_worker_caps`
+/// instead of inheriting whatever the CI host's detected bandwidth says.
+fn ungoverned_cfg(threads: usize, split_min_bytes: usize, chunks: usize) -> ShardedConfig {
+    ShardedConfig {
+        engine: EngineConfig { threads, governance: false, ..EngineConfig::default() },
+        split_min_bytes,
+        chunks,
+    }
+}
+
+/// ECM governance end-to-end (PR 6): capping fan-out changes concurrency
+/// only, never bits. The same Ogita–Rump–Oishi ill-conditioned request
+/// returns bit-identical results through a governed and an ungoverned
+/// stack at all three layers — engine facade (Parallel route), sharded
+/// cross-shard split, and the serving tier — while `capped_requests`
+/// attributes exactly the governed executions and nothing else.
+#[test]
+fn governance_bit_identity_across_engine_split_and_service_layers() {
+    let tight = [[1usize; 3]; 2]; // every class capped to one worker
+    let mut rng = kahan_ecm::util::Rng::new(0x6006);
+
+    // --- engine facade: Parallel route (1.2 MB > cutoff) ---
+    let open = DotEngine::new(EngineConfig {
+        threads: 2,
+        governance: false,
+        ..EngineConfig::default()
+    });
+    let mut governed = DotEngine::new(EngineConfig {
+        threads: 2,
+        governance: false,
+        ..EngineConfig::default()
+    });
+    governed.set_worker_caps(tight);
+    for target_cond in [1e4, 1e6, 1e8] {
+        let (a, b, _, _) = gen_dot_f32(150_000, target_cond, &mut rng);
+        let ov = open.dot_f32(Variant::Kahan, &a, &b);
+        let gv = governed.dot_f32(Variant::Kahan, &a, &b);
+        assert_eq!(ov.to_bits(), gv.to_bits(), "engine layer, cond ~{target_cond:e}");
+    }
+    let (os, gs) = (open.stats(), governed.stats());
+    assert_eq!(os.capped_requests, 0, "ungoverned engine must never count caps");
+    assert_eq!(gs.capped_requests, 3, "every parallel dot ran below 2 workers: {gs:?}");
+    assert_eq!(gs.parallel, os.parallel, "capping must not change routing");
+    assert_eq!(gs.requests, os.requests);
+
+    // --- sharded split: fixed chunk geometry, capped worker subsets ---
+    let open_sh =
+        ShardedEngine::from_topology(&Topology::fake_even(2), ungoverned_cfg(2, 64 << 10, 4));
+    let mut gov_sh =
+        ShardedEngine::from_topology(&Topology::fake_even(2), ungoverned_cfg(2, 64 << 10, 4));
+    gov_sh.set_worker_caps(tight);
+    for target_cond in [1e4, 1e6, 1e8] {
+        let (a, b, _, _) = gen_dot_f32(100_000, target_cond, &mut rng);
+        let ov = open_sh.dot_f32(Variant::Kahan, &a, &b);
+        let gv = gov_sh.dot_f32(Variant::Kahan, &a, &b);
+        assert_eq!(ov.to_bits(), gv.to_bits(), "split layer, cond ~{target_cond:e}");
+    }
+    let (oss, gss) = (open_sh.stats(), gov_sh.stats());
+    assert_eq!(oss.capped_requests, 0, "ungoverned split must never count caps");
+    assert_eq!(gss.capped_requests, 3, "every split dot was capped: {gss:?}");
+    assert_eq!(gss.split_dots, oss.split_dots, "capping must not change the split decision");
+
+    // --- serving tier: ecm_governance knob end-to-end ---
+    let open_eng: &'static ShardedEngine = Box::leak(Box::new(ShardedEngine::from_topology(
+        &Topology::fake_even(2),
+        ungoverned_cfg(2, 1 << 30, 0),
+    )));
+    let gov_eng: &'static mut ShardedEngine = Box::leak(Box::new(ShardedEngine::from_topology(
+        &Topology::fake_even(2),
+        ungoverned_cfg(2, 1 << 30, 0),
+    )));
+    gov_eng.set_worker_caps(tight);
+    let gov_eng: &'static ShardedEngine = gov_eng;
+    let (osvc, ocl) = DotService::try_start_on(
+        ServiceConfig { ecm_governance: "off".into(), ..ServiceConfig::default() },
+        open_eng,
+    )
+    .expect("open service");
+    let (gsvc, gcl) = DotService::try_start_on(
+        ServiceConfig { ecm_governance: "on".into(), ..ServiceConfig::default() },
+        gov_eng,
+    )
+    .expect("governed service");
+    let (a, b, _, _) = gen_dot_f32(150_000, 1e6, &mut rng);
+    let (oha, ohb) = ocl.admit_pair_blocking(a.clone(), b.clone()).expect("open admit");
+    let (gha, ghb) = gcl.admit_pair_blocking(a, b).expect("governed admit");
+    for round in 0..2 {
+        let ov = ocl.dot_pooled_blocking("kahan", oha, ohb).expect("open dot");
+        let gv = gcl.dot_pooled_blocking("kahan", gha, ghb).expect("governed dot");
+        assert_eq!(ov.to_bits(), gv.to_bits(), "service layer, round {round}");
+    }
+    let (ost, gst) = (osvc.stop(), gsvc.stop());
+    assert_eq!(ost.capped_requests, 0, "ecm_governance=off must serve uncapped: {ost:?}");
+    assert_eq!(gst.capped_requests, 2, "both pooled dots must be capped: {gst:?}");
+    assert_eq!(gst.pooled_calls, ost.pooled_calls);
 }

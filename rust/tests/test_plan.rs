@@ -257,3 +257,65 @@ fn batch_partition_agrees_with_planner_and_serial_bits() {
     );
     assert_eq!(after.requests, before.requests + sizes.len() as u64);
 }
+
+/// ECM governance (PR 6) at the planning layer: the host verdict's caps
+/// are monotone non-increasing with size class (paper §2: a larger
+/// working set can only lower the predicted saturation point, never raise
+/// it), a cap binds on a shard exactly when it is strictly below that
+/// shard's realized worker count, and `with_governance`/`ungoverned`
+/// round-trip the caps without touching any routing threshold.
+#[test]
+fn governance_caps_monotone_and_clamped_to_shard_workers() {
+    let verdict = kahan_ecm::ecm::governance::host_verdict();
+    let caps = verdict.worker_caps();
+    for (pi, row) in caps.iter().enumerate() {
+        assert!(
+            row[0] >= row[1] && row[1] >= row[2],
+            "caps must be non-increasing L1 -> LLC -> MEM (prec {pi}: {row:?})"
+        );
+        for &c in row {
+            assert!(c >= 1, "a cap of zero workers is never valid");
+        }
+    }
+
+    let workers = vec![1usize, 2, 8];
+    let open = policy(64 << 10, 1 << 20, workers.clone());
+    let governed = open.clone().with_governance(caps);
+    for prec in [Precision::Sp, Precision::Dp] {
+        for class in SizeClass::ALL {
+            // ungoverned: no cap ever binds, on any shard
+            for shard in 0..workers.len() {
+                assert!(!open.governed(shard, prec, class), "default policy must be open");
+                // binding is exactly "cap strictly below the shard's
+                // realized worker count" — the execution-side clamp
+                assert_eq!(
+                    governed.governed(shard, prec, class),
+                    governed.worker_cap(prec, class) < workers[shard],
+                    "shard {shard} {prec:?} {}",
+                    class.name()
+                );
+                // the effective fan-out after the clamp never exceeds the
+                // shard's workers and never drops below one
+                let eff = governed.worker_cap(prec, class).min(workers[shard]).max(1);
+                assert!((1..=workers[shard]).contains(&eff));
+            }
+        }
+    }
+
+    // round-trip: governance only touches worker_caps
+    let reopened = governed.clone().ungoverned();
+    assert_eq!(reopened.worker_caps, open.worker_caps);
+    assert_eq!(reopened.parallel_cutoff_bytes, governed.parallel_cutoff_bytes);
+    assert_eq!(reopened.split_min_bytes, governed.split_min_bytes);
+    assert_eq!(reopened.shard_workers, governed.shard_workers);
+    // and routing is untouched by caps: same plan with and without
+    for total in [1u64, 100 << 10, 900 << 10, 2 << 20] {
+        for shard in 0..workers.len() {
+            let g = governed.plan_dot(shard, total);
+            let o = open.plan_dot(shard, total);
+            assert_eq!(g.route, o.route, "governance must never change routing");
+            assert_eq!(g.shard, o.shard);
+            assert_eq!(g.class, o.class);
+        }
+    }
+}
