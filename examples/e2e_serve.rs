@@ -15,7 +15,7 @@
 //!   shards in parallel;
 //! * `--pjrt` switches to the original PJRT batching path (requires AOT
 //!   artifacts and the `pjrt` cargo feature);
-//! * requests arrive in bursts with mixed sizes and variants; every
+//! * requests arrive in bursts with mixed sizes and accuracy tiers; every
 //!   response is checked against the exact dot, and the run reports
 //!   throughput, latency percentiles, accuracy, and router-lane balance.
 //!
@@ -27,7 +27,9 @@ use kahan_ecm::util::{stats, Rng};
 use std::time::Instant;
 
 /// One client thread's share of the workload: bursts of mixed-size,
-/// mixed-variant requests. Returns (latencies_us, batch_sizes, max_rel_err).
+/// mixed-accuracy-tier requests (kahan-heavy with dot2 and naive
+/// sprinkled in, like a real mixed-SLA stream). Returns
+/// (latencies_us, batch_sizes, max_rel_err).
 fn run_client(
     client: &DotClient,
     thread_id: u64,
@@ -47,7 +49,11 @@ fn run_client(
         let mut inflight = Vec::new();
         for _ in 0..burst.min(requests - served) {
             let n = sizes[rng.below(sizes.len() as u64) as usize];
-            let variant = if rng.uniform() < 0.8 { "kahan" } else { "naive" };
+            let accuracy = match rng.below(10) {
+                0..=6 => "kahan",
+                7..=8 => "dot2",
+                _ => "naive",
+            };
             let a = rng.normal_f32_vec(n);
             let b = rng.normal_f32_vec(n);
             let exact = exact_dot_f32(&a, &b);
@@ -57,7 +63,7 @@ fn run_client(
                 .map(|(x, y)| (x * y).abs() as f64)
                 .sum::<f64>()
                 .max(1e-30);
-            inflight.push((client.submit(id, variant, a, b), exact, scale));
+            inflight.push((client.submit(id, accuracy, a, b), exact, scale));
             id += 1;
         }
         for (rx, exact, scale) in inflight {

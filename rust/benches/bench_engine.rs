@@ -21,7 +21,7 @@ use kahan_ecm::engine::{
     BufferPool, DotEngine, EngineConfig, ShardedConfig, ShardedEngine, SizeClass, Topology,
     WorkerPool,
 };
-use kahan_ecm::isa::{Precision, Variant};
+use kahan_ecm::isa::{Accuracy, Precision};
 use kahan_ecm::machine::detect::detect_host_cached;
 use kahan_ecm::util::{stats, Rng, Table};
 use std::sync::Arc;
@@ -183,21 +183,21 @@ fn main() {
         let class = SizeClass::of(2 * n as u64 * 4);
         let a = rng.normal_f32_vec(n);
         let b = rng.normal_f32_vec(n);
-        let f = match table.select(Precision::Sp, Variant::Kahan, class).f {
+        let f = match table.select(Precision::Sp, Accuracy::Kahan, class).f {
             KernelFn::F32(f) => f,
             KernelFn::F64(_) => unreachable!(),
         };
 
         // warm-up both paths (page in sources, fill the pool, calibrate)
-        std::hint::black_box(engine.dot_f32(Variant::Kahan, &a, &b));
+        std::hint::black_box(engine.dot_f32(Accuracy::Kahan, &a, &b));
         std::hint::black_box(spawn_per_call_dot(threads, f, &a, &b));
 
         let spawn_us = median_us(reps, || spawn_per_call_dot(threads, f, &a, &b));
-        let engine_us = median_us(reps, || engine.dot_f32(Variant::Kahan, &a, &b));
+        let engine_us = median_us(reps, || engine.dot_f32(Accuracy::Kahan, &a, &b));
         let pa = engine.admit_f32(&a);
         let pb = engine.admit_f32(&b);
         let engine_pooled_us =
-            median_us(reps, || engine.dot_pooled_f32(Variant::Kahan, &pa, &pb));
+            median_us(reps, || engine.dot_pooled_f32(Accuracy::Kahan, &pa, &pb));
 
         rows.push(Row {
             label,
@@ -244,6 +244,57 @@ fn main() {
         es.requests, es.parallel, es.pool.hits, es.pool.misses
     );
 
+    // --- Accuracy ladder: what does each tier cost vs naive, per class? ---
+    //
+    // The paper's headline question, asked of the serving stack's own
+    // calibrated winners: single-worker kernel throughput for each
+    // accuracy tier at an L1-, LLC- and MEM-class working set. At MEM the
+    // dot is bandwidth-bound, so Kahan — and, with FMA-based TwoProd,
+    // Dot2 — is expected to be ~free; in L1 the extra arithmetic shows
+    // its real cost.
+    println!("\n=== accuracy ladder: per-class throughput vs naive ===");
+    let l1_ws = m.caches[0].size_bytes / 2;
+    let ladder_sets: [(&'static str, u64); 3] = [("l1", l1_ws), ("llc", llc / 2), ("mem", mem_ws)];
+    const LADDER: [Accuracy; 3] = [Accuracy::Naive, Accuracy::Kahan, Accuracy::Dot2];
+    // (json suffix, class, tier throughput / naive throughput, winner names)
+    let mut ladder: Vec<(&'static str, SizeClass, [f64; 3], [&'static str; 3])> = Vec::new();
+    for (suffix, ws) in ladder_sets {
+        let n = (ws / 8).max(1024) as usize;
+        let class = SizeClass::of(2 * n as u64 * 4);
+        let a = rng.normal_f32_vec(n);
+        let b = rng.normal_f32_vec(n);
+        let mut us = [0.0f64; 3];
+        let mut names = [""; 3];
+        for (t, &acc) in LADDER.iter().enumerate() {
+            let k = table.select(Precision::Sp, acc, class);
+            names[t] = k.name;
+            let f = match k.f {
+                KernelFn::F32(f) => f,
+                KernelFn::F64(_) => unreachable!(),
+            };
+            std::hint::black_box(f(&a, &b));
+            us[t] = median_us(reps, || f(&a, &b));
+        }
+        let ratios = [1.0, us[0] / us[1], us[0] / us[2]];
+        println!(
+            "  {suffix} ({}, n = {n}): kahan {:.2}x of naive ({}), dot2 {:.2}x of naive ({})",
+            class.name(),
+            ratios[1],
+            names[1],
+            ratios[2],
+            names[2]
+        );
+        ladder.push((suffix, class, ratios, names));
+    }
+    let dot2_mem_ratio = ladder.last().expect("mem ladder row").2[2];
+    let dot2_mem_free = dot2_mem_ratio >= 0.9;
+    if !dot2_mem_free {
+        eprintln!(
+            "WARNING: MEM-class dot2 throughput is {dot2_mem_ratio:.2}x of naive (< 0.9x) \
+             — recorded in {json_path}"
+        );
+    }
+
     // --- ECM governance: predicted vs observed saturation ---
     //
     // The governance layer caps fan-out at the ECM-predicted saturation
@@ -259,8 +310,8 @@ fn main() {
     let gov_pool = WorkerPool::new(threads);
     let bufs = BufferPool::new();
     let sat_reps = if smoke { 3 } else { 7 };
-    // (json field suffix, precision index, predicted, observed)
-    let mut sat_results: Vec<(&'static str, usize, u32, u32)> = Vec::new();
+    // (json field suffix, precision index, size class, predicted, observed)
+    let mut sat_results: Vec<(&'static str, usize, SizeClass, u32, u32)> = Vec::new();
     macro_rules! sat_sweep {
         ($pi:expr, $genvec:ident, $capped:ident, $kernel_for:ident, $elem:expr, $wrap:expr, $sets:expr) => {
             for (suffix, n) in $sets {
@@ -271,7 +322,7 @@ fn main() {
                 let b = Arc::new(bufs.admit(&bv));
                 let total = 2 * n as u64 * $elem;
                 let class = SizeClass::of(total);
-                let f = $kernel_for(Variant::Kahan, total);
+                let f = $kernel_for(Accuracy::Kahan, total);
                 let wrap = $wrap;
                 let mut times = Vec::with_capacity(threads);
                 for k in 1..=threads {
@@ -288,7 +339,7 @@ fn main() {
                     class.name(),
                     if pred == 0 { "no ceiling".to_string() } else { format!("{pred} core(s)") },
                 );
-                sat_results.push((suffix, $pi, pred, obs));
+                sat_results.push((suffix, $pi, class, pred, obs));
             }
         };
     }
@@ -353,10 +404,10 @@ fn main() {
     // correction factor (rel error beyond 25% stores observed/predicted).
     // This runs AFTER the service comparison so the correction cannot
     // retroactively open the governed scenario's explicit caps.
-    for &(_, pi, pred, obs) in &sat_results {
+    for &(_, pi, class, pred, obs) in &sat_results {
         if pred > 0 {
             let prec = if pi == 0 { Precision::Sp } else { Precision::Dp };
-            table.note_saturation(prec, pred, obs, 0.25);
+            table.note_saturation(prec, class, pred, obs, 0.25);
         }
     }
 
@@ -388,7 +439,7 @@ fn main() {
         "  \"memory_speedup_pooled\": {},\n",
         json_escape_free(memory_speedup_pooled)
     ));
-    for &(suffix, _, pred, obs) in &sat_results {
+    for &(suffix, _, _, pred, obs) in &sat_results {
         json.push_str(&format!("  \"ecm_pred_sat_{suffix}\": {pred},\n"));
         json.push_str(&format!("  \"ecm_obs_sat_{suffix}\": {obs},\n"));
     }
@@ -398,6 +449,20 @@ fn main() {
         "  \"svc_capped_requests_ungoverned\": {svc_capped_ungoverned},\n"
     ));
     json.push_str(&format!("  \"svc_capped_requests_governed\": {svc_capped_governed},\n"));
+    for (suffix, _, ratios, names) in &ladder {
+        json.push_str(&format!(
+            "  \"kahan_vs_naive_{suffix}\": {},\n",
+            json_escape_free(ratios[1])
+        ));
+        json.push_str(&format!(
+            "  \"dot2_vs_naive_{suffix}\": {},\n",
+            json_escape_free(ratios[2])
+        ));
+        json.push_str(&format!("  \"winner_naive_{suffix}\": \"{}\",\n", names[0]));
+        json.push_str(&format!("  \"winner_kahan_{suffix}\": \"{}\",\n", names[1]));
+        json.push_str(&format!("  \"winner_dot2_{suffix}\": \"{}\",\n", names[2]));
+    }
+    json.push_str(&format!("  \"dot2_mem_free\": {dot2_mem_free},\n"));
     json.push_str(&format!("  \"meets_2x\": {}\n", memory_speedup >= 2.0));
     json.push_str("}\n");
     std::fs::write(&json_path, &json).expect("write BENCH_engine.json");

@@ -85,6 +85,30 @@ pub fn kahan_fma_f64(a: &[f64], b: &[f64]) -> f64 {
     }
 }
 
+pub fn dot2_f32(a: &[f32], b: &[f32]) -> f32 {
+    if is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma") {
+        if both_aligned(a, b, YMM_ALIGN) {
+            unsafe { dot2_f32_al(a, b) }
+        } else {
+            unsafe { dot2_f32_impl(a, b) }
+        }
+    } else {
+        super::scalar::dot2_unrolled_f32(a, b)
+    }
+}
+
+pub fn dot2_f64(a: &[f64], b: &[f64]) -> f64 {
+    if is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma") {
+        if both_aligned(a, b, YMM_ALIGN) {
+            unsafe { dot2_f64_al(a, b) }
+        } else {
+            unsafe { dot2_f64_impl(a, b) }
+        }
+    } else {
+        super::scalar::dot2_unrolled_f64(a, b)
+    }
+}
+
 /// Four-slot naive body; `$load` selects `loadu` vs aligned `load`.
 macro_rules! naive_avx_body {
     ($a:ident, $b:ident, $elem:ty, $lanes:expr, $load:ident, $mul:ident, $add:ident,
@@ -351,6 +375,97 @@ unsafe fn kahan_fma_f64_al(a: &[f64], b: &[f64]) -> f64 {
     )
 }
 
+/// Ogita–Rump–Oishi Dot2 body: per slot, TwoProd via FMA (`ep = x*y - p`
+/// rounds the product error exactly) then a branch-free 2Sum of the product
+/// into the slot's lane sums, with BOTH error terms accumulated in a
+/// per-lane correction register — the per-lane sum/compensation structure
+/// of `kahan_fma_avx_body!`, one accuracy rung up. Four slots: the 2Sum
+/// chain is 6 ops deep, so four independent chains cover the ADD latency
+/// within the register budget (4×2 accumulators + 5 temporaries).
+macro_rules! dot2_avx_body {
+    ($a:ident, $b:ident, $elem:ty, $lanes:expr, $load:ident, $mul:ident, $fmsub:ident,
+     $sub:ident, $add:ident, $zero:ident, $store:ident, $fold:ident) => {{
+        use core::arch::x86_64::*;
+        let n = $a.len().min($b.len());
+        let mut s = [$zero(); 4];
+        let mut c = [$zero(); 4];
+        let mut i = 0usize;
+        while i + 4 * $lanes <= n {
+            for k in 0..4 {
+                let x = $load($a.as_ptr().add(i + k * $lanes));
+                let yv = $load($b.as_ptr().add(i + k * $lanes));
+                // TwoProd: p = fl(x*y), ep = x*y - p exactly (one FMA)
+                let p = $mul(x, yv);
+                let ep = $fmsub(x, yv, p);
+                // branch-free 2Sum of p into the slot sum (Knuth)
+                let t = $add(s[k], p);
+                let bb = $sub(t, s[k]);
+                let es = $add($sub(s[k], $sub(t, bb)), $sub(p, bb));
+                s[k] = t;
+                c[k] = $add(c[k], $add(ep, es));
+            }
+            i += 4 * $lanes;
+        }
+        let mut sums = [0.0 as $elem; 4 * $lanes];
+        let mut comps = [0.0 as $elem; 4 * $lanes];
+        for k in 0..4 {
+            $store(sums.as_mut_ptr().add(k * $lanes), s[k]);
+            $store(comps.as_mut_ptr().add(k * $lanes), c[k]);
+        }
+        // Dot2 corrections are additive; the compensated fold subtracts
+        // its comps argument, so they go in negated
+        for v in comps.iter_mut() {
+            *v = -*v;
+        }
+        // Dot2 scalar tail
+        let mut st = 0.0 as $elem;
+        let mut ct = 0.0 as $elem;
+        while i < n {
+            let p = $a[i] * $b[i];
+            let ep = $a[i].mul_add($b[i], -p);
+            let t = st + p;
+            let bb = t - st;
+            let es = (st - (t - bb)) + (p - bb);
+            st = t;
+            ct += ep + es;
+        }
+        let head = $fold(&sums, &comps);
+        $fold(&[head, st], &[0.0 as $elem, -ct])
+    }};
+}
+
+#[target_feature(enable = "avx2", enable = "fma")]
+unsafe fn dot2_f32_impl(a: &[f32], b: &[f32]) -> f32 {
+    dot2_avx_body!(
+        a, b, f32, 8, _mm256_loadu_ps, _mm256_mul_ps, _mm256_fmsub_ps, _mm256_sub_ps,
+        _mm256_add_ps, _mm256_setzero_ps, _mm256_storeu_ps, compensated_fold_f32
+    )
+}
+
+#[target_feature(enable = "avx2", enable = "fma")]
+unsafe fn dot2_f32_al(a: &[f32], b: &[f32]) -> f32 {
+    dot2_avx_body!(
+        a, b, f32, 8, _mm256_load_ps, _mm256_mul_ps, _mm256_fmsub_ps, _mm256_sub_ps,
+        _mm256_add_ps, _mm256_setzero_ps, _mm256_storeu_ps, compensated_fold_f32
+    )
+}
+
+#[target_feature(enable = "avx2", enable = "fma")]
+unsafe fn dot2_f64_impl(a: &[f64], b: &[f64]) -> f64 {
+    dot2_avx_body!(
+        a, b, f64, 4, _mm256_loadu_pd, _mm256_mul_pd, _mm256_fmsub_pd, _mm256_sub_pd,
+        _mm256_add_pd, _mm256_setzero_pd, _mm256_storeu_pd, compensated_fold_f64
+    )
+}
+
+#[target_feature(enable = "avx2", enable = "fma")]
+unsafe fn dot2_f64_al(a: &[f64], b: &[f64]) -> f64 {
+    dot2_avx_body!(
+        a, b, f64, 4, _mm256_load_pd, _mm256_mul_pd, _mm256_fmsub_pd, _mm256_sub_pd,
+        _mm256_add_pd, _mm256_setzero_pd, _mm256_storeu_pd, compensated_fold_f64
+    )
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -362,11 +477,13 @@ mod tests {
         assert_eq!(naive_f32(&a, &b), 5050.0);
         assert_eq!(kahan_f32(&a, &b), 5050.0);
         assert_eq!(kahan_fma_f32(&a, &b), 5050.0);
+        assert_eq!(dot2_f32(&a, &b), 5050.0);
         let a: Vec<f64> = (1..=100).map(|i| i as f64).collect();
         let b = vec![1.0f64; 100];
         assert_eq!(naive_f64(&a, &b), 5050.0);
         assert_eq!(kahan_f64(&a, &b), 5050.0);
         assert_eq!(kahan_fma_f64(&a, &b), 5050.0);
+        assert_eq!(dot2_f64(&a, &b), 5050.0);
     }
 
     #[test]
@@ -376,7 +493,19 @@ mod tests {
             let b = vec![3.0f32; n];
             assert_eq!(kahan_f32(&a, &b), (6 * n) as f32, "n={n}");
             assert_eq!(kahan_fma_f32(&a, &b), (6 * n) as f32, "n={n}");
+            assert_eq!(dot2_f32(&a, &b), (6 * n) as f32, "n={n}");
         }
+    }
+
+    /// Dot2's signature property holds for the SIMD kernel too: full
+    /// accuracy at condition numbers where Kahan degrades.
+    #[test]
+    fn dot2_avx2_survives_high_condition() {
+        let mut rng = crate::util::Rng::new(23);
+        let (a, b, exact, cond) = crate::accuracy::gen_dot_f32(4096, 1e6, &mut rng);
+        assert!(cond > 1e4);
+        let rel = ((dot2_f32(&a, &b) as f64 - exact) / exact.abs().max(1e-30)).abs();
+        assert!(rel < 1e-6, "dot2-AVX2 err {rel:e} at cond {cond:.3e}");
     }
 
     /// The 64-byte-aligned (pooled) path must be bit-identical to the
@@ -396,6 +525,7 @@ mod tests {
             (naive_f32 as fn(&[f32], &[f32]) -> f32, "naive"),
             (kahan_f32, "kahan"),
             (kahan_fma_f32, "kahan-fma"),
+            (dot2_f32, "dot2"),
         ] {
             let pooled = f(a.as_slice(), b.as_slice());
             let plain = f(mis.as_slice(), mis.as_slice());
@@ -409,6 +539,7 @@ mod tests {
             (naive_f64 as fn(&[f64], &[f64]) -> f64, "naive"),
             (kahan_f64, "kahan"),
             (kahan_fma_f64, "kahan-fma"),
+            (dot2_f64, "dot2"),
         ] {
             let pooled = f(ad.as_slice(), bd.as_slice());
             let plain = f(misd.as_slice(), misd.as_slice());

@@ -72,6 +72,28 @@ avx512_wrappers!(
     super::avx2::naive_f64, super::avx2::kahan_f64, super::avx2::kahan_fma_f64
 );
 
+/// Dot2 wrapper: AVX-512F includes the FMA forms, so availability is the
+/// same single feature bit as the other zmm kernels; the fallback is the
+/// AVX2 Dot2 (which itself falls back to the unrolled scalar Dot2).
+macro_rules! avx512_dot2_wrapper {
+    ($name:ident, $ty:ty, $u:ident, $al:ident, $fb:path) => {
+        pub fn $name(a: &[$ty], b: &[$ty]) -> $ty {
+            if is_x86_feature_detected!("avx512f") {
+                if both_aligned(a, b, ZMM_ALIGN) {
+                    unsafe { $al(a, b) }
+                } else {
+                    unsafe { $u(a, b) }
+                }
+            } else {
+                $fb(a, b)
+            }
+        }
+    };
+}
+
+avx512_dot2_wrapper!(dot2_f32, f32, dot2_f32_impl, dot2_f32_al, super::avx2::dot2_f32);
+avx512_dot2_wrapper!(dot2_f64, f64, dot2_f64_impl, dot2_f64_al, super::avx2::dot2_f64);
+
 /// Two-slot naive body (one zmm pair per slot, 2·L elements per pass),
 /// horizontal reduce, scalar tail.
 macro_rules! naive_avx512_body {
@@ -191,6 +213,57 @@ macro_rules! kahan_fma_avx512_body {
     }};
 }
 
+/// Two-slot Ogita–Rump–Oishi Dot2 body (zmm edition of
+/// `avx2::dot2_avx_body!`): TwoProd via `vfmsub` + branch-free 2Sum per
+/// slot, per-lane correction registers, Dot2 scalar tail, negated-
+/// correction compensated fold (the fold subtracts; Dot2 corrections add).
+macro_rules! dot2_avx512_body {
+    ($a:ident, $b:ident, $elem:ty, $lanes:expr, $load:ident, $mul:ident, $fmsub:ident,
+     $sub:ident, $add:ident, $zero:ident, $store:ident, $fold:ident) => {{
+        use core::arch::x86_64::*;
+        let n = $a.len().min($b.len());
+        let mut s = [$zero(); 2];
+        let mut c = [$zero(); 2];
+        let mut i = 0usize;
+        while i + 2 * $lanes <= n {
+            for k in 0..2 {
+                let x = $load($a.as_ptr().add(i + k * $lanes));
+                let yv = $load($b.as_ptr().add(i + k * $lanes));
+                let p = $mul(x, yv);
+                let ep = $fmsub(x, yv, p);
+                let t = $add(s[k], p);
+                let bb = $sub(t, s[k]);
+                let es = $add($sub(s[k], $sub(t, bb)), $sub(p, bb));
+                s[k] = t;
+                c[k] = $add(c[k], $add(ep, es));
+            }
+            i += 2 * $lanes;
+        }
+        let mut sums = [0.0 as $elem; 2 * $lanes];
+        let mut comps = [0.0 as $elem; 2 * $lanes];
+        for k in 0..2 {
+            $store(sums.as_mut_ptr().add(k * $lanes), s[k]);
+            $store(comps.as_mut_ptr().add(k * $lanes), c[k]);
+        }
+        for v in comps.iter_mut() {
+            *v = -*v;
+        }
+        let mut st = 0.0 as $elem;
+        let mut ct = 0.0 as $elem;
+        while i < n {
+            let p = $a[i] * $b[i];
+            let ep = $a[i].mul_add($b[i], -p);
+            let t = st + p;
+            let bb = t - st;
+            let es = (st - (t - bb)) + (p - bb);
+            st = t;
+            ct += ep + es;
+        }
+        let head = $fold(&sums, &comps);
+        $fold(&[head, st], &[0.0 as $elem, -ct])
+    }};
+}
+
 /// Instantiate the `loadu` and aligned-`load` flavors of one body macro
 /// (`$lanes` = zmm lane count for the element type: 16 f32 / 8 f64).
 macro_rules! avx512_impl_pair {
@@ -242,6 +315,18 @@ avx512_impl_pair!(
     _mm512_fmadd_pd, _mm512_fmsub_pd, _mm512_sub_pd, _mm512_set1_pd, _mm512_setzero_pd,
     _mm512_storeu_pd, compensated_fold_f64
 );
+avx512_impl_pair!(
+    dot2_avx512_body, dot2_f32_impl, dot2_f32_al, f32, 16,
+    _mm512_loadu_ps, _mm512_load_ps,
+    _mm512_mul_ps, _mm512_fmsub_ps, _mm512_sub_ps, _mm512_add_ps, _mm512_setzero_ps,
+    _mm512_storeu_ps, compensated_fold_f32
+);
+avx512_impl_pair!(
+    dot2_avx512_body, dot2_f64_impl, dot2_f64_al, f64, 8,
+    _mm512_loadu_pd, _mm512_load_pd,
+    _mm512_mul_pd, _mm512_fmsub_pd, _mm512_sub_pd, _mm512_add_pd, _mm512_setzero_pd,
+    _mm512_storeu_pd, compensated_fold_f64
+);
 
 #[cfg(test)]
 mod tests {
@@ -255,11 +340,13 @@ mod tests {
         assert_eq!(naive_f32(&a, &b), 20100.0);
         assert_eq!(kahan_f32(&a, &b), 20100.0);
         assert_eq!(kahan_fma_f32(&a, &b), 20100.0);
+        assert_eq!(dot2_f32(&a, &b), 20100.0);
         let a: Vec<f64> = (1..=200).map(|i| i as f64).collect();
         let b = vec![1.0f64; 200];
         assert_eq!(naive_f64(&a, &b), 20100.0);
         assert_eq!(kahan_f64(&a, &b), 20100.0);
         assert_eq!(kahan_fma_f64(&a, &b), 20100.0);
+        assert_eq!(dot2_f64(&a, &b), 20100.0);
     }
 
     #[test]
@@ -269,6 +356,7 @@ mod tests {
             let b = vec![2.0f32; n];
             assert_eq!(kahan_f32(&a, &b), 3.0 * n as f32, "n={n}");
             assert_eq!(kahan_fma_f32(&a, &b), 3.0 * n as f32, "n={n}");
+            assert_eq!(dot2_f32(&a, &b), 3.0 * n as f32, "n={n}");
             let a = vec![1.5f64; n];
             let b = vec![2.0f64; n];
             assert_eq!(kahan_f64(&a, &b), 3.0 * n as f64, "n={n}");
@@ -295,6 +383,7 @@ mod tests {
             (naive_f32 as fn(&[f32], &[f32]) -> f32, "naive"),
             (kahan_f32, "kahan"),
             (kahan_fma_f32, "kahan-fma"),
+            (dot2_f32, "dot2"),
         ] {
             let via_aligned = f(a.as_slice(), b.as_slice());
             let via_loadu = f(mis.as_slice(), mis.as_slice());

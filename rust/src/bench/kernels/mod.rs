@@ -16,7 +16,7 @@ pub mod batch;
 pub mod scalar;
 pub mod sse;
 
-use crate::isa::{Precision, Simd, Variant};
+use crate::isa::{Accuracy, Precision, Simd, Variant};
 
 /// True when both slice heads sit on an `align`-byte boundary — the pooled
 /// fast path (`engine::BufferPool` guarantees 64-byte block starts, and
@@ -35,9 +35,15 @@ pub enum KernelFn {
 }
 
 /// Registry entry: one benchmarkable host kernel.
+///
+/// Lookups on the request path are keyed by `(accuracy, prec)`; `variant`
+/// survives as ISA-flavor metadata (the paper's naive / Kahan / Kahan-FMA
+/// instruction-mix taxonomy, consumed by the model/simulator side).
 #[derive(Clone, Copy)]
 pub struct HostKernel {
     pub name: &'static str,
+    /// algorithm class of the result — the request-facing axis
+    pub accuracy: Accuracy,
     pub variant: Variant,
     pub simd: Simd,
     pub prec: Precision,
@@ -118,27 +124,37 @@ fn detect_registry() -> Vec<HostKernel> {
 
     vec![
         // --- f32 ---
-        HostKernel { name: "naive-scalar-SP", variant: Variant::Naive, simd: Simd::Scalar, prec: Precision::Sp, available: true, f: KernelFn::F32(scalar::naive_f32) },
-        HostKernel { name: "naive-AVX2-SP", variant: Variant::Naive, simd: Simd::Avx, prec: Precision::Sp, available: avx2, f: KernelFn::F32(avx2::naive_f32) },
-        HostKernel { name: "kahan-compiler-SP", variant: Variant::Kahan, simd: Simd::Scalar, prec: Precision::Sp, available: true, f: KernelFn::F32(scalar::kahan_seq_f32) },
-        HostKernel { name: "kahan-scalar-SP", variant: Variant::Kahan, simd: Simd::Scalar, prec: Precision::Sp, available: true, f: KernelFn::F32(scalar::kahan_unrolled_f32) },
-        HostKernel { name: "kahan-SSE-SP", variant: Variant::Kahan, simd: Simd::Sse, prec: Precision::Sp, available: sse, f: KernelFn::F32(sse::kahan_f32) },
-        HostKernel { name: "kahan-AVX2-SP", variant: Variant::Kahan, simd: Simd::Avx, prec: Precision::Sp, available: avx2, f: KernelFn::F32(avx2::kahan_f32) },
-        HostKernel { name: "kahan-fma-AVX2-SP", variant: Variant::KahanFma, simd: Simd::Avx, prec: Precision::Sp, available: fma, f: KernelFn::F32(avx2::kahan_fma_f32) },
-        HostKernel { name: "naive-AVX512-SP", variant: Variant::Naive, simd: Simd::Avx512, prec: Precision::Sp, available: avx512, f: KernelFn::F32(avx512::naive_f32) },
-        HostKernel { name: "kahan-AVX512-SP", variant: Variant::Kahan, simd: Simd::Avx512, prec: Precision::Sp, available: avx512, f: KernelFn::F32(avx512::kahan_f32) },
-        HostKernel { name: "kahan-fma-AVX512-SP", variant: Variant::KahanFma, simd: Simd::Avx512, prec: Precision::Sp, available: avx512, f: KernelFn::F32(avx512::kahan_fma_f32) },
+        HostKernel { name: "naive-scalar-SP", accuracy: Accuracy::Naive, variant: Variant::Naive, simd: Simd::Scalar, prec: Precision::Sp, available: true, f: KernelFn::F32(scalar::naive_f32) },
+        HostKernel { name: "naive-AVX2-SP", accuracy: Accuracy::Naive, variant: Variant::Naive, simd: Simd::Avx, prec: Precision::Sp, available: avx2, f: KernelFn::F32(avx2::naive_f32) },
+        HostKernel { name: "kahan-compiler-SP", accuracy: Accuracy::Kahan, variant: Variant::Kahan, simd: Simd::Scalar, prec: Precision::Sp, available: true, f: KernelFn::F32(scalar::kahan_seq_f32) },
+        HostKernel { name: "kahan-scalar-SP", accuracy: Accuracy::Kahan, variant: Variant::Kahan, simd: Simd::Scalar, prec: Precision::Sp, available: true, f: KernelFn::F32(scalar::kahan_unrolled_f32) },
+        HostKernel { name: "kahan-SSE-SP", accuracy: Accuracy::Kahan, variant: Variant::Kahan, simd: Simd::Sse, prec: Precision::Sp, available: sse, f: KernelFn::F32(sse::kahan_f32) },
+        HostKernel { name: "kahan-AVX2-SP", accuracy: Accuracy::Kahan, variant: Variant::Kahan, simd: Simd::Avx, prec: Precision::Sp, available: avx2, f: KernelFn::F32(avx2::kahan_f32) },
+        HostKernel { name: "kahan-fma-AVX2-SP", accuracy: Accuracy::Kahan, variant: Variant::KahanFma, simd: Simd::Avx, prec: Precision::Sp, available: fma, f: KernelFn::F32(avx2::kahan_fma_f32) },
+        HostKernel { name: "naive-AVX512-SP", accuracy: Accuracy::Naive, variant: Variant::Naive, simd: Simd::Avx512, prec: Precision::Sp, available: avx512, f: KernelFn::F32(avx512::naive_f32) },
+        HostKernel { name: "kahan-AVX512-SP", accuracy: Accuracy::Kahan, variant: Variant::Kahan, simd: Simd::Avx512, prec: Precision::Sp, available: avx512, f: KernelFn::F32(avx512::kahan_f32) },
+        HostKernel { name: "kahan-fma-AVX512-SP", accuracy: Accuracy::Kahan, variant: Variant::KahanFma, simd: Simd::Avx512, prec: Precision::Sp, available: avx512, f: KernelFn::F32(avx512::kahan_fma_f32) },
+        HostKernel { name: "dot2-compiler-SP", accuracy: Accuracy::Dot2, variant: Variant::KahanFma, simd: Simd::Scalar, prec: Precision::Sp, available: true, f: KernelFn::F32(scalar::dot2_seq_f32) },
+        HostKernel { name: "dot2-scalar-SP", accuracy: Accuracy::Dot2, variant: Variant::KahanFma, simd: Simd::Scalar, prec: Precision::Sp, available: true, f: KernelFn::F32(scalar::dot2_unrolled_f32) },
+        HostKernel { name: "dot2-AVX2-SP", accuracy: Accuracy::Dot2, variant: Variant::KahanFma, simd: Simd::Avx, prec: Precision::Sp, available: fma, f: KernelFn::F32(avx2::dot2_f32) },
+        HostKernel { name: "dot2-AVX512-SP", accuracy: Accuracy::Dot2, variant: Variant::KahanFma, simd: Simd::Avx512, prec: Precision::Sp, available: avx512, f: KernelFn::F32(avx512::dot2_f32) },
+        HostKernel { name: "exact-scalar-SP", accuracy: Accuracy::Exact, variant: Variant::Kahan, simd: Simd::Scalar, prec: Precision::Sp, available: true, f: KernelFn::F32(scalar::exact_f32) },
         // --- f64 ---
-        HostKernel { name: "naive-scalar-DP", variant: Variant::Naive, simd: Simd::Scalar, prec: Precision::Dp, available: true, f: KernelFn::F64(scalar::naive_f64) },
-        HostKernel { name: "naive-AVX2-DP", variant: Variant::Naive, simd: Simd::Avx, prec: Precision::Dp, available: avx2, f: KernelFn::F64(avx2::naive_f64) },
-        HostKernel { name: "kahan-compiler-DP", variant: Variant::Kahan, simd: Simd::Scalar, prec: Precision::Dp, available: true, f: KernelFn::F64(scalar::kahan_seq_f64) },
-        HostKernel { name: "kahan-scalar-DP", variant: Variant::Kahan, simd: Simd::Scalar, prec: Precision::Dp, available: true, f: KernelFn::F64(scalar::kahan_unrolled_f64) },
-        HostKernel { name: "kahan-SSE-DP", variant: Variant::Kahan, simd: Simd::Sse, prec: Precision::Dp, available: sse, f: KernelFn::F64(sse::kahan_f64) },
-        HostKernel { name: "kahan-AVX2-DP", variant: Variant::Kahan, simd: Simd::Avx, prec: Precision::Dp, available: avx2, f: KernelFn::F64(avx2::kahan_f64) },
-        HostKernel { name: "kahan-fma-AVX2-DP", variant: Variant::KahanFma, simd: Simd::Avx, prec: Precision::Dp, available: fma, f: KernelFn::F64(avx2::kahan_fma_f64) },
-        HostKernel { name: "naive-AVX512-DP", variant: Variant::Naive, simd: Simd::Avx512, prec: Precision::Dp, available: avx512, f: KernelFn::F64(avx512::naive_f64) },
-        HostKernel { name: "kahan-AVX512-DP", variant: Variant::Kahan, simd: Simd::Avx512, prec: Precision::Dp, available: avx512, f: KernelFn::F64(avx512::kahan_f64) },
-        HostKernel { name: "kahan-fma-AVX512-DP", variant: Variant::KahanFma, simd: Simd::Avx512, prec: Precision::Dp, available: avx512, f: KernelFn::F64(avx512::kahan_fma_f64) },
+        HostKernel { name: "naive-scalar-DP", accuracy: Accuracy::Naive, variant: Variant::Naive, simd: Simd::Scalar, prec: Precision::Dp, available: true, f: KernelFn::F64(scalar::naive_f64) },
+        HostKernel { name: "naive-AVX2-DP", accuracy: Accuracy::Naive, variant: Variant::Naive, simd: Simd::Avx, prec: Precision::Dp, available: avx2, f: KernelFn::F64(avx2::naive_f64) },
+        HostKernel { name: "kahan-compiler-DP", accuracy: Accuracy::Kahan, variant: Variant::Kahan, simd: Simd::Scalar, prec: Precision::Dp, available: true, f: KernelFn::F64(scalar::kahan_seq_f64) },
+        HostKernel { name: "kahan-scalar-DP", accuracy: Accuracy::Kahan, variant: Variant::Kahan, simd: Simd::Scalar, prec: Precision::Dp, available: true, f: KernelFn::F64(scalar::kahan_unrolled_f64) },
+        HostKernel { name: "kahan-SSE-DP", accuracy: Accuracy::Kahan, variant: Variant::Kahan, simd: Simd::Sse, prec: Precision::Dp, available: sse, f: KernelFn::F64(sse::kahan_f64) },
+        HostKernel { name: "kahan-AVX2-DP", accuracy: Accuracy::Kahan, variant: Variant::Kahan, simd: Simd::Avx, prec: Precision::Dp, available: avx2, f: KernelFn::F64(avx2::kahan_f64) },
+        HostKernel { name: "kahan-fma-AVX2-DP", accuracy: Accuracy::Kahan, variant: Variant::KahanFma, simd: Simd::Avx, prec: Precision::Dp, available: fma, f: KernelFn::F64(avx2::kahan_fma_f64) },
+        HostKernel { name: "naive-AVX512-DP", accuracy: Accuracy::Naive, variant: Variant::Naive, simd: Simd::Avx512, prec: Precision::Dp, available: avx512, f: KernelFn::F64(avx512::naive_f64) },
+        HostKernel { name: "kahan-AVX512-DP", accuracy: Accuracy::Kahan, variant: Variant::Kahan, simd: Simd::Avx512, prec: Precision::Dp, available: avx512, f: KernelFn::F64(avx512::kahan_f64) },
+        HostKernel { name: "kahan-fma-AVX512-DP", accuracy: Accuracy::Kahan, variant: Variant::KahanFma, simd: Simd::Avx512, prec: Precision::Dp, available: avx512, f: KernelFn::F64(avx512::kahan_fma_f64) },
+        HostKernel { name: "dot2-compiler-DP", accuracy: Accuracy::Dot2, variant: Variant::KahanFma, simd: Simd::Scalar, prec: Precision::Dp, available: true, f: KernelFn::F64(scalar::dot2_seq_f64) },
+        HostKernel { name: "dot2-scalar-DP", accuracy: Accuracy::Dot2, variant: Variant::KahanFma, simd: Simd::Scalar, prec: Precision::Dp, available: true, f: KernelFn::F64(scalar::dot2_unrolled_f64) },
+        HostKernel { name: "dot2-AVX2-DP", accuracy: Accuracy::Dot2, variant: Variant::KahanFma, simd: Simd::Avx, prec: Precision::Dp, available: fma, f: KernelFn::F64(avx2::dot2_f64) },
+        HostKernel { name: "dot2-AVX512-DP", accuracy: Accuracy::Dot2, variant: Variant::KahanFma, simd: Simd::Avx512, prec: Precision::Dp, available: avx512, f: KernelFn::F64(avx512::dot2_f64) },
+        HostKernel { name: "exact-scalar-DP", accuracy: Accuracy::Exact, variant: Variant::Kahan, simd: Simd::Scalar, prec: Precision::Dp, available: true, f: KernelFn::F64(scalar::exact_f64) },
     ]
 }
 
@@ -268,17 +284,40 @@ mod tests {
         let exact = exact_dot_f32(&a, &b);
         let naive_err = (scalar::naive_f32(&a, &b) as f64 - exact).abs();
         for k in registry().into_iter().filter(|k| k.available) {
-            if k.variant == Variant::Naive {
+            if k.accuracy == Accuracy::Naive {
                 continue;
             }
             if let KernelFn::F32(_) = k.f {
                 let err = (k.call_f32(&a, &b) as f64 - exact).abs();
                 assert!(
                     err * 50.0 < naive_err,
-                    "{}: kahan err {err:e} vs naive {naive_err:e}",
+                    "{}: compensated err {err:e} vs naive {naive_err:e}",
                     k.name
                 );
             }
+        }
+    }
+
+    /// Every accuracy tier has at least one always-available kernel per
+    /// precision (the guarantee `kernel_for_*` and the autotuner rely on),
+    /// and every tier is represented in the registry.
+    #[test]
+    fn every_accuracy_tier_covered_per_precision() {
+        for acc in Accuracy::ALL {
+            for prec in [Precision::Sp, Precision::Dp] {
+                assert!(
+                    registry_static()
+                        .iter()
+                        .any(|k| k.accuracy == acc && k.prec == prec && k.available),
+                    "no available kernel for {:?}/{:?}",
+                    acc,
+                    prec
+                );
+            }
+        }
+        // Exact is scalar-only by policy: no SIMD claim on the expansion path
+        for k in registry_static().iter().filter(|k| k.accuracy == Accuracy::Exact) {
+            assert_eq!(k.simd, Simd::Scalar, "{} must stay scalar", k.name);
         }
     }
 

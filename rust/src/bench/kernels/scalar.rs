@@ -92,6 +92,88 @@ macro_rules! kahan_unrolled {
 kahan_unrolled!(kahan_unrolled_f32, f32, compensated_fold_f32);
 kahan_unrolled!(kahan_unrolled_f64, f64, compensated_fold_f64);
 
+macro_rules! dot2_seq {
+    ($name:ident, $ty:ty) => {
+        /// Strictly sequential Ogita–Rump–Oishi Dot2: TwoProd (FMA) + 2Sum
+        /// per element, both error terms accumulated into one correction.
+        /// Bit-identical to `accuracy::algorithms::dot2_*` (same op order).
+        pub fn $name(a: &[$ty], b: &[$ty]) -> $ty {
+            let n = a.len().min(b.len());
+            let mut s = 0.0 as $ty;
+            let mut comp = 0.0 as $ty;
+            for i in 0..n {
+                let p = a[i] * b[i];
+                let ep = a[i].mul_add(b[i], -p);
+                let t = s + p;
+                let bb = t - s;
+                let es = (s - (t - bb)) + (p - bb);
+                s = t;
+                comp += ep + es;
+            }
+            s + comp
+        }
+    };
+}
+
+dot2_seq!(dot2_seq_f32, f32);
+dot2_seq!(dot2_seq_f64, f64);
+
+macro_rules! dot2_unrolled {
+    ($name:ident, $ty:ty, $fold:ident) => {
+        /// Modulo-unrolled scalar Dot2: four independent (sum, correction)
+        /// slots hide the 2Sum dependency-chain latency, mirroring the
+        /// unrolled Kahan kernel's slot structure.
+        pub fn $name(a: &[$ty], b: &[$ty]) -> $ty {
+            const U: usize = 4;
+            let n = a.len().min(b.len());
+            let mut s = [0.0 as $ty; U];
+            let mut comp = [0.0 as $ty; U];
+            let chunks = n / U;
+            for i in 0..chunks {
+                let base = i * U;
+                for k in 0..U {
+                    let p = a[base + k] * b[base + k];
+                    let ep = a[base + k].mul_add(b[base + k], -p);
+                    let t = s[k] + p;
+                    let bb = t - s[k];
+                    let es = (s[k] - (t - bb)) + (p - bb);
+                    s[k] = t;
+                    comp[k] += ep + es;
+                }
+            }
+            for i in chunks * U..n {
+                let p = a[i] * b[i];
+                let ep = a[i].mul_add(b[i], -p);
+                let t = s[0] + p;
+                let bb = t - s[0];
+                let es = (s[0] - (t - bb)) + (p - bb);
+                s[0] = t;
+                comp[0] += ep + es;
+            }
+            // the compensated fold subtracts its comps argument (Fig. 1b
+            // "to be subtracted" sign); Dot2 corrections are additive, so
+            // they go in negated
+            let negc = [-comp[0], -comp[1], -comp[2], -comp[3]];
+            $fold(&s, &negc)
+        }
+    };
+}
+
+dot2_unrolled!(dot2_unrolled_f32, f32, compensated_fold_f32);
+dot2_unrolled!(dot2_unrolled_f64, f64, compensated_fold_f64);
+
+/// Correctly-rounded-for-f32 dot (Neumaier in f64 — exact products, ~2^-50
+/// relative residual, far below half an f32 ulp). The `Accuracy::Exact`
+/// registry entry; scalar expansion path, no SIMD claim.
+pub fn exact_f32(a: &[f32], b: &[f32]) -> f32 {
+    crate::accuracy::exact::exact_dot_f32(a, b) as f32
+}
+
+/// Exact f64 dot via Shewchuk expansion accumulation, rounded once.
+pub fn exact_f64(a: &[f64], b: &[f64]) -> f64 {
+    crate::accuracy::exact::exact_dot_f64(a, b)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -110,6 +192,26 @@ mod tests {
         assert_eq!(naive_f32(&a, &b), 30.0);
         assert_eq!(kahan_seq_f32(&a, &b), 30.0);
         assert_eq!(kahan_unrolled_f32(&a, &b), 30.0);
+    }
+
+    #[test]
+    fn dot2_matches_reference_and_survives_high_condition() {
+        let a = [1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0];
+        let b = [2.0f32; 7];
+        assert_eq!(dot2_seq_f32(&a, &b), 56.0);
+        assert_eq!(dot2_unrolled_f32(&a, &b), 56.0);
+        assert_eq!(exact_f32(&a, &b), 56.0);
+        // the sequential kernel IS the reference algorithm, bit for bit
+        let mut rng = crate::util::Rng::new(17);
+        let (a, b, exact, _) = crate::accuracy::gen_dot_f32(999, 1e6, &mut rng);
+        assert_eq!(
+            dot2_seq_f32(&a, &b).to_bits(),
+            crate::accuracy::algorithms::dot2_f32(&a, &b).to_bits()
+        );
+        for f in [dot2_seq_f32, dot2_unrolled_f32, exact_f32] {
+            let rel = ((f(&a, &b) as f64 - exact) / exact.abs().max(1e-30)).abs();
+            assert!(rel < 1e-6, "dot2-class kernel off by {rel:e}");
+        }
     }
 
     #[test]

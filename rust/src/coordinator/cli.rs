@@ -37,9 +37,10 @@ Host silicon (likwid-bench analog):
                         thread scaling on this machine
   engine-info           persistent dot engine: autotuned kernel dispatch
                         table, worker/pool state, smoke dot
-  plan --len N [--precision f32|f64] [--batch K] [--variant V] [--window-us U]
+  plan --len N [--precision f32|f64] [--batch K] [--accuracy A] [--window-us U]
                         explain the planner's decision for one request:
-                        route, size class, chosen kernel, fuse cutoff
+                        route, size class, the accuracy tier's chosen
+                        kernel, fuse cutoff (A: naive|kahan|dot2|exact)
   accuracy [--n N] [--trials T]
                         error vs condition number (algorithm zoo)
 
@@ -77,7 +78,7 @@ fn print_ecm_verdict(policy: &crate::engine::PlanPolicy) {
             } else {
                 format!("predicted saturation at {sat} core(s)")
             };
-            let cap = table.corrected_sat(prec, policy.worker_cap(prec, *class));
+            let cap = table.corrected_sat(prec, *class, policy.worker_cap(prec, *class));
             let applied = if cap == usize::MAX {
                 "fan-out uncapped".to_string()
             } else {
@@ -287,7 +288,7 @@ pub fn run(args: &Args) -> Result<(), String> {
             let a = rng.normal_f32_vec(n);
             let b = rng.normal_f32_vec(n);
             let exact = crate::accuracy::exact::exact_dot_f32(&a, &b);
-            let got = e.dot_f32(crate::isa::Variant::Kahan, &a, &b) as f64;
+            let got = e.dot_f32(crate::isa::Accuracy::Kahan, &a, &b) as f64;
             let s = e.stats();
             println!("smoke dot (n = {n}): engine {got:.6e}, exact {exact:.6e}");
             println!(
@@ -305,7 +306,7 @@ pub fn run(args: &Args) -> Result<(), String> {
         "plan" => {
             let len = args.num("len", 0usize).map_err(|e| e.to_string())?;
             let prec_s = args.opt("precision", "f32");
-            let variant_s = args.opt("variant", "kahan");
+            let acc_s = args.opt("accuracy", "kahan");
             let batch = args.num("batch", 1usize).map_err(|e| e.to_string())?;
             let window_us = args.num("window-us", 0u64).map_err(|e| e.to_string())?;
             if len == 0 {
@@ -316,11 +317,9 @@ pub fn run(args: &Args) -> Result<(), String> {
                 "f64" | "dp" => Precision::Dp,
                 other => return Err(format!("unknown precision `{other}` (f32|f64)")),
             };
-            let variant = match variant_s.as_str() {
-                "kahan" => crate::isa::Variant::Kahan,
-                "naive" => crate::isa::Variant::Naive,
-                other => return Err(format!("unknown variant `{other}` (kahan|naive)")),
-            };
+            let accuracy = crate::isa::Accuracy::parse(&acc_s).ok_or_else(|| {
+                format!("unknown accuracy tier `{acc_s}` (naive|kahan|dot2|exact)")
+            })?;
             let batch = batch.max(1);
             let elem: u64 = if prec == Precision::Sp { 4 } else { 8 };
             let total_bytes = 2 * len as u64 * elem;
@@ -331,13 +330,13 @@ pub fn run(args: &Args) -> Result<(), String> {
             // the exact policy the serving stack routes by: the engine
             // tier's thresholds plus the requested service knobs
             let policy = engine.policy().clone().with_service(batch, window_us);
-            let plan = policy.plan_dot(0, total_bytes);
-            let kernel = table.select(prec, variant, plan.class);
-            let fused = crate::engine::plan::batch_exec(table, prec, variant, plan.class, batch);
+            let plan = policy.plan_dot(0, accuracy, total_bytes);
+            let kernel = table.select(prec, accuracy, plan.class);
+            let fused = crate::engine::plan::batch_exec(table, prec, accuracy, plan.class, batch);
             let bytes = crate::util::fmt::bytes;
 
             println!();
-            println!("plan for one {variant_s} {prec_s} dot, n = {len} per stream:");
+            println!("plan for one {acc_s} {prec_s} dot, n = {len} per stream:");
             println!(
                 "  working set : {} (both streams) -> size class {}",
                 bytes(plan.total_bytes),
@@ -345,7 +344,14 @@ pub fn run(args: &Args) -> Result<(), String> {
             );
             println!("  route       : {}", plan.route.name());
             use crate::engine::DotRoute;
-            match plan.route {
+            if accuracy == crate::isa::Accuracy::Exact {
+                println!(
+                    "    why: the exact tier always routes Inline on one worker — scalar \
+                     expansion arithmetic has no partial-merge story, so routing never \
+                     touches its bits"
+                );
+            } else {
+                match plan.route {
                 DotRoute::Inline => println!(
                     "    why: {} < parallel cutoff {} — a worker handoff would cost more \
                      than it amortizes, so the dot runs on the submitting thread",
@@ -378,6 +384,7 @@ pub fn run(args: &Args) -> Result<(), String> {
                         );
                     }
                 }
+                }
             }
             println!(
                 "  shard route : {} shard(s); fresh requests round-robin (this plan assumed \
@@ -388,7 +395,7 @@ pub fn run(args: &Args) -> Result<(), String> {
             // the governance verdict behind the fan-out this plan realizes
             print_ecm_verdict(&policy);
             {
-                let cap = table.corrected_sat(prec, policy.worker_cap(prec, plan.class));
+                let cap = table.corrected_sat(prec, plan.class, policy.worker_cap(prec, plan.class));
                 let workers = policy.shard_workers[plan.shard];
                 if cap < workers {
                     println!(
@@ -405,10 +412,19 @@ pub fn run(args: &Args) -> Result<(), String> {
                     );
                 }
             }
-            println!("  kernel      : {} ({:.0} cy at calibration probe)", kernel.name, {
-                let c = table.choice(prec, plan.class);
-                if variant == crate::isa::Variant::Naive { c.probe_cy.1 } else { c.probe_cy.0 }
-            });
+            if accuracy == crate::isa::Accuracy::Exact {
+                println!(
+                    "  kernel      : {} (never timed at calibration: correctly rounded \
+                     scalar expansion)",
+                    kernel.name
+                );
+            } else {
+                println!(
+                    "  kernel      : {} ({:.0} cy at calibration probe)",
+                    kernel.name,
+                    table.choice(prec, plan.class).probe_cy(accuracy)
+                );
+            }
             if plan.route != DotRoute::Inline {
                 println!(
                     "  batch of {batch}: serial — {} requests take the per-request path at \
@@ -432,10 +448,10 @@ pub fn run(args: &Args) -> Result<(), String> {
                     ),
                 }
             }
-            // the calibrated fuse cutoff for this (precision, variant) row
+            // the calibrated fuse cutoff for this (precision, tier) row
             let cutoff: Vec<&str> = crate::engine::SizeClass::ALL
                 .iter()
-                .filter(|&&c| table.select_batch(prec, variant, c).is_some())
+                .filter(|&&c| table.select_batch(prec, accuracy, c).is_some())
                 .map(|c| c.name())
                 .collect();
             println!(
@@ -587,14 +603,18 @@ mod tests {
             "plan",
             "--len",
             "1000000",
-            "--variant",
+            "--accuracy",
             "naive",
             "--window-us",
             "100",
         ]))
         .unwrap();
+        // every tier is a valid request dimension now — including exact,
+        // which must explain its unconditional Inline route at any size
+        run(&args(&["plan", "--len", "4096", "--accuracy", "dot2", "--batch", "4"])).unwrap();
+        run(&args(&["plan", "--len", "1000000", "--accuracy", "exact"])).unwrap();
         assert!(run(&args(&["plan"])).is_err(), "--len is required");
         assert!(run(&args(&["plan", "--len", "10", "--precision", "f16"])).is_err());
-        assert!(run(&args(&["plan", "--len", "10", "--variant", "exact"])).is_err());
+        assert!(run(&args(&["plan", "--len", "10", "--accuracy", "fast"])).is_err());
     }
 }

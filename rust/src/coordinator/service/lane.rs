@@ -13,14 +13,15 @@
 //! kernel wins at the projected batch size; where fusion lost the
 //! calibration probe, added latency buys nothing and the lane serves
 //! immediately. Before waiting, everything queued AHEAD of the growable
-//! run (admissions, other-variant or parallel/split-route dots) is served
+//! run (admissions, other-tier or parallel/split-route dots) is served
 //! — the window may only ever delay requests that stand to gain from it.
 
 use super::router::HostRouter;
-use super::{msg_kind, parse_variant, DotRequest, DotResponse, Msg};
+use super::{msg_kind, DotRequest, DotResponse, Msg};
+use crate::engine::autotune::acc_index;
 use crate::engine::plan::batch_exec;
 use crate::engine::{dispatch, DotRoute, HomedSlice};
-use crate::isa::{Precision, Variant};
+use crate::isa::{Accuracy, Precision};
 use std::sync::atomic::Ordering;
 use std::sync::mpsc;
 use std::time::{Duration, Instant};
@@ -79,11 +80,11 @@ pub(super) fn submitter_loop(router: &HostRouter, shard: usize, rx: mpsc::Receiv
         // trade a bounded wait for a bigger fuse. Never during shutdown:
         // the drain must finish promptly.
         if !shutdown && pending.len() < gather_cap {
-            if let Some((window, run, kind, variant)) = router.plan_window(shard, &pending) {
+            if let Some((window, run, kind, accuracy)) = router.plan_window(shard, &pending) {
                 router.lanes[shard].window_waits.fetch_add(1, Ordering::Relaxed);
                 // serve everything AHEAD of the growable run first:
                 // admissions, pooled releases, and parallel/split-route or
-                // other-variant dots can never join this fuse, so holding
+                // other-tier dots can never join this fuse, so holding
                 // them through the window would be pure added latency
                 // (FIFO order is preserved — they were queued earlier)
                 let head = pending.len() - run;
@@ -103,7 +104,7 @@ pub(super) fn submitter_loop(router: &HostRouter, shard: usize, rx: mpsc::Receiv
                             break;
                         }
                         Ok(m) => {
-                            let grew = router.grows_fuse(shard, &m, kind, variant);
+                            let grew = router.grows_fuse(shard, &m, kind, accuracy);
                             pending.push(m);
                             if !grew {
                                 // a message that can't join the fuse ended
@@ -185,26 +186,27 @@ fn serve_caught(router: &HostRouter, shard: usize, msg: Msg) {
 }
 
 impl HostRouter {
-    /// Can `m` join the fuse being grown — same message kind and variant
-    /// as the run's head, and itself inline-route? Anything else takes
-    /// the serial path regardless of batch size, so waiting on its
+    /// Can `m` join the fuse being grown — same message kind and accuracy
+    /// tier as the run's head, and itself inline-route? Anything else
+    /// takes the serial path regardless of batch size, so waiting on its
     /// account (or making it wait) would be pure added latency.
-    fn grows_fuse(&self, shard: usize, m: &Msg, kind: u8, variant: &'static str) -> bool {
+    fn grows_fuse(&self, shard: usize, m: &Msg, kind: u8, accuracy: &'static str) -> bool {
         if msg_kind(m) != kind {
             return false;
         }
-        let (v, n) = match m {
-            Msg::Req(r) => (r.variant, r.a.len().min(r.b.len())),
-            Msg::ReqPooled { variant, sa: Some(sa), sb: Some(sb), .. } => {
-                (*variant, sa.len().min(sb.len()))
+        let (a, n) = match m {
+            Msg::Req(r) => (r.accuracy, r.a.len().min(r.b.len())),
+            Msg::ReqPooled { accuracy, sa: Some(sa), sb: Some(sb), .. } => {
+                (*accuracy, sa.len().min(sb.len()))
             }
             _ => return false,
         };
-        if v != variant {
+        if a != accuracy {
             return false;
         }
+        let Ok(acc) = self.req_accuracy(a) else { return false };
         let total_bytes = (2 * n * std::mem::size_of::<f32>()) as u64;
-        self.policy.plan_dot(shard, total_bytes).route == DotRoute::Inline
+        self.policy.plan_dot(shard, acc, total_bytes).route == DotRoute::Inline
     }
 
     /// The planner's wait-for-k decision for one wake-up's gather: `Some`
@@ -214,7 +216,7 @@ impl HostRouter {
     /// Returns the window, the length of the growable trailing run (only
     /// messages that [`HostRouter::grows_fuse`] accepts count — the
     /// caller serves everything ahead of that run before waiting), and
-    /// the run's kind/variant identity for growth checks during the wait.
+    /// the run's kind/tier identity for growth checks during the wait.
     fn plan_window(
         &self,
         shard: usize,
@@ -225,46 +227,49 @@ impl HostRouter {
             return None;
         }
         let last = pending.last()?;
-        let (variant, n) = match last {
-            Msg::Req(r) => (r.variant, r.a.len().min(r.b.len())),
-            Msg::ReqPooled { variant, sa: Some(sa), sb: Some(sb), .. } => {
-                (*variant, sa.len().min(sb.len()))
+        let (accuracy, n) = match last {
+            Msg::Req(r) => (r.accuracy, r.a.len().min(r.b.len())),
+            Msg::ReqPooled { accuracy, sa: Some(sa), sb: Some(sb), .. } => {
+                (*accuracy, sa.len().min(sb.len()))
             }
             // only dot runs grow by waiting; admissions and invalid
             // pooled operands serve immediately
             _ => return None,
         };
-        let v = parse_variant(variant).ok()?;
+        let acc = self.req_accuracy(accuracy).ok()?;
         let total_bytes = (2 * n * std::mem::size_of::<f32>()) as u64;
         // only inline-class dots ever fuse: a parallel- or split-route
         // request takes the serial path at any batch size, so waiting
         // would be pure added latency
-        let plan = self.policy.plan_dot(shard, total_bytes);
+        let plan = self.policy.plan_dot(shard, acc, total_bytes);
         if plan.route != DotRoute::Inline {
             return None;
         }
+        // fuse-or-loop: tiers without a fused twin (dot2, exact) never
+        // justify added window latency — the planner returns None for them
         let fused_wins =
-            batch_exec(dispatch(), Precision::Sp, v, plan.class, self.policy.max_batch).is_some();
+            batch_exec(dispatch(), Precision::Sp, acc, plan.class, self.policy.max_batch).is_some();
         let kind = msg_kind(last);
         let run = pending
             .iter()
             .rev()
-            .take_while(|m| self.grows_fuse(shard, m, kind, variant))
+            .take_while(|m| self.grows_fuse(shard, m, kind, accuracy))
             .count();
-        self.policy.batch_window(run, fused_wins).map(|w| (w, run, kind, variant))
+        self.policy.batch_window(run, fused_wins).map(|w| (w, run, kind, accuracy))
     }
 
     /// Serve a coalesced run of fresh dot requests: validate each, then
-    /// execute same-variant chunks of ≥ 2 as ONE engine batch on this
-    /// lane's shard (bit-identical to per-request execution). On a batch
-    /// panic the chunk falls back to per-request serves, so only the
-    /// culprit request errors.
+    /// execute same-tier chunks of ≥ 2 as ONE engine batch on this
+    /// lane's shard (bit-identical to per-request execution — tiers with
+    /// a fused twin fuse, Dot2/Exact serial-loop inside the engine batch,
+    /// bits never change either way). On a batch panic the chunk falls
+    /// back to per-request serves, so only the culprit request errors.
     fn serve_req_batch(&self, s: usize, reqs: Vec<DotRequest>) {
         self.requests.fetch_add(reqs.len() as u64, Ordering::Relaxed);
-        let mut kahan: Vec<DotRequest> = Vec::new();
-        let mut naive: Vec<DotRequest> = Vec::new();
+        // one group per accuracy tier, indexed like the dispatch table
+        let mut groups: [Vec<DotRequest>; 4] = [Vec::new(), Vec::new(), Vec::new(), Vec::new()];
         for req in reqs {
-            match parse_variant(req.variant) {
+            match self.req_accuracy(req.accuracy) {
                 Err(e) => {
                     self.errors.fetch_add(1, Ordering::Relaxed);
                     let _ = req.reply.send(DotResponse {
@@ -287,27 +292,26 @@ impl HostRouter {
                         latency: req.submitted.elapsed(),
                     });
                 }
-                Ok(Variant::Naive) => naive.push(req),
-                Ok(_) => kahan.push(req),
+                Ok(acc) => groups[acc_index(acc)].push(req),
             }
         }
-        for (v, mut group) in [(Variant::Kahan, kahan), (Variant::Naive, naive)] {
+        for (acc, mut group) in Accuracy::ALL.into_iter().zip(groups) {
             while !group.is_empty() {
                 let take = group.len().min(self.policy.max_batch);
                 let chunk: Vec<DotRequest> = group.drain(..take).collect();
-                self.serve_req_chunk(s, v, chunk);
+                self.serve_req_chunk(s, acc, chunk);
             }
         }
     }
 
-    /// One engine batch call for a same-variant chunk of validated fresh
+    /// One engine batch call for a same-tier chunk of validated fresh
     /// requests (or the plain single-request path for a chunk of one).
-    fn serve_req_chunk(&self, s: usize, v: Variant, chunk: Vec<DotRequest>) {
+    fn serve_req_chunk(&self, s: usize, acc: Accuracy, chunk: Vec<DotRequest>) {
         if chunk.len() == 1 {
             // mirror of the Msg::Req single path, minus the re-validation
             let req = &chunk[0];
-            let value = self.execute(s, req.variant, false, |var| {
-                self.engine.dot_on_f32(s, var, &req.a, &req.b)
+            let value = self.execute(s, req.accuracy, false, |a| {
+                self.engine.dot_on_f32(s, a, &req.a, &req.b)
             });
             if value.is_err() {
                 self.errors.fetch_add(1, Ordering::Relaxed);
@@ -324,7 +328,7 @@ impl HostRouter {
         let pairs: Vec<(&[f32], &[f32])> =
             chunk.iter().map(|r| (r.a.as_slice(), r.b.as_slice())).collect();
         let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-            self.engine.dot_batch_on_f32(s, v, &pairs)
+            self.engine.dot_batch_on_f32(s, acc, &pairs)
         }));
         drop(pairs);
         match r {
@@ -353,8 +357,8 @@ impl HostRouter {
                 // per-request execution so only the culprit errors
                 self.errors.fetch_add(1, Ordering::Relaxed);
                 for req in chunk {
-                    let value = self.execute(s, req.variant, false, |var| {
-                        self.engine.dot_on_f32(s, var, &req.a, &req.b)
+                    let value = self.execute(s, req.accuracy, false, |a| {
+                        self.engine.dot_on_f32(s, a, &req.a, &req.b)
                     });
                     if value.is_err() {
                         self.errors.fetch_add(1, Ordering::Relaxed);
@@ -372,36 +376,36 @@ impl HostRouter {
 
     /// Serve a coalesced run of pooled dots: operands were resolved at
     /// submit time, so validation here is presence + length; valid
-    /// same-variant chunks of ≥ 2 execute as one homed engine batch on
+    /// same-tier chunks of ≥ 2 execute as one homed engine batch on
     /// the pairs' home shards.
     fn serve_pooled_batch(&self, s: usize, msgs: Vec<Msg>) {
         struct Pooled {
             id: u64,
-            variant: &'static str,
+            accuracy: &'static str,
             sa: HomedSlice<f32>,
             sb: HomedSlice<f32>,
             reply: mpsc::Sender<DotResponse>,
             submitted: Instant,
         }
         self.requests.fetch_add(msgs.len() as u64, Ordering::Relaxed);
-        let mut kahan: Vec<Pooled> = Vec::new();
-        let mut naive: Vec<Pooled> = Vec::new();
+        let mut groups: [Vec<Pooled>; 4] = [Vec::new(), Vec::new(), Vec::new(), Vec::new()];
         for msg in msgs {
-            let Msg::ReqPooled { id, variant, a, b, sa, sb, reply, submitted } = msg else {
+            let Msg::ReqPooled { id, accuracy, a, b, sa, sb, reply, submitted } = msg else {
                 unreachable!("serve_pooled_batch takes ReqPooled runs only");
             };
-            let validated: Result<Variant, String> = match (parse_variant(variant), &sa, &sb) {
-                (Err(e), _, _) => Err(e),
-                (Ok(v), Some(sa), Some(sb)) if sa.len() == sb.len() => Ok(v),
-                (Ok(_), Some(sa), Some(sb)) => {
-                    Err(format!("length mismatch {} vs {}", sa.len(), sb.len()))
-                }
-                (Ok(_), sa, _) => Err(format!(
-                    "unknown stream handle {}",
-                    if sa.is_some() { b } else { a }
-                )),
-            };
-            let v = match validated {
+            let validated: Result<Accuracy, String> =
+                match (self.req_accuracy(accuracy), &sa, &sb) {
+                    (Err(e), _, _) => Err(e),
+                    (Ok(acc), Some(sa), Some(sb)) if sa.len() == sb.len() => Ok(acc),
+                    (Ok(_), Some(sa), Some(sb)) => {
+                        Err(format!("length mismatch {} vs {}", sa.len(), sb.len()))
+                    }
+                    (Ok(_), sa, _) => Err(format!(
+                        "unknown stream handle {}",
+                        if sa.is_some() { b } else { a }
+                    )),
+                };
+            let acc = match validated {
                 Err(e) => {
                     self.errors.fetch_add(1, Ordering::Relaxed);
                     let _ = reply.send(DotResponse {
@@ -412,30 +416,25 @@ impl HostRouter {
                     });
                     continue;
                 }
-                Ok(v) => v,
+                Ok(acc) => acc,
             };
-            let p = Pooled {
+            groups[acc_index(acc)].push(Pooled {
                 id,
-                variant,
+                accuracy,
                 sa: sa.expect("validated"),
                 sb: sb.expect("validated"),
                 reply,
                 submitted,
-            };
-            if v == Variant::Naive {
-                naive.push(p);
-            } else {
-                kahan.push(p);
-            }
+            });
         }
-        for (v, mut group) in [(Variant::Kahan, kahan), (Variant::Naive, naive)] {
+        for (acc, mut group) in Accuracy::ALL.into_iter().zip(groups) {
             while !group.is_empty() {
                 let take = group.len().min(self.policy.max_batch);
                 let chunk: Vec<Pooled> = group.drain(..take).collect();
                 if chunk.len() == 1 {
                     let p = &chunk[0];
-                    let value = self.execute(s, p.variant, true, |var| {
-                        self.engine.dot_homed_f32(var, &p.sa, &p.sb)
+                    let value = self.execute(s, p.accuracy, true, |a| {
+                        self.engine.dot_homed_f32(a, &p.sa, &p.sb)
                     });
                     if value.is_err() {
                         self.errors.fetch_add(1, Ordering::Relaxed);
@@ -452,7 +451,7 @@ impl HostRouter {
                 let pairs: Vec<(&HomedSlice<f32>, &HomedSlice<f32>)> =
                     chunk.iter().map(|p| (&p.sa, &p.sb)).collect();
                 let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-                    self.engine.dot_batch_homed_f32(v, &pairs)
+                    self.engine.dot_batch_homed_f32(acc, &pairs)
                 }));
                 drop(pairs);
                 match r {
@@ -478,8 +477,8 @@ impl HostRouter {
                     Err(_) => {
                         self.errors.fetch_add(1, Ordering::Relaxed);
                         for p in chunk {
-                            let value = self.execute(s, p.variant, true, |var| {
-                                self.engine.dot_homed_f32(var, &p.sa, &p.sb)
+                            let value = self.execute(s, p.accuracy, true, |a| {
+                                self.engine.dot_homed_f32(a, &p.sa, &p.sb)
                             });
                             if value.is_err() {
                                 self.errors.fetch_add(1, Ordering::Relaxed);

@@ -74,13 +74,15 @@ mod streams;
 #[cfg(test)]
 mod tests;
 #[cfg(test)]
+mod tests_accuracy;
+#[cfg(test)]
 mod tests_window;
 
 pub use router::DotClient;
 pub use stats::{LaneStats, ServiceStats};
 
 use crate::engine::{HomedSlice, ShardedEngine};
-use crate::isa::Variant;
+use crate::isa::Accuracy;
 use crate::runtime::Runtime;
 use router::{ClientInner, HostRouter};
 use std::sync::{mpsc, Arc};
@@ -107,7 +109,7 @@ enum Msg {
     /// `release` before it is always visible (`sa`/`sb` arrive `None`).
     ReqPooled {
         id: u64,
-        variant: &'static str,
+        accuracy: &'static str,
         a: u64,
         b: u64,
         sa: Option<HomedSlice<f32>>,
@@ -157,8 +159,9 @@ pub enum Backend {
 /// A dot-product request.
 pub struct DotRequest {
     pub id: u64,
-    /// "kahan" or "naive"
-    pub variant: &'static str,
+    /// requested accuracy tier: "naive", "kahan", "dot2" or "exact"
+    /// (empty = the service's validated `default_accuracy`)
+    pub accuracy: &'static str,
     pub a: Vec<f32>,
     pub b: Vec<f32>,
     reply: mpsc::Sender<DotResponse>,
@@ -238,6 +241,7 @@ impl Default for ServiceConfig {
             router_queue_depth: 64,
             max_batch: 16,
             batch_window_us: 0,
+            default_accuracy: "kahan".into(),
             ecm_governance: "on".into(),
             window: Duration::from_millis(2),
             batched_artifact_kahan: "batched_dot_kahan_f32_b8_n16384".into(),
@@ -277,6 +281,9 @@ impl ServiceConfig {
                 MAX_BATCH_WINDOW_US,
                 MAX_BATCH_WINDOW_US / 1_000_000
             ));
+        }
+        if let Err(e) = parse_accuracy(&self.default_accuracy) {
+            return Err(format!("ServiceConfig::default_accuracy: {e}"));
         }
         if self.ecm_governance != "on" && self.ecm_governance != "off" {
             return Err(format!(
@@ -383,7 +390,10 @@ impl DotService {
         if config.ecm_governance == "off" {
             policy = policy.ungoverned();
         }
-        let (router, receivers) = HostRouter::new(engine, policy, config.router_queue_depth);
+        let default_accuracy =
+            parse_accuracy(&config.default_accuracy).expect("validated above");
+        let (router, receivers) =
+            HostRouter::new(engine, policy, config.router_queue_depth, default_accuracy);
         let submitters = receivers
             .into_iter()
             .enumerate()
@@ -435,10 +445,11 @@ impl Drop for DotService {
     }
 }
 
-fn parse_variant(s: &str) -> Result<Variant, String> {
-    match s {
-        "kahan" => Ok(Variant::Kahan),
-        "naive" => Ok(Variant::Naive),
-        other => Err(format!("unknown variant `{other}`")),
-    }
+/// Parse a request's accuracy-tier string ("naive" / "kahan" / "dot2" /
+/// "exact", plus the aliases `Accuracy::parse` accepts). The service
+/// rejects unknown tiers per request instead of panicking in a lane.
+fn parse_accuracy(s: &str) -> Result<Accuracy, String> {
+    Accuracy::parse(s).ok_or_else(|| {
+        format!("unknown accuracy tier `{s}` (expected naive, kahan, dot2 or exact)")
+    })
 }

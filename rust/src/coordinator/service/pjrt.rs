@@ -1,8 +1,10 @@
 //! The [`super::Backend::Pjrt`] worker loop: one thread owns the
 //! `Runtime` (PJRT executables are not shared across threads), drains the
-//! queue with a batching window, groups compatible requests by variant,
-//! and executes them in one PJRT call when possible. Pooled-stream
-//! messages are a Host-backend feature and are rejected synchronously.
+//! queue with a batching window, groups compatible requests by accuracy
+//! tier, and executes them in one PJRT call when possible. Only the
+//! naive and kahan tiers have compiled artifacts — dot2/exact requests
+//! are rejected per-request. Pooled-stream messages are a Host-backend
+//! feature and are rejected synchronously.
 
 use super::stats::ServiceStats;
 use super::{DotRequest, DotResponse, Msg, ServiceConfig};
@@ -98,13 +100,17 @@ pub(super) fn worker_loop_pjrt(
             }
         }
 
-        // group by variant; batch-execute groups where every request fits
-        for variant in ["kahan", "naive"] {
+        // group by accuracy tier; batch-execute groups where every
+        // request fits. The empty string resolves to the configured
+        // default, mirroring the Host router.
+        for accuracy in ["kahan", "naive"] {
             let group: Vec<DotRequest> = {
                 let mut g = Vec::new();
                 let mut rest = Vec::new();
                 for p in queue.drain(..) {
-                    if p.variant == variant {
+                    let resolved =
+                        if p.accuracy.is_empty() { cfg.default_accuracy.as_str() } else { p.accuracy };
+                    if resolved == accuracy {
                         g.push(p);
                     } else {
                         rest.push(p);
@@ -116,7 +122,7 @@ pub(super) fn worker_loop_pjrt(
             if group.is_empty() {
                 continue;
             }
-            let (batched_name, single_name) = if variant == "kahan" {
+            let (batched_name, single_name) = if accuracy == "kahan" {
                 (&cfg.batched_artifact_kahan, &cfg.single_artifact_kahan)
             } else {
                 (&cfg.batched_artifact_naive, &cfg.single_artifact_naive)
@@ -174,6 +180,21 @@ pub(super) fn worker_loop_pjrt(
                     });
                 }
             }
+        }
+        // tiers without a compiled PJRT artifact (dot2, exact) and
+        // unknown strings: per-request error, never a silent drop
+        for p in queue.drain(..) {
+            stats.requests += 1;
+            stats.errors += 1;
+            let _ = p.reply.send(DotResponse {
+                id: p.id,
+                value: Err(format!(
+                    "accuracy tier `{}` requires the Host backend",
+                    p.accuracy
+                )),
+                batch_size: 0,
+                latency: p.submitted.elapsed(),
+            });
         }
     }
     stats

@@ -10,10 +10,10 @@
 //! [`PlanPolicy`].
 
 use super::stats::LaneCounters;
-use super::{parse_variant, DotRequest, DotResponse, Msg};
+use super::{parse_accuracy, DotRequest, DotResponse, Msg};
 use crate::engine::parallel::panic_message;
 use crate::engine::{HomedSlice, PlanPolicy, ShardedEngine};
-use crate::isa::Variant;
+use crate::isa::Accuracy;
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, RwLock};
@@ -28,6 +28,9 @@ pub(super) struct HostRouter {
     /// service's batching knobs (`max_batch`, `batch_window_us`) — every
     /// coalescing and window decision in the lanes goes through it
     pub(super) policy: PlanPolicy,
+    /// tier served when a request's `accuracy` string is empty
+    /// (`ServiceConfig::default_accuracy`, validated at start)
+    pub(super) default_accuracy: Accuracy,
     /// bounded hand-off to each shard's submitter (index == shard)
     pub(super) queues: Vec<mpsc::SyncSender<Msg>>,
     /// admitted streams: handle -> home-shard slice. Inserted by the
@@ -58,6 +61,7 @@ impl HostRouter {
         engine: &'static ShardedEngine,
         policy: PlanPolicy,
         queue_depth: usize,
+        default_accuracy: Accuracy,
     ) -> (Arc<HostRouter>, Vec<mpsc::Receiver<Msg>>) {
         let shards = engine.shards();
         let mut queues = Vec::with_capacity(shards);
@@ -70,6 +74,7 @@ impl HostRouter {
         let router = Arc::new(HostRouter {
             engine,
             policy,
+            default_accuracy,
             queues,
             streams: RwLock::new(HashMap::new()),
             next_handle: AtomicU64::new(1),
@@ -121,19 +126,28 @@ impl HostRouter {
     pub(super) fn execute(
         &self,
         s: usize,
-        variant: &'static str,
+        accuracy: &'static str,
         pooled: bool,
-        dot: impl FnOnce(Variant) -> f32,
+        dot: impl FnOnce(Accuracy) -> f32,
     ) -> Result<f32, String> {
-        parse_variant(variant).and_then(|v| {
+        self.req_accuracy(accuracy).and_then(|acc| {
             self.engine_calls.fetch_add(1, Ordering::Relaxed);
             if pooled {
                 self.pooled_calls.fetch_add(1, Ordering::Relaxed);
             }
             self.lanes[s].executed.fetch_add(1, Ordering::Relaxed);
-            std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| dot(v)))
+            std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| dot(acc)))
                 .map_err(|e| format!("engine panic: {}", panic_message(e)))
         })
+    }
+
+    /// Resolve a request's accuracy string: empty means the service's
+    /// validated default tier, anything else must parse.
+    pub(super) fn req_accuracy(&self, accuracy: &str) -> Result<Accuracy, String> {
+        if accuracy.is_empty() {
+            return Ok(self.default_accuracy);
+        }
+        parse_accuracy(accuracy)
     }
 
     /// Execute one message on lane `s`'s submitter thread.
@@ -158,8 +172,8 @@ impl HostRouter {
                     // balanced fresh requests round-robin); the engine
                     // consumes the planner's route and fans very large
                     // dots out across every shard
-                    self.execute(s, req.variant, false, |v| {
-                        self.engine.dot_on_f32(s, v, &req.a, &req.b)
+                    self.execute(s, req.accuracy, false, |acc| {
+                        self.engine.dot_on_f32(s, acc, &req.a, &req.b)
                     })
                 };
                 if value.is_err() {
@@ -181,11 +195,13 @@ impl HostRouter {
                 self.admitted.fetch_add(1, Ordering::Relaxed);
                 let _ = reply.send(Ok(handle));
             }
-            Msg::ReqPooled { id, variant, a, b, sa, sb, reply, submitted } => {
+            Msg::ReqPooled { id, accuracy, a, b, sa, sb, reply, submitted } => {
                 self.requests.fetch_add(1, Ordering::Relaxed);
                 let value = match (sa, sb) {
                     (Some(sa), Some(sb)) if sa.len() == sb.len() => {
-                        self.execute(s, variant, true, |v| self.engine.dot_homed_f32(v, &sa, &sb))
+                        self.execute(s, accuracy, true, |acc| {
+                            self.engine.dot_homed_f32(acc, &sa, &sb)
+                        })
                     }
                     (Some(sa), Some(sb)) => {
                         Err(format!("length mismatch {} vs {}", sa.len(), sb.len()))
@@ -250,12 +266,12 @@ impl DotClient {
     pub fn submit(
         &self,
         id: u64,
-        variant: &'static str,
+        accuracy: &'static str,
         a: Vec<f32>,
         b: Vec<f32>,
     ) -> mpsc::Receiver<DotResponse> {
         let (reply, rx) = mpsc::channel();
-        let req = DotRequest { id, variant, a, b, reply, submitted: Instant::now() };
+        let req = DotRequest { id, accuracy, a, b, reply, submitted: Instant::now() };
         match &self.inner {
             ClientInner::Host(r) => {
                 let s = r.route_fresh();
@@ -273,11 +289,11 @@ impl DotClient {
     /// Convenience: blocking round-trip.
     pub fn dot_blocking(
         &self,
-        variant: &'static str,
+        accuracy: &'static str,
         a: Vec<f32>,
         b: Vec<f32>,
     ) -> Result<f32, String> {
-        let rx = self.submit(0, variant, a, b);
+        let rx = self.submit(0, accuracy, a, b);
         match rx.recv() {
             Ok(resp) => resp.value,
             Err(_) => Err("service stopped".into()),

@@ -90,7 +90,7 @@ impl DotClient {
     pub fn submit_pooled(
         &self,
         id: u64,
-        variant: &'static str,
+        accuracy: &'static str,
         a: u64,
         b: u64,
     ) -> mpsc::Receiver<DotResponse> {
@@ -106,13 +106,13 @@ impl DotClient {
                 let s = sa.as_ref().map(|h| h.shard).unwrap_or_else(|| r.route_fresh());
                 r.send_to(
                     s,
-                    Msg::ReqPooled { id, variant, a, b, sa, sb, reply, submitted: Instant::now() },
+                    Msg::ReqPooled { id, accuracy, a, b, sa, sb, reply, submitted: Instant::now() },
                 );
             }
             ClientInner::Pjrt(tx) => {
                 let _ = tx.send(Msg::ReqPooled {
                     id,
-                    variant,
+                    accuracy,
                     a,
                     b,
                     sa: None,
@@ -128,11 +128,11 @@ impl DotClient {
     /// Convenience: blocking dot over two admitted streams.
     pub fn dot_pooled_blocking(
         &self,
-        variant: &'static str,
+        accuracy: &'static str,
         a: u64,
         b: u64,
     ) -> Result<f32, String> {
-        let rx = self.submit_pooled(0, variant, a, b);
+        let rx = self.submit_pooled(0, accuracy, a, b);
         match rx.recv() {
             Ok(resp) => resp.value,
             Err(_) => Err("service stopped".into()),

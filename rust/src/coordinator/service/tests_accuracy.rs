@@ -1,0 +1,176 @@
+//! Accuracy-tier service tests: requests carry an `accuracy` tier end to
+//! end (`naive` / `kahan` / `dot2` / `exact`), the empty string resolves
+//! to the configured default, and a mixed-accuracy burst splits into
+//! per-tier chunks — tiers with a fused twin fuse, Dot2/Exact
+//! serial-loop — with bits identical to serial resubmission either way.
+//! The shared `Gate` / `leak_engine` / `wait_engine_requests` helpers
+//! come from `tests.rs`.
+
+use super::tests::{leak_engine, wait_engine_requests, Gate};
+use super::*;
+use crate::accuracy::exact::exact_dot_f32;
+use crate::accuracy::gen_dot_f32;
+use crate::engine::plan::batch_exec;
+use crate::engine::{dispatch, fused_dots_total, SizeClass, Topology};
+use crate::isa::Precision;
+use crate::util::Rng;
+use std::time::Duration;
+
+/// Satellite: a lane wake-up holding a MIXED-accuracy burst splits it
+/// into per-tier chunks; the Kahan chunk goes through the fused batch
+/// kernel (when the calibrated cutoff approves), the Dot2 chunk — whose
+/// tier has no fused twin by construction — serial-loops inside its
+/// engine batch call. Both are bit-identical to serial resubmission.
+#[test]
+fn mixed_accuracy_burst_fuses_kahan_and_serial_loops_dot2() {
+    let engine = leak_engine(&Topology::single_node(), 2);
+    let (svc, client) = DotService::start_on(ServiceConfig::default(), engine);
+    let gate = Gate::close(engine, 0);
+
+    let mut rng = Rng::new(97);
+    let n_big = 200_000; // parallel path: blocks on the gate
+    let rx_big = client.submit(0, "kahan", rng.normal_f32_vec(n_big), rng.normal_f32_vec(n_big));
+    wait_engine_requests(engine, 1);
+
+    // the queued burst: three kahan + two dot2, interleaved
+    let specs: [(&'static str, usize); 5] =
+        [("kahan", 1024), ("dot2", 1024), ("kahan", 512), ("dot2", 2048), ("kahan", 1024)];
+    let reqs: Vec<(&'static str, Vec<f32>, Vec<f32>)> = specs
+        .iter()
+        .map(|&(acc, n)| (acc, rng.normal_f32_vec(n), rng.normal_f32_vec(n)))
+        .collect();
+    let rxs: Vec<_> = reqs
+        .iter()
+        .enumerate()
+        .map(|(i, &(acc, ref a, ref b))| client.submit(1 + i as u64, acc, a.clone(), b.clone()))
+        .collect();
+
+    let fused_before = fused_dots_total();
+    gate.open();
+    assert!(rx_big.recv_timeout(Duration::from_secs(30)).expect("big").value.is_ok());
+    let mut batched = Vec::new();
+    for (i, rx) in rxs.into_iter().enumerate() {
+        let resp = rx.recv_timeout(Duration::from_secs(30)).expect("batched reply");
+        let want_bsz: usize = if reqs[i].0 == "kahan" { 3 } else { 2 };
+        assert_eq!(resp.batch_size, want_bsz, "req {i}: per-tier chunk size");
+        batched.push(resp.value.expect("batched value"));
+    }
+
+    // serial resubmission (blocking ⇒ no coalescing) must be
+    // bit-identical per tier: neither fusing nor looping changes bits
+    for (i, &(acc, ref a, ref b)) in reqs.iter().enumerate() {
+        let serial = client.dot_blocking(acc, a.clone(), b.clone()).expect("serial");
+        assert_eq!(
+            serial.to_bits(),
+            batched[i].to_bits(),
+            "req {i} ({acc}): batched vs serial bits differ"
+        );
+    }
+
+    // dot2 has no fused twin in ANY cell — its serial loop is the
+    // planner's decision, not a lucky cutoff
+    for class in [SizeClass::L1, SizeClass::Llc, SizeClass::Mem] {
+        for k in [2usize, 8, 64] {
+            assert!(
+                batch_exec(dispatch(), Precision::Sp, crate::isa::Accuracy::Dot2, class, k)
+                    .is_none(),
+                "dot2 must never fuse ({class:?}, k={k})"
+            );
+            assert!(
+                batch_exec(dispatch(), Precision::Sp, crate::isa::Accuracy::Exact, class, k)
+                    .is_none(),
+                "exact must never fuse ({class:?}, k={k})"
+            );
+        }
+    }
+    // ...while the kahan run fused iff its cell's calibrated cutoff
+    // approves a run of 3 (the counter is process-global, so only the
+    // ≥ direction is race-free to assert)
+    let kahan_class = SizeClass::of((2 * 1024 * std::mem::size_of::<f32>()) as u64);
+    if batch_exec(dispatch(), Precision::Sp, crate::isa::Accuracy::Kahan, kahan_class, 3).is_some()
+    {
+        assert!(
+            fused_dots_total() - fused_before >= 3,
+            "the kahan chunk must go through the fused kernel"
+        );
+    }
+
+    let stats = svc.stop();
+    // one engine batch call per tier chunk, every burst request in one
+    assert_eq!(stats.batches, 2, "{stats:?}");
+    assert_eq!(stats.batched_requests, 5, "{stats:?}");
+    assert_eq!(stats.errors, 0, "{stats:?}");
+    assert_eq!(stats.requests, 11, "{stats:?}");
+}
+
+/// The two new tiers round-trip end to end: Dot2 holds its error bound
+/// where Kahan-grade accuracy is the floor, Exact returns the correctly
+/// rounded dot even at chunked-parallel sizes (it always routes Inline),
+/// and the pooled-stream path accepts tier names and aliases.
+#[test]
+fn dot2_and_exact_tiers_round_trip_through_the_service() {
+    let (svc, client) = DotService::start(ServiceConfig::default()).unwrap();
+    let mut rng = Rng::new(101);
+
+    // ill-conditioned input: dot2 must stay at full working accuracy
+    let (a, b, exact, _cond) = gen_dot_f32(4096, 1e6, &mut rng);
+    let absdot: f64 =
+        a.iter().zip(&b).map(|(x, y)| (*x as f64 * *y as f64).abs()).sum::<f64>().max(1e-30);
+    let v = client.dot_blocking("dot2", a.clone(), b.clone()).unwrap() as f64;
+    assert!(
+        (v - exact).abs() / absdot < 1e-6,
+        "dot2 service result must stay within the Dot2 bound: {v} vs {exact}"
+    );
+
+    // exact: bit-equal to the correctly rounded reference, including at
+    // a size the other tiers would serve chunked-parallel
+    let n = 300_000;
+    let xa = rng.normal_f32_vec(n);
+    let xb = rng.normal_f32_vec(n);
+    let want = exact_dot_f32(&xa, &xb) as f32;
+    let got = client.dot_blocking("exact", xa.clone(), xb.clone()).unwrap();
+    assert_eq!(got.to_bits(), want.to_bits(), "exact tier must be correctly rounded");
+
+    // pooled streams take tiers (and parse aliases) too
+    let (ha, hb) = client.admit_pair_blocking(a, b).expect("pair");
+    let p1 = client.dot_pooled_blocking("dot2", ha, hb).expect("pooled dot2");
+    let p2 = client.dot_pooled_blocking("oro", ha, hb).expect("alias oro = dot2");
+    assert_eq!(p1.to_bits(), p2.to_bits(), "alias must hit the same tier");
+    assert!((p1 as f64 - exact).abs() / absdot < 1e-6);
+
+    let stats = svc.stop();
+    assert_eq!(stats.errors, 0, "{stats:?}");
+}
+
+/// An empty accuracy string resolves to `ServiceConfig::default_accuracy`
+/// (bit-identical to naming the tier explicitly), a bad default is a
+/// clean startup error, and an unknown per-request tier is a per-request
+/// error — counted, never a hang or a silent drop.
+#[test]
+fn empty_accuracy_resolves_to_configured_default() {
+    let mut rng = Rng::new(103);
+    let a = rng.normal_f32_vec(2048);
+    let b = rng.normal_f32_vec(2048);
+
+    // default default: kahan
+    let (svc, client) = DotService::start(ServiceConfig::default()).unwrap();
+    let vd = client.dot_blocking("", a.clone(), b.clone()).unwrap();
+    let vk = client.dot_blocking("kahan", a.clone(), b.clone()).unwrap();
+    assert_eq!(vd.to_bits(), vk.to_bits(), "\"\" must be the configured default tier");
+    assert!(client.dot_blocking("fast", a.clone(), b.clone()).is_err());
+    let stats = svc.stop();
+    assert_eq!(stats.errors, 1, "{stats:?}");
+
+    // a reconfigured default changes what "" means
+    let cfg = ServiceConfig { default_accuracy: "dot2".into(), ..ServiceConfig::default() };
+    let (svc, client) = DotService::start(cfg).unwrap();
+    let vd = client.dot_blocking("", a.clone(), b.clone()).unwrap();
+    let v2 = client.dot_blocking("dot2", a.clone(), b.clone()).unwrap();
+    assert_eq!(vd.to_bits(), v2.to_bits());
+    svc.stop();
+
+    // a bad default is caught at startup, not deep in a lane
+    let bad = ServiceConfig { default_accuracy: "fastest".into(), ..ServiceConfig::default() };
+    assert!(bad.validate().is_err());
+    assert!(DotService::start(bad).is_err());
+}

@@ -29,7 +29,7 @@ use super::pool::BufferPool;
 use crate::bench::kernels::batch::{batch_for, BatchKernel, BatchKernelFn};
 use crate::bench::kernels::{registry_static, HostKernel, KernelFn};
 use crate::bench::timer::measure_adaptive;
-use crate::isa::{Precision, Variant};
+use crate::isa::{Accuracy, Precision};
 use crate::machine::detect::detect_host_cached;
 use crate::util::Rng;
 use std::sync::OnceLock;
@@ -87,6 +87,16 @@ pub(crate) fn prec_index(prec: Precision) -> usize {
     }
 }
 
+/// Column index of an accuracy tier in the per-cell winner tables.
+pub(crate) fn acc_index(acc: Accuracy) -> usize {
+    match acc {
+        Accuracy::Naive => 0,
+        Accuracy::Kahan => 1,
+        Accuracy::Dot2 => 2,
+        Accuracy::Exact => 3,
+    }
+}
+
 /// Requests fused per batch probe (and the divisor for per-request cycles).
 const BATCH_PROBE_B: usize = 4;
 
@@ -95,7 +105,7 @@ const BATCH_PROBE_B: usize = 4;
 /// request size instead of B half-LLC monsters.
 const BATCH_PROBE_MAX_BYTES: u64 = 512 << 10;
 
-/// The batched-execution decision for one `(Precision, Variant, SizeClass)`
+/// The batched-execution decision for one `(Precision, Accuracy, SizeClass)`
 /// cell: the fused twin of the cell's single winner, kept only where
 /// calibration showed fusion winning (else the engine loops the single
 /// kernel — batching above the handoff layer still applies).
@@ -116,19 +126,32 @@ impl BatchChoice {
 }
 
 /// The kernels the engine dispatches between for one
-/// `(Precision, SizeClass)` cell.
+/// `(Precision, SizeClass)` cell: one winner (plus fused-batch decision)
+/// per accuracy tier, indexed by [`acc_index`].
 #[derive(Clone, Copy)]
 pub struct Choice {
-    /// fastest compensated kernel (Kahan or Kahan-FMA)
-    pub kahan: HostKernel,
-    /// fastest uncompensated kernel
-    pub naive: HostKernel,
-    /// measured cycles per invocation at the probe size, (kahan, naive)
-    pub probe_cy: (f64, f64),
-    /// fused-batch decision for the compensated winner
-    pub kahan_batch: BatchChoice,
-    /// fused-batch decision for the naive winner
-    pub naive_batch: BatchChoice,
+    winners: [HostKernel; 4],
+    probe: [f64; 4],
+    batches: [BatchChoice; 4],
+}
+
+impl Choice {
+    /// The tier's fastest available kernel in this cell. The `Exact` tier
+    /// is never timed (its expansion path at MEM probe size would dominate
+    /// calibration); it has exactly one registry kernel per precision.
+    pub fn winner(&self, acc: Accuracy) -> &HostKernel {
+        &self.winners[acc_index(acc)]
+    }
+
+    /// Measured cycles per invocation at the probe size (0.0 for `Exact`).
+    pub fn probe_cy(&self, acc: Accuracy) -> f64 {
+        self.probe[acc_index(acc)]
+    }
+
+    /// The tier's fused-batch decision in this cell.
+    pub fn batch(&self, acc: Accuracy) -> &BatchChoice {
+        &self.batches[acc_index(acc)]
+    }
 }
 
 /// Calibrated dispatch table: `[precision][size class] -> Choice`.
@@ -136,13 +159,16 @@ pub struct DispatchTable {
     choices: [[Choice; 3]; 2],
     /// total probe bytes used per class (for reporting)
     pub probe_bytes: [u64; 3],
-    /// ECM governance correction per precision, fixed-point millis
-    /// (1000 = 1.0): observed/predicted saturation from the bench's
+    /// ECM governance correction per (precision, size class), fixed-point
+    /// millis (1000 = 1.0): observed/predicted saturation from the bench's
     /// empirical sweep, applied by [`DispatchTable::corrected_sat`] when a
-    /// misprediction exceeded tolerance. Lives here — not in `PlanPolicy`
-    /// — because it is *measured calibration state* like the kernel
-    /// choices, while the policy stays a pure function of its config.
-    sat_scale: [std::sync::atomic::AtomicU32; 2],
+    /// misprediction exceeded tolerance. Each cell learns independently —
+    /// the saturation point genuinely differs between an L1-resident and a
+    /// memory-resident loop, so one blended factor would mis-correct both.
+    /// Lives here — not in `PlanPolicy` — because it is *measured
+    /// calibration state* like the kernel choices, while the policy stays
+    /// a pure function of its config.
+    sat_scale: [[std::sync::atomic::AtomicU32; 3]; 2],
 }
 
 fn median_cycles_f32(f: fn(&[f32], &[f32]) -> f32, a: &[f32], b: &[f32], reps: usize) -> f64 {
@@ -224,11 +250,14 @@ impl DispatchTable {
                 Precision::Dp => 8u64,
             };
             let mut per_class: Vec<Choice> = Vec::with_capacity(3);
+            // tiers whose winners are timed and batch-probed; Exact is
+            // selected without timing (sole entry per precision, and its
+            // expansion path at the MEM probe would dominate calibration)
+            const TIMED: [Accuracy; 3] = [Accuracy::Naive, Accuracy::Kahan, Accuracy::Dot2];
             for (ci, &total) in probe_bytes.iter().enumerate() {
                 let n = (total / (2 * elem)).max(64) as usize;
-                let mut best_kahan: Option<(f64, HostKernel)> = None;
-                let mut best_naive: Option<(f64, HostKernel)> = None;
-                let mut batches = (BatchChoice::unmeasured(), BatchChoice::unmeasured());
+                let mut best: [Option<(f64, HostKernel)>; 4] = [None; 4];
+                let mut batches = [BatchChoice::unmeasured(); 4];
                 match prec {
                     Precision::Sp => {
                         let av = rng.normal_f32_vec(n);
@@ -240,23 +269,24 @@ impl DispatchTable {
                             if k.prec != prec {
                                 continue;
                             }
+                            let slot = &mut best[acc_index(k.accuracy)];
+                            if k.accuracy == Accuracy::Exact {
+                                if slot.is_none() {
+                                    *slot = Some((0.0, *k));
+                                }
+                                continue;
+                            }
                             let cy = median_cycles_f32(f, a.as_slice(), b.as_slice(), reps);
-                            let slot = if k.variant == Variant::Naive {
-                                &mut best_naive
-                            } else {
-                                &mut best_kahan
-                            };
                             if slot.map_or(true, |(c, _)| cy < c) {
                                 *slot = Some((cy, *k));
                             }
                         }
                         if ci < SizeClass::Mem.index() {
-                            let (_, kw) = best_kahan.expect("compensated winner");
-                            let (_, nw) = best_naive.expect("naive winner");
-                            batches = (
-                                probe_batch_f32(&pool, &mut rng, total, reps, &kw),
-                                probe_batch_f32(&pool, &mut rng, total, reps, &nw),
-                            );
+                            for acc in TIMED {
+                                let (_, w) = best[acc_index(acc)].expect("tier winner");
+                                batches[acc_index(acc)] =
+                                    probe_batch_f32(&pool, &mut rng, total, reps, &w);
+                            }
                         }
                     }
                     Precision::Dp => {
@@ -269,62 +299,57 @@ impl DispatchTable {
                             if k.prec != prec {
                                 continue;
                             }
+                            let slot = &mut best[acc_index(k.accuracy)];
+                            if k.accuracy == Accuracy::Exact {
+                                if slot.is_none() {
+                                    *slot = Some((0.0, *k));
+                                }
+                                continue;
+                            }
                             let cy = median_cycles_f64(f, a.as_slice(), b.as_slice(), reps);
-                            let slot = if k.variant == Variant::Naive {
-                                &mut best_naive
-                            } else {
-                                &mut best_kahan
-                            };
                             if slot.map_or(true, |(c, _)| cy < c) {
                                 *slot = Some((cy, *k));
                             }
                         }
                         if ci < SizeClass::Mem.index() {
-                            let (_, kw) = best_kahan.expect("compensated winner");
-                            let (_, nw) = best_naive.expect("naive winner");
-                            batches = (
-                                probe_batch_f64(&pool, &mut rng, total, reps, &kw),
-                                probe_batch_f64(&pool, &mut rng, total, reps, &nw),
-                            );
+                            for acc in TIMED {
+                                let (_, w) = best[acc_index(acc)].expect("tier winner");
+                                batches[acc_index(acc)] =
+                                    probe_batch_f64(&pool, &mut rng, total, reps, &w);
+                            }
                         }
                     }
                 }
-                // scalar naive + scalar kahan are always available, so both
-                // slots are guaranteed to be filled
-                let (kc, kahan) = best_kahan.expect("at least one compensated kernel");
-                let (nc, naive) = best_naive.expect("at least one naive kernel");
+                // every tier has an always-available scalar kernel, so every
+                // slot is guaranteed to be filled
+                let filled =
+                    best.map(|o| o.expect("every accuracy tier has an always-available kernel"));
                 per_class.push(Choice {
-                    kahan,
-                    naive,
-                    probe_cy: (kc, nc),
-                    kahan_batch: batches.0,
-                    naive_batch: batches.1,
+                    winners: filled.map(|(_, k)| k),
+                    probe: filled.map(|(c, _)| c),
+                    batches,
                 });
             }
             // the calibrated batch cutoff: batching must never be used
             // above the size class where it stops winning, so once a class
             // comes out serial every larger class is forced serial too
-            let mut kahan_on = true;
-            let mut naive_on = true;
+            let mut on = [true; 4];
             for c in per_class.iter_mut() {
-                if !kahan_on {
-                    c.kahan_batch.fused = None;
+                for (t, keep) in on.iter_mut().enumerate() {
+                    if !*keep {
+                        c.batches[t].fused = None;
+                    }
+                    *keep &= c.batches[t].fused.is_some();
                 }
-                if !naive_on {
-                    c.naive_batch.fused = None;
-                }
-                kahan_on &= c.kahan_batch.fused.is_some();
-                naive_on &= c.naive_batch.fused.is_some();
             }
             rows.push([per_class[0], per_class[1], per_class[2]]);
         }
         DispatchTable {
             choices: [rows[0], rows[1]],
             probe_bytes,
-            sat_scale: [
-                std::sync::atomic::AtomicU32::new(1000),
-                std::sync::atomic::AtomicU32::new(1000),
-            ],
+            sat_scale: std::array::from_fn(|_| {
+                std::array::from_fn(|_| std::sync::atomic::AtomicU32::new(1000))
+            }),
         }
     }
 
@@ -333,7 +358,14 @@ impl DispatchTable {
     /// exceeds `tol`, the stored correction becomes observed/predicted
     /// (clamped to [0.25, 4.0] so one noisy sweep cannot collapse or
     /// explode the cap); within tolerance the correction resets to 1.0.
-    pub fn note_saturation(&self, prec: Precision, predicted: u32, observed: u32, tol: f64) {
+    pub fn note_saturation(
+        &self,
+        prec: Precision,
+        class: SizeClass,
+        predicted: u32,
+        observed: u32,
+        tol: f64,
+    ) {
         use std::sync::atomic::Ordering;
         if predicted == 0 || observed == 0 {
             return;
@@ -344,18 +376,21 @@ impl DispatchTable {
         } else {
             1.0
         };
-        self.sat_scale[prec_index(prec)].store((scale * 1000.0).round() as u32, Ordering::Relaxed);
+        self.sat_scale[prec_index(prec)][class.index()]
+            .store((scale * 1000.0).round() as u32, Ordering::Relaxed);
     }
 
-    /// Apply the stored saturation correction to a model-predicted cap.
-    /// `usize::MAX` means "uncapped" and passes through untouched; a
-    /// corrected cap never drops below one worker.
-    pub fn corrected_sat(&self, prec: Precision, base: usize) -> usize {
+    /// Apply the stored saturation correction for one `(precision, size
+    /// class)` cell to a model-predicted cap. `usize::MAX` means "uncapped"
+    /// and passes through untouched; a corrected cap never drops below one
+    /// worker.
+    pub fn corrected_sat(&self, prec: Precision, class: SizeClass, base: usize) -> usize {
         use std::sync::atomic::Ordering;
         if base == usize::MAX {
             return usize::MAX;
         }
-        let scale = self.sat_scale[prec_index(prec)].load(Ordering::Relaxed) as f64 / 1000.0;
+        let scale =
+            self.sat_scale[prec_index(prec)][class.index()].load(Ordering::Relaxed) as f64 / 1000.0;
         ((base as f64 * scale).round() as usize).max(1)
     }
 
@@ -363,34 +398,25 @@ impl DispatchTable {
         &self.choices[prec_index(prec)][class.index()]
     }
 
-    /// Kernel for a request: `Variant::Naive` maps to the naive winner,
-    /// every compensated variant maps to the Kahan winner.
-    pub fn select(&self, prec: Precision, variant: Variant, class: SizeClass) -> &HostKernel {
-        let c = self.choice(prec, class);
-        if variant == Variant::Naive {
-            &c.naive
-        } else {
-            &c.kahan
-        }
+    /// Kernel for a request: the requested accuracy tier's winner in this
+    /// `(precision, size class)` cell.
+    pub fn select(&self, prec: Precision, accuracy: Accuracy, class: SizeClass) -> &HostKernel {
+        self.choice(prec, class).winner(accuracy)
     }
 
     /// Fused multi-dot kernel for a batch of requests in this cell, if
     /// calibration kept one. `None` means: execute the batch as a serial
     /// loop of the single winner (request coalescing above the kernel
-    /// still applies). The returned kernel is bit-identical, per request,
+    /// still applies; Dot2 and Exact have no fused twins and always come
+    /// back serial). The returned kernel is bit-identical, per request,
     /// to what [`DispatchTable::select`] returns for the same cell.
     pub fn select_batch(
         &self,
         prec: Precision,
-        variant: Variant,
+        accuracy: Accuracy,
         class: SizeClass,
     ) -> Option<&'static BatchKernel> {
-        let c = self.choice(prec, class);
-        if variant == Variant::Naive {
-            c.naive_batch.fused
-        } else {
-            c.kahan_batch.fused
-        }
+        self.choice(prec, class).batch(accuracy).fused
     }
 
     /// Human-readable dispatch table (for `repro engine-info` and benches).
@@ -402,8 +428,15 @@ impl DispatchTable {
                 None => "serial".to_string(),
             }
         }
+        fn winner(c: &Choice, acc: Accuracy) -> String {
+            if acc == Accuracy::Exact {
+                c.winner(acc).name.to_string()
+            } else {
+                format!("{} ({:.0} cy)", c.winner(acc).name, c.probe_cy(acc))
+            }
+        }
         let mut t = crate::util::Table::new("autotuned kernel dispatch (per size class)")
-            .headers(["prec", "class", "probe WS", "kahan winner", "naive winner", "batched (kahan)"]);
+            .headers(["prec", "class", "probe WS", "naive", "kahan", "dot2", "exact", "batched (kahan)"]);
         for prec in [Precision::Sp, Precision::Dp] {
             for class in SizeClass::ALL {
                 let c = self.choice(prec, class);
@@ -411,9 +444,11 @@ impl DispatchTable {
                     if prec == Precision::Sp { "SP" } else { "DP" }.to_string(),
                     class.name().to_string(),
                     crate::util::fmt::bytes(self.probe_bytes[class.index()]),
-                    format!("{} ({:.0} cy)", c.kahan.name, c.probe_cy.0),
-                    format!("{} ({:.0} cy)", c.naive.name, c.probe_cy.1),
-                    batched(&c.kahan_batch),
+                    winner(c, Accuracy::Naive),
+                    winner(c, Accuracy::Kahan),
+                    winner(c, Accuracy::Dot2),
+                    winner(c, Accuracy::Exact),
+                    batched(c.batch(Accuracy::Kahan)),
                 ]);
             }
         }
@@ -450,19 +485,26 @@ mod tests {
         for prec in [Precision::Sp, Precision::Dp] {
             for class in SizeClass::ALL {
                 let c = t.choice(prec, class);
-                assert_eq!(c.kahan.prec, prec);
-                assert_eq!(c.naive.prec, prec);
-                assert!(c.kahan.available && c.naive.available);
-                assert_ne!(c.kahan.variant, Variant::Naive);
-                assert_eq!(c.naive.variant, Variant::Naive);
-                assert!(c.probe_cy.0 > 0.0 && c.probe_cy.1 > 0.0);
+                for acc in Accuracy::ALL {
+                    let w = c.winner(acc);
+                    assert_eq!(w.prec, prec);
+                    assert_eq!(w.accuracy, acc, "winner must belong to its tier");
+                    assert!(w.available);
+                    if acc == Accuracy::Exact {
+                        // never timed; exactly one scalar expansion kernel
+                        assert_eq!(c.probe_cy(acc), 0.0);
+                        assert_eq!(w.simd, crate::isa::Simd::Scalar);
+                    } else {
+                        assert!(c.probe_cy(acc) > 0.0);
+                    }
+                }
             }
         }
-        // select maps variants onto the right column
-        let k = t.select(Precision::Sp, Variant::Kahan, SizeClass::L1);
-        assert_ne!(k.variant, Variant::Naive);
-        let n = t.select(Precision::Sp, Variant::Naive, SizeClass::Mem);
-        assert_eq!(n.variant, Variant::Naive);
+        // select maps tiers onto the right column
+        for acc in Accuracy::ALL {
+            let k = t.select(Precision::Sp, acc, SizeClass::L1);
+            assert_eq!(k.accuracy, acc);
+        }
         // render shouldn't panic
         let _ = t.render().render();
     }
@@ -477,51 +519,60 @@ mod tests {
 
     /// The saturation-correction loop: identity by default, observed/
     /// predicted once a misprediction exceeds tolerance, uncapped cells
-    /// untouched, floor of one worker.
+    /// untouched, floor of one worker, and every `(precision, size class)`
+    /// cell learns independently.
     #[test]
     fn saturation_correction_applies_and_resets() {
         let t = DispatchTable::calibrate([8 << 10, 64 << 10, 256 << 10], 1);
         // default: identity
-        assert_eq!(t.corrected_sat(Precision::Sp, 4), 4);
-        assert_eq!(t.corrected_sat(Precision::Sp, usize::MAX), usize::MAX);
+        assert_eq!(t.corrected_sat(Precision::Sp, SizeClass::Mem, 4), 4);
+        assert_eq!(t.corrected_sat(Precision::Sp, SizeClass::Mem, usize::MAX), usize::MAX);
         // within tolerance: stays identity
-        t.note_saturation(Precision::Sp, 4, 4, 0.25);
-        assert_eq!(t.corrected_sat(Precision::Sp, 4), 4);
+        t.note_saturation(Precision::Sp, SizeClass::Mem, 4, 4, 0.25);
+        assert_eq!(t.corrected_sat(Precision::Sp, SizeClass::Mem, 4), 4);
         // beyond tolerance: scaled by observed/predicted
-        t.note_saturation(Precision::Sp, 4, 8, 0.25);
-        assert_eq!(t.corrected_sat(Precision::Sp, 4), 8);
-        assert_eq!(t.corrected_sat(Precision::Sp, usize::MAX), usize::MAX, "uncapped survives");
-        // precision rows are independent
-        assert_eq!(t.corrected_sat(Precision::Dp, 4), 4);
+        t.note_saturation(Precision::Sp, SizeClass::Mem, 4, 8, 0.25);
+        assert_eq!(t.corrected_sat(Precision::Sp, SizeClass::Mem, 4), 8);
+        assert_eq!(
+            t.corrected_sat(Precision::Sp, SizeClass::Mem, usize::MAX),
+            usize::MAX,
+            "uncapped survives"
+        );
+        // sibling cells are independent: same precision other class, and
+        // same class other precision, both stay identity
+        assert_eq!(t.corrected_sat(Precision::Sp, SizeClass::L1, 4), 4);
+        assert_eq!(t.corrected_sat(Precision::Dp, SizeClass::Mem, 4), 4);
         // collapse is floored at one worker
-        t.note_saturation(Precision::Dp, 8, 1, 0.25);
-        assert_eq!(t.corrected_sat(Precision::Dp, 2), 1);
+        t.note_saturation(Precision::Dp, SizeClass::Llc, 8, 1, 0.25);
+        assert_eq!(t.corrected_sat(Precision::Dp, SizeClass::Llc, 2), 1);
+        assert_eq!(t.corrected_sat(Precision::Dp, SizeClass::Mem, 2), 2);
         // back within tolerance: reset to identity
-        t.note_saturation(Precision::Sp, 4, 4, 0.25);
-        assert_eq!(t.corrected_sat(Precision::Sp, 4), 4);
+        t.note_saturation(Precision::Sp, SizeClass::Mem, 4, 4, 0.25);
+        assert_eq!(t.corrected_sat(Precision::Sp, SizeClass::Mem, 4), 4);
     }
 
     /// Batched-choice invariants: a kept fused kernel is always the twin of
-    /// the cell's single winner, MEM is always serial, and the kept set is
-    /// monotone (no class may batch if a smaller one does not).
+    /// the cell's single winner, MEM is always serial, the kept set is
+    /// monotone (no class may batch if a smaller one does not), and the
+    /// tiers without fused twins (Dot2, Exact) always come back serial.
     #[test]
     fn batch_choice_pairs_with_winner_and_cutoff_is_monotone() {
         let t = DispatchTable::calibrate([8 << 10, 64 << 10, 256 << 10], 1);
         for prec in [Precision::Sp, Precision::Dp] {
-            for variant in [Variant::Kahan, Variant::Naive] {
+            for acc in Accuracy::ALL {
                 assert!(
-                    t.select_batch(prec, variant, SizeClass::Mem).is_none(),
+                    t.select_batch(prec, acc, SizeClass::Mem).is_none(),
                     "memory-resident dots must never take the fused path"
                 );
                 let mut prev_on = true;
                 for class in SizeClass::ALL {
-                    let fused = t.select_batch(prec, variant, class);
+                    let fused = t.select_batch(prec, acc, class);
                     if let Some(bk) = fused {
                         assert!(
                             prev_on,
                             "batch cutoff must be monotone over size classes"
                         );
-                        let winner = t.select(prec, variant, class);
+                        let winner = t.select(prec, acc, class);
                         assert_eq!(
                             bk.matches, winner.name,
                             "fused kernel must be the twin of the single winner"
@@ -529,6 +580,15 @@ mod tests {
                         assert!(bk.available);
                     }
                     prev_on = fused.is_some();
+                }
+            }
+            for acc in [Accuracy::Dot2, Accuracy::Exact] {
+                for class in SizeClass::ALL {
+                    assert!(
+                        t.select_batch(prec, acc, class).is_none(),
+                        "{} has no fused twin and must serial-loop",
+                        acc.name()
+                    );
                 }
             }
         }

@@ -30,7 +30,10 @@
 //!   │ PlanPolicy (autotuned DispatchTable + topology + ServiceConfig)   │
 //!   │ compiles every request into a DotPlan: inline / one-shard         │
 //!   │ parallel / fused batch with cutoff / weighted split with flat     │
-//!   │ compensated merge. Every threshold below is a planner call.       │
+//!   │ compensated merge. Every threshold below is a planner call. The   │
+//!   │ plan carries the requested ACCURACY tier (naive / kahan / dot2 /  │
+//!   │ exact) — the dispatch table holds one winner per tier per cell,   │
+//!   │ and exact always plans Inline (scalar expansion, no SIMD claim)   │
 //!   └───────────────────────────────────────────────────────────────────┘
 //!        │
 //!        ▼
@@ -63,8 +66,8 @@
 //!                  │ │              balanced chunks (max−min ≤ one  │ │
 //!                  │ │              cache line), one per worker     │ │
 //!                  │ │  3. kernel : per chunk, the autotuned best   │ │
-//!                  │ │              host SIMD kernel for            │ │
-//!                  │ │              (precision, size class)         │ │
+//!                  │ │              host SIMD kernel for (accuracy  │ │
+//!                  │ │              tier, precision, size class)    │ │
 //!                  │ │  4. merge  : compensated (Neumaier) fold of  │ │
 //!                  │ │              per-chunk partials, chunk order │ │
 //!                  │ └──────────────────────────────────────────────┘ │
@@ -104,12 +107,17 @@
 //!
 //! # Accuracy
 //!
-//! Each chunk is a full Kahan dot (per-lane compensation folded by the
-//! kernel); the cross-chunk merge reuses the registry's compensated fold.
-//! The parallel result therefore keeps the sequential Kahan error bound
-//! `O(u)·Σ|aᵢbᵢ|` for any chunk count — see the property tests in
-//! `rust/tests/test_engine.rs` (random lengths, chunk counts, and
-//! Ogita–Rump–Oishi ill-conditioned inputs).
+//! Accuracy is a request dimension: every dot names its tier (Naive /
+//! Kahan / Dot2 / Exact) and the engine serves it with the tier's
+//! autotuned winner — see "# Accuracy tiers" in the [`plan`] module.
+//! Within a compensated tier each chunk is a full compensated dot
+//! (per-lane compensation folded by the kernel); the cross-chunk merge
+//! reuses the registry's compensated fold. The parallel result therefore
+//! keeps the tier's sequential error bound — Kahan's `O(u)·Σ|aᵢbᵢ|`,
+//! Dot2's `u + O(u²)·cond` — for any chunk count; see the property tests
+//! in `rust/tests/test_engine.rs` (random lengths, chunk counts, and
+//! Ogita–Rump–Oishi ill-conditioned inputs). Exact-tier dots always run
+//! inline on one worker and return the correctly rounded value.
 //!
 //! # Determinism
 //!
@@ -147,7 +155,7 @@ pub use sharded::{HomedSlice, ShardedConfig, ShardedEngine, ShardedStats};
 pub use topology::{topology_cached, NumaNode, Topology};
 
 use crate::bench::kernels::KernelFn;
-use crate::isa::{Precision, Variant};
+use crate::isa::{Accuracy, Precision};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
@@ -191,19 +199,20 @@ pub struct EngineStats {
     pub pin_failures: u64,
 }
 
-/// Autotuned kernel for one request shape. Free functions (not methods):
+/// Autotuned kernel for one request shape: the requested accuracy tier's
+/// winner at the request's size class. Free functions (not methods):
 /// the dispatch table is process-wide, and the sharded tier must select
 /// the kernel **once** for the full request size before splitting it, so
 /// every shard runs the same kernel and bit-determinism survives sharding.
-pub fn kernel_for_f32(variant: Variant, total_bytes: u64) -> fn(&[f32], &[f32]) -> f32 {
-    match dispatch().select(Precision::Sp, variant, SizeClass::of(total_bytes)).f {
+pub fn kernel_for_f32(accuracy: Accuracy, total_bytes: u64) -> fn(&[f32], &[f32]) -> f32 {
+    match dispatch().select(Precision::Sp, accuracy, SizeClass::of(total_bytes)).f {
         KernelFn::F32(f) => f,
         KernelFn::F64(_) => unreachable!("dispatch returned a kernel of the wrong precision"),
     }
 }
 
-pub fn kernel_for_f64(variant: Variant, total_bytes: u64) -> fn(&[f64], &[f64]) -> f64 {
-    match dispatch().select(Precision::Dp, variant, SizeClass::of(total_bytes)).f {
+pub fn kernel_for_f64(accuracy: Accuracy, total_bytes: u64) -> fn(&[f64], &[f64]) -> f64 {
+    match dispatch().select(Precision::Dp, accuracy, SizeClass::of(total_bytes)).f {
         KernelFn::F64(f) => f,
         KernelFn::F32(_) => unreachable!("dispatch returned a kernel of the wrong precision"),
     }
@@ -244,7 +253,7 @@ macro_rules! engine_dot_methods {
         /// Lengths: see the "Length policy" in [`plan`] — equal lengths
         /// are the contract (`debug_assert`ed), release builds truncate to
         /// the shorter stream.
-        pub fn $dot(&self, variant: Variant, a: &[$ty], b: &[$ty]) -> $ty {
+        pub fn $dot(&self, accuracy: Accuracy, a: &[$ty], b: &[$ty]) -> $ty {
             debug_assert_eq!(
                 a.len(),
                 b.len(),
@@ -253,8 +262,10 @@ macro_rules! engine_dot_methods {
             self.requests.fetch_add(1, Ordering::Relaxed);
             let n = a.len().min(b.len());
             let total_bytes = (2 * n * std::mem::size_of::<$ty>()) as u64;
-            let f = $kernel_for(variant, total_bytes);
-            if self.serves_inline(total_bytes) {
+            let f = $kernel_for(accuracy, total_bytes);
+            // the Exact tier is always inline — scalar expansion arithmetic
+            // has no partial-merge story (see "# Accuracy tiers" in `plan`)
+            if accuracy == Accuracy::Exact || self.serves_inline(total_bytes) {
                 return f(&a[..n], &b[..n]);
             }
             // worker-side admission: first-touch places fresh pool pages
@@ -275,7 +286,7 @@ macro_rules! engine_dot_methods {
         /// streams. Length policy as for the slice path.
         pub fn $dot_pooled(
             &self,
-            variant: Variant,
+            accuracy: Accuracy,
             a: &Arc<PooledSlice<$ty>>,
             b: &Arc<PooledSlice<$ty>>,
         ) -> $ty {
@@ -287,8 +298,8 @@ macro_rules! engine_dot_methods {
             self.requests.fetch_add(1, Ordering::Relaxed);
             let n = a.len().min(b.len());
             let total_bytes = (2 * n * std::mem::size_of::<$ty>()) as u64;
-            let f = $kernel_for(variant, total_bytes);
-            if self.serves_inline(total_bytes) {
+            let f = $kernel_for(accuracy, total_bytes);
+            if accuracy == Accuracy::Exact || self.serves_inline(total_bytes) {
                 return f(&a.as_slice()[..n], &b.as_slice()[..n]);
             }
             self.parallel_jobs.fetch_add(1, Ordering::Relaxed);
@@ -311,7 +322,7 @@ macro_rules! engine_dot_methods {
 macro_rules! exec_batch_impl {
     ($name:ident, $ty:ty, $prec:expr, $kernel_for:ident, $call:ident) => {
         pub(crate) fn $name(
-            variant: Variant,
+            accuracy: Accuracy,
             items: &[(usize, &[$ty], &[$ty])],
             tx: &std::sync::mpsc::Sender<(usize, Result<$ty, String>)>,
         ) {
@@ -326,11 +337,11 @@ macro_rules! exec_batch_impl {
                 let run = &items[i..j];
                 // same class ⇒ same single winner and same fused choice as
                 // the serial path — the batching invariant needs exactly that
-                let single = $kernel_for(variant, total(run[0].1));
+                let single = $kernel_for(accuracy, total(run[0].1));
                 let mut fused_done = false;
                 // fuse-or-loop is the planner's call (the calibrated
                 // cutoff lives behind `plan::batch_exec`)
-                if let Some(bk) = plan::batch_exec(dispatch(), $prec, variant, class, run.len()) {
+                if let Some(bk) = plan::batch_exec(dispatch(), $prec, accuracy, class, run.len()) {
                     let pairs: Vec<(&[$ty], &[$ty])> =
                         run.iter().map(|&(_, a, b)| (a, b)).collect();
                     let mut vals = vec![0.0 as $ty; run.len()];
@@ -341,6 +352,7 @@ macro_rules! exec_batch_impl {
                         for (&(idx, _, _), v) in run.iter().zip(&vals) {
                             let _ = tx.send((idx, Ok(*v)));
                         }
+                        FUSED_DOTS.fetch_add(run.len() as u64, Ordering::Relaxed);
                         fused_done = true;
                     }
                     // a fused-kernel panic falls through to the serial
@@ -363,6 +375,19 @@ macro_rules! exec_batch_impl {
 
 exec_batch_impl!(exec_batch_f32, f32, Precision::Sp, kernel_for_f32, call_f32);
 exec_batch_impl!(exec_batch_f64, f64, Precision::Dp, kernel_for_f64, call_f64);
+
+/// Process-global count of dots served by a FUSED multi-dot kernel, as
+/// opposed to the serial loop inside a batched execution path. Global
+/// rather than per-engine because the fuse-or-loop decision runs inside
+/// `exec_batch_*` on worker threads with no engine handle in scope;
+/// tests observe before/after deltas to assert which tiers actually
+/// fused (tiers without a fused twin — Dot2, Exact — can never move it).
+static FUSED_DOTS: AtomicU64 = AtomicU64::new(0);
+
+/// Snapshot of the process-global fused-dot counter.
+pub fn fused_dots_total() -> u64 {
+    FUSED_DOTS.load(Ordering::Relaxed)
+}
 
 /// Generates the per-precision batch methods on [`DotEngine`].
 macro_rules! engine_batch_methods {
@@ -404,7 +429,7 @@ macro_rules! engine_batch_methods {
         /// handoff); requests big enough for the chunked-parallel path
         /// take the exact serial route one by one. Must not be called
         /// from one of this engine's own workers.
-        pub fn $dot_batch(&self, variant: Variant, reqs: &[(&[$ty], &[$ty])]) -> Vec<$ty> {
+        pub fn $dot_batch(&self, accuracy: Accuracy, reqs: &[(&[$ty], &[$ty])]) -> Vec<$ty> {
             let mut out = vec![0.0 as $ty; reqs.len()];
             let mut smalls: Vec<(usize, &[$ty], &[$ty])> = Vec::with_capacity(reqs.len());
             let mut bigs: Vec<usize> = Vec::new();
@@ -417,7 +442,7 @@ macro_rules! engine_batch_methods {
                 );
                 let n = a.len().min(b.len());
                 let total = (2 * n * std::mem::size_of::<$ty>()) as u64;
-                if self.serves_inline(total) {
+                if accuracy == Accuracy::Exact || self.serves_inline(total) {
                     small_bytes += total;
                     smalls.push((i, &a[..n], &b[..n]));
                 } else {
@@ -433,7 +458,7 @@ macro_rules! engine_batch_methods {
                 if self.serves_inline(small_bytes) {
                     // the whole batch is cheaper than a handoff: fused
                     // execution right here, zero dispatch
-                    $exec(variant, &smalls, &tx);
+                    $exec(accuracy, &smalls, &tx);
                 } else {
                     // one worker job per contiguous chunk-group of requests
                     let groups = self.workers.size().min(smalls.len());
@@ -464,7 +489,7 @@ macro_rules! engine_batch_methods {
                                         )
                                     })
                                     .collect();
-                                $exec(variant, &items, &tx);
+                                $exec(accuracy, &items, &tx);
                             }),
                         );
                     }
@@ -474,7 +499,7 @@ macro_rules! engine_batch_methods {
             // big dots take the exact serial path while the groups run
             for &i in &bigs {
                 let (a, b) = reqs[i];
-                out[i] = self.$dot(variant, a, b);
+                out[i] = self.$dot(accuracy, a, b);
             }
             let mut got = 0usize;
             for (i, r) in rx {
@@ -558,8 +583,9 @@ impl DotEngine {
     /// With governance off (or a class that never saturates) this is
     /// exactly the worker count — the pre-governance behaviour.
     pub(crate) fn worker_cap(&self, prec: Precision, total_bytes: u64) -> usize {
-        let base = self.caps[autotune::prec_index(prec)][SizeClass::of(total_bytes).index()];
-        dispatch().corrected_sat(prec, base).min(self.workers.size()).max(1)
+        let class = SizeClass::of(total_bytes);
+        let base = self.caps[autotune::prec_index(prec)][class.index()];
+        dispatch().corrected_sat(prec, class, base).min(self.workers.size()).max(1)
     }
 
     /// Count one parallel dot whose fan-out governance capped below the
@@ -670,9 +696,9 @@ mod tests {
             let exact = exact_dot_f32(&a, &b);
             let scale: f64 =
                 a.iter().zip(&b).map(|(x, y)| (x * y).abs() as f64).sum::<f64>().max(1e-30);
-            let got = e.dot_f32(Variant::Kahan, &a, &b) as f64;
+            let got = e.dot_f32(Accuracy::Kahan, &a, &b) as f64;
             assert!((got - exact).abs() / scale < 1e-6, "n={n}");
-            let gotn = e.dot_f32(Variant::Naive, &a, &b) as f64;
+            let gotn = e.dot_f32(Accuracy::Naive, &a, &b) as f64;
             assert!((gotn - exact).abs() / scale < 1e-4, "naive n={n}");
         }
         let s = e.stats();
@@ -692,9 +718,9 @@ mod tests {
             av.iter().zip(&bv).map(|(x, y)| (x * y).abs() as f64).sum::<f64>().max(1e-30);
 
         // request path: admit per call — buffers recycle after round 1
-        let first = e.dot_f32(Variant::Kahan, &av, &bv);
+        let first = e.dot_f32(Accuracy::Kahan, &av, &bv);
         for _ in 0..3 {
-            let again = e.dot_f32(Variant::Kahan, &av, &bv);
+            let again = e.dot_f32(Accuracy::Kahan, &av, &bv);
             assert_eq!(first.to_bits(), again.to_bits(), "deterministic");
         }
         assert!(e.stats().pool.hits >= 6, "{:?}", e.stats());
@@ -702,7 +728,7 @@ mod tests {
         // steady-state path: admit once, dot many
         let pa = e.admit_f32(&av);
         let pb = e.admit_f32(&bv);
-        let v = e.dot_pooled_f32(Variant::Kahan, &pa, &pb) as f64;
+        let v = e.dot_pooled_f32(Accuracy::Kahan, &pa, &pb) as f64;
         assert!((v - exact).abs() / scale < 1e-6);
     }
 
@@ -716,12 +742,12 @@ mod tests {
         let b = rng.normal_f64_vec(n);
         let exact = exact_dot_f64(&a, &b);
         let scale: f64 = a.iter().zip(&b).map(|(x, y)| (x * y).abs()).sum::<f64>().max(1e-300);
-        let got = e.dot_f64(Variant::Kahan, &a, &b);
+        let got = e.dot_f64(Accuracy::Kahan, &a, &b);
         assert!((got - exact).abs() / scale < 1e-14);
         // zero-copy steady state exists for f64 too
         let pa = e.admit_f64(&a);
         let pb = e.admit_f64(&b);
-        let pooled = e.dot_pooled_f64(Variant::Kahan, &pa, &pb);
+        let pooled = e.dot_pooled_f64(Accuracy::Kahan, &pa, &pb);
         assert!((pooled - exact).abs() / scale < 1e-14);
     }
 
@@ -746,8 +772,8 @@ mod tests {
         let view: Vec<(&[f32], &[f32])> =
             reqs.iter().map(|(a, b)| (a.as_slice(), b.as_slice())).collect();
         let serial: Vec<f32> =
-            view.iter().map(|&(a, b)| e.dot_f32(Variant::Kahan, a, b)).collect();
-        let batched = e.dot_batch_f32(Variant::Kahan, &view);
+            view.iter().map(|&(a, b)| e.dot_f32(Accuracy::Kahan, a, b)).collect();
+        let batched = e.dot_batch_f32(Accuracy::Kahan, &view);
         for (i, (s, g)) in serial.iter().zip(&batched).enumerate() {
             assert_eq!(s.to_bits(), g.to_bits(), "req {i} (n={})", sizes[i]);
         }
@@ -780,8 +806,8 @@ mod tests {
         let n = 200_000; // 1.6 MB total -> chunked-parallel path
         let a = rng.normal_f32_vec(n);
         let b = rng.normal_f32_vec(n);
-        let x = governed.dot_f32(Variant::Kahan, &a, &b);
-        let y = open.dot_f32(Variant::Kahan, &a, &b);
+        let x = governed.dot_f32(Accuracy::Kahan, &a, &b);
+        let y = open.dot_f32(Accuracy::Kahan, &a, &b);
         assert_eq!(x.to_bits(), y.to_bits(), "a worker cap must never change bits");
         let (gs, os) = (governed.stats(), open.stats());
         assert_eq!(gs.capped_requests, 1, "{gs:?}");

@@ -22,6 +22,22 @@
 //! where a decision needs it, so tests can drive the planner with any
 //! table.
 //!
+//! # Accuracy tiers
+//!
+//! Accuracy is a **request dimension**, orthogonal to route: every plan
+//! carries the requested [`Accuracy`] tier (Naive / Kahan / Dot2 / Exact)
+//! and the dispatch table holds a per-tier winner per `(precision, size
+//! class)` cell, so `plan → select` always lands on a kernel of the
+//! requested tier. Routing never changes bits *within* a tier — the
+//! bit-identity invariants below hold per tier, and the tier's sequential
+//! error bound (Kahan's `2eps`-per-step, Dot2's `eps + O(eps²)·cond`)
+//! survives every route because partials merge through the same
+//! compensated flat fold the sequential kernels use. The `Exact` tier is
+//! the one exception to free routing: its expansion arithmetic is scalar
+//! and latency-dominated, so [`PlanPolicy::plan_dot`] routes it
+//! [`DotRoute::Inline`] unconditionally (one worker, no SIMD claim, no
+//! split) — correctly-rounded results have no partial-merge story.
+//!
 //! # Length policy
 //!
 //! THE one place the policy is defined: `dot_*`/`dot_pooled_*` compute
@@ -49,7 +65,11 @@
 //! [`DotRoute::Split`] take the exact serial route, one by one. The fused
 //! kernels are only reachable through [`batch_exec`], which consults the
 //! dispatch table — the table pairs them with the single winner of the
-//! same cell and keeps them only below the calibrated batch-size cutoff.
+//! same `(precision, accuracy, size class)` cell and keeps them only
+//! below the calibrated batch-size cutoff. Tiers without fused twins
+//! (Dot2, Exact) fall back to the serial loop of the tier's single
+//! winner — fuse-or-loop, bit-identical to serial resubmission either
+//! way.
 //! Property-tested on Ogita–Rump–Oishi inputs at every layer in
 //! `rust/tests/test_batch.rs` and against the planner in
 //! `rust/tests/test_plan.rs`.
@@ -94,7 +114,7 @@
 
 use super::autotune::{DispatchTable, SizeClass};
 use crate::bench::kernels::batch::BatchKernel;
-use crate::isa::{Precision, Variant};
+use crate::isa::{Accuracy, Precision};
 use std::time::Duration;
 
 /// How one dot request executes. Ordered by working-set size: as a
@@ -135,6 +155,10 @@ pub struct DotPlan {
     pub class: SizeClass,
     /// total working set (both streams, bytes) the plan was compiled for
     pub total_bytes: u64,
+    /// requested accuracy tier — the dispatch column `select` resolves
+    /// against, carried so every execution layer serves the tier the
+    /// request asked for
+    pub accuracy: Accuracy,
 }
 
 /// The inline-vs-parallel predicate, shared verbatim by the engine's
@@ -156,14 +180,14 @@ pub fn serves_inline(total_bytes: u64, parallel_cutoff_bytes: usize, workers: us
 pub fn batch_exec(
     table: &DispatchTable,
     prec: Precision,
-    variant: Variant,
+    accuracy: Accuracy,
     class: SizeClass,
     run_len: usize,
 ) -> Option<&'static BatchKernel> {
     if run_len < 2 {
         return None;
     }
-    table.select_batch(prec, variant, class)
+    table.select_batch(prec, accuracy, class)
 }
 
 /// Every machine-dependent threshold the serving stack routes by, in one
@@ -283,19 +307,24 @@ impl PlanPolicy {
     }
 
     /// Compile the plan for one dot of `total_bytes` (both streams) whose
-    /// router preferred `preferred_shard`. Deterministic and monotone in
-    /// `total_bytes`: for a fixed policy and shard, a larger request never
-    /// takes an earlier route (Inline → Parallel → Split).
-    pub fn plan_dot(&self, preferred_shard: usize, total_bytes: u64) -> DotPlan {
+    /// router preferred `preferred_shard`, at the requested accuracy tier.
+    /// Deterministic and monotone in `total_bytes`: for a fixed policy,
+    /// shard and tier, a larger request never takes an earlier route
+    /// (Inline → Parallel → Split). The `Exact` tier is the exception to
+    /// size-based routing: its scalar expansion arithmetic has no
+    /// partial-merge story, so it is always Inline on one worker.
+    pub fn plan_dot(&self, preferred_shard: usize, accuracy: Accuracy, total_bytes: u64) -> DotPlan {
         let shard = self.clamp_shard(preferred_shard);
-        let route = if self.splits(total_bytes) {
+        let route = if accuracy == Accuracy::Exact {
+            DotRoute::Inline
+        } else if self.splits(total_bytes) {
             DotRoute::Split
         } else if self.serves_inline_on(shard, total_bytes) {
             DotRoute::Inline
         } else {
             DotRoute::Parallel
         };
-        DotPlan { route, shard, class: SizeClass::of(total_bytes), total_bytes }
+        DotPlan { route, shard, class: SizeClass::of(total_bytes), total_bytes, accuracy }
     }
 
     /// Global chunk count for a split dot (the explicit override, or one
@@ -370,22 +399,35 @@ mod tests {
     #[test]
     fn routes_partition_the_size_axis() {
         let p = policy();
-        assert_eq!(p.plan_dot(0, 1024).route, DotRoute::Inline);
-        assert_eq!(p.plan_dot(0, (256 * 1024) - 1).route, DotRoute::Inline);
-        assert_eq!(p.plan_dot(0, 256 * 1024).route, DotRoute::Parallel);
-        assert_eq!(p.plan_dot(0, (4 << 20) - 1).route, DotRoute::Parallel);
-        assert_eq!(p.plan_dot(0, 4 << 20).route, DotRoute::Split);
+        for acc in [Accuracy::Naive, Accuracy::Kahan, Accuracy::Dot2] {
+            assert_eq!(p.plan_dot(0, acc, 1024).route, DotRoute::Inline);
+            assert_eq!(p.plan_dot(0, acc, (256 * 1024) - 1).route, DotRoute::Inline);
+            assert_eq!(p.plan_dot(0, acc, 256 * 1024).route, DotRoute::Parallel);
+            assert_eq!(p.plan_dot(0, acc, (4 << 20) - 1).route, DotRoute::Parallel);
+            assert_eq!(p.plan_dot(0, acc, 4 << 20).route, DotRoute::Split);
+        }
         // a single-worker shard never goes parallel, but still splits
         let single = PlanPolicy::new(256 * 1024, 4 << 20, 0, vec![1]);
-        assert_eq!(single.plan_dot(0, 1 << 20).route, DotRoute::Inline);
-        assert_eq!(single.plan_dot(0, 8 << 20).route, DotRoute::Split);
+        assert_eq!(single.plan_dot(0, Accuracy::Kahan, 1 << 20).route, DotRoute::Inline);
+        assert_eq!(single.plan_dot(0, Accuracy::Kahan, 8 << 20).route, DotRoute::Split);
+    }
+
+    #[test]
+    fn exact_tier_always_plans_inline() {
+        let p = policy();
+        for bytes in [1024u64, 256 * 1024, 4 << 20, 64 << 20] {
+            let plan = p.plan_dot(1, Accuracy::Exact, bytes);
+            assert_eq!(plan.route, DotRoute::Inline, "exact never parallelizes or splits");
+            assert_eq!(plan.shard, 1, "still lands on the preferred shard");
+            assert_eq!(plan.accuracy, Accuracy::Exact);
+        }
     }
 
     #[test]
     fn preferred_shard_is_clamped_not_dropped() {
         let p = policy();
-        assert_eq!(p.plan_dot(5, 1024).shard, 1);
-        assert_eq!(p.plan_dot(4, 1024).shard, 0);
+        assert_eq!(p.plan_dot(5, Accuracy::Kahan, 1024).shard, 1);
+        assert_eq!(p.plan_dot(4, Accuracy::Kahan, 1024).shard, 0);
     }
 
     #[test]

@@ -48,7 +48,7 @@ use super::{
     EngineStats,
 };
 use crate::bench::kernels::{compensated_fold_f32, compensated_fold_f64};
-use crate::isa::{Precision, Variant};
+use crate::isa::{Accuracy, Precision};
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, OnceLock};
 
@@ -147,8 +147,8 @@ macro_rules! sharded_dot_impl {
         /// (The round-robin cursor also advances on split-path dots, which
         /// ignore it — harmless, and it keeps every threshold decision in
         /// the preferred-shard method below.)
-        pub fn $dot(&self, variant: Variant, a: &[$ty], b: &[$ty]) -> $ty {
-            self.$dot_on(self.route(), variant, a, b)
+        pub fn $dot(&self, accuracy: Accuracy, a: &[$ty], b: &[$ty]) -> $ty {
+            self.$dot_on(self.route(), accuracy, a, b)
         }
 
         /// Like the round-robin dot, but with the sub-split shard chosen
@@ -161,7 +161,7 @@ macro_rules! sharded_dot_impl {
         /// the split path degenerates to exactly the per-engine chunked
         /// reduction (same geometry, same fold, same bits), so 1-vs-N
         /// sharding stays bit-identical.
-        pub fn $dot_on(&self, shard: usize, variant: Variant, a: &[$ty], b: &[$ty]) -> $ty {
+        pub fn $dot_on(&self, shard: usize, accuracy: Accuracy, a: &[$ty], b: &[$ty]) -> $ty {
             debug_assert_eq!(
                 a.len(),
                 b.len(),
@@ -169,13 +169,13 @@ macro_rules! sharded_dot_impl {
             );
             let n = a.len().min(b.len());
             let total_bytes = (2 * n * std::mem::size_of::<$ty>()) as u64;
-            match self.policy.plan_dot(shard, total_bytes).route {
-                DotRoute::Split => self.$split(variant, &a[..n], &b[..n]),
+            match self.policy.plan_dot(shard, accuracy, total_bytes).route {
+                DotRoute::Split => self.$split(accuracy, &a[..n], &b[..n]),
                 // Inline vs Parallel is the engine's half of the same
                 // policy — it re-derives the identical plan from the
                 // shared predicate
                 _ => self.shards[self.policy.clamp_shard(shard)].$engine_dot(
-                    variant,
+                    accuracy,
                     &a[..n],
                     &b[..n],
                 ),
@@ -185,16 +185,16 @@ macro_rules! sharded_dot_impl {
         /// Split one dot across every shard on global chunk boundaries and
         /// merge all per-chunk partials with the compensated fold in
         /// global chunk order (the same fold, one more reduction level).
-        fn $split(&self, variant: Variant, a: &[$ty], b: &[$ty]) -> $ty {
+        fn $split(&self, accuracy: Accuracy, a: &[$ty], b: &[$ty]) -> $ty {
             let n = a.len();
             let total_bytes = (2 * n * std::mem::size_of::<$ty>()) as u64;
             // select the kernel ONCE for the full request size: every
             // shard must run the same kernel for bit-determinism
-            let f = $kernel_for(variant, total_bytes);
+            let f = $kernel_for(accuracy, total_bytes);
             let ranges = chunk_ranges(n, self.policy.split_chunk_count(), $elems_per_cl);
             if ranges.len() <= 1 {
                 let s = self.route();
-                return self.shards[s].$engine_dot(variant, a, b);
+                return self.shards[s].$engine_dot(accuracy, a, b);
             }
             // every split-path dot is counted here (it never reaches a
             // shard engine's own `requests` counter) — including on a
@@ -280,12 +280,12 @@ macro_rules! sharded_dot_impl {
         /// (admission locality — the data is already in that domain).
         pub fn $dot_homed(
             &self,
-            variant: Variant,
+            accuracy: Accuracy,
             a: &HomedSlice<$ty>,
             b: &HomedSlice<$ty>,
         ) -> $ty {
             let s = a.shard.min(self.shards.len() - 1);
-            self.shards[s].$engine_dot_pooled(variant, &a.slice, &b.slice)
+            self.shards[s].$engine_dot_pooled(accuracy, &a.slice, &b.slice)
         }
 
         /// Admit several streams onto one shard (clamped) in a single
@@ -311,7 +311,7 @@ macro_rules! sharded_dot_impl {
         pub fn $dot_batch_on(
             &self,
             shard: usize,
-            variant: Variant,
+            accuracy: Accuracy,
             reqs: &[(&[$ty], &[$ty])],
         ) -> Vec<$ty> {
             let s = shard % self.shards.len();
@@ -322,14 +322,14 @@ macro_rules! sharded_dot_impl {
                 let n = a.len().min(b.len());
                 let total = (2 * n * std::mem::size_of::<$ty>()) as u64;
                 if self.policy.splits(total) {
-                    out[i] = self.$dot_on(s, variant, a, b);
+                    out[i] = self.$dot_on(s, accuracy, a, b);
                 } else {
                     small_idx.push(i);
                     smalls.push((&a[..n], &b[..n]));
                 }
             }
             if !smalls.is_empty() {
-                let vals = self.shards[s].$engine_dot_batch(variant, &smalls);
+                let vals = self.shards[s].$engine_dot_batch(accuracy, &smalls);
                 for (i, v) in small_idx.into_iter().zip(vals) {
                     out[i] = v;
                 }
@@ -345,7 +345,7 @@ macro_rules! sharded_dot_impl {
         /// mid-size requests (chunked-parallel inside one shard) the
         /// unchanged per-request route. Bit-identical to the serial loop.
         /// Must not be called from a shard worker.
-        pub fn $dot_batch(&self, variant: Variant, reqs: &[(&[$ty], &[$ty])]) -> Vec<$ty> {
+        pub fn $dot_batch(&self, accuracy: Accuracy, reqs: &[(&[$ty], &[$ty])]) -> Vec<$ty> {
             let mut out = vec![0.0 as $ty; reqs.len()];
             let mut per_shard: Vec<Vec<(usize, &[$ty], &[$ty])>> =
                 (0..self.shards.len()).map(|_| Vec::new()).collect();
@@ -354,7 +354,7 @@ macro_rules! sharded_dot_impl {
             for (i, &(a, b)) in reqs.iter().enumerate() {
                 let n = a.len().min(b.len());
                 let total = (2 * n * std::mem::size_of::<$ty>()) as u64;
-                let plan = self.policy.plan_dot(self.route(), total);
+                let plan = self.policy.plan_dot(self.route(), accuracy, total);
                 match plan.route {
                     DotRoute::Split => splits.push((i, plan.shard)),
                     DotRoute::Inline => per_shard[plan.shard].push((i, &a[..n], &b[..n])),
@@ -388,7 +388,7 @@ macro_rules! sharded_dot_impl {
                             )
                         })
                         .collect();
-                    $exec_batch(variant, &items, &tx);
+                    $exec_batch(accuracy, &items, &tx);
                 }));
             }
             drop(tx);
@@ -396,11 +396,11 @@ macro_rules! sharded_dot_impl {
             // shard groups execute concurrently
             for &(i, s) in &splits {
                 let (a, b) = reqs[i];
-                out[i] = self.$dot_on(s, variant, a, b);
+                out[i] = self.$dot_on(s, accuracy, a, b);
             }
             for &(i, s) in &mids {
                 let (a, b) = reqs[i];
-                out[i] = self.shards[s].$engine_dot(variant, a, b);
+                out[i] = self.shards[s].$engine_dot(accuracy, a, b);
             }
             let mut got = 0usize;
             for (i, r) in rx {
@@ -426,7 +426,7 @@ macro_rules! sharded_dot_impl {
         /// route. Must not be called from a shard worker.
         pub fn $dot_batch_homed(
             &self,
-            variant: Variant,
+            accuracy: Accuracy,
             reqs: &[(&HomedSlice<$ty>, &HomedSlice<$ty>)],
         ) -> Vec<$ty> {
             let mut out = vec![0.0 as $ty; reqs.len()];
@@ -471,13 +471,13 @@ macro_rules! sharded_dot_impl {
                             )
                         })
                         .collect();
-                    $exec_batch(variant, &items, &tx);
+                    $exec_batch(accuracy, &items, &tx);
                 }));
             }
             drop(tx);
             for &(i, s) in &bigs {
                 let (a, b) = reqs[i];
-                out[i] = self.shards[s].$engine_dot_pooled(variant, &a.slice, &b.slice);
+                out[i] = self.shards[s].$engine_dot_pooled(accuracy, &a.slice, &b.slice);
             }
             let mut got = 0usize;
             for (i, r) in rx {
@@ -692,8 +692,8 @@ mod tests {
         for n in [1000usize, 300_000, 1 << 20] {
             let a = rng.normal_f32_vec(n);
             let b = rng.normal_f32_vec(n);
-            let s = sharded.dot_f32(Variant::Kahan, &a, &b);
-            let p = plain.dot_f32(Variant::Kahan, &a, &b);
+            let s = sharded.dot_f32(Accuracy::Kahan, &a, &b);
+            let p = plain.dot_f32(Accuracy::Kahan, &a, &b);
             assert_eq!(s.to_bits(), p.to_bits(), "n={n}");
         }
         // the one above-threshold dot took the (degenerate) split path and
@@ -714,7 +714,7 @@ mod tests {
         let exact = exact_dot_f32(&a, &b);
         let scale: f64 =
             a.iter().zip(&b).map(|(x, y)| (x * y).abs() as f64).sum::<f64>().max(1e-30);
-        let got = sharded.dot_f32(Variant::Kahan, &a, &b) as f64;
+        let got = sharded.dot_f32(Accuracy::Kahan, &a, &b) as f64;
         assert!((got - exact).abs() / scale < 1e-6, "{got} vs {exact}");
         let st = sharded.stats();
         assert_eq!(st.split_dots, 1, "{st:?}");
@@ -734,7 +734,7 @@ mod tests {
         let b = sharded.admit_f32(&bv);
         assert!(a.shard < sharded.shards());
         let before = sharded.shard(a.shard).stats().requests;
-        let got = sharded.dot_homed_f32(Variant::Kahan, &a, &b) as f64;
+        let got = sharded.dot_homed_f32(Accuracy::Kahan, &a, &b) as f64;
         assert!((got - exact).abs() / scale < 1e-6);
         let after = sharded.shard(a.shard).stats().requests;
         assert_eq!(after, before + 1, "dot must run on the home shard of `a`");
@@ -743,7 +743,7 @@ mod tests {
         // the steady-state pair never crosses a domain
         let b2 = sharded.admit_to_f32(a.shard, &bv);
         assert_eq!(b2.shard, a.shard);
-        let got2 = sharded.dot_homed_f32(Variant::Kahan, &a, &b2) as f64;
+        let got2 = sharded.dot_homed_f32(Accuracy::Kahan, &a, &b2) as f64;
         assert!((got2 - exact).abs() / scale < 1e-6);
     }
 
@@ -757,7 +757,7 @@ mod tests {
         let b = rng.normal_f64_vec(n);
         let exact = exact_dot_f64(&a, &b);
         let scale: f64 = a.iter().zip(&b).map(|(x, y)| (x * y).abs()).sum::<f64>().max(1e-300);
-        let got = sharded.dot_f64(Variant::Kahan, &a, &b);
+        let got = sharded.dot_f64(Accuracy::Kahan, &a, &b);
         assert!((got - exact).abs() / scale < 1e-14);
     }
 
@@ -775,8 +775,8 @@ mod tests {
         let n = 100_000; // 800 KB total >> 64 KB split threshold
         let a = rng.normal_f32_vec(n);
         let b = rng.normal_f32_vec(n);
-        let x = governed.dot_f32(Variant::Kahan, &a, &b);
-        let y = open.dot_f32(Variant::Kahan, &a, &b);
+        let x = governed.dot_f32(Accuracy::Kahan, &a, &b);
+        let y = open.dot_f32(Accuracy::Kahan, &a, &b);
         assert_eq!(x.to_bits(), y.to_bits(), "a worker cap must never change bits");
         let (gs, os) = (governed.stats(), open.stats());
         assert_eq!(gs.split_dots, 1, "{gs:?}");

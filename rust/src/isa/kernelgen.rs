@@ -42,6 +42,49 @@ impl Variant {
     }
 }
 
+/// Accuracy tier of a dot-product request — the algorithm class, orthogonal
+/// to the ISA-flavor [`Variant`] a concrete kernel implements it with. The
+/// serving stack (registry, autotuner, planner, engine, shards, service)
+/// keys every lookup by `(Accuracy, Precision)`; `Variant` survives as
+/// kernel metadata for the ISA-model side (`isa::generate`, ECM, sim).
+///
+/// The ladder, in increasing accuracy: `Naive` (Fig. 1a, error grows with
+/// eps·n·cond), `Kahan` (Fig. 1b compensation), `Dot2` (Ogita–Rump–Oishi
+/// TwoProd + 2Sum — as if computed in doubled precision, error independent
+/// of the condition number until eps²·cond ≈ 1), `Exact` (Shewchuk
+/// expansion / wide accumulation — correctly rounded, scalar-only).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Accuracy {
+    Naive,
+    Kahan,
+    Dot2,
+    Exact,
+}
+
+impl Accuracy {
+    /// Every tier, ladder order (least to most accurate).
+    pub const ALL: [Accuracy; 4] = [Accuracy::Naive, Accuracy::Kahan, Accuracy::Dot2, Accuracy::Exact];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Accuracy::Naive => "naive",
+            Accuracy::Kahan => "kahan",
+            Accuracy::Dot2 => "dot2",
+            Accuracy::Exact => "exact",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "naive" => Some(Accuracy::Naive),
+            "kahan" | "kahan-fma" | "kahanfma" => Some(Accuracy::Kahan),
+            "dot2" | "oro" | "ogita-rump-oishi" => Some(Accuracy::Dot2),
+            "exact" => Some(Accuracy::Exact),
+            _ => None,
+        }
+    }
+}
+
 /// Element precision.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum Precision {

@@ -12,8 +12,8 @@ pub mod kernelgen;
 
 pub use inst::{Inst, Op, Simd, StreamRef};
 pub use kernelgen::{
-    compiler_kahan, generate, generate_axpy, generate_ext, generate_sum, paper_kernels, KernelDesc, Precision,
-    Variant,
+    compiler_kahan, generate, generate_axpy, generate_ext, generate_sum, paper_kernels, Accuracy,
+    KernelDesc, Precision, Variant,
 };
 
 #[cfg(test)]

@@ -12,7 +12,7 @@ use kahan_ecm::coordinator::{DotService, ServiceConfig};
 use kahan_ecm::engine::{
     DotEngine, EngineConfig, ShardedConfig, ShardedEngine, Topology,
 };
-use kahan_ecm::isa::Variant;
+use kahan_ecm::isa::Accuracy;
 use kahan_ecm::util::{prop, Rng};
 
 fn cfg(threads: usize) -> EngineConfig {
@@ -45,20 +45,26 @@ fn view_f32(reqs: &[(Vec<f32>, Vec<f32>)]) -> Vec<(&[f32], &[f32])> {
 }
 
 /// Engine layer: `dot_batch_f32` vs a serial loop of `dot_f32`, on ORO
-/// inputs, every batch size, both variants.
+/// inputs, every batch size, across accuracy tiers (Dot2 exercises the
+/// fuse-or-loop fallback: no fused twin exists, so its runs serial-loop
+/// inside the batch — bits must still match).
 #[test]
 fn engine_dot_batch_bit_identical_on_oro_inputs() {
     let e = DotEngine::new(cfg(2));
     prop::check("engine-dot-batch-bit-identical", 15, |rng| {
         let reqs = gen_reqs_f32(rng, 1 + rng.below(10) as usize);
         let view = view_f32(&reqs);
-        let variant = if rng.uniform() < 0.7 { Variant::Kahan } else { Variant::Naive };
-        let serial: Vec<f32> = view.iter().map(|&(a, b)| e.dot_f32(variant, a, b)).collect();
-        let batched = e.dot_batch_f32(variant, &view);
+        let acc = match rng.below(10) {
+            0..=4 => Accuracy::Kahan,
+            5..=7 => Accuracy::Dot2,
+            _ => Accuracy::Naive,
+        };
+        let serial: Vec<f32> = view.iter().map(|&(a, b)| e.dot_f32(acc, a, b)).collect();
+        let batched = e.dot_batch_f32(acc, &view);
         for (i, (s, g)) in serial.iter().zip(&batched).enumerate() {
             kahan_ecm::prop_assert!(
                 s.to_bits() == g.to_bits(),
-                "req {i} (n={}, {variant:?}): serial {s:e} vs batched {g:e}",
+                "req {i} (n={}, {acc:?}): serial {s:e} vs batched {g:e}",
                 view[i].0.len()
             );
         }
@@ -86,8 +92,8 @@ fn engine_dot_batch_f64_bit_identical_on_oro_inputs() {
         let view: Vec<(&[f64], &[f64])> =
             reqs.iter().map(|(a, b)| (a.as_slice(), b.as_slice())).collect();
         let serial: Vec<f64> =
-            view.iter().map(|&(a, b)| e.dot_f64(Variant::Kahan, a, b)).collect();
-        let batched = e.dot_batch_f64(Variant::Kahan, &view);
+            view.iter().map(|&(a, b)| e.dot_f64(Accuracy::Kahan, a, b)).collect();
+        let batched = e.dot_batch_f64(Accuracy::Kahan, &view);
         for (i, (s, g)) in serial.iter().zip(&batched).enumerate() {
             kahan_ecm::prop_assert!(
                 s.to_bits() == g.to_bits(),
@@ -110,9 +116,9 @@ fn engine_mixed_size_batch_routes_larges_through_parallel_path() {
     let reqs: Vec<(Vec<f32>, Vec<f32>)> =
         sizes.iter().map(|&n| (rng.normal_f32_vec(n), rng.normal_f32_vec(n))).collect();
     let view = view_f32(&reqs);
-    let serial: Vec<f32> = view.iter().map(|&(a, b)| e.dot_f32(Variant::Kahan, a, b)).collect();
+    let serial: Vec<f32> = view.iter().map(|&(a, b)| e.dot_f32(Accuracy::Kahan, a, b)).collect();
     let before = e.stats();
-    let batched = e.dot_batch_f32(Variant::Kahan, &view);
+    let batched = e.dot_batch_f32(Accuracy::Kahan, &view);
     let after = e.stats();
     for (i, (s, g)) in serial.iter().zip(&batched).enumerate() {
         assert_eq!(s.to_bits(), g.to_bits(), "req {i} (n={})", sizes[i]);
@@ -138,9 +144,9 @@ fn sharded_dot_batch_bit_identical_and_splits_larges() {
         reqs.push((rng.normal_f32_vec(100_000), rng.normal_f32_vec(100_000)));
         let view = view_f32(&reqs);
         let serial: Vec<f32> =
-            view.iter().map(|&(a, b)| sharded.dot_f32(Variant::Kahan, a, b)).collect();
+            view.iter().map(|&(a, b)| sharded.dot_f32(Accuracy::Kahan, a, b)).collect();
         let split_before = sharded.stats().split_dots;
-        let batched = sharded.dot_batch_f32(Variant::Kahan, &view);
+        let batched = sharded.dot_batch_f32(Accuracy::Kahan, &view);
         let split_after = sharded.stats().split_dots;
         for (i, (s, g)) in serial.iter().zip(&batched).enumerate() {
             kahan_ecm::prop_assert!(
@@ -182,8 +188,8 @@ fn sharded_homed_batch_bit_identical() {
             .collect();
         let pairs: Vec<_> = homed.iter().map(|(a, b)| (a, b)).collect();
         let serial: Vec<f32> =
-            pairs.iter().map(|&(a, b)| sharded.dot_homed_f32(Variant::Kahan, a, b)).collect();
-        let batched = sharded.dot_batch_homed_f32(Variant::Kahan, &pairs);
+            pairs.iter().map(|&(a, b)| sharded.dot_homed_f32(Accuracy::Kahan, a, b)).collect();
+        let batched = sharded.dot_batch_homed_f32(Accuracy::Kahan, &pairs);
         for (i, (s, g)) in serial.iter().zip(&batched).enumerate() {
             kahan_ecm::prop_assert!(
                 s.to_bits() == g.to_bits(),

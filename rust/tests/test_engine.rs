@@ -13,7 +13,7 @@ use kahan_ecm::engine::{
     parallel_dot_f32, parallel_dot_f64, BufferPool, DotEngine, EngineConfig, ShardedConfig,
     ShardedEngine, Topology, WorkerPool,
 };
-use kahan_ecm::isa::Variant;
+use kahan_ecm::isa::Accuracy;
 use kahan_ecm::prop_assert;
 use kahan_ecm::util::prop;
 use std::sync::Arc;
@@ -30,6 +30,27 @@ fn f32_bound(absdot: f64) -> f64 {
 
 fn f64_bound(absdot: f64) -> f64 {
     64.0 * (f64::EPSILON / 2.0) * absdot.max(1e-300)
+}
+
+/// Dot2-grade bound for the *chunked* execution paths. Three honest terms:
+///
+/// * `16u·|s|` — the final rounding plus the compensated cross-chunk merge
+///   (the merge folds already-rounded chunk values, each fold step
+///   protected).
+/// * `8u·Σ|aᵢbᵢ|` — each chunk's TwoProd-compensated sub-dot is rounded to
+///   working precision before the merge, and a chunk's true value is
+///   bounded by its share of `Σ|aᵢbᵢ|`; the shares sum to the whole, so
+///   chunk rounding costs at most `u·Σ|aᵢbᵢ|` (4× slack). This term is
+///   what parallelism genuinely adds over sequential Dot2 — it is still
+///   `O(u)`-with-a-small-constant, 8× below the `64u` Kahan test bound,
+///   and crucially carries **no** `cond` factor.
+/// * `4·γ²₂ₙ·Σ|aᵢbᵢ|` with `γ₂ₙ = 2nu` — the formal Ogita–Rump–Oishi
+///   second-order term of the per-chunk Dot2 runs (each chunk's `γ` is
+///   below the global one).
+fn dot2_bound_f32(n: usize, absdot: f64, exact: f64) -> f64 {
+    let u = f32::EPSILON as f64 / 2.0;
+    let g = 2.0 * n as f64 * u;
+    16.0 * u * exact.abs() + 8.0 * u * absdot.max(1e-30) + 4.0 * g * g * absdot.max(1e-30)
 }
 
 fn absdot_f32(a: &[f32], b: &[f32]) -> f64 {
@@ -156,13 +177,13 @@ fn engine_facade_serves_accurate_deterministic_results() {
         let b = rng.normal_f32_vec(n);
         let exact = exact_dot_f32(&a, &b);
         let bound = f32_bound(absdot_f32(&a, &b));
-        let first = engine.dot_f32(Variant::Kahan, &a, &b);
+        let first = engine.dot_f32(Accuracy::Kahan, &a, &b);
         assert!(
             (first as f64 - exact).abs() <= bound,
             "n={n}: {first} vs {exact} (bound {bound:e})"
         );
         for _ in 0..3 {
-            let again = engine.dot_f32(Variant::Kahan, &a, &b);
+            let again = engine.dot_f32(Accuracy::Kahan, &a, &b);
             assert_eq!(first.to_bits(), again.to_bits(), "n={n} must be bit-stable");
         }
     }
@@ -239,7 +260,7 @@ fn property_sharded_split_keeps_sequential_bound_ill_conditioned() {
         let target_cond = [1e4, 1e6, 1e8][rng.below(3) as usize];
         let (av, bv, exact, _cond) = gen_dot_f32(n, target_cond, rng);
         let bound = f32_bound(absdot_f32(&av, &bv));
-        let got = sharded.dot_f32(Variant::Kahan, &av, &bv) as f64;
+        let got = sharded.dot_f32(Accuracy::Kahan, &av, &bv) as f64;
         prop_assert!(
             (got - exact).abs() <= bound,
             "n={n} cond~{target_cond:e}: err {:e} > bound {bound:e}",
@@ -263,9 +284,9 @@ fn property_sharded_split_bit_identical_1_vs_n_shards() {
         let n = 256 + rng.below(40_000) as usize;
         let av = rng.normal_f32_vec(n);
         let bv = rng.normal_f32_vec(n);
-        let base = one.dot_f32(Variant::Kahan, &av, &bv);
+        let base = one.dot_f32(Accuracy::Kahan, &av, &bv);
         for (label, e) in [("2 shards", &two), ("3 shards", &three)] {
-            let got = e.dot_f32(Variant::Kahan, &av, &bv);
+            let got = e.dot_f32(Accuracy::Kahan, &av, &bv);
             prop_assert!(
                 base.to_bits() == got.to_bits(),
                 "n={n}: {label} diverged: {base:e} vs {got:e}"
@@ -284,8 +305,8 @@ fn engine_kahan_beats_naive_on_ill_conditioned_input() {
     let mut rng = kahan_ecm::util::Rng::new(7);
     let (a, b, exact, cond) = gen_dot_f32(4096, 1e7, &mut rng);
     let bound = f32_bound(absdot_f32(&a, &b));
-    let kahan = engine.dot_f32(Variant::Kahan, &a, &b) as f64;
-    let naive = engine.dot_f32(Variant::Naive, &a, &b) as f64;
+    let kahan = engine.dot_f32(Accuracy::Kahan, &a, &b) as f64;
+    let naive = engine.dot_f32(Accuracy::Naive, &a, &b) as f64;
     let ek = (kahan - exact).abs();
     let en = (naive - exact).abs();
     assert!(ek <= bound, "kahan err {ek:e} > bound {bound:e} (cond {cond:e})");
@@ -293,6 +314,83 @@ fn engine_kahan_beats_naive_on_ill_conditioned_input() {
         ek * 10.0 < en.max(1e-30) || en <= bound,
         "kahan ({ek:e}) should beat naive ({en:e}) at cond {cond:e}"
     );
+}
+
+/// Satellite: the Dot2 tier under parallelism. The chunked reduction and
+/// the cross-shard split must keep a Dot2-grade bound — small-constant
+/// `O(u)` with **no** `cond` factor — on Ogita–Rump–Oishi ill-conditioned
+/// inputs, for every length, chunk count, and shard count. Massive
+/// cancellation is exactly where a merge that dropped the TwoProd
+/// compensation would blow up to `u·cond`.
+#[test]
+fn property_parallel_and_sharded_dot2_keep_dot2_grade_bound() {
+    let pool = WorkerPool::new(2);
+    let bufs = BufferPool::new();
+    let sharded = ShardedEngine::from_topology(&Topology::fake_even(3), sharded_cfg(1, 1, 0));
+    prop::check("engine-dot2-gendot", 12, |rng| {
+        let n = 64 + rng.below(4096) as usize;
+        let chunks = 1 + rng.below(8) as usize;
+        let target_cond = [1e4, 1e6, 1e8][rng.below(3) as usize];
+        let (av, bv, exact, _cond) = gen_dot_f32(n, target_cond, rng);
+        let bound = dot2_bound_f32(av.len(), absdot_f32(&av, &bv), exact);
+        let a = Arc::new(bufs.admit(&av));
+        let b = Arc::new(bufs.admit(&bv));
+        for f in [scalar::dot2_seq_f32, scalar::dot2_unrolled_f32] {
+            let got = parallel_dot_f32(&pool, f, &a, &b, chunks) as f64;
+            prop_assert!(
+                (got - exact).abs() <= bound,
+                "n={n} chunks={chunks} cond~{target_cond:e}: chunked dot2 err {:e} > bound {bound:e}",
+                (got - exact).abs()
+            );
+        }
+        let got = sharded.dot_f32(Accuracy::Dot2, &av, &bv) as f64;
+        prop_assert!(
+            (got - exact).abs() <= bound,
+            "n={n} cond~{target_cond:e}: sharded dot2 err {:e} > bound {bound:e}",
+            (got - exact).abs()
+        );
+        Ok(())
+    });
+    assert!(sharded.stats().split_dots > 0, "split threshold of 1 byte must force splits");
+}
+
+/// Satellite: the accuracy ladder through the engine facade, judged
+/// against `exact_dot_f32` ground truth on ill-conditioned inputs. Naive
+/// drifts with `cond`, Kahan holds `O(u)·Σ|aᵢbᵢ|` (so its *relative*
+/// error still degrades as `cond` grows), Dot2 holds the tighter
+/// Dot2-grade bound, and the Exact tier is bit-for-bit the correctly
+/// rounded dot. Pairwise ordering uses the same escape-clause style as
+/// `engine_kahan_beats_naive_on_ill_conditioned_input`: a tier must beat
+/// the one above it by 10× unless the one above already sits at the lower
+/// tier's own bound.
+#[test]
+fn accuracy_ladder_orders_tiers_against_exact_ground_truth() {
+    let engine = DotEngine::new(EngineConfig { threads: 2, ..EngineConfig::default() });
+    let mut rng = kahan_ecm::util::Rng::new(0xACC);
+    for target_cond in [1e6, 1e8] {
+        let (a, b, exact, cond) = gen_dot_f32(4096, target_cond, &mut rng);
+        let absdot = absdot_f32(&a, &b);
+        let kbound = f32_bound(absdot);
+        let d2bound = dot2_bound_f32(a.len(), absdot, exact);
+        let e_naive = (engine.dot_f32(Accuracy::Naive, &a, &b) as f64 - exact).abs();
+        let e_kahan = (engine.dot_f32(Accuracy::Kahan, &a, &b) as f64 - exact).abs();
+        let e_dot2 = (engine.dot_f32(Accuracy::Dot2, &a, &b) as f64 - exact).abs();
+        assert!(e_kahan <= kbound, "kahan err {e_kahan:e} > bound {kbound:e} (cond {cond:e})");
+        assert!(e_dot2 <= d2bound, "dot2 err {e_dot2:e} > bound {d2bound:e} (cond {cond:e})");
+        assert!(
+            e_kahan * 10.0 < e_naive.max(1e-30) || e_naive <= kbound,
+            "cond {cond:e}: kahan ({e_kahan:e}) should beat naive ({e_naive:e})"
+        );
+        assert!(
+            e_dot2 * 10.0 < e_kahan.max(1e-30) || e_kahan <= d2bound,
+            "cond {cond:e}: dot2 ({e_dot2:e}) should beat kahan ({e_kahan:e})"
+        );
+        // the exact tier is not "even more accurate": it is the correctly
+        // rounded dot, bit-for-bit
+        let want = exact_dot_f32(&a, &b) as f32;
+        let got = engine.dot_f32(Accuracy::Exact, &a, &b);
+        assert_eq!(got.to_bits(), want.to_bits(), "cond {cond:e}: exact tier must round correctly");
+    }
 }
 
 /// `sharded_cfg` with the host's ECM governance switched off, so the
@@ -329,15 +427,17 @@ fn governance_bit_identity_across_engine_split_and_service_layers() {
         ..EngineConfig::default()
     });
     governed.set_worker_caps(tight);
-    for target_cond in [1e4, 1e6, 1e8] {
-        let (a, b, _, _) = gen_dot_f32(150_000, target_cond, &mut rng);
-        let ov = open.dot_f32(Variant::Kahan, &a, &b);
-        let gv = governed.dot_f32(Variant::Kahan, &a, &b);
-        assert_eq!(ov.to_bits(), gv.to_bits(), "engine layer, cond ~{target_cond:e}");
+    for acc in [Accuracy::Kahan, Accuracy::Dot2] {
+        for target_cond in [1e4, 1e6, 1e8] {
+            let (a, b, _, _) = gen_dot_f32(150_000, target_cond, &mut rng);
+            let ov = open.dot_f32(acc, &a, &b);
+            let gv = governed.dot_f32(acc, &a, &b);
+            assert_eq!(ov.to_bits(), gv.to_bits(), "engine layer, {acc:?} cond ~{target_cond:e}");
+        }
     }
     let (os, gs) = (open.stats(), governed.stats());
     assert_eq!(os.capped_requests, 0, "ungoverned engine must never count caps");
-    assert_eq!(gs.capped_requests, 3, "every parallel dot ran below 2 workers: {gs:?}");
+    assert_eq!(gs.capped_requests, 6, "every parallel dot ran below 2 workers: {gs:?}");
     assert_eq!(gs.parallel, os.parallel, "capping must not change routing");
     assert_eq!(gs.requests, os.requests);
 
@@ -347,15 +447,17 @@ fn governance_bit_identity_across_engine_split_and_service_layers() {
     let mut gov_sh =
         ShardedEngine::from_topology(&Topology::fake_even(2), ungoverned_cfg(2, 64 << 10, 4));
     gov_sh.set_worker_caps(tight);
-    for target_cond in [1e4, 1e6, 1e8] {
-        let (a, b, _, _) = gen_dot_f32(100_000, target_cond, &mut rng);
-        let ov = open_sh.dot_f32(Variant::Kahan, &a, &b);
-        let gv = gov_sh.dot_f32(Variant::Kahan, &a, &b);
-        assert_eq!(ov.to_bits(), gv.to_bits(), "split layer, cond ~{target_cond:e}");
+    for acc in [Accuracy::Kahan, Accuracy::Dot2] {
+        for target_cond in [1e4, 1e6, 1e8] {
+            let (a, b, _, _) = gen_dot_f32(100_000, target_cond, &mut rng);
+            let ov = open_sh.dot_f32(acc, &a, &b);
+            let gv = gov_sh.dot_f32(acc, &a, &b);
+            assert_eq!(ov.to_bits(), gv.to_bits(), "split layer, {acc:?} cond ~{target_cond:e}");
+        }
     }
     let (oss, gss) = (open_sh.stats(), gov_sh.stats());
     assert_eq!(oss.capped_requests, 0, "ungoverned split must never count caps");
-    assert_eq!(gss.capped_requests, 3, "every split dot was capped: {gss:?}");
+    assert_eq!(gss.capped_requests, 6, "every split dot was capped: {gss:?}");
     assert_eq!(gss.split_dots, oss.split_dots, "capping must not change the split decision");
 
     // --- serving tier: ecm_governance knob end-to-end ---
@@ -382,10 +484,10 @@ fn governance_bit_identity_across_engine_split_and_service_layers() {
     let (a, b, _, _) = gen_dot_f32(150_000, 1e6, &mut rng);
     let (oha, ohb) = ocl.admit_pair_blocking(a.clone(), b.clone()).expect("open admit");
     let (gha, ghb) = gcl.admit_pair_blocking(a, b).expect("governed admit");
-    for round in 0..2 {
-        let ov = ocl.dot_pooled_blocking("kahan", oha, ohb).expect("open dot");
-        let gv = gcl.dot_pooled_blocking("kahan", gha, ghb).expect("governed dot");
-        assert_eq!(ov.to_bits(), gv.to_bits(), "service layer, round {round}");
+    for tier in ["kahan", "dot2"] {
+        let ov = ocl.dot_pooled_blocking(tier, oha, ohb).expect("open dot");
+        let gv = gcl.dot_pooled_blocking(tier, gha, ghb).expect("governed dot");
+        assert_eq!(ov.to_bits(), gv.to_bits(), "service layer, tier {tier}");
     }
     let (ost, gst) = (osvc.stop(), gsvc.stop());
     assert_eq!(ost.capped_requests, 0, "ecm_governance=off must serve uncapped: {ost:?}");

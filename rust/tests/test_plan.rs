@@ -12,7 +12,7 @@ use kahan_ecm::engine::{
     kernel_for_f32, DispatchTable, DotEngine, DotRoute, EngineConfig, PlanPolicy, ShardedConfig,
     ShardedEngine, SizeClass, Topology,
 };
-use kahan_ecm::isa::{Precision, Variant};
+use kahan_ecm::isa::{Accuracy, Precision};
 use kahan_ecm::util::Rng;
 
 fn policy(cutoff: usize, split: usize, workers: Vec<usize>) -> PlanPolicy {
@@ -43,8 +43,8 @@ fn plan_decisions_deterministic_and_monotone_in_length() {
             ]);
             grid.sort_unstable();
             for total in grid {
-                let a = p.plan_dot(preferred, total);
-                let b = p.plan_dot(preferred, total);
+                let a = p.plan_dot(preferred, Accuracy::Kahan, total);
+                let b = p.plan_dot(preferred, Accuracy::Kahan, total);
                 assert_eq!(a.route, b.route, "non-deterministic route at {total}");
                 assert_eq!(a.shard, b.shard, "non-deterministic shard at {total}");
                 assert_eq!(a.shard, preferred % workers.len(), "shard must be the clamp");
@@ -68,7 +68,10 @@ fn plan_decisions_deterministic_and_monotone_in_length() {
             // single-worker shards never plan Parallel
             if workers[preferred % workers.len()] == 1 {
                 for total in [1u64, cutoff as u64, (split as u64) - 1] {
-                    assert_ne!(p.plan_dot(preferred, total).route, DotRoute::Parallel);
+                    assert_ne!(
+                        p.plan_dot(preferred, Accuracy::Kahan, total).route,
+                        DotRoute::Parallel
+                    );
                 }
             }
         }
@@ -106,24 +109,32 @@ fn batch_decisions_monotone_in_batch_size() {
     // a tiny private calibration keeps this test self-contained and fast
     let table = DispatchTable::calibrate([8 << 10, 64 << 10, 256 << 10], 1);
     for prec in [Precision::Sp, Precision::Dp] {
-        for variant in [Variant::Kahan, Variant::Naive] {
+        for acc in Accuracy::ALL {
             for class in SizeClass::ALL {
                 let mut was_fused = false;
                 for k in 0..=16usize {
-                    let fused = batch_exec(&table, prec, variant, class, k).is_some();
+                    let fused = batch_exec(&table, prec, acc, class, k).is_some();
                     assert!(
                         !was_fused || fused,
-                        "fuse decision regressed at k={k} ({prec:?} {variant:?} {})",
+                        "fuse decision regressed at k={k} ({prec:?} {acc:?} {})",
                         class.name()
                     );
                     was_fused = fused;
                 }
                 // and it is exactly the table's kept twin gated on k >= 2
-                assert!(batch_exec(&table, prec, variant, class, 1).is_none());
+                assert!(batch_exec(&table, prec, acc, class, 1).is_none());
                 assert_eq!(
-                    batch_exec(&table, prec, variant, class, 2).is_some(),
-                    table.select_batch(prec, variant, class).is_some()
+                    batch_exec(&table, prec, acc, class, 2).is_some(),
+                    table.select_batch(prec, acc, class).is_some()
                 );
+                // fuse-or-loop: tiers without fused twins always loop
+                if acc == Accuracy::Dot2 || acc == Accuracy::Exact {
+                    assert!(
+                        table.select_batch(prec, acc, class).is_none(),
+                        "{acc:?} must have no fused twin ({prec:?} {})",
+                        class.name()
+                    );
+                }
             }
         }
     }
@@ -178,38 +189,81 @@ fn plan_routes_bit_identical_to_pre_refactor_paths_on_oro_inputs() {
     for (n, want_route) in cases {
         let total = (2 * n * std::mem::size_of::<f32>()) as u64;
         for shard in 0..policy.shards() {
-            let plan = policy.plan_dot(shard, total);
+            let plan = policy.plan_dot(shard, Accuracy::Kahan, total);
             assert_eq!(plan.route, want_route, "n={n} shard={shard}");
         }
-        for variant in [Variant::Kahan, Variant::Naive] {
+        for acc in [Accuracy::Kahan, Accuracy::Naive, Accuracy::Dot2] {
             let (a, b, _, _) = gen_dot_f32(n, 1e6, &mut rng);
             let before = sharded2.stats();
-            let got = sharded2.dot_f32(variant, &a, &b);
+            let got = sharded2.dot_f32(acc, &a, &b);
             let after = sharded2.stats();
             match want_route {
                 DotRoute::Inline => {
-                    let reference = kernel_for_f32(variant, total)(&a, &b);
+                    let reference = kernel_for_f32(acc, total)(&a, &b);
                     assert_eq!(got.to_bits(), reference.to_bits(), "inline n={n}");
                     assert_eq!(after.parallel, before.parallel, "inline must not go parallel");
                     assert_eq!(after.split_dots, before.split_dots);
                 }
                 DotRoute::Parallel => {
-                    let reference = plain.dot_f32(variant, &a, &b);
+                    let reference = plain.dot_f32(acc, &a, &b);
                     assert_eq!(got.to_bits(), reference.to_bits(), "parallel n={n}");
                     assert_eq!(after.parallel, before.parallel + 1, "must take the chunked path");
                     assert_eq!(after.split_dots, before.split_dots);
                 }
                 DotRoute::Split => {
-                    let reference = sharded1.dot_f32(variant, &a, &b);
+                    let reference = sharded1.dot_f32(acc, &a, &b);
                     assert_eq!(
                         got.to_bits(),
                         reference.to_bits(),
-                        "split n={n}: 1-vs-2-shard bits diverged"
+                        "split n={n} ({acc:?}): 1-vs-2-shard bits diverged"
                     );
                     assert_eq!(after.split_dots, before.split_dots + 1, "must take the split path");
                 }
             }
         }
+    }
+}
+
+/// The exact tier is planner special-cased: whatever the size, the plan
+/// is Inline on the preferred shard — scalar expansion arithmetic never
+/// chunks, splits, or fans out, so routing can never touch its bits —
+/// and the execution result is the correctly rounded reference at every
+/// size and shard count.
+#[test]
+fn exact_tier_always_plans_inline_and_is_correctly_rounded() {
+    let p = policy(64 << 10, 1 << 20, vec![2, 8]);
+    for shard in 0..2usize {
+        for total in [1u64, 64 << 10, 900 << 10, 4 << 20, 64 << 20] {
+            let plan = p.plan_dot(shard, Accuracy::Exact, total);
+            assert_eq!(plan.route, DotRoute::Inline, "exact must plan Inline at {total} bytes");
+            // every other tier keeps its size-directed route
+            let k = p.plan_dot(shard, Accuracy::Kahan, total);
+            match k.route {
+                DotRoute::Split => assert!(p.splits(total)),
+                _ => assert!(!p.splits(total)),
+            }
+        }
+    }
+
+    let cfg = ShardedConfig {
+        engine: EngineConfig { threads: 2, ..EngineConfig::default() },
+        split_min_bytes: 1 << 20,
+        chunks: 4,
+    };
+    let sharded2 = ShardedEngine::from_topology(&Topology::fake_even(2), cfg);
+    let sharded1 = ShardedEngine::from_topology(&Topology::fake_even(1), cfg);
+    let mut rng = Rng::new(0xE4AC);
+    for n in [1_000usize, 50_000, 200_000] {
+        let (a, b, _, _) = gen_dot_f32(n, 1e8, &mut rng);
+        let want = (kahan_ecm::accuracy::exact::exact_dot_f32(&a, &b)) as f32;
+        let before = sharded2.stats();
+        let got2 = sharded2.dot_f32(Accuracy::Exact, &a, &b);
+        let after = sharded2.stats();
+        let got1 = sharded1.dot_f32(Accuracy::Exact, &a, &b);
+        assert_eq!(got2.to_bits(), want.to_bits(), "exact n={n} must be correctly rounded");
+        assert_eq!(got1.to_bits(), got2.to_bits(), "exact n={n}: shard count changed bits");
+        assert_eq!(after.parallel, before.parallel, "exact must never fan out (n={n})");
+        assert_eq!(after.split_dots, before.split_dots, "exact must never split (n={n})");
     }
 }
 
@@ -243,9 +297,9 @@ fn batch_partition_agrees_with_planner_and_serial_bits() {
     assert_eq!(predicted_splits, 2, "the fixture must exercise the split arm");
 
     let serial: Vec<f32> =
-        view.iter().map(|&(a, b)| sharded.dot_f32(Variant::Kahan, a, b)).collect();
+        view.iter().map(|&(a, b)| sharded.dot_f32(Accuracy::Kahan, a, b)).collect();
     let before = sharded.stats();
-    let batched = sharded.dot_batch_f32(Variant::Kahan, &view);
+    let batched = sharded.dot_batch_f32(Accuracy::Kahan, &view);
     let after = sharded.stats();
     for (i, (s, g)) in serial.iter().zip(&batched).enumerate() {
         assert_eq!(s.to_bits(), g.to_bits(), "req {i} (n={})", sizes[i]);
@@ -311,8 +365,8 @@ fn governance_caps_monotone_and_clamped_to_shard_workers() {
     // and routing is untouched by caps: same plan with and without
     for total in [1u64, 100 << 10, 900 << 10, 2 << 20] {
         for shard in 0..workers.len() {
-            let g = governed.plan_dot(shard, total);
-            let o = open.plan_dot(shard, total);
+            let g = governed.plan_dot(shard, Accuracy::Kahan, total);
+            let o = open.plan_dot(shard, Accuracy::Kahan, total);
             assert_eq!(g.route, o.route, "governance must never change routing");
             assert_eq!(g.shard, o.shard);
             assert_eq!(g.class, o.class);

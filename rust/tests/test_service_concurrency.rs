@@ -12,7 +12,7 @@ use kahan_ecm::accuracy::exact::{exact_dot_f32, exact_dot_f64};
 use kahan_ecm::accuracy::{gen_dot_f32, gen_dot_f64};
 use kahan_ecm::coordinator::{DotService, ServiceConfig};
 use kahan_ecm::engine::{EngineConfig, ShardedConfig, ShardedEngine, Topology};
-use kahan_ecm::isa::Variant;
+use kahan_ecm::isa::Accuracy;
 use kahan_ecm::prop_assert;
 use kahan_ecm::util::{prop, Rng};
 use std::sync::Barrier;
@@ -269,7 +269,7 @@ fn prop_pooled_f64_concurrent_bit_identical_to_serial() {
         let ha = engine.admit_f64(&a);
         let hb = engine.admit_to_f64(ha.shard, &b);
 
-        let serial = engine.dot_homed_f64(Variant::Kahan, &ha, &hb);
+        let serial = engine.dot_homed_f64(Accuracy::Kahan, &ha, &hb);
         prop_assert!(
             (serial - exact).abs() <= f64_bound(absdot),
             "n={n}: serial homed dot broke the Kahan bound: {serial} vs {exact}"
@@ -282,7 +282,7 @@ fn prop_pooled_f64_concurrent_bit_identical_to_serial() {
                 .map(|_| {
                     let (ha, hb) = (ha.clone(), hb.clone());
                     s.spawn(move || {
-                        engine.dot_homed_f64(Variant::Kahan, &ha, &hb).to_bits()
+                        engine.dot_homed_f64(Accuracy::Kahan, &ha, &hb).to_bits()
                     })
                 })
                 .collect();
