@@ -1,0 +1,144 @@
+#!/usr/bin/env python3
+"""Typed assertions over the bench JSON artifacts CI produces.
+
+Replaces the old pile of `grep -E` steps in ci.yml: greps can't tell a
+real number from the string "null" that the benches emit for non-finite
+values, silently pass on fields hiding inside other fields, and drift
+from the JSON the moment a key is renamed. This script parses the JSON,
+dispatches on each file's "bench" field, and applies one typed predicate
+per field.
+
+Usage:
+    python3 ci/check_bench.py BENCH_engine.json BENCH_sharded.json
+
+Exit status 0 iff every check in every file passes; each check prints
+one PASS/FAIL line so the CI log reads as a checklist.
+"""
+
+import json
+import math
+import sys
+
+
+def is_num(v):
+    """A real, finite JSON number (bool is an int in Python: excluded)."""
+    return isinstance(v, (int, float)) and not isinstance(v, bool) and math.isfinite(v)
+
+
+def num(lo=None):
+    def pred(v):
+        return is_num(v) and (lo is None or v >= lo)
+
+    return pred, "finite number" + (f" >= {lo}" if lo is not None else "")
+
+
+def intval(lo=None, exactly=None):
+    def pred(v):
+        if not isinstance(v, int) or isinstance(v, bool):
+            return False
+        if exactly is not None:
+            return v == exactly
+        return lo is None or v >= lo
+
+    want = f"== {exactly}" if exactly is not None else f">= {lo}"
+    return pred, f"integer {want}"
+
+
+def nonempty_str():
+    return (lambda v: isinstance(v, str) and len(v) > 0), "non-empty string"
+
+
+def true_bool():
+    return (lambda v: v is True), "true"
+
+
+def num_list(min_len=1):
+    def pred(v):
+        return isinstance(v, list) and len(v) >= min_len and all(is_num(x) for x in v)
+
+    return pred, f"list of >= {min_len} finite numbers"
+
+
+# One (field, predicate) table per bench artifact. The engine checks are
+# the ECM-governance loop, the accuracy-ladder sweep and the paper's
+# MEM-class "Dot2 is free" claim; the sharded checks are lane batching,
+# the adaptive-window sweep, and PR 8's overload-protection burst
+# (sheds under deadline pressure, none in the no-deadline control, and a
+# served-tail p99 that is a number even when every small was shed).
+ENGINE_CHECKS = [
+    ("ecm_pred_sat_sp_mem", intval(lo=0)),
+    ("ecm_pred_sat_dp_mem", intval(lo=0)),
+    ("ecm_obs_sat_sp_mem", intval(lo=1)),
+    ("ecm_obs_sat_dp_mem", intval(lo=1)),
+    ("svc_rps_capped", num()),
+    ("svc_rps_uncapped", num()),
+    ("svc_capped_requests_governed", intval(lo=1)),
+    ("svc_capped_requests_ungoverned", intval(exactly=0)),
+    ("kahan_vs_naive_l1", num(lo=0)),
+    ("kahan_vs_naive_llc", num(lo=0)),
+    ("kahan_vs_naive_mem", num(lo=0)),
+    ("dot2_vs_naive_l1", num(lo=0)),
+    ("dot2_vs_naive_llc", num(lo=0)),
+    ("dot2_vs_naive_mem", num(lo=0)),
+    ("winner_kahan_mem", nonempty_str()),
+    ("winner_dot2_mem", nonempty_str()),
+    ("winner_dot2_l1", nonempty_str()),
+    ("dot2_mem_free", true_bool()),
+]
+
+SHARDED_CHECKS = [
+    ("svc_batches", intval(lo=1)),
+    ("svc_window_rps", num_list(min_len=1)),
+    ("svc_window_p50_us", num_list(min_len=1)),
+    ("svc_window0_batches", intval(lo=1)),
+    ("svc_p99_us", num(lo=0)),
+    ("svc_p99_wait_us", intval(lo=0)),
+    ("svc_p99_service_us", intval(lo=0)),
+    ("svc_shed", intval(lo=1)),
+    ("svc_shed_control", intval(exactly=0)),
+]
+
+CHECKS = {
+    "bench_engine": ENGINE_CHECKS,
+    "bench_sharded": SHARDED_CHECKS,
+}
+
+
+def run_checks(path):
+    try:
+        with open(path) as f:
+            data = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"FAIL {path}: unreadable or invalid JSON: {e}")
+        return 1
+
+    kind = data.get("bench")
+    checks = CHECKS.get(kind)
+    if checks is None:
+        print(f"FAIL {path}: unknown bench kind {kind!r} (want one of {sorted(CHECKS)})")
+        return 1
+
+    failures = 0
+    for field, (pred, want) in checks:
+        value = data.get(field, "<missing>")
+        ok = field in data and pred(data[field])
+        status = "PASS" if ok else "FAIL"
+        print(f"{status} {kind}.{field}: {value!r} (want {want})")
+        failures += 0 if ok else 1
+    return failures
+
+
+def main(argv):
+    if len(argv) < 2:
+        print(__doc__)
+        return 2
+    failures = sum(run_checks(p) for p in argv[1:])
+    if failures:
+        print(f"check_bench: {failures} check(s) failed")
+        return 1
+    print("check_bench: all checks passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))

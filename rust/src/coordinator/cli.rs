@@ -38,9 +38,12 @@ Host silicon (likwid-bench analog):
   engine-info           persistent dot engine: autotuned kernel dispatch
                         table, worker/pool state, smoke dot
   plan --len N [--precision f32|f64] [--batch K] [--accuracy A] [--window-us U]
+       [--deadline-us D] [--queued Q] [--est-service-us E]
                         explain the planner's decision for one request:
                         route, size class, the accuracy tier's chosen
-                        kernel, fuse cutoff (A: naive|kahan|dot2|exact)
+                        kernel, fuse cutoff (A: naive|kahan|dot2|exact),
+                        and — given a deadline D and a lane with Q queued
+                        messages — the admission gate's shed verdict
   accuracy [--n N] [--trials T]
                         error vs condition number (algorithm zoo)
 
@@ -309,6 +312,9 @@ pub fn run(args: &Args) -> Result<(), String> {
             let acc_s = args.opt("accuracy", "kahan");
             let batch = args.num("batch", 1usize).map_err(|e| e.to_string())?;
             let window_us = args.num("window-us", 0u64).map_err(|e| e.to_string())?;
+            let deadline_us = args.num("deadline-us", 0u64).map_err(|e| e.to_string())?;
+            let queued = args.num("queued", 0usize).map_err(|e| e.to_string())?;
+            let est_us_flag = args.num("est-service-us", 0u64).map_err(|e| e.to_string())?;
             if len == 0 {
                 return Err("plan: --len N (elements per stream) is required".into());
             }
@@ -328,8 +334,14 @@ pub fn run(args: &Args) -> Result<(), String> {
             let table = crate::engine::dispatch();
             let engine = crate::engine::ShardedEngine::global();
             // the exact policy the serving stack routes by: the engine
-            // tier's thresholds plus the requested service knobs
-            let policy = engine.policy().clone().with_service(batch, window_us);
+            // tier's thresholds plus the requested service knobs (and the
+            // default service's lane depth for the shed verdict below)
+            let svc_defaults = super::ServiceConfig::default();
+            let policy = engine
+                .policy()
+                .clone()
+                .with_service(batch, window_us)
+                .with_admission(svc_defaults.router_queue_depth, svc_defaults.per_client_inflight);
             let plan = policy.plan_dot(0, accuracy, total_bytes);
             let kernel = table.select(prec, accuracy, plan.class);
             let fused = crate::engine::plan::batch_exec(table, prec, accuracy, plan.class, batch);
@@ -487,6 +499,43 @@ pub fn run(args: &Args) -> Result<(), String> {
                      this cell)"
                 ),
             }
+            // the admission gate's shed verdict, computed by the SAME pure
+            // method the service lanes call (`PlanPolicy::shed`). A live
+            // lane estimates per-message service time from its
+            // service-time histogram mean; here the estimate is a flag,
+            // defaulting to a ~10 GB/s streaming guess for this working
+            // set so the verdict is still meaningful without a service.
+            let est_service_us =
+                if est_us_flag > 0 { est_us_flag } else { (plan.total_bytes / 10_000).max(1) };
+            if deadline_us == 0 {
+                println!(
+                    "  admission   : no deadline — a full lane BLOCKS this sender \
+                     (back-pressure); pass --deadline-us D [--queued Q] to see the shed \
+                     verdict the service would reach"
+                );
+            } else {
+                match policy.shed(deadline_us, queued, est_service_us) {
+                    Some(v) if v.queue_full => println!(
+                        "  admission   : SHED — the lane is full ({} queued >= depth {}); \
+                         the reply is an immediate clean `shed:` error and the sender never \
+                         blocks (the deadline contract)",
+                        v.queued, policy.lane_depth
+                    ),
+                    Some(v) => println!(
+                        "  admission   : SHED — projected queue wait {} us ({} queued x \
+                         {est_service_us} us est. service) exceeds the {} us deadline",
+                        v.projected_wait_us, v.queued, v.deadline_us
+                    ),
+                    None => println!(
+                        "  admission   : ADMIT — projected queue wait {} us ({queued} queued \
+                         x {est_service_us} us est. service) fits the {deadline_us} us \
+                         deadline (lane depth {}); an admitted request whose deadline expires \
+                         while it waits is still shed at serve time",
+                        (queued as u64).saturating_mul(est_service_us),
+                        policy.lane_depth
+                    ),
+                }
+            }
         }
         "accuracy" => {
             let n = args.num("n", 2048usize).map_err(|e| e.to_string())?;
@@ -613,6 +662,24 @@ mod tests {
         // which must explain its unconditional Inline route at any size
         run(&args(&["plan", "--len", "4096", "--accuracy", "dot2", "--batch", "4"])).unwrap();
         run(&args(&["plan", "--len", "1000000", "--accuracy", "exact"])).unwrap();
+        // the admission gate's shed verdict: a projected-wait SHED
+        // (8 queued x 50 us >> 100 us), a comfortable ADMIT, and a
+        // full-lane SHED (queued >= default depth)
+        run(&args(&[
+            "plan",
+            "--len",
+            "1000",
+            "--deadline-us",
+            "100",
+            "--queued",
+            "8",
+            "--est-service-us",
+            "50",
+        ]))
+        .unwrap();
+        run(&args(&["plan", "--len", "1000", "--deadline-us", "1000000", "--queued", "1"]))
+            .unwrap();
+        run(&args(&["plan", "--len", "64", "--deadline-us", "10", "--queued", "64"])).unwrap();
         assert!(run(&args(&["plan"])).is_err(), "--len is required");
         assert!(run(&args(&["plan", "--len", "10", "--precision", "f16"])).is_err());
         assert!(run(&args(&["plan", "--len", "10", "--accuracy", "fast"])).is_err());

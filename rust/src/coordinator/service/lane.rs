@@ -56,6 +56,9 @@ pub(super) fn submitter_loop(router: &HostRouter, shard: usize, rx: mpsc::Receiv
         match first {
             Msg::Shutdown => shutdown = true,
             m => {
+                // depth gauge + fair-admission slot return (shutdown
+                // markers bypass `send_to`, so they bypass this too)
+                router.note_dequeued(shard, &m);
                 if shutdown {
                     router.drained.fetch_add(1, Ordering::Relaxed);
                 }
@@ -66,6 +69,7 @@ pub(super) fn submitter_loop(router: &HostRouter, shard: usize, rx: mpsc::Receiv
             match rx.try_recv() {
                 Ok(Msg::Shutdown) => shutdown = true,
                 Ok(m) => {
+                    router.note_dequeued(shard, &m);
                     // messages gathered behind the marker are the drain set
                     if shutdown {
                         router.drained.fetch_add(1, Ordering::Relaxed);
@@ -104,6 +108,7 @@ pub(super) fn submitter_loop(router: &HostRouter, shard: usize, rx: mpsc::Receiv
                             break;
                         }
                         Ok(m) => {
+                            router.note_dequeued(shard, &m);
                             let grew = router.grows_fuse(shard, &m, kind, accuracy);
                             pending.push(m);
                             if !grew {
@@ -265,10 +270,31 @@ impl HostRouter {
     /// bits never change either way). On a batch panic the chunk falls
     /// back to per-request serves, so only the culprit request errors.
     fn serve_req_batch(&self, s: usize, reqs: Vec<DotRequest>) {
-        self.requests.fetch_add(reqs.len() as u64, Ordering::Relaxed);
+        // deadline ground truth first: expired requests are shed — they
+        // never reach an engine, never count as requests or errors, and
+        // their removal cannot change any other request's bits (batching
+        // is bit-identical at every batch size)
+        let mut live: Vec<DotRequest> = Vec::with_capacity(reqs.len());
+        for req in reqs {
+            match self.shed_expired(s, req.deadline_us, req.submitted) {
+                Some(why) => {
+                    let _ = req.reply.send(DotResponse {
+                        id: req.id,
+                        value: Err(why),
+                        batch_size: 1,
+                        latency: req.submitted.elapsed(),
+                    });
+                }
+                None => {
+                    self.note_wait(s, req.submitted);
+                    live.push(req);
+                }
+            }
+        }
+        self.requests.fetch_add(live.len() as u64, Ordering::Relaxed);
         // one group per accuracy tier, indexed like the dispatch table
         let mut groups: [Vec<DotRequest>; 4] = [Vec::new(), Vec::new(), Vec::new(), Vec::new()];
-        for req in reqs {
+        for req in live {
             match self.req_accuracy(req.accuracy) {
                 Err(e) => {
                     self.errors.fetch_add(1, Ordering::Relaxed);
@@ -310,9 +336,11 @@ impl HostRouter {
         if chunk.len() == 1 {
             // mirror of the Msg::Req single path, minus the re-validation
             let req = &chunk[0];
+            let started = Instant::now();
             let value = self.execute(s, req.accuracy, false, |a| {
                 self.engine.dot_on_f32(s, a, &req.a, &req.b)
             });
+            self.note_service(s, started, 1);
             if value.is_err() {
                 self.errors.fetch_add(1, Ordering::Relaxed);
             }
@@ -327,6 +355,7 @@ impl HostRouter {
         }
         let pairs: Vec<(&[f32], &[f32])> =
             chunk.iter().map(|r| (r.a.as_slice(), r.b.as_slice())).collect();
+        let started = Instant::now();
         let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
             self.engine.dot_batch_on_f32(s, acc, &pairs)
         }));
@@ -334,6 +363,8 @@ impl HostRouter {
         match r {
             Ok(vals) => {
                 let bsz = chunk.len();
+                // every request in the batch waited on the whole batch
+                self.note_service(s, started, bsz as u64);
                 // counted only on success: the panic fallback below routes
                 // every request through `execute`, which does its own
                 // counting — counting both would break the
@@ -387,12 +418,26 @@ impl HostRouter {
             reply: mpsc::Sender<DotResponse>,
             submitted: Instant,
         }
-        self.requests.fetch_add(msgs.len() as u64, Ordering::Relaxed);
         let mut groups: [Vec<Pooled>; 4] = [Vec::new(), Vec::new(), Vec::new(), Vec::new()];
         for msg in msgs {
-            let Msg::ReqPooled { id, accuracy, a, b, sa, sb, reply, submitted } = msg else {
+            let Msg::ReqPooled { id, accuracy, a, b, sa, sb, deadline_us, client: _, reply, submitted } =
+                msg
+            else {
                 unreachable!("serve_pooled_batch takes ReqPooled runs only");
             };
+            // expired deadline = shed (clean reject, not a request or an
+            // error), exactly as in the fresh-request batch path
+            if let Some(why) = self.shed_expired(s, deadline_us, submitted) {
+                let _ = reply.send(DotResponse {
+                    id,
+                    value: Err(why),
+                    batch_size: 1,
+                    latency: submitted.elapsed(),
+                });
+                continue;
+            }
+            self.requests.fetch_add(1, Ordering::Relaxed);
+            self.note_wait(s, submitted);
             let validated: Result<Accuracy, String> =
                 match (self.req_accuracy(accuracy), &sa, &sb) {
                     (Err(e), _, _) => Err(e),
@@ -400,8 +445,9 @@ impl HostRouter {
                     (Ok(_), Some(sa), Some(sb)) => {
                         Err(format!("length mismatch {} vs {}", sa.len(), sb.len()))
                     }
+                    // stable "stream released" text, as in the serial arm
                     (Ok(_), sa, _) => Err(format!(
-                        "unknown stream handle {}",
+                        "stream released: handle {} is not admitted",
                         if sa.is_some() { b } else { a }
                     )),
                 };
@@ -433,9 +479,11 @@ impl HostRouter {
                 let chunk: Vec<Pooled> = group.drain(..take).collect();
                 if chunk.len() == 1 {
                     let p = &chunk[0];
+                    let started = Instant::now();
                     let value = self.execute(s, p.accuracy, true, |a| {
                         self.engine.dot_homed_f32(a, &p.sa, &p.sb)
                     });
+                    self.note_service(s, started, 1);
                     if value.is_err() {
                         self.errors.fetch_add(1, Ordering::Relaxed);
                     }
@@ -450,6 +498,7 @@ impl HostRouter {
                 }
                 let pairs: Vec<(&HomedSlice<f32>, &HomedSlice<f32>)> =
                     chunk.iter().map(|p| (&p.sa, &p.sb)).collect();
+                let started = Instant::now();
                 let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
                     self.engine.dot_batch_homed_f32(acc, &pairs)
                 }));
@@ -460,6 +509,7 @@ impl HostRouter {
                         // the panic fallback's `execute` calls count for
                         // themselves
                         let bsz = chunk.len();
+                        self.note_service(s, started, bsz as u64);
                         self.engine_calls.fetch_add(1, Ordering::Relaxed);
                         self.pooled_calls.fetch_add(bsz as u64, Ordering::Relaxed);
                         self.batches.fetch_add(1, Ordering::Relaxed);

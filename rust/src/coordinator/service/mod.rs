@@ -27,12 +27,27 @@
 //!   compensated cross-shard merge (the submitter only initiates the
 //!   split), which keeps the sequential Kahan bound and 1-vs-N-shard
 //!   bit-identity intact. Queues are bounded
-//!   (`ServiceConfig::router_queue_depth`): when a lane is full the
-//!   client's send blocks — back-pressure instead of unbounded queue
-//!   growth — and the stall is counted in
-//!   [`ServiceStats::queue_full_stalls`]. Shutdown is graceful: each
-//!   submitter drains and serves everything already queued behind the
-//!   shutdown marker before exiting (see `lane::submitter_loop`).
+//!   (`ServiceConfig::router_queue_depth`): a deadline-less send to a
+//!   full lane blocks — back-pressure instead of unbounded queue growth —
+//!   with the stall counted in [`ServiceStats::queue_full_stalls`] and
+//!   its duration in [`ServiceStats::stalled_us`]. **Overload
+//!   protection** (opt-in per request) replaces that blocking with
+//!   shedding: a request carrying a `deadline_us` is rejected with a
+//!   clean `Err("shed: …")` reply — never a blocked sender — when the
+//!   planner's pure shed policy ([`crate::engine::PlanPolicy::shed`])
+//!   projects the lane queue wait past the deadline or finds the lane
+//!   full, and again at serve time if the deadline expired while queued.
+//!   [`ServiceConfig::per_client_inflight`] adds per-client fair
+//!   admission on top ([`DotClient::for_client`] tags requests): one
+//!   heavy client at its cap is shed instead of occupying the whole
+//!   lane. Sheds never reach an engine, so every served request stays
+//!   bit-identical to serial resubmission; per-lane log-bucketed
+//!   queue-wait and service-time histograms
+//!   ([`crate::coordinator::service::LatencyHist`]) feed both the shed
+//!   projection and the tail-latency accounting in [`ServiceStats`].
+//!   Shutdown is graceful: each submitter drains and serves everything
+//!   already queued behind the shutdown marker before exiting (see
+//!   `lane::submitter_loop`).
 //! * [`Backend::Pjrt`] — the original PJRT path: one worker thread owns
 //!   the `Runtime` (executables are not shared across threads), drains the
 //!   queue with a batching window, groups compatible requests, and
@@ -79,7 +94,7 @@ mod tests_accuracy;
 mod tests_window;
 
 pub use router::DotClient;
-pub use stats::{LaneStats, ServiceStats};
+pub use stats::{LaneStats, LatencyHist, ServiceStats, HIST_BUCKETS};
 
 use crate::engine::{HomedSlice, ShardedEngine};
 use crate::isa::Accuracy;
@@ -114,6 +129,12 @@ enum Msg {
         b: u64,
         sa: Option<HomedSlice<f32>>,
         sb: Option<HomedSlice<f32>>,
+        /// admission deadline (µs, 0 = none) — same shed semantics as
+        /// [`DotRequest::deadline_us`]
+        deadline_us: u64,
+        /// fair-admission client token — same semantics as
+        /// [`DotRequest::client`]
+        client: u64,
         reply: mpsc::Sender<DotResponse>,
         submitted: Instant,
     },
@@ -146,6 +167,26 @@ fn msg_kind(m: &Msg) -> u8 {
     }
 }
 
+/// Admission deadline a message carries (dot requests only; everything
+/// else is 0 = "no deadline" and keeps blocking back-pressure).
+fn msg_deadline(m: &Msg) -> u64 {
+    match m {
+        Msg::Req(r) => r.deadline_us,
+        Msg::ReqPooled { deadline_us, .. } => *deadline_us,
+        _ => 0,
+    }
+}
+
+/// Fair-admission client token a message carries (dot requests only —
+/// admissions and releases are not subject to the per-client cap).
+fn msg_client(m: &Msg) -> Option<u64> {
+    match m {
+        Msg::Req(r) => Some(r.client),
+        Msg::ReqPooled { client, .. } => Some(*client),
+        _ => None,
+    }
+}
+
 /// Which execution path serves requests.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
 pub enum Backend {
@@ -164,6 +205,19 @@ pub struct DotRequest {
     pub accuracy: &'static str,
     pub a: Vec<f32>,
     pub b: Vec<f32>,
+    /// admission deadline in microseconds; 0 (the [`DotClient::submit`]
+    /// default) = no deadline, keep blocking back-pressure. With a
+    /// deadline set the request is SHED — a clean `Err("shed: …")` reply,
+    /// never a blocked sender — when the lane's projected queue wait or a
+    /// full queue means it cannot be served in time
+    /// ([`crate::engine::PlanPolicy::shed`]), or when the deadline has
+    /// already expired by the time a submitter picks it up.
+    pub deadline_us: u64,
+    /// fair-admission client token ([`DotClient::for_client`]; 0 =
+    /// anonymous). With [`ServiceConfig::per_client_inflight`] set, a
+    /// client already holding that many queue slots on the target lane is
+    /// shed instead of admitted.
+    pub client: u64,
     reply: mpsc::Sender<DotResponse>,
     /// stamped in `DotClient::submit`, so reported latency includes the
     /// time spent queued in the channel, not just the execute time
@@ -216,6 +270,17 @@ pub struct ServiceConfig {
     /// added latency. Capped by [`MAX_BATCH_WINDOW_US`] (validated at
     /// service start).
     pub batch_window_us: u64,
+    /// Accuracy tier served when a request's `accuracy` string is empty:
+    /// "naive", "kahan" (default), "dot2" or "exact" (validated at
+    /// service start).
+    pub default_accuracy: String,
+    /// Host backend: per-client in-flight cap per lane (fair admission).
+    /// A client already holding this many slots of a lane's queue has its
+    /// next request shed (`Err("shed: client …")`) instead of admitted,
+    /// so one heavy client cannot occupy a whole lane and starve its
+    /// neighbors ([`crate::engine::PlanPolicy::admits_client`]). `0`
+    /// (default) = unlimited, the pre-fairness behavior.
+    pub per_client_inflight: usize,
     /// Host backend: ECM worker governance. `"on"` (default) keeps the
     /// engine tier's governed plan policy — MEM-class fan-out is capped at
     /// the host ECM verdict's predicted saturation cores, freeing workers
@@ -242,6 +307,7 @@ impl Default for ServiceConfig {
             max_batch: 16,
             batch_window_us: 0,
             default_accuracy: "kahan".into(),
+            per_client_inflight: 0,
             ecm_governance: "on".into(),
             window: Duration::from_millis(2),
             batched_artifact_kahan: "batched_dot_kahan_f32_b8_n16384".into(),
@@ -351,7 +417,7 @@ impl DotService {
                         anyhow::bail!("service worker died during startup");
                     }
                 }
-                let client = DotClient { inner: ClientInner::Pjrt(tx.clone()) };
+                let client = DotClient { inner: ClientInner::Pjrt(tx.clone()), client: 0 };
                 Ok((
                     DotService { inner: ServiceInner::Pjrt { tx: Some(tx), worker: Some(worker) } },
                     client,
@@ -385,8 +451,11 @@ impl DotService {
         // `ecm_governance = "off"` opens the policy's worker caps (the
         // shard engines the service executes on must be built ungoverned
         // too for a fully open path — see the bench's paired scenarios)
-        let mut policy =
-            engine.policy().clone().with_service(config.max_batch, config.batch_window_us);
+        let mut policy = engine
+            .policy()
+            .clone()
+            .with_service(config.max_batch, config.batch_window_us)
+            .with_admission(config.router_queue_depth, config.per_client_inflight);
         if config.ecm_governance == "off" {
             policy = policy.ungoverned();
         }
@@ -405,7 +474,7 @@ impl DotService {
                     .expect("spawn dot submitter")
             })
             .collect();
-        let client = DotClient { inner: ClientInner::Host(Arc::clone(&router)) };
+        let client = DotClient { inner: ClientInner::Host(Arc::clone(&router)), client: 0 };
         Ok((DotService { inner: ServiceInner::Host { router, submitters } }, client))
     }
 

@@ -10,7 +10,7 @@
 //! [`PlanPolicy`].
 
 use super::stats::LaneCounters;
-use super::{parse_accuracy, DotRequest, DotResponse, Msg};
+use super::{msg_client, msg_deadline, parse_accuracy, DotRequest, DotResponse, Msg};
 use crate::engine::parallel::panic_message;
 use crate::engine::{HomedSlice, PlanPolicy, ShardedEngine};
 use crate::isa::Accuracy;
@@ -51,6 +51,7 @@ pub(super) struct HostRouter {
     pub(super) batched_requests: AtomicU64,
     pub(super) admit_batches: AtomicU64,
     pub(super) errors: AtomicU64,
+    pub(super) release_misses: AtomicU64,
     pub(super) drained: AtomicU64,
 }
 
@@ -88,6 +89,7 @@ impl HostRouter {
             batched_requests: AtomicU64::new(0),
             admit_batches: AtomicU64::new(0),
             errors: AtomicU64::new(0),
+            release_misses: AtomicU64::new(0),
             drained: AtomicU64::new(0),
         });
         (router, receivers)
@@ -100,23 +102,195 @@ impl HostRouter {
 
     /// Hand `msg` to shard `s`'s submitter. The queue is bounded: a full
     /// lane counts a stall and then *blocks* until the submitter catches
-    /// up — back-pressure, not unbounded growth. A send after shutdown is
-    /// dropped; the caller observes it as a disconnected reply channel.
+    /// up — back-pressure, not unbounded growth — UNLESS the message
+    /// carries an admission deadline, in which case it is shed instead
+    /// (the priority-inversion fix: a deadlined request never blocks its
+    /// sender; the admission gate races the queue, so this is the
+    /// authoritative full-lane check). A send after shutdown is dropped;
+    /// the caller observes it as a disconnected reply channel.
     pub(super) fn send_to(&self, s: usize, msg: Msg) {
         match self.queues[s].try_send(msg) {
             Ok(()) => {
                 self.lanes[s].routed.fetch_add(1, Ordering::Relaxed);
+                self.lanes[s].queued.fetch_add(1, Ordering::Relaxed);
             }
             Err(mpsc::TrySendError::Full(msg)) => {
+                let deadline_us = msg_deadline(&msg);
+                if deadline_us > 0 {
+                    self.lanes[s].shed.fetch_add(1, Ordering::Relaxed);
+                    self.client_done_for(s, &msg);
+                    self.reject(
+                        msg,
+                        format!("shed: lane {s} queue is full (deadline {deadline_us} us)"),
+                    );
+                    return;
+                }
                 self.lanes[s].queue_full_stalls.fetch_add(1, Ordering::Relaxed);
+                let stall_start = Instant::now();
                 // count only accepted messages — a *rejected* send must
                 // not inflate `routed` (acceptance can still race the
                 // submitter's exit; see the `LaneStats::routed` doc)
                 if self.queues[s].send(msg).is_ok() {
                     self.lanes[s].routed.fetch_add(1, Ordering::Relaxed);
+                    self.lanes[s].queued.fetch_add(1, Ordering::Relaxed);
+                }
+                let stalled = stall_start.elapsed().as_micros() as u64;
+                self.lanes[s].stalled_us.fetch_add(stalled, Ordering::Relaxed);
+                // fold the stall into the queue-wait attribution: a
+                // blocked sender IS queue wait, just paid before the
+                // message entered the lane
+                self.lanes[s].record_wait_us(stalled);
+            }
+            Err(mpsc::TrySendError::Disconnected(msg)) => {
+                self.client_done_for(s, &msg);
+            }
+        }
+    }
+
+    /// The overload admission gate for dot messages (`Msg::Req` /
+    /// `Msg::ReqPooled`), run on the CLIENT thread before the queue:
+    /// deadline shed first (pure [`PlanPolicy::shed`] over the lane's
+    /// live depth gauge and its histogram-derived service-time estimate),
+    /// then per-client fair admission, then the normal send. Sheds reply
+    /// `Err("shed: …")` immediately — they are clean rejects, counted in
+    /// `shed`/`fair_sheds` but never in `requests` or `errors`, and they
+    /// never reach an engine.
+    pub(super) fn admit_or_shed(&self, s: usize, msg: Msg) {
+        let deadline_us = msg_deadline(&msg);
+        if deadline_us > 0 {
+            let queued = self.lanes[s].queued.load(Ordering::Relaxed) as usize;
+            let est = self.lanes[s].est_service_us();
+            if let Some(v) = self.policy.shed(deadline_us, queued, est) {
+                self.lanes[s].shed.fetch_add(1, Ordering::Relaxed);
+                let why = if v.queue_full {
+                    format!(
+                        "shed: lane {s} queue is full ({} queued, deadline {} us)",
+                        v.queued, v.deadline_us
+                    )
+                } else {
+                    format!(
+                        "shed: projected lane {s} queue wait {} us exceeds deadline {} us \
+                         ({} queued)",
+                        v.projected_wait_us, v.deadline_us, v.queued
+                    )
+                };
+                self.reject(msg, why);
+                return;
+            }
+        }
+        if self.policy.per_client_inflight > 0 {
+            if let Some(client) = msg_client(&msg) {
+                if !self.client_admit(s, client) {
+                    self.lanes[s].fair_sheds.fetch_add(1, Ordering::Relaxed);
+                    self.reject(
+                        msg,
+                        format!(
+                            "shed: client {client} is at the per-client in-flight cap {} on \
+                             lane {s}",
+                            self.policy.per_client_inflight
+                        ),
+                    );
+                    return;
                 }
             }
-            Err(mpsc::TrySendError::Disconnected(_)) => {}
+        }
+        self.send_to(s, msg);
+    }
+
+    /// Reply to a shed dot message without serving it.
+    fn reject(&self, msg: Msg, why: String) {
+        match msg {
+            Msg::Req(req) => {
+                let _ = req.reply.send(DotResponse {
+                    id: req.id,
+                    value: Err(why),
+                    batch_size: 1,
+                    latency: req.submitted.elapsed(),
+                });
+            }
+            Msg::ReqPooled { id, reply, submitted, .. } => {
+                let _ = reply.send(DotResponse {
+                    id,
+                    value: Err(why),
+                    batch_size: 1,
+                    latency: submitted.elapsed(),
+                });
+            }
+            // only dot requests carry deadlines or client tokens
+            _ => {}
+        }
+    }
+
+    /// Serve-time deadline check: a request whose deadline expired while
+    /// it sat in the queue is shed HERE, before any engine work — the
+    /// admission projection is an estimate, this is the ground truth.
+    /// Counts the shed and returns the reply text; `None` = serve it.
+    pub(super) fn shed_expired(
+        &self,
+        s: usize,
+        deadline_us: u64,
+        submitted: Instant,
+    ) -> Option<String> {
+        if deadline_us == 0 {
+            return None;
+        }
+        let waited = submitted.elapsed().as_micros() as u64;
+        if waited < deadline_us {
+            return None;
+        }
+        self.lanes[s].shed.fetch_add(1, Ordering::Relaxed);
+        Some(format!("shed: deadline {deadline_us} us expired in queue (waited {waited} us)"))
+    }
+
+    /// Bookkeeping when a submitter picks a message off its lane queue:
+    /// the live depth gauge drops, and the sending client's fair-admission
+    /// slot is returned. Shutdown markers bypass `send_to`, so they must
+    /// bypass this too (the lane loop only calls it for real messages).
+    pub(super) fn note_dequeued(&self, s: usize, msg: &Msg) {
+        let _ = self.lanes[s].queued.fetch_update(Ordering::Relaxed, Ordering::Relaxed, |v| {
+            v.checked_sub(1)
+        });
+        self.client_done_for(s, msg);
+    }
+
+    /// Record a dot request's queue wait (submit → serve start) into lane
+    /// `s`'s histogram.
+    pub(super) fn note_wait(&self, s: usize, submitted: Instant) {
+        self.lanes[s].record_wait_us(submitted.elapsed().as_micros() as u64);
+    }
+
+    /// Record one engine execution's duration into lane `s`'s
+    /// service-time histogram, once per request it served (every request
+    /// in a coalesced batch waited on the whole batch).
+    pub(super) fn note_service(&self, s: usize, started: Instant, requests: u64) {
+        self.lanes[s].record_service_us_n(started.elapsed().as_micros() as u64, requests);
+    }
+
+    /// Take one fair-admission slot for `client` on lane `s` if it is
+    /// under the cap.
+    fn client_admit(&self, s: usize, client: u64) -> bool {
+        let mut m = self.lanes[s].inflight.lock().unwrap();
+        let n = m.entry(client).or_insert(0);
+        if !self.policy.admits_client(*n as usize) {
+            return false;
+        }
+        *n += 1;
+        true
+    }
+
+    /// Return a dot message's fair-admission slot (dequeue, or a send
+    /// that shed/dropped after the gate admitted it).
+    fn client_done_for(&self, s: usize, msg: &Msg) {
+        if self.policy.per_client_inflight == 0 {
+            return;
+        }
+        let Some(client) = msg_client(msg) else { return };
+        let mut m = self.lanes[s].inflight.lock().unwrap();
+        if let Some(n) = m.get_mut(&client) {
+            *n = n.saturating_sub(1);
+            if *n == 0 {
+                m.remove(&client);
+            }
         }
     }
 
@@ -160,7 +334,20 @@ impl HostRouter {
         match msg {
             Msg::Shutdown => {}
             Msg::Req(req) => {
+                // deadline ground truth before any engine work; an
+                // expired request is a shed, not a served request or an
+                // error
+                if let Some(why) = self.shed_expired(s, req.deadline_us, req.submitted) {
+                    let _ = req.reply.send(DotResponse {
+                        id: req.id,
+                        value: Err(why),
+                        batch_size: 1,
+                        latency: req.submitted.elapsed(),
+                    });
+                    return;
+                }
                 self.requests.fetch_add(1, Ordering::Relaxed);
+                self.note_wait(s, req.submitted);
                 let value = if req.a.len() != req.b.len() {
                     Err(format!("length mismatch {} vs {}", req.a.len(), req.b.len()))
                 } else {
@@ -172,9 +359,12 @@ impl HostRouter {
                     // balanced fresh requests round-robin); the engine
                     // consumes the planner's route and fans very large
                     // dots out across every shard
-                    self.execute(s, req.accuracy, false, |acc| {
+                    let started = Instant::now();
+                    let v = self.execute(s, req.accuracy, false, |acc| {
                         self.engine.dot_on_f32(s, acc, &req.a, &req.b)
-                    })
+                    });
+                    self.note_service(s, started, 1);
+                    v
                 };
                 if value.is_err() {
                     self.errors.fetch_add(1, Ordering::Relaxed);
@@ -195,19 +385,37 @@ impl HostRouter {
                 self.admitted.fetch_add(1, Ordering::Relaxed);
                 let _ = reply.send(Ok(handle));
             }
-            Msg::ReqPooled { id, accuracy, a, b, sa, sb, reply, submitted } => {
+            Msg::ReqPooled { id, accuracy, a, b, sa, sb, deadline_us, client: _, reply, submitted } => {
+                if let Some(why) = self.shed_expired(s, deadline_us, submitted) {
+                    let _ = reply.send(DotResponse {
+                        id,
+                        value: Err(why),
+                        batch_size: 1,
+                        latency: submitted.elapsed(),
+                    });
+                    return;
+                }
                 self.requests.fetch_add(1, Ordering::Relaxed);
+                self.note_wait(s, submitted);
                 let value = match (sa, sb) {
                     (Some(sa), Some(sb)) if sa.len() == sb.len() => {
-                        self.execute(s, accuracy, true, |acc| {
+                        let started = Instant::now();
+                        let v = self.execute(s, accuracy, true, |acc| {
                             self.engine.dot_homed_f32(acc, &sa, &sb)
-                        })
+                        });
+                        self.note_service(s, started, 1);
+                        v
                     }
                     (Some(sa), Some(sb)) => {
                         Err(format!("length mismatch {} vs {}", sa.len(), sb.len()))
                     }
+                    // stable text (tests and clients match on the
+                    // "stream released" prefix): the handle was either
+                    // never admitted or released — possibly by another
+                    // client racing this dot, which is a clean outcome,
+                    // not a confusing internal error
                     (sa, _) => Err(format!(
-                        "unknown stream handle {}",
+                        "stream released: handle {} is not admitted",
                         if sa.is_some() { b } else { a }
                     )),
                 };
@@ -257,12 +465,25 @@ pub(super) enum ClientInner {
 #[derive(Clone)]
 pub struct DotClient {
     pub(super) inner: ClientInner,
+    /// fair-admission token stamped on every dot this handle submits
+    /// (0 = anonymous; see [`DotClient::for_client`])
+    pub(super) client: u64,
 }
 
 impl DotClient {
+    /// A handle that stamps `client` on every dot it submits, for
+    /// per-client fair admission: with
+    /// `ServiceConfig::per_client_inflight` set, each client token gets
+    /// its own in-flight budget per lane, so one heavy client saturating
+    /// a lane is shed while its neighbors keep being admitted. Shares the
+    /// underlying service with `self`.
+    pub fn for_client(&self, client: u64) -> DotClient {
+        DotClient { inner: self.inner.clone(), client }
+    }
+
     /// Submit a request; returns the receiver for its response. Fresh
     /// requests round-robin across the shard lanes; a full lane blocks
-    /// (back-pressure).
+    /// (back-pressure). No admission deadline: this path never sheds.
     pub fn submit(
         &self,
         id: u64,
@@ -270,15 +491,44 @@ impl DotClient {
         a: Vec<f32>,
         b: Vec<f32>,
     ) -> mpsc::Receiver<DotResponse> {
+        self.submit_with_deadline(id, accuracy, a, b, 0)
+    }
+
+    /// [`DotClient::submit`] with an admission deadline (µs; 0 = none).
+    /// A deadlined request is never blocked behind a full or slow lane:
+    /// if the lane's projected queue wait exceeds the deadline, the lane
+    /// is full, or the deadline expires while queued, the request is SHED
+    /// with a clean `Err` reply whose text starts with `"shed: "` —
+    /// overload protection instead of the blocking-admission priority
+    /// inversion. Served requests are bit-identical to an undeadlined
+    /// resubmission; sheds never reach an engine.
+    pub fn submit_with_deadline(
+        &self,
+        id: u64,
+        accuracy: &'static str,
+        a: Vec<f32>,
+        b: Vec<f32>,
+        deadline_us: u64,
+    ) -> mpsc::Receiver<DotResponse> {
         let (reply, rx) = mpsc::channel();
-        let req = DotRequest { id, accuracy, a, b, reply, submitted: Instant::now() };
+        let req = DotRequest {
+            id,
+            accuracy,
+            a,
+            b,
+            deadline_us,
+            client: self.client,
+            reply,
+            submitted: Instant::now(),
+        };
         match &self.inner {
             ClientInner::Host(r) => {
                 let s = r.route_fresh();
-                r.send_to(s, Msg::Req(req));
+                r.admit_or_shed(s, Msg::Req(req));
             }
             // a send error means the service stopped; the caller sees it
-            // as a disconnected receiver
+            // as a disconnected receiver (the Pjrt worker serves FIFO
+            // with no admission gate — deadlines are Host-backend)
             ClientInner::Pjrt(tx) => {
                 let _ = tx.send(Msg::Req(req));
             }

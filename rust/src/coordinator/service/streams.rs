@@ -12,6 +12,7 @@
 
 use super::router::{ClientInner, DotClient};
 use super::{DotResponse, Msg};
+use std::sync::atomic::Ordering;
 use std::sync::mpsc;
 use std::time::Instant;
 
@@ -94,6 +95,20 @@ impl DotClient {
         a: u64,
         b: u64,
     ) -> mpsc::Receiver<DotResponse> {
+        self.submit_pooled_with_deadline(id, accuracy, a, b, 0)
+    }
+
+    /// [`DotClient::submit_pooled`] with an admission deadline (µs; 0 =
+    /// none) — the same shed-instead-of-block semantics as
+    /// [`DotClient::submit_with_deadline`], on the home-shard lane.
+    pub fn submit_pooled_with_deadline(
+        &self,
+        id: u64,
+        accuracy: &'static str,
+        a: u64,
+        b: u64,
+        deadline_us: u64,
+    ) -> mpsc::Receiver<DotResponse> {
         let (reply, rx) = mpsc::channel();
         match &self.inner {
             ClientInner::Host(r) => {
@@ -104,9 +119,20 @@ impl DotClient {
                 // an unknown handle still travels a lane so the submitter
                 // reports it as a per-request error, not a silent drop
                 let s = sa.as_ref().map(|h| h.shard).unwrap_or_else(|| r.route_fresh());
-                r.send_to(
+                r.admit_or_shed(
                     s,
-                    Msg::ReqPooled { id, accuracy, a, b, sa, sb, reply, submitted: Instant::now() },
+                    Msg::ReqPooled {
+                        id,
+                        accuracy,
+                        a,
+                        b,
+                        sa,
+                        sb,
+                        deadline_us,
+                        client: self.client,
+                        reply,
+                        submitted: Instant::now(),
+                    },
                 );
             }
             ClientInner::Pjrt(tx) => {
@@ -117,6 +143,8 @@ impl DotClient {
                     b,
                     sa: None,
                     sb: None,
+                    deadline_us,
+                    client: self.client,
                     reply,
                     submitted: Instant::now(),
                 });
@@ -144,11 +172,16 @@ impl DotClient {
     /// from this client see it gone, while dots already submitted keep
     /// their resolved operands and finish normally. The buffer recycles
     /// into the home shard's pool once the last in-flight reference
-    /// drops. Unknown handles are ignored.
+    /// drops. Releasing an unknown or already-released handle is a clean
+    /// no-op, counted in [`super::ServiceStats::release_misses`] instead
+    /// of silently swallowed (a double release, or two clients racing a
+    /// release of the same stream).
     pub fn release(&self, handle: u64) {
         match &self.inner {
             ClientInner::Host(r) => {
-                r.streams.write().unwrap().remove(&handle);
+                if r.streams.write().unwrap().remove(&handle).is_none() {
+                    r.release_misses.fetch_add(1, Ordering::Relaxed);
+                }
             }
             ClientInner::Pjrt(tx) => {
                 let _ = tx.send(Msg::Release { handle });

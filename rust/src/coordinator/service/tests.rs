@@ -332,6 +332,17 @@ fn backpressure_blocks_producer_and_counts_stalls() {
         stats.queue_full_stalls >= 1,
         "blocked sends must be visible in stats: {stats:?}"
     );
+    // the stall's *duration* is attributed too: the producer was held for
+    // the ~100 ms verification window above, so the stalled-microseconds
+    // counter and the queue-wait histogram must both have seen it
+    assert!(
+        stats.stalled_us >= 1_000,
+        "stall time must be counted in microseconds: {stats:?}"
+    );
+    assert!(
+        stats.queue_wait.count() >= 1,
+        "stall time must fold into the queue-wait histogram: {stats:?}"
+    );
 }
 
 /// Regression (shutdown-drop bug): requests queued behind the shutdown
@@ -539,6 +550,167 @@ fn admit_pair_places_both_streams_on_one_shard_in_one_message() {
     let stats = svc.stop();
     assert_eq!(stats.admitted, 2, "{stats:?}");
     assert_eq!(stats.errors, 0, "{stats:?}");
+}
+
+// ---- overload protection: deadline sheds, fair lanes, histograms ----
+
+/// Regression for the blocking-admission priority inversion: a request
+/// WITH a deadline that meets a full lane must get a clean "shed" reply
+/// immediately — while the lane is still wedged — instead of blocking
+/// its sender behind the stalled queue.
+#[test]
+fn deadline_request_sheds_on_a_full_lane_instead_of_blocking() {
+    let engine = leak_engine(&Topology::single_node(), 2);
+    let (svc, client) = DotService::start_on(
+        ServiceConfig { router_queue_depth: 1, ..ServiceConfig::default() },
+        engine,
+    );
+    let gate = Gate::close(engine, 0);
+    let mut rng = Rng::new(91);
+    let n = 200_000; // parallel path: the submitter blocks on the gate
+    let rx_big = client.submit(0, "kahan", rng.normal_f32_vec(n), rng.normal_f32_vec(n));
+    wait_engine_requests(engine, 1);
+    // fill the depth-1 queue (deadline-free, so it queues instead of shedding)
+    let rx_q = client.submit(1, "kahan", vec![1.0; 64], vec![2.0; 64]);
+    // the lane is now FULL and wedged: the old contract would block this
+    // sender indefinitely; the deadline turns it into an immediate shed
+    let rx_shed = client.submit_with_deadline(2, "kahan", vec![1.0; 64], vec![2.0; 64], 50_000);
+    let err = rx_shed
+        .recv_timeout(Duration::from_secs(10))
+        .expect("shed reply must arrive while the lane is still wedged")
+        .value
+        .unwrap_err();
+    assert!(err.starts_with("shed: "), "stable shed error prefix: {err}");
+
+    gate.open();
+    assert!(rx_big.recv_timeout(Duration::from_secs(30)).expect("big").value.is_ok());
+    assert_eq!(rx_q.recv().expect("queued reply").value.expect("value"), 128.0);
+    let stats = svc.stop();
+    assert_eq!(stats.shed, 1, "{stats:?}");
+    assert_eq!(stats.requests, 2, "sheds never count as served requests: {stats:?}");
+    assert_eq!(stats.errors, 0, "sheds are clean rejects, not errors: {stats:?}");
+}
+
+/// A request admitted in time whose deadline expires while it waits in
+/// the queue is shed at serve time — and shedding NEVER changes the bits
+/// of the requests that are served: each survivor is bit-identical to
+/// serial re-submission on the idle service.
+#[test]
+fn expired_deadline_sheds_in_queue_and_served_bits_never_change() {
+    let engine = leak_engine(&Topology::single_node(), 2);
+    let (svc, client) = DotService::start_on(
+        ServiceConfig { router_queue_depth: 8, ..ServiceConfig::default() },
+        engine,
+    );
+    let gate = Gate::close(engine, 0);
+    let mut rng = Rng::new(93);
+    let n = 200_000;
+    let rx_big = client.submit(0, "kahan", rng.normal_f32_vec(n), rng.normal_f32_vec(n));
+    wait_engine_requests(engine, 1);
+
+    // behind the wedged submitter: one 1 µs deadline (long expired by
+    // serve time) between two deadline-free requests that must survive
+    let pairs: Vec<(Vec<f32>, Vec<f32>)> =
+        (0..3).map(|_| (rng.normal_f32_vec(512), rng.normal_f32_vec(512))).collect();
+    let rx_doomed =
+        client.submit_with_deadline(1, "kahan", pairs[0].0.clone(), pairs[0].1.clone(), 1);
+    let rx_a = client.submit(2, "kahan", pairs[1].0.clone(), pairs[1].1.clone());
+    let rx_b = client.submit(3, "kahan", pairs[2].0.clone(), pairs[2].1.clone());
+
+    gate.open();
+    assert!(rx_big.recv_timeout(Duration::from_secs(30)).expect("big").value.is_ok());
+    let err = rx_doomed.recv().expect("shed reply").value.unwrap_err();
+    assert!(
+        err.starts_with("shed: deadline"),
+        "expiry shed must say the deadline expired in queue: {err}"
+    );
+    let va = rx_a.recv().expect("a").value.expect("served despite the shed");
+    let vb = rx_b.recv().expect("b").value.expect("served despite the shed");
+    // bit-identity: the shedding service vs serial re-submission
+    let sa = client.dot_blocking("kahan", pairs[1].0.clone(), pairs[1].1.clone()).unwrap();
+    let sb = client.dot_blocking("kahan", pairs[2].0.clone(), pairs[2].1.clone()).unwrap();
+    assert_eq!(va.to_bits(), sa.to_bits(), "shedding must not change served bits");
+    assert_eq!(vb.to_bits(), sb.to_bits(), "shedding must not change served bits");
+
+    let stats = svc.stop();
+    assert_eq!(stats.shed, 1, "{stats:?}");
+    assert_eq!(stats.requests, 5, "big + 2 survivors + 2 serial: {stats:?}");
+    assert_eq!(stats.errors, 0, "{stats:?}");
+    // the tail histograms saw the served requests: waits for everything
+    // that reached a submitter, service time for everything executed
+    assert!(stats.queue_wait.count() >= 5, "{stats:?}");
+    assert!(stats.service_time.count() >= 5, "{stats:?}");
+    assert!(
+        stats.service_time.percentile_us(99.0) >= stats.service_time.percentile_us(50.0),
+        "{stats:?}"
+    );
+}
+
+/// Fair admission: with a per-client in-flight cap, the greedy client's
+/// overflow is shed while the quiet client's request sails through —
+/// the cap never punishes the client who isn't flooding the lane.
+#[test]
+fn per_client_cap_sheds_the_greedy_client_not_the_quiet_one() {
+    let engine = leak_engine(&Topology::single_node(), 2);
+    let (svc, client) = DotService::start_on(
+        ServiceConfig {
+            router_queue_depth: 8,
+            per_client_inflight: 2,
+            ..ServiceConfig::default()
+        },
+        engine,
+    );
+    let gate = Gate::close(engine, 0);
+    let mut rng = Rng::new(95);
+    let greedy = client.for_client(7);
+    let quiet = client.for_client(8);
+
+    let n = 200_000;
+    let rx_big = greedy.submit(0, "kahan", rng.normal_f32_vec(n), rng.normal_f32_vec(n));
+    // the big dot is DEQUEUED (in service) once the engine starts it, so
+    // it no longer counts against greedy's queued-per-lane budget
+    wait_engine_requests(engine, 1);
+
+    let rx_g1 = greedy.submit(1, "kahan", vec![1.0; 64], vec![2.0; 64]);
+    let rx_g2 = greedy.submit(2, "kahan", vec![1.0; 64], vec![3.0; 64]);
+    // third queued request from the same client: over the cap of 2
+    let rx_g3 = greedy.submit(3, "kahan", vec![1.0; 64], vec![4.0; 64]);
+    let err = rx_g3.recv_timeout(Duration::from_secs(10)).expect("fair shed").value.unwrap_err();
+    assert!(err.starts_with("shed: client"), "fair sheds name the client: {err}");
+    // the quiet client is under ITS cap: admitted despite greedy's flood
+    let rx_quiet = quiet.submit(4, "kahan", vec![1.0; 64], vec![5.0; 64]);
+
+    gate.open();
+    assert!(rx_big.recv_timeout(Duration::from_secs(30)).expect("big").value.is_ok());
+    assert_eq!(rx_g1.recv().expect("g1").value.expect("value"), 128.0);
+    assert_eq!(rx_g2.recv().expect("g2").value.expect("value"), 192.0);
+    assert_eq!(rx_quiet.recv().expect("quiet").value.expect("value"), 320.0);
+    let stats = svc.stop();
+    assert_eq!(stats.fair_sheds, 1, "{stats:?}");
+    assert_eq!(stats.shed, 0, "fair sheds are counted separately: {stats:?}");
+    assert_eq!(stats.requests, 4, "{stats:?}");
+    assert_eq!(stats.errors, 0, "{stats:?}");
+}
+
+/// Satellite regression: releasing an unknown or already-released handle
+/// is a counted no-op (`release_misses`), and a dot over a released
+/// stream fails with the stable "stream released" error text.
+#[test]
+fn releasing_an_unknown_handle_is_counted_not_swallowed() {
+    let (svc, client) = DotService::start(ServiceConfig::default()).unwrap();
+    let ha = client.admit_blocking(vec![1.0; 64]).unwrap();
+    let hb = client.admit_blocking(vec![2.0; 64]).unwrap();
+    client.release(999); // never admitted: miss
+    client.release(ha); // live: hit
+    client.release(ha); // double release: miss
+    let err = client.dot_pooled_blocking("kahan", ha, hb).unwrap_err();
+    assert!(
+        err.starts_with("stream released"),
+        "released-handle dots keep the stable error text: {err}"
+    );
+    let stats = svc.stop();
+    assert_eq!(stats.release_misses, 2, "{stats:?}");
+    assert_eq!(stats.errors, 1, "{stats:?}");
 }
 
 // ---- Pjrt backend: skipped without artifacts ----

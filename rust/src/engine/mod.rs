@@ -7,13 +7,28 @@
 //! across requests, so the steady-state cost of a served dot is the
 //! streaming cost the paper models and nothing else.
 //!
-//! # Architecture: plan → govern → route → shard → pool → partition → kernel → merge
+//! # Architecture: plan → admit/shed → govern → route → shard → pool → partition → kernel → merge
 //!
 //! ```text
 //!   clients (any thread)
 //!   ──► DotClient routes: pooled → home-shard lane, fresh → round-robin
+//!        │
+//!        ▼
+//!   ┌─ overload protection (coordinator::service admission gate) ───────┐
+//!   │ deadline requests are SHED, never blocked: PlanPolicy::shed       │
+//!   │ projects the lane's queue wait (live depth × histogram mean       │
+//!   │ service time) and rejects with a clean "shed: …" error when the   │
+//!   │ lane is full or the projection exceeds the deadline; per-client   │
+//!   │ in-flight caps (fair lanes) shed the greedy client, not the       │
+//!   │ quiet one. A shed rejects the WHOLE request — served requests     │
+//!   │ are bit-identical with or without shedding. Deadline-free         │
+//!   │ requests keep the old contract: a full lane blocks the sender,    │
+//!   │ with the stall counted and its microseconds folded into the       │
+//!   │ queue-wait histogram (ServiceStats::{shed, fair_sheds,            │
+//!   │ stalled_us, queue_wait, service_time})                            │
+//!   └───────────────────────────────────────────────────────────────────┘
 //!        │  bounded per-shard queues (back-pressure: a full lane blocks
-//!        │  the sender; stalls counted in ServiceStats)
+//!        │  only deadline-free senders; stalls counted in ServiceStats)
 //!        ▼
 //!   submitter threads, one per shard (coordinator::service router pool —
 //!   independent requests execute concurrently on different shards).
@@ -261,6 +276,13 @@ macro_rules! engine_dot_methods {
             );
             self.requests.fetch_add(1, Ordering::Relaxed);
             let n = a.len().min(b.len());
+            if n == 0 {
+                // zero-length dot: exactly +0.0 in every tier, and it must
+                // never cost a kernel call or a worker job (the planner's
+                // predicates agree — `serves_inline(0)` is true, `splits(0)`
+                // is false)
+                return 0.0 as $ty;
+            }
             let total_bytes = (2 * n * std::mem::size_of::<$ty>()) as u64;
             let f = $kernel_for(accuracy, total_bytes);
             // the Exact tier is always inline — scalar expansion arithmetic
@@ -297,6 +319,10 @@ macro_rules! engine_dot_methods {
             );
             self.requests.fetch_add(1, Ordering::Relaxed);
             let n = a.len().min(b.len());
+            if n == 0 {
+                // zero-length dot: +0.0, no kernel call (see the slice path)
+                return 0.0 as $ty;
+            }
             let total_bytes = (2 * n * std::mem::size_of::<$ty>()) as u64;
             let f = $kernel_for(accuracy, total_bytes);
             if accuracy == Accuracy::Exact || self.serves_inline(total_bytes) {
@@ -441,6 +467,14 @@ macro_rules! engine_batch_methods {
                     "engine dot called with mismatched stream lengths (see engine length policy)"
                 );
                 let n = a.len().min(b.len());
+                if n == 0 {
+                    // zero-length dot: `out[i]` is already the answer
+                    // (+0.0) — it never joins a worker chunk-group, so an
+                    // empty request can't cost a handoff. Still a served
+                    // request, so it counts like the single-dot path does.
+                    self.requests.fetch_add(1, Ordering::Relaxed);
+                    continue;
+                }
                 let total = (2 * n * std::mem::size_of::<$ty>()) as u64;
                 if accuracy == Accuracy::Exact || self.serves_inline(total) {
                     small_bytes += total;
@@ -610,6 +644,13 @@ impl DotEngine {
     pub(crate) fn note_batch(&self, k: usize) {
         self.requests.fetch_add(k as u64, Ordering::Relaxed);
         self.batched.fetch_add(k as u64, Ordering::Relaxed);
+    }
+
+    /// Count one request served without any execution at all — the
+    /// sharded batch layers resolve zero-length dots in place (the answer
+    /// is +0.0) instead of dispatching them to a worker group.
+    pub(crate) fn note_request(&self) {
+        self.requests.fetch_add(1, Ordering::Relaxed);
     }
 
     /// The shard tier schedules chunk jobs straight onto a shard's workers.

@@ -96,6 +96,32 @@
 //! (`DispatchTable::note_saturation`/`corrected_sat`) lives with the
 //! autotuner's calibration state, keeping this policy pure.
 //!
+//! # Overload shedding
+//!
+//! **Shedding rejects whole requests and never changes the bits of served
+//! ones.** The ECM analysis is why the policy exists at all: a
+//! memory-bound Kahan dot saturates bandwidth at a few cores, so past
+//! saturation extra traffic cannot buy throughput — it can only grow
+//! queues. The old bounded-queue-blocks-the-sender design turned that
+//! into a priority inversion (one slow client stalls its whole submitter
+//! lane); the shed policy turns it into a clean, counted reject instead.
+//! The decision is pure and lives HERE, per the planner-extension-point
+//! rule: [`PlanPolicy::shed`] compares a request's admission deadline
+//! against the lane's projected queue wait (its queued depth × the
+//! per-message service-time estimate from the lane's latency histogram)
+//! and its configured depth ([`PlanPolicy::with_admission`]), returning a
+//! [`ShedVerdict`] when the request cannot make its deadline — the
+//! service replies `Err("shed: …")` immediately instead of blocking the
+//! sender. Requests without a deadline (`deadline_us == 0`) keep the old
+//! blocking back-pressure: shedding is strictly opt-in per request.
+//! [`PlanPolicy::admits_client`] is the companion fairness predicate:
+//! with a per-client in-flight cap configured, a client already holding
+//! `cap` slots of a lane's queue is shed (`"shed: client …"`) so one
+//! heavy client cannot starve the lane for everyone else. A shed request
+//! never reaches an engine, so every bit-identity invariant above is
+//! untouched — property-tested in `coordinator/service/tests.rs` by
+//! serially resubmitting everything a shedding service served.
+//!
 //! # Who consumes plans
 //!
 //! * `DotEngine` — [`serves_inline`] is the inline-vs-parallel predicate
@@ -165,9 +191,11 @@ pub struct DotPlan {
 /// serial and batch paths: a dot whose total working set (both streams)
 /// is under the cutoff — or an engine with a single worker — runs on the
 /// submitting thread, because a worker handoff would cost more than it
-/// amortizes.
+/// amortizes. An EMPTY dot (`total_bytes == 0`) is always inline, even
+/// under a forced cutoff of 0: there is nothing to hand a worker, and the
+/// zero-length property test pins that it never reaches one.
 pub fn serves_inline(total_bytes: u64, parallel_cutoff_bytes: usize, workers: usize) -> bool {
-    total_bytes < parallel_cutoff_bytes as u64 || workers <= 1
+    total_bytes == 0 || total_bytes < parallel_cutoff_bytes as u64 || workers <= 1
 }
 
 /// Fuse-or-loop decision for one same-class run inside a batch: the fused
@@ -220,6 +248,35 @@ pub struct PlanPolicy {
     /// section). Defaults to all-uncapped — governance is opt-in via
     /// [`PlanPolicy::with_governance`].
     pub worker_caps: [[usize; 3]; 2],
+    /// service: the bounded depth of one submitter lane's queue
+    /// (`ServiceConfig::router_queue_depth`), installed via
+    /// [`PlanPolicy::with_admission`] so [`PlanPolicy::shed`] can treat a
+    /// full lane as an unconditional miss for deadlined requests.
+    /// `usize::MAX` (default) = depth unknown, never "full".
+    pub lane_depth: usize,
+    /// service: per-client in-flight cap per lane (fair admission). 0
+    /// (default) = unlimited — [`PlanPolicy::admits_client`] admits
+    /// everything, the pre-fairness behavior.
+    pub per_client_inflight: usize,
+}
+
+/// Why a request was shed at admission instead of queued: the evidence
+/// [`PlanPolicy::shed`] compared against the request's deadline. Carried
+/// into the request's `Err("shed: …")` reply so a client sees the lane
+/// state that rejected it, and into `repro plan`'s explain output.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ShedVerdict {
+    /// the request's admission deadline (µs)
+    pub deadline_us: u64,
+    /// messages queued on the lane when the request arrived
+    pub queued: usize,
+    /// projected queue wait: `queued ×` the lane's per-message
+    /// service-time estimate (µs, from its latency histogram)
+    pub projected_wait_us: u64,
+    /// the lane's bounded queue was full — an unconditional miss: the
+    /// alternative is exactly the blocking send the policy exists to
+    /// remove
+    pub queue_full: bool,
 }
 
 impl PlanPolicy {
@@ -240,6 +297,8 @@ impl PlanPolicy {
             max_batch: 1,
             batch_window_us: 0,
             worker_caps: [[usize::MAX; 3]; 2],
+            lane_depth: usize::MAX,
+            per_client_inflight: 0,
         }
     }
 
@@ -247,6 +306,16 @@ impl PlanPolicy {
     pub fn with_service(mut self, max_batch: usize, batch_window_us: u64) -> PlanPolicy {
         self.max_batch = max_batch;
         self.batch_window_us = batch_window_us;
+        self
+    }
+
+    /// Extend a service policy with the admission knobs the overload
+    /// layer routes by: the lane queue depth (so [`PlanPolicy::shed`] can
+    /// recognize a full lane) and the per-client in-flight cap
+    /// (0 = unlimited, see [`PlanPolicy::admits_client`]).
+    pub fn with_admission(mut self, lane_depth: usize, per_client_inflight: usize) -> PlanPolicy {
+        self.lane_depth = lane_depth;
+        self.per_client_inflight = per_client_inflight;
         self
     }
 
@@ -291,9 +360,10 @@ impl PlanPolicy {
     }
 
     /// THE split predicate: does a dot of this total working set fan out
-    /// across every shard?
+    /// across every shard? An empty dot never splits, even under a forced
+    /// `split_min_bytes` of 0 — there are no chunks to deal out.
     pub fn splits(&self, total_bytes: u64) -> bool {
-        total_bytes >= self.split_min_bytes as u64
+        total_bytes > 0 && total_bytes >= self.split_min_bytes as u64
     }
 
     /// THE inline predicate for a given shard (its worker count decides
@@ -386,6 +456,51 @@ impl PlanPolicy {
         }
         Some(Duration::from_micros(self.batch_window_us))
     }
+
+    /// THE admission-shed decision (see the module's "Overload shedding"
+    /// section): should a request with this deadline be rejected instead
+    /// of queued on a lane that currently holds `queued` messages and
+    /// serves one in about `est_service_us` µs (the caller derives the
+    /// estimate from the lane's latency histogram; 0 = no data yet)?
+    ///
+    /// `None` = admit. `Some` when either
+    /// * the lane is full (`queued ≥ lane_depth`) — admitting would block
+    ///   the sender, which is exactly the priority inversion this policy
+    ///   removes; or
+    /// * the projected queue wait (`queued × est_service_us`) already
+    ///   exceeds the deadline — the request would only be served late and
+    ///   meanwhile occupy a queue slot someone else could make.
+    ///
+    /// `deadline_us == 0` means "no deadline": always admit — such
+    /// requests keep the blocking back-pressure semantics, so shedding is
+    /// strictly opt-in per request. Pure: expiry of already-queued
+    /// requests is the service's clock to keep, not the planner's.
+    pub fn shed(
+        &self,
+        deadline_us: u64,
+        queued: usize,
+        est_service_us: u64,
+    ) -> Option<ShedVerdict> {
+        if deadline_us == 0 {
+            return None;
+        }
+        let queue_full = queued >= self.lane_depth;
+        let projected_wait_us = (queued as u64).saturating_mul(est_service_us);
+        if queue_full || projected_wait_us > deadline_us {
+            Some(ShedVerdict { deadline_us, queued, projected_wait_us, queue_full })
+        } else {
+            None
+        }
+    }
+
+    /// THE fair-admission predicate: may a client that already holds
+    /// `inflight` slots of a lane's queue take one more? With no cap
+    /// configured (`per_client_inflight == 0`) always yes; otherwise only
+    /// below the cap — the request of a client at its cap is shed so one
+    /// heavy client cannot occupy a whole lane and starve its neighbors.
+    pub fn admits_client(&self, inflight: usize) -> bool {
+        self.per_client_inflight == 0 || inflight < self.per_client_inflight
+    }
 }
 
 #[cfg(test)]
@@ -477,5 +592,54 @@ mod tests {
         assert_eq!(off.batch_window(1, true), None, "window disabled by default");
         let nobatch = policy().with_service(1, 100);
         assert_eq!(nobatch.batch_window(1, true), None, "max_batch=1 never waits");
+    }
+
+    #[test]
+    fn empty_dot_always_plans_inline_and_never_splits() {
+        // forced thresholds that would otherwise parallelize/split
+        // anything: the empty dot must still be inline (nothing to hand a
+        // worker, nothing to deal into chunks)
+        let p = PlanPolicy::new(0, 0, 0, vec![4, 4]);
+        for acc in Accuracy::ALL {
+            assert_eq!(p.plan_dot(0, acc, 0).route, DotRoute::Inline);
+        }
+        assert!(!p.splits(0), "an empty dot has no chunks to deal");
+        assert!(serves_inline(0, 0, 8), "an empty dot has nothing to hand a worker");
+        // ...while 1 byte already obeys the forced thresholds
+        assert_eq!(p.plan_dot(0, Accuracy::Kahan, 1).route, DotRoute::Split);
+    }
+
+    #[test]
+    fn shed_requires_a_deadline_and_fires_on_full_or_late_lanes() {
+        let p = policy().with_service(16, 0).with_admission(8, 0);
+        // no deadline: never shed, whatever the lane looks like
+        assert_eq!(p.shed(0, 10_000, 1_000_000), None);
+        // empty lane, any deadline: projected wait 0, admit
+        assert_eq!(p.shed(1, 0, 1_000_000), None);
+        // projected wait beyond the deadline: shed with the evidence
+        let v = p.shed(100, 4, 50).expect("4 queued x 50 us >> 100 us");
+        assert_eq!(v.projected_wait_us, 200);
+        assert_eq!(v.queued, 4);
+        assert!(!v.queue_full);
+        // projected wait within the deadline: admit
+        assert_eq!(p.shed(500, 4, 50), None, "200 us projected fits a 500 us deadline");
+        // a full lane sheds unconditionally, even with no histogram data
+        // yet (est 0): the alternative is the blocking send
+        let full = p.shed(1_000_000, 8, 0).expect("full lane always sheds deadlined work");
+        assert!(full.queue_full);
+        // depth unknown (no with_admission): only the projection can shed
+        let unknown = policy();
+        assert_eq!(unknown.shed(1_000_000, usize::MAX - 1, 0), None);
+    }
+
+    #[test]
+    fn fair_admission_caps_per_client_inflight() {
+        let open = policy();
+        assert!(open.admits_client(0) && open.admits_client(1_000_000), "no cap = unlimited");
+        let fair = policy().with_admission(64, 2);
+        assert!(fair.admits_client(0));
+        assert!(fair.admits_client(1));
+        assert!(!fair.admits_client(2), "at the cap: shed");
+        assert!(!fair.admits_client(3));
     }
 }

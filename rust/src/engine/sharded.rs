@@ -353,6 +353,13 @@ macro_rules! sharded_dot_impl {
             let mut mids: Vec<(usize, usize)> = Vec::new();
             for (i, &(a, b)) in reqs.iter().enumerate() {
                 let n = a.len().min(b.len());
+                if n == 0 {
+                    // zero-length dot: `out[i]` is already +0.0 — resolved
+                    // here, never dispatched to a shard worker group (see
+                    // the engine module's zero-length guards)
+                    self.shards[self.policy.clamp_shard(self.route())].note_request();
+                    continue;
+                }
                 let total = (2 * n * std::mem::size_of::<$ty>()) as u64;
                 let plan = self.policy.plan_dot(self.route(), accuracy, total);
                 match plan.route {
@@ -436,6 +443,12 @@ macro_rules! sharded_dot_impl {
             for (i, &(a, b)) in reqs.iter().enumerate() {
                 let s = a.shard.min(self.shards.len() - 1);
                 let n = a.len().min(b.len());
+                if n == 0 {
+                    // zero-length dot: `out[i]` is already +0.0, no
+                    // worker group (see the engine module's guards)
+                    self.shards[s].note_request();
+                    continue;
+                }
                 let total = (2 * n * std::mem::size_of::<$ty>()) as u64;
                 if self.policy.serves_inline_on(s, total) {
                     per_shard[s].push((i, &a.slice.as_slice()[..n], &b.slice.as_slice()[..n]));

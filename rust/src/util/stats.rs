@@ -20,7 +20,11 @@ pub fn stddev(xs: &[f64]) -> f64 {
 
 fn sorted(xs: &[f64]) -> Vec<f64> {
     let mut v = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).expect("NaN in samples"));
+    // total order, not partial_cmp().expect(): a NaN sample (a timing
+    // read that failed, a ratio over an empty scenario) must not panic a
+    // stats call — NaNs sort to the top and the quantile math stays
+    // well-defined for everything below them
+    v.sort_by(|a, b| a.total_cmp(b));
     v
 }
 
@@ -45,7 +49,8 @@ pub fn mad(xs: &[f64]) -> f64 {
     median(&dev)
 }
 
-/// Linear-interpolated percentile, p in [0, 100].
+/// Linear-interpolated percentile, p clamped into [0, 100]. Empty input
+/// returns NaN (see [`percentile_or`] for the guarded form emitters use).
 pub fn percentile(xs: &[f64], p: f64) -> f64 {
     if xs.is_empty() {
         return f64::NAN;
@@ -54,11 +59,23 @@ pub fn percentile(xs: &[f64], p: f64) -> f64 {
     if v.len() == 1 {
         return v[0];
     }
-    let rank = (p / 100.0) * (v.len() - 1) as f64;
+    let rank = (p.clamp(0.0, 100.0) / 100.0) * (v.len() - 1) as f64;
     let lo = rank.floor() as usize;
     let hi = rank.ceil() as usize;
     let frac = rank - lo as f64;
     v[lo] * (1.0 - frac) + v[hi] * frac
+}
+
+/// [`percentile`], but a sample set with no answer (empty — e.g. a burst
+/// scenario that shed everything — or all-NaN) yields `fallback` instead
+/// of NaN, so a JSON emitter never writes an invalid/null metric field.
+pub fn percentile_or(xs: &[f64], p: f64, fallback: f64) -> f64 {
+    let v = percentile(xs, p);
+    if v.is_finite() {
+        v
+    } else {
+        fallback
+    }
 }
 
 pub fn min(xs: &[f64]) -> f64 {
@@ -115,5 +132,32 @@ mod tests {
         assert!(mean(&[]).is_nan());
         assert!(median(&[]).is_nan());
         assert!(percentile(&[], 50.0).is_nan());
+    }
+
+    #[test]
+    fn percentile_single_sample_and_clamped_p() {
+        // the one-sample case every burst scenario that sheds all-but-one
+        // request produces
+        assert_eq!(percentile(&[42.0], 0.0), 42.0);
+        assert_eq!(percentile(&[42.0], 99.0), 42.0);
+        // out-of-range p clamps instead of indexing out of bounds
+        assert_eq!(percentile(&[1.0, 2.0], 150.0), 2.0);
+        assert_eq!(percentile(&[1.0, 2.0], -5.0), 1.0);
+    }
+
+    #[test]
+    fn nan_samples_never_panic() {
+        // a NaN sample sorts to the top under total_cmp; the call must
+        // not panic (the old partial_cmp().expect() did)
+        let xs = [3.0, f64::NAN, 1.0];
+        assert_eq!(median(&xs), 3.0);
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+    }
+
+    #[test]
+    fn percentile_or_guards_the_empty_and_nan_cases() {
+        assert_eq!(percentile_or(&[], 99.0, 0.0), 0.0, "empty -> fallback, not NaN");
+        assert_eq!(percentile_or(&[f64::NAN], 99.0, -1.0), -1.0, "all-NaN -> fallback");
+        assert_eq!(percentile_or(&[5.0, 1.0], 100.0, 0.0), 5.0, "real data passes through");
     }
 }

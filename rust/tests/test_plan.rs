@@ -373,3 +373,105 @@ fn governance_caps_monotone_and_clamped_to_shard_workers() {
         }
     }
 }
+
+/// Degenerate lengths (PR 8): zero- and one-element dots are served by
+/// every engine surface, in every accuracy tier, bit-identically across
+/// the Inline, Parallel and Split routes — and an EMPTY dot never costs
+/// a worker job, whatever the configured thresholds (even a pathological
+/// policy whose cutoffs are zero).
+#[test]
+fn zero_and_one_length_dots_bit_identical_on_every_route_and_tier() {
+    // planner level: 0 bytes plans Inline and never splits under ANY
+    // thresholds; 8 bytes (one f32 pair) keeps its size-directed route
+    for (cutoff, split) in [(0usize, 1usize), (1, 1 << 20), (64 << 10, 1 << 20)] {
+        let p = policy(cutoff, split, vec![4, 4]);
+        assert!(!p.splits(0));
+        assert!(p.serves_inline_on(0, 0));
+        assert!(p.splits(8) || p.serves_inline_on(0, 8) || cutoff <= 8);
+        for acc in Accuracy::ALL {
+            assert_eq!(
+                p.plan_dot(1, acc, 0).route,
+                DotRoute::Inline,
+                "an empty dot must plan Inline ({acc:?}, cutoff {cutoff}, split {split})"
+            );
+        }
+    }
+
+    // execution level: three engines whose thresholds force a 1-element
+    // dot down the Inline, Parallel and Split routes respectively
+    let base = EngineConfig { threads: 2, ..EngineConfig::default() };
+    let engines = [
+        (
+            "inline",
+            ShardedEngine::from_topology(
+                &Topology::fake_even(2),
+                ShardedConfig { engine: base, split_min_bytes: 1 << 20, chunks: 4 },
+            ),
+        ),
+        (
+            "parallel",
+            ShardedEngine::from_topology(
+                &Topology::fake_even(2),
+                ShardedConfig {
+                    engine: EngineConfig { parallel_cutoff_bytes: 0, ..base },
+                    split_min_bytes: 1 << 20,
+                    chunks: 4,
+                },
+            ),
+        ),
+        (
+            "split",
+            ShardedEngine::from_topology(
+                &Topology::fake_even(2),
+                ShardedConfig {
+                    engine: EngineConfig { parallel_cutoff_bytes: 0, ..base },
+                    split_min_bytes: 1,
+                    chunks: 4,
+                },
+            ),
+        ),
+    ];
+    for acc in Accuracy::ALL {
+        let a = [1.5f32];
+        let b = [-2.25f32];
+        let want = kernel_for_f32(acc, 8)(&a, &b);
+        for (name, e) in &engines {
+            // length 1: whatever route the thresholds force, the result is
+            // the single kernel call bit for bit
+            let got = e.dot_f32(acc, &a, &b);
+            assert_eq!(got.to_bits(), want.to_bits(), "{name} {acc:?} n=1");
+
+            // length 0: exactly +0.0 on the single and the batch path,
+            // and never a parallel fan-out or a split
+            let before = e.stats();
+            let single = e.dot_f32(acc, &[], &[]);
+            let batch = e.dot_batch_f32(acc, &[(&[], &[])]);
+            let after = e.stats();
+            assert_eq!(single.to_bits(), 0.0f32.to_bits(), "{name} {acc:?} n=0");
+            assert_eq!(batch[0].to_bits(), 0.0f32.to_bits(), "{name} {acc:?} n=0 batch");
+            assert_eq!(
+                after.parallel, before.parallel,
+                "an empty dot must never fan out ({name} {acc:?})"
+            );
+            assert_eq!(
+                after.split_dots, before.split_dots,
+                "an empty dot must never split ({name} {acc:?})"
+            );
+            assert_eq!(
+                after.requests,
+                before.requests + 2,
+                "empty dots still count as served requests ({name} {acc:?})"
+            );
+
+            // a mixed batch: the empty request resolves in place and its
+            // live neighbor keeps the exact single-request bits
+            let mixed = e.dot_batch_f32(acc, &[(&[], &[]), (&a, &b)]);
+            assert_eq!(mixed[0].to_bits(), 0.0f32.to_bits(), "{name} {acc:?} mixed");
+            assert_eq!(
+                mixed[1].to_bits(),
+                want.to_bits(),
+                "an empty batchmate must not change its neighbor's bits ({name} {acc:?})"
+            );
+        }
+    }
+}
