@@ -64,7 +64,11 @@ def num_list(min_len=1):
 # MEM-class "Dot2 is free" claim; the sharded checks are lane batching,
 # the adaptive-window sweep, and PR 8's overload-protection burst
 # (sheds under deadline pressure, none in the no-deadline control, and a
-# served-tail p99 that is a number even when every small was shed).
+# served-tail p99 that is a number even when every small was shed) plus
+# PR 9's fault-recovery scenario: the bench runs with `--features
+# faultinject`, injects worker/lane deaths against a dedicated engine,
+# and must observe every recovery path (respawns, lane restarts, a
+# quarantine) while the no-fault control on its own engine observes none.
 ENGINE_CHECKS = [
     ("ecm_pred_sat_sp_mem", intval(lo=0)),
     ("ecm_pred_sat_dp_mem", intval(lo=0)),
@@ -96,6 +100,12 @@ SHARDED_CHECKS = [
     ("svc_p99_service_us", intval(lo=0)),
     ("svc_shed", intval(lo=1)),
     ("svc_shed_control", intval(exactly=0)),
+    ("svc_respawns", intval(lo=1)),
+    ("svc_respawns_control", intval(exactly=0)),
+    ("svc_lane_restarts", intval(lo=1)),
+    ("svc_lane_restarts_control", intval(exactly=0)),
+    ("svc_quarantines", intval(lo=1)),
+    ("svc_quarantines_control", intval(exactly=0)),
 ]
 
 CHECKS = {

@@ -163,6 +163,26 @@ fn main() -> anyhow::Result<()> {
                 stats_out.admit_batches,
                 stats_out.window_waits
             );
+            println!(
+                "self-healing       : {} worker respawn(s), {} lane restart(s), {} \
+                 quarantine(s)",
+                stats_out.respawns, stats_out.lane_restarts, stats_out.quarantines
+            );
+            // degraded-health warnings: the run still passed (recovery is
+            // bit-exact), but a healthy host should show zeros here
+            if stats_out.respawns > 0 || stats_out.lane_restarts > 0 {
+                println!(
+                    "WARNING: degraded run — workers or lane submitters died and were \
+                     replaced mid-workload; investigate the host"
+                );
+            }
+            if e.pin_failures > 0 || stats_out.respawn_pin_failures > 0 {
+                println!(
+                    "WARNING: {} pin failure(s) + {} respawn pin failure(s) — some \
+                     workers run unpinned; NUMA placement is degraded",
+                    e.pin_failures, stats_out.respawn_pin_failures
+                );
+            }
         }
         Backend::Pjrt => {
             println!("mean batch size    : {:.2}", stats::mean(&batch_sizes));

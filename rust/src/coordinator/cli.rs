@@ -281,9 +281,13 @@ pub fn run(args: &Args) -> Result<(), String> {
             );
             for (s, es) in e.stats_per_shard().iter().enumerate() {
                 println!(
-                    "  shard {s}: {} workers, pin failures {}",
+                    "  shard {s}: {} workers, pin failures {}, respawns {} \
+                     (respawn pin failures {}){}",
                     e.shard(s).threads(),
-                    es.pin_failures
+                    es.pin_failures,
+                    es.respawns,
+                    es.respawn_pin_failures,
+                    if e.is_quarantined(s) { "  [QUARANTINED]" } else { "" }
                 );
             }
             let mut rng = crate::util::Rng::new(1);
@@ -305,6 +309,24 @@ pub fn run(args: &Args) -> Result<(), String> {
                 s.pool.hits,
                 s.pool.misses
             );
+            // degraded-health warnings: a respawn means a worker died or
+            // wedged and was replaced; a pin failure (startup or respawn)
+            // means a worker runs unpinned and the NUMA placement story
+            // no longer holds for it
+            if s.respawns > 0 {
+                println!(
+                    "WARNING: {} worker respawn(s) — workers died or wedged and were \
+                     replaced (results stay bit-exact; investigate the host)",
+                    s.respawns
+                );
+            }
+            if s.pin_failures > 0 || s.respawn_pin_failures > 0 {
+                println!(
+                    "WARNING: {} pin failure(s) + {} respawn pin failure(s) — some \
+                     workers run unpinned; per-domain bandwidth isolation is degraded",
+                    s.pin_failures, s.respawn_pin_failures
+                );
+            }
         }
         "plan" => {
             let len = args.num("len", 0usize).map_err(|e| e.to_string())?;

@@ -12,6 +12,6 @@ pub mod validate;
 
 pub use cli::cli_main;
 pub use service::{
-    Backend, DotClient, DotRequest, DotResponse, DotService, LaneStats, ServiceConfig,
-    ServiceStats,
+    Backend, DotClient, DotRequest, DotResponse, DotService, LaneStats, RetryBudget,
+    ServiceConfig, ServiceError, ServiceStats,
 };

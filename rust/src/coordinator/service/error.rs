@@ -1,0 +1,227 @@
+//! Typed service errors.
+//!
+//! [`ServiceError`] replaces the old string replies in
+//! [`super::DotResponse`]: clients branch on variants (is this a shed? a
+//! validation error? a dead lane?) instead of string-prefix matching,
+//! and the retry client ([`super::DotClient::submit_with_retry`]) reads
+//! retryability and the retry-after hint straight off the error. The
+//! `Display` impl reproduces the exact stable texts the string era
+//! established — `"shed: …"`, `"stream released: …"`, `"length
+//! mismatch …"` — so `to_string()` round-trips every existing log line,
+//! test assertion, and blocking-API contract unchanged.
+
+use std::fmt;
+
+/// Why the service did not return a value for a request.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ServiceError {
+    /// Admission shed: the target lane's queue was full when a deadlined
+    /// request arrived. `queued` carries the shed verdict's queue depth
+    /// when the planner projection made the call (`None` when the bounded
+    /// channel itself rejected the send).
+    ShedQueueFull { lane: usize, queued: Option<usize>, deadline_us: u64, retry_after_us: u64 },
+    /// Admission shed: the projected queue wait exceeded the deadline
+    /// ([`crate::engine::PlanPolicy::shed`]).
+    ShedProjected {
+        lane: usize,
+        projected_wait_us: u64,
+        deadline_us: u64,
+        queued: usize,
+        retry_after_us: u64,
+    },
+    /// Serve-time shed: the deadline expired while the request sat in the
+    /// queue (the admission projection is an estimate; this is ground
+    /// truth).
+    ShedExpired { deadline_us: u64, waited_us: u64 },
+    /// Fair-admission shed: the client was already at the per-client
+    /// in-flight cap on the target lane
+    /// ([`crate::engine::PlanPolicy::admits_client`]).
+    ShedFairness { client: u64, cap: usize, lane: usize },
+    /// A pooled operand's handle was never admitted or already released —
+    /// possibly by another client racing this dot, which is a clean
+    /// outcome, not an internal error.
+    StreamReleased { handle: u64 },
+    /// The operands have different lengths. The engine's documented policy
+    /// is debug-assert + truncate; the service is the layer that turns a
+    /// mismatch into a client-visible error.
+    LengthMismatch { a: usize, b: usize },
+    /// The request's accuracy string did not parse.
+    UnknownAccuracy(String),
+    /// The engine call panicked under the lane's panic isolation; carries
+    /// the panic payload text.
+    EnginePanic(String),
+    /// The lane's submitter died before replying (the reply channel
+    /// disconnected). Infrastructure, not the request's fault — the
+    /// supervisor restarts the lane, so a retry lands on a live one.
+    LaneDead,
+    /// The service has stopped.
+    Stopped,
+    /// The serving backend cannot perform this operation (PJRT-path
+    /// rejects and runtime errors); carries the backend's text.
+    Unsupported(String),
+}
+
+impl ServiceError {
+    /// Retry-worthy? `true` exactly for infrastructure outcomes a retry
+    /// can fix — every shed (the lane was overloaded *then*) and a dead
+    /// lane (the supervisor restarts it). Validation errors
+    /// (length/accuracy/released-stream) and engine panics are
+    /// deterministic: retrying them burns budget to fail identically.
+    pub fn is_retryable(&self) -> bool {
+        matches!(
+            self,
+            ServiceError::ShedQueueFull { .. }
+                | ServiceError::ShedProjected { .. }
+                | ServiceError::ShedExpired { .. }
+                | ServiceError::ShedFairness { .. }
+                | ServiceError::LaneDead
+        )
+    }
+
+    /// The shed projection's earliest-useful-retry hint (µs), when the
+    /// admission gate computed one ([`crate::engine::ShedVerdict`]).
+    pub fn retry_after_us(&self) -> Option<u64> {
+        match self {
+            ServiceError::ShedQueueFull { retry_after_us, .. }
+            | ServiceError::ShedProjected { retry_after_us, .. } => Some(*retry_after_us),
+            _ => None,
+        }
+    }
+}
+
+impl fmt::Display for ServiceError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ServiceError::ShedQueueFull { lane, queued: None, deadline_us, .. } => {
+                write!(f, "shed: lane {lane} queue is full (deadline {deadline_us} us)")
+            }
+            ServiceError::ShedQueueFull { lane, queued: Some(q), deadline_us, .. } => {
+                write!(f, "shed: lane {lane} queue is full ({q} queued, deadline {deadline_us} us)")
+            }
+            ServiceError::ShedProjected { lane, projected_wait_us, deadline_us, queued, .. } => {
+                write!(
+                    f,
+                    "shed: projected lane {lane} queue wait {projected_wait_us} us exceeds \
+                     deadline {deadline_us} us ({queued} queued)"
+                )
+            }
+            ServiceError::ShedExpired { deadline_us, waited_us } => {
+                write!(f, "shed: deadline {deadline_us} us expired in queue (waited {waited_us} us)")
+            }
+            ServiceError::ShedFairness { client, cap, lane } => {
+                write!(
+                    f,
+                    "shed: client {client} is at the per-client in-flight cap {cap} on lane {lane}"
+                )
+            }
+            ServiceError::StreamReleased { handle } => {
+                write!(f, "stream released: handle {handle} is not admitted")
+            }
+            ServiceError::LengthMismatch { a, b } => write!(f, "length mismatch {a} vs {b}"),
+            ServiceError::UnknownAccuracy(s) => {
+                write!(f, "unknown accuracy tier `{s}` (expected naive, kahan, dot2 or exact)")
+            }
+            ServiceError::EnginePanic(msg) => write!(f, "engine panic: {msg}"),
+            ServiceError::LaneDead => {
+                write!(f, "lane dead: the submitter exited before replying")
+            }
+            ServiceError::Stopped => write!(f, "service stopped"),
+            ServiceError::Unsupported(s) => write!(f, "{s}"),
+        }
+    }
+}
+
+impl std::error::Error for ServiceError {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_preserves_the_stable_string_era_texts() {
+        assert_eq!(
+            ServiceError::ShedQueueFull {
+                lane: 2,
+                queued: None,
+                deadline_us: 500,
+                retry_after_us: 1
+            }
+            .to_string(),
+            "shed: lane 2 queue is full (deadline 500 us)"
+        );
+        assert_eq!(
+            ServiceError::ShedQueueFull {
+                lane: 2,
+                queued: Some(8),
+                deadline_us: 500,
+                retry_after_us: 1
+            }
+            .to_string(),
+            "shed: lane 2 queue is full (8 queued, deadline 500 us)"
+        );
+        assert_eq!(
+            ServiceError::ShedProjected {
+                lane: 0,
+                projected_wait_us: 900,
+                deadline_us: 100,
+                queued: 3,
+                retry_after_us: 800
+            }
+            .to_string(),
+            "shed: projected lane 0 queue wait 900 us exceeds deadline 100 us (3 queued)"
+        );
+        assert_eq!(
+            ServiceError::ShedExpired { deadline_us: 100, waited_us: 250 }.to_string(),
+            "shed: deadline 100 us expired in queue (waited 250 us)"
+        );
+        assert_eq!(
+            ServiceError::ShedFairness { client: 7, cap: 2, lane: 1 }.to_string(),
+            "shed: client 7 is at the per-client in-flight cap 2 on lane 1"
+        );
+        assert_eq!(
+            ServiceError::StreamReleased { handle: 42 }.to_string(),
+            "stream released: handle 42 is not admitted"
+        );
+        assert_eq!(
+            ServiceError::LengthMismatch { a: 3, b: 4 }.to_string(),
+            "length mismatch 3 vs 4"
+        );
+        assert_eq!(
+            ServiceError::UnknownAccuracy("fast".into()).to_string(),
+            "unknown accuracy tier `fast` (expected naive, kahan, dot2 or exact)"
+        );
+        assert_eq!(
+            ServiceError::EnginePanic("worker died".into()).to_string(),
+            "engine panic: worker died"
+        );
+        assert_eq!(ServiceError::Stopped.to_string(), "service stopped");
+        // every shed keeps the "shed: " prefix clients historically
+        // matched on
+        for e in [
+            ServiceError::ShedQueueFull { lane: 0, queued: None, deadline_us: 1, retry_after_us: 1 },
+            ServiceError::ShedExpired { deadline_us: 1, waited_us: 2 },
+            ServiceError::ShedFairness { client: 0, cap: 1, lane: 0 },
+        ] {
+            assert!(e.to_string().starts_with("shed: "), "{e}");
+        }
+    }
+
+    #[test]
+    fn retryability_separates_infrastructure_from_validation() {
+        assert!(ServiceError::ShedExpired { deadline_us: 1, waited_us: 2 }.is_retryable());
+        assert!(ServiceError::LaneDead.is_retryable());
+        assert!(!ServiceError::LengthMismatch { a: 1, b: 2 }.is_retryable());
+        assert!(!ServiceError::UnknownAccuracy("x".into()).is_retryable());
+        assert!(!ServiceError::EnginePanic("p".into()).is_retryable());
+        assert!(!ServiceError::Stopped.is_retryable());
+        let projected = ServiceError::ShedProjected {
+            lane: 0,
+            projected_wait_us: 900,
+            deadline_us: 100,
+            queued: 3,
+            retry_after_us: 800,
+        };
+        assert_eq!(projected.retry_after_us(), Some(800));
+        assert_eq!(ServiceError::LaneDead.retry_after_us(), None);
+    }
+}

@@ -17,21 +17,43 @@
 //! — the window may only ever delay requests that stand to gain from it.
 
 use super::router::HostRouter;
-use super::{msg_kind, DotRequest, DotResponse, Msg};
+use super::{msg_kind, DotRequest, DotResponse, Msg, ServiceError};
 use crate::engine::autotune::acc_index;
 use crate::engine::plan::batch_exec;
 use crate::engine::{dispatch, DotRoute, HomedSlice};
 use crate::isa::{Accuracy, Precision};
+use crate::util::faults;
 use std::sync::atomic::Ordering;
-use std::sync::mpsc;
+use std::sync::{mpsc, Mutex};
 use std::time::{Duration, Instant};
+
+/// Upper bound on one wake-up's blocking first-`recv`: the receiver lock
+/// must come up for air this often so (a) a supervisor-spawned
+/// replacement can take over the lane, and (b) a stale-epoch incarnation
+/// notices it was replaced and exits.
+const LANE_RECV_SLICE: Duration = Duration::from_millis(50);
 
 /// One shard's submitter: drain the lane queue GREEDILY in FIFO order.
 /// On the shutdown marker, everything already queued behind it is
 /// *served* (not dropped) before the thread exits — the old single-router
 /// loop broke out of `recv` on shutdown and silently dropped queued
 /// requests, leaving their clients with a disconnected reply channel.
-pub(super) fn submitter_loop(router: &HostRouter, shard: usize, rx: mpsc::Receiver<Msg>) {
+///
+/// Supervision contract: the queue receiver is borrowed from the lane's
+/// `LaneSlot` per wake-up (never owned — a dead incarnation must not
+/// disconnect the channel), every gather happens under that lock with
+/// bounded waits, and serving happens OUTSIDE it, so a submitter wedged
+/// mid-execute never blocks its replacement's gathers. `my_epoch` is the
+/// incarnation's generation: the loop top exits on a stale epoch, which
+/// is how a wedged-then-recovered incarnation retires without ever
+/// double-serving (it finishes the messages it already dequeued — they
+/// are served exactly once, by it — and takes no more).
+pub(super) fn submitter_loop(
+    router: &HostRouter,
+    shard: usize,
+    rx: &Mutex<mpsc::Receiver<Msg>>,
+    my_epoch: usize,
+) {
     // calibrate the dispatch table before the first request, on a worker
     // thread so `DotService::start` stays non-blocking (the OnceLock makes
     // one submitter calibrate while its peers wait)
@@ -41,89 +63,109 @@ pub(super) fn submitter_loop(router: &HostRouter, shard: usize, rx: mpsc::Receiv
     let gather_cap = router.policy.max_batch * 4;
     let mut shutdown = false;
     loop {
-        let first = if shutdown {
-            match rx.try_recv() {
-                Ok(m) => m,
-                Err(_) => return,
-            }
-        } else {
-            match rx.recv() {
-                Ok(m) => m,
-                Err(_) => return,
-            }
-        };
-        let mut pending: Vec<Msg> = Vec::new();
-        match first {
-            Msg::Shutdown => shutdown = true,
-            m => {
-                // depth gauge + fair-admission slot return (shutdown
-                // markers bypass `send_to`, so they bypass this too)
-                router.note_dequeued(shard, &m);
-                if shutdown {
-                    router.drained.fetch_add(1, Ordering::Relaxed);
-                }
-                pending.push(m);
-            }
+        if router.lanes[shard].epoch.load(Ordering::Relaxed) != my_epoch {
+            // replaced (wedge recovery) or retired (shutdown epoch bump)
+            return;
         }
-        while pending.len() < gather_cap {
-            match rx.try_recv() {
-                Ok(Msg::Shutdown) => shutdown = true,
-                Ok(m) => {
+        let mut pending: Vec<Msg> = Vec::new();
+        {
+            // a poisoned lock means a predecessor panicked mid-gather;
+            // the receiver itself is fine — recover and keep serving
+            let rx = rx.lock().unwrap_or_else(|p| p.into_inner());
+            let first = if shutdown {
+                match rx.try_recv() {
+                    Ok(m) => m,
+                    Err(_) => return,
+                }
+            } else {
+                match rx.recv_timeout(LANE_RECV_SLICE) {
+                    Ok(m) => m,
+                    Err(mpsc::RecvTimeoutError::Timeout) => continue,
+                    Err(mpsc::RecvTimeoutError::Disconnected) => return,
+                }
+            };
+            router.lanes[shard].hb.busy();
+            match first {
+                Msg::Shutdown => shutdown = true,
+                m => {
+                    // depth gauge + fair-admission slot return (shutdown
+                    // markers bypass `send_to`, so they bypass this too)
                     router.note_dequeued(shard, &m);
-                    // messages gathered behind the marker are the drain set
                     if shutdown {
                         router.drained.fetch_add(1, Ordering::Relaxed);
                     }
                     pending.push(m);
                 }
-                Err(_) => break,
             }
-        }
-        // latency-aware adaptive batching: the greedy gather came up
-        // short of a full batch — if (and only if) the planner approves,
-        // trade a bounded wait for a bigger fuse. Never during shutdown:
-        // the drain must finish promptly.
-        if !shutdown && pending.len() < gather_cap {
-            if let Some((window, run, kind, accuracy)) = router.plan_window(shard, &pending) {
-                router.lanes[shard].window_waits.fetch_add(1, Ordering::Relaxed);
-                // serve everything AHEAD of the growable run first:
-                // admissions, pooled releases, and parallel/split-route or
-                // other-tier dots can never join this fuse, so holding
-                // them through the window would be pure added latency
-                // (FIFO order is preserved — they were queued earlier)
-                let head = pending.len() - run;
-                if head > 0 {
-                    let rest = pending.split_off(head);
-                    serve_pending(router, shard, std::mem::replace(&mut pending, rest));
-                }
-                let deadline = Instant::now() + window;
-                while pending.len() < router.policy.max_batch && pending.len() < gather_cap {
-                    let now = Instant::now();
-                    if now >= deadline {
-                        break;
+            while pending.len() < gather_cap {
+                match rx.try_recv() {
+                    Ok(Msg::Shutdown) => shutdown = true,
+                    Ok(m) => {
+                        router.note_dequeued(shard, &m);
+                        // messages gathered behind the marker are the drain set
+                        if shutdown {
+                            router.drained.fetch_add(1, Ordering::Relaxed);
+                        }
+                        pending.push(m);
                     }
-                    match rx.recv_timeout(deadline - now) {
-                        Ok(Msg::Shutdown) => {
-                            shutdown = true;
+                    Err(_) => break,
+                }
+            }
+            // latency-aware adaptive batching: the greedy gather came up
+            // short of a full batch — if (and only if) the planner approves,
+            // trade a bounded wait for a bigger fuse. Never during shutdown:
+            // the drain must finish promptly.
+            if !shutdown && pending.len() < gather_cap {
+                if let Some((window, run, kind, accuracy)) = router.plan_window(shard, &pending) {
+                    router.lanes[shard].window_waits.fetch_add(1, Ordering::Relaxed);
+                    // serve everything AHEAD of the growable run first:
+                    // admissions, pooled releases, and parallel/split-route or
+                    // other-tier dots can never join this fuse, so holding
+                    // them through the window would be pure added latency
+                    // (FIFO order is preserved — they were queued earlier)
+                    let head = pending.len() - run;
+                    if head > 0 {
+                        let rest = pending.split_off(head);
+                        serve_pending(router, shard, std::mem::replace(&mut pending, rest));
+                    }
+                    let deadline = Instant::now() + window;
+                    while pending.len() < router.policy.max_batch && pending.len() < gather_cap {
+                        let now = Instant::now();
+                        if now >= deadline {
                             break;
                         }
-                        Ok(m) => {
-                            router.note_dequeued(shard, &m);
-                            let grew = router.grows_fuse(shard, &m, kind, accuracy);
-                            pending.push(m);
-                            if !grew {
-                                // a message that can't join the fuse ended
-                                // the run — more waiting can't grow it, and
-                                // would only delay this arrival, so serve
+                        match rx.recv_timeout(deadline - now) {
+                            Ok(Msg::Shutdown) => {
+                                shutdown = true;
                                 break;
                             }
+                            Ok(m) => {
+                                router.note_dequeued(shard, &m);
+                                let grew = router.grows_fuse(shard, &m, kind, accuracy);
+                                pending.push(m);
+                                if !grew {
+                                    // a message that can't join the fuse ended
+                                    // the run — more waiting can't grow it, and
+                                    // would only delay this arrival, so serve
+                                    break;
+                                }
+                            }
+                            Err(_) => break,
                         }
-                        Err(_) => break,
                     }
                 }
             }
         }
+        // the "lane" fault site sits between gather and serve, outside
+        // the receiver lock: Die drops `pending` on the floor (their
+        // clients see a disconnected reply channel — LaneDead on the
+        // retry path) and the supervisor restarts the lane; Stall here is
+        // a wedge the heartbeat exposes without poisoning the lock
+        if faults::act(faults::check("lane", shard)) {
+            return;
+        }
         serve_pending(router, shard, pending);
+        router.lanes[shard].hb.idle();
     }
 }
 
@@ -309,11 +351,10 @@ impl HostRouter {
                     self.errors.fetch_add(1, Ordering::Relaxed);
                     let _ = req.reply.send(DotResponse {
                         id: req.id,
-                        value: Err(format!(
-                            "length mismatch {} vs {}",
-                            req.a.len(),
-                            req.b.len()
-                        )),
+                        value: Err(ServiceError::LengthMismatch {
+                            a: req.a.len(),
+                            b: req.b.len(),
+                        }),
                         batch_size: 1,
                         latency: req.submitted.elapsed(),
                     });
@@ -438,18 +479,17 @@ impl HostRouter {
             }
             self.requests.fetch_add(1, Ordering::Relaxed);
             self.note_wait(s, submitted);
-            let validated: Result<Accuracy, String> =
+            let validated: Result<Accuracy, ServiceError> =
                 match (self.req_accuracy(accuracy), &sa, &sb) {
                     (Err(e), _, _) => Err(e),
                     (Ok(acc), Some(sa), Some(sb)) if sa.len() == sb.len() => Ok(acc),
                     (Ok(_), Some(sa), Some(sb)) => {
-                        Err(format!("length mismatch {} vs {}", sa.len(), sb.len()))
+                        Err(ServiceError::LengthMismatch { a: sa.len(), b: sb.len() })
                     }
-                    // stable "stream released" text, as in the serial arm
-                    (Ok(_), sa, _) => Err(format!(
-                        "stream released: handle {} is not admitted",
-                        if sa.is_some() { b } else { a }
-                    )),
+                    // typed "stream released", as in the serial arm
+                    (Ok(_), sa, _) => Err(ServiceError::StreamReleased {
+                        handle: if sa.is_some() { b } else { a },
+                    }),
                 };
             let acc = match validated {
                 Err(e) => {

@@ -81,11 +81,13 @@
 //! * `stats` — [`ServiceStats`]/[`LaneStats`] and the snapshot;
 //! * `pjrt` — the [`Backend::Pjrt`] worker loop.
 
+mod error;
 mod lane;
 mod pjrt;
 mod router;
 mod stats;
 mod streams;
+mod supervise;
 #[cfg(test)]
 mod tests;
 #[cfg(test)]
@@ -93,15 +95,18 @@ mod tests_accuracy;
 #[cfg(test)]
 mod tests_window;
 
-pub use router::DotClient;
+pub use error::ServiceError;
+pub use router::{DotClient, RetryBudget};
 pub use stats::{LaneStats, LatencyHist, ServiceStats, HIST_BUCKETS};
 
 use crate::engine::{HomedSlice, ShardedEngine};
 use crate::isa::Accuracy;
 use crate::runtime::Runtime;
 use router::{ClientInner, HostRouter};
-use std::sync::{mpsc, Arc};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
 use std::time::{Duration, Instant};
+use supervise::LaneSlot;
 
 /// Message to a submitter (Host) or the worker (Pjrt): a request, stream
 /// admission/release, or an explicit shutdown marker (needed because
@@ -224,11 +229,14 @@ pub struct DotRequest {
     submitted: Instant,
 }
 
-/// The service's answer.
+/// The service's answer. Failures are typed ([`ServiceError`]) so
+/// clients branch on variants — shed vs validation vs dead lane — and
+/// the retry client reads retryability off the error; `to_string()`
+/// reproduces the string era's stable texts.
 #[derive(Clone, Debug)]
 pub struct DotResponse {
     pub id: u64,
-    pub value: Result<f32, String>,
+    pub value: Result<f32, ServiceError>,
     /// how many requests shared the backend call that served this one
     pub batch_size: usize,
     /// queue + execute time
@@ -289,6 +297,31 @@ pub struct ServiceConfig {
     /// (the pre-governance behaviour). Anything else is rejected at
     /// service start.
     pub ecm_governance: String,
+    /// Host backend: microseconds between self-healing supervision sweeps
+    /// (worker respawns, shard quarantine verdicts + probes, lane
+    /// restarts — see the `supervise` module). `0` disables the
+    /// supervisor thread entirely (the pre-supervision behavior: a dead
+    /// lane silently blackholes its shard's queue until shutdown drains
+    /// it). Default 10 000 (10 ms).
+    pub supervise_interval_us: u64,
+    /// Engine-worker wedge threshold (µs): a worker whose heartbeat shows
+    /// it busy on one job longer than this is abandoned and replaced on
+    /// the next sweep. `0` (default) disables wedge detection — dead
+    /// workers are still respawned. A threshold shorter than the longest
+    /// legitimate chunk would shoot healthy workers; leave it 0 unless
+    /// the deployment knows its worst-case chunk time.
+    pub worker_wedge_us: u64,
+    /// Lane-submitter wedge threshold (µs), same contract as
+    /// [`ServiceConfig::worker_wedge_us`] but for the per-shard submitter
+    /// threads. `0` (default) = off; dead submitters are still replaced.
+    pub lane_wedge_us: u64,
+    /// Worker respawns a shard may burn through between sweeps before it
+    /// is **quarantined**: pulled from fresh routing and split chunk
+    /// *assignment* (never chunk geometry — bits are unchanged; see
+    /// `ShardedEngine::quarantine`) until a probe proves every worker
+    /// healthy again. Must be ≥ 1 (validated at service start). Default
+    /// 8.
+    pub shard_respawn_budget: u64,
     /// how long the batcher waits to fill a batch (Pjrt backend)
     pub window: Duration,
     /// name of the batched artifact to use (must exist in the manifest)
@@ -309,6 +342,10 @@ impl Default for ServiceConfig {
             default_accuracy: "kahan".into(),
             per_client_inflight: 0,
             ecm_governance: "on".into(),
+            supervise_interval_us: 10_000,
+            worker_wedge_us: 0,
+            lane_wedge_us: 0,
+            shard_respawn_budget: 8,
             window: Duration::from_millis(2),
             batched_artifact_kahan: "batched_dot_kahan_f32_b8_n16384".into(),
             batched_artifact_naive: "batched_dot_naive_f32_b8_n16384".into(),
@@ -357,6 +394,13 @@ impl ServiceConfig {
                 self.ecm_governance
             ));
         }
+        if self.shard_respawn_budget == 0 {
+            return Err(
+                "ServiceConfig::shard_respawn_budget must be >= 1 (a budget of 0 would \
+                 quarantine every shard on the first sweep)"
+                    .into(),
+            );
+        }
         Ok(())
     }
 }
@@ -364,7 +408,14 @@ impl ServiceConfig {
 enum ServiceInner {
     Host {
         router: Arc<HostRouter>,
-        submitters: Vec<std::thread::JoinHandle<()>>,
+        /// per-shard lane slots: each owns its queue receiver and the
+        /// current submitter incarnation's join handle (the supervisor
+        /// replaces dead/wedged incarnations in place)
+        lanes: Arc<Vec<LaneSlot>>,
+        supervisor: Option<std::thread::JoinHandle<()>>,
+        /// set once by shutdown; read by the supervisor between sweep
+        /// slices so stop() is never blocked a full interval
+        stopping: Arc<AtomicBool>,
     },
     Pjrt {
         tx: Option<mpsc::Sender<Msg>>,
@@ -463,19 +514,41 @@ impl DotService {
             parse_accuracy(&config.default_accuracy).expect("validated above");
         let (router, receivers) =
             HostRouter::new(engine, policy, config.router_queue_depth, default_accuracy);
-        let submitters = receivers
-            .into_iter()
-            .enumerate()
-            .map(|(s, rx)| {
-                let r = Arc::clone(&router);
+        // the lane slots own the queue receivers, so a dead submitter
+        // never disconnects its channel: queued requests wait for (and
+        // are served by) the supervisor's replacement
+        let lanes: Arc<Vec<LaneSlot>> = Arc::new(
+            receivers
+                .into_iter()
+                .map(|rx| LaneSlot { rx: Mutex::new(rx), join: Mutex::new(None) })
+                .collect(),
+        );
+        for (s, slot) in lanes.iter().enumerate() {
+            let h = supervise::spawn_submitter(&router, &lanes, s, 0);
+            *slot.join.lock().expect("fresh lane slot") = Some(h);
+        }
+        let stopping = Arc::new(AtomicBool::new(false));
+        let supervisor = if config.supervise_interval_us > 0 {
+            let r = Arc::clone(&router);
+            let l = Arc::clone(&lanes);
+            let st = Arc::clone(&stopping);
+            let sc = supervise::SuperviseCfg {
+                interval_us: config.supervise_interval_us,
+                worker_wedge_us: config.worker_wedge_us,
+                lane_wedge_us: config.lane_wedge_us,
+                respawn_budget: config.shard_respawn_budget,
+            };
+            Some(
                 std::thread::Builder::new()
-                    .name(format!("dot-submitter-{s}"))
-                    .spawn(move || lane::submitter_loop(&r, s, rx))
-                    .expect("spawn dot submitter")
-            })
-            .collect();
+                    .name("dot-supervisor".into())
+                    .spawn(move || supervise::supervisor_loop(r, l, sc, st))
+                    .expect("spawn dot supervisor"),
+            )
+        } else {
+            None
+        };
         let client = DotClient { inner: ClientInner::Host(Arc::clone(&router)), client: 0 };
-        Ok((DotService { inner: ServiceInner::Host { router, submitters } }, client))
+        Ok((DotService { inner: ServiceInner::Host { router, lanes, supervisor, stopping } }, client))
     }
 
     /// Stop the service and return its statistics. Host backend: every
@@ -487,13 +560,45 @@ impl DotService {
 
     fn shutdown(&mut self) -> ServiceStats {
         match &mut self.inner {
-            ServiceInner::Host { router, submitters } => {
-                if !submitters.is_empty() {
-                    for q in &router.queues {
-                        let _ = q.send(Msg::Shutdown);
-                    }
-                    for h in submitters.drain(..) {
+            ServiceInner::Host { router, lanes, supervisor, stopping } => {
+                if !stopping.swap(true, Ordering::Relaxed) {
+                    // supervisor FIRST: it must not resurrect lanes the
+                    // shutdown is in the middle of retiring
+                    if let Some(h) = supervisor.take() {
                         let _ = h.join();
+                    }
+                    for (s, q) in router.queues.iter().enumerate() {
+                        // best-effort marker (a full queue must not block
+                        // shutdown) + an epoch bump, which stops even a
+                        // submitter that never sees the marker at its
+                        // next loop-top (≤ one bounded recv later)
+                        let _ = q.try_send(Msg::Shutdown);
+                        router.lanes[s].epoch.fetch_add(1, Ordering::Relaxed);
+                    }
+                    for slot in lanes.iter() {
+                        let h = slot.join.lock().unwrap_or_else(|p| p.into_inner()).take();
+                        if let Some(h) = h {
+                            let _ = h.join();
+                        }
+                    }
+                    // final inline drain: anything a retired (or dead)
+                    // lane left queued is served HERE — the drain
+                    // guarantee does not depend on any lane's health
+                    for (s, slot) in lanes.iter().enumerate() {
+                        let rx = slot.rx.lock().unwrap_or_else(|p| p.into_inner());
+                        while let Ok(m) = rx.try_recv() {
+                            if matches!(m, Msg::Shutdown) {
+                                continue;
+                            }
+                            router.note_dequeued(s, &m);
+                            router.drained.fetch_add(1, Ordering::Relaxed);
+                            let r = std::panic::catch_unwind(
+                                std::panic::AssertUnwindSafe(|| router.serve(s, m)),
+                            );
+                            if r.is_err() {
+                                router.errors.fetch_add(1, Ordering::Relaxed);
+                            }
+                        }
                     }
                 }
                 router.snapshot()
@@ -517,8 +622,6 @@ impl Drop for DotService {
 /// Parse a request's accuracy-tier string ("naive" / "kahan" / "dot2" /
 /// "exact", plus the aliases `Accuracy::parse` accepts). The service
 /// rejects unknown tiers per request instead of panicking in a lane.
-fn parse_accuracy(s: &str) -> Result<Accuracy, String> {
-    Accuracy::parse(s).ok_or_else(|| {
-        format!("unknown accuracy tier `{s}` (expected naive, kahan, dot2 or exact)")
-    })
+fn parse_accuracy(s: &str) -> Result<Accuracy, ServiceError> {
+    Accuracy::parse(s).ok_or_else(|| ServiceError::UnknownAccuracy(s.to_string()))
 }

@@ -7,7 +7,7 @@
 //! feature and are rejected synchronously.
 
 use super::stats::ServiceStats;
-use super::{DotRequest, DotResponse, Msg, ServiceConfig};
+use super::{DotRequest, DotResponse, Msg, ServiceConfig, ServiceError};
 use crate::runtime::Runtime;
 use std::sync::mpsc;
 use std::time::Instant;
@@ -37,7 +37,9 @@ pub(super) fn worker_loop_pjrt(
         Msg::ReqPooled { id, reply, submitted, .. } => {
             let _ = reply.send(DotResponse {
                 id,
-                value: Err("pooled dots require the Host backend".into()),
+                value: Err(ServiceError::Unsupported(
+                    "pooled dots require the Host backend".into(),
+                )),
                 batch_size: 0,
                 latency: submitted.elapsed(),
             });
@@ -155,7 +157,9 @@ pub(super) fn worker_loop_pjrt(
                             stats.requests += 1;
                             let _ = p.reply.send(DotResponse {
                                 id: p.id,
-                                value: Err(format!("batched execute: {e}")),
+                                value: Err(ServiceError::Unsupported(format!(
+                                    "batched execute: {e}"
+                                ))),
                                 batch_size: 0,
                                 latency: p.submitted.elapsed(),
                             });
@@ -168,7 +172,7 @@ pub(super) fn worker_loop_pjrt(
                     stats.pjrt_calls += 1;
                     let value = rt
                         .dot_f32(single_name, &p.a, &p.b)
-                        .map_err(|e| e.to_string());
+                        .map_err(|e| ServiceError::Unsupported(e.to_string()));
                     if value.is_err() {
                         stats.errors += 1;
                     }
@@ -188,10 +192,10 @@ pub(super) fn worker_loop_pjrt(
             stats.errors += 1;
             let _ = p.reply.send(DotResponse {
                 id: p.id,
-                value: Err(format!(
+                value: Err(ServiceError::Unsupported(format!(
                     "accuracy tier `{}` requires the Host backend",
                     p.accuracy
-                )),
+                ))),
                 batch_size: 0,
                 latency: p.submitted.elapsed(),
             });

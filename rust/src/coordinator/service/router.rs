@@ -10,14 +10,14 @@
 //! [`PlanPolicy`].
 
 use super::stats::LaneCounters;
-use super::{msg_client, msg_deadline, parse_accuracy, DotRequest, DotResponse, Msg};
+use super::{msg_client, msg_deadline, parse_accuracy, DotRequest, DotResponse, Msg, ServiceError};
 use crate::engine::parallel::panic_message;
 use crate::engine::{HomedSlice, PlanPolicy, ShardedEngine};
 use crate::isa::Accuracy;
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, RwLock};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 /// Shared state of the Host router pool: the per-shard bounded queues,
 /// the admitted-stream table, and every counter. Clients route against it
@@ -53,6 +53,11 @@ pub(super) struct HostRouter {
     pub(super) errors: AtomicU64,
     pub(super) release_misses: AtomicU64,
     pub(super) drained: AtomicU64,
+    /// dead or wedged lane submitters replaced by the supervisor
+    pub(super) lane_restarts: AtomicU64,
+    /// shards pulled from fresh routing after exhausting their respawn
+    /// budget (probe-based reinstatement does not decrement this)
+    pub(super) quarantines: AtomicU64,
 }
 
 impl HostRouter {
@@ -91,13 +96,26 @@ impl HostRouter {
             errors: AtomicU64::new(0),
             release_misses: AtomicU64::new(0),
             drained: AtomicU64::new(0),
+            lane_restarts: AtomicU64::new(0),
+            quarantines: AtomicU64::new(0),
         });
         (router, receivers)
     }
 
-    /// Lane for the next fresh (un-homed) message.
+    /// Lane for the next fresh (un-homed) message. Skips lanes whose
+    /// shard is quarantined by the supervisor — routing never changes
+    /// bits, so rerouting is always safe. When EVERY shard is
+    /// quarantined the filter is ignored: degraded service beats
+    /// refusing to serve (mirrors `ShardedEngine::route`).
     pub(super) fn route_fresh(&self) -> usize {
-        self.rr.fetch_add(1, Ordering::Relaxed) % self.queues.len()
+        let n = self.queues.len();
+        for _ in 0..n {
+            let s = self.rr.fetch_add(1, Ordering::Relaxed) % n;
+            if !self.engine.is_quarantined(s) {
+                return s;
+            }
+        }
+        self.rr.fetch_add(1, Ordering::Relaxed) % n
     }
 
     /// Hand `msg` to shard `s`'s submitter. The queue is bounded: a full
@@ -121,7 +139,15 @@ impl HostRouter {
                     self.client_done_for(s, &msg);
                     self.reject(
                         msg,
-                        format!("shed: lane {s} queue is full (deadline {deadline_us} us)"),
+                        ServiceError::ShedQueueFull {
+                            lane: s,
+                            queued: None,
+                            deadline_us,
+                            // the channel itself rejected the send, so no
+                            // verdict hint exists — one service time is
+                            // the earliest a slot can plausibly free up
+                            retry_after_us: self.lanes[s].est_service_us().max(1),
+                        },
                     );
                     return;
                 }
@@ -163,16 +189,20 @@ impl HostRouter {
             if let Some(v) = self.policy.shed(deadline_us, queued, est) {
                 self.lanes[s].shed.fetch_add(1, Ordering::Relaxed);
                 let why = if v.queue_full {
-                    format!(
-                        "shed: lane {s} queue is full ({} queued, deadline {} us)",
-                        v.queued, v.deadline_us
-                    )
+                    ServiceError::ShedQueueFull {
+                        lane: s,
+                        queued: Some(v.queued),
+                        deadline_us: v.deadline_us,
+                        retry_after_us: v.retry_after_us,
+                    }
                 } else {
-                    format!(
-                        "shed: projected lane {s} queue wait {} us exceeds deadline {} us \
-                         ({} queued)",
-                        v.projected_wait_us, v.deadline_us, v.queued
-                    )
+                    ServiceError::ShedProjected {
+                        lane: s,
+                        projected_wait_us: v.projected_wait_us,
+                        deadline_us: v.deadline_us,
+                        queued: v.queued,
+                        retry_after_us: v.retry_after_us,
+                    }
                 };
                 self.reject(msg, why);
                 return;
@@ -184,11 +214,11 @@ impl HostRouter {
                     self.lanes[s].fair_sheds.fetch_add(1, Ordering::Relaxed);
                     self.reject(
                         msg,
-                        format!(
-                            "shed: client {client} is at the per-client in-flight cap {} on \
-                             lane {s}",
-                            self.policy.per_client_inflight
-                        ),
+                        ServiceError::ShedFairness {
+                            client,
+                            cap: self.policy.per_client_inflight,
+                            lane: s,
+                        },
                     );
                     return;
                 }
@@ -198,7 +228,7 @@ impl HostRouter {
     }
 
     /// Reply to a shed dot message without serving it.
-    fn reject(&self, msg: Msg, why: String) {
+    fn reject(&self, msg: Msg, why: ServiceError) {
         match msg {
             Msg::Req(req) => {
                 let _ = req.reply.send(DotResponse {
@@ -230,7 +260,7 @@ impl HostRouter {
         s: usize,
         deadline_us: u64,
         submitted: Instant,
-    ) -> Option<String> {
+    ) -> Option<ServiceError> {
         if deadline_us == 0 {
             return None;
         }
@@ -239,7 +269,7 @@ impl HostRouter {
             return None;
         }
         self.lanes[s].shed.fetch_add(1, Ordering::Relaxed);
-        Some(format!("shed: deadline {deadline_us} us expired in queue (waited {waited} us)"))
+        Some(ServiceError::ShedExpired { deadline_us, waited_us: waited })
     }
 
     /// Bookkeeping when a submitter picks a message off its lane queue:
@@ -303,7 +333,7 @@ impl HostRouter {
         accuracy: &'static str,
         pooled: bool,
         dot: impl FnOnce(Accuracy) -> f32,
-    ) -> Result<f32, String> {
+    ) -> Result<f32, ServiceError> {
         self.req_accuracy(accuracy).and_then(|acc| {
             self.engine_calls.fetch_add(1, Ordering::Relaxed);
             if pooled {
@@ -311,13 +341,13 @@ impl HostRouter {
             }
             self.lanes[s].executed.fetch_add(1, Ordering::Relaxed);
             std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| dot(acc)))
-                .map_err(|e| format!("engine panic: {}", panic_message(e)))
+                .map_err(|e| ServiceError::EnginePanic(panic_message(e)))
         })
     }
 
     /// Resolve a request's accuracy string: empty means the service's
     /// validated default tier, anything else must parse.
-    pub(super) fn req_accuracy(&self, accuracy: &str) -> Result<Accuracy, String> {
+    pub(super) fn req_accuracy(&self, accuracy: &str) -> Result<Accuracy, ServiceError> {
         if accuracy.is_empty() {
             return Ok(self.default_accuracy);
         }
@@ -349,7 +379,7 @@ impl HostRouter {
                 self.requests.fetch_add(1, Ordering::Relaxed);
                 self.note_wait(s, req.submitted);
                 let value = if req.a.len() != req.b.len() {
-                    Err(format!("length mismatch {} vs {}", req.a.len(), req.b.len()))
+                    Err(ServiceError::LengthMismatch { a: req.a.len(), b: req.b.len() })
                 } else {
                     // no per-request heap churn: the engine reads the
                     // request's own vectors (small dots run on them in
@@ -407,17 +437,14 @@ impl HostRouter {
                         v
                     }
                     (Some(sa), Some(sb)) => {
-                        Err(format!("length mismatch {} vs {}", sa.len(), sb.len()))
+                        Err(ServiceError::LengthMismatch { a: sa.len(), b: sb.len() })
                     }
-                    // stable text (tests and clients match on the
-                    // "stream released" prefix): the handle was either
-                    // never admitted or released — possibly by another
-                    // client racing this dot, which is a clean outcome,
-                    // not a confusing internal error
-                    (sa, _) => Err(format!(
-                        "stream released: handle {} is not admitted",
-                        if sa.is_some() { b } else { a }
-                    )),
+                    // the handle was either never admitted or released —
+                    // possibly by another client racing this dot, which
+                    // is a clean outcome, not a confusing internal error
+                    (sa, _) => Err(ServiceError::StreamReleased {
+                        handle: if sa.is_some() { b } else { a },
+                    }),
                 };
                 if value.is_err() {
                     self.errors.fetch_add(1, Ordering::Relaxed);
@@ -536,7 +563,9 @@ impl DotClient {
         rx
     }
 
-    /// Convenience: blocking round-trip.
+    /// Convenience: blocking round-trip. Keeps the string-error surface
+    /// for callers that only print; the typed error is on
+    /// [`DotResponse::value`].
     pub fn dot_blocking(
         &self,
         accuracy: &'static str,
@@ -545,8 +574,90 @@ impl DotClient {
     ) -> Result<f32, String> {
         let rx = self.submit(0, accuracy, a, b);
         match rx.recv() {
-            Ok(resp) => resp.value,
+            Ok(resp) => resp.value.map_err(|e| e.to_string()),
             Err(_) => Err("service stopped".into()),
+        }
+    }
+
+    /// Blocking submit that retries *infrastructure* failures — sheds and
+    /// dead lanes ([`ServiceError::is_retryable`]) — with capped
+    /// exponential backoff under a per-request retry budget. Validation
+    /// errors (length, accuracy, released stream) and engine panics are
+    /// deterministic and return immediately: retrying them burns budget
+    /// to fail identically. The backoff honors the shed projection's
+    /// retry-after hint ([`ServiceError::retry_after_us`]) — when the
+    /// lane said "the queue drains in ~N µs", sleeping less than N is a
+    /// guaranteed re-shed. Served retries are bit-identical to a first-try
+    /// serve (sheds never reach an engine, and routing never changes
+    /// bits). Returns the final response plus the number of attempts.
+    pub fn submit_with_retry(
+        &self,
+        id: u64,
+        accuracy: &'static str,
+        a: Vec<f32>,
+        b: Vec<f32>,
+        deadline_us: u64,
+        budget: &RetryBudget,
+    ) -> (DotResponse, u32) {
+        let start = Instant::now();
+        let mut attempt = 0u32;
+        loop {
+            attempt += 1;
+            let rx = self.submit_with_deadline(id, accuracy, a.clone(), b.clone(), deadline_us);
+            let resp = match rx.recv() {
+                Ok(r) => r,
+                // the reply channel disconnected without a response: the
+                // serving lane died mid-request (or the service stopped).
+                // Typed as LaneDead — retryable, because the supervisor
+                // restarts dead lanes
+                Err(_) => DotResponse {
+                    id,
+                    value: Err(ServiceError::LaneDead),
+                    batch_size: 0,
+                    latency: start.elapsed(),
+                },
+            };
+            let retryable = resp.value.as_ref().err().is_some_and(|e| e.is_retryable());
+            if !retryable || attempt >= budget.max_attempts.max(1) {
+                return (resp, attempt);
+            }
+            let hint =
+                resp.value.as_ref().err().and_then(|e| e.retry_after_us()).unwrap_or(0);
+            let exp = budget
+                .base_backoff_us
+                .saturating_mul(1u64 << (attempt - 1).min(20) as u64);
+            let backoff = exp.max(hint).min(budget.max_backoff_us.max(1));
+            let spent = start.elapsed().as_micros() as u64;
+            if spent.saturating_add(backoff) >= budget.budget_us {
+                // the budget cannot fund the wait — the caller gets the
+                // last real outcome instead of a late guaranteed re-shed
+                return (resp, attempt);
+            }
+            std::thread::sleep(Duration::from_micros(backoff));
+        }
+    }
+}
+
+/// Retry policy for [`DotClient::submit_with_retry`]: at most
+/// `max_attempts` tries, exponential backoff from `base_backoff_us`
+/// doubling per attempt and capped at `max_backoff_us`, the whole dance
+/// (waits included) bounded by `budget_us` of wall clock.
+#[derive(Clone, Copy, Debug)]
+pub struct RetryBudget {
+    pub max_attempts: u32,
+    /// total wall-clock budget (µs) across all attempts and backoffs
+    pub budget_us: u64,
+    pub base_backoff_us: u64,
+    pub max_backoff_us: u64,
+}
+
+impl Default for RetryBudget {
+    fn default() -> Self {
+        RetryBudget {
+            max_attempts: 4,
+            budget_us: 1_000_000,
+            base_backoff_us: 100,
+            max_backoff_us: 100_000,
         }
     }
 }

@@ -3,8 +3,9 @@
 //! `DotService::stop` returns.
 
 use super::router::HostRouter;
+use crate::util::faults::Heartbeat;
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::Mutex;
 
 /// Bucket count of a [`LatencyHist`]: one power-of-two bucket per `u64`
@@ -197,6 +198,24 @@ pub struct ServiceStats {
     /// lane wake-ups that entered an adaptive batching window (sum of
     /// [`LaneStats::window_waits`])
     pub window_waits: u64,
+    /// submitter lanes restarted by the service supervisor (a lane thread
+    /// died or wedged past `ServiceConfig::lane_wedge_us`; its queued
+    /// requests are re-served by the replacement, its in-flight request
+    /// fails cleanly as a disconnect → [`super::ServiceError::LaneDead`])
+    pub lane_restarts: u64,
+    /// shards the supervisor quarantined after they exhausted their
+    /// respawn budget (`ServiceConfig::shard_respawn_budget`); quarantine
+    /// drops a shard from fresh routing and split chunk-block assignment
+    /// but never changes bits, and probes reinstate it
+    pub quarantines: u64,
+    /// engine worker threads replaced by supervision sweeps, snapshotted
+    /// from the backing engine ([`crate::engine::ShardedStats::respawns`]
+    /// — engine-level, like the split counts)
+    pub respawns: u64,
+    /// pin failures from those respawns (a respawned worker that lost its
+    /// core pinning — the degraded-health signal `repro engine-info`
+    /// warns on)
+    pub respawn_pin_failures: u64,
     /// service-wide queue-wait histogram (every lane's merged)
     pub queue_wait: LatencyHist,
     /// service-wide service-time histogram (every lane's merged)
@@ -222,6 +241,14 @@ pub(super) struct LaneCounters {
     /// +1 on every accepted dot send, -1 on its dequeue; entries drop at
     /// zero so the map stays bounded by live clients
     pub(super) inflight: Mutex<HashMap<u64, u64>>,
+    /// the lane's liveness heartbeat: busy while its submitter serves a
+    /// wake-up's gather, idle between — what the supervisor's wedge sweep
+    /// reads (`ServiceConfig::lane_wedge_us`)
+    pub(super) hb: Heartbeat,
+    /// the lane's submitter generation: bumped by the supervisor on every
+    /// restart; a submitter whose epoch is stale exits at its next
+    /// loop-top instead of double-serving the lane
+    pub(super) epoch: AtomicUsize,
     queue_wait: [AtomicU64; HIST_BUCKETS],
     service_time: [AtomicU64; HIST_BUCKETS],
 }
@@ -238,6 +265,8 @@ impl Default for LaneCounters {
             window_waits: AtomicU64::new(0),
             queued: AtomicU64::new(0),
             inflight: Mutex::new(HashMap::new()),
+            hb: Heartbeat::new(),
+            epoch: AtomicUsize::new(0),
             queue_wait: std::array::from_fn(|_| AtomicU64::new(0)),
             service_time: std::array::from_fn(|_| AtomicU64::new(0)),
         }
@@ -294,6 +323,7 @@ impl HostRouter {
             queue_wait.merge(&l.queue_wait);
             service_time.merge(&l.service_time);
         }
+        let est = self.engine.stats();
         ServiceStats {
             requests: self.requests.load(Ordering::Relaxed),
             engine_calls: self.engine_calls.load(Ordering::Relaxed),
@@ -305,7 +335,7 @@ impl HostRouter {
             batched_requests: self.batched_requests.load(Ordering::Relaxed),
             admit_batches: self.admit_batches.load(Ordering::Relaxed),
             errors: self.errors.load(Ordering::Relaxed),
-            capped_requests: self.engine.stats().capped_requests,
+            capped_requests: est.capped_requests,
             queue_full_stalls: lanes.iter().map(|l| l.queue_full_stalls).sum(),
             stalled_us: lanes.iter().map(|l| l.stalled_us).sum(),
             shed: lanes.iter().map(|l| l.shed).sum(),
@@ -313,6 +343,10 @@ impl HostRouter {
             release_misses: self.release_misses.load(Ordering::Relaxed),
             drained: self.drained.load(Ordering::Relaxed),
             window_waits: lanes.iter().map(|l| l.window_waits).sum(),
+            lane_restarts: self.lane_restarts.load(Ordering::Relaxed),
+            quarantines: self.quarantines.load(Ordering::Relaxed),
+            respawns: est.respawns,
+            respawn_pin_failures: est.respawn_pin_failures,
             queue_wait,
             service_time,
             lanes,

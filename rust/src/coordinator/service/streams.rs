@@ -162,7 +162,7 @@ impl DotClient {
     ) -> Result<f32, String> {
         let rx = self.submit_pooled(0, accuracy, a, b);
         match rx.recv() {
-            Ok(resp) => resp.value,
+            Ok(resp) => resp.value.map_err(|e| e.to_string()),
             Err(_) => Err("service stopped".into()),
         }
     }

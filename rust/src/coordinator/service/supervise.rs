@@ -1,0 +1,168 @@
+//! Service-tier self-healing: lane slots (the queue halves that outlive
+//! any one submitter incarnation), the supervisor thread, and the
+//! quarantined-shard probe.
+//!
+//! The fault-domain layering (see the engine module's diagram):
+//!
+//! * **workers** — each sweep calls [`ShardedEngine::supervise`]: dead or
+//!   wedged engine workers are respawned re-pinned by the pool itself
+//!   (`crate::engine::parallel::WorkerPool::supervise`).
+//! * **shards** — a shard burning through its respawn budget between
+//!   sweeps is structurally sick (bad core, poisoned allocator …): it is
+//!   **quarantined** — dropped from fresh routing and from split
+//!   chunk-block *assignment* (never from chunk *geometry*, so bits are
+//!   unchanged; see `ShardedEngine::quarantine`) — and probed each sweep
+//!   with a no-op round-trip per worker until it proves healthy again.
+//! * **lanes** — a dead submitter (panic or injected death) or a wedged
+//!   one (heartbeat older than `lane_wedge_us`) is replaced. The lane's
+//!   queue receiver lives in its [`LaneSlot`], NOT the thread, so queued
+//!   requests survive the death and are served by the replacement; only
+//!   the dead incarnation's in-hand messages drop, which their clients
+//!   observe as a disconnected reply channel
+//!   ([`super::ServiceError::LaneDead`] on the retry path). A wedged
+//!   incarnation is abandoned (never joined — that would block on the
+//!   wedge) and exits on its own at the next loop-top epoch check.
+
+use super::router::HostRouter;
+use super::{lane, Msg};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+/// One lane's supervised state. The receiver is owned HERE, not by the
+/// submitter thread: a dead submitter never disconnects the channel, so
+/// clients' queued messages wait for the replacement instead of erroring,
+/// and `send_to` keeps accepting during the gap (bounded back-pressure).
+pub(super) struct LaneSlot {
+    pub(super) rx: Mutex<mpsc::Receiver<Msg>>,
+    /// current incarnation's join handle; replaced on restart (a wedged
+    /// incarnation's handle is simply overwritten — joining it would
+    /// block the supervisor on the wedge itself)
+    pub(super) join: Mutex<Option<JoinHandle<()>>>,
+}
+
+/// The supervisor's knobs, copied out of `ServiceConfig` at start.
+#[derive(Clone, Copy)]
+pub(super) struct SuperviseCfg {
+    pub(super) interval_us: u64,
+    pub(super) worker_wedge_us: u64,
+    pub(super) lane_wedge_us: u64,
+    pub(super) respawn_budget: u64,
+}
+
+/// Spawn lane `shard`'s submitter at `epoch`. The thread borrows the
+/// receiver from the slot per wake-up (bounded `recv_timeout` holds, so a
+/// replacement can always take the lock over a dead incarnation).
+pub(super) fn spawn_submitter(
+    router: &Arc<HostRouter>,
+    lanes: &Arc<Vec<LaneSlot>>,
+    shard: usize,
+    epoch: usize,
+) -> JoinHandle<()> {
+    let r = Arc::clone(router);
+    let l = Arc::clone(lanes);
+    std::thread::Builder::new()
+        .name(format!("dot-submitter-{shard}"))
+        .spawn(move || lane::submitter_loop(&r, shard, &l[shard].rx, epoch))
+        .expect("spawn dot submitter")
+}
+
+/// The supervision loop: sweep workers, shards and lanes every
+/// `interval_us` until `stopping`. Sleeps in ≤ 20 ms slices so
+/// [`super::DotService::stop`] is never blocked a full interval.
+pub(super) fn supervisor_loop(
+    router: Arc<HostRouter>,
+    lanes: Arc<Vec<LaneSlot>>,
+    cfg: SuperviseCfg,
+    stopping: Arc<AtomicBool>,
+) {
+    let shards = router.engine.shards();
+    // per-shard respawn baselines: the quarantine budget counts respawns
+    // SINCE the last verdict, not lifetime totals
+    let mut baseline: Vec<u64> =
+        (0..shards).map(|s| router.engine.shard(s).stats().respawns).collect();
+    loop {
+        let mut left = cfg.interval_us.max(1);
+        while left > 0 && !stopping.load(Ordering::Relaxed) {
+            let step = left.min(20_000);
+            std::thread::sleep(Duration::from_micros(step));
+            left -= step;
+        }
+        if stopping.load(Ordering::Relaxed) {
+            return;
+        }
+        // 1) worker sweep: the pool joins dead workers and respawns them
+        //    re-pinned; wedged ones (heartbeat older than the threshold)
+        //    are abandoned and replaced
+        router.engine.supervise(cfg.worker_wedge_us);
+        // 2) shard verdicts: quarantine on an exhausted respawn budget,
+        //    probe-reinstate once every worker round-trips again
+        for s in 0..shards {
+            let respawns = router.engine.shard(s).stats().respawns;
+            if router.engine.is_quarantined(s) {
+                let healthy = probe_shard(&router, s);
+                if healthy {
+                    router.engine.reinstate(s);
+                    baseline[s] = router.engine.shard(s).stats().respawns;
+                }
+            } else if respawns.saturating_sub(baseline[s]) >= cfg.respawn_budget {
+                router.engine.quarantine(s);
+                router.quarantines.fetch_add(1, Ordering::Relaxed);
+                baseline[s] = respawns;
+            }
+        }
+        // 3) lane sweep: replace dead or wedged submitters
+        for (s, slot) in lanes.iter().enumerate() {
+            let dead = {
+                let mut j = slot.join.lock().unwrap_or_else(|p| p.into_inner());
+                match j.as_ref() {
+                    None => true,
+                    Some(h) if h.is_finished() => {
+                        // reap the exited thread; its panic (if any) was
+                        // already isolated per-serve
+                        let _ = j.take().map(|h| h.join());
+                        true
+                    }
+                    Some(_) => false,
+                }
+            };
+            let wedged = !dead && router.lanes[s].hb.wedged(cfg.lane_wedge_us);
+            if !dead && !wedged {
+                continue;
+            }
+            // epoch first: a wedged incarnation that later wakes sees a
+            // stale epoch at its loop top and exits instead of
+            // double-serving the lane
+            let epoch = router.lanes[s].epoch.fetch_add(1, Ordering::Relaxed) + 1;
+            router.lanes[s].hb.idle();
+            let h = spawn_submitter(&router, &lanes, s, epoch);
+            *slot.join.lock().unwrap_or_else(|p| p.into_inner()) = Some(h);
+            router.lane_restarts.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+}
+
+/// Health probe for a quarantined shard: a no-op job to every worker,
+/// each replying on a channel — the shard is healthy only when all of
+/// them round-trip within the timeout. Runs ONLY while quarantined, so
+/// probes never perturb healthy-path statistics, and never computes a
+/// dot, so reinstatement cannot change any request's bits.
+fn probe_shard(router: &HostRouter, s: usize) -> bool {
+    let engine = router.engine.shard(s);
+    let n = engine.threads();
+    let (tx, rx) = mpsc::channel();
+    for w in 0..n {
+        let tx = tx.clone();
+        engine.workers().submit_to(w, Box::new(move || {
+            let _ = tx.send(w);
+        }));
+    }
+    drop(tx);
+    for _ in 0..n {
+        if rx.recv_timeout(Duration::from_millis(20)).is_err() {
+            return false;
+        }
+    }
+    true
+}

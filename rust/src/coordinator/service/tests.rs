@@ -580,7 +580,15 @@ fn deadline_request_sheds_on_a_full_lane_instead_of_blocking() {
         .expect("shed reply must arrive while the lane is still wedged")
         .value
         .unwrap_err();
-    assert!(err.starts_with("shed: "), "stable shed error prefix: {err}");
+    assert!(
+        matches!(
+            err,
+            ServiceError::ShedQueueFull { .. } | ServiceError::ShedProjected { .. }
+        ),
+        "admission sheds are typed: {err:?}"
+    );
+    assert!(err.is_retryable(), "sheds are retryable infrastructure errors: {err}");
+    assert!(err.to_string().starts_with("shed: "), "stable shed error prefix: {err}");
 
     gate.open();
     assert!(rx_big.recv_timeout(Duration::from_secs(30)).expect("big").value.is_ok());
@@ -621,7 +629,11 @@ fn expired_deadline_sheds_in_queue_and_served_bits_never_change() {
     assert!(rx_big.recv_timeout(Duration::from_secs(30)).expect("big").value.is_ok());
     let err = rx_doomed.recv().expect("shed reply").value.unwrap_err();
     assert!(
-        err.starts_with("shed: deadline"),
+        matches!(err, ServiceError::ShedExpired { .. }),
+        "queue expiry is its own typed shed: {err:?}"
+    );
+    assert!(
+        err.to_string().starts_with("shed: deadline"),
         "expiry shed must say the deadline expired in queue: {err}"
     );
     let va = rx_a.recv().expect("a").value.expect("served despite the shed");
@@ -676,7 +688,11 @@ fn per_client_cap_sheds_the_greedy_client_not_the_quiet_one() {
     // third queued request from the same client: over the cap of 2
     let rx_g3 = greedy.submit(3, "kahan", vec![1.0; 64], vec![4.0; 64]);
     let err = rx_g3.recv_timeout(Duration::from_secs(10)).expect("fair shed").value.unwrap_err();
-    assert!(err.starts_with("shed: client"), "fair sheds name the client: {err}");
+    assert!(
+        matches!(err, ServiceError::ShedFairness { client: 7, .. }),
+        "fair sheds are typed with the client token: {err:?}"
+    );
+    assert!(err.to_string().starts_with("shed: client"), "fair sheds name the client: {err}");
     // the quiet client is under ITS cap: admitted despite greedy's flood
     let rx_quiet = quiet.submit(4, "kahan", vec![1.0; 64], vec![5.0; 64]);
 

@@ -7,7 +7,7 @@
 //! across requests, so the steady-state cost of a served dot is the
 //! streaming cost the paper models and nothing else.
 //!
-//! # Architecture: plan → admit/shed → govern → route → shard → pool → partition → kernel → merge
+//! # Architecture: plan → admit/shed → govern → route → shard → pool → partition → kernel → merge — supervised end to end
 //!
 //! ```text
 //!   clients (any thread)
@@ -92,6 +92,32 @@
 //!                  │              reduction level, same Kahan bound,  │
 //!                  │              same bits for 1 or N shards         │
 //!                  └──────────────────────────────────────────────────┘
+//!
+//!   ┌─ fault domains & supervision (cuts across every layer above) ─────┐
+//!   │ the service's supervisor thread periodically sweeps all three     │
+//!   │ fault domains and heals them without changing a single bit:       │
+//!   │  * WORKERS — WorkerPool::supervise reaps dead threads (finished   │
+//!   │    join handle) and wedged threads (stale heartbeat) and respawns │
+//!   │    them re-pinned on the SAME queue (EngineStats::respawns /      │
+//!   │    respawn_pin_failures); a dead worker's in-flight chunk job is  │
+//!   │    dropped, so the chunk collector reports a clean "worker died"  │
+//!   │    error — a recovery never fabricates a partial                  │
+//!   │  * LANES — a dead or wedged submitter lane is restarted over the  │
+//!   │    same bounded queue (ServiceStats::lane_restarts); queued       │
+//!   │    requests are re-served by the replacement or cleanly errored,  │
+//!   │    never silently dropped                                         │
+//!   │  * SHARDS — a shard whose workers exhaust the respawn budget is   │
+//!   │    QUARANTINED (ServiceStats::quarantines): dropped from fresh    │
+//!   │    routing and re-weighted out of split shard-sets with chunk     │
+//!   │    geometry unchanged, so quarantine never changes bits (see      │
+//!   │    "# Fault domains" in the plan module); a periodic probe dot    │
+//!   │    reinstates it once it serves again                             │
+//!   │ Failures are reproducible: `--features faultinject` compiles      │
+//!   │ seeded FaultPlan hooks (util::faults) into worker/chunk/lane      │
+//!   │ sites, and the chaos suite (rust/tests/test_faults.rs) asserts    │
+//!   │ no hangs, typed errors, bit-identical survivors, and recovery     │
+//!   │ counters matching the injected schedule                           │
+//!   └───────────────────────────────────────────────────────────────────┘
 //! ```
 //!
 //! * [`pool`] — the recycling aligned buffer pool ([`BufferPool`]).
@@ -210,8 +236,16 @@ pub struct EngineStats {
     /// the realized worker count — a subset of `parallel`
     pub capped_requests: u64,
     pub pool: PoolStats,
-    /// workers whose CPU-affinity call failed (best-effort pinning signal)
+    /// workers whose CPU-affinity call failed (best-effort pinning signal;
+    /// > 0 is a degraded-health warning in `repro engine-info`/`e2e_serve`)
     pub pin_failures: u64,
+    /// workers respawned by the supervision sweep after a death or wedge
+    /// (see [`WorkerPool::supervise`]) — 0 on a healthy engine
+    pub respawns: u64,
+    /// respawned workers whose re-pin failed — recovery succeeded but the
+    /// worker runs unpinned (degraded), counted separately from first-spawn
+    /// `pin_failures`
+    pub respawn_pin_failures: u64,
 }
 
 /// Autotuned kernel for one request shape: the requested accuracy tier's
@@ -679,7 +713,18 @@ impl DotEngine {
             capped_requests: self.capped.load(Ordering::Relaxed),
             pool: self.pool.stats(),
             pin_failures: self.workers.pin_failures() as u64,
+            respawns: self.workers.respawns() as u64,
+            respawn_pin_failures: self.workers.respawn_pin_failures() as u64,
         }
+    }
+
+    /// One self-healing sweep over this engine's workers (see
+    /// [`WorkerPool::supervise`]); `wedge_us == 0` disables wedge
+    /// detection, dead-thread detection is always on. Returns workers
+    /// respawned. Driven periodically by the service supervisor; safe to
+    /// call from any thread.
+    pub fn supervise(&self, wedge_us: u64) -> usize {
+        self.workers.supervise(wedge_us)
     }
 
     /// Admit a stream into the engine's pooled aligned storage (for callers

@@ -26,6 +26,7 @@
 use super::pool::PooledSlice;
 use crate::bench::kernels::{compensated_fold_f32, compensated_fold_f64};
 use crate::bench::threads::pin_to_cpu;
+use crate::util::faults::{self, FaultAction, Heartbeat};
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Condvar, Mutex};
@@ -41,22 +42,45 @@ struct QueueState {
 struct WorkerShared {
     state: Mutex<QueueState>,
     cv: Condvar,
+    /// 0 = idle, else the `faults::now_us` timestamp at which the current
+    /// job started — the supervision sweep's wedge signal
+    hb: Heartbeat,
+    /// bumped by [`WorkerPool::supervise`] when it replaces this slot's
+    /// thread; a thread whose captured epoch falls behind exits at its
+    /// next loop top (after finishing — or never finishing — its current
+    /// job), so a wedged thread can never race its replacement's queue
+    epoch: AtomicUsize,
 }
 
-struct WorkerHandle {
+/// One worker slot: the queue (and its thread) survive respawns — a
+/// replacement thread runs `worker_main` over the *same* shared queue,
+/// so queued jobs are never lost to a worker death.
+struct WorkerSlot {
     shared: Arc<WorkerShared>,
-    join: Option<std::thread::JoinHandle<()>>,
+    /// explicit pin target (`new_on` CPU list), re-applied on respawn
+    target: Option<usize>,
+    join: Mutex<Option<std::thread::JoinHandle<()>>>,
 }
 
 /// Persistent worker pool: spawn once, park between jobs, join on drop.
+/// Self-healing: [`WorkerPool::supervise`] detects dead (join-handle
+/// finished) and wedged (stale heartbeat) workers and respawns them
+/// re-pinned, counted in [`WorkerPool::respawns`].
 pub struct WorkerPool {
-    workers: Vec<WorkerHandle>,
+    workers: Vec<WorkerSlot>,
     next: AtomicUsize,
     pin_failures: Arc<AtomicUsize>,
+    respawn_pin_failures: Arc<AtomicUsize>,
+    respawns: AtomicUsize,
 }
 
-fn worker_main(shared: &WorkerShared) {
+fn worker_main(shared: &WorkerShared, index: usize, my_epoch: usize) {
     loop {
+        // replaced by the supervisor (wedge respawn): exit so the queue
+        // has exactly one live owner again
+        if shared.epoch.load(Ordering::Relaxed) != my_epoch {
+            return;
+        }
         let job = {
             let mut g = shared.state.lock().unwrap();
             loop {
@@ -76,11 +100,59 @@ fn worker_main(shared: &WorkerShared) {
             // (jobs that need the payload, like `parallel_dot_*`, also wrap
             // their own body to report the panic explicitly).
             Some(j) => {
+                shared.hb.busy();
+                match faults::check("worker", index) {
+                    // injected thread death: the popped job is dropped, so
+                    // its reply channel disconnects and the chunk collector
+                    // sees a clean "worker died" — never a fabricated
+                    // partial. Queued jobs stay for the respawned thread.
+                    Some(FaultAction::Die) => {
+                        shared.hb.idle();
+                        drop(j);
+                        return;
+                    }
+                    // injected thread-killing panic (unlike a *job* panic,
+                    // which is caught below): unwinds out of the thread,
+                    // dropping the job on the way
+                    Some(FaultAction::Panic) => {
+                        panic!("faultinject: worker {index} killed")
+                    }
+                    Some(FaultAction::Stall(us)) => {
+                        std::thread::sleep(std::time::Duration::from_micros(us));
+                    }
+                    None => {}
+                }
                 let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(j));
+                shared.hb.idle();
             }
             None => return,
         }
     }
+}
+
+/// Spawn one worker thread for slot `index`: pin (exact target, or the
+/// `index`-th allowed CPU), count a failure into `failures`, then serve
+/// the slot's queue until closed or replaced.
+fn spawn_worker(
+    index: usize,
+    shared: Arc<WorkerShared>,
+    target: Option<usize>,
+    failures: Arc<AtomicUsize>,
+    epoch: usize,
+) -> std::thread::JoinHandle<()> {
+    std::thread::Builder::new()
+        .name(format!("engine-worker-{index}"))
+        .spawn(move || {
+            let pinned = match target {
+                Some(cpu) => crate::bench::threads::pin_to_exact_cpu(cpu),
+                None => pin_to_cpu(index),
+            };
+            if !pinned {
+                failures.fetch_add(1, Ordering::Relaxed);
+            }
+            worker_main(&shared, index, epoch);
+        })
+        .expect("spawn engine worker")
 }
 
 impl WorkerPool {
@@ -106,26 +178,21 @@ impl WorkerPool {
             let shared = Arc::new(WorkerShared {
                 state: Mutex::new(QueueState { jobs: VecDeque::new(), closed: false }),
                 cv: Condvar::new(),
+                hb: Heartbeat::new(),
+                epoch: AtomicUsize::new(0),
             });
-            let shared2 = Arc::clone(&shared);
-            let failures = Arc::clone(&pin_failures);
             let target = if cpus.is_empty() { None } else { Some(cpus[i % cpus.len()]) };
-            let join = std::thread::Builder::new()
-                .name(format!("engine-worker-{i}"))
-                .spawn(move || {
-                    let pinned = match target {
-                        Some(cpu) => crate::bench::threads::pin_to_exact_cpu(cpu),
-                        None => pin_to_cpu(i),
-                    };
-                    if !pinned {
-                        failures.fetch_add(1, Ordering::Relaxed);
-                    }
-                    worker_main(&shared2);
-                })
-                .expect("spawn engine worker");
-            workers.push(WorkerHandle { shared, join: Some(join) });
+            let join =
+                spawn_worker(i, Arc::clone(&shared), target, Arc::clone(&pin_failures), 0);
+            workers.push(WorkerSlot { shared, target, join: Mutex::new(Some(join)) });
         }
-        WorkerPool { workers, next: AtomicUsize::new(0), pin_failures }
+        WorkerPool {
+            workers,
+            next: AtomicUsize::new(0),
+            pin_failures,
+            respawn_pin_failures: Arc::new(AtomicUsize::new(0)),
+            respawns: AtomicUsize::new(0),
+        }
     }
 
     pub fn size(&self) -> usize {
@@ -136,6 +203,63 @@ impl WorkerPool {
     /// 0 on a healthy Linux host, `size()` on platforms without pinning).
     pub fn pin_failures(&self) -> usize {
         self.pin_failures.load(Ordering::Relaxed)
+    }
+
+    /// Workers respawned by [`WorkerPool::supervise`] after a death or
+    /// wedge — the self-healing counter behind `EngineStats::respawns`.
+    pub fn respawns(&self) -> usize {
+        self.respawns.load(Ordering::Relaxed)
+    }
+
+    /// Respawned workers whose re-pin failed (counted separately from
+    /// first-spawn [`WorkerPool::pin_failures`]: a respawn that lands
+    /// unpinned is a *degraded* recovery, not a healthy one).
+    pub fn respawn_pin_failures(&self) -> usize {
+        self.respawn_pin_failures.load(Ordering::Relaxed)
+    }
+
+    /// One supervision sweep: detect dead workers (thread finished while
+    /// the pool is open — a panicking or injected-death thread) and
+    /// wedged workers (heartbeat busy for more than `wedge_us`
+    /// microseconds; 0 disables wedge detection), and respawn each
+    /// re-pinned to its original target. The replacement serves the SAME
+    /// queue, so jobs queued behind a dead worker are served, not lost;
+    /// the job the dead worker held was dropped by its unwind/exit, so
+    /// its reply channel reports a clean "worker died" to the chunk
+    /// collector — a respawn never fabricates a partial. Returns the
+    /// number of workers respawned in this sweep.
+    pub fn supervise(&self, wedge_us: u64) -> usize {
+        let mut respawned = 0usize;
+        for (i, w) in self.workers.iter().enumerate() {
+            if w.shared.state.lock().unwrap_or_else(|p| p.into_inner()).closed {
+                continue;
+            }
+            let mut join = w.join.lock().unwrap_or_else(|p| p.into_inner());
+            let dead = join.as_ref().map_or(true, |h| h.is_finished());
+            if dead || w.shared.hb.wedged(wedge_us) {
+                if dead {
+                    // reap the dead thread; a *wedged* thread instead gets
+                    // its epoch bumped (it exits at its next loop top) and
+                    // its old handle dropped — joining it here would block
+                    // the sweep behind the very stall it is healing
+                    if let Some(h) = join.take() {
+                        let _ = h.join();
+                    }
+                }
+                let epoch = w.shared.epoch.fetch_add(1, Ordering::Relaxed) + 1;
+                w.shared.hb.idle();
+                *join = Some(spawn_worker(
+                    i,
+                    Arc::clone(&w.shared),
+                    w.target,
+                    Arc::clone(&self.respawn_pin_failures),
+                    epoch,
+                ));
+                self.respawns.fetch_add(1, Ordering::Relaxed);
+                respawned += 1;
+            }
+        }
+        respawned
     }
 
     /// Enqueue `job` on worker `worker % size()`.
@@ -172,12 +296,13 @@ impl WorkerPool {
 impl Drop for WorkerPool {
     fn drop(&mut self) {
         for w in &self.workers {
-            let mut g = w.shared.state.lock().unwrap();
+            let mut g = w.shared.state.lock().unwrap_or_else(|p| p.into_inner());
             g.closed = true;
             w.shared.cv.notify_all();
         }
         for w in &mut self.workers {
-            if let Some(join) = w.join.take() {
+            let join = w.join.lock().unwrap_or_else(|p| p.into_inner()).take();
+            if let Some(join) = join {
                 let _ = join.join();
             }
         }
@@ -292,6 +417,12 @@ macro_rules! parallel_dot_impl {
                 let tx = tx.clone();
                 pool.submit_to(base + (i % slots), Box::new(move || {
                     let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                        // "chunk" faults stay *inside* the unwind guard: an
+                        // injected chunk failure is a caught per-chunk error
+                        // (a stall is just a slow chunk), never a dead worker
+                        if faults::act(faults::check("chunk", i)) {
+                            panic!("faultinject: chunk {i} killed");
+                        }
                         f(&a.as_slice()[lo..hi], &b.as_slice()[lo..hi])
                     }));
                     let _ = tx.send((i, r.map_err(panic_message)));
@@ -474,6 +605,42 @@ mod tests {
                 "cap={cap}: governance changed bits"
             );
         }
+    }
+
+    /// Self-healing sweep: a worker stalled past the wedge threshold is
+    /// replaced (same queue, so nothing queued is lost), the replacement
+    /// serves new jobs while the old thread is still stuck, the old
+    /// thread exits at its epoch check once its job ends, and a healthy
+    /// pool respawns nothing.
+    #[test]
+    fn supervise_replaces_wedged_worker_and_queue_survives() {
+        use std::time::Duration;
+        let pool = WorkerPool::new(2);
+        let (wtx, wrx) = mpsc::channel();
+        pool.submit_to(0, Box::new(move || {
+            std::thread::sleep(Duration::from_millis(300));
+            let _ = wtx.send(());
+        }));
+        // let the worker enter the stall, then sweep with a 10 ms wedge
+        // threshold — exactly one respawn
+        std::thread::sleep(Duration::from_millis(50));
+        assert_eq!(pool.supervise(10_000), 1);
+        assert_eq!(pool.respawns(), 1);
+        // the replacement owns the same queue: new jobs are served while
+        // the wedged thread is still inside its stall
+        let (tx, rx) = mpsc::channel();
+        pool.submit_to(0, Box::new(move || {
+            let _ = tx.send(7u32);
+        }));
+        assert_eq!(
+            rx.recv_timeout(Duration::from_secs(30)).expect("replacement must serve"),
+            7
+        );
+        // the wedged thread finishes its job and exits via the epoch check
+        assert!(wrx.recv_timeout(Duration::from_secs(30)).is_ok());
+        std::thread::sleep(Duration::from_millis(300));
+        assert_eq!(pool.supervise(10_000), 0, "healthy pool must not respawn");
+        assert!(pool.respawn_pin_failures() <= 1);
     }
 
     #[test]

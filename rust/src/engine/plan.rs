@@ -122,6 +122,43 @@
 //! untouched — property-tested in `coordinator/service/tests.rs` by
 //! serially resubmitting everything a shedding service served.
 //!
+//! A [`ShedVerdict`] also carries a **retry-after hint**
+//! (`retry_after_us`, computed from the same projection): the earliest
+//! time at which resubmitting could plausibly be admitted. It is
+//! advisory — the lane's state moves on — but it is what
+//! `DotClient::submit_with_retry` uses to pace its capped exponential
+//! backoff instead of hammering a lane the projection already called
+//! full.
+//!
+//! # Fault domains
+//!
+//! **Quarantine never changes bits.** The supervision layer (see the
+//! fault-domains box in the [`super`] module diagram) may declare a
+//! shard unhealthy — its workers exhausted the service's respawn budget
+//! — and *quarantine* it. The planner's contract for that state keeps
+//! the two repo invariants intact:
+//!
+//! * [`PlanPolicy::split_chunk_count`] is **unchanged** by quarantine:
+//!   it still counts every shard's workers, so a split dot's chunk
+//!   geometry and merge order are identical with 0, 1, or N shards
+//!   quarantined — the same reason the ECM caps never change bits.
+//! * [`PlanPolicy::split_blocks_masked`] re-weights the chunk→shard
+//!   *assignment* over the healthy shards only (a quarantined shard gets
+//!   no blocks, its share going to its neighbors by the same
+//!   deterministic cumulative-weight rounding). Assignment is pure
+//!   placement: every chunk computes the same partial wherever it runs,
+//!   and the flat compensated fold still merges in global chunk order,
+//!   so a quarantined split is bit-identical to a healthy one
+//!   (property-tested in this module and `rust/tests/test_faults.rs`).
+//! * Fresh-request routing simply skips quarantined shards (router
+//!   round-robin over the healthy set); pooled streams homed on a
+//!   quarantined shard keep serving there — moving them would change
+//!   their NUMA placement story, not their bits, but re-admission is the
+//!   client's call, not the router's.
+//! * With **every** shard quarantined the mask is ignored (serving
+//!   degraded beats serving nothing); probes reinstate shards as they
+//!   recover.
+//!
 //! # Who consumes plans
 //!
 //! * `DotEngine` — [`serves_inline`] is the inline-vs-parallel predicate
@@ -277,6 +314,12 @@ pub struct ShedVerdict {
     /// alternative is exactly the blocking send the policy exists to
     /// remove
     pub queue_full: bool,
+    /// retry-after hint (µs): the earliest resubmission that could
+    /// plausibly be admitted, from the same projection that shed this
+    /// request — how long the excess projected wait takes to drain, never
+    /// less than one service time. Advisory; consumed by
+    /// `DotClient::submit_with_retry` to pace its backoff.
+    pub retry_after_us: u64,
 }
 
 impl PlanPolicy {
@@ -415,12 +458,37 @@ impl PlanPolicy {
     /// cumulative-weight rounding, so the assignment never affects the
     /// partials or the compensated fold that merges them.
     pub fn split_blocks(&self, chunk_count: usize) -> Vec<(usize, usize, usize)> {
-        let total_w = self.total_workers().max(1);
+        self.split_blocks_masked(chunk_count, &[])
+    }
+
+    /// [`PlanPolicy::split_blocks`] over the *healthy* shards only — the
+    /// quarantine form (see "# Fault domains"): shards whose `healthy`
+    /// entry is `false` get no blocks, their share re-weighted onto the
+    /// healthy shards by the same cumulative rounding. The chunk count
+    /// (and with it every chunk boundary and the merge order) is the
+    /// caller's and does NOT shrink with the mask, so a quarantined split
+    /// is bit-identical to a healthy one. An empty mask, a mask of the
+    /// wrong length, or an all-unhealthy mask means "no quarantine":
+    /// every shard is weighted (serving degraded beats serving nothing).
+    pub fn split_blocks_masked(
+        &self,
+        chunk_count: usize,
+        healthy: &[bool],
+    ) -> Vec<(usize, usize, usize)> {
+        let masked = healthy.len() == self.shard_workers.len() && healthy.iter().any(|&h| h);
+        let weight = |s: usize| -> usize {
+            if masked && !healthy[s] {
+                0
+            } else {
+                self.shard_workers[s]
+            }
+        };
+        let total_w = (0..self.shard_workers.len()).map(weight).sum::<usize>().max(1);
         let mut blocks: Vec<(usize, usize, usize)> = Vec::with_capacity(self.shard_workers.len());
         let mut cum = 0usize;
         let mut prev = 0usize;
-        for (s, w) in self.shard_workers.iter().enumerate() {
-            cum += w;
+        for s in 0..self.shard_workers.len() {
+            cum += weight(s);
             let end = chunk_count * cum / total_w;
             if end > prev {
                 blocks.push((s, prev, end));
@@ -487,7 +555,15 @@ impl PlanPolicy {
         let queue_full = queued >= self.lane_depth;
         let projected_wait_us = (queued as u64).saturating_mul(est_service_us);
         if queue_full || projected_wait_us > deadline_us {
-            Some(ShedVerdict { deadline_us, queued, projected_wait_us, queue_full })
+            // retry-after: how long the projection says the *excess* wait
+            // takes to drain — at least one service time (a full lane with
+            // no histogram data yet still needs one serve to free a slot),
+            // and never 0 (an immediate retry would meet the same verdict)
+            let retry_after_us = projected_wait_us
+                .saturating_sub(deadline_us)
+                .max(est_service_us)
+                .max(1);
+            Some(ShedVerdict { deadline_us, queued, projected_wait_us, queue_full, retry_after_us })
         } else {
             None
         }
@@ -555,6 +631,52 @@ mod tests {
         let b1 = p.split_blocks(1);
         assert_eq!(b1.iter().map(|&(_, lo, hi)| hi - lo).sum::<usize>(), 1);
         assert_eq!(b1.last().unwrap().2, 1);
+    }
+
+    /// The quarantine contract ("# Fault domains"): a masked shard gets
+    /// no blocks, coverage stays contiguous and complete over the SAME
+    /// chunk count (geometry never shrinks with the mask), degenerate
+    /// masks fall back to the unmasked weighting, and the unmasked call
+    /// is exactly `split_blocks`.
+    #[test]
+    fn split_blocks_masked_requarantines_weights_without_changing_chunks() {
+        let p = PlanPolicy::new(256 * 1024, 4 << 20, 0, vec![8, 16, 8]);
+        for chunks in [1usize, 7, 24, 32] {
+            for mask in [
+                vec![true, true, true],
+                vec![false, true, true],
+                vec![true, false, true],
+                vec![true, true, false],
+                vec![true, false, false],
+            ] {
+                let blocks = p.split_blocks_masked(chunks, &mask);
+                // exhaustive contiguous coverage of [0, chunks)
+                assert_eq!(blocks.first().unwrap().1, 0, "{mask:?}");
+                assert_eq!(blocks.last().unwrap().2, chunks, "{mask:?}");
+                for w in blocks.windows(2) {
+                    assert_eq!(w[0].2, w[1].1, "contiguous {mask:?}");
+                }
+                // a quarantined shard never receives a block
+                for &(s, lo, hi) in &blocks {
+                    assert!(mask[s], "shard {s} is quarantined but got chunks {lo}..{hi}");
+                    assert!(hi > lo);
+                }
+            }
+            // all-unhealthy and wrong-length masks fall back to unmasked
+            assert_eq!(
+                p.split_blocks_masked(chunks, &[false, false, false]),
+                p.split_blocks(chunks),
+                "all-quarantined must serve degraded, not empty"
+            );
+            assert_eq!(p.split_blocks_masked(chunks, &[true]), p.split_blocks(chunks));
+            assert_eq!(p.split_blocks_masked(chunks, &[]), p.split_blocks(chunks));
+        }
+        // the weighted re-deal: masking the 16-worker middle shard splits
+        // 24 chunks evenly over the two 8-worker survivors
+        assert_eq!(
+            p.split_blocks_masked(24, &[true, false, true]),
+            vec![(0, 0, 12), (2, 12, 24)]
+        );
     }
 
     #[test]
@@ -630,6 +752,25 @@ mod tests {
         // depth unknown (no with_admission): only the projection can shed
         let unknown = policy();
         assert_eq!(unknown.shed(1_000_000, usize::MAX - 1, 0), None);
+    }
+
+    /// The retry-after hint is computed from the same projection that
+    /// shed the request: the excess projected wait, floored at one
+    /// service time, and never 0.
+    #[test]
+    fn shed_verdict_carries_a_retry_after_hint() {
+        let p = policy().with_service(16, 0).with_admission(8, 0);
+        // projection shed: excess = 200 - 100 = 100 us, above the 50 us floor
+        let v = p.shed(100, 4, 50).expect("projection shed");
+        assert_eq!(v.retry_after_us, 100);
+        // barely-late projection: the excess (10 us) is under one service
+        // time — the floor wins (retrying before a slot frees is useless)
+        let w = p.shed(240, 5, 50).expect("250 us projected > 240 us deadline");
+        assert_eq!(w.retry_after_us, 50);
+        // full lane with no histogram data yet: still a non-zero hint
+        let full = p.shed(1_000_000, 8, 0).expect("full lane");
+        assert!(full.queue_full);
+        assert_eq!(full.retry_after_us, 1);
     }
 
     #[test]

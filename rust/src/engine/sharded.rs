@@ -49,7 +49,8 @@ use super::{
 };
 use crate::bench::kernels::{compensated_fold_f32, compensated_fold_f64};
 use crate::isa::{Accuracy, Precision};
-use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use crate::util::faults;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, OnceLock};
 
 /// Sharded-tier configuration.
@@ -118,6 +119,13 @@ pub struct ShardedStats {
     pub capped_requests: u64,
     pub pool: PoolStats,
     pub pin_failures: u64,
+    /// worker threads replaced by supervision sweeps across all shards
+    /// (dead or wedged workers respawned onto the same queue — see the
+    /// engine module's fault-domain layer)
+    pub respawns: u64,
+    /// pin failures from those respawns, counted separately from the
+    /// startup `pin_failures` so a degraded host is visible as such
+    pub respawn_pin_failures: u64,
 }
 
 /// The multi-socket serving tier: one pinned engine per NUMA domain.
@@ -133,6 +141,12 @@ pub struct ShardedEngine {
     /// chunk-block onto a worker subset (the per-shard engines count
     /// their own capped parallel dots)
     split_capped: AtomicU64,
+    /// per-shard quarantine bits, set by the service supervisor when a
+    /// shard exhausts its respawn budget. A quarantined shard is skipped
+    /// by fresh routing and weighted out of split chunk-block assignment
+    /// (`split_blocks_masked`) — but the chunk geometry, kernel choice
+    /// and merge order never change, so quarantine never changes bits.
+    quarantined: Vec<AtomicBool>,
 }
 
 macro_rules! sharded_dot_impl {
@@ -204,8 +218,13 @@ macro_rules! sharded_dot_impl {
             // the weighted chunk-block assignment is compiled by the
             // planner (contiguous blocks per shard, weighted by worker
             // count, deterministic cumulative rounding — the assignment
-            // can never change the partials or the fold)
-            let blocks = self.policy.split_blocks(ranges.len());
+            // can never change the partials or the fold). Quarantined
+            // shards are weighted out here; the chunk geometry above
+            // stays fixed, so the partials and merge order are identical
+            // whichever shards execute them.
+            let blocks = self
+                .policy
+                .split_blocks_masked(ranges.len(), &self.healthy_mask());
             let (tx, rx) = mpsc::channel::<(usize, Result<$ty, String>)>();
             let mut any_capped = false;
             for &(s, clo, chi) in &blocks {
@@ -239,6 +258,9 @@ macro_rules! sharded_dot_impl {
                         base + (w % slots),
                         Box::new(move || {
                             let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                                if faults::act(faults::check("split_chunk", ci)) {
+                                    panic!("faultinject: split chunk {ci} killed");
+                                }
                                 f(&pa.as_slice()[lo..hi], &pb.as_slice()[lo..hi])
                             }));
                             let _ = tx.send((ci, r.map_err(panic_message)));
@@ -543,6 +565,7 @@ impl ShardedEngine {
         } else {
             policy
         };
+        let quarantined = shards.iter().map(|_| AtomicBool::new(false)).collect();
         ShardedEngine {
             shards,
             cfg,
@@ -550,6 +573,7 @@ impl ShardedEngine {
             next: AtomicUsize::new(0),
             split_dots: AtomicU64::new(0),
             split_capped: AtomicU64::new(0),
+            quarantined,
         }
     }
 
@@ -596,9 +620,57 @@ impl ShardedEngine {
         self.shards.iter().map(|s| s.threads()).sum()
     }
 
-    /// Round-robin shard for a fresh (un-homed) request.
+    /// Round-robin shard for a fresh (un-homed) request, skipping
+    /// quarantined shards. When every shard is quarantined the mask is
+    /// ignored (serving degraded beats serving nothing) and plain
+    /// round-robin resumes.
     fn route(&self) -> usize {
-        self.next.fetch_add(1, Ordering::Relaxed) % self.shards.len()
+        let n = self.shards.len();
+        let start = self.next.fetch_add(1, Ordering::Relaxed);
+        for off in 0..n {
+            let s = (start + off) % n;
+            if !self.quarantined[s].load(Ordering::Relaxed) {
+                return s;
+            }
+        }
+        start % n
+    }
+
+    /// Drop a shard from fresh routing and split-path chunk-block
+    /// assignment. Bits never change: the chunk geometry and merge order
+    /// come from `split_chunk_count`, which counts ALL shards' workers.
+    pub fn quarantine(&self, shard: usize) {
+        if shard < self.quarantined.len() {
+            self.quarantined[shard].store(true, Ordering::Relaxed);
+        }
+    }
+
+    /// Return a quarantined shard to service (the supervisor calls this
+    /// after a successful probe dot).
+    pub fn reinstate(&self, shard: usize) {
+        if shard < self.quarantined.len() {
+            self.quarantined[shard].store(false, Ordering::Relaxed);
+        }
+    }
+
+    pub fn is_quarantined(&self, shard: usize) -> bool {
+        shard < self.quarantined.len() && self.quarantined[shard].load(Ordering::Relaxed)
+    }
+
+    /// Per-shard health mask for the split path's weighted chunk-block
+    /// assignment (`true` = healthy).
+    fn healthy_mask(&self) -> Vec<bool> {
+        self.quarantined
+            .iter()
+            .map(|q| !q.load(Ordering::Relaxed))
+            .collect()
+    }
+
+    /// Sweep every shard's worker pool once: respawn dead workers, and —
+    /// when `wedge_us > 0` — workers whose heartbeat shows a job running
+    /// longer than the threshold. Returns the number of workers replaced.
+    pub fn supervise(&self, wedge_us: u64) -> usize {
+        self.shards.iter().map(|s| s.supervise(wedge_us)).sum()
     }
 
     /// Per-shard engine counters, indexed by shard — the observability
@@ -626,6 +698,8 @@ impl ShardedEngine {
             st.pool.misses += e.pool.misses;
             st.pool.returned += e.pool.returned;
             st.pin_failures += e.pin_failures;
+            st.respawns += e.respawns;
+            st.respawn_pin_failures += e.respawn_pin_failures;
         }
         st.requests += st.split_dots;
         st
@@ -795,6 +869,50 @@ mod tests {
         assert_eq!(gs.split_dots, 1, "{gs:?}");
         assert_eq!(gs.capped_requests, 1, "{gs:?}");
         assert_eq!(os.capped_requests, 0, "{os:?}");
+    }
+
+    /// Quarantine at the split layer: weighting a shard out of the
+    /// chunk-block assignment moves its chunks onto healthy shards but
+    /// never changes the chunk geometry or merge order — bits identical
+    /// to the all-healthy split. Fresh routing skips the quarantined
+    /// shard; reinstatement restores both.
+    #[test]
+    fn quarantined_split_is_bit_identical_and_rerouted() {
+        let sharded = ShardedEngine::from_topology(&Topology::fake_even(2), cfg(1, 64 << 10, 4));
+        let mut rng = Rng::new(61);
+        let n = 100_000; // 800 KB total >> 64 KB split threshold
+        let a = rng.normal_f32_vec(n);
+        let b = rng.normal_f32_vec(n);
+        let healthy = sharded.dot_f32(Accuracy::Kahan, &a, &b);
+        sharded.quarantine(1);
+        assert!(sharded.is_quarantined(1));
+        let degraded = sharded.dot_f32(Accuracy::Kahan, &a, &b);
+        assert_eq!(
+            healthy.to_bits(),
+            degraded.to_bits(),
+            "quarantine must never change bits"
+        );
+        // shard 1 served none of the degraded split's chunks
+        let before = sharded.shard(1).stats();
+        // fresh (sub-split) routing skips the quarantined shard
+        let small = rng.normal_f32_vec(1000);
+        for _ in 0..4 {
+            sharded.dot_f32(Accuracy::Kahan, &small, &small);
+        }
+        let after = sharded.shard(1).stats();
+        assert_eq!(
+            after.requests, before.requests,
+            "fresh routing must skip a quarantined shard"
+        );
+        sharded.reinstate(1);
+        assert!(!sharded.is_quarantined(1));
+        let restored = sharded.dot_f32(Accuracy::Kahan, &a, &b);
+        assert_eq!(healthy.to_bits(), restored.to_bits());
+        // all-quarantined: the mask is ignored and serving continues
+        sharded.quarantine(0);
+        sharded.quarantine(1);
+        let last_resort = sharded.dot_f32(Accuracy::Kahan, &a, &b);
+        assert_eq!(healthy.to_bits(), last_resort.to_bits());
     }
 
     #[test]

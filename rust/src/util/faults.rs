@@ -1,0 +1,298 @@
+//! Deterministic fault injection for the serving stack.
+//!
+//! A [`FaultPlan`] is a schedule of faults keyed by **site** (a static
+//! string naming the code location — `"worker"`, `"chunk"`,
+//! `"split_chunk"`, `"lane"`), **index** (which worker / chunk / lane),
+//! and **hit number** (the n-th time that (site, index) is reached).
+//! Execution layers call [`check`] at their named sites; when the
+//! process-global plan has a matching entry for the current hit, the
+//! action fires exactly once. Everything is counted deterministically,
+//! so a seeded plan over a deterministic workload reproduces the same
+//! failure in every run — tests and CI inject the fault, then assert
+//! the *recovery*: respawn counters, lane restarts, quarantines, and
+//! the bit-identity of every served request.
+//!
+//! Without the `faultinject` cargo feature, [`check`] compiles to an
+//! inlined `None` and the hooks vanish from the hot path entirely. With
+//! the feature but no installed plan, the cost is one relaxed atomic
+//! load per hook.
+//!
+//! The plan is process-global (the hook sites have no engine or service
+//! handle in scope), so tests that install plans must serialize — the
+//! `faultinject` CI job runs with `--test-threads=1` and every test
+//! resets the plan on exit (see `rust/tests/test_faults.rs`).
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock, RwLock};
+use std::time::Instant;
+
+/// What an injected fault does at its site.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultAction {
+    /// Panic with a recognizable payload (`"faultinject: ..."`). At a
+    /// chunk site this exercises the caught-panic path; at a worker or
+    /// lane site it kills the thread and exercises supervision.
+    Panic,
+    /// Kill the thread cleanly: a worker returns from its loop (its
+    /// popped job is dropped, so the job's reply channel disconnects
+    /// and the collector sees a clean "worker died", never a fabricated
+    /// partial); a lane returns from its loop before serving.
+    Die,
+    /// Stall the site for the given number of microseconds — a wedged
+    /// worker or lane, as seen by the heartbeat sweep.
+    Stall(u64),
+}
+
+/// One scheduled fault: fire `action` on the `nth_hit`-th time
+/// `(site, index)` is reached (0-based).
+#[derive(Clone, Debug)]
+struct FaultEntry {
+    site: &'static str,
+    index: usize,
+    nth_hit: u64,
+    action: FaultAction,
+}
+
+/// A deterministic schedule of faults. Build one with the chainable
+/// constructors, [`install`](FaultPlan::install) it, run the workload,
+/// then [`reset`] — see the module doc for the serialization contract.
+#[derive(Clone, Debug, Default)]
+pub struct FaultPlan {
+    entries: Vec<FaultEntry>,
+}
+
+impl FaultPlan {
+    pub fn new() -> FaultPlan {
+        FaultPlan::default()
+    }
+
+    /// Schedule `action` for the `nth_hit`-th visit of `(site, index)`.
+    pub fn fault(
+        mut self,
+        site: &'static str,
+        index: usize,
+        nth_hit: u64,
+        action: FaultAction,
+    ) -> FaultPlan {
+        self.entries.push(FaultEntry { site, index, nth_hit, action });
+        self
+    }
+
+    /// A seeded random plan: `count` faults drawn over the given sites
+    /// and index/hit ranges — the chaos-test generator. Deterministic
+    /// for a fixed seed.
+    pub fn seeded(
+        seed: u64,
+        count: usize,
+        sites: &[&'static str],
+        max_index: usize,
+        max_hit: u64,
+    ) -> FaultPlan {
+        let mut rng = crate::util::Rng::new(seed);
+        let mut plan = FaultPlan::new();
+        for _ in 0..count {
+            let site = sites[rng.below(sites.len() as u64) as usize];
+            let index = rng.below(max_index.max(1) as u64) as usize;
+            let nth_hit = rng.below(max_hit.max(1));
+            let action = match rng.below(3) {
+                0 => FaultAction::Panic,
+                1 => FaultAction::Die,
+                _ => FaultAction::Stall(1_000 + rng.below(5_000)),
+            };
+            plan = plan.fault(site, index, nth_hit, action);
+        }
+        plan
+    }
+
+    /// Number of scheduled faults at `site` (tests size their recovery
+    /// assertions from the plan itself).
+    pub fn count_at(&self, site: &'static str) -> usize {
+        self.entries.iter().filter(|e| e.site == site).count()
+    }
+
+    /// Install this plan process-globally, resetting all hit counters.
+    /// Replaces any previously installed plan.
+    pub fn install(self) {
+        let g = global();
+        {
+            let mut counters = g.counters.lock().unwrap_or_else(|p| p.into_inner());
+            counters.clear();
+        }
+        *g.plan.write().unwrap_or_else(|p| p.into_inner()) = Some(self);
+        g.enabled.store(true, Ordering::SeqCst);
+    }
+}
+
+/// Remove any installed plan (hooks return to their no-op fast path).
+pub fn reset() {
+    let g = global();
+    g.enabled.store(false, Ordering::SeqCst);
+    *g.plan.write().unwrap_or_else(|p| p.into_inner()) = None;
+    g.counters.lock().unwrap_or_else(|p| p.into_inner()).clear();
+}
+
+struct FaultGlobal {
+    enabled: AtomicBool,
+    plan: RwLock<Option<FaultPlan>>,
+    /// hit counters per (site, index); a Vec keeps this allocation-light
+    /// for the handful of sites a plan names
+    counters: Mutex<Vec<(&'static str, usize, u64)>>,
+}
+
+fn global() -> &'static FaultGlobal {
+    static G: OnceLock<FaultGlobal> = OnceLock::new();
+    G.get_or_init(|| FaultGlobal {
+        enabled: AtomicBool::new(false),
+        plan: RwLock::new(None),
+        counters: Mutex::new(Vec::new()),
+    })
+}
+
+/// The hook the execution layers call at their named sites: returns the
+/// scheduled action iff the installed plan has an entry for the current
+/// hit of `(site, index)`. Counts the hit either way (when a plan is
+/// installed), so schedules stay deterministic across mixed workloads.
+#[cfg(feature = "faultinject")]
+pub fn check(site: &'static str, index: usize) -> Option<FaultAction> {
+    let g = global();
+    if !g.enabled.load(Ordering::Relaxed) {
+        return None;
+    }
+    let hit = {
+        let mut counters = g.counters.lock().unwrap_or_else(|p| p.into_inner());
+        match counters.iter_mut().find(|(s, i, _)| *s == site && *i == index) {
+            Some(entry) => {
+                let h = entry.2;
+                entry.2 += 1;
+                h
+            }
+            None => {
+                counters.push((site, index, 1));
+                0
+            }
+        }
+    };
+    let plan = g.plan.read().unwrap_or_else(|p| p.into_inner());
+    plan.as_ref()?
+        .entries
+        .iter()
+        .find(|e| e.site == site && e.index == index && e.nth_hit == hit)
+        .map(|e| e.action)
+}
+
+/// Without the feature the hook is a compile-time no-op.
+#[cfg(not(feature = "faultinject"))]
+#[inline(always)]
+pub fn check(_site: &'static str, _index: usize) -> Option<FaultAction> {
+    None
+}
+
+/// Execute an injected action *in place* for sites where Panic and
+/// Stall make sense locally; returns `true` if the caller should die
+/// (thread-exit is the caller's job — only it knows how to exit
+/// cleanly). `None` action → no-op, returns `false`.
+pub fn act(action: Option<FaultAction>) -> bool {
+    match action {
+        None => false,
+        Some(FaultAction::Panic) => panic!("faultinject: injected panic"),
+        Some(FaultAction::Stall(us)) => {
+            std::thread::sleep(std::time::Duration::from_micros(us));
+            false
+        }
+        Some(FaultAction::Die) => true,
+    }
+}
+
+/// Microseconds since the process-wide monotonic origin — the heartbeat
+/// clock the supervision sweeps compare against. Never 0 (0 is the
+/// "idle" sentinel in the heartbeat slots).
+pub fn now_us() -> u64 {
+    static ORIGIN: OnceLock<Instant> = OnceLock::new();
+    let t = ORIGIN.get_or_init(Instant::now).elapsed().as_micros() as u64;
+    t.max(1)
+}
+
+/// A heartbeat slot: 0 = idle, otherwise the [`now_us`] timestamp at
+/// which the owner started its current unit of work. The supervision
+/// sweeps read it to tell "busy" from "wedged".
+#[derive(Debug, Default)]
+pub struct Heartbeat(AtomicU64);
+
+impl Heartbeat {
+    pub fn new() -> Heartbeat {
+        Heartbeat(AtomicU64::new(0))
+    }
+
+    /// Mark the owner busy as of now.
+    pub fn busy(&self) {
+        self.0.store(now_us(), Ordering::Relaxed);
+    }
+
+    /// Mark the owner idle.
+    pub fn idle(&self) {
+        self.0.store(0, Ordering::Relaxed);
+    }
+
+    /// Busy for longer than `threshold_us`? (`false` when idle or when
+    /// the threshold is 0 — 0 disables wedge detection.)
+    pub fn wedged(&self, threshold_us: u64) -> bool {
+        if threshold_us == 0 {
+            return false;
+        }
+        let since = self.0.load(Ordering::Relaxed);
+        since != 0 && now_us().saturating_sub(since) > threshold_us
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plan_counts_sites() {
+        let p = FaultPlan::new()
+            .fault("worker", 0, 0, FaultAction::Die)
+            .fault("worker", 1, 2, FaultAction::Panic)
+            .fault("lane", 0, 0, FaultAction::Stall(100));
+        assert_eq!(p.count_at("worker"), 2);
+        assert_eq!(p.count_at("lane"), 1);
+        assert_eq!(p.count_at("chunk"), 0);
+    }
+
+    #[test]
+    fn seeded_plans_are_deterministic() {
+        let a = FaultPlan::seeded(42, 8, &["worker", "lane"], 4, 10);
+        let b = FaultPlan::seeded(42, 8, &["worker", "lane"], 4, 10);
+        assert_eq!(a.entries.len(), 8);
+        for (x, y) in a.entries.iter().zip(&b.entries) {
+            assert_eq!(x.site, y.site);
+            assert_eq!(x.index, y.index);
+            assert_eq!(x.nth_hit, y.nth_hit);
+            assert_eq!(x.action, y.action);
+        }
+    }
+
+    #[test]
+    fn heartbeat_wedge_detection() {
+        let hb = Heartbeat::new();
+        assert!(!hb.wedged(1), "idle is never wedged");
+        hb.busy();
+        assert!(!hb.wedged(0), "threshold 0 disables detection");
+        assert!(!hb.wedged(60_000_000), "fresh work is not wedged");
+        std::thread::sleep(std::time::Duration::from_millis(3));
+        assert!(hb.wedged(1_000), "stale heartbeat past the threshold is wedged");
+        hb.idle();
+        assert!(!hb.wedged(1_000));
+    }
+
+    // `check` with an installed plan is exercised by the `faultinject`
+    // feature job (rust/tests/test_faults.rs); without the feature it
+    // must be a constant None.
+    #[cfg(not(feature = "faultinject"))]
+    #[test]
+    fn check_is_noop_without_feature() {
+        FaultPlan::new().fault("worker", 0, 0, FaultAction::Die).install();
+        assert_eq!(check("worker", 0), None);
+        reset();
+    }
+}

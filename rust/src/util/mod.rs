@@ -6,6 +6,7 @@
 
 pub mod cli;
 pub mod csv;
+pub mod faults;
 pub mod fmt;
 pub mod prop;
 pub mod rng;

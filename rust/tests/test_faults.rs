@@ -1,0 +1,323 @@
+//! Fault-injection integration tests: deterministic worker/lane deaths,
+//! self-healing supervision (respawns, lane restarts, quarantine +
+//! probe reinstatement), retry-with-budget clients, and the seeded chaos
+//! capstone.
+//!
+//! The [`FaultPlan`] is process-global, so these tests MUST serialize —
+//! CI's faultinject job runs
+//!
+//! ```text
+//! cargo test --release --features faultinject -- --test-threads=1
+//! ```
+//!
+//! and every test installs its plan first and `faults::reset()`s on the
+//! way out. Each test builds its own leaked engine so no recovery
+//! counter (they are engine-cumulative) leaks across tests.
+#![cfg(feature = "faultinject")]
+
+use kahan_ecm::coordinator::{DotService, RetryBudget, ServiceConfig, ServiceError};
+use kahan_ecm::engine::{EngineConfig, ShardedConfig, ShardedEngine, Topology};
+use kahan_ecm::isa::Accuracy;
+use kahan_ecm::util::faults::{self, FaultAction, FaultPlan};
+use kahan_ecm::util::Rng;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Two shards with two workers each, forced: a one-worker shard serves
+/// everything inline and never reaches the pool's "worker" fault site,
+/// and equal per-shard worker counts keep the chunk geometry — and
+/// therefore the bits — identical whichever shard a request routes to.
+fn leaked_engine() -> &'static ShardedEngine {
+    let cfg = ShardedConfig {
+        engine: EngineConfig { threads: 2, ..EngineConfig::default() },
+        split_min_bytes: 512 << 10,
+        ..ShardedConfig::default()
+    };
+    Box::leak(Box::new(ShardedEngine::from_topology(&Topology::fake_even(2), cfg)))
+}
+
+/// A parallel-class input pair: 384 KB total sits above the 256 KB
+/// parallel cutoff (chunk jobs land on pool workers, where the "worker"
+/// and "chunk" fault sites live) and below the 512 KB split threshold.
+fn parallel_inputs(seed: u64) -> (Vec<f32>, Vec<f32>) {
+    let mut rng = Rng::new(seed);
+    (rng.normal_f32_vec(48 * 1024), rng.normal_f32_vec(48 * 1024))
+}
+
+fn retry_budget() -> RetryBudget {
+    RetryBudget {
+        max_attempts: 8,
+        budget_us: 10_000_000,
+        base_backoff_us: 200,
+        max_backoff_us: 20_000,
+    }
+}
+
+fn wait_until<F: FnMut() -> bool>(mut cond: F, timeout: Duration, what: &str) {
+    let t0 = Instant::now();
+    while !cond() {
+        assert!(t0.elapsed() < timeout, "timed out waiting for {what}");
+        std::thread::sleep(Duration::from_millis(2));
+    }
+}
+
+/// An injected worker death makes the in-flight dot fail CLEANLY — the
+/// dropped chunk propagates as a panic, never as a fabricated `0.0`
+/// partial folded into a wrong value — and after the supervision sweep
+/// respawns the worker, the same request is served bit-identically.
+#[test]
+fn worker_death_fails_cleanly_and_respawn_restores_bits() {
+    faults::reset();
+    let engine = leaked_engine();
+    let (a, b) = parallel_inputs(11);
+    let reference = engine.dot_f32(Accuracy::Kahan, &a, &b);
+
+    // a supervision loop stands in for the service's supervisor thread:
+    // chunk jobs queued behind a dead worker are only served once the
+    // sweep respawns it onto the same queue
+    let stop = Arc::new(AtomicBool::new(false));
+    let sweeper = {
+        let stop = Arc::clone(&stop);
+        std::thread::spawn(move || {
+            while !stop.load(Ordering::Relaxed) {
+                engine.supervise(0);
+                std::thread::sleep(Duration::from_millis(1));
+            }
+        })
+    };
+
+    // whichever worker pops the first chunk job dies with it in hand
+    FaultPlan::new()
+        .fault("worker", 0, 0, FaultAction::Die)
+        .fault("worker", 1, 0, FaultAction::Die)
+        .install();
+    let faulted = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        engine.dot_f32(Accuracy::Kahan, &a, &b)
+    }));
+    assert!(
+        faulted.is_err(),
+        "a dot whose worker died mid-chunk must fail, not return a partial value"
+    );
+
+    wait_until(
+        || engine.stats().respawns >= 1,
+        Duration::from_secs(10),
+        "the supervision sweep to respawn the dead worker",
+    );
+    faults::reset();
+    let healed = engine.dot_f32(Accuracy::Kahan, &a, &b);
+    assert_eq!(
+        healed.to_bits(),
+        reference.to_bits(),
+        "post-respawn serve must be bit-identical to the pre-fault serve"
+    );
+    stop.store(true, Ordering::Relaxed);
+    sweeper.join().expect("sweeper");
+}
+
+/// A dead lane submitter drops only its in-hand requests (clients see
+/// the reply channel disconnect, typed [`ServiceError::LaneDead`] by the
+/// retry client); the supervisor restarts the lane, queued requests are
+/// re-served by the replacement, and every retried serve is
+/// bit-identical to a fault-free one.
+#[test]
+fn lane_death_is_restarted_and_retries_serve_bit_identically() {
+    faults::reset();
+    let engine = leaked_engine();
+    let mut rng = Rng::new(23);
+    let (a, b) = (rng.normal_f32_vec(1024), rng.normal_f32_vec(1024));
+    let reference = engine.dot_f32(Accuracy::Kahan, &a, &b);
+
+    // kill BOTH lanes' submitters on their first wake-up: whichever lane
+    // a request routes to, its first serve attempt dies mid-flight
+    FaultPlan::new()
+        .fault("lane", 0, 0, FaultAction::Die)
+        .fault("lane", 1, 0, FaultAction::Die)
+        .install();
+    let cfg = ServiceConfig { supervise_interval_us: 1_000, ..ServiceConfig::default() };
+    let (svc, client) = DotService::start_on(cfg, engine);
+    let budget = retry_budget();
+    let mut extra_attempts = 0u32;
+    for i in 0..8u64 {
+        let (resp, attempts) =
+            client.submit_with_retry(i, "kahan", a.clone(), b.clone(), 0, &budget);
+        let v = resp
+            .value
+            .unwrap_or_else(|e| panic!("request {i} failed after {attempts} attempts: {e}"));
+        assert_eq!(
+            v.to_bits(),
+            reference.to_bits(),
+            "a retried serve must be bit-identical to a first-try serve"
+        );
+        extra_attempts += attempts - 1;
+    }
+    let stats = svc.stop();
+    faults::reset();
+    assert!(
+        stats.lane_restarts >= 1,
+        "the supervisor never restarted a dead lane: {stats:?}"
+    );
+    assert!(
+        extra_attempts >= 1,
+        "at least one request must have observed the dead lane and retried"
+    );
+}
+
+/// A shard that exhausts its respawn budget is quarantined (dropped from
+/// fresh routing — bits never change), probed each sweep, and reinstated
+/// once every worker round-trips again; post-reinstatement serves match
+/// the pre-fault bits.
+#[test]
+fn respawn_budget_quarantines_and_probes_reinstate() {
+    faults::reset();
+    let engine = leaked_engine();
+    let (a, b) = parallel_inputs(31);
+    let reference = engine.dot_f32(Accuracy::Kahan, &a, &b);
+
+    // a burst of worker deaths: with a budget of 1, the first respawn on
+    // a shard quarantines it. Probe jobs visit the same "worker" site, so
+    // probes keep failing while scheduled deaths remain and succeed once
+    // the schedule is exhausted — which is exactly when reinstatement is
+    // safe.
+    let mut plan = FaultPlan::new();
+    for w in 0..2usize {
+        for hit in 0..3u64 {
+            plan = plan.fault("worker", w, hit, FaultAction::Die);
+        }
+    }
+    plan.install();
+    let cfg = ServiceConfig {
+        supervise_interval_us: 1_000,
+        shard_respawn_budget: 1,
+        ..ServiceConfig::default()
+    };
+    let (svc, client) = DotService::start_on(cfg, engine);
+    let budget = retry_budget();
+    let t0 = Instant::now();
+    let mut i = 0u64;
+    while !(0..engine.shards()).any(|s| engine.is_quarantined(s)) {
+        assert!(
+            t0.elapsed() < Duration::from_secs(20),
+            "no shard was ever quarantined despite exhausted respawn budgets"
+        );
+        // failures are expected mid-schedule (a killed worker fails its
+        // request cleanly); the drive just has to keep hitting the pool
+        let (resp, _) = client.submit_with_retry(i, "kahan", a.clone(), b.clone(), 0, &budget);
+        let _ = resp.value;
+        i += 1;
+    }
+    wait_until(
+        || (0..engine.shards()).all(|s| !engine.is_quarantined(s)),
+        Duration::from_secs(20),
+        "probe-based reinstatement of every quarantined shard",
+    );
+    let (resp, _) = client.submit_with_retry(i, "kahan", a.clone(), b.clone(), 0, &budget);
+    let healed = resp.value.expect("post-reinstatement serve");
+    assert_eq!(
+        healed.to_bits(),
+        reference.to_bits(),
+        "quarantine and reinstatement must never change bits"
+    );
+    let stats = svc.stop();
+    faults::reset();
+    assert!(stats.respawns >= 1, "worker deaths never respawned: {stats:?}");
+    assert!(stats.quarantines >= 1, "respawn budget never quarantined: {stats:?}");
+}
+
+/// Capstone chaos test: a seeded random fault schedule (worker, chunk
+/// and lane sites; panics, deaths and stalls) against a concurrent
+/// retrying workload. Every request completes (no hangs), every success
+/// is bit-identical to the fault-free serial reference, every failure is
+/// a typed infrastructure outcome, and the recovery counters are bounded
+/// by the schedule itself.
+#[test]
+fn chaos_seeded_schedule_recovers_and_preserves_bits() {
+    faults::reset();
+    let engine = leaked_engine();
+    let inputs: Vec<(Vec<f32>, Vec<f32>)> =
+        (0..4).map(|i| parallel_inputs(100 + i)).collect();
+    let refs: Vec<u32> = inputs
+        .iter()
+        .map(|(a, b)| engine.dot_f32(Accuracy::Kahan, a, b).to_bits())
+        .collect();
+
+    let plan = FaultPlan::seeded(4242, 12, &["worker", "chunk", "lane"], 2, 6);
+    let worker_faults = plan.count_at("worker") as u64;
+    let lane_faults = plan.count_at("lane") as u64;
+    plan.install();
+
+    let cfg = ServiceConfig {
+        supervise_interval_us: 1_000,
+        shard_respawn_budget: 4,
+        ..ServiceConfig::default()
+    };
+    let (svc, client) = DotService::start_on(cfg, engine);
+    let budget = retry_budget();
+    let results: Vec<(usize, Result<f32, ServiceError>)> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..3usize)
+            .map(|t| {
+                let client = client.clone();
+                let inputs = &inputs;
+                let budget = &budget;
+                s.spawn(move || {
+                    let mut out = Vec::new();
+                    for k in 0..12usize {
+                        let idx = (t * 12 + k) % inputs.len();
+                        let (a, b) = &inputs[idx];
+                        let (resp, _) = client.submit_with_retry(
+                            (t * 100 + k) as u64,
+                            "kahan",
+                            a.clone(),
+                            b.clone(),
+                            0,
+                            budget,
+                        );
+                        out.push((idx, resp.value));
+                    }
+                    out
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .flat_map(|h| h.join().expect("chaos client thread"))
+            .collect()
+    });
+    let stats = svc.stop();
+    faults::reset();
+
+    assert_eq!(results.len(), 36, "every request must complete — no hangs, no drops");
+    let mut ok = 0usize;
+    for (idx, value) in &results {
+        match value {
+            Ok(v) => {
+                ok += 1;
+                assert_eq!(
+                    v.to_bits(),
+                    refs[*idx],
+                    "a served value under chaos must be bit-identical to the fault-free \
+                     serial reference"
+                );
+            }
+            // infrastructure failures (dead lane, retry budget exhausted
+            // on sheds) and clean engine panics are the only acceptable
+            // outcomes — never a validation error, never a wrong value
+            Err(ServiceError::EnginePanic(_)) | Err(ServiceError::LaneDead) => {}
+            Err(e) if e.is_retryable() => {}
+            Err(e) => panic!("unexpected failure class under chaos: {e:?}"),
+        }
+    }
+    assert!(ok > 0, "no request survived the chaos schedule: {stats:?}");
+    // wedge detection is off in this config, so only scheduled
+    // worker-site faults can kill workers and only scheduled lane-site
+    // faults can kill submitters
+    assert!(
+        stats.respawns <= worker_faults,
+        "more respawns than scheduled worker faults: {stats:?}"
+    );
+    assert!(
+        stats.lane_restarts <= lane_faults,
+        "more lane restarts than scheduled lane faults: {stats:?}"
+    );
+}

@@ -356,3 +356,88 @@ fn split_path_bits_and_bound_survive_concurrent_submission() {
     svc2.stop();
     svc1.stop();
 }
+
+/// Shutdown racing self-healing: only with `--features faultinject`
+/// (CI's serialized faultinject job — the fault plan is process-global).
+#[cfg(feature = "faultinject")]
+mod faultinject_shutdown {
+    use super::*;
+    use kahan_ecm::util::faults::{self, FaultAction, FaultPlan};
+
+    /// `stop()` while lanes are dead or mid-restart: injected submitter
+    /// deaths (including one that kills the replacement) race a fast
+    /// supervisor and an immediate shutdown. Every submitted request must
+    /// still resolve — served bit-identically by a replacement or the
+    /// shutdown drain, or cleanly disconnected (the dead incarnation's
+    /// in-hand messages) — and `stop()` must return instead of hanging on
+    /// a lane that no longer serves its queue.
+    #[test]
+    fn shutdown_during_lane_recovery_neither_hangs_nor_drops() {
+        faults::reset();
+        let engine = leak_engine(&Topology::fake_even(2), 1, 4 << 20);
+        let reference = {
+            let mut rng = Rng::new(77);
+            let (a, b) = (rng.normal_f32_vec(512), rng.normal_f32_vec(512));
+            (engine.dot_f32(Accuracy::Kahan, &a, &b).to_bits(), a, b)
+        };
+        let (ref_bits, a, b) = reference;
+
+        // lane 0 dies on its first wake-up AND its replacement dies on
+        // the next; lane 1 dies once — shutdown arrives while the
+        // supervisor is still replaying restarts
+        FaultPlan::new()
+            .fault("lane", 0, 0, FaultAction::Die)
+            .fault("lane", 0, 1, FaultAction::Die)
+            .fault("lane", 1, 0, FaultAction::Die)
+            .install();
+        let (svc, client) = DotService::start_on(
+            ServiceConfig { supervise_interval_us: 500, ..ServiceConfig::default() },
+            engine,
+        );
+        // wave 1 trips the first death on each lane (round-robin routing
+        // puts 4 requests on each); the sleep lets the supervisor replay
+        // restarts before wave 2 arrives
+        let mut rxs: Vec<_> = (0..8u64)
+            .map(|i| client.submit(i, "kahan", a.clone(), b.clone()))
+            .collect();
+        std::thread::sleep(Duration::from_millis(5));
+        // wave 2 lands after lane 1's only scheduled death is consumed,
+        // so its lane-1 half MUST be served (by the replacement or the
+        // shutdown drain); lane 0's replacement may still die once more
+        rxs.extend((8..24u64).map(|i| client.submit(i, "kahan", a.clone(), b.clone())));
+        std::thread::sleep(Duration::from_millis(1));
+        let stats = svc.stop();
+        faults::reset();
+
+        let (mut served, mut disconnected) = (0u64, 0u64);
+        for rx in rxs {
+            // a timeout here IS the hang this test exists to catch
+            match rx.recv_timeout(Duration::from_secs(60)) {
+                Ok(resp) => {
+                    let v = resp.value.expect("served request must carry a value");
+                    assert_eq!(
+                        v.to_bits(),
+                        ref_bits,
+                        "a request served across a lane restart changed bits"
+                    );
+                    served += 1;
+                }
+                Err(e) => {
+                    assert!(
+                        matches!(e, std::sync::mpsc::RecvTimeoutError::Disconnected),
+                        "request neither served nor cleanly disconnected"
+                    );
+                    disconnected += 1;
+                }
+            }
+        }
+        assert_eq!(served + disconnected, 24, "every request must resolve");
+        // only a dead incarnation's in-hand messages may disconnect; wave
+        // 2's lane-1 half sits beyond every scheduled death on its lane
+        assert!(
+            served >= 8,
+            "requests past the death schedule were not re-served: \
+             served={served} disconnected={disconnected} {stats:?}"
+        );
+    }
+}
