@@ -88,6 +88,20 @@ ENGINE_CHECKS = [
     ("winner_dot2_mem", nonempty_str()),
     ("winner_dot2_l1", nonempty_str()),
     ("dot2_mem_free", true_bool()),
+    # PR 10: the f64 accuracy ladder (the paper's DP column) and the
+    # measured-calibration loop — a profile-seeded dispatch table must
+    # start within 5% of the live-calibrated one, and the profile-derived
+    # split threshold must not serve the MEM dot materially slower than
+    # the built-in 4 MiB constant (lenient 0.8: CI boxes are noisy).
+    ("kahan_vs_naive_f64_l1", num(lo=0)),
+    ("kahan_vs_naive_f64_llc", num(lo=0)),
+    ("kahan_vs_naive_f64_mem", num(lo=0)),
+    ("dot2_vs_naive_f64_l1", num(lo=0)),
+    ("dot2_vs_naive_f64_llc", num(lo=0)),
+    ("dot2_vs_naive_f64_mem", num(lo=0)),
+    ("dot2_mem_free_f64", true_bool()),
+    ("calib_cold_start_ratio", num(lo=0.95)),
+    ("calib_split_gain", num(lo=0.8)),
 ]
 
 SHARDED_CHECKS = [
@@ -106,6 +120,11 @@ SHARDED_CHECKS = [
     ("svc_lane_restarts_control", intval(exactly=0)),
     ("svc_quarantines", intval(lo=1)),
     ("svc_quarantines_control", intval(exactly=0)),
+    # PR 10: deadline-aware routing — the synthetic-calibration run must
+    # promote Parallel dots to Split (route changes, bits asserted
+    # identical in the bench itself), the no-deadline control never.
+    ("svc_deadline_split_served", intval(lo=1)),
+    ("svc_deadline_split_control", intval(exactly=0)),
 ]
 
 CHECKS = {

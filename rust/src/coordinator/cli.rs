@@ -37,13 +37,20 @@ Host silicon (likwid-bench analog):
                         thread scaling on this machine
   engine-info           persistent dot engine: autotuned kernel dispatch
                         table, worker/pool state, smoke dot
+  calibrate [--write] [--path P]
+                        measure the calibration profile (split bandwidth,
+                        kernel throughput, accuracy-tier ratios) and print
+                        every threshold it derives; --write persists it so
+                        future starts plan on measured numbers
   plan --len N [--precision f32|f64] [--batch K] [--accuracy A] [--window-us U]
        [--deadline-us D] [--queued Q] [--est-service-us E]
                         explain the planner's decision for one request:
-                        route, size class, the accuracy tier's chosen
-                        kernel, fuse cutoff (A: naive|kahan|dot2|exact),
-                        and — given a deadline D and a lane with Q queued
-                        messages — the admission gate's shed verdict
+                        route, size class, the split threshold and its
+                        provenance (measured vs default), the accuracy
+                        tier's chosen kernel and any free upgrade, fuse
+                        cutoff (A: naive|kahan|dot2|exact), and — given a
+                        deadline D and a lane with Q queued messages —
+                        the admission gate's shed verdict
   accuracy [--n N] [--trials T]
                         error vs condition number (algorithm zoo)
 
@@ -363,7 +370,8 @@ pub fn run(args: &Args) -> Result<(), String> {
                 .policy()
                 .clone()
                 .with_service(batch, window_us)
-                .with_admission(svc_defaults.router_queue_depth, svc_defaults.per_client_inflight);
+                .with_admission(svc_defaults.router_queue_depth, svc_defaults.per_client_inflight)
+                .with_upgrade(svc_defaults.auto_upgrade_accuracy);
             let plan = policy.plan_dot(0, accuracy, total_bytes);
             let kernel = table.select(prec, accuracy, plan.class);
             let fused = crate::engine::plan::batch_exec(table, prec, accuracy, plan.class, batch);
@@ -421,11 +429,42 @@ pub fn run(args: &Args) -> Result<(), String> {
                 }
             }
             println!(
+                "  split min   : {} [{}]",
+                bytes(policy.split_min_bytes as u64),
+                engine.split_min_source()
+            );
+            println!(
                 "  shard route : {} shard(s); fresh requests round-robin (this plan assumed \
                  shard {}), pooled streams execute on their home shard",
                 policy.shards(),
                 plan.shard
             );
+            // the free-upgrade verdict for this request (the tier it is
+            // actually served at under the default service config)
+            let (_, up_ratio) = policy.upgrade_accuracy(accuracy, total_bytes);
+            match up_ratio {
+                Some(r) => println!(
+                    "  accuracy    : naive requested, served at kahan — FREE upgrade \
+                     (measured kahan/naive {r:.2} >= {:.2} for class {}; strictly more \
+                     accurate at measured-equal speed; ServiceConfig::auto_upgrade_accuracy \
+                     disables)",
+                    crate::engine::plan::FREE_UPGRADE_RATIO,
+                    plan.class.name()
+                ),
+                None if accuracy == crate::isa::Accuracy::Naive => println!(
+                    "  accuracy    : naive served as requested ({})",
+                    if policy.calibration.is_none() {
+                        "no calibration profile — run `repro calibrate --write` to enable \
+                         free upgrades"
+                    } else if !policy.auto_upgrade {
+                        "auto-upgrade disabled"
+                    } else {
+                        "measured kahan/naive ratio below the free-upgrade threshold for \
+                         this class"
+                    }
+                ),
+                None => {}
+            }
             // the governance verdict behind the fan-out this plan realizes
             print_ecm_verdict(&policy);
             {
@@ -555,6 +594,97 @@ pub fn run(args: &Args) -> Result<(), String> {
                          while it waits is still shed at serve time",
                         (queued as u64).saturating_mul(est_service_us),
                         policy.lane_depth
+                    ),
+                }
+            }
+        }
+        "calibrate" => {
+            let write = args.flag("write");
+            let path_s = args.opt("path", "");
+            println!("calibrating kernel dispatch (first use only)...");
+            let p = crate::engine::CalibrationProfile::measure();
+            // install so anything else this process plans (engine-info
+            // style follow-ups, the global engine) uses the fresh numbers
+            let _ = crate::engine::install_host_profile(p.clone());
+            let bytes = crate::util::fmt::bytes;
+            println!();
+            println!("calibration profile (schema v{}):", p.version);
+            println!(
+                "  machine      : {} ({} thread(s), {} shard(s))",
+                p.machine, p.threads, p.shards
+            );
+            println!("  load bw      : {:.1} GB/s streaming", p.mem_bw_gbs);
+            println!(
+                "  split fixed  : {:.1} us fan-out + merge per chunked parallel dot",
+                p.split_fixed_us
+            );
+            for (pi, pn) in crate::ecm::governance::PREC_NAMES.iter().enumerate() {
+                let g = p.kernel_gbs[pi];
+                println!(
+                    "  {pn} kernels  : L1 {:.1} / LLC {:.1} / MEM {:.1} GB/s single-core \
+                     (kahan winner)",
+                    g[0], g[1], g[2]
+                );
+            }
+            println!(
+                "  kahan/naive  : L1 {:.2} / LLC {:.2} / MEM {:.2} (>= {:.2} means the \
+                 compensated tier is FREE there — naive requests auto-upgrade)",
+                p.kahan_vs_naive[0],
+                p.kahan_vs_naive[1],
+                p.kahan_vs_naive[2],
+                crate::engine::plan::FREE_UPGRADE_RATIO
+            );
+            println!(
+                "  dot2/naive   : L1 {:.2} / LLC {:.2} / MEM {:.2}",
+                p.dot2_vs_naive[0], p.dot2_vs_naive[1], p.dot2_vs_naive[2]
+            );
+            let topo = crate::engine::topology_cached();
+            let workers: Vec<usize> = topo.nodes.iter().map(|n| n.cpus.len().max(1)).collect();
+            match p.derived_split_min_bytes(&workers) {
+                Some(b) => println!(
+                    "  split min    : {} — measured crossover where the cross-shard \
+                     split's fixed cost amortizes",
+                    bytes(b)
+                ),
+                None => println!(
+                    "  split min    : no measured crossover (single shard or no split \
+                     headroom) — engines keep the built-in {} default",
+                    bytes(crate::engine::DEFAULT_SPLIT_MIN_BYTES as u64)
+                ),
+            }
+            let ww = p.worker_wedge_default_us();
+            if ww > 0 {
+                println!(
+                    "  wedge        : worker {} ms / lane {} ms calibrated defaults \
+                     (projected worst-case chunk service time x {:.0} safety)",
+                    ww / 1000,
+                    p.lane_wedge_default_us() / 1000,
+                    crate::engine::profile::WEDGE_SAFETY_FACTOR
+                );
+            } else {
+                println!("  wedge        : off (no usable throughput figure)");
+            }
+            let dest = if path_s.is_empty() {
+                crate::engine::profile::resolved_path()
+            } else {
+                Some(PathBuf::from(&path_s))
+            };
+            if write || !path_s.is_empty() {
+                let path = dest
+                    .ok_or("profiles disabled (REPRO_PROFILE=off); pass --path P to write")?;
+                p.save(&path)?;
+                println!(
+                    "wrote {} — future starts derive their thresholds from these \
+                     measured numbers",
+                    path.display()
+                );
+            } else {
+                match dest {
+                    Some(d) => {
+                        println!("(dry run — pass --write to persist to {})", d.display())
+                    }
+                    None => println!(
+                        "(profiles disabled via REPRO_PROFILE; pass --path P to write anyway)"
                     ),
                 }
             }

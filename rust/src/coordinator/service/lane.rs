@@ -253,6 +253,9 @@ impl HostRouter {
         }
         let Ok(acc) = self.req_accuracy(a) else { return false };
         let total_bytes = (2 * n * std::mem::size_of::<f32>()) as u64;
+        // plan on the tier the request will actually EXECUTE at (free
+        // upgrades included); speculative, so no upgrade counting here
+        let (acc, _) = self.policy.upgrade_accuracy(acc, total_bytes);
         self.policy.plan_dot(shard, acc, total_bytes).route == DotRoute::Inline
     }
 
@@ -285,6 +288,9 @@ impl HostRouter {
         };
         let acc = self.req_accuracy(accuracy).ok()?;
         let total_bytes = (2 * n * std::mem::size_of::<f32>()) as u64;
+        // window economics are judged at the executed tier — an upgraded
+        // naive run fuses (or not) as kahan (speculative; not counted)
+        let (acc, _) = self.policy.upgrade_accuracy(acc, total_bytes);
         // only inline-class dots ever fuse: a parallel- or split-route
         // request takes the serial path at any batch size, so waiting
         // would be pure added latency
@@ -334,7 +340,11 @@ impl HostRouter {
             }
         }
         self.requests.fetch_add(live.len() as u64, Ordering::Relaxed);
-        // one group per accuracy tier, indexed like the dispatch table
+        // one group per accuracy tier, indexed like the dispatch table.
+        // Grouping keys on the RESOLVED tier — the free-upgrade pass
+        // applies per request here, exactly as on the serial path, so a
+        // request upgrades identically whether or not it coalesced
+        // (batched and single serves stay bit-identical)
         let mut groups: [Vec<DotRequest>; 4] = [Vec::new(), Vec::new(), Vec::new(), Vec::new()];
         for req in live {
             match self.req_accuracy(req.accuracy) {
@@ -359,7 +369,14 @@ impl HostRouter {
                         latency: req.submitted.elapsed(),
                     });
                 }
-                Ok(acc) => groups[acc_index(acc)].push(req),
+                Ok(acc) => {
+                    let total = (2 * req.a.len() * std::mem::size_of::<f32>()) as u64;
+                    let (acc, upgraded) = self.policy.upgrade_accuracy(acc, total);
+                    if upgraded.is_some() {
+                        self.accuracy_upgrades.fetch_add(1, Ordering::Relaxed);
+                    }
+                    groups[acc_index(acc)].push(req)
+                }
             }
         }
         for (acc, mut group) in Accuracy::ALL.into_iter().zip(groups) {
@@ -376,10 +393,12 @@ impl HostRouter {
     fn serve_req_chunk(&self, s: usize, acc: Accuracy, chunk: Vec<DotRequest>) {
         if chunk.len() == 1 {
             // mirror of the Msg::Req single path, minus the re-validation
+            // (the tier was resolved — upgrades included — at grouping);
+            // the deadline rides into the planner exactly as it does there
             let req = &chunk[0];
             let started = Instant::now();
-            let value = self.execute(s, req.accuracy, false, |a| {
-                self.engine.dot_on_f32(s, a, &req.a, &req.b)
+            let value = self.execute_resolved(s, acc, false, |a| {
+                self.engine.dot_on_deadline_f32(s, a, req.deadline_us, &req.a, &req.b)
             });
             self.note_service(s, started, 1);
             if value.is_err() {
@@ -426,11 +445,12 @@ impl HostRouter {
             }
             Err(_) => {
                 // the batch died (a kernel panicked): fall back to
-                // per-request execution so only the culprit errors
+                // per-request execution so only the culprit errors (tier
+                // already resolved at grouping — no upgrade re-count)
                 self.errors.fetch_add(1, Ordering::Relaxed);
                 for req in chunk {
-                    let value = self.execute(s, req.accuracy, false, |a| {
-                        self.engine.dot_on_f32(s, a, &req.a, &req.b)
+                    let value = self.execute_resolved(s, acc, false, |a| {
+                        self.engine.dot_on_deadline_f32(s, a, req.deadline_us, &req.a, &req.b)
                     });
                     if value.is_err() {
                         self.errors.fetch_add(1, Ordering::Relaxed);
@@ -453,7 +473,6 @@ impl HostRouter {
     fn serve_pooled_batch(&self, s: usize, msgs: Vec<Msg>) {
         struct Pooled {
             id: u64,
-            accuracy: &'static str,
             sa: HomedSlice<f32>,
             sb: HomedSlice<f32>,
             reply: mpsc::Sender<DotResponse>,
@@ -482,7 +501,17 @@ impl HostRouter {
             let validated: Result<Accuracy, ServiceError> =
                 match (self.req_accuracy(accuracy), &sa, &sb) {
                     (Err(e), _, _) => Err(e),
-                    (Ok(acc), Some(sa), Some(sb)) if sa.len() == sb.len() => Ok(acc),
+                    (Ok(acc), Some(sa), Some(sb)) if sa.len() == sb.len() => {
+                        // resolved tier keys the group (see the fresh-batch
+                        // path): the free-upgrade pass applies per request,
+                        // identically to its serial serve
+                        let total = (2 * sa.len() * std::mem::size_of::<f32>()) as u64;
+                        let (acc, upgraded) = self.policy.upgrade_accuracy(acc, total);
+                        if upgraded.is_some() {
+                            self.accuracy_upgrades.fetch_add(1, Ordering::Relaxed);
+                        }
+                        Ok(acc)
+                    }
                     (Ok(_), Some(sa), Some(sb)) => {
                         Err(ServiceError::LengthMismatch { a: sa.len(), b: sb.len() })
                     }
@@ -506,7 +535,6 @@ impl HostRouter {
             };
             groups[acc_index(acc)].push(Pooled {
                 id,
-                accuracy,
                 sa: sa.expect("validated"),
                 sb: sb.expect("validated"),
                 reply,
@@ -520,7 +548,7 @@ impl HostRouter {
                 if chunk.len() == 1 {
                     let p = &chunk[0];
                     let started = Instant::now();
-                    let value = self.execute(s, p.accuracy, true, |a| {
+                    let value = self.execute_resolved(s, acc, true, |a| {
                         self.engine.dot_homed_f32(a, &p.sa, &p.sb)
                     });
                     self.note_service(s, started, 1);
@@ -567,7 +595,7 @@ impl HostRouter {
                     Err(_) => {
                         self.errors.fetch_add(1, Ordering::Relaxed);
                         for p in chunk {
-                            let value = self.execute(s, p.accuracy, true, |a| {
+                            let value = self.execute_resolved(s, acc, true, |a| {
                                 self.engine.dot_homed_f32(a, &p.sa, &p.sb)
                             });
                             if value.is_err() {

@@ -249,6 +249,16 @@ pub struct DotResponse {
 /// rejects it instead of wedging every lane.
 pub const MAX_BATCH_WINDOW_US: u64 = 10_000_000;
 
+/// Sentinel default for [`ServiceConfig::worker_wedge_us`] /
+/// [`ServiceConfig::lane_wedge_us`]: resolve the threshold from the
+/// calibration profile's projected worst-case chunk service time × a
+/// safety factor ([`crate::engine::CalibrationProfile::worker_wedge_default_us`]),
+/// so stall detection is ON by default wherever a profile says what
+/// "stalled" means — and OFF (the safe pre-calibration behavior) where
+/// none does. An explicit `0` still means "off", an explicit value still
+/// wins: the sentinel only marks "the deployment didn't say".
+pub const WEDGE_AUTO: u64 = u64::MAX;
+
 /// Service configuration.
 #[derive(Clone, Debug)]
 pub struct ServiceConfig {
@@ -306,15 +316,40 @@ pub struct ServiceConfig {
     pub supervise_interval_us: u64,
     /// Engine-worker wedge threshold (µs): a worker whose heartbeat shows
     /// it busy on one job longer than this is abandoned and replaced on
-    /// the next sweep. `0` (default) disables wedge detection — dead
-    /// workers are still respawned. A threshold shorter than the longest
-    /// legitimate chunk would shoot healthy workers; leave it 0 unless
-    /// the deployment knows its worst-case chunk time.
+    /// the next sweep. `0` disables wedge detection — dead workers are
+    /// still respawned. The default [`WEDGE_AUTO`] calibrates the
+    /// threshold from the profile's projected worst-case chunk service
+    /// time × a safety factor (off when no profile loaded) — a threshold
+    /// shorter than the longest legitimate chunk would shoot healthy
+    /// workers, which is exactly why it needs a *measured* floor.
     pub worker_wedge_us: u64,
     /// Lane-submitter wedge threshold (µs), same contract as
     /// [`ServiceConfig::worker_wedge_us`] but for the per-shard submitter
-    /// threads. `0` (default) = off; dead submitters are still replaced.
+    /// threads (lanes legitimately run whole batches, so the calibrated
+    /// default is a multiple of the worker one). [`WEDGE_AUTO`] (default)
+    /// = calibrate from the profile; `0` = off; dead submitters are
+    /// always replaced.
     pub lane_wedge_us: u64,
+    /// Calibration-profile path. Empty (default): no lazy measurement —
+    /// the engine still *loads* a profile from `REPRO_PROFILE` (or the
+    /// temp-dir default path) if one exists, but never writes one. Set to
+    /// a path: the service ensures a profile exists there at startup —
+    /// loading it when valid, else running the one-shot measurement pass
+    /// and caching the result — and installs it process-wide before
+    /// serving, so the dispatch table, split threshold, deadline routing
+    /// and wedge defaults all start calibrated (the
+    /// `calib_cold_start_ratio` claim).
+    pub profile_path: String,
+    /// Free accuracy upgrades: when `true` (default) and the calibration
+    /// profile's measured per-class ratio says the compensated kernel
+    /// runs at ≥ 0.95× naive throughput, requests asking for "naive" are
+    /// served at "kahan" — a strictly more accurate answer at measured-
+    /// equal speed (the paper's thesis, enforced at the planner:
+    /// [`crate::engine::PlanPolicy::upgrade_accuracy`]). This is the ONE
+    /// routing decision allowed to change bits, because the caller's
+    /// tier changes; set `false` to always serve exactly the requested
+    /// tier.
+    pub auto_upgrade_accuracy: bool,
     /// Worker respawns a shard may burn through between sweeps before it
     /// is **quarantined**: pulled from fresh routing and split chunk
     /// *assignment* (never chunk geometry — bits are unchanged; see
@@ -343,8 +378,10 @@ impl Default for ServiceConfig {
             per_client_inflight: 0,
             ecm_governance: "on".into(),
             supervise_interval_us: 10_000,
-            worker_wedge_us: 0,
-            lane_wedge_us: 0,
+            worker_wedge_us: WEDGE_AUTO,
+            lane_wedge_us: WEDGE_AUTO,
+            profile_path: String::new(),
+            auto_upgrade_accuracy: true,
             shard_respawn_budget: 8,
             window: Duration::from_millis(2),
             batched_artifact_kahan: "batched_dot_kahan_f32_b8_n16384".into(),
@@ -442,8 +479,15 @@ impl DotService {
     pub fn start(config: ServiceConfig) -> anyhow::Result<(Self, DotClient)> {
         config.validate().map_err(|e| anyhow::anyhow!("service config: {e}"))?;
         match config.backend {
-            Backend::Host => Self::try_start_on(config, ShardedEngine::global())
-                .map_err(|e| anyhow::anyhow!("service config: {e}")),
+            Backend::Host => {
+                // resolve the calibration profile BEFORE the global engine
+                // exists: the dispatch table is seeded and the split
+                // threshold derived at engine construction, so a profile
+                // installed later would arrive too late to matter
+                Self::ensure_profile(&config);
+                Self::try_start_on(config, ShardedEngine::global())
+                    .map_err(|e| anyhow::anyhow!("service config: {e}"))
+            }
             Backend::Pjrt => {
                 let (tx, rx) = mpsc::channel::<Msg>();
                 let (ready_tx, ready_rx) = mpsc::channel::<Result<(), String>>();
@@ -490,6 +534,44 @@ impl DotService {
         }
     }
 
+    /// Lazy profile bootstrap for [`ServiceConfig::profile_path`]: load
+    /// the profile cached there, or — when the file is missing, corrupt,
+    /// or stale (rejections are counted in
+    /// [`ServiceStats::profile_rejected`]) — run the one-shot measurement
+    /// pass and cache the result, then install it process-wide. An empty
+    /// path keeps the load-only default (`REPRO_PROFILE` / temp dir, no
+    /// measurement ever). Idempotent per process: once a profile is
+    /// installed, later calls change nothing.
+    fn ensure_profile(config: &ServiceConfig) {
+        use crate::engine::profile::{install_host_profile, CalibrationProfile};
+        if config.profile_path.is_empty() {
+            return;
+        }
+        let path = std::path::Path::new(&config.profile_path);
+        let p = match CalibrationProfile::load(path) {
+            Ok(p) => p,
+            Err(_) => {
+                let p = CalibrationProfile::measure();
+                // caching is best-effort: an unwritable path costs the
+                // next start its warm seed, never this one its profile
+                let _ = p.save(path);
+                p
+            }
+        };
+        let _ = install_host_profile(p);
+    }
+
+    /// Resolve one wedge threshold: [`WEDGE_AUTO`] becomes the profile's
+    /// calibrated default (off when no profile loaded); explicit values —
+    /// including the 0 = off override — pass through untouched.
+    fn resolve_wedge(configured: u64, calibrated: Option<u64>) -> u64 {
+        if configured == WEDGE_AUTO {
+            calibrated.unwrap_or(0)
+        } else {
+            configured
+        }
+    }
+
     /// [`DotService::start_on`], but an invalid configuration comes back
     /// as a `Result` (what [`DotService::start`] uses under the hood).
     pub fn try_start_on(
@@ -506,7 +588,8 @@ impl DotService {
             .policy()
             .clone()
             .with_service(config.max_batch, config.batch_window_us)
-            .with_admission(config.router_queue_depth, config.per_client_inflight);
+            .with_admission(config.router_queue_depth, config.per_client_inflight)
+            .with_upgrade(config.auto_upgrade_accuracy);
         if config.ecm_governance == "off" {
             policy = policy.ungoverned();
         }
@@ -532,10 +615,22 @@ impl DotService {
             let r = Arc::clone(&router);
             let l = Arc::clone(&lanes);
             let st = Arc::clone(&stopping);
+            // WEDGE_AUTO resolves against the calibration profile here,
+            // at the one place the thresholds are consumed: a measured
+            // worst-case chunk time (× safety factor) is the only sane
+            // default — without one, auto stays off and only explicit
+            // thresholds shoot wedged threads
+            let profile = crate::engine::profile::host_profile();
             let sc = supervise::SuperviseCfg {
                 interval_us: config.supervise_interval_us,
-                worker_wedge_us: config.worker_wedge_us,
-                lane_wedge_us: config.lane_wedge_us,
+                worker_wedge_us: Self::resolve_wedge(
+                    config.worker_wedge_us,
+                    profile.map(|p| p.worker_wedge_default_us()),
+                ),
+                lane_wedge_us: Self::resolve_wedge(
+                    config.lane_wedge_us,
+                    profile.map(|p| p.lane_wedge_default_us()),
+                ),
                 respawn_budget: config.shard_respawn_budget,
             };
             Some(

@@ -51,6 +51,10 @@ pub(super) struct HostRouter {
     pub(super) batched_requests: AtomicU64,
     pub(super) admit_batches: AtomicU64,
     pub(super) errors: AtomicU64,
+    /// naive requests served at kahan because the calibration profile's
+    /// measured class ratio said compensation is free
+    /// ([`PlanPolicy::upgrade_accuracy`]; `ServiceConfig::auto_upgrade_accuracy`)
+    pub(super) accuracy_upgrades: AtomicU64,
     pub(super) release_misses: AtomicU64,
     pub(super) drained: AtomicU64,
     /// dead or wedged lane submitters replaced by the supervisor
@@ -94,6 +98,7 @@ impl HostRouter {
             batched_requests: AtomicU64::new(0),
             admit_batches: AtomicU64::new(0),
             errors: AtomicU64::new(0),
+            accuracy_upgrades: AtomicU64::new(0),
             release_misses: AtomicU64::new(0),
             drained: AtomicU64::new(0),
             lane_restarts: AtomicU64::new(0),
@@ -331,18 +336,31 @@ impl HostRouter {
         &self,
         s: usize,
         accuracy: &'static str,
+        total_bytes: u64,
         pooled: bool,
         dot: impl FnOnce(Accuracy) -> f32,
     ) -> Result<f32, ServiceError> {
-        self.req_accuracy(accuracy).and_then(|acc| {
-            self.engine_calls.fetch_add(1, Ordering::Relaxed);
-            if pooled {
-                self.pooled_calls.fetch_add(1, Ordering::Relaxed);
-            }
-            self.lanes[s].executed.fetch_add(1, Ordering::Relaxed);
-            std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| dot(acc)))
-                .map_err(|e| ServiceError::EnginePanic(panic_message(e)))
-        })
+        self.resolved_accuracy(accuracy, total_bytes)
+            .and_then(|acc| self.execute_resolved(s, acc, pooled, dot))
+    }
+
+    /// [`HostRouter::execute`] for a tier that was already resolved (and
+    /// upgrade-counted) at batch-grouping time — the lane's chunk paths
+    /// use this so a request never counts its upgrade twice.
+    pub(super) fn execute_resolved(
+        &self,
+        s: usize,
+        acc: Accuracy,
+        pooled: bool,
+        dot: impl FnOnce(Accuracy) -> f32,
+    ) -> Result<f32, ServiceError> {
+        self.engine_calls.fetch_add(1, Ordering::Relaxed);
+        if pooled {
+            self.pooled_calls.fetch_add(1, Ordering::Relaxed);
+        }
+        self.lanes[s].executed.fetch_add(1, Ordering::Relaxed);
+        std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| dot(acc)))
+            .map_err(|e| ServiceError::EnginePanic(panic_message(e)))
     }
 
     /// Resolve a request's accuracy string: empty means the service's
@@ -352,6 +370,25 @@ impl HostRouter {
             return Ok(self.default_accuracy);
         }
         parse_accuracy(accuracy)
+    }
+
+    /// [`HostRouter::req_accuracy`] plus the free-upgrade pass: a naive
+    /// request whose size class the calibration profile measured as
+    /// compensation-free (kahan ≥ 0.95× naive) is served at kahan —
+    /// strictly more accurate at measured-equal speed, counted in
+    /// `accuracy_upgrades`. Inert without a calibration or with
+    /// `auto_upgrade_accuracy = false` (the planner gates both).
+    pub(super) fn resolved_accuracy(
+        &self,
+        accuracy: &str,
+        total_bytes: u64,
+    ) -> Result<Accuracy, ServiceError> {
+        let acc = self.req_accuracy(accuracy)?;
+        let (acc, upgraded) = self.policy.upgrade_accuracy(acc, total_bytes);
+        if upgraded.is_some() {
+            self.accuracy_upgrades.fetch_add(1, Ordering::Relaxed);
+        }
+        Ok(acc)
     }
 
     /// Execute one message on lane `s`'s submitter thread.
@@ -388,10 +425,14 @@ impl HostRouter {
                     // Executes on THIS lane's shard (routing already
                     // balanced fresh requests round-robin); the engine
                     // consumes the planner's route and fans very large
-                    // dots out across every shard
+                    // dots out across every shard. The request's deadline
+                    // rides into the planner: a calibrated projection may
+                    // promote the route to Split (bit-identical, counted
+                    // in `ShardedStats::deadline_splits`)
                     let started = Instant::now();
-                    let v = self.execute(s, req.accuracy, false, |acc| {
-                        self.engine.dot_on_f32(s, acc, &req.a, &req.b)
+                    let total = (2 * req.a.len() * std::mem::size_of::<f32>()) as u64;
+                    let v = self.execute(s, req.accuracy, total, false, |acc| {
+                        self.engine.dot_on_deadline_f32(s, acc, req.deadline_us, &req.a, &req.b)
                     });
                     self.note_service(s, started, 1);
                     v
@@ -430,7 +471,8 @@ impl HostRouter {
                 let value = match (sa, sb) {
                     (Some(sa), Some(sb)) if sa.len() == sb.len() => {
                         let started = Instant::now();
-                        let v = self.execute(s, accuracy, true, |acc| {
+                        let total = (2 * sa.len() * std::mem::size_of::<f32>()) as u64;
+                        let v = self.execute(s, accuracy, total, true, |acc| {
                             self.engine.dot_homed_f32(acc, &sa, &sb)
                         });
                         self.note_service(s, started, 1);

@@ -170,6 +170,21 @@ pub struct ServiceStats {
     /// Host backend: admission bursts coalesced into one worker pass
     pub admit_batches: u64,
     pub errors: u64,
+    /// Host backend: naive requests served at kahan because the
+    /// calibration profile measured their size class compensation-free
+    /// (`PlanPolicy::upgrade_accuracy`; 0 without a profile or with
+    /// `ServiceConfig::auto_upgrade_accuracy` off)
+    pub accuracy_upgrades: u64,
+    /// Host backend: dots whose route the planner promoted to Split
+    /// because the calibrated projection said the homed parallel path
+    /// would blow the request's deadline, snapshotted from the backing
+    /// engine ([`crate::engine::ShardedStats::deadline_splits`] —
+    /// engine-level, like the split counts)
+    pub deadline_splits: u64,
+    /// calibration profiles rejected at load (corrupt, stale, or
+    /// host-mismatched) — the process fell back to live calibration
+    /// ([`crate::engine::profile::rejected_count`]; process-global)
+    pub profile_rejected: u64,
     /// Host backend: dots whose fan-out the ECM governance layer capped
     /// below the realized worker count, snapshotted from the backing
     /// engine's counters ([`crate::engine::ShardedStats::capped_requests`]).
@@ -335,6 +350,9 @@ impl HostRouter {
             batched_requests: self.batched_requests.load(Ordering::Relaxed),
             admit_batches: self.admit_batches.load(Ordering::Relaxed),
             errors: self.errors.load(Ordering::Relaxed),
+            accuracy_upgrades: self.accuracy_upgrades.load(Ordering::Relaxed),
+            deadline_splits: est.deadline_splits,
+            profile_rejected: crate::engine::profile::rejected_count(),
             capped_requests: est.capped_requests,
             queue_full_stalls: lanes.iter().map(|l| l.queue_full_stalls).sum(),
             stalled_us: lanes.iter().map(|l| l.stalled_us).sum(),

@@ -27,6 +27,15 @@
 //! *subsets* (concurrency only — never chunk geometry, so capped and
 //! uncapped execution are bit-identical), and `repro plan` /
 //! `repro engine-info` print the verdict.
+//!
+//! Persistence: the verdict itself is re-derived every start (cheap, and
+//! it must track the running host), but the *empirical corrections* the
+//! bench sweep feeds back (`DispatchTable::note_saturation`) are carried
+//! across runs by `engine::profile` — a `repro calibrate --write` run
+//! records the per-(precision, size-class) correction factors, and a
+//! loaded profile seeds them back into the dispatch table at startup, so
+//! a mispredicting model is corrected from the first request, not from
+//! the first completed sweep.
 
 use super::model::{build, EcmModel};
 use crate::isa::{generate, Precision, Simd, Variant};

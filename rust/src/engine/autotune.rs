@@ -26,8 +26,9 @@
 //! Calibration costs ~1 s once; every later `select` is an array index.
 
 use super::pool::BufferPool;
+use super::profile::CalibrationProfile;
 use crate::bench::kernels::batch::{batch_for, BatchKernel, BatchKernelFn};
-use crate::bench::kernels::{registry_static, HostKernel, KernelFn};
+use crate::bench::kernels::{by_name, registry_static, HostKernel, KernelFn};
 use crate::bench::timer::measure_adaptive;
 use crate::isa::{Accuracy, Precision};
 use crate::machine::detect::detect_host_cached;
@@ -394,6 +395,103 @@ impl DispatchTable {
         ((base as f64 * scale).round() as usize).max(1)
     }
 
+    /// The stored saturation correction for one cell as a plain factor
+    /// (1.0 = identity). Read by [`CalibrationProfile::measure`] so a
+    /// `repro calibrate --write` run persists what the bench sweep taught
+    /// this process.
+    pub fn sat_scale(&self, prec: Precision, class: SizeClass) -> f64 {
+        use std::sync::atomic::Ordering;
+        self.sat_scale[prec_index(prec)][class.index()].load(Ordering::Relaxed) as f64 / 1000.0
+    }
+
+    /// Seed the saturation correction for one cell from a persisted
+    /// profile (same clamp as [`DispatchTable::note_saturation`], so a
+    /// corrupt-but-parsable factor cannot collapse or explode the cap).
+    pub fn set_sat_scale(&self, prec: Precision, class: SizeClass, scale: f64) {
+        use std::sync::atomic::Ordering;
+        let clamped = if scale.is_finite() { scale.clamp(0.25, 4.0) } else { 1.0 };
+        self.sat_scale[prec_index(prec)][class.index()]
+            .store((clamped * 1000.0).round() as u32, Ordering::Relaxed);
+    }
+
+    /// Rebuild a dispatch table from a persisted [`CalibrationProfile`]
+    /// instead of re-probing every kernel: winners and fused-batch choices
+    /// resolve by name against the live registry (so a profile can never
+    /// smuggle in a kernel this build does not have), probe cycles carry
+    /// over for reporting and ratio math, and the saturation corrections
+    /// seed from what the profiled run learned. Any mismatch — unknown or
+    /// unavailable kernel, tier/precision confusion, a fused choice that is
+    /// not the winner's twin, or a batch on the memory class — rejects the
+    /// whole profile; the caller falls back to live calibration.
+    pub fn from_profile(p: &CalibrationProfile) -> Result<DispatchTable, String> {
+        let mut rows: Vec<[Choice; 3]> = Vec::with_capacity(2);
+        for (pi, prec) in [Precision::Sp, Precision::Dp].into_iter().enumerate() {
+            let mut per_class: Vec<Choice> = Vec::with_capacity(3);
+            for ci in 0..3 {
+                let mut winners: [Option<HostKernel>; 4] = [None; 4];
+                let mut probe = [0.0f64; 4];
+                let mut batches = [BatchChoice::unmeasured(); 4];
+                for acc in Accuracy::ALL {
+                    let ti = acc_index(acc);
+                    let name = p.winners[pi][ci][ti].as_str();
+                    let k = by_name(name)
+                        .ok_or_else(|| format!("profile winner '{name}' is not in the registry"))?;
+                    if !k.available || k.prec != prec || k.accuracy != acc {
+                        return Err(format!(
+                            "profile winner '{name}' does not fit cell ({} {} {})",
+                            prec.name(),
+                            SizeClass::ALL[ci].name(),
+                            acc.name()
+                        ));
+                    }
+                    winners[ti] = Some(k);
+                    let cy = p.probe_cy[pi][ci][ti];
+                    probe[ti] = if cy.is_finite() && cy >= 0.0 { cy } else { 0.0 };
+                    let bname = p.batches[pi][ci][ti].as_str();
+                    if !bname.is_empty() {
+                        if ci >= SizeClass::Mem.index() {
+                            return Err(format!(
+                                "profile batches the memory class ('{bname}')"
+                            ));
+                        }
+                        let bk = batch_for(k.name)
+                            .filter(|bk| bk.name == bname && bk.available)
+                            .ok_or_else(|| {
+                                format!("profile batch '{bname}' is not the twin of '{name}'")
+                            })?;
+                        batches[ti] = BatchChoice { fused: Some(bk), probe_cy: (0.0, 0.0) };
+                    }
+                }
+                per_class.push(Choice {
+                    winners: winners.map(|o| o.expect("every tier resolved above")),
+                    probe,
+                    batches,
+                });
+            }
+            // same monotone cutoff as live calibration: a profile edited to
+            // batch LLC but not L1 degrades to the safe serial choice
+            let mut on = [true; 4];
+            for c in per_class.iter_mut() {
+                for (t, keep) in on.iter_mut().enumerate() {
+                    if !*keep {
+                        c.batches[t].fused = None;
+                    }
+                    *keep &= c.batches[t].fused.is_some();
+                }
+            }
+            rows.push([per_class[0], per_class[1], per_class[2]]);
+        }
+        let t = DispatchTable {
+            choices: [rows[0], rows[1]],
+            probe_bytes: default_probe_bytes(),
+            sat_scale: std::array::from_fn(|_| {
+                std::array::from_fn(|_| std::sync::atomic::AtomicU32::new(1000))
+            }),
+        };
+        p.seed_saturation(&t);
+        Ok(t)
+    }
+
     pub fn choice(&self, prec: Precision, class: SizeClass) -> &Choice {
         &self.choices[prec_index(prec)][class.index()]
     }
@@ -467,10 +565,22 @@ fn default_probe_bytes() -> [u64; 3] {
     [l1, llc_full / 2, mem]
 }
 
-/// The process-wide dispatch table, calibrated on first use.
+/// The process-wide dispatch table: seeded from the persisted calibration
+/// profile when one loaded ([`super::profile::host_profile`]), else
+/// calibrated live on first use. A profile that fails to resolve against
+/// this build's registry counts as rejected and falls back to live
+/// calibration — a stale file can cost the seeding win, never correctness.
 pub fn dispatch() -> &'static DispatchTable {
     static TABLE: OnceLock<DispatchTable> = OnceLock::new();
-    TABLE.get_or_init(|| DispatchTable::calibrate(default_probe_bytes(), 3))
+    TABLE.get_or_init(|| {
+        if let Some(p) = super::profile::host_profile() {
+            match DispatchTable::from_profile(p) {
+                Ok(t) => return t,
+                Err(_) => super::profile::note_rejected(),
+            }
+        }
+        DispatchTable::calibrate(default_probe_bytes(), 3)
+    })
 }
 
 #[cfg(test)]
@@ -549,6 +659,79 @@ mod tests {
         // back within tolerance: reset to identity
         t.note_saturation(Precision::Sp, SizeClass::Mem, 4, 4, 0.25);
         assert_eq!(t.corrected_sat(Precision::Sp, SizeClass::Mem, 4), 4);
+    }
+
+    /// Profile seeding round-trips the table: a profile written from a
+    /// calibrated table rebuilds one with the same winners, batch choices,
+    /// probe cycles, and saturation corrections — and tampered profiles
+    /// (unknown winner, wrong tier, MEM-class batch) are rejected whole.
+    #[test]
+    fn from_profile_round_trips_and_rejects_tampering() {
+        let live = DispatchTable::calibrate([8 << 10, 64 << 10, 256 << 10], 1);
+        live.note_saturation(Precision::Sp, SizeClass::Mem, 4, 8, 0.25);
+
+        let mut p = CalibrationProfile {
+            version: 1,
+            machine: detect_host_cached().name.to_string(),
+            threads: 4,
+            shards: 1,
+            mem_bw_gbs: 40.0,
+            split_fixed_us: 10.0,
+            kernel_gbs: [[10.0; 3]; 2],
+            sat_cores: [[0; 3]; 2],
+            sat_scale: [[1.0; 3]; 2],
+            kahan_vs_naive: [0.5, 0.9, 0.99],
+            dot2_vs_naive: [0.4, 0.8, 0.97],
+            winners: Default::default(),
+            probe_cy: [[[0.0; 4]; 3]; 2],
+            batches: Default::default(),
+        };
+        for (pi, prec) in [Precision::Sp, Precision::Dp].into_iter().enumerate() {
+            for (ci, class) in SizeClass::ALL.into_iter().enumerate() {
+                let c = live.choice(prec, class);
+                p.sat_scale[pi][ci] = live.sat_scale(prec, class);
+                for acc in Accuracy::ALL {
+                    let ti = acc_index(acc);
+                    p.winners[pi][ci][ti] = c.winner(acc).name.to_string();
+                    p.probe_cy[pi][ci][ti] = c.probe_cy(acc);
+                    p.batches[pi][ci][ti] =
+                        c.batch(acc).fused.map(|b| b.name.to_string()).unwrap_or_default();
+                }
+            }
+        }
+
+        let seeded = DispatchTable::from_profile(&p).expect("faithful profile must seed");
+        for prec in [Precision::Sp, Precision::Dp] {
+            for class in SizeClass::ALL {
+                for acc in Accuracy::ALL {
+                    assert_eq!(
+                        seeded.select(prec, acc, class).name,
+                        live.select(prec, acc, class).name
+                    );
+                    assert_eq!(
+                        seeded.select_batch(prec, acc, class).map(|b| b.name),
+                        live.select_batch(prec, acc, class).map(|b| b.name)
+                    );
+                    assert_eq!(
+                        seeded.choice(prec, class).probe_cy(acc),
+                        live.choice(prec, class).probe_cy(acc)
+                    );
+                }
+                assert_eq!(seeded.sat_scale(prec, class), live.sat_scale(prec, class));
+            }
+        }
+        assert_eq!(seeded.corrected_sat(Precision::Sp, SizeClass::Mem, 4), 8);
+
+        // tampering rejects the whole profile, never panics
+        let mut bad = p.clone();
+        bad.winners[0][0][0] = "no_such_kernel".to_string();
+        assert!(DispatchTable::from_profile(&bad).is_err());
+        let mut bad = p.clone();
+        bad.winners[0][0][0] = p.winners[0][0][1].clone(); // kahan in naive slot
+        assert!(DispatchTable::from_profile(&bad).is_err());
+        let mut bad = p.clone();
+        bad.batches[0][2][1] = "dot_f32_batch".to_string(); // MEM class batch
+        assert!(DispatchTable::from_profile(&bad).is_err());
     }
 
     /// Batched-choice invariants: a kept fused kernel is always the twin of

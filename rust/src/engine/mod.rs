@@ -41,6 +41,22 @@
 //!   says the fused kernel wins at the projected batch size
 //!        │
 //!        ▼
+//!   ┌─ engine::profile — persisted measured calibration ────────────────┐
+//!   │ a versioned on-disk CalibrationProfile (REPRO_PROFILE /           │
+//!   │ ServiceConfig::profile_path; `repro calibrate --write`) carries   │
+//!   │ what a measurement pass learned: per-(precision, size class)      │
+//!   │ kernel throughput and winners, saturation corrections, the split  │
+//!   │ path's fixed fan-out cost, and the measured kahan/dot2-vs-naive   │
+//!   │ ratios. On load it seeds the DispatchTable (cold start ≈ warmed   │
+//!   │ up), derives split_min_bytes from the measured crossover, arms    │
+//!   │ deadline-aware routing and free accuracy upgrades, and calibrates │
+//!   │ the supervision wedge thresholds. Corrupt/stale/mismatched files  │
+//!   │ are rejected whole (profile_rejected stat) and every default      │
+//!   │ stands — a profile can tune thresholds and concurrency, NEVER     │
+//!   │ chunk geometry or bits ("# Calibration" in the plan module)       │
+//!   └───────────────────────────────────────────────────────────────────┘
+//!        │
+//!        ▼
 //!   ┌─ engine::plan — the PURE planning layer ──────────────────────────┐
 //!   │ PlanPolicy (autotuned DispatchTable + topology + ServiceConfig)   │
 //!   │ compiles every request into a DotPlan: inline / one-shard         │
@@ -48,7 +64,12 @@
 //!   │ compensated merge. Every threshold below is a planner call. The   │
 //!   │ plan carries the requested ACCURACY tier (naive / kahan / dot2 /  │
 //!   │ exact) — the dispatch table holds one winner per tier per cell,   │
-//!   │ and exact always plans Inline (scalar expansion, no SIMD claim)   │
+//!   │ and exact always plans Inline (scalar expansion, no SIMD claim).  │
+//!   │ With a calibration armed it also projects service times: a        │
+//!   │ deadline request whose parallel projection blows the deadline     │
+//!   │ while the split projection fits is PROMOTED to Split (same chunk  │
+//!   │ geometry — bit-identical), and a naive request whose measured     │
+//!   │ class ratio says compensation is free upgrades to kahan           │
 //!   └───────────────────────────────────────────────────────────────────┘
 //!        │
 //!        ▼
@@ -128,6 +149,10 @@
 //! * [`plan`] — the pure request planner: one [`PlanPolicy`] holds every
 //!   route/batch/split threshold, and every layer consumes its compiled
 //!   [`DotPlan`]s instead of re-deriving decisions.
+//! * [`profile`] — the persistent measured-calibration layer: a versioned
+//!   on-disk [`CalibrationProfile`] seeds the dispatch table, derives the
+//!   split threshold from the measured crossover, and arms the planner's
+//!   deadline/upgrade projections ("# Calibration" in [`plan`]).
 //! * [`topology`] — NUMA domain discovery (`/sys/devices/system/node`,
 //!   with a single-node fallback when sysfs is absent).
 //! * [`sharded`] — the multi-socket tier: [`ShardedEngine`] owns one
@@ -182,17 +207,19 @@ pub mod autotune;
 pub mod parallel;
 pub mod plan;
 pub mod pool;
+pub mod profile;
 pub mod sharded;
 pub mod topology;
 
 pub use autotune::{dispatch, BatchChoice, Choice, DispatchTable, SizeClass};
-pub use plan::{DotPlan, DotRoute, PlanPolicy};
+pub use plan::{DotPlan, DotRoute, PlanCalibration, PlanPolicy};
 pub use parallel::{
     chunk_ranges, parallel_dot_capped_f32, parallel_dot_capped_f64, parallel_dot_f32,
     parallel_dot_f64, WorkerPool,
 };
 pub use pool::{BufferPool, PoolStats, PooledSlice};
-pub use sharded::{HomedSlice, ShardedConfig, ShardedEngine, ShardedStats};
+pub use profile::{host_profile, install_host_profile, CalibrationProfile};
+pub use sharded::{HomedSlice, ShardedConfig, ShardedEngine, ShardedStats, DEFAULT_SPLIT_MIN_BYTES};
 pub use topology::{topology_cached, NumaNode, Topology};
 
 use crate::bench::kernels::KernelFn;

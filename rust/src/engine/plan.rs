@@ -159,6 +159,51 @@
 //!   degraded beats serving nothing); probes reinstate shards as they
 //!   recover.
 //!
+//! # Calibration
+//!
+//! **Measured numbers may change thresholds and routing, never chunk
+//! geometry or bits.** A persisted [`super::profile::CalibrationProfile`]
+//! (measured once per machine, loaded at startup) enters the planner as
+//! an optional [`PlanCalibration`]: projected one-shard and all-shard
+//! bandwidths per `(precision, size class)`, the fixed fan-out cost of a
+//! split, and the measured per-class accuracy-tier throughput ratios.
+//! What it drives:
+//!
+//! * `split_min_bytes` — `ShardedEngine::from_topology` derives the
+//!   route threshold from the measured crossover
+//!   (`CalibrationProfile::derived_split_min_bytes`) when the config
+//!   leaves it 0 (= auto); without a profile the documented 4 MiB
+//!   default (`sharded::DEFAULT_SPLIT_MIN_BYTES`) stands. A threshold
+//!   only moves the Inline/Parallel/Split boundary — within any route
+//!   the result is bit-identical, so calibrated and default policies
+//!   agree bit-for-bit on every request (property-tested across
+//!   no-profile / synthetic-low / synthetic-high policies in
+//!   `rust/tests/test_profile.rs`).
+//! * **Deadline-aware routing** — [`PlanPolicy::plan_dot_deadline`]:
+//!   when a request carries a deadline, the projected one-shard time
+//!   blows it, and the projected split time fits, the plan is promoted
+//!   Parallel → Split (`DotPlan::deadline_promoted`). Promotion is
+//!   gated on bit-safety: it fires only when
+//!   [`PlanPolicy::split_chunk_count`] equals the executing shard's
+//!   worker count, so the split executes the SAME chunk geometry, the
+//!   same total-size-selected kernel, and the same compensated
+//!   chunk-order merge the one-shard path would have — routing changes,
+//!   bits cannot (the quarantine argument, applied to promotion).
+//! * **Free accuracy upgrades** — [`PlanPolicy::upgrade_accuracy`]:
+//!   when the measured `kahan_vs_naive` ratio for the request's class is
+//!   ≥ [`FREE_UPGRADE_RATIO`], a Naive request is served Kahan (more
+//!   accurate at measured-zero cost; the paper's thesis applied as
+//!   policy). Opt-out via `ServiceConfig::auto_upgrade_accuracy`; the
+//!   upgrade intentionally changes the *tier* — bit-identity invariants
+//!   are per tier and unaffected.
+//! * Autotuner seeding — `DispatchTable::from_profile` starts the
+//!   process on the persisted winners and saturation corrections
+//!   instead of from zero (kernel *selection* and concurrency only).
+//!
+//! A corrupt, stale, or version-mismatched profile is rejected whole
+//! (counted in `profile_rejected`), leaving every default in place —
+//! calibration can tune this planner, never break its contracts.
+//!
 //! # Who consumes plans
 //!
 //! * `DotEngine` — [`serves_inline`] is the inline-vs-parallel predicate
@@ -222,7 +267,72 @@ pub struct DotPlan {
     /// against, carried so every execution layer serves the tier the
     /// request asked for
     pub accuracy: Accuracy,
+    /// deadline-aware routing promoted this plan Parallel → Split (see
+    /// the module's "# Calibration" section): the projected one-shard
+    /// time blew the request's deadline, the split projection fit, and
+    /// the geometry gate held — so the promotion changed the route but
+    /// cannot change the bits
+    pub deadline_promoted: bool,
 }
+
+/// The planner-facing slice of a measured [`super::profile::CalibrationProfile`]:
+/// projected service bandwidths plus the measured accuracy-tier ratios.
+/// Pure data — installed via [`PlanPolicy::with_calibration`], consumed
+/// by [`PlanPolicy::plan_dot_deadline`] and
+/// [`PlanPolicy::upgrade_accuracy`].
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct PlanCalibration {
+    /// projected service bandwidth of one (the widest) shard, GB/s,
+    /// `[precision][size class]`; 0 = no measurement for the cell
+    pub shard_gbs: [[f64; 3]; 2],
+    /// projected bandwidth of a split across every shard, GB/s,
+    /// `[precision][size class]` (saturation-capped, so it may equal
+    /// `shard_gbs` where the bus is the ceiling)
+    pub split_gbs: [[f64; 3]; 2],
+    /// fixed fan-out + compensated-merge cost a split pays, µs
+    pub split_fixed_us: f64,
+    /// measured f32 kahan/naive throughput ratio per size class
+    pub kahan_vs_naive: [f64; 3],
+    /// measured f32 dot2/naive throughput ratio per size class
+    pub dot2_vs_naive: [f64; 3],
+}
+
+impl PlanCalibration {
+    /// Projected one-shard (chunked-parallel) service time, µs. `None`
+    /// when the profile has no throughput figure for the cell.
+    pub fn projected_parallel_us(
+        &self,
+        prec: Precision,
+        class: SizeClass,
+        total_bytes: u64,
+    ) -> Option<f64> {
+        let gbs = self.shard_gbs[super::autotune::prec_index(prec)][class.index()];
+        // GB/s → bytes/µs is ×1000
+        if gbs > 0.0 { Some(total_bytes as f64 / (gbs * 1000.0)) } else { None }
+    }
+
+    /// Projected cross-shard split service time (bandwidth share plus the
+    /// measured fixed fan-out cost), µs.
+    pub fn projected_split_us(
+        &self,
+        prec: Precision,
+        class: SizeClass,
+        total_bytes: u64,
+    ) -> Option<f64> {
+        let gbs = self.split_gbs[super::autotune::prec_index(prec)][class.index()];
+        if gbs > 0.0 {
+            Some(total_bytes as f64 / (gbs * 1000.0) + self.split_fixed_us.max(0.0))
+        } else {
+            None
+        }
+    }
+}
+
+/// A measured `kahan/naive` throughput ratio at or above this means the
+/// compensated tier is free on this machine and class — the auto-upgrade
+/// predicate's threshold (the paper's "Kahan costs nothing once
+/// memory-bound" thesis, with 5% measurement slack).
+pub const FREE_UPGRADE_RATIO: f64 = 0.95;
 
 /// The inline-vs-parallel predicate, shared verbatim by the engine's
 /// serial and batch paths: a dot whose total working set (both streams)
@@ -295,6 +405,15 @@ pub struct PlanPolicy {
     /// (default) = unlimited — [`PlanPolicy::admits_client`] admits
     /// everything, the pre-fairness behavior.
     pub per_client_inflight: usize,
+    /// measured-calibration projections (see "# Calibration"); `None`
+    /// (default) = no profile — deadline-aware routing and free upgrades
+    /// are inert and every threshold keeps its built-in default
+    pub calibration: Option<PlanCalibration>,
+    /// serve Naive requests at the Kahan tier where the measured ratio
+    /// says compensation is free (`ServiceConfig::auto_upgrade_accuracy`).
+    /// Defaults off at the planner layer — only the service opts in, so
+    /// raw engine paths never reinterpret a tier.
+    pub auto_upgrade: bool,
 }
 
 /// Why a request was shed at admission instead of queued: the evidence
@@ -342,7 +461,23 @@ impl PlanPolicy {
             worker_caps: [[usize::MAX; 3]; 2],
             lane_depth: usize::MAX,
             per_client_inflight: 0,
+            calibration: None,
+            auto_upgrade: false,
         }
+    }
+
+    /// Install measured-calibration projections (see "# Calibration").
+    pub fn with_calibration(mut self, calibration: PlanCalibration) -> PlanPolicy {
+        self.calibration = Some(calibration);
+        self
+    }
+
+    /// Enable/disable the free naive→kahan upgrade
+    /// ([`PlanPolicy::upgrade_accuracy`]); effective only with a
+    /// calibration installed.
+    pub fn with_upgrade(mut self, auto_upgrade: bool) -> PlanPolicy {
+        self.auto_upgrade = auto_upgrade;
+        self
     }
 
     /// Extend an engine policy with the service's batching knobs.
@@ -437,7 +572,78 @@ impl PlanPolicy {
         } else {
             DotRoute::Parallel
         };
-        DotPlan { route, shard, class: SizeClass::of(total_bytes), total_bytes, accuracy }
+        DotPlan {
+            route,
+            shard,
+            class: SizeClass::of(total_bytes),
+            total_bytes,
+            accuracy,
+            deadline_promoted: false,
+        }
+    }
+
+    /// [`PlanPolicy::plan_dot`] for a request that carries a deadline:
+    /// identical, except that a Parallel plan whose projected one-shard
+    /// time blows the deadline while the projected split time fits is
+    /// promoted to [`DotRoute::Split`] (see "# Calibration"). The
+    /// promotion is gated on bit-safety — it fires only when the split's
+    /// global chunk count equals the executing shard's worker count, so
+    /// the promoted route runs the same chunk geometry, the same
+    /// total-size-selected kernel, and the same compensated chunk-order
+    /// merge the un-promoted route would have. `deadline_us == 0` (no
+    /// deadline), no calibration, or a failed gate all reduce to
+    /// `plan_dot` exactly.
+    pub fn plan_dot_deadline(
+        &self,
+        preferred_shard: usize,
+        accuracy: Accuracy,
+        prec: Precision,
+        total_bytes: u64,
+        deadline_us: u64,
+    ) -> DotPlan {
+        let mut plan = self.plan_dot(preferred_shard, accuracy, total_bytes);
+        if deadline_us == 0 || plan.route != DotRoute::Parallel {
+            return plan;
+        }
+        // bit-safety gate: the promoted split must reproduce the
+        // one-shard chunk geometry exactly
+        if self.split_chunk_count() != self.shard_workers[plan.shard] {
+            return plan;
+        }
+        let Some(c) = self.calibration else { return plan };
+        let (Some(par), Some(spl)) = (
+            c.projected_parallel_us(prec, plan.class, total_bytes),
+            c.projected_split_us(prec, plan.class, total_bytes),
+        ) else {
+            return plan;
+        };
+        let deadline = deadline_us as f64;
+        if par > deadline && spl <= deadline && spl < par {
+            plan.route = DotRoute::Split;
+            plan.deadline_promoted = true;
+        }
+        plan
+    }
+
+    /// THE free-upgrade decision (see "# Calibration"): the tier a
+    /// request is actually served at, plus the measured ratio that
+    /// justified an upgrade. Only `Naive` can upgrade (to `Kahan`), only
+    /// when upgrades are enabled AND a calibration is installed AND the
+    /// measured `kahan_vs_naive` ratio for the request's size class is at
+    /// least [`FREE_UPGRADE_RATIO`] — compensation measured free on this
+    /// machine. Every other tier passes through untouched: an explicit
+    /// Kahan/Dot2/Exact request is already getting what it asked for.
+    pub fn upgrade_accuracy(&self, accuracy: Accuracy, total_bytes: u64) -> (Accuracy, Option<f64>) {
+        if accuracy != Accuracy::Naive || !self.auto_upgrade {
+            return (accuracy, None);
+        }
+        let Some(c) = self.calibration else { return (accuracy, None) };
+        let ratio = c.kahan_vs_naive[SizeClass::of(total_bytes).index()];
+        if ratio >= FREE_UPGRADE_RATIO {
+            (Accuracy::Kahan, Some(ratio))
+        } else {
+            (accuracy, None)
+        }
     }
 
     /// Global chunk count for a split dot (the explicit override, or one
@@ -771,6 +977,104 @@ mod tests {
         let full = p.shed(1_000_000, 8, 0).expect("full lane");
         assert!(full.queue_full);
         assert_eq!(full.retry_after_us, 1);
+    }
+
+    /// Synthetic calibration: a slow single shard (1 GB/s) and a fast
+    /// split (10 GB/s) with no fixed cost, in every cell — route
+    /// projections are then size-only, independent of the host's caches.
+    fn calib(shard_gbs: f64, split_gbs: f64, fixed_us: f64) -> PlanCalibration {
+        PlanCalibration {
+            shard_gbs: [[shard_gbs; 3]; 2],
+            split_gbs: [[split_gbs; 3]; 2],
+            split_fixed_us: fixed_us,
+            kahan_vs_naive: [0.5, 0.9, 0.99],
+            dot2_vs_naive: [0.4, 0.8, 0.97],
+        }
+    }
+
+    #[test]
+    fn deadline_promotion_requires_calibration_deadline_and_fit() {
+        // chunks pinned to the shard's worker count: the bit-safety gate holds
+        let p = PlanPolicy::new(256 * 1024, 4 << 20, 2, vec![2, 2])
+            .with_calibration(calib(1.0, 10.0, 0.0));
+        let bytes = 1 << 20; // Parallel-routed; par ≈ 1049 µs, split ≈ 105 µs
+        let base = p.plan_dot(0, Accuracy::Kahan, bytes);
+        assert_eq!(base.route, DotRoute::Parallel);
+        assert!(!base.deadline_promoted);
+        // no deadline: identical to plan_dot
+        let nod = p.plan_dot_deadline(0, Accuracy::Kahan, Precision::Sp, bytes, 0);
+        assert_eq!(nod.route, DotRoute::Parallel);
+        // deadline between the projections: promoted
+        let hit = p.plan_dot_deadline(0, Accuracy::Kahan, Precision::Sp, bytes, 500);
+        assert_eq!(hit.route, DotRoute::Split);
+        assert!(hit.deadline_promoted);
+        assert_eq!(hit.shard, 0, "promotion keeps the plan's shard");
+        // generous deadline: the one-shard path makes it, no promotion
+        let fits = p.plan_dot_deadline(0, Accuracy::Kahan, Precision::Sp, bytes, 2_000);
+        assert_eq!(fits.route, DotRoute::Parallel);
+        // hopeless deadline: even the split projection blows it — serve
+        // the normal route rather than burn every shard on a lost cause
+        let lost = p.plan_dot_deadline(0, Accuracy::Kahan, Precision::Sp, bytes, 50);
+        assert_eq!(lost.route, DotRoute::Parallel);
+        // no calibration: inert
+        let bare = PlanPolicy::new(256 * 1024, 4 << 20, 2, vec![2, 2]);
+        assert_eq!(
+            bare.plan_dot_deadline(0, Accuracy::Kahan, Precision::Sp, bytes, 500).route,
+            DotRoute::Parallel
+        );
+        // inline and split routes never change
+        let small = p.plan_dot_deadline(0, Accuracy::Kahan, Precision::Sp, 1024, 1);
+        assert_eq!(small.route, DotRoute::Inline);
+        let big = p.plan_dot_deadline(0, Accuracy::Kahan, Precision::Sp, 8 << 20, 1_000_000);
+        assert_eq!(big.route, DotRoute::Split);
+        assert!(!big.deadline_promoted, "a size-routed split is not a promotion");
+    }
+
+    #[test]
+    fn deadline_promotion_gates_on_chunk_geometry() {
+        // split_chunks 0 → chunk count 4 ≠ the shard's 2 workers: the
+        // promoted split would NOT reproduce the one-shard geometry, so
+        // the gate must hold the route even when the projections say go
+        let p = PlanPolicy::new(256 * 1024, 4 << 20, 0, vec![2, 2])
+            .with_calibration(calib(1.0, 10.0, 0.0));
+        let plan = p.plan_dot_deadline(0, Accuracy::Kahan, Precision::Sp, 1 << 20, 500);
+        assert_eq!(plan.route, DotRoute::Parallel, "geometry gate must veto promotion");
+        assert!(!plan.deadline_promoted);
+    }
+
+    #[test]
+    fn upgrade_fires_only_for_naive_with_a_free_measured_ratio() {
+        let p = PlanPolicy::new(256 * 1024, 4 << 20, 0, vec![2, 2])
+            .with_calibration(calib(1.0, 10.0, 0.0))
+            .with_upgrade(true);
+        // the synthetic ratios: L1 0.5 (costly), LLC 0.9, MEM 0.99 (free)
+        // — find a byte size per class via SizeClass::of's own boundaries
+        let mut by_class = [None::<u64>; 3];
+        for shift in 6..30u32 {
+            let b = 1u64 << shift;
+            let ci = SizeClass::of(b).index();
+            by_class[ci].get_or_insert(b);
+        }
+        let mem_bytes = by_class[2].expect("some size classifies MEM");
+        let (acc, ratio) = p.upgrade_accuracy(Accuracy::Naive, mem_bytes);
+        assert_eq!(acc, Accuracy::Kahan, "MEM ratio 0.99 ≥ 0.95: free upgrade");
+        assert!((ratio.unwrap() - 0.99).abs() < 1e-9);
+        if let Some(l1_bytes) = by_class[0] {
+            let (acc, ratio) = p.upgrade_accuracy(Accuracy::Naive, l1_bytes);
+            assert_eq!(acc, Accuracy::Naive, "L1 ratio 0.5 < 0.95: no upgrade");
+            assert!(ratio.is_none());
+        }
+        // non-naive tiers always pass through
+        for tier in [Accuracy::Kahan, Accuracy::Dot2, Accuracy::Exact] {
+            assert_eq!(p.upgrade_accuracy(tier, mem_bytes), (tier, None));
+        }
+        // disabled, or no calibration: inert
+        assert_eq!(
+            p.clone().with_upgrade(false).upgrade_accuracy(Accuracy::Naive, mem_bytes),
+            (Accuracy::Naive, None)
+        );
+        let bare = PlanPolicy::new(256 * 1024, 4 << 20, 0, vec![2, 2]).with_upgrade(true);
+        assert_eq!(bare.upgrade_accuracy(Accuracy::Naive, mem_bytes), (Accuracy::Naive, None));
     }
 
     #[test]

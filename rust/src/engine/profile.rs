@@ -1,0 +1,839 @@
+//! Persistent measured-calibration profile: the numbers the planner
+//! routes on, measured once and carried across process starts.
+//!
+//! The source paper's method is to replace guessed thresholds with
+//! *measured* machine characteristics — and those characteristics shift
+//! per host generation (Hofmann et al. 2016), so constants baked in for
+//! one machine are wrong on the next. This module is where the measured
+//! numbers live between runs:
+//!
+//! * [`CalibrationProfile::measure`] snapshots a one-shot calibration
+//!   pass: per-(precision, size-class) kernel throughput from the
+//!   autotuner's probe cycles, the ECM verdict's saturation cores plus
+//!   the live observed-saturation corrections, the measured per-class
+//!   accuracy-tier throughput ratios (`kahan_vs_naive`, `dot2_vs_naive`),
+//!   the streaming load bandwidth, and the fixed fan-out/merge cost of a
+//!   chunked parallel dot (`split_fixed_us`).
+//! * The profile serializes to versioned flat-key JSON (hand-rolled like
+//!   the BENCH artifacts — no serde dependency) at a configurable path:
+//!   `REPRO_PROFILE` env var, `ServiceConfig::profile_path`, or the
+//!   default `$TMPDIR/repro_calibration.json`. `repro calibrate --write`
+//!   persists it; the engine loads it on first use.
+//! * Consumers: `ShardedEngine::from_topology` derives `split_min_bytes`
+//!   from the measured crossover ([`CalibrationProfile::derived_split_min_bytes`]),
+//!   `PlanPolicy` takes a [`plan::PlanCalibration`] for deadline-aware
+//!   routing projections and free accuracy upgrades,
+//!   `DispatchTable::from_profile` seeds winners and saturation
+//!   corrections so a cold process starts warmed up, and the service
+//!   derives on-by-default wedge thresholds from the projected chunk
+//!   service time.
+//!
+//! What a profile may change: thresholds (split crossover, wedge
+//! timeouts), routing (deadline promotion), kernel *selection seeding*,
+//! and concurrency caps. What it may never change: chunk geometry or the
+//! bits of any served result — the same invariant as governance and
+//! quarantine, property-tested in `rust/tests/test_profile.rs`.
+//!
+//! Rejection is always clean: a corrupt, stale (different machine), or
+//! version-mismatched profile file is counted in the process-global
+//! [`rejected_count`] (surfaced as `ServiceStats::profile_rejected`) and
+//! every consumer falls back to the built-in defaults. Loading never
+//! panics and never partially applies a profile.
+
+use super::autotune::{acc_index, dispatch, prec_index, DispatchTable, SizeClass};
+use super::plan::PlanCalibration;
+use super::pool::BufferPool;
+use super::topology::topology_cached;
+use crate::bench::timer::measure_adaptive;
+use crate::ecm::governance::{host_verdict, ModelSource};
+use crate::isa::{Accuracy, Precision};
+use crate::machine::detect::{calibrate_tsc_ghz_cached, detect_host_cached};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, OnceLock};
+
+/// Format version — bump when the schema changes; older files are
+/// rejected (counted, never partially parsed).
+pub const PROFILE_VERSION: u64 = 1;
+
+/// Magic `profile` field value identifying our files.
+const PROFILE_MAGIC: &str = "repro_calibration";
+
+/// Default file name under `std::env::temp_dir()` when neither the
+/// `REPRO_PROFILE` env var nor `ServiceConfig::profile_path` names one.
+pub const DEFAULT_PROFILE_FILE: &str = "repro_calibration.json";
+
+/// Derived split thresholds are clamped into this range: below ~512 KiB a
+/// cross-shard split can't beat the in-shard parallel path on any host we
+/// model, above 64 MiB the threshold would never fire in practice.
+pub const SPLIT_MIN_CLAMP: (u64, u64) = (512 << 10, 64 << 20);
+
+/// Safety factor between the projected worst-case chunk service time and
+/// the calibrated wedge threshold — generous enough that scheduling noise
+/// never shoots a healthy worker.
+pub const WEDGE_SAFETY_FACTOR: f64 = 50.0;
+
+/// Floor for a calibrated wedge threshold (µs): never declare a worker
+/// wedged faster than this, whatever the projection says.
+pub const WEDGE_FLOOR_US: u64 = 100_000;
+
+/// Process-global count of profile files rejected as corrupt, stale, or
+/// version-mismatched (surfaced as `ServiceStats::profile_rejected`).
+static REJECTED: AtomicU64 = AtomicU64::new(0);
+
+/// Snapshot of the process-global rejected-profile counter.
+pub fn rejected_count() -> u64 {
+    REJECTED.load(Ordering::Relaxed)
+}
+
+/// Count one rejected profile file.
+pub fn note_rejected() {
+    REJECTED.fetch_add(1, Ordering::Relaxed);
+}
+
+/// A measured machine calibration: everything the planner derives
+/// thresholds from, in one versioned, serializable snapshot.
+///
+/// Index conventions match `engine::autotune`: precision 0 = f32,
+/// 1 = f64; size class 0 = L1, 1 = LLC, 2 = MEM; accuracy tier
+/// 0 = naive, 1 = kahan, 2 = dot2, 3 = exact.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CalibrationProfile {
+    /// schema version ([`PROFILE_VERSION`])
+    pub version: u64,
+    /// identity of the machine the numbers were measured on; a profile
+    /// loaded on a different machine is STALE and rejected
+    pub machine: String,
+    /// total worker threads across all shards at measure time
+    pub threads: usize,
+    /// NUMA shards at measure time
+    pub shards: usize,
+    /// measured streaming load bandwidth, GB/s
+    pub mem_bw_gbs: f64,
+    /// fixed fan-out + compensated-merge cost of one chunked parallel
+    /// dot, µs (the per-request cost a split must amortize)
+    pub split_fixed_us: f64,
+    /// single-core Kahan-winner throughput, GB/s, `[precision][class]`
+    pub kernel_gbs: [[f64; 3]; 2],
+    /// ECM-predicted saturation cores `[precision][class]`; 0 = the
+    /// class does not saturate
+    pub sat_cores: [[u32; 3]; 2],
+    /// observed-saturation correction factors `[precision][class]`
+    /// (the autotuner's `note_saturation` state, persisted)
+    pub sat_scale: [[f64; 3]; 2],
+    /// measured f32 kahan/naive throughput ratio per class (≥ ~0.95
+    /// means compensation is free there — the auto-upgrade predicate)
+    pub kahan_vs_naive: [f64; 3],
+    /// measured f32 dot2/naive throughput ratio per class
+    pub dot2_vs_naive: [f64; 3],
+    /// autotuned winner kernel name `[precision][class][tier]`
+    pub winners: [[[String; 4]; 3]; 2],
+    /// winner probe cycles `[precision][class][tier]` (0 for exact)
+    pub probe_cy: [[[f64; 4]; 3]; 2],
+    /// fused batch kernel name `[precision][class][tier]`; "" = serial
+    pub batches: [[[String; 4]; 3]; 2],
+}
+
+const PREC_SFX: [&str; 2] = ["sp", "dp"];
+const CLASS_SFX: [&str; 3] = ["l1", "llc", "mem"];
+
+impl CalibrationProfile {
+    /// One-shot measurement pass over the running process: reads the
+    /// autotuner's calibrated table (probing it on first use), the
+    /// host's ECM verdict (which already measured the load bandwidth),
+    /// and times the fixed fan-out cost of a chunked dot. Cheap relative
+    /// to first-use calibration itself — everything expensive is shared
+    /// with the caches the serving path warms anyway.
+    pub fn measure() -> CalibrationProfile {
+        let table = dispatch();
+        let verdict = host_verdict();
+        let host = detect_host_cached();
+        let ghz = calibrate_tsc_ghz_cached().max(0.1);
+        let topo = topology_cached();
+        let threads: usize = topo.nodes.iter().map(|n| n.cpus.len().max(1)).sum();
+        let mem_bw_gbs = match verdict.source {
+            ModelSource::Detected { measured_bw_gbs } => measured_bw_gbs,
+            ModelSource::Preset(_) => verdict.machine.memory.load_bw_gbs,
+        };
+
+        let mut kernel_gbs = [[0.0f64; 3]; 2];
+        let mut sat_scale = [[1.0f64; 3]; 2];
+        let mut winners: [[[String; 4]; 3]; 2] = Default::default();
+        let mut probe_cy = [[[0.0f64; 4]; 3]; 2];
+        let mut batches: [[[String; 4]; 3]; 2] = Default::default();
+        let mut kahan_vs_naive = [0.0f64; 3];
+        let mut dot2_vs_naive = [0.0f64; 3];
+        for (pi, prec) in [Precision::Sp, Precision::Dp].into_iter().enumerate() {
+            for (ci, class) in SizeClass::ALL.into_iter().enumerate() {
+                let c = table.choice(prec, class);
+                // probe cycles → GB/s: bytes × GHz / cycles (probe_bytes
+                // is the total working set of one invocation)
+                let kahan_cy = c.probe_cy(Accuracy::Kahan);
+                if kahan_cy > 0.0 {
+                    kernel_gbs[pi][ci] = table.probe_bytes[ci] as f64 * ghz / kahan_cy;
+                }
+                sat_scale[pi][ci] = table.sat_scale(prec, class);
+                for acc in Accuracy::ALL {
+                    let ti = acc_index(acc);
+                    winners[pi][ci][ti] = c.winner(acc).name.to_string();
+                    probe_cy[pi][ci][ti] = c.probe_cy(acc);
+                    batches[pi][ci][ti] =
+                        c.batch(acc).fused.map(|b| b.name.to_string()).unwrap_or_default();
+                }
+                if pi == prec_index(Precision::Sp) {
+                    let naive_cy = c.probe_cy(Accuracy::Naive);
+                    if naive_cy > 0.0 {
+                        if kahan_cy > 0.0 {
+                            kahan_vs_naive[ci] = naive_cy / kahan_cy;
+                        }
+                        let dot2_cy = c.probe_cy(Accuracy::Dot2);
+                        if dot2_cy > 0.0 {
+                            dot2_vs_naive[ci] = naive_cy / dot2_cy;
+                        }
+                    }
+                }
+            }
+        }
+
+        CalibrationProfile {
+            version: PROFILE_VERSION,
+            machine: host.name.to_string(),
+            threads,
+            shards: topo.nodes.len().max(1),
+            mem_bw_gbs,
+            split_fixed_us: measure_split_fixed_us(ghz),
+            kernel_gbs,
+            sat_cores: verdict.sat_cores,
+            sat_scale,
+            kahan_vs_naive,
+            dot2_vs_naive,
+            winners,
+            probe_cy,
+            batches,
+        }
+    }
+
+    /// Serialize to the versioned flat-key JSON format (hand-rolled like
+    /// the BENCH artifacts). Round-trips through [`CalibrationProfile::parse`].
+    pub fn to_json(&self) -> String {
+        let mut s = String::with_capacity(4096);
+        s.push_str("{\n");
+        s.push_str(&format!("  \"profile\": \"{PROFILE_MAGIC}\",\n"));
+        s.push_str(&format!("  \"version\": {},\n", self.version));
+        s.push_str(&format!("  \"machine\": \"{}\",\n", escape(&self.machine)));
+        s.push_str(&format!("  \"threads\": {},\n", self.threads));
+        s.push_str(&format!("  \"shards\": {},\n", self.shards));
+        s.push_str(&format!("  \"mem_bw_gbs\": {},\n", fnum(self.mem_bw_gbs)));
+        s.push_str(&format!("  \"split_fixed_us\": {},\n", fnum(self.split_fixed_us)));
+        for pi in 0..2 {
+            s.push_str(&format!(
+                "  \"kernel_gbs_{}\": {},\n",
+                PREC_SFX[pi],
+                num_array(&self.kernel_gbs[pi])
+            ));
+            s.push_str(&format!(
+                "  \"sat_cores_{}\": [{}, {}, {}],\n",
+                PREC_SFX[pi],
+                self.sat_cores[pi][0],
+                self.sat_cores[pi][1],
+                self.sat_cores[pi][2]
+            ));
+            s.push_str(&format!(
+                "  \"sat_scale_{}\": {},\n",
+                PREC_SFX[pi],
+                num_array(&self.sat_scale[pi])
+            ));
+        }
+        s.push_str(&format!("  \"kahan_vs_naive\": {},\n", num_array(&self.kahan_vs_naive)));
+        s.push_str(&format!("  \"dot2_vs_naive\": {},\n", num_array(&self.dot2_vs_naive)));
+        for pi in 0..2 {
+            for ci in 0..3 {
+                let sfx = format!("{}_{}", PREC_SFX[pi], CLASS_SFX[ci]);
+                s.push_str(&format!(
+                    "  \"winners_{sfx}\": {},\n",
+                    str_array(&self.winners[pi][ci])
+                ));
+                s.push_str(&format!(
+                    "  \"probe_cy_{sfx}\": {},\n",
+                    num_array(&self.probe_cy[pi][ci])
+                ));
+                let last = pi == 1 && ci == 2;
+                s.push_str(&format!(
+                    "  \"batch_{sfx}\": {}{}\n",
+                    str_array(&self.batches[pi][ci]),
+                    if last { "" } else { "," }
+                ));
+            }
+        }
+        s.push_str("}\n");
+        s
+    }
+
+    /// Parse the flat-key JSON format. Structural validation only (shape,
+    /// magic, version, plausibility); host staleness is
+    /// [`CalibrationProfile::validate_for_host`]'s job. Never panics —
+    /// any malformed input is an `Err` describing the first problem.
+    pub fn parse(text: &str) -> Result<CalibrationProfile, String> {
+        if json_str(text, "profile").as_deref() != Some(PROFILE_MAGIC) {
+            return Err("not a repro_calibration profile".to_string());
+        }
+        let version = json_num(text, "version").ok_or("missing version")? as u64;
+        if version != PROFILE_VERSION {
+            return Err(format!(
+                "version mismatch: file v{version}, supported v{PROFILE_VERSION}"
+            ));
+        }
+        let machine = json_str(text, "machine").ok_or("missing machine")?;
+        let threads = json_num(text, "threads").ok_or("missing threads")? as usize;
+        let shards = json_num(text, "shards").ok_or("missing shards")? as usize;
+        if threads == 0 || shards == 0 || threads > 1 << 20 || shards > 1 << 16 {
+            return Err(format!("implausible topology: threads={threads} shards={shards}"));
+        }
+        let mem_bw_gbs = json_num(text, "mem_bw_gbs").ok_or("missing mem_bw_gbs")?;
+        let split_fixed_us = json_num(text, "split_fixed_us").ok_or("missing split_fixed_us")?;
+        if !(0.0..1e7).contains(&split_fixed_us) || !(0.0..1e5).contains(&mem_bw_gbs) {
+            return Err("implausible bandwidth/fixed-cost figures".to_string());
+        }
+        let mut p = CalibrationProfile {
+            version,
+            machine,
+            threads,
+            shards,
+            mem_bw_gbs,
+            split_fixed_us,
+            kernel_gbs: [[0.0; 3]; 2],
+            sat_cores: [[0; 3]; 2],
+            sat_scale: [[1.0; 3]; 2],
+            kahan_vs_naive: [0.0; 3],
+            dot2_vs_naive: [0.0; 3],
+            winners: Default::default(),
+            probe_cy: [[[0.0; 4]; 3]; 2],
+            batches: Default::default(),
+        };
+        for pi in 0..2 {
+            let kg = json_num_array(text, &format!("kernel_gbs_{}", PREC_SFX[pi]), 3)?;
+            let sc = json_num_array(text, &format!("sat_cores_{}", PREC_SFX[pi]), 3)?;
+            let ss = json_num_array(text, &format!("sat_scale_{}", PREC_SFX[pi]), 3)?;
+            for ci in 0..3 {
+                if !(0.0..1e6).contains(&kg[ci]) || !(0.0..1e5).contains(&sc[ci]) {
+                    return Err("implausible kernel throughput / saturation".to_string());
+                }
+                p.kernel_gbs[pi][ci] = kg[ci];
+                p.sat_cores[pi][ci] = sc[ci] as u32;
+                p.sat_scale[pi][ci] = ss[ci].clamp(0.25, 4.0);
+            }
+        }
+        let kn = json_num_array(text, "kahan_vs_naive", 3)?;
+        let dn = json_num_array(text, "dot2_vs_naive", 3)?;
+        for ci in 0..3 {
+            if !(0.0..1e3).contains(&kn[ci]) || !(0.0..1e3).contains(&dn[ci]) {
+                return Err("implausible accuracy-tier ratios".to_string());
+            }
+            p.kahan_vs_naive[ci] = kn[ci];
+            p.dot2_vs_naive[ci] = dn[ci];
+        }
+        for pi in 0..2 {
+            for ci in 0..3 {
+                let sfx = format!("{}_{}", PREC_SFX[pi], CLASS_SFX[ci]);
+                let w = json_str_array(text, &format!("winners_{sfx}"), 4)?;
+                let pc = json_num_array(text, &format!("probe_cy_{sfx}"), 4)?;
+                let bt = json_str_array(text, &format!("batch_{sfx}"), 4)?;
+                for ti in 0..4 {
+                    p.winners[pi][ci][ti] = w[ti].clone();
+                    p.probe_cy[pi][ci][ti] = pc[ti].max(0.0);
+                    p.batches[pi][ci][ti] = bt[ti].clone();
+                }
+            }
+        }
+        Ok(p)
+    }
+
+    /// STALE check: a profile measured on a different machine must not
+    /// drive this one's thresholds.
+    pub fn validate_for_host(&self) -> Result<(), String> {
+        let host = detect_host_cached().name;
+        if self.machine != host {
+            return Err(format!(
+                "stale profile: measured on '{}', running on '{host}'",
+                self.machine
+            ));
+        }
+        Ok(())
+    }
+
+    /// Load + parse + staleness-check one profile file. Every rejection
+    /// path (unreadable, corrupt, version-mismatched, stale) increments
+    /// the process-global [`rejected_count`] and returns `Err` — callers
+    /// fall back to defaults, they never panic.
+    pub fn load(path: &Path) -> Result<CalibrationProfile, String> {
+        let fail = |m: String| {
+            note_rejected();
+            Err(m)
+        };
+        let text = match std::fs::read_to_string(path) {
+            Ok(t) => t,
+            Err(e) => return fail(format!("unreadable profile {}: {e}", path.display())),
+        };
+        let p = match Self::parse(&text) {
+            Ok(p) => p,
+            Err(e) => return fail(format!("corrupt profile {}: {e}", path.display())),
+        };
+        if let Err(e) = p.validate_for_host() {
+            return fail(e);
+        }
+        Ok(p)
+    }
+
+    /// Persist to `path` (atomically enough for our purposes: write to a
+    /// sibling temp file, then rename).
+    pub fn save(&self, path: &Path) -> Result<(), String> {
+        let tmp = path.with_extension("json.tmp");
+        std::fs::write(&tmp, self.to_json())
+            .map_err(|e| format!("writing {}: {e}", tmp.display()))?;
+        std::fs::rename(&tmp, path).map_err(|e| format!("renaming to {}: {e}", path.display()))
+    }
+
+    /// Effective saturation cores for one `[precision][class]` cell: the
+    /// ECM prediction times the persisted observed correction;
+    /// `usize::MAX` where the class does not saturate.
+    pub fn effective_sat(&self, pi: usize, ci: usize) -> usize {
+        let n = self.sat_cores[pi][ci];
+        if n == 0 {
+            usize::MAX
+        } else {
+            ((n as f64 * self.sat_scale[pi][ci]).round() as usize).max(1)
+        }
+    }
+
+    /// The measured split crossover: the smallest request (total bytes,
+    /// both streams) for which splitting across every shard is projected
+    /// faster than serving on the single widest shard, i.e. where the
+    /// split's measured fixed cost amortizes:
+    ///
+    /// ```text
+    ///   B / bw_one  =  B / bw_all + fixed   ⇒
+    ///   B = fixed · bw_one · bw_all / (bw_all − bw_one)
+    /// ```
+    ///
+    /// with `bw_one` = per-core throughput × min(widest shard, saturation)
+    /// and `bw_all` = per-core throughput × min(total workers, saturation),
+    /// minimized over the split-relevant classes (LLC, MEM) and both
+    /// precisions, clamped into [`SPLIT_MIN_CLAMP`]. `None` when the
+    /// topology can't gain from splitting (one shard, or saturation caps
+    /// the split down to single-shard bandwidth) — callers keep the
+    /// built-in 4 MiB default.
+    pub fn derived_split_min_bytes(&self, shard_workers: &[usize]) -> Option<u64> {
+        let total: usize = shard_workers.iter().sum();
+        let widest = shard_workers.iter().copied().max().unwrap_or(0);
+        if shard_workers.len() < 2 || widest == 0 || total <= widest {
+            return None;
+        }
+        let fixed_secs = (self.split_fixed_us * 1e-6).max(0.0);
+        let mut best: Option<f64> = None;
+        for ci in [SizeClass::Llc.index(), SizeClass::Mem.index()] {
+            for pi in 0..2 {
+                let per_core = self.kernel_gbs[pi][ci];
+                if per_core <= 0.0 {
+                    continue;
+                }
+                let sat = self.effective_sat(pi, ci);
+                let bw_one = per_core * widest.min(sat) as f64;
+                let bw_all = per_core * total.min(sat) as f64;
+                if bw_all <= bw_one * 1.01 {
+                    // saturation gives the split no headroom in this class
+                    continue;
+                }
+                let crossover = fixed_secs * 1e9 * (bw_one * bw_all) / (bw_all - bw_one);
+                best = Some(best.map_or(crossover, |b: f64| b.min(crossover)));
+            }
+        }
+        best.map(|b| (b.round() as u64).clamp(SPLIT_MIN_CLAMP.0, SPLIT_MIN_CLAMP.1))
+    }
+
+    /// The planner-facing slice of this profile: projected one-shard and
+    /// all-shard bandwidths per `[precision][class]` (for deadline-aware
+    /// routing) plus the measured accuracy-tier ratios (for free
+    /// upgrades). Pure arithmetic over the measured numbers.
+    pub fn plan_calibration(&self, shard_workers: &[usize]) -> PlanCalibration {
+        let total: usize = shard_workers.iter().sum::<usize>().max(1);
+        let widest = shard_workers.iter().copied().max().unwrap_or(1).max(1);
+        let mut shard_gbs = [[0.0f64; 3]; 2];
+        let mut split_gbs = [[0.0f64; 3]; 2];
+        for pi in 0..2 {
+            for ci in 0..3 {
+                let per_core = self.kernel_gbs[pi][ci];
+                if per_core <= 0.0 {
+                    continue;
+                }
+                let sat = self.effective_sat(pi, ci);
+                shard_gbs[pi][ci] = per_core * widest.min(sat) as f64;
+                split_gbs[pi][ci] = per_core * total.min(sat) as f64;
+            }
+        }
+        PlanCalibration {
+            shard_gbs,
+            split_gbs,
+            split_fixed_us: self.split_fixed_us,
+            kahan_vs_naive: self.kahan_vs_naive,
+            dot2_vs_naive: self.dot2_vs_naive,
+        }
+    }
+
+    /// Calibrated worker wedge threshold (µs): the projected service time
+    /// of one worker's chunk of the largest request the size classifier
+    /// models (64 MiB of streams), at the slowest measured per-core
+    /// throughput, times [`WEDGE_SAFETY_FACTOR`], floored at
+    /// [`WEDGE_FLOOR_US`]. Returns 0 (= detection off) when the profile
+    /// has no usable throughput figure.
+    pub fn worker_wedge_default_us(&self) -> u64 {
+        let mut slowest = f64::INFINITY;
+        for row in &self.kernel_gbs {
+            for &g in row {
+                if g > 0.0 {
+                    slowest = slowest.min(g);
+                }
+            }
+        }
+        if !slowest.is_finite() {
+            return 0;
+        }
+        let chunk_bytes = (64u64 << 20) as f64;
+        // GB/s → bytes/µs is ×1000
+        let t_us = chunk_bytes / (slowest * 1000.0);
+        ((t_us * WEDGE_SAFETY_FACTOR).ceil() as u64).max(WEDGE_FLOOR_US)
+    }
+
+    /// Calibrated lane wedge threshold: a submitter lane legitimately
+    /// waits on whole requests (several chunks deep), so its threshold is
+    /// a multiple of the worker's. 0 when the worker threshold is 0.
+    pub fn lane_wedge_default_us(&self) -> u64 {
+        self.worker_wedge_default_us().saturating_mul(4)
+    }
+
+    /// Seed the live dispatch table's saturation corrections from this
+    /// profile (the inverse of [`CalibrationProfile::measure`] snapshotting
+    /// them). Concurrency only — never bits.
+    pub fn seed_saturation(&self, table: &DispatchTable) {
+        for (pi, prec) in [Precision::Sp, Precision::Dp].into_iter().enumerate() {
+            for (ci, class) in SizeClass::ALL.into_iter().enumerate() {
+                table.set_sat_scale(prec, class, self.sat_scale[pi][ci]);
+            }
+        }
+    }
+}
+
+/// Fixed fan-out + merge cost of one chunked parallel dot (µs): round-trip
+/// a tiny two-chunk dot through a dedicated two-worker pool — the work
+/// itself is negligible, so the median is the handoff + collect + fold
+/// overhead a split pays per shard.
+fn measure_split_fixed_us(ghz: f64) -> f64 {
+    use super::parallel::{parallel_dot_f32, WorkerPool};
+    let pool = WorkerPool::new(2);
+    let bufs = BufferPool::new();
+    let v = vec![1.0f32; 1024];
+    let a = Arc::new(bufs.admit(&v));
+    let b = Arc::new(bufs.admit(&v));
+    let f = super::kernel_for_f32(Accuracy::Kahan, (2 * v.len() * 4) as u64);
+    let m = measure_adaptive(200_000.0, 5, || parallel_dot_f32(&pool, f, &a, &b, 2));
+    // cycles → µs at the calibrated clock
+    (m.median_cy / (ghz * 1000.0)).max(0.1)
+}
+
+/// The profile path this process resolves to: the `REPRO_PROFILE` env var
+/// when set (`off` / `0` / `none` / empty disables profiles entirely),
+/// else `$TMPDIR/`[`DEFAULT_PROFILE_FILE`].
+pub fn resolved_path() -> Option<PathBuf> {
+    match std::env::var("REPRO_PROFILE") {
+        Ok(v) => {
+            let v = v.trim().to_string();
+            if v.is_empty() || v == "off" || v == "0" || v == "none" {
+                None
+            } else {
+                Some(PathBuf::from(v))
+            }
+        }
+        Err(_) => Some(std::env::temp_dir().join(DEFAULT_PROFILE_FILE)),
+    }
+}
+
+/// An explicitly installed profile (calibrate CLI, benches, a service
+/// with `profile_path` set) takes precedence over the disk-loaded one —
+/// and crucially, installation still works after the disk decision was
+/// made: the measurement pass itself touches `dispatch()` (which consults
+/// [`host_profile`]), so a lazy measure-then-install would otherwise
+/// always lose the race against its own measurement.
+static INSTALLED_PROFILE: OnceLock<CalibrationProfile> = OnceLock::new();
+static DISK_PROFILE: OnceLock<Option<CalibrationProfile>> = OnceLock::new();
+
+/// The process-wide profile: an installed one if present, else the file
+/// at [`resolved_path`], loaded (NOT measured) on first use. Load-only by
+/// design: a fresh host with no file gets `None` and built-in defaults —
+/// deterministic for tests and cold CI runners. The one-shot measurement
+/// pass runs only where explicitly asked for: `repro calibrate`, the
+/// benches, or a service started with `ServiceConfig::profile_path` set
+/// (which measures-and-caches lazily).
+pub fn host_profile() -> Option<&'static CalibrationProfile> {
+    if let Some(p) = INSTALLED_PROFILE.get() {
+        return Some(p);
+    }
+    DISK_PROFILE
+        .get_or_init(|| {
+            let path = resolved_path()?;
+            if !path.exists() {
+                return None;
+            }
+            CalibrationProfile::load(&path).ok()
+        })
+        .as_ref()
+}
+
+/// Install `p` as the process-wide profile (benches and the calibrate CLI
+/// use this so the global engine they then construct plans on the freshly
+/// measured numbers; the service's lazy `profile_path` measurement does
+/// too). Wins over any disk-loaded profile, but only once: a second
+/// installation returns `false` and changes nothing — consumers that
+/// already planned on the first profile must never see numbers move under
+/// them.
+pub fn install_host_profile(p: CalibrationProfile) -> bool {
+    INSTALLED_PROFILE.set(p).is_ok()
+}
+
+// ---- minimal tolerant flat-JSON field extraction ------------------------
+
+fn escape(s: &str) -> String {
+    s.chars().filter(|c| *c != '"' && *c != '\\' && !c.is_control()).collect()
+}
+
+/// Format one f64 for emission (NaN/inf would corrupt the file → 0).
+fn fnum(x: f64) -> String {
+    if x.is_finite() {
+        format!("{x:.6}")
+    } else {
+        "0".to_string()
+    }
+}
+
+fn num_array(xs: &[f64]) -> String {
+    let body: Vec<String> = xs.iter().map(|&x| fnum(x)).collect();
+    format!("[{}]", body.join(", "))
+}
+
+fn str_array(xs: &[String]) -> String {
+    let body: Vec<String> = xs.iter().map(|x| format!("\"{}\"", escape(x))).collect();
+    format!("[{}]", body.join(", "))
+}
+
+/// The raw text after `"key":`, up to the end of its value region.
+fn value_region<'a>(text: &'a str, key: &str) -> Option<&'a str> {
+    let needle = format!("\"{key}\":");
+    let at = text.find(&needle)?;
+    Some(text[at + needle.len()..].trim_start())
+}
+
+fn json_num(text: &str, key: &str) -> Option<f64> {
+    let rest = value_region(text, key)?;
+    let end = rest
+        .find(|c: char| !(c.is_ascii_digit() || c == '-' || c == '+' || c == '.' || c == 'e' || c == 'E'))
+        .unwrap_or(rest.len());
+    rest[..end].parse::<f64>().ok().filter(|v| v.is_finite())
+}
+
+fn json_str(text: &str, key: &str) -> Option<String> {
+    let rest = value_region(text, key)?;
+    let rest = rest.strip_prefix('"')?;
+    let end = rest.find('"')?;
+    Some(rest[..end].to_string())
+}
+
+fn json_num_array(text: &str, key: &str, want: usize) -> Result<Vec<f64>, String> {
+    let rest = value_region(text, key).ok_or_else(|| format!("missing {key}"))?;
+    let rest = rest.strip_prefix('[').ok_or_else(|| format!("{key}: not an array"))?;
+    let end = rest.find(']').ok_or_else(|| format!("{key}: unterminated array"))?;
+    let vals: Result<Vec<f64>, _> =
+        rest[..end].split(',').map(|s| s.trim().parse::<f64>()).collect();
+    let vals = vals.map_err(|e| format!("{key}: {e}"))?;
+    if vals.len() != want || vals.iter().any(|v| !v.is_finite()) {
+        return Err(format!("{key}: expected {want} finite numbers"));
+    }
+    Ok(vals)
+}
+
+fn json_str_array(text: &str, key: &str, want: usize) -> Result<Vec<String>, String> {
+    let rest = value_region(text, key).ok_or_else(|| format!("missing {key}"))?;
+    let rest = rest.strip_prefix('[').ok_or_else(|| format!("{key}: not an array"))?;
+    let end = rest.find(']').ok_or_else(|| format!("{key}: unterminated array"))?;
+    let mut out = Vec::with_capacity(want);
+    for part in rest[..end].split(',') {
+        let part = part.trim();
+        let inner = part
+            .strip_prefix('"')
+            .and_then(|p| p.strip_suffix('"'))
+            .ok_or_else(|| format!("{key}: not a string array"))?;
+        out.push(inner.to_string());
+    }
+    if out.len() != want {
+        return Err(format!("{key}: expected {want} strings"));
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A fully synthetic profile for threshold-math tests: 10 GB/s per
+    /// core everywhere, no saturation, 100 µs fixed split cost.
+    fn synthetic() -> CalibrationProfile {
+        CalibrationProfile {
+            version: PROFILE_VERSION,
+            machine: "test-machine".to_string(),
+            threads: 4,
+            shards: 2,
+            mem_bw_gbs: 40.0,
+            split_fixed_us: 100.0,
+            kernel_gbs: [[10.0; 3]; 2],
+            sat_cores: [[0; 3]; 2],
+            sat_scale: [[1.0; 3]; 2],
+            kahan_vs_naive: [0.5, 0.9, 0.99],
+            dot2_vs_naive: [0.4, 0.8, 0.97],
+            winners: Default::default(),
+            probe_cy: [[[0.0; 4]; 3]; 2],
+            batches: Default::default(),
+        }
+    }
+
+    #[test]
+    fn json_round_trip_is_lossless_enough() {
+        let mut p = synthetic();
+        p.winners[0][0][1] = "kahan_avx2_f32".to_string();
+        p.probe_cy[0][0][1] = 123.456;
+        p.batches[0][0][1] = "kahan_avx2_f32_b8".to_string();
+        let back = CalibrationProfile::parse(&p.to_json()).expect("round trip");
+        assert_eq!(back.machine, p.machine);
+        assert_eq!(back.threads, p.threads);
+        assert_eq!(back.shards, p.shards);
+        assert_eq!(back.winners[0][0][1], "kahan_avx2_f32");
+        assert_eq!(back.batches[0][0][1], "kahan_avx2_f32_b8");
+        assert!((back.probe_cy[0][0][1] - 123.456).abs() < 1e-3);
+        assert!((back.split_fixed_us - 100.0).abs() < 1e-6);
+        assert!((back.kahan_vs_naive[2] - 0.99).abs() < 1e-6);
+    }
+
+    #[test]
+    fn parse_rejects_garbage_and_mismatched_versions_without_panic() {
+        let before = rejected_count();
+        for bad in [
+            "",
+            "not json at all",
+            "{\"profile\": \"something_else\"}",
+            "{\"profile\": \"repro_calibration\"}",
+            "{\"profile\": \"repro_calibration\", \"version\": 9999}",
+        ] {
+            assert!(CalibrationProfile::parse(bad).is_err(), "{bad:?} must be rejected");
+        }
+        // truncated real profile: every prefix parses to Err, never panics
+        let good = synthetic().to_json();
+        for cut in [10usize, 100, 300, good.len() - 5] {
+            assert!(CalibrationProfile::parse(&good[..cut]).is_err());
+        }
+        // pure parse never counts — only `load` does
+        assert_eq!(rejected_count(), before);
+    }
+
+    #[test]
+    fn load_counts_every_rejection_flavor() {
+        let dir = std::env::temp_dir();
+        let before = rejected_count();
+        // unreadable
+        assert!(CalibrationProfile::load(&dir.join("repro_profile_does_not_exist.json")).is_err());
+        // corrupt
+        let corrupt = dir.join("repro_profile_test_corrupt.json");
+        std::fs::write(&corrupt, "{ nope").unwrap();
+        assert!(CalibrationProfile::load(&corrupt).is_err());
+        // stale: valid file, wrong machine
+        let stale = dir.join("repro_profile_test_stale.json");
+        std::fs::write(&stale, synthetic().to_json()).unwrap();
+        assert!(CalibrationProfile::load(&stale).is_err(), "wrong-machine profile is stale");
+        assert_eq!(rejected_count(), before + 3);
+        let _ = std::fs::remove_file(&corrupt);
+        let _ = std::fs::remove_file(&stale);
+    }
+
+    #[test]
+    fn save_load_round_trips_for_the_current_host() {
+        let mut p = synthetic();
+        p.machine = detect_host_cached().name.to_string();
+        let path = std::env::temp_dir().join("repro_profile_test_roundtrip.json");
+        p.save(&path).expect("save");
+        let back = CalibrationProfile::load(&path).expect("load what we saved");
+        assert_eq!(back, p);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn split_crossover_math_and_clamps() {
+        let p = synthetic();
+        // two shards × 2 workers, no saturation: bw_one = 20 GB/s,
+        // bw_all = 40 GB/s → B = 100 µs × 40 GB/s = 4 MB — mid-range.
+        let b = p.derived_split_min_bytes(&[2, 2]).expect("split gains");
+        let expect = 100.0e-6 * 1e9 * (20.0 * 40.0) / 20.0;
+        assert!((b as f64 - expect).abs() / expect < 0.01, "b={b} expect={expect}");
+        // a huge fixed cost clamps high, a zero fixed cost clamps low
+        let mut hi = p.clone();
+        hi.split_fixed_us = 1e6;
+        assert_eq!(hi.derived_split_min_bytes(&[2, 2]), Some(SPLIT_MIN_CLAMP.1));
+        let mut lo = p.clone();
+        lo.split_fixed_us = 0.0;
+        assert_eq!(lo.derived_split_min_bytes(&[2, 2]), Some(SPLIT_MIN_CLAMP.0));
+        // one shard can't split; saturation at the widest shard's width
+        // leaves no headroom either
+        assert_eq!(p.derived_split_min_bytes(&[4]), None);
+        let mut sat = p.clone();
+        sat.sat_cores = [[2; 3]; 2];
+        assert_eq!(sat.derived_split_min_bytes(&[2, 2]), None);
+    }
+
+    #[test]
+    fn plan_calibration_projects_saturation_capped_bandwidth() {
+        let mut p = synthetic();
+        p.sat_cores = [[0, 0, 3], [0, 0, 3]];
+        let c = p.plan_calibration(&[2, 2]);
+        // unsaturated classes scale with workers
+        assert!((c.shard_gbs[0][1] - 20.0).abs() < 1e-9);
+        assert!((c.split_gbs[0][1] - 40.0).abs() < 1e-9);
+        // MEM saturates at 3 cores: split bandwidth caps there
+        assert!((c.split_gbs[0][2] - 30.0).abs() < 1e-9);
+        assert!((c.shard_gbs[0][2] - 20.0).abs() < 1e-9);
+        assert!((c.split_fixed_us - 100.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn wedge_defaults_scale_with_throughput_and_floor() {
+        let p = synthetic();
+        // 64 MiB at 10 GB/s ≈ 6.7 ms → ×50 ≈ 335 ms, above the floor
+        let w = p.worker_wedge_default_us();
+        assert!(w >= WEDGE_FLOOR_US, "{w}");
+        assert!(w < 10_000_000, "{w}");
+        assert_eq!(p.lane_wedge_default_us(), w * 4);
+        // no throughput figures → 0 = off
+        let mut empty = p.clone();
+        empty.kernel_gbs = [[0.0; 3]; 2];
+        assert_eq!(empty.worker_wedge_default_us(), 0);
+        assert_eq!(empty.lane_wedge_default_us(), 0);
+        // a very fast machine still floors at WEDGE_FLOOR_US
+        let mut fast = p.clone();
+        fast.kernel_gbs = [[1e5; 3]; 2];
+        assert_eq!(fast.worker_wedge_default_us(), WEDGE_FLOOR_US);
+    }
+
+    #[test]
+    fn effective_sat_applies_persisted_corrections() {
+        let mut p = synthetic();
+        p.sat_cores[0][2] = 4;
+        p.sat_scale[0][2] = 0.5;
+        assert_eq!(p.effective_sat(0, 2), 2);
+        p.sat_scale[0][2] = 4.0;
+        assert_eq!(p.effective_sat(0, 2), 16);
+        assert_eq!(p.effective_sat(0, 0), usize::MAX, "0 = does not saturate");
+    }
+}

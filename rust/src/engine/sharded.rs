@@ -53,6 +53,16 @@ use crate::util::faults;
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, OnceLock};
 
+/// The no-profile fallback split threshold (4 MiB total working set).
+/// This is the ONE place the old hardcoded constant survives: when no
+/// calibration profile has loaded ([`crate::engine::profile::host_profile`]),
+/// auto-resolution (`split_min_bytes == 0`) falls back here. With a profile
+/// present the threshold is the measured crossover
+/// ([`crate::engine::profile::CalibrationProfile::derived_split_min_bytes`])
+/// — the point where cross-shard bandwidth actually beats one shard plus
+/// the measured per-request fan-out cost.
+pub const DEFAULT_SPLIT_MIN_BYTES: usize = 4 << 20;
+
 /// Sharded-tier configuration.
 #[derive(Clone, Copy, Debug)]
 pub struct ShardedConfig {
@@ -60,7 +70,11 @@ pub struct ShardedConfig {
     /// the shard's NUMA domain
     pub engine: EngineConfig,
     /// total working set (both streams, bytes) at which a fresh dot is
-    /// split across every shard instead of routed to one
+    /// split across every shard instead of routed to one. `0` = auto:
+    /// derive from the calibration profile's measured crossover, falling
+    /// back to [`DEFAULT_SPLIT_MIN_BYTES`] when no profile loaded. Tests
+    /// and benches pin explicit values so routing never depends on the
+    /// host the suite runs on.
     pub split_min_bytes: usize,
     /// global chunk count for split dots; 0 = total workers across shards.
     /// Fixing this fixes the chunk geometry, making results bit-identical
@@ -72,7 +86,7 @@ impl Default for ShardedConfig {
     fn default() -> Self {
         ShardedConfig {
             engine: EngineConfig::default(),
-            split_min_bytes: 4 << 20,
+            split_min_bytes: 0, // auto: profile-derived, else DEFAULT_SPLIT_MIN_BYTES
             chunks: 0,
         }
     }
@@ -113,6 +127,11 @@ pub struct ShardedStats {
     /// chunked reduction, still counted here because it bypasses the
     /// shard engine's own counters)
     pub split_dots: u64,
+    /// split-path dots promoted to Split by deadline-aware routing (the
+    /// calibrated projection said the one-shard parallel path would blow
+    /// the request's deadline and the split path fits) — a subset of
+    /// `split_dots`; route changed, bits identical
+    pub deadline_splits: u64,
     /// dots whose fan-out the ECM governance layer capped below the
     /// realized worker count — per-shard engine caps plus split-path dots
     /// where at least one shard ran on a capped worker subset
@@ -135,8 +154,15 @@ pub struct ShardedEngine {
     /// the compiled routing policy: every route/split threshold decision
     /// below goes through this planner, never through raw `cfg` reads
     policy: PlanPolicy,
+    /// provenance of the resolved split threshold (explicit / measured /
+    /// default) — surfaced by `repro plan`
+    split_src: &'static str,
     next: AtomicUsize,
     split_dots: AtomicU64,
+    /// split-path dots that only split because a deadline promoted them
+    /// (the planner's projection said Parallel would blow the deadline and
+    /// Split fits) — a subset of `split_dots`
+    deadline_splits: AtomicU64,
     /// split-path dots where governance capped at least one shard's
     /// chunk-block onto a worker subset (the per-shard engines count
     /// their own capped parallel dots)
@@ -150,7 +176,7 @@ pub struct ShardedEngine {
 }
 
 macro_rules! sharded_dot_impl {
-    ($dot:ident, $dot_on:ident, $dot_homed:ident, $admit:ident, $admit_to:ident, $split:ident,
+    ($dot:ident, $dot_on:ident, $dot_on_deadline:ident, $dot_homed:ident, $admit:ident, $admit_to:ident, $split:ident,
      $dot_batch:ident, $dot_batch_on:ident, $dot_batch_homed:ident, $admit_many_to:ident,
      $engine_dot:ident, $engine_dot_pooled:ident, $engine_admit:ident, $engine_dot_batch:ident,
      $engine_admit_many:ident, $exec_batch:ident, $kernel_for:ident,
@@ -193,6 +219,41 @@ macro_rules! sharded_dot_impl {
                     &a[..n],
                     &b[..n],
                 ),
+            }
+        }
+
+        /// Like the preferred-shard dot, but carrying the request's
+        /// deadline into the planner: when the calibrated projection says
+        /// the one-shard parallel path would blow `deadline_us` and the
+        /// cross-shard split path fits, the plan promotes to Split
+        /// ([`crate::engine::PlanPolicy::plan_dot_deadline`]). The promotion is
+        /// gated on identical chunk geometry, so the served bits are the
+        /// ones the un-promoted route would have produced — only the
+        /// latency changes. `deadline_us == 0` (no deadline) and hosts
+        /// without a calibration profile degrade to exactly `dot_on`.
+        pub fn $dot_on_deadline(
+            &self,
+            shard: usize,
+            accuracy: Accuracy,
+            deadline_us: u64,
+            a: &[$ty],
+            b: &[$ty],
+        ) -> $ty {
+            debug_assert_eq!(
+                a.len(),
+                b.len(),
+                "sharded dot called with mismatched stream lengths (see engine length policy)"
+            );
+            let n = a.len().min(b.len());
+            let total_bytes = (2 * n * std::mem::size_of::<$ty>()) as u64;
+            let plan =
+                self.policy.plan_dot_deadline(shard, accuracy, $prec, total_bytes, deadline_us);
+            if plan.deadline_promoted {
+                self.deadline_splits.fetch_add(1, Ordering::Relaxed);
+            }
+            match plan.route {
+                DotRoute::Split => self.$split(accuracy, &a[..n], &b[..n]),
+                _ => self.shards[plan.shard].$engine_dot(accuracy, &a[..n], &b[..n]),
             }
         }
 
@@ -544,18 +605,39 @@ impl ShardedEngine {
     /// single-node hosts).
     pub fn from_topology(topo: &Topology, cfg: ShardedConfig) -> ShardedEngine {
         assert!(!topo.nodes.is_empty(), "topology must have at least one node");
+        let mut cfg = cfg;
         let shards: Vec<DotEngine> = topo
             .nodes
             .iter()
             .map(|node| DotEngine::new_on(cfg.engine, &node.cpus))
             .collect();
+        let threads_vec: Vec<usize> = shards.iter().map(|s| s.threads()).collect();
+        // resolve the split threshold: 0 = auto — the calibration
+        // profile's measured crossover when one loaded, else the
+        // documented DEFAULT_SPLIT_MIN_BYTES fallback. Explicit nonzero
+        // values (every test/bench) pass through untouched.
+        let profile = super::profile::host_profile();
+        let split_src = if cfg.split_min_bytes != 0 {
+            "explicit (config)"
+        } else {
+            match profile.and_then(|p| p.derived_split_min_bytes(&threads_vec)) {
+                Some(b) => {
+                    cfg.split_min_bytes = b as usize;
+                    "measured (calibration profile crossover)"
+                }
+                None => {
+                    cfg.split_min_bytes = DEFAULT_SPLIT_MIN_BYTES;
+                    "default (no calibration profile)"
+                }
+            }
+        };
         // compile the policy AFTER the shards exist: per-shard worker
         // counts are only known once `threads == 0` has been resolved
         let policy = PlanPolicy::new(
             cfg.engine.parallel_cutoff_bytes,
             cfg.split_min_bytes,
             cfg.chunks,
-            shards.iter().map(|s| s.threads()).collect(),
+            threads_vec.clone(),
         );
         // governance: the compiled policy carries the host ECM verdict's
         // worker caps so every consumer (split path, service, CLI) sees
@@ -565,16 +647,41 @@ impl ShardedEngine {
         } else {
             policy
         };
+        // a loaded profile also arms the planner's projection tables
+        // (deadline-aware routing, free-upgrade ratios) — thresholds and
+        // routing only, never chunk geometry or bits
+        let policy = match profile {
+            Some(p) => policy.with_calibration(p.plan_calibration(&threads_vec)),
+            None => policy,
+        };
         let quarantined = shards.iter().map(|_| AtomicBool::new(false)).collect();
         ShardedEngine {
             shards,
             cfg,
             policy,
+            split_src,
             next: AtomicUsize::new(0),
             split_dots: AtomicU64::new(0),
+            deadline_splits: AtomicU64::new(0),
             split_capped: AtomicU64::new(0),
             quarantined,
         }
+    }
+
+    /// Where the resolved `split_min_bytes` came from: explicit config, the
+    /// calibration profile's measured crossover, or the no-profile default
+    /// — printed by `repro plan` as the threshold's provenance.
+    pub fn split_min_source(&self) -> &'static str {
+        self.split_src
+    }
+
+    /// Install (or replace) the planner's calibration projections —
+    /// bench scenarios and property tests pin synthetic profiles here so
+    /// deadline-routing behavior doesn't depend on the host. Routing only:
+    /// a calibration can change which route serves a request, never the
+    /// chunk geometry or the bits of the result.
+    pub fn set_calibration(&mut self, calibration: super::plan::PlanCalibration) {
+        self.policy = self.policy.clone().with_calibration(calibration);
     }
 
     /// Override the governance caps on the compiled policy AND every shard
@@ -685,6 +792,7 @@ impl ShardedEngine {
         let mut st = ShardedStats {
             shards: self.shards.len(),
             split_dots: self.split_dots.load(Ordering::Relaxed),
+            deadline_splits: self.deadline_splits.load(Ordering::Relaxed),
             capped_requests: self.split_capped.load(Ordering::Relaxed),
             ..ShardedStats::default()
         };
@@ -708,6 +816,7 @@ impl ShardedEngine {
     sharded_dot_impl!(
         dot_f32,
         dot_on_f32,
+        dot_on_deadline_f32,
         dot_homed_f32,
         admit_f32,
         admit_to_f32,
@@ -731,6 +840,7 @@ impl ShardedEngine {
     sharded_dot_impl!(
         dot_f64,
         dot_on_f64,
+        dot_on_deadline_f64,
         dot_homed_f64,
         admit_f64,
         admit_to_f64,
@@ -770,7 +880,7 @@ mod tests {
     #[test]
     fn single_node_degrades_to_one_shard_bit_identical_to_dot_engine() {
         let sharded =
-            ShardedEngine::from_topology(&Topology::single_node(), cfg(2, 4 << 20, 0));
+            ShardedEngine::from_topology(&Topology::single_node(), cfg(2, DEFAULT_SPLIT_MIN_BYTES, 0));
         assert_eq!(sharded.shards(), 1);
         let plain = DotEngine::new(EngineConfig { threads: 2, ..EngineConfig::default() });
         let mut rng = Rng::new(41);
@@ -809,7 +919,8 @@ mod tests {
 
     #[test]
     fn homed_streams_execute_on_their_admission_shard() {
-        let sharded = ShardedEngine::from_topology(&Topology::fake_even(3), cfg(1, 4 << 20, 0));
+        let sharded =
+            ShardedEngine::from_topology(&Topology::fake_even(3), cfg(1, DEFAULT_SPLIT_MIN_BYTES, 0));
         let mut rng = Rng::new(47);
         let n = 4096;
         let av = rng.normal_f32_vec(n);
@@ -913,6 +1024,61 @@ mod tests {
         sharded.quarantine(1);
         let last_resort = sharded.dot_f32(Accuracy::Kahan, &a, &b);
         assert_eq!(healthy.to_bits(), last_resort.to_bits());
+    }
+
+    /// `split_min_bytes == 0` resolves at construction (profile-derived
+    /// crossover, else the documented default) and records where the
+    /// number came from; explicit values pass through untouched.
+    #[test]
+    fn auto_split_threshold_resolves_and_records_provenance() {
+        let auto = ShardedEngine::from_topology(&Topology::single_node(), cfg(1, 0, 0));
+        assert_ne!(auto.config().split_min_bytes, 0, "auto must resolve to a real threshold");
+        assert_ne!(auto.split_min_source(), "explicit (config)");
+        let explicit = ShardedEngine::from_topology(&Topology::single_node(), cfg(1, 123 << 10, 0));
+        assert_eq!(explicit.config().split_min_bytes, 123 << 10);
+        assert_eq!(explicit.split_min_source(), "explicit (config)");
+    }
+
+    /// Deadline promotion at the sharded layer: a synthetic calibration
+    /// that projects the one-shard parallel path over the deadline and the
+    /// split path under it makes `dot_on_deadline_*` serve via Split —
+    /// bit-identical to the un-promoted route, counted in
+    /// `deadline_splits`. No deadline, or a deadline everything fits,
+    /// promotes nothing.
+    #[test]
+    fn deadline_promotion_splits_bit_identically_and_is_counted() {
+        use crate::engine::plan::PlanCalibration;
+        // chunks (2) == per-shard workers (2): the promotion's
+        // chunk-geometry gate holds, so Split reproduces the parallel
+        // path's exact partials and fold
+        let mut sharded =
+            ShardedEngine::from_topology(&Topology::fake_even(2), cfg(2, 64 << 20, 2));
+        sharded.set_calibration(PlanCalibration {
+            shard_gbs: [[1.0; 3]; 2],  // slow single shard: ~1 GB/s
+            split_gbs: [[10.0; 3]; 2], // split across both: 10 GB/s
+            split_fixed_us: 0.0,
+            kahan_vs_naive: [0.5, 0.9, 0.99],
+            dot2_vs_naive: [0.4, 0.8, 0.97],
+        });
+        let mut rng = Rng::new(67);
+        // 2.4 MB total: Parallel route, far below the 64 MB split floor
+        let n = 300_000;
+        let a = rng.normal_f32_vec(n);
+        let b = rng.normal_f32_vec(n);
+        let base = sharded.dot_on_f32(0, Accuracy::Kahan, &a, &b);
+        // projected parallel ≈ 2400 µs blows the 1000 µs deadline;
+        // projected split ≈ 240 µs fits → promoted
+        let promoted = sharded.dot_on_deadline_f32(0, Accuracy::Kahan, 1000, &a, &b);
+        assert_eq!(base.to_bits(), promoted.to_bits(), "promotion must never change bits");
+        let st = sharded.stats();
+        assert_eq!(st.deadline_splits, 1, "{st:?}");
+        assert_eq!(st.split_dots, 1, "{st:?}");
+        // no deadline, and a deadline the parallel path fits: no promotion
+        let none = sharded.dot_on_deadline_f32(0, Accuracy::Kahan, 0, &a, &b);
+        assert_eq!(base.to_bits(), none.to_bits());
+        let relaxed = sharded.dot_on_deadline_f32(0, Accuracy::Kahan, 1_000_000, &a, &b);
+        assert_eq!(base.to_bits(), relaxed.to_bits());
+        assert_eq!(sharded.stats().deadline_splits, 1);
     }
 
     #[test]

@@ -1,0 +1,241 @@
+//! Measured-calibration property tests (PR 10): the persistent
+//! `CalibrationProfile` may move thresholds, reroute requests, and seed
+//! concurrency — it must NEVER change the bits a request's tier produces,
+//! and a bad profile (corrupt, stale, version-mismatched, missing) must
+//! be rejected whole with every built-in default left standing.
+
+use kahan_ecm::accuracy::gen_dot_f32;
+use kahan_ecm::engine::profile::{rejected_count, PROFILE_VERSION, SPLIT_MIN_CLAMP, WEDGE_FLOOR_US};
+use kahan_ecm::engine::{
+    CalibrationProfile, DispatchTable, DotRoute, EngineConfig, PlanCalibration, ShardedConfig,
+    ShardedEngine, Topology, DEFAULT_SPLIT_MIN_BYTES,
+};
+use kahan_ecm::isa::Accuracy;
+use kahan_ecm::machine::detect::detect_host_cached;
+use kahan_ecm::util::Rng;
+
+/// A synthetic profile for THIS host (so the staleness check passes):
+/// 10 GB/s per-core throughput in every cell, no saturation, and the
+/// given fixed split cost — the one knob the derived threshold turns on.
+fn synth_profile(split_fixed_us: f64) -> CalibrationProfile {
+    CalibrationProfile {
+        version: PROFILE_VERSION,
+        machine: detect_host_cached().name.to_string(),
+        threads: 4,
+        shards: 2,
+        mem_bw_gbs: 40.0,
+        split_fixed_us,
+        kernel_gbs: [[10.0; 3]; 2],
+        sat_cores: [[0; 3]; 2], // 0 = the class never saturates
+        sat_scale: [[1.0; 3]; 2],
+        kahan_vs_naive: [1.0; 3],
+        dot2_vs_naive: [1.0; 3],
+        winners: Default::default(),
+        probe_cy: [[[0.0; 4]; 3]; 2],
+        batches: Default::default(),
+    }
+}
+
+fn engine_with_split_min(split_min_bytes: usize) -> ShardedEngine {
+    ShardedEngine::from_topology(
+        &Topology::fake_even(2),
+        ShardedConfig {
+            engine: EngineConfig { threads: 2, governance: false, ..EngineConfig::default() },
+            split_min_bytes,
+            chunks: 4, // fixed geometry: bits must not depend on the route
+        },
+    )
+}
+
+/// THE calibration contract: a profile-derived split threshold may flip a
+/// request's route (that is its job) but every accuracy tier's bits are
+/// identical under the no-profile default and under synthetic-low /
+/// synthetic-high derived thresholds, on ORO ill-conditioned inputs.
+#[test]
+fn derived_thresholds_reroute_but_never_change_bits() {
+    // a near-zero fixed cost derives the lowest legal threshold, a huge
+    // one the highest — both straight from the profile layer's crossover
+    let lo = synth_profile(0.5).derived_split_min_bytes(&[2, 2]).expect("low crossover");
+    let hi = synth_profile(1e5).derived_split_min_bytes(&[2, 2]).expect("high crossover");
+    assert_eq!(lo, SPLIT_MIN_CLAMP.0, "tiny fixed cost must clamp to the floor");
+    assert_eq!(hi, SPLIT_MIN_CLAMP.1, "huge fixed cost must clamp to the ceiling");
+
+    let engines = [
+        engine_with_split_min(DEFAULT_SPLIT_MIN_BYTES), // no-profile fallback
+        engine_with_split_min(lo as usize),             // synthetic-low profile
+        engine_with_split_min(hi as usize),             // synthetic-high profile
+    ];
+
+    // 1.6 MB: above the low threshold (Split), below default and high
+    // (Parallel) — the route demonstrably differs across the policies
+    let flip_total = (2 * 200_000 * std::mem::size_of::<f32>()) as u64;
+    let routes: Vec<DotRoute> =
+        engines.iter().map(|e| e.policy().plan_dot(0, Accuracy::Kahan, flip_total).route).collect();
+    assert_eq!(routes[1], DotRoute::Split, "low threshold must split 1.6 MB");
+    assert_eq!(routes[0], DotRoute::Parallel, "default threshold must not split 1.6 MB");
+    assert_eq!(routes[2], DotRoute::Parallel, "high threshold must not split 1.6 MB");
+
+    let mut rng = Rng::new(0xCA11B);
+    // sizes straddling every boundary: inline everywhere / the flip size
+    // above / 8 MB (low + default split, high stays parallel)
+    for n in [1_000usize, 200_000, 1_000_000] {
+        let (a, b, _, _) = gen_dot_f32(n, 1e6, &mut rng);
+        for acc in [Accuracy::Naive, Accuracy::Kahan, Accuracy::Dot2] {
+            let bits: Vec<u32> =
+                engines.iter().map(|e| e.dot_f32(acc, &a, &b).to_bits()).collect();
+            assert_eq!(
+                bits[0], bits[1],
+                "default vs low-threshold bits diverged (n={n}, {acc:?})"
+            );
+            assert_eq!(
+                bits[0], bits[2],
+                "default vs high-threshold bits diverged (n={n}, {acc:?})"
+            );
+        }
+    }
+    // the exact tier plans Inline whatever the threshold says — still
+    // bit-identical (and correctly rounded) across all three policies
+    let (a, b, _, _) = gen_dot_f32(50_000, 1e8, &mut rng);
+    let want = kahan_ecm::accuracy::exact::exact_dot_f32(&a, &b) as f32;
+    for e in &engines {
+        assert_eq!(e.dot_f32(Accuracy::Exact, &a, &b).to_bits(), want.to_bits());
+    }
+}
+
+/// Deadline-aware routing at the engine surface: a synthetic calibration
+/// that projects the one-shard path over a request's deadline promotes it
+/// to Split (`deadline_splits`), the promoted bits equal the un-promoted
+/// ones, and a chunk geometry that differs from the shard's worker count
+/// vetoes the promotion entirely.
+#[test]
+fn deadline_promotion_bit_identical_and_geometry_gated() {
+    let calib = PlanCalibration {
+        shard_gbs: [[0.05; 3]; 2], // 1 MiB projects ~21 ms on one shard
+        split_gbs: [[10.0; 3]; 2], // ~105 us split
+        split_fixed_us: 0.0,
+        kahan_vs_naive: [1.0; 3],
+        dot2_vs_naive: [1.0; 3],
+    };
+    let mk = |chunks: usize| {
+        let mut e = ShardedEngine::from_topology(
+            &Topology::fake_even(2),
+            ShardedConfig {
+                engine: EngineConfig { threads: 2, governance: false, ..EngineConfig::default() },
+                split_min_bytes: 1 << 30, // promotion is the only way to split
+                chunks,
+            },
+        );
+        e.set_calibration(calib);
+        e
+    };
+    let gated = mk(2); // chunks == each shard's 2 workers: gate holds
+    let vetoed = mk(4); // chunks != workers: promotion must never fire
+
+    let mut rng = Rng::new(0xDEAD11);
+    let (a, b, _, _) = gen_dot_f32(128 * 1024, 1e6, &mut rng); // 1 MiB total
+    for acc in [Accuracy::Naive, Accuracy::Kahan, Accuracy::Dot2] {
+        let plain = gated.dot_on_deadline_f32(0, acc, 0, &a, &b); // no deadline
+        let before = gated.stats().deadline_splits;
+        let promoted = gated.dot_on_deadline_f32(0, acc, 10_000, &a, &b);
+        assert_eq!(
+            gated.stats().deadline_splits,
+            before + 1,
+            "the 10 ms deadline must promote ({acc:?})"
+        );
+        assert_eq!(
+            promoted.to_bits(),
+            plain.to_bits(),
+            "deadline promotion changed the bits ({acc:?})"
+        );
+
+        let v = vetoed.dot_on_deadline_f32(0, acc, 10_000, &a, &b);
+        assert_eq!(vetoed.stats().deadline_splits, 0, "geometry gate must veto ({acc:?})");
+        assert_eq!(v.to_bits(), plain.to_bits(), "vetoed route changed the bits ({acc:?})");
+    }
+    // a hopeless deadline (under even the split projection) never promotes
+    let _ = gated.dot_on_deadline_f32(0, Accuracy::Kahan, 10, &a, &b);
+    assert_eq!(gated.stats().deadline_splits, 3, "hopeless deadlines must not promote");
+}
+
+/// Serialization round-trip plus every rejection path: corrupt, version-
+/// mismatched, stale, and missing profiles all load as clean `Err`s —
+/// counted in `rejected_count`, never a panic — and a profile whose
+/// winner names match no compiled kernel cannot seed a dispatch table.
+#[test]
+fn bad_profiles_rejected_cleanly_and_good_ones_round_trip() {
+    let dir = std::env::temp_dir();
+    let file = |name: &str| dir.join(format!("repro_test_profile_{}_{name}", std::process::id()));
+
+    // round-trip: save → load reproduces the profile field for field
+    let p = synth_profile(25.0);
+    let good = file("good.json");
+    p.save(&good).expect("save");
+    let back = CalibrationProfile::load(&good).expect("round-trip load");
+    assert_eq!(back, p, "save → load must be the identity");
+    assert_eq!(CalibrationProfile::parse(&p.to_json()).expect("parse"), p);
+    let _ = std::fs::remove_file(&good);
+
+    let before = rejected_count();
+
+    // corrupt: not the profile format at all
+    let corrupt = file("corrupt.json");
+    std::fs::write(&corrupt, "{ \"bench\": \"not_a_profile\" }").expect("write corrupt");
+    let e = CalibrationProfile::load(&corrupt).expect_err("corrupt must be rejected");
+    assert!(e.contains("corrupt"), "unexpected error: {e}");
+    let _ = std::fs::remove_file(&corrupt);
+
+    // version mismatch: a future schema must be rejected whole, not
+    // half-parsed
+    let mut vnext = p.clone();
+    vnext.version = PROFILE_VERSION + 1;
+    let mismatched = file("vnext.json");
+    vnext.save(&mismatched).expect("save vnext");
+    let e = CalibrationProfile::load(&mismatched).expect_err("version mismatch");
+    assert!(e.contains("version mismatch"), "unexpected error: {e}");
+    let _ = std::fs::remove_file(&mismatched);
+
+    // stale: measured on another machine
+    let mut other = p.clone();
+    other.machine = "some-other-box".to_string();
+    let stale = file("stale.json");
+    other.save(&stale).expect("save stale");
+    let e = CalibrationProfile::load(&stale).expect_err("stale must be rejected");
+    assert!(e.contains("stale"), "unexpected error: {e}");
+    let _ = std::fs::remove_file(&stale);
+
+    // missing file
+    let e = CalibrationProfile::load(&file("missing.json")).expect_err("missing file");
+    assert!(e.contains("unreadable"), "unexpected error: {e}");
+
+    // every rejection was counted (other tests may add their own, so >=)
+    assert!(
+        rejected_count() >= before + 4,
+        "rejections must be counted: before={before}, after={}",
+        rejected_count()
+    );
+
+    // a profile whose winners are empty strings matches no compiled
+    // kernel: seeding must fail cleanly (the engine then falls back to
+    // live calibration — it never panics and never half-seeds)
+    assert!(
+        DispatchTable::from_profile(&p).is_err(),
+        "unknown winner names must not seed a table"
+    );
+}
+
+/// The calibrated wedge defaults: derived from the slowest measured
+/// per-core throughput with the documented floor, ×4 for lanes, and OFF
+/// (0) when the profile has no usable throughput figure.
+#[test]
+fn wedge_defaults_derive_from_measured_throughput() {
+    let p = synth_profile(25.0);
+    let w = p.worker_wedge_default_us();
+    // 64 MiB at 10 GB/s ≈ 6.7 ms, ×50 safety ≈ 335 ms — above the floor
+    assert!(w >= WEDGE_FLOOR_US, "wedge default {w} must respect the floor");
+    assert_eq!(p.lane_wedge_default_us(), w * 4, "lanes wait on whole requests");
+
+    let mut dead = p.clone();
+    dead.kernel_gbs = [[0.0; 3]; 2];
+    assert_eq!(dead.worker_wedge_default_us(), 0, "no throughput figure = detection off");
+    assert_eq!(dead.lane_wedge_default_us(), 0);
+}
